@@ -1,0 +1,22 @@
+//! Regenerates the Eqs. 1–3 bandwidth analysis (§5.2) and times the KV
+//! sizing + bandwidth-requirement computations.
+
+use agentic_hetero::cost::kv::kv_cache_bytes;
+use agentic_hetero::cost::model_profile::llama3_70b;
+use agentic_hetero::cost::network::bandwidth_requirement;
+use agentic_hetero::cost::Precision;
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::bandwidth();
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let m = llama3_70b(Precision::Fp16);
+    let mut b = Bench::new();
+    b.run("bandwidth/eq3_kv_size", || kv_cache_bytes(&m, 32_768, 8));
+    b.run("bandwidth/eq12_requirement", || {
+        bandwidth_requirement(&m, 32_768, 8, 1.0, 0.02, 8, 8)
+    });
+    b.run("bandwidth/full_artifact", repro::bandwidth);
+}

@@ -1,0 +1,20 @@
+//! Regenerates Figure 3 / Table 2 (workload radar profiles) and times
+//! the profile computation feeding the cost-annotation pass.
+
+use agentic_hetero::cost::workload::WorkloadClass;
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::fig3();
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let mut b = Bench::new();
+    b.run("fig3/radar_all_workloads", || {
+        WorkloadClass::ALL
+            .iter()
+            .map(|w| w.radar().hp_compute + w.dominant() as u8 as f64)
+            .sum::<f64>()
+    });
+    b.run("fig3/full_artifact", repro::fig3);
+}

@@ -1,0 +1,16 @@
+//! Regenerates Figure 4 (marginal cost-efficiency scatter) and times the
+//! catalog analysis.
+
+use agentic_hetero::cost::hardware::{catalog, cost_efficiency};
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::fig4();
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let mut b = Bench::new();
+    b.run("fig4/cost_efficiency_rows", cost_efficiency);
+    b.run("fig4/catalog_build", catalog);
+    b.run("fig4/full_artifact_with_json", || repro::fig4().json.to_string());
+}

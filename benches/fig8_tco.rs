@@ -1,0 +1,28 @@
+//! Regenerates Figure 8 (TCO benefit, input=512 / output=4096) and times
+//! the TP/PP/batch configuration explorer behind it.
+
+use agentic_hetero::cost::hardware::by_name;
+use agentic_hetero::cost::model_profile::llama3_8b;
+use agentic_hetero::cost::Precision;
+use agentic_hetero::opt::parallelism::{
+    best_config, paper_pairs, tco_series, ExploreOpts, SeqShape, SlaMode,
+};
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::fig_tco(SeqShape::fig8(), "fig8");
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let opts = ExploreOpts::default();
+    let m = llama3_8b(Precision::Fp8);
+    let h100 = by_name("H100").unwrap();
+    let gaudi = by_name("Gaudi3").unwrap();
+    let mut b = Bench::new();
+    b.run("fig8/best_config_one_pair", || {
+        best_config(&m, &h100, &gaudi, SeqShape::fig8(), SlaMode::paper_latency(), &opts)
+    });
+    b.run("fig8/tco_series_one_model", || {
+        tco_series(std::slice::from_ref(&m), &paper_pairs(), SeqShape::fig8(), &opts)
+    });
+}

@@ -1,0 +1,20 @@
+//! Regenerates Figure 9 (TCO benefit, input=4096 / output=512 —
+//! prefill-heavy summarization) and times the explorer.
+
+use agentic_hetero::cost::model_profile::llama3_70b;
+use agentic_hetero::cost::Precision;
+use agentic_hetero::opt::parallelism::{paper_pairs, tco_series, ExploreOpts, SeqShape};
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::fig_tco(SeqShape::fig9(), "fig9");
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let opts = ExploreOpts::default();
+    let m = llama3_70b(Precision::Fp16);
+    let mut b = Bench::new();
+    b.run("fig9/tco_series_70b_fp16", || {
+        tco_series(std::slice::from_ref(&m), &paper_pairs(), SeqShape::fig9(), &opts)
+    });
+}

@@ -1,0 +1,33 @@
+//! IR pipeline throughput: parse, print, verify, and the standard pass
+//! pipeline over agent graphs (the slow-path planning front half).
+
+use agentic_hetero::agents::{self, patterns};
+use agentic_hetero::ir::parser::parse;
+use agentic_hetero::ir::passes::PassManager;
+use agentic_hetero::ir::printer::print;
+use agentic_hetero::ir::verifier::verify;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let voice = agents::voice_agent("8b-fp16", 512, 256);
+    let text = print(&voice);
+    println!("voice agent: {} nodes, {} bytes of IR text", voice.size(), text.len());
+
+    b.run("ir/print_voice", || print(&voice));
+    b.run("ir/parse_voice", || parse(&text).unwrap());
+    b.run("ir/verify_voice", || verify(&voice).unwrap());
+    b.run("ir/std_pipeline_voice", || {
+        let mut g = voice.clone();
+        PassManager::standard().run(&mut g).unwrap();
+        g.size()
+    });
+
+    let big = patterns::hierarchical("8b-fp16", 3, 3); // 27 leaves
+    println!("hierarchical(3,3): {} nodes", big.size());
+    b.run("ir/std_pipeline_hierarchical27", || {
+        let mut g = big.clone();
+        PassManager::standard().run(&mut g).unwrap();
+        g.size()
+    });
+}

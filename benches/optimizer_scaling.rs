@@ -1,0 +1,64 @@
+//! Optimizer scaling: LP simplex, branch&bound MILP, exact assignment
+//! solver, and the end-to-end planner on agent graphs. §Perf target:
+//! |V|=64, |H|=6 well under 50 ms.
+
+use agentic_hetero::agents;
+use agentic_hetero::opt::assignment::{
+    AssignmentProblem, EdgeSpec, HardwareClass, Sla, TaskSpec,
+};
+use agentic_hetero::opt::lp::{solve, Lp};
+use agentic_hetero::planner::plan::{Planner, PlannerConfig};
+use agentic_hetero::util::bench::Bench;
+use agentic_hetero::util::rng::Rng;
+
+fn chain_problem(n_tasks: usize, n_classes: usize, seed: u64) -> AssignmentProblem {
+    let mut rng = Rng::new(seed);
+    let classes = (0..n_classes)
+        .map(|j| HardwareClass { name: format!("C{j}"), capacity: 0.0 })
+        .collect();
+    let tasks = (0..n_tasks)
+        .map(|i| TaskSpec {
+            name: format!("t{i}"),
+            latency_s: (0..n_classes).map(|_| 0.01 + rng.f64() * 0.1).collect(),
+            cost_usd: (0..n_classes).map(|_| rng.f64()).collect(),
+            capacity_use: 0.0,
+            forbidden: vec![],
+        })
+        .collect();
+    let edges = (1..n_tasks)
+        .map(|i| EdgeSpec::free(i - 1, i, n_classes))
+        .collect();
+    AssignmentProblem { classes, tasks, edges, sla: Sla::None }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // LP: transport-style problems.
+    let mut lp = Lp::new(24);
+    let mut rng = Rng::new(3);
+    lp.minimize((0..24).map(|_| rng.f64()).collect());
+    for i in 0..12 {
+        let mut row = vec![0.0; 24];
+        row[i] = 1.0;
+        row[i + 12] = 1.0;
+        lp.add_eq(row, 1.0);
+    }
+    for _ in 0..8 {
+        let row: Vec<f64> = (0..24).map(|_| rng.f64()).collect();
+        lp.add_ub(row, 6.0);
+    }
+    b.run("opt/lp_24var_20con", || solve(&lp));
+
+    for (n, h) in [(8, 6), (16, 6), (64, 6)] {
+        let p = chain_problem(n, h, 42);
+        b.run(&format!("opt/exact_chain_{n}x{h}"), || p.solve_exact().unwrap());
+    }
+    let p = chain_problem(16, 6, 43);
+    b.run("opt/milp_chain_16x6", || p.solve_relaxed().unwrap());
+
+    // End-to-end planning of the voice agent (lower + annotate + solve).
+    let g = agents::voice_agent("8b-fp16", 512, 256);
+    let planner = Planner::new(PlannerConfig { sla: Sla::None, ..Default::default() });
+    b.run("opt/plan_voice_agent_e2e", || planner.plan(&g).unwrap());
+}

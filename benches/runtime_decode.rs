@@ -1,0 +1,48 @@
+//! Real-runtime hot path: PJRT prefill latency and decode tokens/s on
+//! the AOT tiny-LLaMA artifacts (skips when `make artifacts` hasn't run).
+//! This is the L3-side measurement of the L1/L2 stack.
+
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let Ok(engine) = Engine::load("artifacts") else {
+        println!("skipping runtime bench: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    println!(
+        "engine: {} params, buckets {:?}, prompt bucket {}",
+        engine.manifest.num_params, engine.manifest.buckets, engine.manifest.prefill_seq
+    );
+
+    let mut b = Bench::new();
+    b.budget_s = 2.0;
+
+    for bucket in engine.manifest.buckets.clone() {
+        let prompts: Vec<Vec<u8>> = (0..bucket)
+            .map(|i| format!("benchmark prompt number {i} ").into_bytes())
+            .collect();
+        b.run(&format!("runtime/prefill_b{bucket}"), || {
+            engine.prefill(&prompts).unwrap()
+        });
+
+        let pre = engine.prefill(&prompts).unwrap();
+        let mut kv = pre.kv;
+        let tokens = vec![b'a'; bucket];
+        let max_steps = engine.manifest.max_seq - engine.manifest.prefill_seq - 1;
+        let mut step = 0usize;
+        let sample = b.throughput(&format!("runtime/decode_step_b{bucket}"), bucket as u64, || {
+            if step >= max_steps {
+                // KV full: restart from a fresh prefill.
+                kv = engine.prefill(&prompts).unwrap().kv;
+                step = 0;
+            }
+            step += 1;
+            engine.decode_step(&mut kv, &tokens).unwrap()
+        });
+        println!(
+            "  -> decode throughput at batch {bucket}: {:.0} tok/s",
+            sample.throughput.unwrap()
+        );
+    }
+}

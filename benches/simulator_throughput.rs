@@ -1,0 +1,55 @@
+//! Discrete-event simulator throughput (events/s) and fabric transfer
+//! scheduling. §Perf target: >= 1M events/s.
+
+use agentic_hetero::cluster::sim::{pair_placement, ClusterSim};
+use agentic_hetero::cluster::trace::{generate, TraceConfig};
+use agentic_hetero::cost::hardware::by_name;
+use agentic_hetero::cost::model_profile::llama3_8b;
+use agentic_hetero::cost::roofline::Parallelism;
+use agentic_hetero::cost::Precision;
+use agentic_hetero::transport::fabric::{Fabric, NodeAddr};
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    let h100 = by_name("H100").unwrap();
+    let gaudi = by_name("Gaudi3").unwrap();
+    let trace = generate(&TraceConfig {
+        n_requests: 512,
+        rate: 32.0,
+        isl_mean: 512,
+        osl_mean: 128,
+        sigma: 0.3,
+        seed: 5,
+    });
+    let total_events: u64 = {
+        let placement = pair_placement(
+            &h100, Parallelism { tp: 1, pp: 1 }, 2, 8,
+            &gaudi, Parallelism { tp: 1, pp: 1 }, 2, 32,
+        );
+        let fabric = Fabric::new(8, 8, h100.scaleup_bw_gbps, 400.0);
+        let mut sim = ClusterSim::new(llama3_8b(Precision::Fp16), placement, fabric);
+        sim.run(&trace).unwrap().events_processed
+    };
+    println!("trace of {} requests -> {} events", trace.len(), total_events);
+
+    b.throughput("sim/512req_trace_events", total_events, || {
+        let placement = pair_placement(
+            &h100, Parallelism { tp: 1, pp: 1 }, 2, 8,
+            &gaudi, Parallelism { tp: 1, pp: 1 }, 2, 32,
+        );
+        let fabric = Fabric::new(8, 8, h100.scaleup_bw_gbps, 400.0);
+        let mut sim = ClusterSim::new(llama3_8b(Precision::Fp16), placement, fabric);
+        sim.run(&trace).unwrap().tokens_per_s
+    });
+
+    let mut fabric = Fabric::new(16, 8, 900.0, 400.0);
+    let mut i = 0u32;
+    b.run("fabric/transfer_schedule", || {
+        let from = NodeAddr { chassis: i % 16, slot: 0 };
+        let to = NodeAddr { chassis: (i + 7) % 16, slot: 1 };
+        i += 1;
+        fabric.transfer(from, to, 1e8, i as f64).unwrap()
+    });
+}

@@ -1,0 +1,21 @@
+//! Regenerates Table 3 / the §3.1.2 worked example and times the exact
+//! and MILP assignment solvers on it.
+
+use agentic_hetero::opt::assignment::worked_example;
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::table3();
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let p = worked_example();
+    let mut b = Bench::new();
+    b.run("table3/solve_exact", || p.solve_exact().unwrap());
+    b.run("table3/solve_relaxed_milp", || {
+        let mut q = p.clone();
+        q.edges.clear();
+        q.solve_relaxed().unwrap()
+    });
+    b.run("table3/evaluate_assignment", || p.evaluate(&[0, 1]));
+}

@@ -1,0 +1,16 @@
+//! Regenerates Table 5 (device specs + operating cost, listed vs
+//! derived) and times the finance model.
+
+use agentic_hetero::cost::tco::{capex_usd_per_hour, table5, FinanceTerms};
+use agentic_hetero::repro;
+use agentic_hetero::util::bench::Bench;
+
+fn main() {
+    let art = repro::table5_art();
+    println!("=== {} ===\n{}", art.title, art.text);
+
+    let terms = FinanceTerms::default();
+    let mut b = Bench::new();
+    b.run("table5/annuity", || capex_usd_per_hour(25_000.0, &terms));
+    b.run("table5/full_table", || table5(&terms));
+}

@@ -1,0 +1,69 @@
+//! Heterogeneous fleet "marketplace" study (paper §7.3): given a mixed
+//! pool of accelerators with spare capacity, which pairings should a
+//! marketplace advertise for each model/SLA, and what is the buyer's
+//! TCO benefit vs renting homogeneous H100s?
+//!
+//! Also demonstrates migration planning: what it takes to move a live
+//! deployment from the homogeneous baseline to the marketplace winner.
+//!
+//! ```bash
+//! cargo run --release --example hetero_marketplace
+//! ```
+
+use agentic_hetero::cost::hardware::catalog;
+use agentic_hetero::cost::model_profile::table4;
+use agentic_hetero::opt::parallelism::{best_config, ExploreOpts, SeqShape, SlaMode};
+use agentic_hetero::planner::migration::{plan_migration, RoleMap};
+
+fn main() -> anyhow::Result<()> {
+    let devices = catalog();
+    let opts = ExploreOpts::default();
+    let shape = SeqShape { isl: 1024, osl: 1024 };
+
+    println!("marketplace sweep: all {}x{} prefill::decode pairings", devices.len(), devices.len());
+    for m in table4() {
+        for sla in [SlaMode::paper_latency(), SlaMode::Throughput] {
+            // Baseline: homogeneous H100.
+            let h100 = devices.iter().find(|d| d.name == "H100").unwrap();
+            let Some(base) = best_config(&m, h100, h100, shape, sla, &opts) else {
+                continue;
+            };
+            // Sweep every pairing; keep the frontier of the top 3.
+            let mut offers: Vec<(String, f64)> = Vec::new();
+            for pd in &devices {
+                for dd in &devices {
+                    if let Some(cfg) = best_config(&m, pd, dd, shape, sla, &opts) {
+                        offers.push((
+                            format!("{}::{}", pd.name, dd.name),
+                            base.usd_per_mtok / cfg.usd_per_mtok,
+                        ));
+                    }
+                }
+            }
+            offers.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            println!("\n{} — {}", m.name, sla.name());
+            for (pair, benefit) in offers.iter().take(3) {
+                println!("  {pair:<18} {benefit:.2}x vs H100::H100");
+            }
+        }
+    }
+
+    // Migration: homogeneous H100 fleet -> the FP8-8B throughput winner.
+    println!("\n=== migration plan: H100::H100 -> B200::Gaudi3 ===");
+    let mut current = RoleMap::new();
+    current.insert(("H100".into(), "prefill".into()), 2);
+    current.insert(("H100".into(), "decode".into()), 4);
+    let mut target = RoleMap::new();
+    target.insert(("B200".into(), "prefill".into()), 1);
+    target.insert(("Gaudi3".into(), "decode".into()), 4);
+    let plan = plan_migration(&current, &target, 8e9, 50e9 * 0.8);
+    for step in &plan.steps {
+        println!("  {step:?}");
+    }
+    println!(
+        "  moves {:.1} GB of KV, est. {:.1}s",
+        plan.kv_bytes / 1e9,
+        plan.est_duration_s
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end serving driver — the full stack on a real model.
+//!
+//! Loads the AOT-compiled tiny-LLaMA artifacts (built by `make
+//! artifacts`: JAX model + Pallas attention kernel lowered to HLO text),
+//! brings up the serving coordinator (admission → continuous batcher →
+//! PJRT prefill/decode), submits batched requests from concurrent
+//! client threads, and reports TTFT / TBT / throughput / SLA
+//! attainment. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, ChatResponse, Server, ServerConfig};
+use agentic_hetero::util::bench::percentile;
+
+const N_CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 12;
+const MAX_NEW_TOKENS: usize = 24;
+const SLA_TTFT_S: f64 = 0.250;
+const SLA_TBT_S: f64 = 0.100;
+
+fn main() -> anyhow::Result<()> {
+    let t_load = Instant::now();
+    let engine = Engine::load("artifacts")
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    println!(
+        "engine: platform={} model={} params, buckets {:?}, loaded in {:.1}s",
+        engine.platform(),
+        engine.manifest.num_params,
+        engine.manifest.buckets,
+        t_load.elapsed().as_secs_f64()
+    );
+
+    let mut server = Server::new(engine, ServerConfig::default());
+    let metrics = server.metrics.clone();
+
+    // Client side: N threads submitting a Poisson-ish request stream.
+    let (req_tx, req_rx) = mpsc::channel::<ChatRequest>();
+    let (resp_tx, resp_rx) = mpsc::channel::<ChatResponse>();
+    let prompts = [
+        "the paper describes the ",
+        "heterogeneous systems can ",
+        "the cost of serving ",
+        "agents are composed of ",
+    ];
+    let mut clients = Vec::new();
+    for c in 0..N_CLIENTS {
+        let tx = req_tx.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..REQS_PER_CLIENT {
+                let id = (c * REQS_PER_CLIENT + i) as u64;
+                let mut req =
+                    ChatRequest::new(id, prompts[(id as usize) % prompts.len()], MAX_NEW_TOKENS);
+                req.session = Some(c as u64); // each client is a session
+                tx.send(req).unwrap();
+                std::thread::sleep(Duration::from_millis(5 + (id % 7) * 3));
+            }
+        }));
+    }
+    drop(req_tx);
+
+    // Server side: the engine thread (PJRT client is !Send, so the
+    // engine lives here and clients feed it through the channel).
+    let t0 = Instant::now();
+    server.serve(req_rx, resp_tx)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let responses: Vec<ChatResponse> = resp_rx.into_iter().collect();
+    let total = N_CLIENTS * REQS_PER_CLIENT;
+    assert_eq!(responses.len(), total, "all requests must complete");
+
+    let ttfts: Vec<f64> = responses.iter().map(|r| r.ttft_s).collect();
+    let tbts: Vec<f64> = responses
+        .iter()
+        .filter(|r| r.tbt_mean_s > 0.0)
+        .map(|r| r.tbt_mean_s)
+        .collect();
+    let tokens: usize = responses.iter().map(|r| r.tokens).sum();
+    let ttft_ok = ttfts.iter().filter(|t| **t <= SLA_TTFT_S).count();
+    let tbt_ok = tbts.iter().filter(|t| **t <= SLA_TBT_S).count();
+
+    println!("\n--- sample outputs (trained byte-LM) ---");
+    for r in responses.iter().take(3) {
+        println!("#{:>2}: {:?}", r.id, r.text());
+    }
+
+    println!("\n--- serving report ---");
+    println!("requests            {total}");
+    println!("output tokens       {tokens}");
+    println!("wall time           {wall:.2}s");
+    println!("throughput          {:.0} tok/s", tokens as f64 / wall);
+    println!(
+        "TTFT   p50 {:>7.1}ms  p95 {:>7.1}ms  (SLA {}ms: {}/{} ok)",
+        percentile(&ttfts, 50.0) * 1e3,
+        percentile(&ttfts, 95.0) * 1e3,
+        SLA_TTFT_S * 1e3,
+        ttft_ok,
+        total
+    );
+    if !tbts.is_empty() {
+        println!(
+            "TBT    p50 {:>7.1}ms  p95 {:>7.1}ms  (SLA {}ms: {}/{} ok)",
+            percentile(&tbts, 50.0) * 1e3,
+            percentile(&tbts, 95.0) * 1e3,
+            SLA_TBT_S * 1e3,
+            tbt_ok,
+            tbts.len()
+        );
+    }
+    println!("\n--- server metrics ---\n{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,270 @@
+"""L1: flash-attention-style Pallas kernel (tiled online softmax).
+
+This is the compute hot-spot of the serving stack: every prefill and
+decode step of the L2 model (model.py) funnels through this kernel, so it
+lowers into the AOT HLO artifacts the Rust coordinator executes.
+
+Hardware adaptation (GPU paper -> TPU/Pallas; see DESIGN.md
+S.Hardware-Adaptation): the CUDA flash-attention threadblock tiling
+becomes a `pallas_call` grid over (batch*q_heads, q_blocks, kv_blocks);
+shared-memory staging becomes BlockSpec-driven HBM->VMEM tiles; the
+online-softmax running statistics (m, l) and the output accumulator live
+in VMEM scratch instead of registers.
+
+The kernel supports:
+  * grouped-query attention (n_q_heads a multiple of n_kv_heads), mapped
+    in the BlockSpec index function rather than by materializing repeated
+    K/V (saves HBM bandwidth, exactly the GQA motivation);
+  * causal masking (prefill) and per-batch valid-length masking (decode
+    over a padded KV cache);
+  * arbitrary seq lengths via padded tiles + masking.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the same artifact
+runs under the Rust runtime. Real-TPU efficiency is estimated from the
+block geometry in EXPERIMENTS.md S.Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    lens_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_kv: int,
+):
+    """One (q_block, kv_block) step of online-softmax attention.
+
+    Grid: (batch * n_q_heads, num_q_blocks, num_kv_blocks). Scratch holds
+    the running max `m`, normalizer `l`, and unnormalized accumulator per
+    q block; the final kv step writes the normalized output.
+    """
+    kv_idx = pl.program_id(2)
+    num_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+
+    # MXU-shaped contraction: scores over the tile.
+    s = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * sm_scale
+
+    # Absolute positions of this tile's rows/cols.
+    q_pos = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+
+    kv_len = lens_ref[0]
+    mask = k_pos < kv_len
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+    # Padded q rows (q_pos >= seq_q) produce garbage that callers discard.
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    # Guard fully-masked rows: exp(-inf - -inf) -> use large negative m.
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kv_idx == num_kv - 1)
+    def _finalize():
+        l_fin = l_scr[...]
+        # Rows with no valid keys (padded queries) get 0 output.
+        denom = jnp.where(l_fin == 0.0, 1.0, l_fin)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lens: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled online-softmax attention.
+
+    Args:
+      q: (batch, n_q_heads, seq_q, head_dim).
+      k/v: (batch, n_kv_heads, seq_kv, head_dim); n_q_heads must be a
+        multiple of n_kv_heads (grouped-query attention).
+      lens: (batch,) int32 number of valid KV positions per batch element
+        (defaults to seq_kv). Keys at positions >= lens[b] are masked.
+      causal: apply q_pos >= k_pos masking (prefill). Requires
+        seq_q == seq_kv alignment (query i attends keys <= i).
+
+    Returns:
+      (batch, n_q_heads, seq_q, head_dim) with q's dtype.
+    """
+    batch, n_q_heads, seq_q, head_dim = q.shape
+    _, n_kv_heads, seq_kv, _ = k.shape
+    if n_q_heads % n_kv_heads != 0:
+        raise ValueError(
+            f"n_q_heads={n_q_heads} not a multiple of n_kv_heads={n_kv_heads}"
+        )
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    block_q = min(block_q, _ceil_to(seq_q, 8))
+    block_k = min(block_k, _ceil_to(seq_kv, 8))
+    pad_q = _ceil_to(seq_q, block_q)
+    pad_kv = _ceil_to(seq_kv, block_k)
+    if pad_q != seq_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q - seq_q), (0, 0)))
+    if pad_kv != seq_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv - seq_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv - seq_kv), (0, 0)))
+
+    if lens is None:
+        lens = jnp.full((batch,), seq_kv, dtype=jnp.int32)
+    lens = lens.astype(jnp.int32)
+
+    bh = batch * n_q_heads
+    num_q = pad_q // block_q
+    num_kv = pad_kv // block_k
+
+    qf = q.reshape(bh, pad_q, head_dim)
+    kf = k.reshape(batch * n_kv_heads, pad_kv, head_dim)
+    vf = v.reshape(batch * n_kv_heads, pad_kv, head_dim)
+
+    def q_index(b, qi, ki):
+        return (b, qi, 0)
+
+    def kv_index(b, qi, ki):
+        # GQA: query head h uses kv head h // group.
+        bi = b // n_q_heads
+        hi = (b % n_q_heads) // group
+        return (bi * n_kv_heads + hi, ki, 0)
+
+    def lens_index(b, qi, ki):
+        return (b // n_q_heads,)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            sm_scale=float(sm_scale),
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            seq_q=seq_q,
+            seq_kv=seq_kv,
+        ),
+        grid=(bh, num_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lens_index),
+            pl.BlockSpec((1, block_q, head_dim), q_index),
+            pl.BlockSpec((1, block_k, head_dim), kv_index),
+            pl.BlockSpec((1, block_k, head_dim), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), q_index),
+        out_shape=jax.ShapeDtypeStruct((bh, pad_q, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, head_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+
+    out = out.reshape(batch, n_q_heads, pad_q, head_dim)
+    return out[:, :, :seq_q, :]
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_lens: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-step decode attention over a padded KV cache.
+
+    Args:
+      q: (batch, n_q_heads, 1, head_dim) query for the newest token.
+      k_cache/v_cache: (batch, n_kv_heads, max_seq, head_dim) padded cache
+        that already contains the newest token's K/V.
+      cur_lens: (batch,) int32 valid lengths *including* the new token.
+
+    Returns: (batch, n_q_heads, 1, head_dim).
+    """
+    return flash_attention(
+        q,
+        k_cache,
+        v_cache,
+        cur_lens,
+        causal=False,
+        sm_scale=sm_scale,
+        block_q=8,
+        block_k=block_k,
+        interpret=interpret,
+    )

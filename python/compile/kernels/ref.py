@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracle for the Pallas attention kernels.
+
+Deliberately naive: materialize full (seq_q, seq_kv) score matrices and
+use stock softmax. Every kernel output is asserted allclose against this
+in python/tests/test_kernel.py (including hypothesis shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lens: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Naive attention with GQA, causal and valid-length masking.
+
+    Shapes match kernels.attention.flash_attention.
+    """
+    batch, n_q_heads, seq_q, head_dim = q.shape
+    _, n_kv_heads, seq_kv, _ = k.shape
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    # Expand KV heads to query heads.
+    k = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, k) * sm_scale
+
+    k_pos = jnp.arange(seq_kv)[None, None, None, :]
+    q_pos = jnp.arange(seq_q)[None, None, :, None]
+    if lens is None:
+        lens = jnp.full((batch,), seq_kv, dtype=jnp.int32)
+    mask = k_pos < lens[:, None, None, None]
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+
+    s = jnp.where(mask, s, -jnp.inf)
+    # Fully-masked rows (padded queries): softmax would NaN; zero them.
+    row_valid = jnp.any(mask, axis=-1, keepdims=True)
+    p = jax.nn.softmax(jnp.where(row_valid, s, 0.0), axis=-1)
+    p = jnp.where(row_valid, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_lens: jax.Array,
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Reference for kernels.attention.decode_attention."""
+    return attention_ref(
+        q, k_cache, v_cache, cur_lens, causal=False, sm_scale=sm_scale
+    )

@@ -1,0 +1,117 @@
+"""L1: fused RMSNorm(+optional residual-add) Pallas kernel.
+
+The serving stack's second-hottest op after attention: every layer runs
+RMSNorm twice. Fusing the residual add into the normalization removes
+one HBM round-trip of the activation tensor — the classic
+bandwidth-bound fusion the paper's "Fusion and Decomposition" MLIR pass
+family targets (§4.2), expressed here at the kernel level.
+
+TPU mapping: rows are tiled over the grid; each block holds a
+(block_rows, d) tile in VMEM; mean-of-squares reduces along lanes.
+interpret=True for CPU-PJRT execution, like kernels/attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * g_ref[...]).astype(o_ref.dtype)
+
+
+def _rmsnorm_residual_kernel(x_ref, r_ref, g_ref, o_ref, res_ref, *, eps: float):
+    # Fused: res = x + r; out = rmsnorm(res) * g. One pass over HBM.
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    res_ref[...] = s.astype(res_ref.dtype)
+    var = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    o_ref[...] = (s * jax.lax.rsqrt(var + eps) * g_ref[...]).astype(o_ref.dtype)
+
+
+def _grid(rows: int, block_rows: int):
+    return ((rows + block_rows - 1) // block_rows,)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    gain: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """RMSNorm over the last axis. x: (..., d); gain: (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=_grid(rows, block_rows),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(xf, gain)
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_residual(
+    x: jax.Array,
+    residual: jax.Array,
+    gain: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 128,
+    interpret: bool = True,
+):
+    """Fused (x + residual) -> (rmsnorm(x + residual) * gain, x + residual).
+
+    Returns (normalized, new_residual) — the transformer block pattern.
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    rf = residual.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+
+    out, res = pl.pallas_call(
+        functools.partial(_rmsnorm_residual_kernel, eps=eps),
+        grid=_grid(rows, block_rows),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+        ],
+        interpret=interpret,
+    )(xf, rf, gain)
+    return out.reshape(orig_shape), res.reshape(orig_shape)
+
+
+def rmsnorm_ref(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Pure-jnp oracle (matches model._rmsnorm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gain).astype(x.dtype)

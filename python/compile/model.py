@@ -1,0 +1,273 @@
+"""L2: tiny-LLaMA-family model (JAX) — prefill & decode graphs.
+
+Architecture mirrors LLaMA-3 (Table 4 of the paper) at toy scale:
+RMSNorm -> GQA attention with RoPE -> residual -> RMSNorm -> SwiGLU FFN
+-> residual, tied embeddings, byte-level vocab. Attention funnels through
+the L1 Pallas kernel (kernels/attention.py) so the kernel lowers into the
+same AOT HLO artifact the Rust runtime executes.
+
+Two request-path graphs are exported by aot.py:
+
+  prefill(params, tokens[B,S], lens[B])
+      -> (last_logits[B,V], k_cache[L,B,Hkv,Smax,D], v_cache[...])
+  decode(params, token[B], pos[B], k_cache, v_cache)
+      -> (logits[B,V], k_cache, v_cache)
+
+plus a full-logits forward used only for build-time training (aot.py)
+and consistency tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention, flash_attention
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of the tiny-LLaMA variant.
+
+    Defaults give ~0.43M parameters: large enough for a byte-level LM to
+    learn real statistics at build time, small enough that HLO-text
+    artifacts with baked weights stay in the low MBs.
+    """
+
+    vocab: int = 256  # byte-level tokenizer
+    d_model: int = 96
+    n_layers: int = 3
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    max_seq: int = 96
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        a = self.vocab * self.d_model  # tied embed/unembed
+        attn = self.d_model * self.head_dim * (2 * self.n_heads + 2 * self.n_kv_heads)
+        ffn = 3 * self.d_model * self.d_ff
+        norms = 2 * self.d_model * self.n_layers + self.d_model
+        return a + self.n_layers * (attn + ffn) + norms
+
+    def kv_cache_bytes(self, batch: int, bytes_per_elt: int = 4) -> int:
+        """Eq. 3 of the paper at toy scale."""
+        return (
+            2
+            * self.n_layers
+            * self.n_kv_heads
+            * self.head_dim
+            * self.max_seq
+            * batch
+            * bytes_per_elt
+        )
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Scaled-normal init (tied embeddings)."""
+    keys = jax.random.split(key, 1 + cfg.n_layers)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    params: Params = {
+        "embed": dense(keys[0], cfg.d_model, (cfg.vocab, cfg.d_model)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    hd = cfg.head_dim
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[1 + i], 7)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "wq": dense(ks[0], cfg.d_model, (cfg.d_model, cfg.n_heads * hd)),
+                "wk": dense(ks[1], cfg.d_model, (cfg.d_model, cfg.n_kv_heads * hd)),
+                "wv": dense(ks[2], cfg.d_model, (cfg.d_model, cfg.n_kv_heads * hd)),
+                "wo": dense(ks[3], cfg.n_heads * hd, (cfg.n_heads * hd, cfg.d_model)),
+                "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "w_gate": dense(ks[4], cfg.d_model, (cfg.d_model, cfg.d_ff)),
+                "w_up": dense(ks[5], cfg.d_model, (cfg.d_model, cfg.d_ff)),
+                "w_down": dense(ks[6], cfg.d_ff, (cfg.d_ff, cfg.d_model)),
+            }
+        )
+    return params
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, H, S, D); pos: (B, S) absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    angles = pos[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_qkv(layer: Params, x: jax.Array, cfg: ModelConfig):
+    """Project to (q, k, v) with head split. x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ layer["wq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ layer["wk"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ layer["wv"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _ffn(layer: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,
+    lens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    interpret: bool = True,
+):
+    """Process the full prompt; return last-token logits + padded KV cache.
+
+    tokens: (B, S) int32, right-padded; lens: (B,) valid lengths (>=1).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]  # (B, S, d)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    k_caches, v_caches = [], []
+    for layer in params["layers"]:
+        h = _rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(layer, h, cfg)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        o = flash_attention(q, k, v, causal=True, interpret=interpret)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + o @ layer["wo"]
+        h = _rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+        x = x + _ffn(layer, h)
+        # Pad the per-layer KV to max_seq for the decode-side cache.
+        pad = ((0, 0), (0, 0), (0, cfg.max_seq - s), (0, 0))
+        k_caches.append(jnp.pad(k, pad))
+        v_caches.append(jnp.pad(v, pad))
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T  # (B, S, V)
+    last = jnp.take_along_axis(
+        logits, (lens - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    return last, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode(
+    params: Params,
+    token: jax.Array,
+    pos: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cfg: ModelConfig,
+    *,
+    interpret: bool = True,
+):
+    """One decode step.
+
+    token: (B,) int32 newest token; pos: (B,) its absolute position.
+    k_cache/v_cache: (L, B, Hkv, Smax, D). Returns (logits, new caches).
+    """
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :]  # (B, 1, d)
+    pos2 = pos[:, None].astype(jnp.int32)  # (B, 1)
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(layer, h, cfg)  # q:(B,H,1,D) k/v:(B,Hkv,1,D)
+        q = _rope(q, pos2, cfg.rope_theta)
+        k = _rope(k, pos2, cfg.rope_theta)
+
+        # Scatter the new K/V row into the padded cache at pos (per batch).
+        def _upd(cache, new):
+            return jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+            )(cache, new, pos)
+
+        kc = _upd(k_cache[li], k)
+        vc = _upd(v_cache[li], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        o = decode_attention(q, kc, vc, pos + 1, interpret=interpret)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        x = x + o @ layer["wo"]
+        h = _rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+        x = x + _ffn(layer, h)
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T)[:, 0, :]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def forward_full(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """All-position logits (B, S, V); build-time training / tests only.
+
+    use_kernel=False routes attention through the pure-jnp oracle; the
+    Pallas kernel has no autodiff rule, so the (build-time-only) training
+    loop differentiates the oracle path. Both paths are asserted equal in
+    python/tests/test_model.py, so trained weights transfer exactly.
+    """
+    from compile.kernels.ref import attention_ref
+
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    for layer in params["layers"]:
+        h = _rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(layer, h, cfg)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        if use_kernel:
+            o = flash_attention(q, k, v, causal=True, interpret=interpret)
+        else:
+            o = attention_ref(q, k, v, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + o @ layer["wo"]
+        h = _rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+        x = x + _ffn(layer, h)
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def loss_fn(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Next-byte cross-entropy (build-time training objective)."""
+    logits = forward_full(params, tokens[:, :-1], cfg, use_kernel=False)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas flash/decode attention vs the pure-jnp oracle.
+
+This is the CORE kernel correctness signal: fixed-shape unit cases plus
+hypothesis sweeps over shapes, dtypes, GQA ratios, block sizes, and
+valid-length masks.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention, flash_attention
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+class TestFlashBasic:
+    def test_matches_ref_causal(self):
+        q = _rand(0, (2, 4, 32, 16))
+        k = _rand(1, (2, 4, 32, 16))
+        v = _rand(2, (2, 4, 32, 16))
+        out = flash_attention(q, k, v, block_q=16, block_k=16)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), **TOL)
+
+    def test_matches_ref_non_causal(self):
+        q = _rand(3, (1, 2, 24, 8))
+        k = _rand(4, (1, 2, 40, 8))
+        v = _rand(5, (1, 2, 40, 8))
+        out = flash_attention(q, k, v, causal=False, block_q=8, block_k=16)
+        np.testing.assert_allclose(
+            out, attention_ref(q, k, v, causal=False), **TOL
+        )
+
+    def test_gqa(self):
+        q = _rand(6, (2, 8, 16, 8))
+        k = _rand(7, (2, 2, 16, 8))
+        v = _rand(8, (2, 2, 16, 8))
+        out = flash_attention(q, k, v, block_q=8, block_k=8)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), **TOL)
+
+    def test_mqa(self):
+        """Multi-query attention: a single shared KV head."""
+        q = _rand(9, (1, 4, 16, 8))
+        k = _rand(10, (1, 1, 16, 8))
+        v = _rand(11, (1, 1, 16, 8))
+        out = flash_attention(q, k, v, block_q=8, block_k=8)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), **TOL)
+
+    def test_ragged_seq_not_multiple_of_block(self):
+        q = _rand(12, (1, 2, 37, 16))
+        k = _rand(13, (1, 2, 37, 16))
+        v = _rand(14, (1, 2, 37, 16))
+        out = flash_attention(q, k, v, block_q=16, block_k=16)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), **TOL)
+
+    def test_lens_masking(self):
+        q = _rand(15, (3, 2, 16, 8))
+        k = _rand(16, (3, 2, 16, 8))
+        v = _rand(17, (3, 2, 16, 8))
+        lens = jnp.array([4, 16, 9], jnp.int32)
+        out = flash_attention(q, k, v, lens, causal=False, block_q=8, block_k=8)
+        np.testing.assert_allclose(
+            out, attention_ref(q, k, v, lens, causal=False), **TOL
+        )
+
+    def test_zero_len_rows_are_zero(self):
+        """A batch element with 0 valid keys must produce all-zero output."""
+        q = _rand(18, (2, 2, 8, 8))
+        k = _rand(19, (2, 2, 8, 8))
+        v = _rand(20, (2, 2, 8, 8))
+        lens = jnp.array([0, 8], jnp.int32)
+        out = flash_attention(q, k, v, lens, causal=False, block_q=8, block_k=8)
+        np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-7)
+
+    def test_custom_scale(self):
+        q = _rand(21, (1, 2, 16, 8))
+        k = _rand(22, (1, 2, 16, 8))
+        v = _rand(23, (1, 2, 16, 8))
+        out = flash_attention(q, k, v, sm_scale=0.5, block_q=8, block_k=8)
+        np.testing.assert_allclose(
+            out, attention_ref(q, k, v, sm_scale=0.5), **TOL
+        )
+
+    def test_bf16_inputs(self):
+        q = _rand(24, (1, 2, 16, 8), jnp.bfloat16)
+        k = _rand(25, (1, 2, 16, 8), jnp.bfloat16)
+        v = _rand(26, (1, 2, 16, 8), jnp.bfloat16)
+        out = flash_attention(q, k, v, block_q=8, block_k=8)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(attention_ref(q, k, v), np.float32),
+            **BF16_TOL,
+        )
+
+    def test_rejects_bad_gqa_ratio(self):
+        q = _rand(27, (1, 3, 8, 8))
+        k = _rand(28, (1, 2, 8, 8))
+        with pytest.raises(ValueError, match="multiple"):
+            flash_attention(q, k, k)
+
+    def test_single_token(self):
+        q = _rand(29, (1, 2, 1, 8))
+        k = _rand(30, (1, 2, 1, 8))
+        v = _rand(31, (1, 2, 1, 8))
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), **TOL)
+
+    def test_numerical_stability_large_scores(self):
+        """Large logits must not overflow the online softmax."""
+        q = 30.0 * _rand(32, (1, 1, 16, 8))
+        k = 30.0 * _rand(33, (1, 1, 16, 8))
+        v = _rand(34, (1, 1, 16, 8))
+        out = flash_attention(q, k, v, block_q=8, block_k=8)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, attention_ref(q, k, v), rtol=1e-4, atol=1e-4)
+
+
+class TestDecodeAttention:
+    def test_matches_ref(self):
+        q = _rand(40, (2, 4, 1, 16))
+        kc = _rand(41, (2, 2, 48, 16))
+        vc = _rand(42, (2, 2, 48, 16))
+        lens = jnp.array([5, 33], jnp.int32)
+        out = decode_attention(q, kc, vc, lens, block_k=16)
+        np.testing.assert_allclose(
+            out, decode_attention_ref(q, kc, vc, lens), **TOL
+        )
+
+    def test_full_cache(self):
+        q = _rand(43, (1, 2, 1, 8))
+        kc = _rand(44, (1, 1, 32, 8))
+        vc = _rand(45, (1, 1, 32, 8))
+        lens = jnp.array([32], jnp.int32)
+        out = decode_attention(q, kc, vc, lens, block_k=8)
+        np.testing.assert_allclose(
+            out, decode_attention_ref(q, kc, vc, lens), **TOL
+        )
+
+    def test_len_one(self):
+        q = _rand(46, (1, 2, 1, 8))
+        kc = _rand(47, (1, 1, 32, 8))
+        vc = _rand(48, (1, 1, 32, 8))
+        lens = jnp.array([1], jnp.int32)
+        out = decode_attention(q, kc, vc, lens, block_k=8)
+        np.testing.assert_allclose(
+            out, decode_attention_ref(q, kc, vc, lens), **TOL
+        )
+
+    def test_garbage_beyond_len_is_ignored(self):
+        """Poisoning cache rows beyond lens must not change the output."""
+        q = _rand(49, (1, 2, 1, 8))
+        kc = _rand(50, (1, 1, 16, 8))
+        vc = _rand(51, (1, 1, 16, 8))
+        lens = jnp.array([7], jnp.int32)
+        base = decode_attention(q, kc, vc, lens, block_k=8)
+        kc2 = kc.at[:, :, 7:, :].set(1e6)
+        vc2 = vc.at[:, :, 7:, :].set(-1e6)
+        poisoned = decode_attention(q, kc2, vc2, lens, block_k=8)
+        np.testing.assert_allclose(base, poisoned, **TOL)
+
+
+@st.composite
+def attn_shapes(draw):
+    batch = draw(st.integers(1, 3))
+    n_kv = draw(st.sampled_from([1, 2]))
+    group = draw(st.sampled_from([1, 2, 4]))
+    seq = draw(st.integers(1, 40))
+    head_dim = draw(st.sampled_from([4, 8, 16]))
+    causal = draw(st.booleans())
+    block = draw(st.sampled_from([8, 16]))
+    return batch, n_kv * group, n_kv, seq, head_dim, causal, block
+
+
+@hypothesis.settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+@hypothesis.given(shapes=attn_shapes(), seed=st.integers(0, 2**16))
+def test_flash_matches_ref_property(shapes, seed):
+    """Property sweep: kernel == oracle across shape/GQA/mask space."""
+    batch, n_q, n_kv, seq, head_dim, causal, block = shapes
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (batch, n_q, seq, head_dim), jnp.float32)
+    k = jax.random.normal(kk, (batch, n_kv, seq, head_dim), jnp.float32)
+    v = jax.random.normal(kv, (batch, n_kv, seq, head_dim), jnp.float32)
+    lens = jax.random.randint(kl, (batch,), 0 if not causal else 1, seq + 1)
+    out = flash_attention(
+        q, k, v, lens, causal=causal, block_q=block, block_k=block
+    )
+    ref = attention_ref(q, k, v, lens, causal=causal)
+    if causal:
+        # Padded-query rows (beyond lens) are garbage-by-contract in the
+        # kernel; compare only valid rows.
+        for b in range(batch):
+            n = int(lens[b])
+            np.testing.assert_allclose(out[b, :, :n], ref[b, :, :n], **TOL)
+    else:
+        np.testing.assert_allclose(out, ref, **TOL)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    batch=st.integers(1, 3),
+    n_kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    max_seq=st.sampled_from([16, 32, 48]),
+    head_dim=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref_property(batch, n_kv, group, max_seq, head_dim, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (batch, n_kv * group, 1, head_dim), jnp.float32)
+    kc = jax.random.normal(kk, (batch, n_kv, max_seq, head_dim), jnp.float32)
+    vc = jax.random.normal(kv, (batch, n_kv, max_seq, head_dim), jnp.float32)
+    lens = jax.random.randint(kl, (batch,), 1, max_seq + 1)
+    out = decode_attention(q, kc, vc, lens, block_k=16)
+    np.testing.assert_allclose(out, decode_attention_ref(q, kc, vc, lens), **TOL)

@@ -1,0 +1,160 @@
+"""L2 correctness: prefill/decode graph consistency and shape contracts.
+
+The serving stack's core invariant: prefilling a prompt then greedily
+decoding must produce exactly the same logits as running the full
+sequence through the reference forward pass.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    vocab=61, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=48, max_seq=32
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(7), CFG)
+
+
+def _tokens(seed, b, s, vocab=CFG.vocab):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params):
+        toks = _tokens(0, 2, 10)
+        lens = jnp.array([10, 10], jnp.int32)
+        last, kc, vc = M.prefill(params, toks, lens, CFG)
+        assert last.shape == (2, CFG.vocab)
+        assert kc.shape == (
+            CFG.n_layers, 2, CFG.n_kv_heads, CFG.max_seq, CFG.head_dim,
+        )
+        assert vc.shape == kc.shape
+
+    def test_decode_shapes(self, params):
+        toks = _tokens(1, 1, 4)
+        _, kc, vc = M.prefill(params, toks, jnp.array([4], jnp.int32), CFG)
+        logits, kc2, vc2 = M.decode(
+            params, toks[:, 0], jnp.array([4], jnp.int32), kc, vc, CFG
+        )
+        assert logits.shape == (1, CFG.vocab)
+        assert kc2.shape == kc.shape
+
+    def test_num_params_matches_tree(self, params):
+        leaves = jax.tree.leaves(params)
+        total = sum(int(np.prod(l.shape)) for l in leaves)
+        assert total == CFG.num_params()
+
+    def test_kv_cache_bytes_eq3(self):
+        # Eq 3: 2 * L * d_model * (Nkv/Nheads) * ISL * BS * BPE
+        got = CFG.kv_cache_bytes(batch=3, bytes_per_elt=2)
+        expect = (
+            2 * CFG.n_layers * CFG.d_model * (CFG.n_kv_heads / CFG.n_heads)
+            * CFG.max_seq * 3 * 2
+        )
+        assert got == int(expect)
+
+
+class TestConsistency:
+    def test_prefill_last_logits_match_forward_full(self, params):
+        toks = _tokens(2, 2, 12)
+        lens = jnp.array([12, 12], jnp.int32)
+        last, _, _ = M.prefill(params, toks, lens, CFG)
+        full = M.forward_full(params, toks, CFG)
+        np.testing.assert_allclose(last, full[:, -1, :], rtol=1e-4, atol=1e-4)
+
+    def test_kernel_and_oracle_forward_agree(self, params):
+        """The training path (oracle) equals the serving path (kernel)."""
+        toks = _tokens(3, 2, 16)
+        a = M.forward_full(params, toks, CFG, use_kernel=True)
+        b = M.forward_full(params, toks, CFG, use_kernel=False)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_prefill_then_decode_matches_full(self, params):
+        """Prefill n tokens, decode m more: every step's logits must match
+        the full-sequence forward pass."""
+        b, n, m = 2, 6, 4
+        toks = _tokens(4, b, n + m)
+        full = M.forward_full(params, toks, CFG)
+
+        _, kc, vc = M.prefill(
+            params, toks[:, :n], jnp.full((b,), n, jnp.int32), CFG
+        )
+        for i in range(m):
+            pos = jnp.full((b,), n + i, jnp.int32)
+            logits, kc, vc = M.decode(params, toks[:, n + i], pos, kc, vc, CFG)
+            np.testing.assert_allclose(
+                logits, full[:, n + i, :], rtol=1e-3, atol=1e-3,
+                err_msg=f"decode step {i}",
+            )
+
+    def test_padded_prefill_matches_unpadded(self, params):
+        """Right-padding a prompt must not change its last-token logits."""
+        toks = _tokens(5, 1, 8)
+        last_a, _, _ = M.prefill(params, toks, jnp.array([8], jnp.int32), CFG)
+        padded = jnp.pad(toks, ((0, 0), (0, 6)))
+        last_b, _, _ = M.prefill(params, padded, jnp.array([8], jnp.int32), CFG)
+        np.testing.assert_allclose(last_a, last_b, rtol=1e-4, atol=1e-4)
+
+    def test_batch_order_invariance(self, params):
+        """Each batch lane is independent: swapping lanes swaps outputs."""
+        toks = _tokens(6, 2, 10)
+        lens = jnp.array([10, 7], jnp.int32)
+        last, _, _ = M.prefill(params, toks, lens, CFG)
+        last_sw, _, _ = M.prefill(params, toks[::-1], lens[::-1], CFG)
+        np.testing.assert_allclose(last, last_sw[::-1], rtol=1e-4, atol=1e-4)
+
+    def test_decode_cache_write_position(self, params):
+        """Decode must write the new KV row exactly at pos."""
+        toks = _tokens(7, 1, 4)
+        _, kc, vc = M.prefill(params, toks, jnp.array([4], jnp.int32), CFG)
+        _, kc2, _ = M.decode(
+            params, toks[:, 0], jnp.array([4], jnp.int32), kc, vc, CFG
+        )
+        # Rows 0..3 unchanged, row 4 new & nonzero, rows 5+ still zero.
+        np.testing.assert_allclose(kc2[:, :, :, :4], kc[:, :, :, :4], atol=1e-7)
+        assert float(jnp.abs(kc2[:, :, :, 4]).sum()) > 0.0
+        np.testing.assert_allclose(np.asarray(kc2[:, :, :, 5:]), 0.0, atol=1e-7)
+
+    def test_loss_fn_finite_and_decreasing_direction(self, params):
+        toks = _tokens(8, 4, 20)
+        loss = M.loss_fn(params, toks, CFG)
+        assert np.isfinite(float(loss))
+        # Random init: loss should be near -log(1/vocab).
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.5
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 12),
+    m=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_prefill_decode_consistency_property(n, m, seed):
+    """Property: for any split point, prefill+decode == full forward."""
+    cfg = M.ModelConfig(
+        vocab=31, d_model=16, n_layers=1, n_heads=2, n_kv_heads=1,
+        d_ff=24, max_seq=24,
+    )
+    params = M.init_params(jax.random.PRNGKey(123), cfg)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, n + m)), jnp.int32)
+    full = M.forward_full(params, toks, cfg)
+    _, kc, vc = M.prefill(params, toks[:, :n], jnp.array([n], jnp.int32), cfg)
+    for i in range(m):
+        pos = jnp.array([n + i], jnp.int32)
+        logits, kc, vc = M.decode(params, toks[:, n + i], pos, kc, vc, cfg)
+    np.testing.assert_allclose(
+        logits, full[:, -1, :], rtol=2e-3, atol=2e-3
+    )

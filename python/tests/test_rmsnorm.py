@@ -1,0 +1,111 @@
+"""Fused RMSNorm kernel vs oracle: fixed cases + hypothesis sweeps."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_ref, rmsnorm_residual
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32).astype(dtype)
+
+
+class TestRmsNorm:
+    def test_matches_ref_2d(self):
+        x = _rand(0, (32, 96))
+        g = _rand(1, (96,))
+        np.testing.assert_allclose(rmsnorm(x, g), rmsnorm_ref(x, g), **TOL)
+
+    def test_matches_ref_3d(self):
+        x = _rand(2, (4, 17, 64))
+        g = _rand(3, (64,))
+        np.testing.assert_allclose(rmsnorm(x, g), rmsnorm_ref(x, g), **TOL)
+
+    def test_matches_model_rmsnorm(self):
+        from compile.model import _rmsnorm
+
+        x = _rand(4, (8, 32))
+        g = jnp.ones((32,))
+        np.testing.assert_allclose(rmsnorm(x, g), _rmsnorm(x, g, 1e-5), **TOL)
+
+    def test_rows_not_multiple_of_block(self):
+        x = _rand(5, (37, 48))
+        g = _rand(6, (48,))
+        out = rmsnorm(x, g, block_rows=16)
+        np.testing.assert_allclose(out, rmsnorm_ref(x, g), **TOL)
+
+    def test_unit_gain_unit_norm(self):
+        x = _rand(7, (16, 128))
+        out = rmsnorm(x, jnp.ones((128,)))
+        rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+    def test_bf16(self):
+        x = _rand(8, (8, 64), jnp.bfloat16)
+        g = _rand(9, (64,))
+        out = rmsnorm(x, g)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(rmsnorm_ref(x, g), np.float32),
+            rtol=2e-2,
+            atol=2e-2,
+        )
+
+
+class TestFusedResidual:
+    def test_matches_unfused(self):
+        x = _rand(10, (16, 64))
+        r = _rand(11, (16, 64))
+        g = _rand(12, (64,))
+        out, res = rmsnorm_residual(x, r, g)
+        np.testing.assert_allclose(res, x + r, **TOL)
+        np.testing.assert_allclose(out, rmsnorm_ref(x + r, g), **TOL)
+
+    def test_zero_residual_is_plain_rmsnorm(self):
+        x = _rand(13, (8, 32))
+        g = _rand(14, (32,))
+        out, res = rmsnorm_residual(x, jnp.zeros_like(x), g)
+        np.testing.assert_allclose(out, rmsnorm(x, g), **TOL)
+        np.testing.assert_allclose(res, x, **TOL)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    rows=st.integers(1, 64),
+    d=st.sampled_from([8, 24, 96, 128]),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.01, 100.0),
+)
+def test_rmsnorm_property(rows, d, block, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    kx, kg = jax.random.split(key)
+    x = scale * jax.random.normal(kx, (rows, d), jnp.float32)
+    g = jax.random.normal(kg, (d,), jnp.float32)
+    out = rmsnorm(x, g, block_rows=block)
+    np.testing.assert_allclose(out, rmsnorm_ref(x, g), rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    rows=st.integers(1, 32),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_residual_property(rows, d, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kr, kg = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (rows, d), jnp.float32)
+    r = jax.random.normal(kr, (rows, d), jnp.float32)
+    g = jax.random.normal(kg, (d,), jnp.float32)
+    out, res = rmsnorm_residual(x, r, g)
+    np.testing.assert_allclose(res, x + r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out, rmsnorm_ref(x + r, g), rtol=1e-4, atol=1e-4)

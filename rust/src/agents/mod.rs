@@ -1,0 +1,180 @@
+//! Agent workload library: ready-made graphs for the paper's examples.
+//!
+//! * [`voice_agent`] — Figure 2's conversational voice agent (STT →
+//!   LLM with a bounded web-search loop → TTS);
+//! * [`rag_agent`] — retrieval-augmented generation (memory lookup +
+//!   context assembly before the LLM);
+//! * [`langchain_style_agent`] — Figure 7(a)'s memory + Search() +
+//!   Calculator() agent, as lowered in Figure 7(b);
+//! * [`patterns`] — the Figure 1 taxonomy builders: single, peer
+//!   network, supervisor, agent-as-tool, hierarchical, custom.
+
+pub mod patterns;
+
+use crate::ir::attr::Attr;
+use crate::ir::graph::Graph;
+use crate::ir::GraphBuilder;
+
+/// Figure 2: conversational voice agent.
+///
+/// The "search until enough context" feedback loop is expressed as a
+/// `ctrl.loop` region with bounded trips (§3.1 bounded unrolling).
+pub fn voice_agent(model: &str, isl: i64, osl: i64) -> Graph {
+    let mut b = GraphBuilder::new("voice_agent");
+    let audio = b.op_with("io.input", &[], &[("modality", "audio".into())]);
+    let text = b.op_with(
+        "stt.transcribe",
+        &[audio],
+        &[("model", "whisper-small".into())],
+    );
+
+    // Search loop: LLM decides whether it needs more context.
+    let mut inner = GraphBuilder::new("search_loop");
+    let q = inner.op("io.input", &[]);
+    let hits = inner.op_with("tool.lookup", &[q], &[("tool", "web_search".into())]);
+    let merged = inner.op_with("gp.compute", &[hits], &[("op", "merge_context".into())]);
+    inner.output(merged);
+    let searched = b.region_op(
+        "ctrl.loop",
+        &[text],
+        &[("max_trips", Attr::Int(3)), ("cond", "needs_context".into())],
+        inner.finish(),
+    );
+
+    let answer = b.op_with(
+        "llm.infer",
+        &[searched],
+        &[
+            ("model", model.into()),
+            ("isl", Attr::Int(isl)),
+            ("osl", Attr::Int(osl)),
+        ],
+    );
+    let speech = b.op_with(
+        "tts.synthesize",
+        &[answer],
+        &[("voice", "en-US".into())],
+    );
+    b.op("io.output", &[speech]);
+    b.output(speech);
+    b.finish()
+}
+
+/// Retrieval-augmented generation agent (Table 1's memory-lookup path).
+pub fn rag_agent(model: &str, isl: i64, osl: i64, top_k: i64) -> Graph {
+    let mut b = GraphBuilder::new("rag_agent");
+    let query = b.op_with("io.input", &[], &[("modality", "text".into())]);
+    let embedded = b.op_with("gp.compute", &[query], &[("op", "embed_query".into())]);
+    let docs = b.op_with(
+        "mem.lookup",
+        &[embedded],
+        &[("store", "vector_db".into()), ("top_k", Attr::Int(top_k))],
+    );
+    let ctx = b.op_with(
+        "gp.compute",
+        &[docs],
+        &[("op", "assemble_context".into())],
+    );
+    let out = b.op_with(
+        "llm.infer",
+        &[ctx],
+        &[
+            ("model", model.into()),
+            ("isl", Attr::Int(isl)),
+            ("osl", Attr::Int(osl)),
+        ],
+    );
+    b.op_with("obs.store", &[out], &[("kind", "episodic".into())]);
+    b.op("io.output", &[out]);
+    b.output(out);
+    b.finish()
+}
+
+/// Figure 7(a): LangChain-style agent with memory and two tools.
+pub fn langchain_style_agent(model: &str) -> Graph {
+    let mut b = GraphBuilder::new("langchain_agent");
+    let query = b.op("io.input", &[]);
+    let memory = b.op_with(
+        "mem.lookup",
+        &[query],
+        &[("store", "conversation_memory".into())],
+    );
+    let planned = b.op_with(
+        "ctrl.plan",
+        &[query, memory],
+        &[("planner", "react".into())],
+    );
+    let search = b.op_with("tool.call", &[planned], &[("tool", "Search".into())]);
+    let calc = b.op_with("tool.call", &[planned], &[("tool", "Calculator".into())]);
+    let gathered = b.op("ctrl.merge", &[search, calc]);
+    let out = b.op_with(
+        "llm.infer",
+        &[planned, gathered],
+        &[("model", model.into()), ("isl", Attr::Int(1024)), ("osl", Attr::Int(256))],
+    );
+    b.op_with("mem.store", &[out], &[("store", "conversation_memory".into())]);
+    b.op("io.output", &[out]);
+    b.output(out);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::passes::PassManager;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn voice_agent_verifies_and_matches_fig2() {
+        let g = voice_agent("8b-fp16", 512, 256);
+        verify(&g).unwrap();
+        for op in [
+            "io.input",
+            "stt.transcribe",
+            "ctrl.loop",
+            "llm.infer",
+            "tts.synthesize",
+            "io.output",
+        ] {
+            assert!(g.contains_op(op), "missing {op}");
+        }
+        // The search branch lives inside the loop region.
+        assert!(g.contains_op("tool.lookup"));
+    }
+
+    #[test]
+    fn rag_agent_verifies() {
+        let g = rag_agent("70b-fp8", 2048, 256, 8);
+        verify(&g).unwrap();
+        assert!(g.contains_op("mem.lookup"));
+        assert!(g.contains_op("obs.store"));
+    }
+
+    #[test]
+    fn langchain_agent_lowers_like_fig7() {
+        let mut g = langchain_style_agent("8b-fp16");
+        verify(&g).unwrap();
+        let mut pm = PassManager::standard();
+        pm.run(&mut g).unwrap();
+        // Figure 7(c): llm split, tools split.
+        assert!(g.contains_op("llm.prefill"));
+        assert!(g.contains_op("llm.decode"));
+        assert!(g.contains_op("tool.lookup"));
+        assert!(g.contains_op("tool.compute"));
+        assert!(!g.contains_op("tool.call"));
+    }
+
+    #[test]
+    fn agents_round_trip_through_text() {
+        for g in [
+            voice_agent("8b-fp16", 512, 128),
+            rag_agent("8b-fp16", 1024, 128, 4),
+            langchain_style_agent("70b-fp16"),
+        ] {
+            let text = crate::ir::printer::print(&g);
+            let g2 = crate::ir::parser::parse(&text).unwrap();
+            verify(&g2).unwrap();
+            assert_eq!(crate::ir::printer::print(&g2), text);
+        }
+    }
+}

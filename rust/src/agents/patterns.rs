@@ -1,0 +1,203 @@
+//! Figure 1's taxonomy of agentic architectural patterns, as graph
+//! builders: (a) single agent, (b) peer-to-peer network, (c) supervisor,
+//! (d) agent-as-tool, (e) hierarchical, (f) custom.
+
+use crate::ir::attr::Attr;
+use crate::ir::graph::Graph;
+use crate::ir::GraphBuilder;
+
+/// A leaf agent body: input → llm → yield.
+fn leaf_agent(name: &str, model: &str) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.op("io.input", &[]);
+    let y = b.op_with("llm.infer", &[x], &[("model", model.into())]);
+    b.output(y);
+    b.finish()
+}
+
+/// (a) Single agent invoking tools directly.
+pub fn single_agent(model: &str, tools: &[&str]) -> Graph {
+    let mut b = GraphBuilder::new("single_agent");
+    let x = b.op("io.input", &[]);
+    let plan = b.op_with("ctrl.plan", &[x], &[("planner", "react".into())]);
+    let mut outs = vec![plan];
+    for t in tools {
+        outs.push(b.op_with("tool.call", &[plan], &[("tool", (*t).into())]));
+    }
+    let merged = b.op("ctrl.merge", &outs);
+    let y = b.op_with("llm.infer", &[merged], &[("model", model.into())]);
+    b.op("io.output", &[y]);
+    b.output(y);
+    b.finish()
+}
+
+/// (b) Peer-to-peer network: `n` agents exchange and merge.
+pub fn peer_network(model: &str, n: usize) -> Graph {
+    let mut b = GraphBuilder::new("peer_network");
+    let x = b.op("io.input", &[]);
+    let peers: Vec<_> = (0..n)
+        .map(|i| {
+            b.region_op(
+                "agent.graph",
+                &[x],
+                &[("role", format!("peer_{i}").into())],
+                leaf_agent(&format!("peer_{i}"), model),
+            )
+        })
+        .collect();
+    let merged = b.op("ctrl.merge", &peers);
+    b.op("io.output", &[merged]);
+    b.output(merged);
+    b.finish()
+}
+
+/// (c) Supervisor dispatching to subordinates.
+pub fn supervisor(model: &str, workers: usize) -> Graph {
+    let mut b = GraphBuilder::new("supervisor");
+    let x = b.op("io.input", &[]);
+    let sup = b.op_with(
+        "ctrl.plan",
+        &[x],
+        &[("planner", "supervisor".into()), ("model", model.into())],
+    );
+    let subs: Vec<_> = (0..workers)
+        .map(|i| {
+            b.region_op(
+                "agent.graph",
+                &[sup],
+                &[("role", format!("worker_{i}").into())],
+                leaf_agent(&format!("worker_{i}"), model),
+            )
+        })
+        .collect();
+    let merged = b.op("ctrl.merge", &subs);
+    let y = b.op_with("llm.infer", &[merged], &[("model", model.into())]);
+    b.op("io.output", &[y]);
+    b.output(y);
+    b.finish()
+}
+
+/// (d) Agent-as-tool: the supervisor is invoked like a tool.
+pub fn agent_as_tool(model: &str) -> Graph {
+    let mut b = GraphBuilder::new("agent_as_tool");
+    let x = b.op("io.input", &[]);
+    let helper = b.region_op(
+        "agent.graph",
+        &[x],
+        &[("role", "tool_agent".into()), ("invoked_as", "tool".into())],
+        leaf_agent("helper", model),
+    );
+    let y = b.op_with("llm.infer", &[x, helper], &[("model", model.into())]);
+    b.op("io.output", &[y]);
+    b.output(y);
+    b.finish()
+}
+
+/// (e) Hierarchical: supervisors of supervisors, `depth` layers with
+/// `fanout` children each.
+pub fn hierarchical(model: &str, depth: usize, fanout: usize) -> Graph {
+    fn level(model: &str, depth: usize, fanout: usize, tag: String) -> Graph {
+        if depth == 0 {
+            return leaf_agent(&format!("leaf_{tag}"), model);
+        }
+        let mut b = GraphBuilder::new(&format!("tier_{tag}"));
+        let x = b.op("io.input", &[]);
+        let plan = b.op_with("ctrl.plan", &[x], &[("planner", "supervisor".into())]);
+        let kids: Vec<_> = (0..fanout)
+            .map(|i| {
+                b.region_op(
+                    "agent.graph",
+                    &[plan],
+                    &[("role", format!("child_{tag}_{i}").into())],
+                    level(model, depth - 1, fanout, format!("{tag}_{i}")),
+                )
+            })
+            .collect();
+        let merged = b.op("ctrl.merge", &kids);
+        b.output(merged);
+        b.finish()
+    }
+    let mut b = GraphBuilder::new("hierarchical");
+    let x = b.op("io.input", &[]);
+    let root = b.region_op(
+        "agent.graph",
+        &[x],
+        &[("role", "root".into())],
+        level(model, depth, fanout, "r".into()),
+    );
+    b.op("io.output", &[root]);
+    b.output(root);
+    b.finish()
+}
+
+/// (f) Custom graph: a diamond with a feedback loop and mixed ops.
+pub fn custom(model: &str) -> Graph {
+    let mut b = GraphBuilder::new("custom");
+    let x = b.op("io.input", &[]);
+    let l = b.op_with("llm.infer", &[x], &[("model", model.into())]);
+    let t = b.op_with("tool.call", &[x], &[("tool", "db".into())]);
+    let joined = b.op("ctrl.merge", &[l, t]);
+
+    let mut refine = GraphBuilder::new("refine");
+    let i = refine.op("io.input", &[]);
+    let r = refine.op_with("llm.infer", &[i], &[("model", model.into())]);
+    refine.output(r);
+    let refined = b.region_op(
+        "ctrl.loop",
+        &[joined],
+        &[("max_trips", Attr::Int(2)), ("cond", "not_good_enough".into())],
+        refine.finish(),
+    );
+    b.op("io.output", &[refined]);
+    b.output(refined);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn all_patterns_verify() {
+        for g in [
+            single_agent("8b-fp16", &["search", "calculator"]),
+            peer_network("8b-fp16", 3),
+            supervisor("8b-fp16", 4),
+            agent_as_tool("8b-fp16"),
+            hierarchical("8b-fp16", 2, 2),
+            custom("8b-fp16"),
+        ] {
+            verify(&g).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn hierarchy_size_grows_with_fanout() {
+        let small = hierarchical("8b-fp16", 1, 2);
+        let big = hierarchical("8b-fp16", 2, 3);
+        assert!(big.size() > small.size());
+        // depth-2/fanout-3 has 3 mid-tier agents × 3 leaves = 9 leaves.
+        let leaves = count_op(&big, "llm.infer");
+        assert_eq!(leaves, 9);
+    }
+
+    fn count_op(g: &Graph, op: &str) -> usize {
+        g.op_names().iter().filter(|o| *o == op).count()
+    }
+
+    #[test]
+    fn peer_network_has_n_peers() {
+        let g = peer_network("8b-fp16", 5);
+        assert_eq!(count_op(&g, "agent.graph"), 5);
+    }
+
+    #[test]
+    fn patterns_round_trip() {
+        for g in [supervisor("8b-fp16", 2), hierarchical("8b-fp16", 1, 2)] {
+            let text = crate::ir::printer::print(&g);
+            let g2 = crate::ir::parser::parse(&text).unwrap();
+            assert_eq!(crate::ir::printer::print(&g2), text);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Heterogeneous cluster discrete-event simulator (paper §5's
+//! "simulated a continuous workload scenario").
+//!
+//! The simulator executes a request trace against a *placement* (which
+//! device pipelines serve prefill and decode, at which parallelism and
+//! batch limits), moving KV caches over the [`crate::transport`] fabric
+//! and timing stages with the [`crate::cost::roofline`] model. It
+//! reports the paper's serving metrics — TTFT, TBT, end-to-end latency,
+//! throughput, utilization, and $/Mtok — so planner decisions can be
+//! validated end-to-end rather than just analytically.
+//!
+//! * [`sim`] — the event loop, pipelines, continuous decode batching;
+//! * [`trace`] — workload generators (Poisson arrivals, lognormal
+//!   sequence lengths, the Figure-2 voice-agent stage structure).
+
+pub mod sim;
+pub mod trace;
+
+pub use sim::{ClusterSim, Placement, PipelineSpec, SimReport};
+pub use trace::{Request, TraceConfig};

@@ -1,0 +1,652 @@
+//! The discrete-event cluster simulator.
+//!
+//! A [`Placement`] describes the serving fleet: prefill pipelines and
+//! decode pipelines, each a (device, TP×PP, batch limit) tuple pinned to
+//! a chassis of the [`Fabric`]. The event loop executes a request trace:
+//!
+//! ```text
+//! Arrival → [cpu pre-stage] → prefill queue → batched prefill
+//!        → KV transfer over fabric (overlap-aware)
+//!        → continuous-batching decode rounds → [cpu post-stage] → done
+//! ```
+//!
+//! Timing comes from [`crate::cost::roofline`] — the same calibration
+//! the analytic Figure-8/9 explorer uses, so simulated and analytic TCO
+//! cross-check (see `rust/tests/sim_vs_analytic.rs`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap, VecDeque};
+
+use super::trace::Request;
+use crate::cost::hardware::DeviceSpec;
+use crate::cost::model_profile::ModelProfile;
+use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency, Parallelism};
+use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::transport::fabric::{Fabric, NodeAddr};
+use crate::util::bench::percentile;
+use crate::{Error, Result};
+
+/// One serving pipeline (a TP×PP device group acting as a unit).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub device: DeviceSpec,
+    pub par: Parallelism,
+    /// Max requests per prefill batch / decode round.
+    pub max_batch: u64,
+    /// Chassis this pipeline's lead device occupies.
+    pub chassis: u32,
+}
+
+/// The fleet layout the planner chose.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub prefill: Vec<PipelineSpec>,
+    pub decode: Vec<PipelineSpec>,
+}
+
+impl Placement {
+    /// Total device count (for cost reporting).
+    pub fn device_count(&self) -> u32 {
+        self.prefill
+            .iter()
+            .chain(self.decode.iter())
+            .map(|p| p.par.devices())
+            .sum()
+    }
+
+    /// Fleet $/hr under the given opex model.
+    pub fn usd_per_hour(&self, opex: OpexModel, terms: &FinanceTerms) -> f64 {
+        self.prefill
+            .iter()
+            .chain(self.decode.iter())
+            .map(|p| p.par.devices() as f64 * opex_usd_per_hour(&p.device, opex, terms))
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Ev {
+    /// Request hits the front door.
+    Arrival(usize),
+    /// CPU pre-stage finished; request joins a prefill queue.
+    PrefillReady(usize),
+    /// Prefill batch `id` on pipeline finished.
+    PrefillDone { pipe: usize, batch: u64 },
+    /// Request's KV landed on its decode pipeline.
+    KvArrived(usize),
+    /// Decode round boundary on a pipeline.
+    DecodeRound(usize),
+    /// CPU post-stage complete.
+    Done(usize),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Event {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct ReqState {
+    decode_pipe: usize,
+    first_token_s: f64,
+    tokens_done: u64,
+    done_s: f64,
+}
+
+struct PrefillPipe {
+    spec: PipelineSpec,
+    queue: VecDeque<usize>,
+    busy: bool,
+    busy_time: f64,
+    next_batch: u64,
+    in_flight: BTreeMap<u64, Vec<usize>>,
+}
+
+struct DecodePipe {
+    spec: PipelineSpec,
+    active: Vec<usize>,
+    waiting: VecDeque<usize>,
+    round_scheduled: bool,
+    busy_time: f64,
+}
+
+/// Simulation results.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n_requests: usize,
+    pub makespan_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub tbt_p50_s: f64,
+    pub tbt_p95_s: f64,
+    pub e2e_p50_s: f64,
+    pub output_tokens: u64,
+    pub tokens_per_s: f64,
+    pub usd_per_mtok: f64,
+    pub prefill_utilization: f64,
+    pub decode_utilization: f64,
+    pub kv_bytes_moved: f64,
+    pub events_processed: u64,
+}
+
+impl SimReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs in {:.1}s | TTFT p50 {:.0}ms p95 {:.0}ms | TBT p50 {:.1}ms p95 {:.1}ms | \
+             {:.0} tok/s | ${:.3}/Mtok | util p{:.0}% d{:.0}%",
+            self.n_requests,
+            self.makespan_s,
+            self.ttft_p50_s * 1e3,
+            self.ttft_p95_s * 1e3,
+            self.tbt_p50_s * 1e3,
+            self.tbt_p95_s * 1e3,
+            self.tokens_per_s,
+            self.usd_per_mtok,
+            self.prefill_utilization * 100.0,
+            self.decode_utilization * 100.0
+        )
+    }
+}
+
+/// The simulator.
+pub struct ClusterSim {
+    pub model: ModelProfile,
+    pub eff: Efficiency,
+    pub opex: OpexModel,
+    pub terms: FinanceTerms,
+    pub placement: Placement,
+    fabric: Fabric,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+}
+
+impl ClusterSim {
+    pub fn new(model: ModelProfile, placement: Placement, fabric: Fabric) -> ClusterSim {
+        ClusterSim {
+            model,
+            eff: Efficiency::default(),
+            opex: OpexModel::Derived,
+            terms: FinanceTerms::default(),
+            placement,
+            fabric,
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    fn push(&mut self, t: f64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event {
+            t,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    /// Start a prefill batch on pipeline `pi` if it is idle and has work.
+    fn try_start_prefill(
+        &mut self,
+        pipes: &mut [PrefillPipe],
+        pi: usize,
+        now: f64,
+        trace: &[Request],
+    ) {
+        let p = &mut pipes[pi];
+        if p.busy || p.queue.is_empty() {
+            return;
+        }
+        let take = (p.spec.max_batch as usize).min(p.queue.len());
+        let batch: Vec<usize> = p.queue.drain(..take).collect();
+        // Batch prefill time at the longest prompt in the batch
+        // (padding to the bucket, as real serving does).
+        let isl = batch.iter().map(|&i| trace[i].isl).max().unwrap_or(1);
+        let t_pre = prefill_time(
+            &self.model,
+            &p.spec.device,
+            p.spec.par,
+            isl,
+            batch.len() as u64,
+            &self.eff,
+        )
+        .total();
+        let id = p.next_batch;
+        p.next_batch += 1;
+        p.busy = true;
+        p.busy_time += t_pre;
+        p.in_flight.insert(id, batch);
+        self.push(now + t_pre, Ev::PrefillDone { pipe: pi, batch: id });
+    }
+
+    /// Schedule a decode round on pipeline `di` if needed.
+    fn maybe_schedule_round(&mut self, pipes: &mut [DecodePipe], di: usize, now: f64, trace: &[Request], states: &[ReqState]) {
+        let d = &mut pipes[di];
+        if d.round_scheduled {
+            return;
+        }
+        // Admit waiting requests (continuous batching).
+        while d.active.len() < d.spec.max_batch as usize {
+            match d.waiting.pop_front() {
+                Some(i) => d.active.push(i),
+                None => break,
+            }
+        }
+        if d.active.is_empty() {
+            return;
+        }
+        // Round time at the mean current context of active requests.
+        let ctx: u64 = d
+            .active
+            .iter()
+            .map(|&i| trace[i].isl + states[i].tokens_done)
+            .sum::<u64>()
+            / d.active.len() as u64;
+        let step = decode_step_time(
+            &self.model,
+            &d.spec.device,
+            d.spec.par,
+            ctx.max(1),
+            d.active.len() as u64,
+            &self.eff,
+        )
+        .total();
+        d.round_scheduled = true;
+        d.busy_time += step;
+        self.push(now + step, Ev::DecodeRound(di));
+    }
+
+    /// Run the trace to completion; returns aggregate metrics.
+    pub fn run(&mut self, trace: &[Request]) -> Result<SimReport> {
+        if self.placement.prefill.is_empty() || self.placement.decode.is_empty() {
+            return Err(Error::Runtime(
+                "placement needs ≥1 pipeline per stage".into(),
+            ));
+        }
+        let n = trace.len();
+        let mut states = vec![ReqState::default(); n];
+        let mut prefill: Vec<PrefillPipe> = self
+            .placement
+            .prefill
+            .clone()
+            .into_iter()
+            .map(|spec| PrefillPipe {
+                spec,
+                queue: VecDeque::new(),
+                busy: false,
+                busy_time: 0.0,
+                next_batch: 0,
+                in_flight: BTreeMap::new(),
+            })
+            .collect();
+        let mut decode: Vec<DecodePipe> = self
+            .placement
+            .decode
+            .clone()
+            .into_iter()
+            .map(|spec| DecodePipe {
+                spec,
+                active: Vec::new(),
+                waiting: VecDeque::new(),
+                round_scheduled: false,
+                busy_time: 0.0,
+            })
+            .collect();
+
+        self.heap.clear();
+        for (i, r) in trace.iter().enumerate() {
+            self.push(r.arrive_s, Ev::Arrival(i));
+        }
+
+        let mut tbt_samples: Vec<f64> = Vec::new();
+        let mut last_token_t: Vec<f64> = vec![0.0; n];
+        let mut kv_bytes_moved = 0.0;
+        let mut events = 0u64;
+        let mut completed = 0usize;
+        let mut makespan = 0.0f64;
+
+        while let Some(Reverse(Event { t, ev, .. })) = self.heap.pop() {
+            events += 1;
+            if events > 100_000_000 {
+                return Err(Error::Runtime("event budget exceeded".into()));
+            }
+            makespan = makespan.max(t);
+            match ev {
+                Ev::Arrival(i) => {
+                    self.push(t + trace[i].pre_s, Ev::PrefillReady(i));
+                }
+                Ev::PrefillReady(i) => {
+                    // Fast-path router: least-loaded prefill pipeline.
+                    let pi = (0..prefill.len())
+                        .min_by_key(|&k| prefill[k].queue.len() + prefill[k].busy as usize)
+                        .unwrap();
+                    prefill[pi].queue.push_back(i);
+                    self.try_start_prefill(&mut prefill, pi, t, trace);
+                }
+                Ev::PrefillDone { pipe, batch } => {
+                    prefill[pipe].busy = false;
+                    let members = prefill[pipe].in_flight.remove(&batch).unwrap();
+                    let from = NodeAddr {
+                        chassis: prefill[pipe].spec.chassis,
+                        slot: 0,
+                    };
+                    for i in members {
+                        // Route to least-loaded decode pipeline.
+                        let di = (0..decode.len())
+                            .min_by_key(|&k| decode[k].active.len() + decode[k].waiting.len())
+                            .unwrap();
+                        states[i].decode_pipe = di;
+                        let to = NodeAddr {
+                            chassis: decode[di].spec.chassis,
+                            slot: 0,
+                        };
+                        let bytes =
+                            crate::cost::kv::kv_cache_bytes(&self.model, trace[i].isl, 1);
+                        kv_bytes_moved += bytes;
+                        let arrive = self.fabric.transfer(from, to, bytes, t)?;
+                        self.push(arrive, Ev::KvArrived(i));
+                    }
+                    self.try_start_prefill(&mut prefill, pipe, t, trace);
+                }
+                Ev::KvArrived(i) => {
+                    let di = states[i].decode_pipe;
+                    decode[di].waiting.push_back(i);
+                    self.maybe_schedule_round(&mut decode, di, t, trace, &states);
+                }
+                Ev::DecodeRound(di) => {
+                    decode[di].round_scheduled = false;
+                    // Every active request emits one token.
+                    let active = decode[di].active.clone();
+                    let mut still = Vec::with_capacity(active.len());
+                    for i in active {
+                        if states[i].tokens_done == 0 {
+                            states[i].first_token_s = t;
+                        } else {
+                            tbt_samples.push(t - last_token_t[i]);
+                        }
+                        last_token_t[i] = t;
+                        states[i].tokens_done += 1;
+                        if states[i].tokens_done >= trace[i].osl {
+                            self.push(t + trace[i].post_s, Ev::Done(i));
+                        } else {
+                            still.push(i);
+                        }
+                    }
+                    decode[di].active = still;
+                    self.maybe_schedule_round(&mut decode, di, t, trace, &states);
+                }
+                Ev::Done(i) => {
+                    states[i].done_s = t;
+                    completed += 1;
+                }
+            }
+        }
+
+        if completed != n {
+            return Err(Error::Runtime(format!(
+                "simulation stalled: {completed}/{n} requests completed"
+            )));
+        }
+
+        let ttfts: Vec<f64> = (0..n)
+            .map(|i| states[i].first_token_s - trace[i].arrive_s)
+            .collect();
+        let e2es: Vec<f64> = (0..n)
+            .map(|i| states[i].done_s - trace[i].arrive_s)
+            .collect();
+        let output_tokens: u64 = trace.iter().map(|r| r.osl).sum();
+        let usd_per_hr = self.placement.usd_per_hour(self.opex, &self.terms);
+        let tokens_per_s = output_tokens as f64 / makespan;
+        let prefill_devsec: f64 = prefill
+            .iter()
+            .map(|p| p.busy_time * p.spec.par.devices() as f64)
+            .sum();
+        let decode_devsec: f64 = decode
+            .iter()
+            .map(|d| d.busy_time * d.spec.par.devices() as f64)
+            .sum();
+        let prefill_dev: f64 = prefill
+            .iter()
+            .map(|p| p.spec.par.devices() as f64)
+            .sum::<f64>()
+            * makespan;
+        let decode_dev: f64 = decode
+            .iter()
+            .map(|d| d.spec.par.devices() as f64)
+            .sum::<f64>()
+            * makespan;
+
+        Ok(SimReport {
+            n_requests: n,
+            makespan_s: makespan,
+            ttft_p50_s: percentile(&ttfts, 50.0),
+            ttft_p95_s: percentile(&ttfts, 95.0),
+            tbt_p50_s: if tbt_samples.is_empty() {
+                0.0
+            } else {
+                percentile(&tbt_samples, 50.0)
+            },
+            tbt_p95_s: if tbt_samples.is_empty() {
+                0.0
+            } else {
+                percentile(&tbt_samples, 95.0)
+            },
+            e2e_p50_s: percentile(&e2es, 50.0),
+            output_tokens,
+            tokens_per_s,
+            usd_per_mtok: usd_per_hr / 3600.0 / tokens_per_s * 1e6,
+            prefill_utilization: prefill_devsec / prefill_dev,
+            decode_utilization: decode_devsec / decode_dev,
+            kv_bytes_moved,
+            events_processed: events,
+        })
+    }
+}
+
+/// Convenience: build a homogeneous-pair placement (`n_p` prefill and
+/// `n_d` decode pipelines on the given devices), chassis-separated.
+pub fn pair_placement(
+    prefill_dev: &DeviceSpec,
+    prefill_par: Parallelism,
+    n_p: usize,
+    prefill_batch: u64,
+    decode_dev: &DeviceSpec,
+    decode_par: Parallelism,
+    n_d: usize,
+    decode_batch: u64,
+) -> Placement {
+    let mut chassis = 0u32;
+    let prefill = (0..n_p)
+        .map(|_| {
+            let s = PipelineSpec {
+                device: prefill_dev.clone(),
+                par: prefill_par,
+                max_batch: prefill_batch,
+                chassis,
+            };
+            chassis += 1;
+            s
+        })
+        .collect();
+    let decode = (0..n_d)
+        .map(|_| {
+            let s = PipelineSpec {
+                device: decode_dev.clone(),
+                par: decode_par,
+                max_batch: decode_batch,
+                chassis,
+            };
+            chassis += 1;
+            s
+        })
+        .collect();
+    Placement { prefill, decode }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::trace::{generate, TraceConfig};
+    use crate::cost::hardware::by_name;
+    use crate::cost::model_profile::llama3_8b;
+    use crate::cost::Precision;
+
+    fn basic_sim(rate: f64, n: usize) -> (ClusterSim, Vec<Request>) {
+        let h100 = by_name("H100").unwrap();
+        let placement = pair_placement(
+            &h100,
+            Parallelism { tp: 1, pp: 1 },
+            1,
+            8,
+            &h100,
+            Parallelism { tp: 1, pp: 1 },
+            1,
+            32,
+        );
+        let fabric = Fabric::new(4, 8, h100.scaleup_bw_gbps, 400.0);
+        let sim = ClusterSim::new(llama3_8b(Precision::Fp16), placement, fabric);
+        let trace = generate(&TraceConfig {
+            n_requests: n,
+            rate,
+            isl_mean: 512,
+            osl_mean: 64,
+            sigma: 0.3,
+            seed: 1,
+        });
+        (sim, trace)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let (mut sim, trace) = basic_sim(4.0, 64);
+        let r = sim.run(&trace).unwrap();
+        assert_eq!(r.n_requests, 64);
+        assert_eq!(r.output_tokens, trace.iter().map(|t| t.osl).sum::<u64>());
+        assert!(r.makespan_s > 0.0);
+        assert!(r.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn ttft_reasonable_under_light_load() {
+        let (mut sim, trace) = basic_sim(0.5, 16);
+        let r = sim.run(&trace).unwrap();
+        // Light load: TTFT ≈ prefill + transfer ≈ tens of ms.
+        assert!(r.ttft_p50_s < 0.25, "{}", r.summary());
+        assert!(r.tbt_p50_s < 0.02, "{}", r.summary());
+    }
+
+    #[test]
+    fn overload_inflates_ttft() {
+        let (mut s1, t1) = basic_sim(0.5, 48);
+        let (mut s2, t2) = basic_sim(50.0, 48);
+        let r1 = s1.run(&t1).unwrap();
+        let r2 = s2.run(&t2).unwrap();
+        assert!(
+            r2.ttft_p95_s > 2.0 * r1.ttft_p95_s,
+            "overloaded {} vs light {}",
+            r2.ttft_p95_s,
+            r1.ttft_p95_s
+        );
+    }
+
+    #[test]
+    fn more_decode_pipelines_increase_throughput() {
+        let h100 = by_name("H100").unwrap();
+        let make = |nd: usize| {
+            let placement = pair_placement(
+                &h100,
+                Parallelism { tp: 1, pp: 1 },
+                1,
+                8,
+                &h100,
+                Parallelism { tp: 1, pp: 1 },
+                nd,
+                16,
+            );
+            let fabric = Fabric::new(8, 8, h100.scaleup_bw_gbps, 400.0);
+            ClusterSim::new(llama3_8b(Precision::Fp16), placement, fabric)
+        };
+        let trace = generate(&TraceConfig {
+            n_requests: 96,
+            rate: 30.0,
+            isl_mean: 512,
+            osl_mean: 128,
+            sigma: 0.0,
+            seed: 3,
+        });
+        let r1 = make(1).run(&trace).unwrap();
+        let r3 = make(3).run(&trace).unwrap();
+        assert!(
+            r3.tokens_per_s > r1.tokens_per_s * 1.2,
+            "1 pipe {} vs 3 pipes {}",
+            r1.tokens_per_s,
+            r3.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let (mut sim, trace) = basic_sim(8.0, 64);
+        let r = sim.run(&trace).unwrap();
+        assert!(r.prefill_utilization > 0.0 && r.prefill_utilization <= 1.0);
+        assert!(r.decode_utilization > 0.0 && r.decode_utilization <= 1.0);
+    }
+
+    #[test]
+    fn kv_bytes_match_eq3() {
+        let (mut sim, trace) = basic_sim(4.0, 16);
+        let m = llama3_8b(Precision::Fp16);
+        let expected: f64 = trace
+            .iter()
+            .map(|r| crate::cost::kv::kv_cache_bytes(&m, r.isl, 1))
+            .sum();
+        let r = sim.run(&trace).unwrap();
+        assert!((r.kv_bytes_moved - expected).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_placement_rejected() {
+        let h100 = by_name("H100").unwrap();
+        let placement = Placement {
+            prefill: vec![],
+            decode: vec![PipelineSpec {
+                device: h100.clone(),
+                par: Parallelism { tp: 1, pp: 1 },
+                max_batch: 1,
+                chassis: 0,
+            }],
+        };
+        let mut sim = ClusterSim::new(
+            llama3_8b(Precision::Fp16),
+            placement,
+            Fabric::new(1, 8, 900.0, 400.0),
+        );
+        assert!(sim.run(&[]).is_err());
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let (mut s1, t1) = basic_sim(8.0, 48);
+        let (mut s2, t2) = basic_sim(8.0, 48);
+        let r1 = s1.run(&t1).unwrap();
+        let r2 = s2.run(&t2).unwrap();
+        assert_eq!(r1.events_processed, r2.events_processed);
+        assert_eq!(r1.tokens_per_s, r2.tokens_per_s);
+        let _ = t2;
+    }
+}

@@ -1,0 +1,168 @@
+//! Workload trace generation.
+//!
+//! The paper has no public trace (its evaluation uses a continuous
+//! synthetic workload); we generate Poisson arrivals with lognormal
+//! sequence-length marginals — the standard synthetic stand-in used by
+//! serving papers — plus the voice-agent stage structure of Figure 2
+//! (STT preprocessing and TTS postprocessing around the LLM, with a
+//! probabilistic web-search loop).
+
+use crate::util::rng::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrive_s: f64,
+    /// Prompt tokens.
+    pub isl: u64,
+    /// Tokens to generate.
+    pub osl: u64,
+    /// CPU-side preprocessing before prefill (e.g. STT), seconds.
+    pub pre_s: f64,
+    /// CPU-side postprocessing after last token (e.g. TTS), seconds.
+    pub post_s: f64,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    /// Mean arrival rate, requests/second (Poisson).
+    pub rate: f64,
+    pub isl_mean: u64,
+    pub osl_mean: u64,
+    /// Lognormal sigma for length dispersion (0 = constant lengths).
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 256,
+            rate: 8.0,
+            isl_mean: 512,
+            osl_mean: 128,
+            sigma: 0.4,
+            seed: 0,
+        }
+    }
+}
+
+fn lognormal_len(rng: &mut Rng, mean: u64, sigma: f64, lo: u64, hi: u64) -> u64 {
+    if sigma == 0.0 {
+        return mean.clamp(lo, hi);
+    }
+    // Choose mu so the lognormal's mean equals `mean`.
+    let mu = (mean as f64).ln() - sigma * sigma / 2.0;
+    (rng.lognormal(mu, sigma).round() as u64).clamp(lo, hi)
+}
+
+/// Poisson arrivals with lognormal lengths.
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0;
+    (0..cfg.n_requests as u64)
+        .map(|id| {
+            t += rng.exp(cfg.rate);
+            Request {
+                id,
+                arrive_s: t,
+                isl: lognormal_len(&mut rng, cfg.isl_mean, cfg.sigma, 8, 32_768),
+                osl: lognormal_len(&mut rng, cfg.osl_mean, cfg.sigma, 1, 16_384),
+                pre_s: 0.0,
+                post_s: 0.0,
+            }
+        })
+        .collect()
+}
+
+/// The Figure-2 conversational voice agent: STT in front, TTS behind,
+/// and an occasional extra LLM round-trip for web search (the feedback
+/// loop is unrolled per §3.1's bounded-unrolling rule).
+pub fn voice_agent(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5052_4F42);
+    generate(cfg)
+        .into_iter()
+        .map(|mut r| {
+            // STT: ~real-time factor 0.1 on a ~6 s utterance, lognormal.
+            r.pre_s = rng.lognormal(-0.6, 0.4).clamp(0.1, 5.0);
+            // TTS synthesis of the reply.
+            r.post_s = rng.lognormal(-1.2, 0.4).clamp(0.05, 2.0);
+            if rng.bool(0.35) {
+                // Search branch taken: extra context tokens + a tool wait
+                // folded into preprocessing (network-bound, Table 2).
+                r.isl += 256;
+                r.pre_s += rng.lognormal(-1.0, 0.6).clamp(0.05, 3.0);
+            }
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_rate_right() {
+        let cfg = TraceConfig {
+            n_requests: 2000,
+            rate: 10.0,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        assert_eq!(t.len(), 2000);
+        for w in t.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s);
+        }
+        let span = t.last().unwrap().arrive_s;
+        let rate = t.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn lengths_near_means() {
+        let cfg = TraceConfig {
+            n_requests: 4000,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let isl: f64 = t.iter().map(|r| r.isl as f64).sum::<f64>() / t.len() as f64;
+        let osl: f64 = t.iter().map(|r| r.osl as f64).sum::<f64>() / t.len() as f64;
+        assert!((isl - 512.0).abs() < 40.0, "isl={isl}");
+        assert!((osl - 128.0).abs() < 12.0, "osl={osl}");
+    }
+
+    #[test]
+    fn sigma_zero_is_constant() {
+        let cfg = TraceConfig {
+            sigma: 0.0,
+            n_requests: 10,
+            ..Default::default()
+        };
+        assert!(generate(&cfg).iter().all(|r| r.isl == 512 && r.osl == 128));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.arrive_s == y.arrive_s && x.isl == y.isl));
+    }
+
+    #[test]
+    fn voice_agent_has_stages() {
+        let t = voice_agent(&TraceConfig::default());
+        assert!(t.iter().all(|r| r.pre_s > 0.0 && r.post_s > 0.0));
+        // Some requests take the search branch (longer context).
+        let searched = t.iter().filter(|r| r.isl > 512 + 128).count();
+        assert!(searched > 0);
+    }
+}

@@ -1,0 +1,382 @@
+//! Configuration system: a TOML-subset parser + typed deployment config.
+//!
+//! The offline registry has no serde/toml, so we parse the subset real
+//! deployments need: `[section]` and `[[array-of-tables]]` headers,
+//! `key = value` with strings, ints, floats, bools, and flat arrays,
+//! plus `#` comments. The typed [`DeployConfig`] maps a config file to
+//! the server/planner knobs and is what `agentic-hetero serve
+//! --config` loads.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One table: key → value.
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: the root table, named tables, and arrays of tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub root: Table,
+    pub tables: BTreeMap<String, Table>,
+    pub table_arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        if section.is_empty() {
+            self.root.get(key)
+        } else {
+            self.tables.get(section).and_then(|t| t.get(key))
+        }
+    }
+}
+
+fn parse_value(s: &str, line_no: usize) -> Result<Value> {
+    let s = s.trim();
+    let err = |msg: String| Error::Parse { line: line_no, msg };
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            return Err(err(format!("unterminated string: {s}")));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err("unterminated array (must be single-line)".into()));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            // Split on commas not inside strings.
+            let mut depth_str = false;
+            let mut cur = String::new();
+            for c in inner.chars() {
+                match c {
+                    '"' => {
+                        depth_str = !depth_str;
+                        cur.push(c);
+                    }
+                    ',' if !depth_str => {
+                        items.push(parse_value(&cur, line_no)?);
+                        cur.clear();
+                    }
+                    _ => cur.push(c),
+                }
+            }
+            if !cur.trim().is_empty() {
+                items.push(parse_value(&cur, line_no)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    s.parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| err(format!("cannot parse value: {s}")))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    #[derive(Clone)]
+    enum Cursor {
+        Root,
+        Table(String),
+        ArrayElem(String),
+    }
+    let mut cursor = Cursor::Root;
+
+    for (i, raw) in src.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw.find('#') {
+            // Keep '#' inside strings: only strip if before any quote or
+            // after balanced quotes.
+            Some(pos) if raw[..pos].matches('"').count() % 2 == 0 => &raw[..pos],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let valid_name = |s: &str| {
+            !s.is_empty()
+                && s.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-'))
+        };
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            if !valid_name(&name) {
+                return Err(Error::Parse {
+                    line: line_no,
+                    msg: format!("bad table-array header: {line:?}"),
+                });
+            }
+            doc.table_arrays.entry(name.clone()).or_default().push(Table::new());
+            cursor = Cursor::ArrayElem(name);
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if !valid_name(&name) {
+                return Err(Error::Parse {
+                    line: line_no,
+                    msg: format!("bad table header: {line:?}"),
+                });
+            }
+            doc.tables.entry(name.clone()).or_default();
+            cursor = Cursor::Table(name);
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(Error::Parse {
+                line: line_no,
+                msg: format!("unterminated table header: {line:?}"),
+            });
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::Parse {
+                line: line_no,
+                msg: format!("expected `key = value`, got {line:?}"),
+            });
+        };
+        let key = k.trim().to_string();
+        let val = parse_value(v, line_no)?;
+        match &cursor {
+            Cursor::Root => {
+                doc.root.insert(key, val);
+            }
+            Cursor::Table(name) => {
+                doc.tables.get_mut(name).unwrap().insert(key, val);
+            }
+            Cursor::ArrayElem(name) => {
+                doc.table_arrays
+                    .get_mut(name)
+                    .unwrap()
+                    .last_mut()
+                    .unwrap()
+                    .insert(key, val);
+            }
+        }
+    }
+    Ok(doc)
+}
+
+/// Typed deployment configuration for the serving binary.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    pub artifacts_dir: String,
+    pub max_batch: usize,
+    pub batch_wait_ms: u64,
+    pub max_new_tokens: u64,
+    pub admission_rate: f64,
+    pub admission_burst: f64,
+    pub sla_ttft_ms: f64,
+    pub sla_tbt_ms: f64,
+    /// Workers: (name, model list).
+    pub workers: Vec<(String, Vec<String>)>,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        DeployConfig {
+            artifacts_dir: "artifacts".into(),
+            max_batch: 4,
+            batch_wait_ms: 5,
+            max_new_tokens: 24,
+            admission_rate: 1000.0,
+            admission_burst: 100.0,
+            sla_ttft_ms: 250.0,
+            sla_tbt_ms: 100.0,
+            workers: vec![("worker0".into(), vec!["tiny-llama".into()])],
+        }
+    }
+}
+
+impl DeployConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &str) -> Result<DeployConfig> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_str_src(&src)
+    }
+
+    pub fn from_str_src(src: &str) -> Result<DeployConfig> {
+        let doc = parse(src)?;
+        let mut cfg = DeployConfig::default();
+        let get_f = |sec: &str, key: &str, d: f64| -> f64 {
+            doc.get(sec, key).and_then(|v| v.as_f64()).unwrap_or(d)
+        };
+        let get_i = |sec: &str, key: &str, d: i64| -> i64 {
+            doc.get(sec, key).and_then(|v| v.as_int()).unwrap_or(d)
+        };
+        if let Some(v) = doc.get("server", "artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        cfg.max_batch = get_i("server", "max_batch", cfg.max_batch as i64) as usize;
+        cfg.batch_wait_ms = get_i("server", "batch_wait_ms", cfg.batch_wait_ms as i64) as u64;
+        cfg.max_new_tokens =
+            get_i("server", "max_new_tokens", cfg.max_new_tokens as i64) as u64;
+        cfg.admission_rate = get_f("admission", "rate", cfg.admission_rate);
+        cfg.admission_burst = get_f("admission", "burst", cfg.admission_burst);
+        cfg.sla_ttft_ms = get_f("sla", "ttft_ms", cfg.sla_ttft_ms);
+        cfg.sla_tbt_ms = get_f("sla", "tbt_ms", cfg.sla_tbt_ms);
+        if let Some(workers) = doc.table_arrays.get("worker") {
+            cfg.workers = workers
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let name = t
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string())
+                        .unwrap_or_else(|| format!("worker{i}"));
+                    let models = match t.get("models") {
+                        Some(Value::Array(xs)) => xs
+                            .iter()
+                            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                            .collect(),
+                        _ => vec!["tiny-llama".to_string()],
+                    };
+                    (name, models)
+                })
+                .collect();
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# deployment config
+title = "prod"
+
+[server]
+artifacts_dir = "artifacts"   # relative to cwd
+max_batch = 8
+batch_wait_ms = 3
+max_new_tokens = 16
+
+[admission]
+rate = 500.0
+burst = 50.0
+
+[sla]
+ttft_ms = 250.0
+tbt_ms = 20.0
+
+[[worker]]
+name = "w0"
+models = ["tiny-llama", "tiny-llama-2"]
+
+[[worker]]
+name = "w1"
+models = ["tiny-llama"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(SAMPLE).unwrap();
+        assert_eq!(doc.root["title"], Value::Str("prod".into()));
+        assert_eq!(doc.get("server", "max_batch"), Some(&Value::Int(8)));
+        assert_eq!(doc.get("admission", "rate"), Some(&Value::Float(500.0)));
+        assert_eq!(doc.table_arrays["worker"].len(), 2);
+    }
+
+    #[test]
+    fn typed_config_loads() {
+        let cfg = DeployConfig::from_str_src(SAMPLE).unwrap();
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.batch_wait_ms, 3);
+        assert_eq!(cfg.admission_rate, 500.0);
+        assert_eq!(cfg.sla_tbt_ms, 20.0);
+        assert_eq!(cfg.workers.len(), 2);
+        assert_eq!(cfg.workers[0].1.len(), 2);
+    }
+
+    #[test]
+    fn defaults_on_missing_keys() {
+        let cfg = DeployConfig::from_str_src("[server]\nmax_batch = 2\n").unwrap();
+        assert_eq!(cfg.max_batch, 2);
+        assert_eq!(cfg.sla_ttft_ms, 250.0); // default
+        assert_eq!(cfg.workers.len(), 1);
+    }
+
+    #[test]
+    fn arrays_and_comments() {
+        let doc = parse("xs = [1, 2, 3] # trailing\nname = \"a#b\"\n").unwrap();
+        assert_eq!(
+            doc.root["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(doc.root["name"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn bad_line_errors_with_position() {
+        match parse("ok = 1\nbroken line\n") {
+            Err(Error::Parse { line, .. }) => assert_eq!(line, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("x".into()).as_int(), None);
+    }
+}

@@ -1,0 +1,300 @@
+//! Accelerator catalog (paper Table 5) and marginal cost-efficiency
+//! analysis (paper Figure 4).
+//!
+//! Specs come from the public datasheets the paper cites [24–30]. The
+//! paper's "Operating Cost ($/hr)" column is reproduced verbatim in
+//! [`DeviceSpec::paper_opex_usd_hr`]; [`crate::cost::tco`] additionally
+//! *derives* an operating cost from the stated assumptions (4-year
+//! amortization at 8%, max-TDP energy at $0.40/kWh) so the two can be
+//! compared (see EXPERIMENTS.md — the paper's own table is not exactly
+//! reproducible from its stated formula; we track both).
+
+use super::Precision;
+
+/// Hardware vendor (Fig. 4 color-codes by manufacturer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Nvidia,
+    Intel,
+    Amd,
+}
+
+impl Vendor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Vendor::Nvidia => "NVIDIA",
+            Vendor::Intel => "Intel",
+            Vendor::Amd => "AMD",
+        }
+    }
+}
+
+/// One accelerator class (a row of Table 5 plus datasheet constants).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    /// Street price, USD (Table 5; June-2025 reseller average).
+    pub price_usd: f64,
+    /// HBM capacity, GB.
+    pub mem_gb: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Dense FP16 throughput, TFLOPs.
+    pub tflops_fp16: f64,
+    /// Dense FP8 throughput, TFLOPs (falls back to FP16 rate where the
+    /// part has no FP8 path — A40/A100 predate FP8).
+    pub tflops_fp8: f64,
+    /// Board TDP, watts (datasheets).
+    pub tdp_w: f64,
+    /// Paper Table 5 "Operating Cost ($/hr)".
+    pub paper_opex_usd_hr: f64,
+    /// Scale-up domain size (accelerators per chassis, §5.2).
+    pub scaleup_size: u32,
+    /// Scale-up per-device interconnect bandwidth, GB/s (NVLink/ICL/IF).
+    pub scaleup_bw_gbps: f64,
+    /// Scale-out NIC bandwidth per device, GB/s (RoCE, §5.2).
+    pub scaleout_bw_gbps: f64,
+}
+
+impl DeviceSpec {
+    pub fn tflops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp16 => self.tflops_fp16,
+            Precision::Fp8 => self.tflops_fp8,
+        }
+    }
+
+    /// Fig. 4(a): $ per GB/s of memory bandwidth.
+    pub fn cost_per_gbps(&self) -> f64 {
+        self.price_usd / self.mem_bw_gbps
+    }
+
+    /// Fig. 4(b)/(c): $ per TFLOP at the given precision.
+    pub fn cost_per_tflop(&self, p: Precision) -> f64 {
+        self.price_usd / self.tflops(p)
+    }
+
+    /// Fig. 4(d): $ per GB of memory capacity.
+    pub fn cost_per_gb(&self) -> f64 {
+        self.price_usd / self.mem_gb
+    }
+}
+
+/// The six-device catalog of Table 5.
+///
+/// FP8 rates and TDPs are from the cited datasheets: H100 SXM 3,958
+/// TFLOPs FP8 / 700 W; B200 4,500 TFLOPs FP8 / 1,000 W; Gaudi3 1,835
+/// TFLOPs FP8 / 900 W; MI300X 2,615 TFLOPs FP8 / 750 W; A100 SXM 400 W
+/// (no FP8 — INT8 624 TOPS path approximated at the FP16 rate); A40
+/// 300 W (no FP8).
+pub fn catalog() -> Vec<DeviceSpec> {
+    vec![
+        DeviceSpec {
+            name: "A40",
+            vendor: Vendor::Nvidia,
+            price_usd: 3_000.0,
+            mem_gb: 48.0,
+            mem_bw_gbps: 696.0,
+            tflops_fp16: 75.0,
+            tflops_fp8: 75.0,
+            tdp_w: 300.0,
+            paper_opex_usd_hr: 0.15,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 56.0, // PCIe gen4 x16 + NVLink bridge pairs
+            scaleout_bw_gbps: 25.0,
+        },
+        DeviceSpec {
+            name: "A100",
+            vendor: Vendor::Nvidia,
+            price_usd: 8_000.0,
+            mem_gb: 80.0,
+            mem_bw_gbps: 2_039.0,
+            tflops_fp16: 322.0,
+            tflops_fp8: 322.0,
+            tdp_w: 400.0,
+            paper_opex_usd_hr: 0.25,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 600.0, // NVLink3
+            scaleout_bw_gbps: 25.0, // 200 Gb/s HDR
+        },
+        DeviceSpec {
+            name: "Gaudi3",
+            vendor: Vendor::Intel,
+            price_usd: 12_500.0,
+            mem_gb: 128.0,
+            mem_bw_gbps: 3_700.0,
+            tflops_fp16: 1_678.0,
+            tflops_fp8: 1_835.0,
+            tdp_w: 900.0,
+            paper_opex_usd_hr: 0.49,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 1_050.0, // 21x 200GbE RoCE links on-card
+            scaleout_bw_gbps: 100.0,  // 800 Gb/s Ethernet
+        },
+        DeviceSpec {
+            name: "MI300x",
+            vendor: Vendor::Amd,
+            price_usd: 20_000.0,
+            mem_gb: 192.0,
+            mem_bw_gbps: 5_300.0,
+            tflops_fp16: 1_307.0,
+            tflops_fp8: 2_615.0,
+            tdp_w: 750.0,
+            paper_opex_usd_hr: 0.52,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 896.0, // Infinity Fabric
+            scaleout_bw_gbps: 50.0, // 400 Gb/s
+        },
+        DeviceSpec {
+            name: "H100",
+            vendor: Vendor::Nvidia,
+            price_usd: 25_000.0,
+            mem_gb: 80.0,
+            mem_bw_gbps: 3_350.0,
+            tflops_fp16: 1_979.0,
+            tflops_fp8: 3_958.0,
+            tdp_w: 700.0,
+            paper_opex_usd_hr: 0.60,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 900.0, // NVLink4
+            scaleout_bw_gbps: 50.0, // 400 Gb/s NDR
+        },
+        DeviceSpec {
+            name: "B200",
+            vendor: Vendor::Nvidia,
+            price_usd: 40_000.0,
+            mem_gb: 192.0,
+            mem_bw_gbps: 8_000.0,
+            tflops_fp16: 2_250.0,
+            // NVIDIA's headline FP8 figure (sparsity-enabled). The dense
+            // rate is 4.5 PF, but Fig. 4(c) of the paper reports B200 as
+            // the FP8 cost-efficiency leader, which only holds with the
+            // 9 PF headline number — so that is what the paper evidently
+            // used and what we calibrate to (see EXPERIMENTS.md).
+            tflops_fp8: 9_000.0,
+            tdp_w: 1_000.0,
+            paper_opex_usd_hr: 0.83,
+            scaleup_size: 8,
+            scaleup_bw_gbps: 1_800.0, // NVLink5
+            scaleout_bw_gbps: 50.0,
+        },
+    ]
+}
+
+/// Look up a device by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    catalog()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+/// One row of the Figure 4 analysis.
+#[derive(Debug, Clone)]
+pub struct CostEfficiencyRow {
+    pub device: &'static str,
+    pub vendor: &'static str,
+    pub usd_per_gbps: f64,
+    pub usd_per_tflop_fp16: f64,
+    pub usd_per_tflop_fp8: f64,
+    pub usd_per_gb: f64,
+}
+
+/// Figure 4 (a)–(d): marginal cost per unit of each resource.
+pub fn cost_efficiency() -> Vec<CostEfficiencyRow> {
+    catalog()
+        .iter()
+        .map(|d| CostEfficiencyRow {
+            device: d.name,
+            vendor: d.vendor.name(),
+            usd_per_gbps: d.cost_per_gbps(),
+            usd_per_tflop_fp16: d.cost_per_tflop(Precision::Fp16),
+            usd_per_tflop_fp8: d.cost_per_tflop(Precision::Fp8),
+            usd_per_gb: d.cost_per_gb(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table5() {
+        let cat = catalog();
+        assert_eq!(cat.len(), 6);
+        let h100 = by_name("h100").unwrap();
+        assert_eq!(h100.price_usd, 25_000.0);
+        assert_eq!(h100.mem_gb, 80.0);
+        assert_eq!(h100.mem_bw_gbps, 3_350.0);
+        assert_eq!(h100.tflops_fp16, 1_979.0);
+        assert_eq!(h100.paper_opex_usd_hr, 0.60);
+    }
+
+    #[test]
+    fn fig4a_bandwidth_efficiency_leaders() {
+        // Paper: "Gaudi3 and MI300x exhibit the highest bandwidth
+        // efficiency" (lowest $/GBps).
+        let mut rows = cost_efficiency();
+        rows.sort_by(|a, b| a.usd_per_gbps.partial_cmp(&b.usd_per_gbps).unwrap());
+        let top2: Vec<&str> = rows[..2].iter().map(|r| r.device).collect();
+        assert!(top2.contains(&"Gaudi3"), "top2={top2:?}");
+        assert!(top2.contains(&"MI300x"), "top2={top2:?}");
+    }
+
+    #[test]
+    fn fig4b_fp16_compute_efficiency_leaders() {
+        // Paper: "H100, Gaudi3, and MI300x provide strong cost-efficiency"
+        // at FP16.
+        let mut rows = cost_efficiency();
+        rows.sort_by(|a, b| {
+            a.usd_per_tflop_fp16
+                .partial_cmp(&b.usd_per_tflop_fp16)
+                .unwrap()
+        });
+        let top3: Vec<&str> = rows[..3].iter().map(|r| r.device).collect();
+        for d in ["H100", "Gaudi3", "MI300x"] {
+            assert!(top3.contains(&d), "top3={top3:?}");
+        }
+    }
+
+    #[test]
+    fn fig4c_fp8_leader_is_b200_class() {
+        // Paper: "B200 offers leading efficiency at low precision".
+        let mut rows = cost_efficiency();
+        rows.sort_by(|a, b| {
+            a.usd_per_tflop_fp8.partial_cmp(&b.usd_per_tflop_fp8).unwrap()
+        });
+        let top: Vec<&str> = rows[..2].iter().map(|r| r.device).collect();
+        assert!(top.contains(&"B200"), "top2={top:?}");
+    }
+
+    #[test]
+    fn fig4d_memory_capacity_leaders() {
+        // Paper: "MI300x and A40 deliver the most cost-effective memory
+        // provisioning". From Table 5's own prices, A40 is the strict
+        // leader; MI300x leads the large-memory (>=128 GB) class but
+        // trails Gaudi3/A100 slightly on raw $/GB — we assert the
+        // derivable shape (see EXPERIMENTS.md deviation note).
+        let mut rows = cost_efficiency();
+        rows.sort_by(|a, b| a.usd_per_gb.partial_cmp(&b.usd_per_gb).unwrap());
+        assert_eq!(rows[0].device, "A40");
+        let mi300x = rows.iter().find(|r| r.device == "MI300x").unwrap();
+        let b200 = rows.iter().find(|r| r.device == "B200").unwrap();
+        let h100 = rows.iter().find(|r| r.device == "H100").unwrap();
+        assert!(mi300x.usd_per_gb < b200.usd_per_gb);
+        assert!(mi300x.usd_per_gb < h100.usd_per_gb);
+    }
+
+    #[test]
+    fn fp8_never_slower_than_fp16() {
+        for d in catalog() {
+            assert!(d.tflops_fp8 >= d.tflops_fp16, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn unknown_device_is_none() {
+        assert!(by_name("TPUv9").is_none());
+    }
+}

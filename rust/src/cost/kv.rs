@@ -1,0 +1,81 @@
+//! KV-cache sizing — Eq. 3 of the paper:
+//!
+//! ```text
+//! KVCacheSize_peak = 2 · N_layers · d_model · (N_kv / N_heads) · ISL · BS · BPE
+//! ```
+
+use super::model_profile::ModelProfile;
+
+/// Eq. 3: peak KV-cache bytes for a batch of sequences of length `isl`.
+pub fn kv_cache_bytes(m: &ModelProfile, isl: u64, batch: u64) -> f64 {
+    2.0 * m.n_layers as f64
+        * m.d_model as f64
+        * (m.n_kv_heads as f64 / m.n_heads as f64)
+        * isl as f64
+        * batch as f64
+        * m.precision.bytes_per_elt()
+}
+
+/// KV bytes for a single sequence (`BS = 1`).
+pub fn kv_cache_bytes_seq(m: &ModelProfile, isl: u64) -> f64 {
+    kv_cache_bytes(m, isl, 1)
+}
+
+/// Maximum batch size whose KV fits in `budget_bytes` at context `ctx`.
+pub fn max_batch_for_budget(m: &ModelProfile, ctx: u64, budget_bytes: f64) -> u64 {
+    if budget_bytes <= 0.0 {
+        return 0;
+    }
+    (budget_bytes / kv_cache_bytes_seq(m, ctx)).floor() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::model_profile::{llama3_70b, llama3_8b};
+    use crate::cost::Precision;
+
+    #[test]
+    fn eq3_8b_fp16_32k() {
+        // 8B FP16 @ 32K tokens: 2·32·4096·(8/32)·32768·1·2 = 4.295 GB.
+        let m = llama3_8b(Precision::Fp16);
+        let gb = kv_cache_bytes_seq(&m, 32_768) / 1e9;
+        assert!((gb - 4.295).abs() < 0.01, "gb={gb}");
+    }
+
+    #[test]
+    fn eq3_70b_fp16_32k() {
+        // 70B FP16 @ 32K: 2·80·8192·(8/64)·32768·2 = 10.74 GB.
+        let m = llama3_70b(Precision::Fp16);
+        let gb = kv_cache_bytes_seq(&m, 32_768) / 1e9;
+        assert!((gb - 10.74).abs() < 0.02, "gb={gb}");
+    }
+
+    #[test]
+    fn linear_in_batch_and_isl() {
+        let m = llama3_8b(Precision::Fp16);
+        assert_eq!(
+            kv_cache_bytes(&m, 1024, 4),
+            4.0 * kv_cache_bytes(&m, 1024, 1)
+        );
+        assert_eq!(
+            kv_cache_bytes(&m, 2048, 1),
+            2.0 * kv_cache_bytes(&m, 1024, 1)
+        );
+    }
+
+    #[test]
+    fn matches_profile_per_token() {
+        let m = llama3_8b(Precision::Fp8);
+        assert_eq!(kv_cache_bytes_seq(&m, 1), m.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn max_batch_budget() {
+        let m = llama3_8b(Precision::Fp16);
+        let per_seq = kv_cache_bytes_seq(&m, 4096);
+        assert_eq!(max_batch_for_budget(&m, 4096, 10.0 * per_seq), 10);
+        assert_eq!(max_batch_for_budget(&m, 4096, 0.5 * per_seq), 0);
+        assert_eq!(max_batch_for_budget(&m, 4096, -1.0), 0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Cost modeling substrate (paper §3.1.1, §5.1–5.2).
+//!
+//! Everything the optimizer consumes is produced here:
+//!
+//! * [`hardware`] — the accelerator catalog (Table 5) and the marginal
+//!   cost-efficiency analysis behind Figure 4;
+//! * [`model_profile`] — LLaMA-3 architectural constants (Table 4) and
+//!   analytic FLOP/byte counts for prefill and decode;
+//! * [`roofline`] — the execution-time model `t_ij = max_r θ/perf + l +
+//!   d + δ` with tensor/pipeline-parallel communication terms;
+//! * [`tco`] — amortized capex + energy opex (§5.1's operating-cost
+//!   assumptions) and TCO-benefit normalization;
+//! * [`kv`] — KV-cache sizing (Eq. 3);
+//! * [`network`] — peak egress/ingress bandwidth for disaggregated
+//!   serving (Eqs. 1–2);
+//! * [`workload`] — the qualitative workload radar profiles (Fig. 3 /
+//!   Table 2) used to annotate IR nodes with resource vectors.
+
+pub mod hardware;
+pub mod kv;
+pub mod model_profile;
+pub mod network;
+pub mod roofline;
+pub mod tco;
+pub mod workload;
+
+/// The six hardware dimensions of §2.5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Specialized high-FLOP compute (GPU/accelerator).
+    HpCompute,
+    /// Memory bandwidth (HBM GB/s).
+    MemBandwidth,
+    /// Network bandwidth across nodes/services.
+    NetBandwidth,
+    /// Total device/system memory capacity.
+    MemCapacity,
+    /// Persistent storage capacity.
+    DiskCapacity,
+    /// Scalar CPU compute (logic, parsing, orchestration).
+    GpCompute,
+}
+
+impl Resource {
+    pub const ALL: [Resource; 6] = [
+        Resource::HpCompute,
+        Resource::MemBandwidth,
+        Resource::NetBandwidth,
+        Resource::MemCapacity,
+        Resource::DiskCapacity,
+        Resource::GpCompute,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resource::HpCompute => "hp_compute",
+            Resource::MemBandwidth => "mem_bandwidth",
+            Resource::NetBandwidth => "net_bandwidth",
+            Resource::MemCapacity => "mem_capacity",
+            Resource::DiskCapacity => "disk_capacity",
+            Resource::GpCompute => "gp_compute",
+        }
+    }
+}
+
+/// A demand/usage vector over the six resources.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub hp_compute: f64,
+    pub mem_bandwidth: f64,
+    pub net_bandwidth: f64,
+    pub mem_capacity: f64,
+    pub disk_capacity: f64,
+    pub gp_compute: f64,
+}
+
+impl ResourceVec {
+    pub fn get(&self, r: Resource) -> f64 {
+        match r {
+            Resource::HpCompute => self.hp_compute,
+            Resource::MemBandwidth => self.mem_bandwidth,
+            Resource::NetBandwidth => self.net_bandwidth,
+            Resource::MemCapacity => self.mem_capacity,
+            Resource::DiskCapacity => self.disk_capacity,
+            Resource::GpCompute => self.gp_compute,
+        }
+    }
+
+    pub fn set(&mut self, r: Resource, v: f64) {
+        match r {
+            Resource::HpCompute => self.hp_compute = v,
+            Resource::MemBandwidth => self.mem_bandwidth = v,
+            Resource::NetBandwidth => self.net_bandwidth = v,
+            Resource::MemCapacity => self.mem_capacity = v,
+            Resource::DiskCapacity => self.disk_capacity = v,
+            Resource::GpCompute => self.gp_compute = v,
+        }
+    }
+}
+
+/// Numeric precision of a model execution task (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp16,
+    Fp8,
+}
+
+impl Precision {
+    pub fn bytes_per_elt(&self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            Precision::Fp8 => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp16 => "FP16",
+            Precision::Fp8 => "FP8",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_vec_get_set_roundtrip() {
+        let mut v = ResourceVec::default();
+        for (i, r) in Resource::ALL.iter().enumerate() {
+            v.set(*r, i as f64);
+        }
+        for (i, r) in Resource::ALL.iter().enumerate() {
+            assert_eq!(v.get(*r), i as f64);
+        }
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp16.bytes_per_elt(), 2.0);
+        assert_eq!(Precision::Fp8.bytes_per_elt(), 1.0);
+    }
+}

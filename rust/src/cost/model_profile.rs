@@ -1,0 +1,208 @@
+//! Model architecture profiles (paper Table 4) and analytic FLOP / byte
+//! accounting for prefill and decode.
+//!
+//! The paper profiles "computational and memory demands based on model
+//! size, sequence lengths, and architectural details" and feeds them to
+//! the optimizer; this module is exactly that input. All FLOP values are
+//! dense (the paper: "without accounting for sparsity").
+
+use super::Precision;
+
+/// Transformer architecture constants (LLaMA-3 herd, Meta AI [39]).
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub params_b: f64, // billions
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ff: u32,
+    pub vocab: u32,
+    pub precision: Precision,
+}
+
+impl ModelProfile {
+    pub fn head_dim(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter bytes at this precision.
+    pub fn param_bytes(&self) -> f64 {
+        self.params_b * 1e9 * self.precision.bytes_per_elt()
+    }
+
+    /// KV-cache bytes per token (Eq. 3 with ISL = BS = 1):
+    /// `2 · N_layers · d_model · (N_kv / N_heads) · BPE`.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.d_model as f64
+            * (self.n_kv_heads as f64 / self.n_heads as f64)
+            * self.precision.bytes_per_elt()
+    }
+
+    /// Dense FLOPs to prefill `seq` prompt tokens (batch 1).
+    ///
+    /// 2·P FLOPs per token for the weight GEMMs plus the quadratic
+    /// attention term 4·L·d_model·S² (QKᵀ and PV, causal halving folded
+    /// into the constant).
+    pub fn prefill_flops(&self, seq: u64) -> f64 {
+        let s = seq as f64;
+        let weight = 2.0 * self.params_b * 1e9 * s;
+        let attn = 2.0 * self.n_layers as f64 * self.d_model as f64 * s * s;
+        weight + attn
+    }
+
+    /// Dense FLOPs for one decode step at context length `ctx`.
+    pub fn decode_flops(&self, ctx: u64) -> f64 {
+        let weight = 2.0 * self.params_b * 1e9;
+        let attn = 4.0 * self.n_layers as f64 * self.d_model as f64 * ctx as f64
+            * (self.n_kv_heads as f64 / self.n_heads as f64).max(0.25);
+        weight + attn
+    }
+
+    /// HBM bytes moved for one decode step at context `ctx` and batch
+    /// `batch`: every step streams the full weights once (shared across
+    /// the batch) plus each sequence's KV cache.
+    pub fn decode_bytes(&self, ctx: u64, batch: u64) -> f64 {
+        self.param_bytes() + batch as f64 * self.kv_bytes_per_token() * ctx as f64
+    }
+
+    /// HBM bytes moved to prefill `seq` tokens (weights streamed once;
+    /// activations assumed cache-resident — prefill is compute-bound).
+    pub fn prefill_bytes(&self, seq: u64, batch: u64) -> f64 {
+        self.param_bytes() + batch as f64 * self.kv_bytes_per_token() * seq as f64
+    }
+
+    /// Per-layer activation bytes crossing a tensor-parallel boundary for
+    /// `tokens` tokens (two all-reduces of d_model activations per layer).
+    pub fn tp_allreduce_bytes_per_layer(&self, tokens: u64) -> f64 {
+        2.0 * tokens as f64 * self.d_model as f64 * self.precision.bytes_per_elt()
+    }
+}
+
+/// Table 4: the four evaluated configurations.
+pub fn table4() -> Vec<ModelProfile> {
+    vec![
+        llama3_8b(Precision::Fp16),
+        llama3_8b(Precision::Fp8),
+        llama3_70b(Precision::Fp16),
+        llama3_70b(Precision::Fp8),
+    ]
+}
+
+pub fn llama3_8b(precision: Precision) -> ModelProfile {
+    ModelProfile {
+        name: match precision {
+            Precision::Fp16 => "Llama 3 - 8B - FP16",
+            Precision::Fp8 => "Llama 3 - 8B - FP8",
+        },
+        params_b: 8.0,
+        n_layers: 32,
+        d_model: 4096,
+        n_heads: 32,
+        n_kv_heads: 8,
+        d_ff: 14336,
+        vocab: 128_256,
+        precision,
+    }
+}
+
+pub fn llama3_70b(precision: Precision) -> ModelProfile {
+    ModelProfile {
+        name: match precision {
+            Precision::Fp16 => "Llama 3 - 70B - FP16",
+            Precision::Fp8 => "Llama 3 - 70B - FP8",
+        },
+        params_b: 70.0,
+        n_layers: 80,
+        d_model: 8192,
+        n_heads: 64,
+        n_kv_heads: 8,
+        d_ff: 28672,
+        vocab: 128_256,
+        precision,
+    }
+}
+
+/// Look up by short name ("8b-fp16", "70b-fp8", ...).
+pub fn by_short_name(s: &str) -> Option<ModelProfile> {
+    match s.to_ascii_lowercase().as_str() {
+        "8b-fp16" => Some(llama3_8b(Precision::Fp16)),
+        "8b-fp8" => Some(llama3_8b(Precision::Fp8)),
+        "70b-fp16" => Some(llama3_70b(Precision::Fp16)),
+        "70b-fp8" => Some(llama3_70b(Precision::Fp8)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_has_four_configs() {
+        let t = table4();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.iter().filter(|m| m.precision == Precision::Fp8).count(), 2);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_8b_fp16() {
+        // 2 * 32 * 4096 * (8/32) * 2 = 131072 bytes/token.
+        let m = llama3_8b(Precision::Fp16);
+        assert_eq!(m.kv_bytes_per_token(), 131_072.0);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_70b_fp16() {
+        // 2 * 80 * 8192 * (8/64) * 2 = 327680 bytes/token.
+        let m = llama3_70b(Precision::Fp16);
+        assert_eq!(m.kv_bytes_per_token(), 327_680.0);
+    }
+
+    #[test]
+    fn fp8_halves_kv_and_weights() {
+        let a = llama3_8b(Precision::Fp16);
+        let b = llama3_8b(Precision::Fp8);
+        assert_eq!(a.kv_bytes_per_token(), 2.0 * b.kv_bytes_per_token());
+        assert_eq!(a.param_bytes(), 2.0 * b.param_bytes());
+    }
+
+    #[test]
+    fn prefill_flops_superlinear_in_seq() {
+        // TTFT grows superlinearly with ISL (paper §5.2) because of the
+        // quadratic attention term.
+        let m = llama3_8b(Precision::Fp16);
+        let f1 = m.prefill_flops(4096);
+        let f2 = m.prefill_flops(8192);
+        assert!(f2 > 2.0 * f1);
+    }
+
+    #[test]
+    fn decode_flops_near_2p() {
+        let m = llama3_70b(Precision::Fp16);
+        let f = m.decode_flops(1);
+        assert!((f - 2.0 * 70e9).abs() / (2.0 * 70e9) < 0.01);
+    }
+
+    #[test]
+    fn decode_bytes_dominated_by_params_at_small_ctx() {
+        let m = llama3_8b(Precision::Fp16);
+        let b = m.decode_bytes(128, 1);
+        assert!((b - m.param_bytes()).abs() / m.param_bytes() < 0.01);
+    }
+
+    #[test]
+    fn short_names_resolve() {
+        assert!(by_short_name("8b-fp16").is_some());
+        assert!(by_short_name("70b-fp8").is_some());
+        assert!(by_short_name("13b-fp16").is_none());
+    }
+
+    #[test]
+    fn head_dim_is_128() {
+        assert_eq!(llama3_8b(Precision::Fp16).head_dim(), 128);
+        assert_eq!(llama3_70b(Precision::Fp16).head_dim(), 128);
+    }
+}

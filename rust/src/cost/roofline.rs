@@ -1,0 +1,348 @@
+//! Roofline execution-time model (paper §3.1.1, citing Williams et al.):
+//!
+//! ```text
+//! t_ij = max_r( θ_ij^(r) / perf_j^(r) ) + l_i + d_ij + δ_ij
+//! ```
+//!
+//! where the max is over compute vs memory-bandwidth rooflines, `l_i` is
+//! static overhead (kernel launch, framework), `d_ij` is pipeline /
+//! inter-device transfer cost, and `δ_ij` is tensor-parallel
+//! synchronization (all-reduce) overhead.
+//!
+//! "Device-specific performance metrics ... are augmented by theoretical
+//! roofline modeling to represent realistic performance boundaries"
+//! (§5) — the efficiency factors below derate peak spec to achievable
+//! rates; they are the calibration knobs of the reproduction.
+
+use super::hardware::DeviceSpec;
+use super::model_profile::ModelProfile;
+
+/// Achievable-fraction-of-peak calibration (akin to the paper's
+/// "performance model fit to real measurements").
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// Model FLOPs utilization during prefill (compute-bound GEMMs).
+    pub mfu_prefill: f64,
+    /// FLOPs utilization during decode (GEMV-shaped, lower).
+    pub mfu_decode: f64,
+    /// Achievable fraction of peak HBM bandwidth.
+    pub hbm_util: f64,
+    /// Achievable fraction of interconnect bandwidth.
+    pub net_util: f64,
+    /// Static per-invocation overhead `l_i`, seconds (kernel launches,
+    /// runtime dispatch) per prefill.
+    pub prefill_overhead_s: f64,
+    /// Static overhead per decode step, seconds.
+    pub decode_overhead_s: f64,
+    /// Per-hop link latency for collectives / pipeline stages, seconds.
+    pub link_latency_s: f64,
+    /// Fraction of device memory usable (allocator + fragmentation).
+    pub mem_util: f64,
+}
+
+impl Default for Efficiency {
+    fn default() -> Self {
+        Efficiency {
+            mfu_prefill: 0.55,
+            mfu_decode: 0.35,
+            hbm_util: 0.75,
+            net_util: 0.80,
+            prefill_overhead_s: 1.5e-3,
+            decode_overhead_s: 0.3e-3,
+            link_latency_s: 5e-6,
+            mem_util: 0.90,
+        }
+    }
+}
+
+/// Additive latency breakdown for one stage execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimeBreakdown {
+    /// Compute roofline term, seconds.
+    pub compute_s: f64,
+    /// HBM roofline term, seconds.
+    pub memory_s: f64,
+    /// δ: tensor-parallel collective time, seconds.
+    pub collective_s: f64,
+    /// d: pipeline-stage transfer time, seconds.
+    pub pipeline_s: f64,
+    /// l: static overhead, seconds.
+    pub overhead_s: f64,
+}
+
+impl TimeBreakdown {
+    /// `max(compute, memory) + δ + d + l` — Eq. of §3.1.1.
+    pub fn total(&self) -> f64 {
+        self.compute_s.max(self.memory_s)
+            + self.collective_s
+            + self.pipeline_s
+            + self.overhead_s
+    }
+
+    /// Which roofline binds this stage?
+    pub fn bound(&self) -> &'static str {
+        if self.compute_s >= self.memory_s {
+            "compute"
+        } else {
+            "memory"
+        }
+    }
+}
+
+/// A parallelism layout for one stage on one device class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Parallelism {
+    /// Tensor-parallel degree (within the scale-up domain).
+    pub tp: u32,
+    /// Pipeline-parallel degree (across scale-up domains).
+    pub pp: u32,
+}
+
+impl Parallelism {
+    pub fn devices(&self) -> u32 {
+        self.tp * self.pp
+    }
+}
+
+/// Per-device weight bytes under a layout.
+pub fn weight_bytes_per_device(m: &ModelProfile, par: Parallelism) -> f64 {
+    m.param_bytes() / par.devices() as f64
+}
+
+/// Memory left for KV on each device, after weights. Negative => doesn't fit.
+pub fn kv_budget_per_device(
+    m: &ModelProfile,
+    d: &DeviceSpec,
+    par: Parallelism,
+    eff: &Efficiency,
+) -> f64 {
+    d.mem_gb * 1e9 * eff.mem_util - weight_bytes_per_device(m, par)
+}
+
+/// Max batch size at context `ctx` fitting the layout's KV budget.
+/// KV is sharded over TP (heads) and PP (layers), so the per-device
+/// budget is multiplied back by the device count.
+pub fn max_batch(m: &ModelProfile, d: &DeviceSpec, par: Parallelism, ctx: u64, eff: &Efficiency) -> u64 {
+    let budget = kv_budget_per_device(m, d, par, eff);
+    if budget <= 0.0 {
+        return 0;
+    }
+    let total = budget * par.devices() as f64;
+    (total / (m.kv_bytes_per_token() * ctx as f64)).floor() as u64
+}
+
+/// Tensor-parallel all-reduce time for `bytes` payload per device.
+///
+/// Ring all-reduce moves `2·(tp-1)/tp · bytes` per device; `2·L/pp`
+/// collectives happen per forward pass (two per layer on this stage's
+/// layers), each paying one link latency.
+fn tp_collective_s(
+    m: &ModelProfile,
+    d: &DeviceSpec,
+    par: Parallelism,
+    tokens: u64,
+    eff: &Efficiency,
+) -> f64 {
+    if par.tp <= 1 {
+        return 0.0;
+    }
+    let layers_here = (m.n_layers as f64 / par.pp as f64).ceil();
+    let act_bytes = tokens as f64 * m.d_model as f64 * m.precision.bytes_per_elt();
+    let per_collective =
+        2.0 * (par.tp - 1) as f64 / par.tp as f64 * act_bytes
+            / (d.scaleup_bw_gbps * 1e9 * eff.net_util);
+    let n_collectives = 2.0 * layers_here;
+    n_collectives * (per_collective + eff.link_latency_s)
+}
+
+/// Pipeline-stage boundary cost: (pp-1) activation hops.
+fn pp_transfer_s(
+    m: &ModelProfile,
+    d: &DeviceSpec,
+    par: Parallelism,
+    tokens: u64,
+    eff: &Efficiency,
+) -> f64 {
+    if par.pp <= 1 {
+        return 0.0;
+    }
+    let act_bytes = tokens as f64 * m.d_model as f64 * m.precision.bytes_per_elt();
+    let hop = act_bytes / (d.scaleout_bw_gbps * 1e9 * eff.net_util) + eff.link_latency_s;
+    (par.pp - 1) as f64 * hop
+}
+
+/// Time to prefill a batch of `batch` prompts of `isl` tokens.
+///
+/// With pipeline parallelism the batch is split into microbatches; the
+/// bubble inflates latency by `(pp-1)/mb` (GPipe-style schedule).
+pub fn prefill_time(
+    m: &ModelProfile,
+    d: &DeviceSpec,
+    par: Parallelism,
+    isl: u64,
+    batch: u64,
+    eff: &Efficiency,
+) -> TimeBreakdown {
+    let flops = m.prefill_flops(isl) * batch as f64;
+    let bytes = m.prefill_bytes(isl, batch);
+    let devices = par.devices() as f64;
+    let tokens = isl * batch;
+
+    let mut t = TimeBreakdown {
+        compute_s: flops / (d.tflops(m.precision) * 1e12 * eff.mfu_prefill * devices),
+        memory_s: bytes / (d.mem_bw_gbps * 1e9 * eff.hbm_util * devices),
+        collective_s: tp_collective_s(m, d, par, tokens, eff),
+        pipeline_s: pp_transfer_s(m, d, par, tokens, eff),
+        overhead_s: eff.prefill_overhead_s,
+    };
+    if par.pp > 1 {
+        // GPipe bubble with mb = 4 microbatches.
+        let mb = 4.0_f64.min(batch as f64).max(1.0);
+        let bubble = 1.0 + (par.pp as f64 - 1.0) / mb;
+        t.compute_s *= bubble;
+        t.memory_s *= bubble;
+    }
+    t
+}
+
+/// Time for one decode step over a running batch at context `ctx`.
+pub fn decode_step_time(
+    m: &ModelProfile,
+    d: &DeviceSpec,
+    par: Parallelism,
+    ctx: u64,
+    batch: u64,
+    eff: &Efficiency,
+) -> TimeBreakdown {
+    let flops = m.decode_flops(ctx) * batch as f64;
+    let bytes = m.decode_bytes(ctx, batch);
+    let devices = par.devices() as f64;
+
+    TimeBreakdown {
+        compute_s: flops / (d.tflops(m.precision) * 1e12 * eff.mfu_decode * devices),
+        memory_s: bytes / (d.mem_bw_gbps * 1e9 * eff.hbm_util * devices),
+        collective_s: tp_collective_s(m, d, par, batch, eff),
+        // Each generated token crosses every pipeline boundary.
+        pipeline_s: pp_transfer_s(m, d, par, batch, eff),
+        overhead_s: eff.decode_overhead_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::hardware::by_name;
+    use crate::cost::model_profile::{llama3_70b, llama3_8b};
+    use crate::cost::Precision;
+
+    fn eff() -> Efficiency {
+        Efficiency::default()
+    }
+
+    #[test]
+    fn prefill_is_compute_bound() {
+        // §5.3: "prefill is computationally intensive".
+        let m = llama3_8b(Precision::Fp16);
+        let d = by_name("H100").unwrap();
+        let t = prefill_time(&m, &d, Parallelism { tp: 1, pp: 1 }, 2048, 1, &eff());
+        assert_eq!(t.bound(), "compute");
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        // §5.3: "decode is more memory capacity intensive" / bandwidth
+        // bound at moderate batch.
+        let m = llama3_8b(Precision::Fp16);
+        let d = by_name("H100").unwrap();
+        let t = decode_step_time(&m, &d, Parallelism { tp: 1, pp: 1 }, 1024, 8, &eff());
+        assert_eq!(t.bound(), "memory");
+    }
+
+    #[test]
+    fn h100_8b_latencies_realistic() {
+        // Sanity-anchor against public H100 serving numbers: 8B FP16
+        // prefill of 512 tokens ~5-30 ms; decode step at batch 1 ~5-15 ms.
+        let m = llama3_8b(Precision::Fp16);
+        let d = by_name("H100").unwrap();
+        let p = prefill_time(&m, &d, Parallelism { tp: 1, pp: 1 }, 512, 1, &eff());
+        assert!(p.total() > 0.004 && p.total() < 0.04, "prefill {}", p.total());
+        let t = decode_step_time(&m, &d, Parallelism { tp: 1, pp: 1 }, 512, 1, &eff());
+        assert!(t.total() > 0.004 && t.total() < 0.02, "decode {}", t.total());
+    }
+
+    #[test]
+    fn tp_reduces_prefill_time_until_comm_dominates() {
+        // §5: "Initial increases in tensor parallelism substantially
+        // reduced latency; further increases introduced significant
+        // device-to-device communication overhead."
+        let m = llama3_70b(Precision::Fp16);
+        let d = by_name("A40").unwrap(); // weak interconnect
+        let t1 = prefill_time(&m, &d, Parallelism { tp: 1, pp: 1 }, 2048, 1, &eff());
+        let t4 = prefill_time(&m, &d, Parallelism { tp: 4, pp: 1 }, 2048, 1, &eff());
+        assert!(t4.total() < t1.total(), "tp4 should beat tp1");
+        // Marginal speedup degrades: 4->8 gains less than 1->2.
+        let t2 = prefill_time(&m, &d, Parallelism { tp: 2, pp: 1 }, 2048, 1, &eff());
+        let t8 = prefill_time(&m, &d, Parallelism { tp: 8, pp: 1 }, 2048, 1, &eff());
+        let gain_12 = t1.total() / t2.total();
+        let gain_48 = t4.total() / t8.total();
+        assert!(gain_48 < gain_12, "speedup should saturate");
+    }
+
+    #[test]
+    fn seventy_b_fp16_does_not_fit_one_h100() {
+        let m = llama3_70b(Precision::Fp16);
+        let d = by_name("H100").unwrap();
+        assert!(kv_budget_per_device(&m, &d, Parallelism { tp: 1, pp: 1 }, &eff()) < 0.0);
+        assert!(max_batch(&m, &d, Parallelism { tp: 1, pp: 1 }, 4096, &eff()) == 0);
+        // TP2 fits weights (70 GB/dev) but leaves little for KV; TP4 is roomy.
+        assert!(kv_budget_per_device(&m, &d, Parallelism { tp: 4, pp: 1 }, &eff()) > 0.0);
+    }
+
+    #[test]
+    fn max_batch_monotone_in_devices() {
+        let m = llama3_8b(Precision::Fp16);
+        let d = by_name("A100").unwrap();
+        let b1 = max_batch(&m, &d, Parallelism { tp: 1, pp: 1 }, 4096, &eff());
+        let b2 = max_batch(&m, &d, Parallelism { tp: 2, pp: 1 }, 4096, &eff());
+        assert!(b2 > b1);
+    }
+
+    #[test]
+    fn pp_adds_latency_per_token() {
+        let m = llama3_70b(Precision::Fp16);
+        let d = by_name("A100").unwrap();
+        let t1 = decode_step_time(&m, &d, Parallelism { tp: 4, pp: 1 }, 1024, 4, &eff());
+        let t2 = decode_step_time(&m, &d, Parallelism { tp: 4, pp: 2 }, 1024, 4, &eff());
+        // Same device count halving roofline terms, but pipeline hop added.
+        assert!(t2.pipeline_s > 0.0 && t1.pipeline_s == 0.0);
+    }
+
+    #[test]
+    fn fp8_speeds_up_both_phases() {
+        let d = by_name("H100").unwrap();
+        let m16 = llama3_8b(Precision::Fp16);
+        let m8 = llama3_8b(Precision::Fp8);
+        let par = Parallelism { tp: 1, pp: 1 };
+        assert!(
+            prefill_time(&m8, &d, par, 2048, 1, &eff()).total()
+                < prefill_time(&m16, &d, par, 2048, 1, &eff()).total()
+        );
+        assert!(
+            decode_step_time(&m8, &d, par, 1024, 1, &eff()).total()
+                < decode_step_time(&m16, &d, par, 1024, 1, &eff()).total()
+        );
+    }
+
+    #[test]
+    fn breakdown_total_is_additive() {
+        let t = TimeBreakdown {
+            compute_s: 2.0,
+            memory_s: 3.0,
+            collective_s: 0.5,
+            pipeline_s: 0.25,
+            overhead_s: 0.125,
+        };
+        assert_eq!(t.total(), 3.0 + 0.5 + 0.25 + 0.125);
+        assert_eq!(t.bound(), "memory");
+    }
+}

@@ -1,0 +1,220 @@
+//! Total-cost-of-ownership model (paper §5.1).
+//!
+//! The paper's operating-cost assumptions: hardware financed over a
+//! 4-year amortization period at 8% interest; energy billed at max rated
+//! TDP and $0.40/kWh; datacenter/colo fees and NRE excluded.
+//!
+//! Two operating-cost sources are supported because the paper's stated
+//! formula does not exactly regenerate its own Table 5 column (its
+//! derived $/hr exceeds the listed values for the high-end parts; see
+//! EXPERIMENTS.md): [`OpexModel::PaperTable`] uses the listed numbers,
+//! [`OpexModel::Derived`] uses the stated formula. Figures 8–9 default
+//! to `Derived` — the stated formula is what recovers the paper's
+//! headline ordering — and the benches print both for comparison.
+
+use super::hardware::DeviceSpec;
+
+/// Amortization assumptions from §5.1.
+#[derive(Debug, Clone, Copy)]
+pub struct FinanceTerms {
+    /// Amortization period, years.
+    pub years: f64,
+    /// Annual interest rate (fraction).
+    pub rate: f64,
+    /// Energy price, $/kWh.
+    pub usd_per_kwh: f64,
+}
+
+impl Default for FinanceTerms {
+    fn default() -> Self {
+        FinanceTerms {
+            years: 4.0,
+            rate: 0.08,
+            usd_per_kwh: 0.40,
+        }
+    }
+}
+
+/// Which operating-cost number to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpexModel {
+    /// Table 5's listed "Operating Cost ($/hr)".
+    PaperTable,
+    /// Derived from [`FinanceTerms`]: annuity-amortized capex + energy.
+    Derived,
+}
+
+/// Annuity payment per hour for capex `price` under `terms`.
+///
+/// Standard annuity with monthly compounding:
+/// `P · r_m / (1 - (1+r_m)^-n)` over `n = years·12` months.
+pub fn capex_usd_per_hour(price: f64, terms: &FinanceTerms) -> f64 {
+    let rm = terms.rate / 12.0;
+    let n = terms.years * 12.0;
+    let monthly = if rm == 0.0 {
+        price / n
+    } else {
+        price * rm / (1.0 - (1.0 + rm).powf(-n))
+    };
+    monthly * 12.0 / 8760.0
+}
+
+/// Energy cost per hour at max rated TDP.
+pub fn energy_usd_per_hour(tdp_w: f64, terms: &FinanceTerms) -> f64 {
+    tdp_w / 1000.0 * terms.usd_per_kwh
+}
+
+/// Operating cost in $/hr for one device under the chosen model.
+pub fn opex_usd_per_hour(d: &DeviceSpec, model: OpexModel, terms: &FinanceTerms) -> f64 {
+    match model {
+        OpexModel::PaperTable => d.paper_opex_usd_hr,
+        OpexModel::Derived => {
+            capex_usd_per_hour(d.price_usd, terms) + energy_usd_per_hour(d.tdp_w, terms)
+        }
+    }
+}
+
+/// A costed serving configuration: devices × hours → $.
+#[derive(Debug, Clone)]
+pub struct FleetCost {
+    /// (device name, count, $/hr each).
+    pub items: Vec<(String, u32, f64)>,
+}
+
+impl FleetCost {
+    pub fn usd_per_hour(&self) -> f64 {
+        self.items.iter().map(|(_, n, c)| *n as f64 * c).sum()
+    }
+
+    /// $ per 1M output tokens at the given aggregate token rate.
+    pub fn usd_per_mtok(&self, tokens_per_s: f64) -> f64 {
+        self.usd_per_hour() / 3600.0 / tokens_per_s * 1e6
+    }
+}
+
+/// Table 5 regenerated: per-device derived vs listed operating cost.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub device: &'static str,
+    pub price_usd: f64,
+    pub mem_gb: f64,
+    pub bw_gbps: f64,
+    pub tflops_fp16: f64,
+    pub paper_opex: f64,
+    pub derived_capex_hr: f64,
+    pub derived_energy_hr: f64,
+    pub derived_opex: f64,
+}
+
+pub fn table5(terms: &FinanceTerms) -> Vec<Table5Row> {
+    super::hardware::catalog()
+        .iter()
+        .map(|d| {
+            let cap = capex_usd_per_hour(d.price_usd, terms);
+            let en = energy_usd_per_hour(d.tdp_w, terms);
+            Table5Row {
+                device: d.name,
+                price_usd: d.price_usd,
+                mem_gb: d.mem_gb,
+                bw_gbps: d.mem_bw_gbps,
+                tflops_fp16: d.tflops_fp16,
+                paper_opex: d.paper_opex_usd_hr,
+                derived_capex_hr: cap,
+                derived_energy_hr: en,
+                derived_opex: cap + en,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::hardware::by_name;
+
+    #[test]
+    fn annuity_no_interest_is_straight_line() {
+        let terms = FinanceTerms {
+            years: 4.0,
+            rate: 0.0,
+            usd_per_kwh: 0.0,
+        };
+        let hr = capex_usd_per_hour(35_040.0, &terms);
+        // 35040 $ / (4y · 8760 h/y) = 1 $/h.
+        assert!((hr - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn annuity_with_interest_exceeds_straight_line() {
+        let terms = FinanceTerms::default();
+        let straight = 10_000.0 / (4.0 * 8760.0);
+        assert!(capex_usd_per_hour(10_000.0, &terms) > straight);
+    }
+
+    #[test]
+    fn energy_h100() {
+        // 700 W at $0.40/kWh = $0.28/hr.
+        let terms = FinanceTerms::default();
+        assert!((energy_usd_per_hour(700.0, &terms) - 0.28).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opex_models_diverge_on_high_end_parts() {
+        // Documented discrepancy: the stated formula produces more than
+        // the listed $/hr for H100/B200.
+        let terms = FinanceTerms::default();
+        let h100 = by_name("H100").unwrap();
+        let derived = opex_usd_per_hour(&h100, OpexModel::Derived, &terms);
+        let listed = opex_usd_per_hour(&h100, OpexModel::PaperTable, &terms);
+        assert!(derived > listed);
+    }
+
+    #[test]
+    fn opex_ordering_consistent_across_models() {
+        // Both models must order the catalog identically (cheap -> dear);
+        // the TCO *shape* is insensitive to the choice.
+        let terms = FinanceTerms::default();
+        let cat = crate::cost::hardware::catalog();
+        let mut by_paper: Vec<&str> = cat.iter().map(|d| d.name).collect();
+        let mut by_derived = by_paper.clone();
+        by_paper.sort_by(|a, b| {
+            let fa = by_name(a).unwrap().paper_opex_usd_hr;
+            let fb = by_name(b).unwrap().paper_opex_usd_hr;
+            fa.partial_cmp(&fb).unwrap()
+        });
+        by_derived.sort_by(|a, b| {
+            let fa = opex_usd_per_hour(&by_name(a).unwrap(), OpexModel::Derived, &terms);
+            let fb = opex_usd_per_hour(&by_name(b).unwrap(), OpexModel::Derived, &terms);
+            fa.partial_cmp(&fb).unwrap()
+        });
+        // Identical except Gaudi3/MI300x which are within noise of each
+        // other in the paper's table.
+        fn norm(v: &[&str]) -> Vec<String> {
+            v.iter()
+                .map(|s| match *s {
+                    "Gaudi3" | "MI300x" => "G3/MI3".to_string(),
+                    other => other.to_string(),
+                })
+                .collect()
+        }
+        assert_eq!(norm(&by_paper), norm(&by_derived));
+    }
+
+    #[test]
+    fn fleet_cost_math() {
+        let fleet = FleetCost {
+            items: vec![("H100".into(), 2, 0.60), ("Gaudi3".into(), 4, 0.49)],
+        };
+        assert!((fleet.usd_per_hour() - (1.2 + 1.96)).abs() < 1e-12);
+        // 3.16 $/hr at 1000 tok/s -> $0.8778 per Mtok.
+        let per_mtok = fleet.usd_per_mtok(1000.0);
+        assert!((per_mtok - 3.16 / 3.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table5_has_all_devices() {
+        let t = table5(&FinanceTerms::default());
+        assert_eq!(t.len(), 6);
+        assert!(t.iter().all(|r| r.derived_opex > 0.0));
+    }
+}

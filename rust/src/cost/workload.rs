@@ -1,0 +1,155 @@
+//! Workload characterization (paper §2.5, Table 2, Figure 3).
+//!
+//! Each representative workload gets a radar profile: relative demand
+//! (0–10) across the six hardware dimensions. The paper presents these
+//! as "qualitative estimates intended to illustrate workload
+//! characteristics"; here they additionally seed the cost annotation
+//! pass ([`crate::ir::passes::annotate_cost`]) that converts IR nodes
+//! into the optimizer's resource vectors.
+
+use super::{Resource, ResourceVec};
+
+/// The seven representative workloads of Figure 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadClass {
+    LlmInferenceSingleNode,
+    LlmPrefillDisagg,
+    LlmDecodeDisagg,
+    DiffusionModel,
+    KvCacheStorage,
+    ToolCall,
+    GeneralDataProcessing,
+}
+
+impl WorkloadClass {
+    pub const ALL: [WorkloadClass; 7] = [
+        WorkloadClass::LlmInferenceSingleNode,
+        WorkloadClass::LlmPrefillDisagg,
+        WorkloadClass::LlmDecodeDisagg,
+        WorkloadClass::DiffusionModel,
+        WorkloadClass::KvCacheStorage,
+        WorkloadClass::ToolCall,
+        WorkloadClass::GeneralDataProcessing,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadClass::LlmInferenceSingleNode => "LLM Inference (Single Node)",
+            WorkloadClass::LlmPrefillDisagg => "LLM Prefill (Disaggregated)",
+            WorkloadClass::LlmDecodeDisagg => "LLM Decode (Disaggregated)",
+            WorkloadClass::DiffusionModel => "Diffusion Models",
+            WorkloadClass::KvCacheStorage => "KV Cache Storage",
+            WorkloadClass::ToolCall => "Tool Calls",
+            WorkloadClass::GeneralDataProcessing => "General Purpose Data Processing",
+        }
+    }
+
+    /// Figure 3 radar values, on the paper's normalized 0–10 scale, in
+    /// order (mem capacity, disk, GP compute, HP compute, mem BW, net BW).
+    pub fn radar(&self) -> ResourceVec {
+        let v = |mem_cap: f64, disk: f64, gp: f64, hp: f64, mem_bw: f64, net_bw: f64| {
+            ResourceVec {
+                mem_capacity: mem_cap,
+                disk_capacity: disk,
+                gp_compute: gp,
+                hp_compute: hp,
+                mem_bandwidth: mem_bw,
+                net_bandwidth: net_bw,
+            }
+        };
+        match self {
+            // (a) compute- and memory-intensive, single server => low net.
+            WorkloadClass::LlmInferenceSingleNode => v(9.0, 2.0, 2.0, 9.0, 8.0, 1.0),
+            // (b) high compute + memory and network BW (distributed tokens).
+            WorkloadClass::LlmPrefillDisagg => v(7.0, 1.0, 2.0, 10.0, 8.0, 7.0),
+            // (c) lower compute than prefill, high memory + network use.
+            WorkloadClass::LlmDecodeDisagg => v(8.0, 1.0, 2.0, 5.0, 9.0, 7.0),
+            // (d) broadly intensive, especially compute and memory BW.
+            WorkloadClass::DiffusionModel => v(7.0, 3.0, 3.0, 10.0, 9.0, 4.0),
+            // (e) memory + disk heavy, elevated network for remote reads.
+            WorkloadClass::KvCacheStorage => v(9.0, 8.0, 2.0, 1.0, 6.0, 7.0),
+            // (f) low compute, network-dominated.
+            WorkloadClass::ToolCall => v(2.0, 2.0, 4.0, 1.0, 2.0, 8.0),
+            // (g) strong GP compute, balanced elsewhere.
+            WorkloadClass::GeneralDataProcessing => v(6.0, 5.0, 9.0, 1.0, 5.0, 5.0),
+        }
+    }
+
+    /// The dominant hardware dimension (argmax of the radar).
+    pub fn dominant(&self) -> Resource {
+        let r = self.radar();
+        *Resource::ALL
+            .iter()
+            .max_by(|a, b| r.get(**a).partial_cmp(&r.get(**b)).unwrap())
+            .unwrap()
+    }
+
+    /// Does this workload belong on an accelerator (vs CPU)?
+    ///
+    /// §5: "Our optimization framework places the non-LLM components of
+    /// the voice agent on CPUs given the task characteristic."
+    pub fn wants_accelerator(&self) -> bool {
+        self.radar().hp_compute >= 5.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_in_scale() {
+        for w in WorkloadClass::ALL {
+            let r = w.radar();
+            for res in Resource::ALL {
+                let v = r.get(res);
+                assert!((0.0..=10.0).contains(&v), "{w:?} {res:?} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_more_compute_than_decode() {
+        let p = WorkloadClass::LlmPrefillDisagg.radar();
+        let d = WorkloadClass::LlmDecodeDisagg.radar();
+        assert!(p.hp_compute > d.hp_compute);
+        // decode leans harder on memory bandwidth.
+        assert!(d.mem_bandwidth >= p.mem_bandwidth);
+    }
+
+    #[test]
+    fn single_node_has_negligible_network() {
+        assert!(WorkloadClass::LlmInferenceSingleNode.radar().net_bandwidth <= 2.0);
+    }
+
+    #[test]
+    fn tool_calls_are_network_dominated() {
+        assert_eq!(
+            WorkloadClass::ToolCall.dominant(),
+            Resource::NetBandwidth
+        );
+        assert!(!WorkloadClass::ToolCall.wants_accelerator());
+    }
+
+    #[test]
+    fn data_processing_is_gp_dominated() {
+        assert_eq!(
+            WorkloadClass::GeneralDataProcessing.dominant(),
+            Resource::GpCompute
+        );
+        assert!(!WorkloadClass::GeneralDataProcessing.wants_accelerator());
+    }
+
+    #[test]
+    fn llm_stages_want_accelerators() {
+        assert!(WorkloadClass::LlmPrefillDisagg.wants_accelerator());
+        assert!(WorkloadClass::LlmDecodeDisagg.wants_accelerator());
+        assert!(WorkloadClass::DiffusionModel.wants_accelerator());
+    }
+
+    #[test]
+    fn kv_storage_disk_heavy() {
+        let r = WorkloadClass::KvCacheStorage.radar();
+        assert!(r.disk_capacity >= 7.0 && r.hp_compute <= 2.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Operation attributes.
+//!
+//! "Each operation can be annotated with profiling metadata, resource
+//! usage estimates, or placement hints" (§4.2) — attributes carry all
+//! three, plus the structural parameters passes need (sequence lengths,
+//! expert counts, precision).
+
+use std::fmt;
+
+/// An attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    /// Homogeneous list (e.g. shapes, per-resource demand vectors).
+    List(Vec<Attr>),
+}
+
+impl Attr {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Attr::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Attr::Float(v) => Some(*v),
+            Attr::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attr::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Attr::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Attr]> {
+        match self {
+            Attr::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Attr {
+    /// Textual-format rendering (round-trips through the parser).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Attr::Int(v) => write!(f, "{v}"),
+            Attr::Float(v) => {
+                if v.fract() == 0.0 && v.is_finite() {
+                    write!(f, "{v:.1}")
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Attr::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Attr::Bool(b) => write!(f, "{b}"),
+            Attr::List(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl From<i64> for Attr {
+    fn from(v: i64) -> Attr {
+        Attr::Int(v)
+    }
+}
+impl From<u64> for Attr {
+    fn from(v: u64) -> Attr {
+        Attr::Int(v as i64)
+    }
+}
+impl From<u32> for Attr {
+    fn from(v: u32) -> Attr {
+        Attr::Int(v as i64)
+    }
+}
+impl From<f64> for Attr {
+    fn from(v: f64) -> Attr {
+        Attr::Float(v)
+    }
+}
+impl From<&str> for Attr {
+    fn from(v: &str) -> Attr {
+        Attr::Str(v.to_string())
+    }
+}
+impl From<String> for Attr {
+    fn from(v: String) -> Attr {
+        Attr::Str(v)
+    }
+}
+impl From<bool> for Attr {
+    fn from(v: bool) -> Attr {
+        Attr::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Attr::Int(3).as_int(), Some(3));
+        assert_eq!(Attr::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Attr::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(Attr::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(Attr::Bool(true).as_bool(), Some(true));
+        assert_eq!(Attr::Str("x".into()).as_int(), None);
+    }
+
+    #[test]
+    fn display_round_trip_shapes() {
+        assert_eq!(Attr::Int(42).to_string(), "42");
+        assert_eq!(Attr::Float(2.0).to_string(), "2.0");
+        assert_eq!(Attr::Float(0.25).to_string(), "0.25");
+        assert_eq!(Attr::Str("a\"b".into()).to_string(), "\"a\\\"b\"");
+        assert_eq!(
+            Attr::List(vec![Attr::Int(1), Attr::Int(2)]).to_string(),
+            "[1, 2]"
+        );
+    }
+}

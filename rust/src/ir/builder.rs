@@ -1,0 +1,141 @@
+//! Fluent construction of agent graphs — the programmatic equivalent of
+//! the LangChain-style authoring surface of Figure 7(a).
+
+use std::collections::BTreeMap;
+
+use super::attr::Attr;
+use super::graph::{Graph, ValueId};
+use super::ops;
+
+/// Builder over a [`Graph`]; ops allocate results automatically from
+/// the registry's result arity.
+pub struct GraphBuilder {
+    graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder {
+            graph: Graph::new(name),
+        }
+    }
+
+    /// Append `op`; returns its first result (or a dummy for 0-result ops).
+    pub fn op(&mut self, op: &str, operands: &[ValueId]) -> ValueId {
+        self.op_with(op, operands, &[])
+    }
+
+    /// Append `op` with attributes.
+    pub fn op_with(
+        &mut self,
+        op: &str,
+        operands: &[ValueId],
+        attrs: &[(&str, Attr)],
+    ) -> ValueId {
+        let n_results = ops::op(op).map(|o| o.results).unwrap_or(1);
+        let map: BTreeMap<String, Attr> = attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect();
+        let id = self.graph.push(op, operands.to_vec(), n_results, map, None);
+        self.graph
+            .node(id)
+            .unwrap()
+            .results
+            .first()
+            .copied()
+            .unwrap_or(ValueId(u32::MAX))
+    }
+
+    /// Append `op` returning all results.
+    pub fn op_multi(
+        &mut self,
+        op: &str,
+        operands: &[ValueId],
+        attrs: &[(&str, Attr)],
+    ) -> Vec<ValueId> {
+        let n_results = ops::op(op).map(|o| o.results).unwrap_or(1);
+        let map: BTreeMap<String, Attr> = attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect();
+        let id = self.graph.push(op, operands.to_vec(), n_results, map, None);
+        self.graph.node(id).unwrap().results.clone()
+    }
+
+    /// Append a region-carrying op (nested agent / loop).
+    pub fn region_op(
+        &mut self,
+        op: &str,
+        operands: &[ValueId],
+        attrs: &[(&str, Attr)],
+        region: Graph,
+    ) -> ValueId {
+        let n_results = ops::op(op).map(|o| o.results).unwrap_or(1);
+        let map: BTreeMap<String, Attr> = attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect();
+        let id = self
+            .graph
+            .push(op, operands.to_vec(), n_results, map, Some(region));
+        self.graph
+            .node(id)
+            .unwrap()
+            .results
+            .first()
+            .copied()
+            .unwrap_or(ValueId(u32::MAX))
+    }
+
+    /// Mark region outputs.
+    pub fn output(&mut self, v: ValueId) -> &mut Self {
+        self.graph.outputs.push(v);
+        self
+    }
+
+    pub fn finish(self) -> Graph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_linear_chain() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.op("io.input", &[]);
+        let y = b.op_with("llm.infer", &[x], &[("model", "8b-fp16".into())]);
+        b.op("io.output", &[y]);
+        let g = b.finish();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[1].attr_str("model"), Some("8b-fp16"));
+        assert!(g.is_ssa_ordered(&[]));
+    }
+
+    #[test]
+    fn multi_result_op() {
+        let mut b = GraphBuilder::new("m");
+        let x = b.op("io.input", &[]);
+        let rs = b.op_multi("llm.prefill", &[x], &[]);
+        assert_eq!(rs.len(), 2); // hidden state + kv handle
+    }
+
+    #[test]
+    fn region_nesting() {
+        let mut inner = GraphBuilder::new("sub");
+        let i = inner.op("io.input", &[]);
+        let o = inner.op("llm.infer", &[i]);
+        inner.output(o);
+        let inner = inner.finish();
+
+        let mut b = GraphBuilder::new("outer");
+        let x = b.op("io.input", &[]);
+        let a = b.region_op("agent.graph", &[x], &[("role", "supervisor".into())], inner);
+        b.op("io.output", &[a]);
+        let g = b.finish();
+        assert_eq!(g.size(), 5);
+    }
+}

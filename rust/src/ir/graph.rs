@@ -1,0 +1,310 @@
+//! The dataflow graph: SSA values, operations, hierarchical regions.
+//!
+//! "A natural way to express agent workloads is as a directed,
+//! potentially cyclic, graph of tasks ... nodes are hierarchical, where
+//! the node may itself be an agent composed of further subgraphs"
+//! (§2.4). Dataflow edges are SSA operand references (acyclic by
+//! construction); cyclic *control* (feedback loops, Figure 2's
+//! search-until-satisfied loop) is expressed by `ctrl.loop` regions with
+//! a bounded `max_trips` attribute — exactly the "bounded unrolling"
+//! §3.1 requires of runtime planning.
+
+use std::collections::BTreeMap;
+
+use super::attr::Attr;
+
+/// A value produced by an operation (or a graph argument).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ValueId(pub u32);
+
+/// A node (operation instance) in one region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+/// One operation instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Fully-qualified op name ("llm.infer"). Kept as String so parsed
+    /// graphs can carry extension ops; the verifier flags unknown names.
+    pub op: String,
+    pub operands: Vec<ValueId>,
+    pub results: Vec<ValueId>,
+    pub attrs: BTreeMap<String, Attr>,
+    /// Nested region for `has_region` ops (hierarchical agents, loops).
+    pub region: Option<Graph>,
+}
+
+impl Node {
+    pub fn attr(&self, key: &str) -> Option<&Attr> {
+        self.attrs.get(key)
+    }
+
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).and_then(|a| a.as_str())
+    }
+
+    pub fn attr_int(&self, key: &str) -> Option<i64> {
+        self.attrs.get(key).and_then(|a| a.as_int())
+    }
+
+    pub fn attr_f64(&self, key: &str) -> Option<f64> {
+        self.attrs.get(key).and_then(|a| a.as_f64())
+    }
+
+    pub fn set_attr(&mut self, key: &str, val: impl Into<Attr>) {
+        self.attrs.insert(key.to_string(), val.into());
+    }
+}
+
+/// A region: an ordered list of nodes in SSA form.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Symbol name (`@voice_agent`).
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Region arguments (visible as values inside).
+    pub args: Vec<ValueId>,
+    /// Values yielded by the region.
+    pub outputs: Vec<ValueId>,
+    next_value: u32,
+    next_node: u32,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn fresh_value(&mut self) -> ValueId {
+        let v = ValueId(self.next_value);
+        self.next_value += 1;
+        v
+    }
+
+    /// Ensure the internal counter is past `v` (parser support).
+    pub fn reserve_value(&mut self, v: ValueId) {
+        if v.0 >= self.next_value {
+            self.next_value = v.0 + 1;
+        }
+    }
+
+    pub fn add_arg(&mut self) -> ValueId {
+        let v = self.fresh_value();
+        self.args.push(v);
+        v
+    }
+
+    /// Append an op; results are freshly allocated.
+    pub fn push(
+        &mut self,
+        op: &str,
+        operands: Vec<ValueId>,
+        n_results: usize,
+        attrs: BTreeMap<String, Attr>,
+        region: Option<Graph>,
+    ) -> NodeId {
+        let id = NodeId(self.next_node);
+        self.next_node += 1;
+        let results = (0..n_results).map(|_| self.fresh_value()).collect();
+        self.nodes.push(Node {
+            id,
+            op: op.to_string(),
+            operands,
+            results,
+            attrs,
+            region,
+        });
+        id
+    }
+
+    /// Append a fully-specified node (pass support). Result/value ids
+    /// must have been allocated from this graph.
+    pub fn push_node(&mut self, mut node: Node) -> NodeId {
+        let id = NodeId(self.next_node);
+        self.next_node += 1;
+        node.id = id;
+        for r in &node.results {
+            self.reserve_value(*r);
+        }
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Option<&mut Node> {
+        self.nodes.iter_mut().find(|n| n.id == id)
+    }
+
+    /// The node producing `v`, if any (None for args / outer captures).
+    pub fn producer(&self, v: ValueId) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.results.contains(&v))
+    }
+
+    /// Nodes consuming `v` in this region (not descending into regions).
+    pub fn consumers(&self, v: ValueId) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| n.operands.contains(&v))
+            .collect()
+    }
+
+    /// Count of uses of `v` in this region (operands + outputs).
+    ///
+    /// Regions are *closed scopes* — a nested region's values live in
+    /// its own namespace and receive outer data only through its region
+    /// op's operands — so we do not descend into regions here.
+    pub fn use_count(&self, v: ValueId) -> usize {
+        let mut n = self.outputs.iter().filter(|o| **o == v).count();
+        for node in &self.nodes {
+            n += node.operands.iter().filter(|o| **o == v).count();
+        }
+        n
+    }
+
+    /// Replace all uses of `from` with `to` in this region (operands and
+    /// outputs; nested regions are closed scopes, see [`use_count`]).
+    pub fn replace_uses(&mut self, from: ValueId, to: ValueId) {
+        for node in &mut self.nodes {
+            for o in &mut node.operands {
+                if *o == from {
+                    *o = to;
+                }
+            }
+        }
+        for o in &mut self.outputs {
+            if *o == from {
+                *o = to;
+            }
+        }
+    }
+
+    /// Total node count including nested regions.
+    pub fn size(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| 1 + n.region.as_ref().map(|r| r.size()).unwrap_or(0))
+            .sum()
+    }
+
+    /// Ops used anywhere (for dialect statistics / tests).
+    pub fn op_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            out.push(n.op.clone());
+            if let Some(r) = &n.region {
+                out.extend(r.op_names());
+            }
+        }
+        out
+    }
+
+    /// Does any node (recursively) use this op?
+    pub fn contains_op(&self, op: &str) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| n.op == op || n.region.as_ref().map(|r| r.contains_op(op)).unwrap_or(false))
+    }
+
+    /// Dataflow-order iteration is just `self.nodes` (SSA order). This
+    /// validates that property: every operand is an arg or produced by
+    /// an earlier node. Nested regions are closed scopes and validate
+    /// against their own args only.
+    pub fn is_ssa_ordered(&self, outer: &[ValueId]) -> bool {
+        let mut defined: Vec<ValueId> = self.args.clone();
+        defined.extend_from_slice(outer);
+        for n in &self.nodes {
+            for o in &n.operands {
+                if !defined.contains(o) {
+                    return false;
+                }
+            }
+            if let Some(r) = &n.region {
+                if !r.is_ssa_ordered(&[]) {
+                    return false;
+                }
+            }
+            defined.extend_from_slice(&n.results);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let input = g.push("io.input", vec![], 1, BTreeMap::new(), None);
+        let v0 = g.node(input).unwrap().results[0];
+        let infer = g.push("llm.infer", vec![v0], 1, BTreeMap::new(), None);
+        let v1 = g.node(infer).unwrap().results[0];
+        g.push("io.output", vec![v1], 0, BTreeMap::new(), None);
+        g
+    }
+
+    #[test]
+    fn push_allocates_fresh_ids() {
+        let g = simple_graph();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[0].results, vec![ValueId(0)]);
+        assert_eq!(g.nodes[1].operands, vec![ValueId(0)]);
+        assert_eq!(g.nodes[1].results, vec![ValueId(1)]);
+    }
+
+    #[test]
+    fn producer_and_consumers() {
+        let g = simple_graph();
+        let v0 = ValueId(0);
+        assert_eq!(g.producer(v0).unwrap().op, "io.input");
+        let c = g.consumers(v0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].op, "llm.infer");
+    }
+
+    #[test]
+    fn replace_uses_rewires() {
+        let mut g = simple_graph();
+        let v_new = g.fresh_value();
+        g.replace_uses(ValueId(1), v_new);
+        assert_eq!(g.nodes[2].operands, vec![v_new]);
+    }
+
+    #[test]
+    fn use_count_counts_outputs_too() {
+        let mut g = simple_graph();
+        g.outputs.push(ValueId(1));
+        assert_eq!(g.use_count(ValueId(1)), 2); // io.output + graph output
+        assert_eq!(g.use_count(ValueId(0)), 1);
+    }
+
+    #[test]
+    fn ssa_order_valid_and_violated() {
+        let g = simple_graph();
+        assert!(g.is_ssa_ordered(&[]));
+
+        let mut bad = Graph::new("bad");
+        let v_future = ValueId(5);
+        bad.reserve_value(v_future);
+        bad.push("io.output", vec![v_future], 0, BTreeMap::new(), None);
+        assert!(!bad.is_ssa_ordered(&[]));
+    }
+
+    #[test]
+    fn nested_region_size() {
+        let mut inner = Graph::new("inner");
+        inner.push("io.input", vec![], 1, BTreeMap::new(), None);
+        let mut g = Graph::new("outer");
+        g.push("agent.graph", vec![], 1, BTreeMap::new(), Some(inner));
+        assert_eq!(g.size(), 2);
+        assert!(g.contains_op("io.input"));
+        assert!(!g.contains_op("llm.infer"));
+    }
+}

@@ -1,0 +1,37 @@
+//! Agent-graph intermediate representation (paper §2.4, §4.2).
+//!
+//! MLIR itself is a C++ framework unavailable in this offline
+//! environment, so this module implements the *semantics* the paper
+//! builds on MLIR — a multi-level, dialect-organized, hierarchically
+//! nested dataflow IR with a textual round-trip format and a pass
+//! pipeline — natively in Rust (see DESIGN.md substitution table):
+//!
+//! * [`attr`] — attribute values annotating operations (model names,
+//!   sequence lengths, profiled resource vectors, placement hints);
+//! * [`ops`] — the dialect registry: the Table-1 task types as typed
+//!   operations (`llm.infer`, `kv.transfer`, `tool.call`, `gate.select`,
+//!   ...), with operand/result arity, purity, region-ness, and the
+//!   Figure-3 workload class each op inherits;
+//! * [`graph`] — SSA-style dataflow graphs with hierarchical regions
+//!   (an `agent.graph` node nests a subgraph — the paper's composite
+//!   agent nodes);
+//! * [`builder`] — ergonomic construction;
+//! * [`printer`] / [`parser`] — the textual format (Fig. 7);
+//! * [`verifier`] — structural validation;
+//! * [`passes`] — the transformation pipeline: LLM prefill/decode
+//!   decomposition, tool decomposition, expert parallelism, fusion,
+//!   DCE, canonicalization, and cost annotation.
+
+pub mod attr;
+pub mod builder;
+pub mod graph;
+pub mod ops;
+pub mod parser;
+pub mod passes;
+pub mod printer;
+pub mod verifier;
+
+pub use attr::Attr;
+pub use builder::GraphBuilder;
+pub use graph::{Graph, Node, NodeId, ValueId};
+pub use ops::{op, OpInfo};

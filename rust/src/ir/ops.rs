@@ -1,0 +1,194 @@
+//! The dialect registry: every operation type the agent IR understands.
+//!
+//! Dialects mirror the paper's Table 1 task taxonomy plus the Figure 7
+//! decomposed forms. Each op carries structural metadata (arity, purity,
+//! region-ness) and, where applicable, the Figure-3 [`WorkloadClass`]
+//! used by the cost-annotation pass.
+
+use crate::cost::workload::WorkloadClass;
+
+/// Operand arity constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    Exact(usize),
+    AtLeast(usize),
+    /// Between (min, max) inclusive.
+    Range(usize, usize),
+}
+
+impl Arity {
+    pub fn check(&self, n: usize) -> bool {
+        match self {
+            Arity::Exact(k) => n == *k,
+            Arity::AtLeast(k) => n >= *k,
+            Arity::Range(a, b) => n >= *a && n <= *b,
+        }
+    }
+}
+
+/// Static metadata for one op type.
+#[derive(Debug, Clone)]
+pub struct OpInfo {
+    /// Fully-qualified name, "dialect.op".
+    pub name: &'static str,
+    pub operands: Arity,
+    pub results: usize,
+    /// Pure ops with unused results are DCE-able.
+    pub pure_op: bool,
+    /// Whether the op carries a nested region (hierarchical agents).
+    pub has_region: bool,
+    /// The Figure-3 workload profile this op inherits for cost
+    /// annotation (None = negligible / structural).
+    pub workload: Option<WorkloadClass>,
+}
+
+/// The registry. Grouped by dialect:
+///
+/// * `io`     — graph boundary (Figure 2's input/output nodes)
+/// * `agent`  — hierarchical/composite agents (Table 1 "Agent")
+/// * `llm`    — model execution, whole and disaggregated
+/// * `kv`     — KV-cache read/write/transfer (Table 1 "Model KV Cache")
+/// * `tool`   — tool calls, whole and decomposed (lookup + compute)
+/// * `mem`    — memory/vector-DB lookups (Table 1 "Memory Lookup")
+/// * `gp`     — general-purpose CPU compute
+/// * `ctrl`   — control flow / planner (Table 1 "Control Flow/Planner")
+/// * `obs`    — observation store (Table 1 "Observation Store")
+/// * `media`  — modality conversion (Figure 2 voice agent: STT/TTS)
+/// * `moe`    — expert-parallel decomposition (Figure 7c)
+pub const REGISTRY: &[OpInfo] = &[
+    // io
+    OpInfo { name: "io.input", operands: Arity::Exact(0), results: 1, pure_op: false, has_region: false, workload: None },
+    OpInfo { name: "io.output", operands: Arity::AtLeast(1), results: 0, pure_op: false, has_region: false, workload: None },
+    // agent
+    OpInfo { name: "agent.graph", operands: Arity::AtLeast(0), results: 1, pure_op: false, has_region: true, workload: None },
+    OpInfo { name: "agent.invoke", operands: Arity::AtLeast(1), results: 1, pure_op: false, has_region: false, workload: None },
+    // llm
+    OpInfo { name: "llm.infer", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::LlmInferenceSingleNode) },
+    OpInfo { name: "llm.prefill", operands: Arity::AtLeast(1), results: 2, pure_op: true, has_region: false, workload: Some(WorkloadClass::LlmPrefillDisagg) },
+    OpInfo { name: "llm.decode", operands: Arity::AtLeast(2), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::LlmDecodeDisagg) },
+    OpInfo { name: "llm.diffuse", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::DiffusionModel) },
+    // kv
+    OpInfo { name: "kv.write", operands: Arity::Exact(1), results: 1, pure_op: false, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    OpInfo { name: "kv.read", operands: Arity::Exact(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    OpInfo { name: "kv.transfer", operands: Arity::Exact(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    // tool
+    OpInfo { name: "tool.call", operands: Arity::AtLeast(1), results: 1, pure_op: false, has_region: false, workload: Some(WorkloadClass::ToolCall) },
+    OpInfo { name: "tool.lookup", operands: Arity::AtLeast(1), results: 1, pure_op: false, has_region: false, workload: Some(WorkloadClass::ToolCall) },
+    OpInfo { name: "tool.compute", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    // mem
+    OpInfo { name: "mem.lookup", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    OpInfo { name: "mem.store", operands: Arity::AtLeast(1), results: 0, pure_op: false, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    // gp
+    OpInfo { name: "gp.compute", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    // ctrl
+    OpInfo { name: "ctrl.branch", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: None },
+    OpInfo { name: "ctrl.loop", operands: Arity::AtLeast(1), results: 1, pure_op: false, has_region: true, workload: None },
+    OpInfo { name: "ctrl.plan", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    OpInfo { name: "ctrl.merge", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: None },
+    // obs
+    OpInfo { name: "obs.store", operands: Arity::AtLeast(1), results: 0, pure_op: false, has_region: false, workload: Some(WorkloadClass::KvCacheStorage) },
+    // media
+    OpInfo { name: "stt.transcribe", operands: Arity::Exact(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    OpInfo { name: "tts.synthesize", operands: Arity::Exact(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    // moe (Figure 7c)
+    OpInfo { name: "gate.select", operands: Arity::Exact(1), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::GeneralDataProcessing) },
+    OpInfo { name: "moe.expert_prefill", operands: Arity::Exact(1), results: 2, pure_op: true, has_region: false, workload: Some(WorkloadClass::LlmPrefillDisagg) },
+    OpInfo { name: "moe.expert_decode", operands: Arity::Exact(2), results: 1, pure_op: true, has_region: false, workload: Some(WorkloadClass::LlmDecodeDisagg) },
+    OpInfo { name: "moe.merge", operands: Arity::AtLeast(1), results: 1, pure_op: true, has_region: false, workload: None },
+];
+
+/// Look up an op by fully-qualified name.
+pub fn op(name: &str) -> Option<&'static OpInfo> {
+    REGISTRY.iter().find(|o| o.name == name)
+}
+
+/// All ops in a dialect.
+pub fn dialect_ops(dialect: &str) -> Vec<&'static OpInfo> {
+    REGISTRY
+        .iter()
+        .filter(|o| o.name.split('.').next() == Some(dialect))
+        .collect()
+}
+
+/// The dialect of a fully-qualified op name.
+pub fn dialect_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or("")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_qualified() {
+        let mut seen = std::collections::BTreeSet::new();
+        for o in REGISTRY {
+            assert!(o.name.contains('.'), "{} not dialect-qualified", o.name);
+            assert!(seen.insert(o.name), "duplicate op {}", o.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(op("llm.infer").is_some());
+        assert!(op("llm.prefill").is_some());
+        assert!(op("nope.nope").is_none());
+    }
+
+    #[test]
+    fn table1_task_types_covered() {
+        // Agent, Model Execution, KV Cache, Tool Call, Memory Lookup,
+        // General Purpose Compute, Control Flow/Planner, Observation Store.
+        for name in [
+            "agent.graph",
+            "llm.infer",
+            "kv.read",
+            "tool.call",
+            "mem.lookup",
+            "gp.compute",
+            "ctrl.plan",
+            "obs.store",
+        ] {
+            assert!(op(name).is_some(), "missing Table-1 op {name}");
+        }
+    }
+
+    #[test]
+    fn arity_checks() {
+        assert!(Arity::Exact(2).check(2));
+        assert!(!Arity::Exact(2).check(1));
+        assert!(Arity::AtLeast(1).check(5));
+        assert!(!Arity::AtLeast(1).check(0));
+        assert!(Arity::Range(1, 3).check(3));
+        assert!(!Arity::Range(1, 3).check(4));
+    }
+
+    #[test]
+    fn prefill_yields_hidden_state_and_kv() {
+        assert_eq!(op("llm.prefill").unwrap().results, 2);
+        assert_eq!(op("llm.decode").unwrap().results, 1);
+    }
+
+    #[test]
+    fn region_ops() {
+        assert!(op("agent.graph").unwrap().has_region);
+        assert!(op("ctrl.loop").unwrap().has_region);
+        assert!(!op("llm.infer").unwrap().has_region);
+    }
+
+    #[test]
+    fn workload_classes_follow_fig3() {
+        use crate::cost::workload::WorkloadClass as W;
+        assert_eq!(op("llm.prefill").unwrap().workload, Some(W::LlmPrefillDisagg));
+        assert_eq!(op("llm.decode").unwrap().workload, Some(W::LlmDecodeDisagg));
+        assert_eq!(op("tool.call").unwrap().workload, Some(W::ToolCall));
+        assert_eq!(op("io.input").unwrap().workload, None);
+    }
+
+    #[test]
+    fn dialect_listing() {
+        let llm = dialect_ops("llm");
+        assert_eq!(llm.len(), 4);
+        assert_eq!(dialect_of("kv.transfer"), "kv");
+    }
+}

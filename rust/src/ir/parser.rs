@@ -1,0 +1,554 @@
+//! Textual IR parser — inverse of [`super::printer`].
+//!
+//! Grammar (whitespace-insensitive, `//` comments):
+//!
+//! ```text
+//! module   := "graph" "@" ident "(" valuelist? ")" block
+//! block    := "{" stmt* yield? "}"
+//! stmt     := (valuelist "=")? opname "(" valuelist? ")" attrs? block?
+//! yield    := "yield" valuelist
+//! attrs    := "{" (ident "=" attrval ("," ident "=" attrval)*)? "}"
+//! attrval  := int | float | string | bool | "[" attrval,* "]"
+//! value    := "%" int
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::attr::Attr;
+use super::graph::{Graph, Node, NodeId, ValueId};
+use crate::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Value(u32),
+    At,
+    Ident(String),
+    Str(String),
+    Int(i64),
+    Float(f64),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Eq,
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer {
+            src: src.as_bytes(),
+            pos: 0,
+            line: 1,
+        }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Parse {
+            line: self.line,
+            msg: msg.into(),
+        }
+    }
+
+    fn tokens(mut self) -> Result<Vec<(Tok, usize)>> {
+        let mut out = Vec::new();
+        while self.pos < self.src.len() {
+            let c = self.src[self.pos] as char;
+            match c {
+                ' ' | '\t' | '\r' => self.pos += 1,
+                '\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                '/' if self.peek(1) == Some('/') => {
+                    while self.pos < self.src.len() && self.src[self.pos] != b'\n' {
+                        self.pos += 1;
+                    }
+                }
+                '%' => {
+                    self.pos += 1;
+                    let n = self.lex_uint()?;
+                    out.push((Tok::Value(n as u32), self.line));
+                }
+                '@' => {
+                    self.pos += 1;
+                    out.push((Tok::At, self.line));
+                }
+                '(' => {
+                    self.pos += 1;
+                    out.push((Tok::LParen, self.line));
+                }
+                ')' => {
+                    self.pos += 1;
+                    out.push((Tok::RParen, self.line));
+                }
+                '{' => {
+                    self.pos += 1;
+                    out.push((Tok::LBrace, self.line));
+                }
+                '}' => {
+                    self.pos += 1;
+                    out.push((Tok::RBrace, self.line));
+                }
+                '[' => {
+                    self.pos += 1;
+                    out.push((Tok::LBracket, self.line));
+                }
+                ']' => {
+                    self.pos += 1;
+                    out.push((Tok::RBracket, self.line));
+                }
+                ',' => {
+                    self.pos += 1;
+                    out.push((Tok::Comma, self.line));
+                }
+                '=' => {
+                    self.pos += 1;
+                    out.push((Tok::Eq, self.line));
+                }
+                '"' => {
+                    let s = self.lex_string()?;
+                    out.push((Tok::Str(s), self.line));
+                }
+                c if c.is_ascii_digit() || c == '-' => {
+                    let (tok, _) = self.lex_number()?;
+                    out.push((tok, self.line));
+                }
+                c if c.is_ascii_alphabetic() || c == '_' => {
+                    let id = self.lex_ident();
+                    out.push((Tok::Ident(id), self.line));
+                }
+                other => return Err(self.err(format!("unexpected character {other:?}"))),
+            }
+        }
+        Ok(out)
+    }
+
+    fn peek(&self, k: usize) -> Option<char> {
+        self.src.get(self.pos + k).map(|b| *b as char)
+    }
+
+    fn lex_uint(&mut self) -> Result<u64> {
+        let start = self.pos;
+        while self.pos < self.src.len() && self.src[self.pos].is_ascii_digit() {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(self.err("expected digits"));
+        }
+        std::str::from_utf8(&self.src[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|e| self.err(format!("bad integer: {e}")))
+    }
+
+    fn lex_number(&mut self) -> Result<(Tok, ())> {
+        let start = self.pos;
+        if self.src[self.pos] == b'-' {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while self.pos < self.src.len() {
+            let b = self.src[self.pos];
+            if b.is_ascii_digit() {
+                self.pos += 1;
+            } else if b == b'.' || b == b'e' || b == b'E'
+                || ((b == b'+' || b == b'-')
+                    && matches!(self.src.get(self.pos - 1), Some(b'e') | Some(b'E')))
+            {
+                is_float = true;
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        if is_float {
+            Ok((
+                Tok::Float(
+                    text.parse()
+                        .map_err(|e| self.err(format!("bad float {text:?}: {e}")))?,
+                ),
+                (),
+            ))
+        } else {
+            Ok((
+                Tok::Int(
+                    text.parse()
+                        .map_err(|e| self.err(format!("bad int {text:?}: {e}")))?,
+                ),
+                (),
+            ))
+        }
+    }
+
+    fn lex_string(&mut self) -> Result<String> {
+        self.pos += 1; // opening quote
+        let mut s = String::new();
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    match self.src.get(self.pos) {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'n') => s.push('\n'),
+                        other => {
+                            return Err(self.err(format!("bad escape {other:?}")))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                b => {
+                    if b == b'\n' {
+                        self.line += 1;
+                    }
+                    s.push(b as char);
+                    self.pos += 1;
+                }
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    fn lex_ident(&mut self) -> String {
+        let start = self.pos;
+        while self.pos < self.src.len() {
+            let b = self.src[self.pos];
+            if b.is_ascii_alphanumeric() || b == b'_' || b == b'.' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.src[start..self.pos])
+            .unwrap()
+            .to_string()
+    }
+}
+
+struct Parser {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        let line = self
+            .toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|(_, l)| *l)
+            .unwrap_or(0);
+        Error::Parse {
+            line,
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn peek2(&self) -> Option<&Tok> {
+        self.toks.get(self.pos + 1).map(|(t, _)| t)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|(t, _)| t.clone());
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        match self.next() {
+            Some(got) if got == t => Ok(()),
+            got => Err(self.err(format!("expected {t:?}, got {got:?}"))),
+        }
+    }
+
+    fn expect_ident(&mut self, kw: &str) -> Result<()> {
+        match self.next() {
+            Some(Tok::Ident(s)) if s == kw => Ok(()),
+            got => Err(self.err(format!("expected `{kw}`, got {got:?}"))),
+        }
+    }
+
+    fn value_list(&mut self) -> Result<Vec<ValueId>> {
+        let mut out = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::Value(n)) => {
+                    out.push(ValueId(*n));
+                    self.next();
+                    if self.peek() == Some(&Tok::Comma) {
+                        self.next();
+                    } else {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        Ok(out)
+    }
+
+    fn attr_value(&mut self) -> Result<Attr> {
+        match self.next() {
+            Some(Tok::Int(v)) => Ok(Attr::Int(v)),
+            Some(Tok::Float(v)) => Ok(Attr::Float(v)),
+            Some(Tok::Str(s)) => Ok(Attr::Str(s)),
+            Some(Tok::Ident(s)) if s == "true" => Ok(Attr::Bool(true)),
+            Some(Tok::Ident(s)) if s == "false" => Ok(Attr::Bool(false)),
+            Some(Tok::LBracket) => {
+                let mut items = Vec::new();
+                if self.peek() != Some(&Tok::RBracket) {
+                    loop {
+                        items.push(self.attr_value()?);
+                        if self.peek() == Some(&Tok::Comma) {
+                            self.next();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                self.expect(Tok::RBracket)?;
+                Ok(Attr::List(items))
+            }
+            got => Err(self.err(format!("expected attribute value, got {got:?}"))),
+        }
+    }
+
+    /// Attr dict: `{ k = v, ... }` — caller has checked the lookahead.
+    fn attr_dict(&mut self) -> Result<BTreeMap<String, Attr>> {
+        self.expect(Tok::LBrace)?;
+        let mut out = BTreeMap::new();
+        while self.peek() != Some(&Tok::RBrace) {
+            let key = match self.next() {
+                Some(Tok::Ident(s)) => s,
+                got => return Err(self.err(format!("expected attr key, got {got:?}"))),
+            };
+            self.expect(Tok::Eq)?;
+            out.insert(key, self.attr_value()?);
+            if self.peek() == Some(&Tok::Comma) {
+                self.next();
+            }
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(out)
+    }
+
+    fn looks_like_attr_dict(&self) -> bool {
+        self.peek() == Some(&Tok::LBrace)
+            && matches!(self.peek2(), Some(Tok::Ident(s)) if s != "yield")
+            && matches!(self.toks.get(self.pos + 2).map(|(t, _)| t), Some(Tok::Eq))
+    }
+
+    /// Parse a region body into `g` until the closing brace.
+    fn body(&mut self, g: &mut Graph) -> Result<()> {
+        loop {
+            match self.peek() {
+                Some(Tok::RBrace) => {
+                    self.next();
+                    return Ok(());
+                }
+                Some(Tok::Ident(s)) if s == "yield" => {
+                    self.next();
+                    let outputs = self.value_list()?;
+                    for v in &outputs {
+                        g.reserve_value(*v);
+                    }
+                    g.outputs = outputs;
+                    self.expect(Tok::RBrace)?;
+                    return Ok(());
+                }
+                Some(_) => self.statement(g)?,
+                None => return Err(self.err("unexpected end of input in block")),
+            }
+        }
+    }
+
+    fn statement(&mut self, g: &mut Graph) -> Result<()> {
+        // Optional result list.
+        let mut results = Vec::new();
+        if matches!(self.peek(), Some(Tok::Value(_))) {
+            results = self.value_list()?;
+            self.expect(Tok::Eq)?;
+        }
+        let op = match self.next() {
+            Some(Tok::Ident(s)) => s,
+            got => return Err(self.err(format!("expected op name, got {got:?}"))),
+        };
+        self.expect(Tok::LParen)?;
+        let operands = self.value_list()?;
+        self.expect(Tok::RParen)?;
+
+        let attrs = if self.looks_like_attr_dict() {
+            self.attr_dict()?
+        } else if self.peek() == Some(&Tok::LBrace)
+            && self.peek2() == Some(&Tok::RBrace)
+            && !super::ops::op(&op).map(|o| o.has_region).unwrap_or(false)
+        {
+            // `{}` on a region-less op: empty attr dict.
+            self.next();
+            self.next();
+            BTreeMap::new()
+        } else {
+            BTreeMap::new()
+        };
+
+        let region = if self.peek() == Some(&Tok::LBrace) {
+            self.next();
+            let mut sub = Graph::new(&format!("{}_region", op.replace('.', "_")));
+            self.body(&mut sub)?;
+            Some(sub)
+        } else {
+            None
+        };
+
+        for v in results.iter().chain(operands.iter()) {
+            g.reserve_value(*v);
+        }
+        g.push_node(Node {
+            id: NodeId(0), // reassigned by push_node
+            op,
+            operands,
+            results,
+            attrs,
+            region,
+        });
+        Ok(())
+    }
+}
+
+/// Parse IR text into a [`Graph`].
+pub fn parse(src: &str) -> Result<Graph> {
+    let toks = Lexer::new(src).tokens()?;
+    let mut p = Parser { toks, pos: 0 };
+    p.expect_ident("graph")?;
+    p.expect(Tok::At)?;
+    let name = match p.next() {
+        Some(Tok::Ident(s)) => s,
+        got => return Err(p.err(format!("expected graph name, got {got:?}"))),
+    };
+    let mut g = Graph::new(&name);
+    p.expect(Tok::LParen)?;
+    let args = p.value_list()?;
+    for v in &args {
+        g.reserve_value(*v);
+    }
+    g.args = args;
+    p.expect(Tok::RParen)?;
+    p.expect(Tok::LBrace)?;
+    p.body(&mut g)?;
+    if p.peek().is_some() {
+        return Err(p.err("trailing tokens after graph"));
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer;
+
+    const VOICE: &str = r#"
+// Figure 2's conversational voice agent
+graph @voice() {
+  %0 = io.input() {modality = "audio"}
+  %1 = stt.transcribe(%0) {model = "whisper-small"}
+  %2 = llm.infer(%1) {model = "8b-fp16", isl = 512, osl = 256}
+  %3 = tts.synthesize(%2)
+  io.output(%3)
+  yield %3
+}
+"#;
+
+    #[test]
+    fn parses_voice_agent() {
+        let g = parse(VOICE).unwrap();
+        assert_eq!(g.name, "voice");
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.nodes[2].op, "llm.infer");
+        assert_eq!(g.nodes[2].attr_int("isl"), Some(512));
+        assert_eq!(g.outputs, vec![ValueId(3)]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let g = parse(VOICE).unwrap();
+        let text = printer::print(&g);
+        let g2 = parse(&text).unwrap();
+        assert_eq!(printer::print(&g2), text);
+    }
+
+    #[test]
+    fn parses_region() {
+        let src = r#"
+graph @outer() {
+  %0 = io.input()
+  %1 = ctrl.loop(%0) {max_trips = 3} {
+    %0 = io.input()
+    %1 = tool.call(%0) {tool = "search"}
+    yield %1
+  }
+  io.output(%1)
+}
+"#;
+        let g = parse(src).unwrap();
+        let loop_node = &g.nodes[1];
+        assert_eq!(loop_node.op, "ctrl.loop");
+        assert_eq!(loop_node.attr_int("max_trips"), Some(3));
+        let region = loop_node.region.as_ref().unwrap();
+        assert_eq!(region.nodes.len(), 2);
+        assert_eq!(region.outputs.len(), 1);
+    }
+
+    #[test]
+    fn parses_attr_types() {
+        let src = r#"
+graph @attrs() {
+  %0 = io.input() {flag = true, ratio = 0.5, n = -3, tags = ["a", "b"], name = "x"}
+  yield %0
+}
+"#;
+        let g = parse(src).unwrap();
+        let n = &g.nodes[0];
+        assert_eq!(n.attr("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(n.attr_f64("ratio"), Some(0.5));
+        assert_eq!(n.attr_int("n"), Some(-3));
+        assert_eq!(n.attr("tags").unwrap().as_list().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let src = "graph @x() {\n  %0 = io.input()\n  $bad\n}";
+        match parse(src) {
+            Err(crate::Error::Parse { line, .. }) => assert_eq!(line, 3),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_tokens() {
+        assert!(parse("graph @x() { yield } extra").is_err());
+    }
+
+    #[test]
+    fn multi_result_statement() {
+        let src = "graph @m() {\n %0 = io.input()\n %1, %2 = llm.prefill(%0)\n yield %1\n}";
+        let g = parse(src).unwrap();
+        assert_eq!(g.nodes[1].results.len(), 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Cost annotation: "These passes enable extraction of resource usage
+//! vectors θ_ij and latency terms t_ij, which feed directly into the
+//! convex optimization framework and scheduler" (§4.2).
+//!
+//! Attaches to every node with a known workload class:
+//! * `wl_class` — the Figure-3 class name;
+//! * `demand_*` — the six-dimensional radar vector;
+//! * `wants_accel` — accelerator vs CPU placement hint (§5: non-LLM
+//!   voice-agent components go to CPUs);
+//! * for `llm.prefill` / `llm.decode` with a resolvable `model` attr:
+//!   `est_flops` and `est_bytes` from the analytic profile, using the
+//!   node's `isl` / `osl` attrs (defaults 512 / 128).
+
+use super::{for_each_region, Pass};
+use crate::cost::model_profile::by_short_name;
+use crate::cost::{Resource, ResourceVec};
+use crate::ir::graph::Graph;
+use crate::Result;
+
+pub struct AnnotateCost {
+    pub default_isl: u64,
+    pub default_osl: u64,
+}
+
+impl Default for AnnotateCost {
+    fn default() -> Self {
+        AnnotateCost {
+            default_isl: 512,
+            default_osl: 128,
+        }
+    }
+}
+
+impl Pass for AnnotateCost {
+    fn name(&self) -> &'static str {
+        "annotate-cost"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        let (disl, dosl) = (self.default_isl, self.default_osl);
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            for n in &mut g.nodes {
+                let Some(info) = crate::ir::ops::op(&n.op) else {
+                    continue;
+                };
+                let Some(wl) = info.workload else { continue };
+                changed = true;
+                n.set_attr("wl_class", wl.name());
+                n.set_attr("wants_accel", wl.wants_accelerator());
+                let radar: ResourceVec = wl.radar();
+                for r in Resource::ALL {
+                    n.set_attr(&format!("demand_{}", r.name()), radar.get(r));
+                }
+
+                // Analytic FLOP/byte estimates for disaggregated stages.
+                if n.op == "llm.prefill" || n.op == "llm.decode" || n.op == "kv.transfer" {
+                    if let Some(model) =
+                        n.attr_str("model").and_then(by_short_name)
+                    {
+                        let isl = n.attr_int("isl").map(|v| v as u64).unwrap_or(disl);
+                        let osl = n.attr_int("osl").map(|v| v as u64).unwrap_or(dosl);
+                        match n.op.as_str() {
+                            "llm.prefill" => {
+                                n.set_attr("est_flops", model.prefill_flops(isl));
+                                n.set_attr("est_bytes", model.prefill_bytes(isl, 1));
+                            }
+                            "llm.decode" => {
+                                let ctx = isl + osl / 2;
+                                n.set_attr(
+                                    "est_flops",
+                                    model.decode_flops(ctx) * osl as f64,
+                                );
+                                n.set_attr(
+                                    "est_bytes",
+                                    model.decode_bytes(ctx, 1) * osl as f64,
+                                );
+                            }
+                            "kv.transfer" => {
+                                n.set_attr(
+                                    "est_bytes",
+                                    crate::cost::kv::kv_cache_bytes(&model, isl, 1),
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            Ok(changed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse;
+    use crate::ir::passes::decompose::DecomposeLlm;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn annotates_radar_and_estimates() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16", isl = 1024, osl = 256}
+  %2 = tool.call(%1) {tool = "search"}
+  io.output(%2)
+}
+"#,
+        )
+        .unwrap();
+        DecomposeLlm.run(&mut g).unwrap();
+        assert!(AnnotateCost::default().run(&mut g).unwrap());
+        verify(&g).unwrap();
+
+        let prefill = g.nodes.iter().find(|n| n.op == "llm.prefill").unwrap();
+        assert_eq!(
+            prefill.attr_str("wl_class"),
+            Some("LLM Prefill (Disaggregated)")
+        );
+        assert_eq!(prefill.attr("wants_accel").unwrap().as_bool(), Some(true));
+        assert!(prefill.attr_f64("demand_hp_compute").unwrap() >= 9.0);
+        // 2 * 8e9 * 1024 + attention term.
+        let flops = prefill.attr_f64("est_flops").unwrap();
+        assert!(flops > 1.6e13 && flops < 1.8e13, "{flops}");
+
+        let decode = g.nodes.iter().find(|n| n.op == "llm.decode").unwrap();
+        assert!(decode.attr_f64("est_bytes").unwrap() > 0.0);
+
+        let transfer = g.nodes.iter().find(|n| n.op == "kv.transfer").unwrap();
+        // Eq 3 at isl=1024: 1024 * 131072 bytes.
+        assert_eq!(
+            transfer.attr_f64("est_bytes"),
+            Some(1024.0 * 131_072.0)
+        );
+
+        let tool = g.nodes.iter().find(|n| n.op == "tool.call").unwrap();
+        assert_eq!(tool.attr("wants_accel").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn unresolvable_model_still_gets_radar() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1, %2 = llm.prefill(%0) {model = "mystery-13b"}
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        AnnotateCost::default().run(&mut g).unwrap();
+        let p = &g.nodes[1];
+        assert!(p.attr_str("wl_class").is_some());
+        assert!(p.attr("est_flops").is_none());
+    }
+}

@@ -1,0 +1,284 @@
+//! Cleanup passes: canonicalization, general-purpose-compute fusion
+//! ("adjacent or dependent operations can be fused to reduce
+//! communication overhead", §4.2), and dead-code elimination.
+
+use super::{for_each_region, Pass};
+use crate::ir::attr::Attr;
+use crate::ir::graph::Graph;
+use crate::Result;
+
+/// Canonicalize:
+/// * drop `gp.compute {op = "identity"}` (forward its operand);
+/// * collapse `kv.transfer(kv.transfer(x))` chains to a single hop.
+pub struct Canonicalize;
+
+impl Pass for Canonicalize {
+    fn name(&self) -> &'static str {
+        "canonicalize"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+
+            // Identity elimination.
+            loop {
+                let Some(idx) = g.nodes.iter().position(|n| {
+                    n.op == "gp.compute"
+                        && n.attr_str("op") == Some("identity")
+                        && n.operands.len() == 1
+                }) else {
+                    break;
+                };
+                let src = g.nodes[idx].operands[0];
+                let dst = g.nodes[idx].results[0];
+                g.nodes.remove(idx);
+                g.replace_uses(dst, src);
+                changed = true;
+            }
+
+            // kv.transfer chain collapse: transfer(b) where b = transfer(a)
+            // and b is only used once.
+            loop {
+                let mut rewrite: Option<(usize, crate::ir::graph::ValueId)> = None;
+                for (i, n) in g.nodes.iter().enumerate() {
+                    if n.op != "kv.transfer" {
+                        continue;
+                    }
+                    let src = n.operands[0];
+                    if let Some(prod) = g.producer(src) {
+                        if prod.op == "kv.transfer" && g.use_count(src) == 1 {
+                            rewrite = Some((i, prod.operands[0]));
+                            break;
+                        }
+                    }
+                }
+                let Some((i, base)) = rewrite else { break };
+                let mid = g.nodes[i].operands[0];
+                g.nodes[i].operands[0] = base;
+                // The intermediate transfer becomes dead; DCE removes it.
+                let _ = mid;
+                changed = true;
+            }
+
+            Ok(changed)
+        })
+    }
+}
+
+/// Fuse chains of single-use `gp.compute` into one node (attr `fused`
+/// records the collapsed stages).
+pub struct FuseGpCompute;
+
+impl Pass for FuseGpCompute {
+    fn name(&self) -> &'static str {
+        "fuse-gp-compute"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            loop {
+                // Find b = gp.compute(a) where a = gp.compute(...) and a
+                // has exactly one use.
+                let mut found: Option<(usize, usize)> = None;
+                for (bi, b) in g.nodes.iter().enumerate() {
+                    if b.op != "gp.compute" || b.operands.len() != 1 {
+                        continue;
+                    }
+                    let a_val = b.operands[0];
+                    if g.use_count(a_val) != 1 {
+                        continue;
+                    }
+                    if let Some(ai) = g
+                        .nodes
+                        .iter()
+                        .position(|n| n.op == "gp.compute" && n.results.contains(&a_val))
+                    {
+                        found = Some((ai, bi));
+                        break;
+                    }
+                }
+                let Some((ai, bi)) = found else { break };
+                changed = true;
+
+                let a = g.nodes[ai].clone();
+                let stages_a = match a.attr("fused") {
+                    Some(Attr::List(xs)) => xs.clone(),
+                    _ => vec![Attr::Str(
+                        a.attr_str("op").unwrap_or("gp").to_string(),
+                    )],
+                };
+                let b = &mut g.nodes[bi];
+                let mut stages = stages_a;
+                stages.push(Attr::Str(
+                    b.attr_str("op").unwrap_or("gp").to_string(),
+                ));
+                b.operands = a.operands.clone();
+                b.set_attr("fused", Attr::List(stages));
+                g.nodes.remove(ai);
+            }
+            Ok(changed)
+        })
+    }
+}
+
+/// Remove pure nodes whose results are all unused, to fixpoint.
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            loop {
+                let Some(idx) = g.nodes.iter().position(|n| {
+                    crate::ir::ops::op(&n.op)
+                        .map(|o| o.pure_op)
+                        .unwrap_or(false)
+                        && n.results.iter().all(|r| g.use_count(*r) == 0)
+                }) else {
+                    break;
+                };
+                g.nodes.remove(idx);
+                changed = true;
+            }
+            Ok(changed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn identity_elimination() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = gp.compute(%0) {op = "identity"}
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        assert!(Canonicalize.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.nodes[1].operands[0], g.nodes[0].results[0]);
+    }
+
+    #[test]
+    fn transfer_chain_collapsed_then_dce() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = kv.transfer(%0)
+  %2 = kv.transfer(%1)
+  io.output(%2)
+}
+"#,
+        )
+        .unwrap();
+        assert!(Canonicalize.run(&mut g).unwrap());
+        assert!(Dce.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        let names = g.op_names();
+        assert_eq!(
+            names.iter().filter(|o| *o == "kv.transfer").count(),
+            1,
+            "{names:?}"
+        );
+    }
+
+    #[test]
+    fn gp_fusion_merges_chain() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = gp.compute(%0) {op = "parse_json"}
+  %2 = gp.compute(%1) {op = "privacy_filter"}
+  %3 = gp.compute(%2) {op = "format"}
+  io.output(%3)
+}
+"#,
+        )
+        .unwrap();
+        assert!(FuseGpCompute.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        let gp: Vec<_> = g.nodes.iter().filter(|n| n.op == "gp.compute").collect();
+        assert_eq!(gp.len(), 1);
+        let fused = gp[0].attr("fused").unwrap().as_list().unwrap();
+        assert_eq!(fused.len(), 3);
+        assert_eq!(fused[0].as_str(), Some("parse_json"));
+        assert_eq!(fused[2].as_str(), Some("format"));
+    }
+
+    #[test]
+    fn fusion_respects_fanout() {
+        // %1 used twice -> must NOT fuse.
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = gp.compute(%0) {op = "parse"}
+  %2 = gp.compute(%1) {op = "a"}
+  %3 = gp.compute(%1) {op = "b"}
+  io.output(%2, %3)
+}
+"#,
+        )
+        .unwrap();
+        FuseGpCompute.run(&mut g).unwrap();
+        verify(&g).unwrap();
+        let gp_count = g.nodes.iter().filter(|n| n.op == "gp.compute").count();
+        assert_eq!(gp_count, 3);
+    }
+
+    #[test]
+    fn dce_removes_unused_pure_keeps_effectful() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16"}
+  %2 = mem.lookup(%0)
+  obs.store(%0)
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        assert!(Dce.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        assert!(!g.contains_op("mem.lookup"), "unused pure op removed");
+        assert!(g.contains_op("obs.store"), "effectful op kept");
+        assert!(g.contains_op("llm.infer"), "used op kept");
+    }
+
+    #[test]
+    fn dce_cascades() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = gp.compute(%0) {op = "a"}
+  %2 = gp.compute(%1) {op = "b"}
+  io.output(%0)
+}
+"#,
+        )
+        .unwrap();
+        assert!(Dce.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2); // both dead gp.computes removed
+    }
+}

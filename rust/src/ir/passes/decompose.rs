@@ -1,0 +1,246 @@
+//! Decomposition passes (paper §4.2, Figure 7 b→c).
+//!
+//! "the LLM call is split into prefill and decode, and each tool
+//! invocation is separated into a lookup and a compute stage. This
+//! transformation reveals internal parallelism and resource
+//! requirements, enabling the compiler to reason about scheduling,
+//! placement, and pipelining across a heterogeneous system."
+
+use std::collections::BTreeMap;
+
+use super::{for_each_region, Pass};
+use crate::ir::graph::{Graph, Node, NodeId};
+use crate::Result;
+
+/// `llm.infer(x)` → `llm.prefill(x)` + `kv.transfer(kv)` + `llm.decode`.
+pub struct DecomposeLlm;
+
+impl Pass for DecomposeLlm {
+    fn name(&self) -> &'static str {
+        "decompose-llm"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            let mut out: Vec<Node> = Vec::with_capacity(g.nodes.len());
+            let nodes = std::mem::take(&mut g.nodes);
+            for node in nodes {
+                if node.op != "llm.infer" {
+                    out.push(node);
+                    continue;
+                }
+                changed = true;
+                let old_result = node.results[0];
+
+                // %h, %kv = llm.prefill(operands...)
+                let h = g.fresh_value();
+                let kv = g.fresh_value();
+                let mut prefill_attrs = node.attrs.clone();
+                prefill_attrs.insert("stage".into(), "prefill".into());
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "llm.prefill".into(),
+                    operands: node.operands.clone(),
+                    results: vec![h, kv],
+                    attrs: prefill_attrs,
+                    region: None,
+                });
+
+                // %kvr = kv.transfer(%kv)  — the disaggregation boundary;
+                // the planner prices this edge (worked example's
+                // "KV Transfer (HP -> CO)" row).
+                let kvr = g.fresh_value();
+                let mut t_attrs = BTreeMap::new();
+                if let Some(m) = node.attrs.get("model") {
+                    t_attrs.insert("model".into(), m.clone());
+                }
+                if let Some(isl) = node.attrs.get("isl") {
+                    t_attrs.insert("isl".into(), isl.clone());
+                }
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "kv.transfer".into(),
+                    operands: vec![kv],
+                    results: vec![kvr],
+                    attrs: t_attrs,
+                    region: None,
+                });
+
+                // %out = llm.decode(%h, %kvr)
+                let mut decode_attrs = node.attrs.clone();
+                decode_attrs.insert("stage".into(), "decode".into());
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "llm.decode".into(),
+                    operands: vec![h, kvr],
+                    results: vec![old_result],
+                    attrs: decode_attrs,
+                    region: None,
+                });
+            }
+            // Reassign node ids in order.
+            g.nodes.clear();
+            for n in out {
+                g.push_node(n);
+            }
+            Ok(changed)
+        })
+    }
+}
+
+/// `tool.call(x)` → `tool.lookup(x)` + `tool.compute(lookup)`.
+pub struct DecomposeTool;
+
+impl Pass for DecomposeTool {
+    fn name(&self) -> &'static str {
+        "decompose-tool"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            let nodes = std::mem::take(&mut g.nodes);
+            let mut out = Vec::with_capacity(nodes.len());
+            for node in nodes {
+                if node.op != "tool.call" {
+                    out.push(node);
+                    continue;
+                }
+                changed = true;
+                let old_result = node.results[0];
+                let looked = g.fresh_value();
+                let mut lk_attrs = node.attrs.clone();
+                lk_attrs.insert("stage".into(), "lookup".into());
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "tool.lookup".into(),
+                    operands: node.operands.clone(),
+                    results: vec![looked],
+                    attrs: lk_attrs,
+                    region: None,
+                });
+                let mut cp_attrs = node.attrs.clone();
+                cp_attrs.insert("stage".into(), "compute".into());
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "tool.compute".into(),
+                    operands: vec![looked],
+                    results: vec![old_result],
+                    attrs: cp_attrs,
+                    region: None,
+                });
+            }
+            g.nodes.clear();
+            for n in out {
+                g.push_node(n);
+            }
+            Ok(changed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn llm_decomposition_preserves_uses() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16"}
+  io.output(%1)
+  yield %1
+}
+"#,
+        )
+        .unwrap();
+        assert!(DecomposeLlm.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        let ops = g.op_names();
+        assert_eq!(
+            ops,
+            vec!["io.input", "llm.prefill", "kv.transfer", "llm.decode", "io.output"]
+        );
+        // io.output still consumes the (re-used) original value.
+        let out_node = g.nodes.iter().find(|n| n.op == "io.output").unwrap();
+        let decode = g.nodes.iter().find(|n| n.op == "llm.decode").unwrap();
+        assert_eq!(out_node.operands[0], decode.results[0]);
+        // Stage attrs attached, model propagated.
+        let prefill = g.nodes.iter().find(|n| n.op == "llm.prefill").unwrap();
+        assert_eq!(prefill.attr_str("stage"), Some("prefill"));
+        assert_eq!(prefill.attr_str("model"), Some("8b-fp16"));
+    }
+
+    #[test]
+    fn idempotent_when_no_llm() {
+        let mut g = parse("graph @g() {\n %0 = io.input()\n yield %0\n}").unwrap();
+        assert!(!DecomposeLlm.run(&mut g).unwrap());
+    }
+
+    #[test]
+    fn tool_decomposition() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = tool.call(%0) {tool = "calculator"}
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        assert!(DecomposeTool.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        assert!(g.contains_op("tool.lookup"));
+        assert!(g.contains_op("tool.compute"));
+        assert!(!g.contains_op("tool.call"));
+        let lk = g.nodes.iter().find(|n| n.op == "tool.lookup").unwrap();
+        assert_eq!(lk.attr_str("tool"), Some("calculator"));
+    }
+
+    #[test]
+    fn decomposes_inside_regions() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = ctrl.loop(%0) {max_trips = 2} {
+    %0 = io.input()
+    %1 = llm.infer(%0) {model = "8b-fp16"}
+    yield %1
+  }
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        assert!(DecomposeLlm.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        let region = g.nodes[1].region.as_ref().unwrap();
+        assert!(region.contains_op("llm.prefill"));
+    }
+
+    #[test]
+    fn multiple_llms_all_decomposed() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16"}
+  %2 = llm.infer(%1) {model = "70b-fp8"}
+  io.output(%2)
+}
+"#,
+        )
+        .unwrap();
+        DecomposeLlm.run(&mut g).unwrap();
+        verify(&g).unwrap();
+        assert_eq!(g.op_names().iter().filter(|o| *o == "llm.prefill").count(), 2);
+        assert_eq!(g.op_names().iter().filter(|o| *o == "kv.transfer").count(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Expert-parallel decomposition (paper Figure 7c).
+//!
+//! "This is made explicit via a gate.select operation that routes input
+//! tokens to top-k experts. Each expert is then executed in parallel
+//! using expert.tp.prefill and expert.tp.decode, indicating a
+//! tensor-parallel subgraph per expert."
+//!
+//! `llm.prefill {experts = N, top_k = k}` becomes:
+//!
+//! ```text
+//! %g        = gate.select(%x) {top_k = k, experts = N}
+//! %h_i,%kv_i = moe.expert_prefill(%g) {expert = i, tp = ...}   × N
+//! %h        = moe.merge(%h_0 ... %h_{N-1})
+//! %kv       = moe.merge(%kv_0 ... %kv_{N-1}) {kind = "kv"}
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::{for_each_region, Pass};
+use crate::ir::attr::Attr;
+use crate::ir::graph::{Graph, Node, NodeId};
+use crate::Result;
+
+pub struct ExpertParallel;
+
+impl Pass for ExpertParallel {
+    fn name(&self) -> &'static str {
+        "expert-parallel"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            let nodes = std::mem::take(&mut g.nodes);
+            let mut out = Vec::with_capacity(nodes.len());
+            for node in nodes {
+                let experts = node.attr_int("experts").unwrap_or(1);
+                if node.op != "llm.prefill" || experts <= 1 {
+                    out.push(node);
+                    continue;
+                }
+                changed = true;
+                let top_k = node.attr_int("top_k").unwrap_or(2);
+                let (h_out, kv_out) = (node.results[0], node.results[1]);
+
+                // gate.select routes tokens to top-k experts.
+                let gated = g.fresh_value();
+                let mut gate_attrs = BTreeMap::new();
+                gate_attrs.insert("experts".into(), Attr::Int(experts));
+                gate_attrs.insert("top_k".into(), Attr::Int(top_k));
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "gate.select".into(),
+                    operands: node.operands.clone(),
+                    results: vec![gated],
+                    attrs: gate_attrs,
+                    region: None,
+                });
+
+                // One tensor-parallel subtask per expert.
+                let mut h_parts = Vec::new();
+                let mut kv_parts = Vec::new();
+                for e in 0..experts {
+                    let h = g.fresh_value();
+                    let kv = g.fresh_value();
+                    let mut attrs = node.attrs.clone();
+                    attrs.remove("experts");
+                    attrs.insert("expert".into(), Attr::Int(e));
+                    // Each expert handles ~top_k/N of the tokens.
+                    attrs.insert(
+                        "token_fraction".into(),
+                        Attr::Float(top_k as f64 / experts as f64),
+                    );
+                    out.push(Node {
+                        id: NodeId(0),
+                        op: "moe.expert_prefill".into(),
+                        operands: vec![gated],
+                        results: vec![h, kv],
+                        attrs,
+                        region: None,
+                    });
+                    h_parts.push(h);
+                    kv_parts.push(kv);
+                }
+
+                // Merge hidden states and KV handles.
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "moe.merge".into(),
+                    operands: h_parts,
+                    results: vec![h_out],
+                    attrs: BTreeMap::new(),
+                    region: None,
+                });
+                let mut kv_attrs = BTreeMap::new();
+                kv_attrs.insert("kind".into(), Attr::Str("kv".into()));
+                out.push(Node {
+                    id: NodeId(0),
+                    op: "moe.merge".into(),
+                    operands: kv_parts,
+                    results: vec![kv_out],
+                    attrs: kv_attrs,
+                    region: None,
+                });
+            }
+            g.nodes.clear();
+            for n in out {
+                g.push_node(n);
+            }
+            Ok(changed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse;
+    use crate::ir::passes::decompose::DecomposeLlm;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn moe_prefill_expands_to_gate_and_experts() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16", experts = 4, top_k = 2}
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        DecomposeLlm.run(&mut g).unwrap();
+        assert!(ExpertParallel.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        let names = g.op_names();
+        assert_eq!(names.iter().filter(|o| *o == "gate.select").count(), 1);
+        assert_eq!(
+            names.iter().filter(|o| *o == "moe.expert_prefill").count(),
+            4
+        );
+        assert_eq!(names.iter().filter(|o| *o == "moe.merge").count(), 2);
+        // Decode side untouched (still consumes merged kv).
+        assert!(g.contains_op("llm.decode"));
+        // Each expert sees its token fraction.
+        let e0 = g
+            .nodes
+            .iter()
+            .find(|n| n.op == "moe.expert_prefill")
+            .unwrap();
+        assert_eq!(e0.attr_f64("token_fraction"), Some(0.5));
+    }
+
+    #[test]
+    fn dense_prefill_untouched() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1, %2 = llm.prefill(%0) {model = "8b-fp16"}
+  io.output(%1)
+}
+"#,
+        )
+        .unwrap();
+        assert!(!ExpertParallel.run(&mut g).unwrap());
+        assert!(!g.contains_op("gate.select"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Agent inlining: flatten `agent.graph` regions into the parent graph.
+//!
+//! The paper's hierarchical agents (§2.4: "nodes are hierarchical,
+//! where the node may itself be an agent composed of further
+//! subgraphs") are convenient to author but opaque to the optimizer —
+//! a nested supervisor is one assignment variable instead of many.
+//! Inlining exposes the inner tasks so the §3.1.2 solver can place each
+//! on its own hardware class (MLIR's `inline` + `flatten` analog).
+//!
+//! Region calling convention (see `graph.rs`): regions are closed
+//! scopes; the region's `io.input` ops stand for the op's operands (in
+//! order), and the region's yields become the op's results.
+
+use super::{for_each_region, Pass};
+use crate::ir::graph::{Graph, Node, NodeId, ValueId};
+use crate::Result;
+
+/// Inline every `agent.graph` node (recursively, innermost-first via
+/// [`for_each_region`] post-order).
+pub struct InlineAgents;
+
+impl Pass for InlineAgents {
+    fn name(&self) -> &'static str {
+        "inline-agents"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        for_each_region(g, &mut |g| {
+            let mut changed = false;
+            loop {
+                let Some(idx) = g
+                    .nodes
+                    .iter()
+                    .position(|n| n.op == "agent.graph" && n.region.is_some())
+                else {
+                    break;
+                };
+                changed = true;
+                let agent = g.nodes.remove(idx);
+                let region = agent.region.expect("checked above");
+
+                // Map region-local values to parent values.
+                let mut map: std::collections::BTreeMap<ValueId, ValueId> =
+                    std::collections::BTreeMap::new();
+                // Region args (if declared) bind to op operands.
+                for (arg, op_operand) in region.args.iter().zip(&agent.operands) {
+                    map.insert(*arg, *op_operand);
+                }
+
+                let mut inlined: Vec<Node> = Vec::new();
+                let mut input_cursor = 0usize;
+                for inner in region.nodes {
+                    if inner.op == "io.input" {
+                        // Bind to the next outer operand.
+                        let outer = agent
+                            .operands
+                            .get(input_cursor)
+                            .copied()
+                            .unwrap_or_else(|| {
+                                // No operand to bind: keep as a fresh
+                                // boundary input in the parent.
+                                ValueId(u32::MAX)
+                            });
+                        input_cursor += 1;
+                        if outer != ValueId(u32::MAX) {
+                            for r in &inner.results {
+                                map.insert(*r, outer);
+                            }
+                            continue; // drop the io.input node
+                        }
+                    }
+                    // Remap operands; allocate fresh parent values for
+                    // results.
+                    let operands = inner
+                        .operands
+                        .iter()
+                        .map(|o| map.get(o).copied().unwrap_or(*o))
+                        .collect();
+                    let results: Vec<ValueId> = inner
+                        .results
+                        .iter()
+                        .map(|r| {
+                            let nv = g.fresh_value();
+                            map.insert(*r, nv);
+                            nv
+                        })
+                        .collect();
+                    let mut region2 = inner.region;
+                    // Nested regions are closed; nothing to remap inside.
+                    inlined.push(Node {
+                        id: NodeId(0),
+                        op: inner.op,
+                        operands,
+                        results,
+                        attrs: inner.attrs,
+                        region: region2.take(),
+                    });
+                }
+
+                // The agent op's results alias the region's yields.
+                for (res, yielded) in agent.results.iter().zip(&region.outputs) {
+                    let mapped = map.get(yielded).copied().unwrap_or(*yielded);
+                    g.replace_uses(*res, mapped);
+                }
+
+                // Splice inlined nodes at the agent's position.
+                for (k, node) in inlined.into_iter().enumerate() {
+                    g.nodes.insert(idx + k, node);
+                }
+                // Re-number node ids in order.
+                let nodes = std::mem::take(&mut g.nodes);
+                for n in nodes {
+                    g.push_node(n);
+                }
+            }
+            Ok(changed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::patterns;
+    use crate::ir::passes::PassManager;
+    use crate::ir::verifier::verify;
+
+    #[test]
+    fn supervisor_flattens_to_single_region() {
+        let mut g = patterns::supervisor("8b-fp16", 3);
+        let before_llms = g.op_names().iter().filter(|o| *o == "llm.infer").count();
+        assert!(InlineAgents.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        assert!(!g.contains_op("agent.graph"));
+        // All worker LLMs now live in the top region.
+        let top_llms = g.nodes.iter().filter(|n| n.op == "llm.infer").count();
+        assert_eq!(top_llms, before_llms);
+        assert!(g.is_ssa_ordered(&[]));
+    }
+
+    #[test]
+    fn hierarchical_inlines_recursively() {
+        let mut g = patterns::hierarchical("8b-fp16", 2, 2);
+        assert!(InlineAgents.run(&mut g).unwrap());
+        verify(&g).unwrap();
+        assert!(!g.contains_op("agent.graph"));
+        // 2 levels × fanout 2 = 4 leaf LLMs, all flattened to the top.
+        let llms = g.nodes.iter().filter(|n| n.op == "llm.infer").count();
+        assert_eq!(llms, 4);
+    }
+
+    #[test]
+    fn inlined_graph_plans_with_more_tasks() {
+        use crate::opt::assignment::Sla;
+        use crate::planner::plan::{Planner, PlannerConfig};
+
+        let g = patterns::supervisor("8b-fp16", 2);
+        // The graph as authored hides 2 worker LLMs inside agent.graph
+        // regions; the standard pipeline (which now inlines first) must
+        // surface them as independent placement decisions.
+        let top_level_llms = g.nodes.iter().filter(|n| n.op == "llm.infer").count();
+        assert_eq!(top_level_llms, 1, "only the merge LLM is top-level");
+
+        let planner = Planner::new(PlannerConfig {
+            sla: Sla::None,
+            ..Default::default()
+        });
+        let plan = planner.plan(&g).unwrap();
+        // Each inner LLM got inlined, decomposed, and placed on an
+        // accelerator: 2 workers + the supervisor-merge LLM.
+        let prefills: Vec<_> = plan
+            .placements
+            .iter()
+            .filter(|(op, _)| op == "llm.prefill")
+            .collect();
+        assert_eq!(prefills.len(), 3, "{:?}", plan.placements);
+        for (_, class) in prefills {
+            assert_ne!(class, "CPU");
+        }
+        assert!(!plan.placements.iter().any(|(op, _)| op == "agent.graph"));
+    }
+
+    #[test]
+    fn idempotent_on_flat_graphs() {
+        let mut g = crate::agents::voice_agent("8b-fp16", 128, 32);
+        // voice agent has a ctrl.loop region but no agent.graph.
+        assert!(!InlineAgents.run(&mut g).unwrap());
+    }
+
+    #[test]
+    fn works_inside_standard_pipeline_prefix() {
+        let mut g = patterns::agent_as_tool("8b-fp16");
+        InlineAgents.run(&mut g).unwrap();
+        let mut pm = PassManager::standard();
+        pm.run(&mut g).unwrap();
+        verify(&g).unwrap();
+        assert!(g.contains_op("llm.prefill"));
+        assert!(!g.contains_op("agent.graph"));
+    }
+}

@@ -1,0 +1,135 @@
+//! IR transformation pipeline (paper §4.2 "MLIR for Agentic Workload
+//! Planning": fusion & decomposition, static analysis for scheduling,
+//! target-aware preparation).
+//!
+//! * [`inline`] — flatten nested `agent.graph` regions so the optimizer
+//!   sees every inner task (hierarchical agents, Fig. 1 c/d/e);
+//! * [`decompose`] — `llm.infer` → `llm.prefill` + `kv.transfer` +
+//!   `llm.decode` (Figure 7c's disaggregation) and `tool.call` →
+//!   `tool.lookup` + `tool.compute`;
+//! * [`expert`] — expert parallelism: `gate.select` + per-expert
+//!   `moe.expert_*` + `moe.merge` (Figure 7c's hybrid parallelism);
+//! * [`cleanup`] — fusion of adjacent general-purpose compute, dead-code
+//!   elimination, canonicalization;
+//! * [`annotate`] — cost annotation: workload class, Figure-3 demand
+//!   vectors, and analytic FLOP/byte estimates per node — the `θ_ij`
+//!   extraction that "feed[s] directly into the convex optimization
+//!   framework and scheduler".
+
+pub mod annotate;
+pub mod cleanup;
+pub mod decompose;
+pub mod expert;
+pub mod inline;
+
+use super::graph::Graph;
+use crate::Result;
+
+/// A graph-to-graph transformation.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Returns true if the graph changed.
+    fn run(&self, g: &mut Graph) -> Result<bool>;
+}
+
+/// Runs passes in order, optionally verifying after each.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    pub verify_each: bool,
+    /// (pass name, changed) log of the last run.
+    pub log: Vec<(String, bool)>,
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager {
+            passes: Vec::new(),
+            verify_each: true,
+            log: Vec::new(),
+        }
+    }
+
+    /// The standard lowering pipeline used by the planner: decompose to
+    /// granular ops, expose expert parallelism, clean up, annotate.
+    pub fn standard() -> PassManager {
+        let mut pm = PassManager::new();
+        pm.add(inline::InlineAgents)
+            .add(decompose::DecomposeLlm)
+            .add(decompose::DecomposeTool)
+            .add(expert::ExpertParallel)
+            .add(cleanup::Canonicalize)
+            .add(cleanup::FuseGpCompute)
+            .add(cleanup::Dce)
+            .add(annotate::AnnotateCost::default());
+        pm
+    }
+
+    pub fn add(&mut self, pass: impl Pass + 'static) -> &mut Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    pub fn run(&mut self, g: &mut Graph) -> Result<()> {
+        self.log.clear();
+        for pass in &self.passes {
+            let changed = pass.run(g)?;
+            self.log.push((pass.name().to_string(), changed));
+            if self.verify_each {
+                super::verifier::verify(g)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Apply `f` to this graph and every nested region (post-order).
+pub fn for_each_region<F: FnMut(&mut Graph) -> Result<bool>>(
+    g: &mut Graph,
+    f: &mut F,
+) -> Result<bool> {
+    let mut changed = false;
+    for n in &mut g.nodes {
+        if let Some(r) = &mut n.region {
+            changed |= for_each_region(r, f)?;
+        }
+    }
+    changed |= f(g)?;
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse;
+
+    #[test]
+    fn standard_pipeline_runs_and_logs() {
+        let mut g = parse(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16", isl = 512, osl = 128}
+  %2 = tool.call(%1) {tool = "search"}
+  io.output(%2)
+  yield %2
+}
+"#,
+        )
+        .unwrap();
+        let mut pm = PassManager::standard();
+        pm.run(&mut g).unwrap();
+        assert_eq!(pm.log.len(), 8);
+        assert!(pm.log.iter().any(|(n, c)| n == "decompose-llm" && *c));
+        assert!(g.contains_op("llm.prefill"));
+        assert!(g.contains_op("llm.decode"));
+        assert!(g.contains_op("tool.lookup"));
+        assert!(!g.contains_op("llm.infer"));
+        assert!(!g.contains_op("tool.call"));
+    }
+}

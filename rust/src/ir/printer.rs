@@ -1,0 +1,123 @@
+//! Textual IR emission (round-trips through [`super::parser`]).
+//!
+//! Format (cf. Figure 7's MLIR listings):
+//!
+//! ```text
+//! graph @voice_agent() {
+//!   %0 = io.input() {modality = "audio"}
+//!   %1 = stt.transcribe(%0) {model = "whisper-small"}
+//!   %2, %3 = llm.prefill(%1) {model = "8b-fp16", isl = 512}
+//!   %4 = ctrl.loop(%2) {max_trips = 3} {
+//!     ...
+//!     yield %7
+//!   }
+//!   io.output(%4)
+//!   yield %4
+//! }
+//! ```
+
+use std::fmt::Write as _;
+
+use super::graph::Graph;
+
+/// Render a graph as IR text.
+pub fn print(g: &Graph) -> String {
+    let mut out = String::new();
+    let args = g
+        .args
+        .iter()
+        .map(|v| format!("%{}", v.0))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let _ = writeln!(out, "graph @{}({}) {{", g.name, args);
+    print_body(g, &mut out, 1);
+    out.push_str("}\n");
+    out
+}
+
+fn print_body(g: &Graph, out: &mut String, depth: usize) {
+    let pad = "  ".repeat(depth);
+    for n in &g.nodes {
+        out.push_str(&pad);
+        if !n.results.is_empty() {
+            let rs = n
+                .results
+                .iter()
+                .map(|v| format!("%{}", v.0))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let _ = write!(out, "{rs} = ");
+        }
+        let os = n
+            .operands
+            .iter()
+            .map(|v| format!("%{}", v.0))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let _ = write!(out, "{}({})", n.op, os);
+        if !n.attrs.is_empty() {
+            let attrs = n
+                .attrs
+                .iter()
+                .map(|(k, v)| format!("{k} = {v}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let _ = write!(out, " {{{attrs}}}");
+        }
+        if let Some(region) = &n.region {
+            out.push_str(" {\n");
+            print_body(region, out, depth + 1);
+            out.push_str(&pad);
+            out.push('}');
+        }
+        out.push('\n');
+    }
+    if !g.outputs.is_empty() {
+        let ys = g
+            .outputs
+            .iter()
+            .map(|v| format!("%{}", v.0))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let _ = writeln!(out, "{pad}yield {ys}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::attr::Attr;
+    use crate::ir::builder::GraphBuilder;
+
+    #[test]
+    fn prints_linear_graph() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.op("io.input", &[]);
+        let y = b.op_with(
+            "llm.infer",
+            &[x],
+            &[("model", Attr::from("8b-fp16")), ("isl", Attr::Int(512))],
+        );
+        b.op("io.output", &[y]);
+        b.output(y);
+        let text = super::print(&b.finish());
+        assert!(text.contains("graph @t() {"));
+        assert!(text.contains("%0 = io.input()"));
+        assert!(text.contains("%1 = llm.infer(%0) {isl = 512, model = \"8b-fp16\"}"));
+        assert!(text.contains("io.output(%1)"));
+        assert!(text.contains("yield %1"));
+    }
+
+    #[test]
+    fn prints_region() {
+        let mut inner = GraphBuilder::new("sub");
+        let i = inner.op("io.input", &[]);
+        inner.output(i);
+        let inner = inner.finish();
+        let mut b = GraphBuilder::new("outer");
+        let x = b.op("io.input", &[]);
+        b.region_op("ctrl.loop", &[x], &[("max_trips", Attr::Int(3))], inner);
+        let text = super::print(&b.finish());
+        assert!(text.contains("ctrl.loop(%0) {max_trips = 3} {"));
+        assert!(text.contains("    yield %0"), "{text}");
+    }
+}

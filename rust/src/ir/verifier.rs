@@ -1,0 +1,222 @@
+//! Structural verification of agent graphs.
+//!
+//! Checks (each returns a descriptive [`crate::Error::Verify`]):
+//!
+//! 1. every op name is registered (no silent typos);
+//! 2. operand/result arity matches the registry;
+//! 3. SSA dominance: operands defined before use, within region scope;
+//! 4. region presence matches the op (`agent.graph` must carry one,
+//!    `llm.infer` must not);
+//! 5. no duplicate value definitions;
+//! 6. region outputs are defined inside the region;
+//! 7. `ctrl.loop` carries a bounded `max_trips` (the §3.1 "bounded
+//!    unrolling" precondition for planning cyclic graphs).
+
+use std::collections::BTreeSet;
+
+use super::graph::{Graph, ValueId};
+use super::ops;
+use crate::{Error, Result};
+
+/// Verify a top-level graph.
+pub fn verify(g: &Graph) -> Result<()> {
+    verify_region(g, &format!("@{}", g.name))
+}
+
+fn verify_region(g: &Graph, path: &str) -> Result<()> {
+    let mut defined: BTreeSet<ValueId> = g.args.iter().copied().collect();
+
+    for n in &g.nodes {
+        let loc = format!("{path}/{}#{}", n.op, n.id.0);
+        let info = ops::op(&n.op)
+            .ok_or_else(|| Error::Verify(format!("{loc}: unknown op `{}`", n.op)))?;
+
+        if !info.operands.check(n.operands.len()) {
+            return Err(Error::Verify(format!(
+                "{loc}: operand count {} violates arity {:?}",
+                n.operands.len(),
+                info.operands
+            )));
+        }
+        if n.results.len() != info.results {
+            return Err(Error::Verify(format!(
+                "{loc}: has {} results, op defines {}",
+                n.results.len(),
+                info.results
+            )));
+        }
+        for o in &n.operands {
+            if !defined.contains(o) {
+                return Err(Error::Verify(format!(
+                    "{loc}: operand %{} used before definition",
+                    o.0
+                )));
+            }
+        }
+        for r in &n.results {
+            if !defined.insert(*r) {
+                return Err(Error::Verify(format!(
+                    "{loc}: value %{} defined twice",
+                    r.0
+                )));
+            }
+        }
+        match (&n.region, info.has_region) {
+            (None, true) => {
+                return Err(Error::Verify(format!("{loc}: missing region")));
+            }
+            (Some(_), false) => {
+                return Err(Error::Verify(format!("{loc}: unexpected region")));
+            }
+            (Some(r), true) => {
+                if n.op == "ctrl.loop" {
+                    match n.attr_int("max_trips") {
+                        Some(t) if t > 0 => {}
+                        _ => {
+                            return Err(Error::Verify(format!(
+                                "{loc}: ctrl.loop requires positive `max_trips` \
+                                 (bounded unrolling)"
+                            )))
+                        }
+                    }
+                }
+                verify_region(r, &loc)?;
+            }
+            (None, false) => {}
+        }
+    }
+
+    for o in &g.outputs {
+        if !defined.contains(o) {
+            return Err(Error::Verify(format!(
+                "{path}: yielded value %{} not defined",
+                o.0
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::parser::parse;
+
+    fn ok(src: &str) {
+        verify(&parse(src).unwrap()).unwrap();
+    }
+
+    fn fails_with(src: &str, needle: &str) {
+        let err = verify(&parse(src).unwrap()).unwrap_err().to_string();
+        assert!(err.contains(needle), "error {err:?} missing {needle:?}");
+    }
+
+    #[test]
+    fn valid_graph_passes() {
+        ok(r#"
+graph @g() {
+  %0 = io.input()
+  %1 = llm.infer(%0) {model = "8b-fp16"}
+  io.output(%1)
+  yield %1
+}
+"#);
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        fails_with("graph @g() {\n %0 = zzz.whatever()\n}", "unknown op");
+    }
+
+    #[test]
+    fn arity_violation_rejected() {
+        // stt.transcribe requires exactly one operand.
+        fails_with(
+            "graph @g() {\n %0 = io.input()\n %1 = stt.transcribe()\n}",
+            "arity",
+        );
+    }
+
+    #[test]
+    fn result_count_rejected() {
+        fails_with(
+            "graph @g() {\n %0 = io.input()\n %1 = llm.prefill(%0)\n}",
+            "results",
+        );
+    }
+
+    #[test]
+    fn use_before_def_rejected() {
+        fails_with(
+            "graph @g() {\n %0 = llm.infer(%9)\n}",
+            "before definition",
+        );
+    }
+
+    #[test]
+    fn double_definition_rejected() {
+        fails_with(
+            "graph @g() {\n %0 = io.input()\n %0 = io.input()\n}",
+            "defined twice",
+        );
+    }
+
+    #[test]
+    fn undefined_yield_rejected() {
+        fails_with("graph @g() {\n yield %3\n}", "not defined");
+    }
+
+    #[test]
+    fn loop_needs_max_trips() {
+        fails_with(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = ctrl.loop(%0) {
+    %0 = io.input()
+    yield %0
+  }
+}
+"#,
+            "max_trips",
+        );
+    }
+
+    #[test]
+    fn region_on_regionless_op_rejected() {
+        let mut inner = GraphBuilder::new("r");
+        let v = inner.op("io.input", &[]);
+        inner.output(v);
+        let mut b = GraphBuilder::new("g");
+        let x = b.op("io.input", &[]);
+        b.region_op("llm.infer", &[x], &[], inner.finish());
+        let err = verify(&b.finish()).unwrap_err().to_string();
+        assert!(err.contains("unexpected region"), "{err}");
+    }
+
+    #[test]
+    fn missing_region_rejected() {
+        // agent.graph without region (built by hand).
+        let mut b = GraphBuilder::new("g");
+        b.op("agent.graph", &[]);
+        let err = verify(&b.finish()).unwrap_err().to_string();
+        assert!(err.contains("missing region"), "{err}");
+    }
+
+    #[test]
+    fn nested_region_verified() {
+        fails_with(
+            r#"
+graph @g() {
+  %0 = io.input()
+  %1 = ctrl.loop(%0) {max_trips = 2} {
+    %0 = zzz.nope()
+    yield %0
+  }
+}
+"#,
+            "unknown op",
+        );
+    }
+}

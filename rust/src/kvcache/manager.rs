@@ -1,0 +1,349 @@
+//! Cluster-level cache directory with tiered offload.
+//!
+//! Tracks where each session's KV lives (node + tier), serves the
+//! fast-path router's locality queries, and offloads least-recently-used
+//! entries down the tier ladder (HBM → DRAM → Disk → Object) when a
+//! node's HBM pool is under pressure — §4.1's Cache Manager.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Storage tier ladder, fastest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Hbm,
+    Dram,
+    Disk,
+    Object,
+}
+
+impl Tier {
+    pub fn next_colder(self) -> Option<Tier> {
+        match self {
+            Tier::Hbm => Some(Tier::Dram),
+            Tier::Dram => Some(Tier::Disk),
+            Tier::Disk => Some(Tier::Object),
+            Tier::Object => None,
+        }
+    }
+
+    /// Nominal read bandwidth for restore-cost estimates, bytes/s.
+    pub fn read_bw(self) -> f64 {
+        match self {
+            Tier::Hbm => 2e12,
+            Tier::Dram => 8e10,
+            Tier::Disk => 3e9,
+            Tier::Object => 5e8,
+        }
+    }
+}
+
+/// One cached session entry.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub session: u64,
+    pub node: u32,
+    pub tier: Tier,
+    pub bytes: f64,
+    pub last_use: u64,
+    /// Hash of the token prefix (prefix-cache hits).
+    pub prefix_hash: u64,
+}
+
+/// Per-node tier capacities, bytes.
+#[derive(Debug, Clone)]
+pub struct NodeBudget {
+    pub hbm: f64,
+    pub dram: f64,
+    pub disk: f64,
+}
+
+/// The directory.
+#[derive(Debug)]
+pub struct CacheManager {
+    budgets: Vec<NodeBudget>,
+    entries: BTreeMap<u64, CacheEntry>,
+    /// prefix_hash -> sessions carrying it (fast-path routing index;
+    /// §Perf: turns find_prefix from an O(entries) scan into a map hit).
+    prefix_index: BTreeMap<u64, Vec<u64>>,
+    clock: u64,
+}
+
+impl CacheManager {
+    pub fn new(budgets: Vec<NodeBudget>) -> CacheManager {
+        CacheManager {
+            budgets,
+            entries: BTreeMap::new(),
+            prefix_index: BTreeMap::new(),
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Bytes used on `node` at `tier`.
+    pub fn used(&self, node: u32, tier: Tier) -> f64 {
+        self.entries
+            .values()
+            .filter(|e| e.node == node && e.tier == tier)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    fn capacity(&self, node: u32, tier: Tier) -> f64 {
+        let b = &self.budgets[node as usize];
+        match tier {
+            Tier::Hbm => b.hbm,
+            Tier::Dram => b.dram,
+            Tier::Disk => b.disk,
+            Tier::Object => f64::INFINITY,
+        }
+    }
+
+    /// Insert a session's KV on `node` in HBM, offloading LRU entries
+    /// down-tier as needed to make room.
+    pub fn insert(
+        &mut self,
+        session: u64,
+        node: u32,
+        bytes: f64,
+        prefix_hash: u64,
+    ) -> Result<()> {
+        if node as usize >= self.budgets.len() {
+            return Err(Error::Runtime(format!("unknown node {node}")));
+        }
+        if bytes > self.capacity(node, Tier::Hbm) {
+            return Err(Error::Capacity(format!(
+                "entry of {bytes}B exceeds node {node} HBM pool"
+            )));
+        }
+        self.make_room(node, Tier::Hbm, bytes)?;
+        let t = self.tick();
+        if let Some(old) = self.entries.insert(
+            session,
+            CacheEntry {
+                session,
+                node,
+                tier: Tier::Hbm,
+                bytes,
+                last_use: t,
+                prefix_hash,
+            },
+        ) {
+            self.unindex_prefix(old.prefix_hash, session);
+        }
+        self.prefix_index.entry(prefix_hash).or_default().push(session);
+        Ok(())
+    }
+
+    fn unindex_prefix(&mut self, prefix_hash: u64, session: u64) {
+        if let Some(v) = self.prefix_index.get_mut(&prefix_hash) {
+            v.retain(|s| *s != session);
+            if v.is_empty() {
+                self.prefix_index.remove(&prefix_hash);
+            }
+        }
+    }
+
+    /// Ensure `bytes` of headroom at (node, tier) by demoting LRU
+    /// entries to the next-colder tier (recursively).
+    fn make_room(&mut self, node: u32, tier: Tier, bytes: f64) -> Result<()> {
+        while self.used(node, tier) + bytes > self.capacity(node, tier) {
+            // LRU victim at this node+tier.
+            let victim = self
+                .entries
+                .values()
+                .filter(|e| e.node == node && e.tier == tier)
+                .min_by_key(|e| e.last_use)
+                .map(|e| e.session);
+            let Some(victim) = victim else {
+                return Err(Error::Capacity(format!(
+                    "node {node} {tier:?} cannot fit {bytes}B"
+                )));
+            };
+            let colder = tier
+                .next_colder()
+                .ok_or_else(|| Error::Capacity("object tier full?".into()))?;
+            let vbytes = self.entries[&victim].bytes;
+            self.make_room(node, colder, vbytes)?;
+            self.entries.get_mut(&victim).unwrap().tier = colder;
+        }
+        Ok(())
+    }
+
+    /// Touch a session (request hit); promotes it back to HBM when it
+    /// had been offloaded. Returns the tier it was found in (the caller
+    /// prices the restore latency) or None for a cold miss.
+    pub fn touch(&mut self, session: u64) -> Option<Tier> {
+        if !self.entries.contains_key(&session) {
+            return None;
+        }
+        let (node, bytes, found) = {
+            let e = &self.entries[&session];
+            (e.node, e.bytes, e.tier)
+        };
+        if found != Tier::Hbm {
+            // Promote: make room in HBM first.
+            if self.make_room(node, Tier::Hbm, bytes).is_err() {
+                // HBM hopeless; leave it where it is.
+                let t = self.tick();
+                self.entries.get_mut(&session).unwrap().last_use = t;
+                return Some(found);
+            }
+            self.entries.get_mut(&session).unwrap().tier = Tier::Hbm;
+        }
+        let t = self.tick();
+        self.entries.get_mut(&session).unwrap().last_use = t;
+        Some(found)
+    }
+
+    /// Drop a session's cache.
+    pub fn evict(&mut self, session: u64) -> bool {
+        match self.entries.remove(&session) {
+            Some(e) => {
+                self.unindex_prefix(e.prefix_hash, session);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Node holding this session's KV (router locality query).
+    pub fn locate(&self, session: u64) -> Option<(u32, Tier)> {
+        self.entries.get(&session).map(|e| (e.node, e.tier))
+    }
+
+    /// Any node holding a cache entry with this prefix hash (prefix
+    /// cache-hit routing for shared system prompts). Most-recently-used
+    /// wins; served from the prefix index rather than a full scan.
+    pub fn find_prefix(&self, prefix_hash: u64) -> Option<u32> {
+        self.prefix_index
+            .get(&prefix_hash)?
+            .iter()
+            .filter_map(|s| self.entries.get(s))
+            .max_by_key(|e| e.last_use)
+            .map(|e| e.node)
+    }
+
+    /// Estimated restore latency from the session's current tier.
+    pub fn restore_latency_s(&self, session: u64) -> f64 {
+        match self.entries.get(&session) {
+            None => 0.0,
+            Some(e) => {
+                if e.tier == Tier::Hbm {
+                    0.0
+                } else {
+                    e.bytes / e.tier.read_bw()
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(hbm: f64) -> CacheManager {
+        CacheManager::new(vec![
+            NodeBudget {
+                hbm,
+                dram: 4.0 * hbm,
+                disk: 100.0 * hbm,
+            },
+            NodeBudget {
+                hbm,
+                dram: 4.0 * hbm,
+                disk: 100.0 * hbm,
+            },
+        ])
+    }
+
+    #[test]
+    fn insert_and_locate() {
+        let mut m = mgr(100.0);
+        m.insert(1, 0, 40.0, 0xAB).unwrap();
+        assert_eq!(m.locate(1), Some((0, Tier::Hbm)));
+        assert_eq!(m.used(0, Tier::Hbm), 40.0);
+    }
+
+    #[test]
+    fn lru_offload_on_pressure() {
+        let mut m = mgr(100.0);
+        m.insert(1, 0, 60.0, 1).unwrap();
+        m.insert(2, 0, 30.0, 2).unwrap();
+        m.touch(2); // 1 is now LRU
+        m.insert(3, 0, 50.0, 3).unwrap(); // forces offload of 1
+        assert_eq!(m.locate(1), Some((0, Tier::Dram)));
+        assert_eq!(m.locate(3), Some((0, Tier::Hbm)));
+    }
+
+    #[test]
+    fn cascading_offload_to_disk() {
+        let mut m = CacheManager::new(vec![NodeBudget {
+            hbm: 100.0,
+            dram: 100.0,
+            disk: 1000.0,
+        }]);
+        m.insert(1, 0, 90.0, 1).unwrap();
+        m.insert(2, 0, 90.0, 2).unwrap(); // 1 -> DRAM
+        m.insert(3, 0, 90.0, 3).unwrap(); // 2 -> DRAM would overflow: 1 -> Disk
+        assert_eq!(m.locate(1), Some((0, Tier::Disk)));
+        assert_eq!(m.locate(2), Some((0, Tier::Dram)));
+        assert_eq!(m.locate(3), Some((0, Tier::Hbm)));
+    }
+
+    #[test]
+    fn touch_promotes_back_to_hbm() {
+        let mut m = mgr(100.0);
+        m.insert(1, 0, 60.0, 1).unwrap();
+        m.insert(2, 0, 60.0, 2).unwrap(); // 1 offloaded
+        assert_eq!(m.locate(1).unwrap().1, Tier::Dram);
+        assert!(m.restore_latency_s(1) > 0.0);
+        let was = m.touch(1).unwrap();
+        assert_eq!(was, Tier::Dram);
+        assert_eq!(m.locate(1).unwrap().1, Tier::Hbm);
+        // Now 2 got pushed out.
+        assert_eq!(m.locate(2).unwrap().1, Tier::Dram);
+    }
+
+    #[test]
+    fn prefix_lookup_prefers_recent() {
+        let mut m = mgr(1000.0);
+        m.insert(1, 0, 10.0, 0xFEED).unwrap();
+        m.insert(2, 1, 10.0, 0xFEED).unwrap();
+        assert_eq!(m.find_prefix(0xFEED), Some(1)); // session 2 is fresher
+        m.touch(1);
+        assert_eq!(m.find_prefix(0xFEED), Some(0));
+        assert_eq!(m.find_prefix(0xDEAD), None);
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let mut m = mgr(100.0);
+        assert!(m.insert(1, 0, 150.0, 0).is_err());
+        assert!(m.insert(1, 9, 10.0, 0).is_err());
+    }
+
+    #[test]
+    fn evict_and_miss() {
+        let mut m = mgr(100.0);
+        m.insert(1, 0, 10.0, 0).unwrap();
+        assert!(m.evict(1));
+        assert!(!m.evict(1));
+        assert_eq!(m.touch(1), None);
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,18 @@
+//! Distributed KV-cache management (paper §4.1 "Cache Manager").
+//!
+//! "Manages distributed key-value (KV) caches ... employing strategies
+//! for offloading less frequently accessed data to slower storage
+//! mediums such as secondary memory tiers, disks, or object storage."
+//!
+//! * [`paged`] — the per-device paged block allocator (the paper's
+//!   framework "automatically incorporates optimizations such as paged
+//!   attention [12]");
+//! * [`manager`] — the cluster-level cache directory: per-session
+//!   placement, LRU offload across memory tiers, and the prefix-locality
+//!   lookups the fast-path router uses.
+
+pub mod manager;
+pub mod paged;
+
+pub use manager::{CacheManager, Tier};
+pub use paged::PagedAllocator;

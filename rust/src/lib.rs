@@ -1,0 +1,73 @@
+//! # agentic-hetero
+//!
+//! A serving framework for *agentic AI workloads* over *heterogeneous
+//! hardware*, reproducing "Efficient and Scalable Agentic AI with
+//! Heterogeneous Systems" (Asgar, Nguyen, Katti; 2025).
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: an
+//!   agent-graph IR with decomposition passes ([`ir`]), an analytic
+//!   cost/roofline/TCO model ([`cost`]), a cost-aware MILP/LP assignment
+//!   optimizer ([`opt`]), a slow-path planner ([`planner`]), a fast-path
+//!   router + continuous batcher ([`router`]), a paged KV-cache manager
+//!   ([`kvcache`]), an RDMA-fabric model ([`transport`]), a heterogeneous
+//!   cluster discrete-event simulator ([`cluster`]), and a serving loop
+//!   ([`server`]).
+//! * **L2 (python/compile/model.py)** — a tiny-LLaMA JAX model AOT-lowered
+//!   to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels/)** — the Pallas flash-attention kernel
+//!   those graphs call.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and executes them on the request path — Python is never
+//! invoked at serving time.
+
+pub mod agents;
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod ir;
+pub mod kvcache;
+pub mod obs;
+pub mod opt;
+pub mod planner;
+pub mod repro;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod transport;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("ir error: {0}")]
+    Ir(String),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("verification failed: {0}")]
+    Verify(String),
+    #[error("optimizer error: {0}")]
+    Opt(String),
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("capacity exceeded: {0}")]
+    Capacity(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

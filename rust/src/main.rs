@@ -1,0 +1,277 @@
+//! `agentic-hetero` — leader entrypoint.
+//!
+//! ```text
+//! agentic-hetero repro <id|all> [--json] [--out FILE]   regenerate paper tables/figures
+//! agentic-hetero plan  [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
+//! agentic-hetero ir    [--agent ...] [--raw]            print (lowered) agent IR
+//! agentic-hetero serve [--config FILE] [--requests N] [--max-new N]
+//! agentic-hetero simulate [--prefill H100] [--decode Gaudi3] [--model 8b-fp16]
+//!                        [--rate R] [--requests N]
+//! agentic-hetero help
+//! ```
+
+use agentic_hetero::agents;
+use agentic_hetero::cluster::sim::{pair_placement, ClusterSim};
+use agentic_hetero::cluster::trace::{voice_agent as voice_trace, TraceConfig};
+use agentic_hetero::config::DeployConfig;
+use agentic_hetero::cost::hardware::by_name;
+use agentic_hetero::cost::model_profile::by_short_name;
+use agentic_hetero::cost::roofline::Parallelism;
+use agentic_hetero::ir::passes::PassManager;
+use agentic_hetero::ir::printer;
+use agentic_hetero::opt::assignment::Sla;
+use agentic_hetero::planner::plan::{Planner, PlannerConfig};
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, Server, ServerConfig};
+use agentic_hetero::transport::fabric::Fabric;
+use agentic_hetero::util::cli::Args;
+use agentic_hetero::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "repro" => cmd_repro(&args),
+        "plan" => cmd_plan(&args),
+        "ir" => cmd_ir(&args),
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+agentic-hetero — agentic AI serving over heterogeneous systems
+
+USAGE:
+  agentic-hetero repro <all|fig3|fig4|fig7|fig8|fig9|table1|table3|table4|table5|bandwidth>
+                 [--json] [--out FILE]
+  agentic-hetero plan     [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
+  agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
+  agentic-hetero serve    [--config FILE] [--artifacts DIR] [--requests N] [--max-new N]
+  agentic-hetero simulate [--prefill H100] [--decode Gaudi3] [--model 8b-fp16]
+                          [--rate R] [--requests N] [--voice]
+";
+
+fn cmd_repro(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let arts = if which == "all" {
+        agentic_hetero::repro::all()
+    } else {
+        match agentic_hetero::repro::by_id(which) {
+            Some(a) => vec![a],
+            None => {
+                eprintln!("unknown artifact `{which}` (try `repro all`)");
+                return 2;
+            }
+        }
+    };
+    let as_json = args.flag("json");
+    let mut out = String::new();
+    if as_json {
+        let mut o = Json::obj();
+        for a in &arts {
+            o = o.set(a.id, a.json.clone());
+        }
+        out = o.pretty();
+    } else {
+        for a in &arts {
+            out.push_str(&format!("\n=== {} ===\n{}\n", a.title, a.text));
+        }
+    }
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &out) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            println!("wrote {path}");
+        }
+        None => print!("{out}"),
+    }
+    0
+}
+
+fn build_agent(args: &Args) -> agentic_hetero::ir::Graph {
+    let model = args.get_or("model", "8b-fp16");
+    if by_short_name(model).is_none() {
+        eprintln!("warning: model `{model}` not in Table 4; cost estimates degrade");
+    }
+    match args.get_or("agent", "voice") {
+        "rag" => agents::rag_agent(model, 2048, 256, 8),
+        "langchain" => agents::langchain_style_agent(model),
+        _ => agents::voice_agent(model, 512, 256),
+    }
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let g = build_agent(args);
+    let mut cfg = PlannerConfig::default();
+    let sla_ms: f64 = args.get_parsed("sla-ms", 5000.0);
+    cfg.sla = if sla_ms <= 0.0 {
+        Sla::None
+    } else {
+        Sla::EndToEnd(sla_ms / 1e3)
+    };
+    let planner = Planner::new(cfg);
+    match planner.plan(&g) {
+        Ok(plan) => {
+            println!("plan for @{} (SLA {:.0} ms):", g.name, sla_ms);
+            for (op, class) in &plan.placements {
+                println!("  {op:<22} -> {class}");
+            }
+            println!(
+                "cost ${:.6}/request   critical path {:.1} ms",
+                plan.cost_usd,
+                plan.latency_s * 1e3
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("planning failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_ir(args: &Args) -> i32 {
+    let mut g = build_agent(args);
+    if !args.flag("raw") {
+        let mut pm = PassManager::standard();
+        if let Err(e) = pm.run(&mut g) {
+            eprintln!("pass pipeline failed: {e}");
+            return 1;
+        }
+        for (name, changed) in &pm.log {
+            eprintln!("pass {name}: {}", if *changed { "changed" } else { "no-op" });
+        }
+    }
+    print!("{}", printer::print(&g));
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = match args.get("config") {
+        Some(path) => match DeployConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config {path}: {e}");
+                return 1;
+            }
+        },
+        None => DeployConfig::default(),
+    };
+    let artifacts = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    let n: usize = args.get_parsed("requests", 16usize);
+    let max_new: usize = args.get_parsed("max-new", cfg.max_new_tokens as usize);
+
+    eprintln!("loading engine from {artifacts}/ ...");
+    let engine = match Engine::load(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "engine up on {} ({} params, buckets {:?})",
+        engine.platform(),
+        engine.manifest.num_params,
+        engine.manifest.buckets
+    );
+    let mut server = Server::new(engine, ServerConfig::default());
+    let prompts = [
+        "the paper describes ",
+        "heterogeneous systems ",
+        "the cost model ",
+        "agentic workloads are ",
+    ];
+    let reqs: Vec<ChatRequest> = (0..n as u64)
+        .map(|i| ChatRequest::new(i, prompts[(i as usize) % prompts.len()], max_new))
+        .collect();
+    let t0 = std::time::Instant::now();
+    match server.run_workload(reqs) {
+        Ok(responses) => {
+            let wall = t0.elapsed().as_secs_f64();
+            let tokens: usize = responses.iter().map(|r| r.tokens).sum();
+            for r in responses.iter().take(4) {
+                println!("#{}: {:?}", r.id, r.text());
+            }
+            println!(
+                "\n{} requests, {} tokens in {:.2}s -> {:.0} tok/s",
+                responses.len(),
+                tokens,
+                wall,
+                tokens as f64 / wall
+            );
+            println!("\nmetrics:\n{}", server.metrics.report());
+            0
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let prefill = args.get_or("prefill", "H100");
+    let decode = args.get_or("decode", "Gaudi3");
+    let model = args.get_or("model", "8b-fp16");
+    let rate: f64 = args.get_parsed("rate", 8.0);
+    let n: usize = args.get_parsed("requests", 256usize);
+
+    let (Some(pd), Some(dd)) = (by_name(prefill), by_name(decode)) else {
+        eprintln!("unknown device (catalog: A40 A100 Gaudi3 MI300x H100 B200)");
+        return 2;
+    };
+    let Some(m) = by_short_name(model) else {
+        eprintln!("unknown model (8b-fp16, 8b-fp8, 70b-fp16, 70b-fp8)");
+        return 2;
+    };
+
+    let placement = pair_placement(
+        &pd,
+        Parallelism { tp: 1, pp: 1 },
+        2,
+        8,
+        &dd,
+        Parallelism { tp: 1, pp: 1 },
+        2,
+        32,
+    );
+    let fabric = Fabric::new(8, 8, pd.scaleup_bw_gbps, 400.0);
+    let mut sim = ClusterSim::new(m, placement, fabric);
+    let tc = TraceConfig {
+        n_requests: n,
+        rate,
+        isl_mean: 512,
+        osl_mean: 128,
+        sigma: 0.4,
+        seed: 0,
+    };
+    let trace = if args.flag("voice") {
+        voice_trace(&tc)
+    } else {
+        agentic_hetero::cluster::trace::generate(&tc)
+    };
+    match sim.run(&trace) {
+        Ok(report) => {
+            println!("{prefill}::{decode} on {} @ {rate} req/s", sim.model.name);
+            println!("{}", report.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("simulate: {e}");
+            1
+        }
+    }
+}

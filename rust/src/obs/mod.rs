@@ -1,0 +1,241 @@
+//! Observability: counters, gauges, and latency histograms for the
+//! serving path (§4.1's runtime "metrics collection").
+//!
+//! Lock-light: counters are atomics; histograms take a short mutex only
+//! on record. A [`MetricsRegistry`] snapshot renders a flat text report
+//! (exposition-format-ish) for the CLI and the e2e example.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bit-cast f64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced, 1µs .. ~100s).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const N_BUCKETS: usize = 40;
+
+fn bucket_for(us: f64) -> usize {
+    if us <= 1.0 {
+        return 0;
+    }
+    // log-spaced: each bucket is ~1.585x the previous (10^0.2).
+    ((us.log10() / 0.2) as usize).min(N_BUCKETS - 1)
+}
+
+fn bucket_upper_us(i: usize) -> f64 {
+    10f64.powf((i + 1) as f64 * 0.2)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_secs(&self, secs: f64) {
+        let us = secs * 1e6;
+        self.buckets[bucket_for(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn percentile_secs(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_upper_us(i) / 1e6;
+            }
+        }
+        bucket_upper_us(N_BUCKETS - 1) / 1e6
+    }
+}
+
+/// Named metrics, registered on first use.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Flat text report, stable ordering.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k}_count {}\n{k}_mean_ms {:.3}\n{k}_p50_ms {:.3}\n{k}_p95_ms {:.3}\n",
+                h.count(),
+                h.mean_secs() * 1e3,
+                h.percentile_secs(50.0) * 1e3,
+                h.percentile_secs(95.0) * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs").inc();
+        r.counter("reqs").add(4);
+        r.gauge("batch").set(7.5);
+        assert_eq!(r.counter("reqs").get(), 5);
+        assert_eq!(r.gauge("batch").get(), 7.5);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_inputs() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-3); // 1ms .. 1s uniform
+        }
+        let p50 = h.percentile_secs(50.0);
+        assert!(p50 > 0.2 && p50 < 1.0, "p50={p50}");
+        let p99 = h.percentile_secs(99.0);
+        assert!(p99 >= p50);
+        assert!((h.mean_secs() - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_secs(50.0), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_all() {
+        let r = MetricsRegistry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(1.0);
+        r.histogram("c").record_secs(0.001);
+        let rep = r.report();
+        assert!(rep.contains("a 1"));
+        assert!(rep.contains("b 1"));
+        assert!(rep.contains("c_count 1"));
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let r = std::sync::Arc::new(MetricsRegistry::new());
+        let c = r.counter("x");
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,403 @@
+//! Dense two-phase simplex, from scratch.
+//!
+//! Solves `min c·x  s.t.  A_ub·x <= b_ub,  A_eq·x = b_eq,  x >= 0`.
+//!
+//! Phase 1 minimizes the sum of artificial variables to find a basic
+//! feasible solution; phase 2 optimizes the real objective. Bland's rule
+//! guards against cycling. Problem sizes here are tiny (tens of
+//! variables), so a dense tableau is the right tool.
+
+/// An LP in standard-ish form (`x >= 0` implicit).
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    /// Number of structural variables.
+    pub n: usize,
+    /// Objective coefficients (minimized).
+    pub c: Vec<f64>,
+    /// `row · x <= rhs` constraints.
+    pub a_ub: Vec<(Vec<f64>, f64)>,
+    /// `row · x == rhs` constraints.
+    pub a_eq: Vec<(Vec<f64>, f64)>,
+}
+
+impl Lp {
+    pub fn new(n: usize) -> Lp {
+        Lp {
+            n,
+            c: vec![0.0; n],
+            a_ub: Vec::new(),
+            a_eq: Vec::new(),
+        }
+    }
+
+    pub fn minimize(&mut self, c: Vec<f64>) -> &mut Self {
+        assert_eq!(c.len(), self.n);
+        self.c = c;
+        self
+    }
+
+    pub fn add_ub(&mut self, row: Vec<f64>, rhs: f64) -> &mut Self {
+        assert_eq!(row.len(), self.n);
+        self.a_ub.push((row, rhs));
+        self
+    }
+
+    pub fn add_eq(&mut self, row: Vec<f64>, rhs: f64) -> &mut Self {
+        assert_eq!(row.len(), self.n);
+        self.a_eq.push((row, rhs));
+        self
+    }
+
+    /// `row · x >= rhs` convenience (negated <=).
+    pub fn add_lb(&mut self, row: Vec<f64>, rhs: f64) -> &mut Self {
+        let neg: Vec<f64> = row.iter().map(|v| -v).collect();
+        self.add_ub(neg, -rhs)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal(LpSolution),
+    Infeasible,
+    Unbounded,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP; see module docs.
+pub fn solve(lp: &Lp) -> LpResult {
+    // Tableau layout: columns = [structural | slack(ub) | artificial], plus rhs.
+    let n = lp.n;
+    let n_ub = lp.a_ub.len();
+    let n_eq = lp.a_eq.len();
+    let rows = n_ub + n_eq;
+
+    // Normalize rows to nonnegative rhs.
+    // For <= with negative rhs we must flip to >=, which needs an
+    // artificial (surplus + artificial). Track per-row: slack col sign.
+    #[derive(Clone, Copy)]
+    enum RowKind {
+        UbPos(usize),  // slack index
+        UbNeg(usize),  // surplus index (coef -1) + artificial
+        Eq,
+    }
+
+    let mut a: Vec<Vec<f64>> = Vec::with_capacity(rows);
+    let mut b: Vec<f64> = Vec::with_capacity(rows);
+    let mut kinds: Vec<RowKind> = Vec::with_capacity(rows);
+
+    let mut n_slack = 0usize;
+    for (row, rhs) in &lp.a_ub {
+        if *rhs >= 0.0 {
+            a.push(row.clone());
+            b.push(*rhs);
+            kinds.push(RowKind::UbPos(n_slack));
+        } else {
+            // -row · x >= -rhs  =>  flip to >= with positive rhs.
+            a.push(row.iter().map(|v| -v).collect());
+            b.push(-*rhs);
+            kinds.push(RowKind::UbNeg(n_slack));
+        }
+        n_slack += 1;
+    }
+    for (row, rhs) in &lp.a_eq {
+        if *rhs >= 0.0 {
+            a.push(row.clone());
+            b.push(*rhs);
+        } else {
+            a.push(row.iter().map(|v| -v).collect());
+            b.push(-*rhs);
+        }
+        kinds.push(RowKind::Eq);
+    }
+
+    // Count artificials: UbNeg and Eq rows need one each.
+    let mut n_art = 0usize;
+    for k in &kinds {
+        match k {
+            RowKind::UbPos(_) => {}
+            _ => n_art += 1,
+        }
+    }
+
+    let total = n + n_slack + n_art;
+    // Build tableau: rows x (total + 1).
+    let mut t = vec![vec![0.0; total + 1]; rows];
+    let mut basis = vec![0usize; rows];
+    let mut art_i = 0usize;
+    for (i, kind) in kinds.iter().enumerate() {
+        t[i][..n].copy_from_slice(&a[i]);
+        t[i][total] = b[i];
+        match kind {
+            RowKind::UbPos(s) => {
+                t[i][n + s] = 1.0;
+                basis[i] = n + s;
+            }
+            RowKind::UbNeg(s) => {
+                t[i][n + s] = -1.0; // surplus
+                t[i][n + n_slack + art_i] = 1.0;
+                basis[i] = n + n_slack + art_i;
+                art_i += 1;
+            }
+            RowKind::Eq => {
+                t[i][n + n_slack + art_i] = 1.0;
+                basis[i] = n + n_slack + art_i;
+                art_i += 1;
+            }
+        }
+    }
+
+    // Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        let mut obj = vec![0.0; total + 1];
+        for j in n + n_slack..total {
+            obj[j] = 1.0;
+        }
+        // Reduce objective row by basic artificials.
+        for (i, &bv) in basis.iter().enumerate() {
+            if bv >= n + n_slack {
+                for j in 0..=total {
+                    obj[j] -= t[i][j];
+                }
+            }
+        }
+        if !simplex_iterate(&mut t, &mut obj, &mut basis, total) {
+            return LpResult::Unbounded; // cannot happen in phase 1
+        }
+        if -obj[total] > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate case).
+        for i in 0..rows {
+            if basis[i] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut basis, i, j, total);
+                }
+            }
+        }
+    }
+
+    // Phase 2: real objective over structural + slack columns.
+    let mut obj = vec![0.0; total + 1];
+    obj[..n].copy_from_slice(&lp.c);
+    // Zero out artificial columns so they never re-enter.
+    for row in t.iter_mut() {
+        for j in n + n_slack..total {
+            row[j] = 0.0;
+        }
+    }
+    // Reduce by current basis.
+    for (i, &bv) in basis.iter().enumerate() {
+        let coef = obj[bv];
+        if coef.abs() > EPS {
+            for j in 0..=total {
+                obj[j] -= coef * t[i][j];
+            }
+        }
+    }
+    if !simplex_iterate(&mut t, &mut obj, &mut basis, total) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0; n];
+    for (i, &bv) in basis.iter().enumerate() {
+        if bv < n {
+            x[bv] = t[i][total];
+        }
+    }
+    let objective = lp.c.iter().zip(&x).map(|(c, v)| c * v).sum();
+    LpResult::Optimal(LpSolution { x, objective })
+}
+
+/// Run simplex pivots until optimal; false if unbounded.
+fn simplex_iterate(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    total: usize,
+) -> bool {
+    let rows = t.len();
+    for _ in 0..20_000 {
+        // Entering: Bland's rule — first column with negative reduced cost.
+        let Some(enter) = (0..total).find(|&j| obj[j] < -EPS) else {
+            return true; // optimal
+        };
+        // Leaving: min ratio, ties by smallest basis index (Bland).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..rows {
+            if t[i][enter] > EPS {
+                let ratio = t[i][total] / t[i][enter];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(leave) = leave else {
+            return false; // unbounded
+        };
+        pivot_with_obj(t, obj, basis, leave, enter, total);
+    }
+    true // iteration cap: treat as converged (tiny problems never hit this)
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let p = t[row][col];
+    for j in 0..=total {
+        t[row][j] /= p;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=total {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_obj(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    pivot(t, basis, row, col, total);
+    let f = obj[col];
+    if f.abs() > EPS {
+        for j in 0..=total {
+            obj[j] -= f * t[row][j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(r: &LpResult, x: &[f64], obj: f64) {
+        match r {
+            LpResult::Optimal(s) => {
+                assert!((s.objective - obj).abs() < 1e-6, "obj={} want={}", s.objective, obj);
+                for (a, b) in s.x.iter().zip(x) {
+                    assert!((a - b).abs() < 1e-6, "x={:?} want={:?}", s.x, x);
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_min() {
+        // min -x - 2y  s.t. x + y <= 4, x <= 2 => x=2, y=2, obj=-6.
+        let mut lp = Lp::new(2);
+        lp.minimize(vec![-1.0, -2.0]);
+        lp.add_ub(vec![1.0, 1.0], 4.0);
+        lp.add_ub(vec![1.0, 0.0], 2.0);
+        // optimum: y=4? x+y<=4 so (0,4): obj=-8 < (2,2)=-6. x<=2 doesn't
+        // bind for y. So x=0,y=4, obj=-8.
+        assert_opt(&solve(&lp), &[0.0, 4.0], -8.0);
+    }
+
+    #[test]
+    fn with_equality() {
+        // min x + y  s.t. x + y = 3, x <= 1 => x=1? any split has obj 3.
+        let mut lp = Lp::new(2);
+        lp.minimize(vec![1.0, 1.0]);
+        lp.add_eq(vec![1.0, 1.0], 3.0);
+        match solve(&lp) {
+            LpResult::Optimal(s) => {
+                assert!((s.objective - 3.0).abs() < 1e-7);
+                assert!((s.x[0] + s.x[1] - 3.0).abs() < 1e-7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1, x >= 2.
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![1.0]);
+        lp.add_ub(vec![1.0], 1.0);
+        lp.add_lb(vec![1.0], 2.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, no constraints.
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![-1.0]);
+        assert_eq!(solve(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_ok() {
+        // Redundant constraints shouldn't cycle.
+        let mut lp = Lp::new(2);
+        lp.minimize(vec![-1.0, -1.0]);
+        lp.add_ub(vec![1.0, 0.0], 1.0);
+        lp.add_ub(vec![1.0, 0.0], 1.0);
+        lp.add_ub(vec![0.0, 1.0], 1.0);
+        lp.add_ub(vec![1.0, 1.0], 2.0);
+        assert_opt(&solve(&lp), &[1.0, 1.0], -2.0);
+    }
+
+    #[test]
+    fn negative_rhs_ub() {
+        // -x <= -2  (x >= 2), min x => x=2.
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![1.0]);
+        lp.add_ub(vec![-1.0], -2.0);
+        assert_opt(&solve(&lp), &[2.0], 2.0);
+    }
+
+    #[test]
+    fn lb_helper() {
+        // min x + y s.t. x + 2y >= 4, y <= 1 => y=1, x=2, obj=3.
+        let mut lp = Lp::new(2);
+        lp.minimize(vec![1.0, 1.0]);
+        lp.add_lb(vec![1.0, 2.0], 4.0);
+        lp.add_ub(vec![0.0, 1.0], 1.0);
+        assert_opt(&solve(&lp), &[2.0, 1.0], 3.0);
+    }
+
+    #[test]
+    fn transport_like_problem() {
+        // Classic 2x2 transport: supplies [3,2], demands [2,3],
+        // costs [[1,4],[2,1]]. Optimal: x00=2, x01=1, x11=2 => 2+4+2=8.
+        let mut lp = Lp::new(4); // x00 x01 x10 x11
+        lp.minimize(vec![1.0, 4.0, 2.0, 1.0]);
+        lp.add_eq(vec![1.0, 1.0, 0.0, 0.0], 3.0);
+        lp.add_eq(vec![0.0, 0.0, 1.0, 1.0], 2.0);
+        lp.add_eq(vec![1.0, 0.0, 1.0, 0.0], 2.0);
+        lp.add_eq(vec![0.0, 1.0, 0.0, 1.0], 3.0);
+        match solve(&lp) {
+            LpResult::Optimal(s) => assert!((s.objective - 8.0).abs() < 1e-6),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fractional_lp_relaxation() {
+        // min -x s.t. 2x <= 1 => x=0.5 (fractional, MILP will branch).
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![-1.0]);
+        lp.add_ub(vec![2.0], 1.0);
+        assert_opt(&solve(&lp), &[0.5], -0.5);
+    }
+}

@@ -1,0 +1,202 @@
+//! Branch & bound MILP on top of the simplex relaxation.
+//!
+//! §3.1.2: "In most systems, x_ij ∈ {0,1}" — assignments are integral in
+//! practice. We branch on the most-fractional integer variable, prune by
+//! incumbent bound, and solve each node's LP with [`super::lp`].
+
+use super::lp::{solve, Lp, LpResult, LpSolution};
+
+/// MILP = LP + a set of variables constrained to be integral (0/1 here;
+/// general integrality is supported by the same branching).
+#[derive(Debug, Clone)]
+pub struct Milp {
+    pub lp: Lp,
+    /// Indices of variables required integral.
+    pub integers: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MilpResult {
+    Optimal(LpSolution),
+    Infeasible,
+    Unbounded,
+}
+
+const INT_EPS: f64 = 1e-6;
+
+/// Solve by best-incumbent DFS branch & bound.
+pub fn solve_milp(p: &Milp) -> MilpResult {
+    let mut best: Option<LpSolution> = None;
+    let mut stack: Vec<Lp> = vec![p.lp.clone()];
+    let mut nodes = 0usize;
+
+    while let Some(node) = stack.pop() {
+        nodes += 1;
+        if nodes > 100_000 {
+            break; // safety valve; problems here are tiny
+        }
+        let rel = match solve(&node) {
+            LpResult::Optimal(s) => s,
+            LpResult::Infeasible => continue,
+            LpResult::Unbounded => return MilpResult::Unbounded,
+        };
+        // Prune by bound.
+        if let Some(ref b) = best {
+            if rel.objective >= b.objective - 1e-9 {
+                continue;
+            }
+        }
+        // Most-fractional branching variable.
+        let frac = p
+            .integers
+            .iter()
+            .map(|&i| (i, (rel.x[i] - rel.x[i].round()).abs()))
+            .filter(|(_, f)| *f > INT_EPS)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+        match frac {
+            None => {
+                // Integral: new incumbent.
+                if best
+                    .as_ref()
+                    .map(|b| rel.objective < b.objective - 1e-12)
+                    .unwrap_or(true)
+                {
+                    best = Some(rel);
+                }
+            }
+            Some((i, _)) => {
+                let floor = rel.x[i].floor();
+                // x_i <= floor branch.
+                let mut lo = node.clone();
+                let mut row = vec![0.0; lo.n];
+                row[i] = 1.0;
+                lo.add_ub(row.clone(), floor);
+                // x_i >= floor + 1 branch.
+                let mut hi = node;
+                hi.add_lb(row, floor + 1.0);
+                stack.push(lo);
+                stack.push(hi);
+            }
+        }
+    }
+
+    match best {
+        Some(s) => MilpResult::Optimal(s),
+        None => MilpResult::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_binary() {
+        // max 10a + 6b + 4c s.t. a+b+c <= 2, binary.
+        // (min negated) => pick a, b => -16.
+        let mut lp = Lp::new(3);
+        lp.minimize(vec![-10.0, -6.0, -4.0]);
+        lp.add_ub(vec![1.0, 1.0, 1.0], 2.0);
+        for i in 0..3 {
+            let mut row = vec![0.0; 3];
+            row[i] = 1.0;
+            lp.add_ub(row, 1.0);
+        }
+        let r = solve_milp(&Milp {
+            lp,
+            integers: vec![0, 1, 2],
+        });
+        match r {
+            MilpResult::Optimal(s) => {
+                assert!((s.objective + 16.0).abs() < 1e-6);
+                assert!((s.x[0] - 1.0).abs() < 1e-6);
+                assert!((s.x[1] - 1.0).abs() < 1e-6);
+                assert!(s.x[2].abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lp_fractional_milp_integral() {
+        // min -x s.t. 2x <= 3, x <= 1... LP gives x=1 (bounded by x<=1),
+        // use 2x <= 1 => LP x=0.5, MILP x=0.
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![-1.0]);
+        lp.add_ub(vec![2.0], 1.0);
+        let r = solve_milp(&Milp {
+            lp,
+            integers: vec![0],
+        });
+        match r {
+            MilpResult::Optimal(s) => {
+                assert!(s.x[0].abs() < 1e-6);
+                assert!(s.objective.abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_integrality() {
+        // 0.4 <= x <= 0.6, x integer => infeasible.
+        let mut lp = Lp::new(1);
+        lp.minimize(vec![1.0]);
+        lp.add_ub(vec![1.0], 0.6);
+        lp.add_lb(vec![1.0], 0.4);
+        assert_eq!(
+            solve_milp(&Milp {
+                lp,
+                integers: vec![0]
+            }),
+            MilpResult::Infeasible
+        );
+    }
+
+    #[test]
+    fn assignment_one_hot() {
+        // Two tasks, two devices; costs [[1, 3], [4, 1]];
+        // each task exactly one device => diag assignment, cost 2.
+        // Vars: x00 x01 x10 x11.
+        let mut lp = Lp::new(4);
+        lp.minimize(vec![1.0, 3.0, 4.0, 1.0]);
+        lp.add_eq(vec![1.0, 1.0, 0.0, 0.0], 1.0);
+        lp.add_eq(vec![0.0, 0.0, 1.0, 1.0], 1.0);
+        let r = solve_milp(&Milp {
+            lp,
+            integers: vec![0, 1, 2, 3],
+        });
+        match r {
+            MilpResult::Optimal(s) => {
+                assert!((s.objective - 2.0).abs() < 1e-6);
+                assert!((s.x[0] - 1.0).abs() < 1e-6);
+                assert!((s.x[3] - 1.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_capacity_coupling() {
+        // Both tasks prefer device 0 but its capacity fits only one.
+        // costs [[1,2],[1,2]], capacity row: x00 + x10 <= 1.
+        let mut lp = Lp::new(4);
+        lp.minimize(vec![1.0, 2.0, 1.0, 2.0]);
+        lp.add_eq(vec![1.0, 1.0, 0.0, 0.0], 1.0);
+        lp.add_eq(vec![0.0, 0.0, 1.0, 1.0], 1.0);
+        lp.add_ub(vec![1.0, 0.0, 1.0, 0.0], 1.0);
+        let r = solve_milp(&Milp {
+            lp,
+            integers: vec![0, 1, 2, 3],
+        });
+        match r {
+            MilpResult::Optimal(s) => {
+                assert!((s.objective - 3.0).abs() < 1e-6);
+                // Exactly one of the two tasks lands on device 0.
+                assert!((s.x[0] + s.x[2] - 1.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

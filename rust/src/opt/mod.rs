@@ -1,0 +1,18 @@
+//! Cost-aware optimization framework (paper §3.1).
+//!
+//! * [`lp`] — dense two-phase simplex solver (the offline registry has
+//!   no LP crate; problem sizes are |V|·|H| + |V| slack variables, tiny);
+//! * [`milp`] — branch & bound over the LP relaxation for integral
+//!   assignments `x_ij ∈ {0,1}`;
+//! * [`assignment`] — builds the §3.1.2 objective/constraints from an
+//!   annotated task graph and solves it (exact for edge-dependent
+//!   transfer terms, LP/MILP for the linear part);
+//! * [`parallelism`] — the §5 explorer: TP/PP/batch search per device
+//!   pair under SLA, producing the Figure 8/9 TCO series;
+//! * [`pareto`] — Pareto-frontier utilities for multi-objective reports.
+
+pub mod assignment;
+pub mod lp;
+pub mod milp;
+pub mod parallelism;
+pub mod pareto;

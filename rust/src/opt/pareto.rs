@@ -1,0 +1,117 @@
+//! Pareto-frontier utilities (§3.1: "this is often a multi-objective
+//! problem, where Pareto-optimal solutions must balance tradeoffs
+//! between cost, latency, energy, or other constraints").
+
+/// A candidate point: both axes are minimized (e.g. cost, latency).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point<T> {
+    pub cost: f64,
+    pub latency: f64,
+    pub tag: T,
+}
+
+/// True iff `a` dominates `b` (no worse on both axes, better on one).
+pub fn dominates<T>(a: &Point<T>, b: &Point<T>) -> bool {
+    a.cost <= b.cost
+        && a.latency <= b.latency
+        && (a.cost < b.cost || a.latency < b.latency)
+}
+
+/// Extract the Pareto frontier, sorted by ascending cost.
+pub fn frontier<T: Clone>(points: &[Point<T>]) -> Vec<Point<T>> {
+    let mut sorted: Vec<Point<T>> = points.to_vec();
+    // Sort by cost asc, then latency asc; sweep keeping decreasing latency.
+    sorted.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(a.latency.partial_cmp(&b.latency).unwrap())
+    });
+    let mut out: Vec<Point<T>> = Vec::new();
+    let mut best_latency = f64::INFINITY;
+    for p in sorted {
+        if p.latency < best_latency {
+            best_latency = p.latency;
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// The cheapest point meeting a latency bound, if any.
+pub fn cheapest_within<T: Clone>(points: &[Point<T>], latency_bound: f64) -> Option<Point<T>> {
+    points
+        .iter()
+        .filter(|p| p.latency <= latency_bound)
+        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn pt(cost: f64, latency: f64) -> Point<u32> {
+        Point {
+            cost,
+            latency,
+            tag: 0,
+        }
+    }
+
+    #[test]
+    fn domination_rules() {
+        assert!(dominates(&pt(1.0, 1.0), &pt(2.0, 2.0)));
+        assert!(dominates(&pt(1.0, 2.0), &pt(1.0, 3.0)));
+        assert!(!dominates(&pt(1.0, 1.0), &pt(1.0, 1.0))); // equal: no
+        assert!(!dominates(&pt(1.0, 3.0), &pt(2.0, 2.0))); // trade-off
+    }
+
+    #[test]
+    fn frontier_removes_dominated() {
+        let pts = vec![pt(1.0, 5.0), pt(2.0, 3.0), pt(3.0, 4.0), pt(4.0, 1.0)];
+        let f = frontier(&pts);
+        let coords: Vec<(f64, f64)> = f.iter().map(|p| (p.cost, p.latency)).collect();
+        assert_eq!(coords, vec![(1.0, 5.0), (2.0, 3.0), (4.0, 1.0)]);
+    }
+
+    #[test]
+    fn cheapest_within_bound() {
+        let pts = vec![pt(1.0, 5.0), pt(2.0, 3.0), pt(4.0, 1.0)];
+        assert_eq!(cheapest_within(&pts, 3.5).unwrap().cost, 2.0);
+        assert_eq!(cheapest_within(&pts, 10.0).unwrap().cost, 1.0);
+        assert!(cheapest_within(&pts, 0.5).is_none());
+    }
+
+    #[test]
+    fn frontier_property_no_internal_domination() {
+        prop::check("pareto-frontier-antichain", |rng: &mut Rng| {
+            let pts: Vec<Point<u32>> = (0..rng.index(40) + 1)
+                .map(|i| Point {
+                    cost: rng.f64() * 10.0,
+                    latency: rng.f64() * 10.0,
+                    tag: i as u32,
+                })
+                .collect();
+            let f = frontier(&pts);
+            // No frontier point dominates another.
+            for a in &f {
+                for b in &f {
+                    if a.tag != b.tag {
+                        assert!(!dominates(a, b), "frontier not an antichain");
+                    }
+                }
+            }
+            // Every input point is dominated-or-equal by some frontier pt.
+            for p in &pts {
+                assert!(
+                    f.iter().any(|q| dominates(q, p)
+                        || (q.cost == p.cost && q.latency == p.latency)),
+                    "point not covered by frontier"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Utilization-driven autoscaling with hysteresis (§4.1 "Automatically
+//! scales agentic workloads across heterogeneous hardware resources
+//! based on load and utilization").
+
+/// Scaling decision for one pipeline role.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    ScaleUp(u32),
+    ScaleDown(u32),
+    Hold,
+}
+
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Utilization above which we add capacity.
+    pub high_watermark: f64,
+    /// Utilization below which we remove capacity.
+    pub low_watermark: f64,
+    /// Consecutive observations required before acting (hysteresis).
+    pub patience: u32,
+    pub min_pipelines: u32,
+    pub max_pipelines: u32,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            high_watermark: 0.85,
+            low_watermark: 0.30,
+            patience: 3,
+            min_pipelines: 1,
+            max_pipelines: 64,
+        }
+    }
+}
+
+/// Per-role autoscaler.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    pub current: u32,
+    high_streak: u32,
+    low_streak: u32,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig, initial: u32) -> Autoscaler {
+        let current = initial.clamp(cfg.min_pipelines, cfg.max_pipelines);
+        Autoscaler {
+            cfg,
+            current,
+            high_streak: 0,
+            low_streak: 0,
+        }
+    }
+
+    /// Feed one utilization observation; returns the decision taken
+    /// (already applied to `self.current`).
+    pub fn observe(&mut self, utilization: f64) -> ScaleDecision {
+        if utilization >= self.cfg.high_watermark {
+            self.high_streak += 1;
+            self.low_streak = 0;
+        } else if utilization <= self.cfg.low_watermark {
+            self.low_streak += 1;
+            self.high_streak = 0;
+        } else {
+            self.high_streak = 0;
+            self.low_streak = 0;
+        }
+
+        if self.high_streak >= self.cfg.patience && self.current < self.cfg.max_pipelines
+        {
+            self.high_streak = 0;
+            // Scale up proportionally to overload (at least 1).
+            let add = ((self.current as f64 * 0.5).ceil() as u32)
+                .min(self.cfg.max_pipelines - self.current)
+                .max(1);
+            self.current += add;
+            return ScaleDecision::ScaleUp(add);
+        }
+        if self.low_streak >= self.cfg.patience && self.current > self.cfg.min_pipelines
+        {
+            self.low_streak = 0;
+            let remove = ((self.current as f64 * 0.25).floor() as u32)
+                .min(self.current - self.cfg.min_pipelines)
+                .max(1);
+            self.current -= remove;
+            return ScaleDecision::ScaleDown(remove);
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(initial: u32) -> Autoscaler {
+        Autoscaler::new(AutoscalerConfig::default(), initial)
+    }
+
+    #[test]
+    fn scales_up_after_patience() {
+        let mut a = scaler(2);
+        assert_eq!(a.observe(0.95), ScaleDecision::Hold);
+        assert_eq!(a.observe(0.95), ScaleDecision::Hold);
+        assert_eq!(a.observe(0.95), ScaleDecision::ScaleUp(1));
+        assert_eq!(a.current, 3);
+    }
+
+    #[test]
+    fn mid_band_resets_streak() {
+        let mut a = scaler(2);
+        a.observe(0.95);
+        a.observe(0.95);
+        assert_eq!(a.observe(0.5), ScaleDecision::Hold); // streak reset
+        assert_eq!(a.observe(0.95), ScaleDecision::Hold);
+        assert_eq!(a.observe(0.95), ScaleDecision::Hold);
+        assert_eq!(a.observe(0.95), ScaleDecision::ScaleUp(1));
+    }
+
+    #[test]
+    fn scales_down_but_respects_min() {
+        let mut a = scaler(2);
+        for _ in 0..2 {
+            assert_eq!(a.observe(0.1), ScaleDecision::Hold);
+        }
+        assert_eq!(a.observe(0.1), ScaleDecision::ScaleDown(1));
+        assert_eq!(a.current, 1);
+        // At min: never goes below.
+        for _ in 0..10 {
+            assert_ne!(a.observe(0.0), ScaleDecision::ScaleDown(1));
+        }
+        assert_eq!(a.current, 1);
+    }
+
+    #[test]
+    fn respects_max() {
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                max_pipelines: 3,
+                ..Default::default()
+            },
+            3,
+        );
+        for _ in 0..10 {
+            assert_eq!(a.observe(0.99), ScaleDecision::Hold);
+        }
+        assert_eq!(a.current, 3);
+    }
+
+    #[test]
+    fn proportional_growth_on_large_fleets() {
+        let mut a = scaler(8);
+        a.observe(0.9);
+        a.observe(0.9);
+        assert_eq!(a.observe(0.9), ScaleDecision::ScaleUp(4));
+        assert_eq!(a.current, 12);
+    }
+}

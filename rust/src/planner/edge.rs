@@ -1,0 +1,304 @@
+//! Cross-device (cloud ↔ edge) agent planning — paper §7.2.
+//!
+//! "Recent protocols like Minion and MinionS demonstrate practical
+//! benefits of decomposing and parallelizing tasks between local and
+//! cloud language models, significantly reducing costs while preserving
+//! accuracy. Formalizing and generalizing these approaches into
+//! comprehensive optimization frameworks..." — this module is that
+//! formalization at the fidelity of the rest of the cost model: a task
+//! mix of decomposable subtasks, a local (edge) small model priced by
+//! energy, a cloud endpoint priced per token with RTT, and an optimizer
+//! sweeping the local/cloud split subject to a quality floor.
+
+use crate::cost::model_profile::ModelProfile;
+use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency, Parallelism};
+use crate::cost::hardware::DeviceSpec;
+
+/// The edge device running the local small model.
+#[derive(Debug, Clone)]
+pub struct EdgeDevice {
+    pub name: String,
+    /// Treated as a (weak) DeviceSpec for the roofline.
+    pub spec: DeviceSpec,
+    /// Marginal energy cost of compute, $/hr at full tilt.
+    pub energy_usd_hr: f64,
+}
+
+/// A metered cloud endpoint serving the big model.
+#[derive(Debug, Clone)]
+pub struct CloudEndpoint {
+    pub model_name: String,
+    pub usd_per_mtok_in: f64,
+    pub usd_per_mtok_out: f64,
+    /// Round-trip network latency per call, seconds.
+    pub rtt_s: f64,
+}
+
+/// A decomposable agent job (the MinionS shape): `n_subtasks` pieces,
+/// of which `easy_fraction` are solvable by the local model at full
+/// quality; hard pieces need the cloud model.
+#[derive(Debug, Clone)]
+pub struct TaskMix {
+    pub n_subtasks: u32,
+    pub easy_fraction: f64,
+    /// Tokens per subtask.
+    pub isl: u64,
+    pub osl: u64,
+    /// Supervision overhead: cloud tokens spent aggregating local
+    /// results (per local subtask).
+    pub supervision_tokens: u64,
+}
+
+/// Where a fraction of subtasks runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    AllCloud,
+    AllLocal,
+    /// Send this fraction of subtasks to the local model (≤ easy
+    /// fraction to preserve quality), rest + supervision to the cloud.
+    Split { local_fraction: f64 },
+}
+
+/// Evaluated plan.
+#[derive(Debug, Clone)]
+pub struct EdgePlan {
+    pub strategy: Strategy,
+    pub cost_usd: f64,
+    /// Wall time with local subtasks run sequentially on the edge device
+    /// and cloud calls pipelined (one RTT per wave).
+    pub latency_s: f64,
+    /// Fraction of subtasks answered at full quality.
+    pub quality: f64,
+}
+
+/// The cloud-edge optimizer.
+pub struct EdgePlanner {
+    pub edge: EdgeDevice,
+    pub local_model: ModelProfile,
+    pub cloud: CloudEndpoint,
+    pub eff: Efficiency,
+}
+
+impl EdgePlanner {
+    /// Time for the local model to finish one subtask on the edge device.
+    pub fn local_subtask_s(&self, mix: &TaskMix) -> f64 {
+        let par = Parallelism { tp: 1, pp: 1 };
+        let pre = prefill_time(&self.local_model, &self.edge.spec, par, mix.isl, 1, &self.eff)
+            .total();
+        let step = decode_step_time(
+            &self.local_model,
+            &self.edge.spec,
+            par,
+            mix.isl + mix.osl / 2,
+            1,
+            &self.eff,
+        )
+        .total();
+        pre + step * mix.osl as f64
+    }
+
+    /// Cloud cost/latency for one subtask.
+    fn cloud_subtask(&self, isl: u64, osl: u64) -> (f64, f64) {
+        let cost = isl as f64 / 1e6 * self.cloud.usd_per_mtok_in
+            + osl as f64 / 1e6 * self.cloud.usd_per_mtok_out;
+        // Latency: RTT + a serving-side budget (interactive SLA rates).
+        let latency = self.cloud.rtt_s + 0.25 + 0.02 * osl as f64;
+        (cost, latency)
+    }
+
+    /// Evaluate a strategy on a mix.
+    pub fn evaluate(&self, strategy: Strategy, mix: &TaskMix) -> EdgePlan {
+        let n = mix.n_subtasks as f64;
+        match strategy {
+            Strategy::AllCloud => {
+                let (c, l) = self.cloud_subtask(mix.isl, mix.osl);
+                EdgePlan {
+                    strategy,
+                    cost_usd: c * n,
+                    // Cloud calls fan out in parallel: one wave.
+                    latency_s: l,
+                    quality: 1.0,
+                }
+            }
+            Strategy::AllLocal => {
+                let t = self.local_subtask_s(mix) * n;
+                EdgePlan {
+                    strategy,
+                    cost_usd: t / 3600.0 * self.edge.energy_usd_hr,
+                    latency_s: t,
+                    // Hard subtasks degrade when forced local.
+                    quality: mix.easy_fraction,
+                }
+            }
+            Strategy::Split { local_fraction } => {
+                let f = local_fraction.clamp(0.0, 1.0);
+                let n_local = n * f;
+                let n_cloud = n - n_local;
+                let t_local = self.local_subtask_s(mix) * n_local;
+                let cost_local = t_local / 3600.0 * self.edge.energy_usd_hr;
+                let (c_cloud, l_cloud) = self.cloud_subtask(mix.isl, mix.osl);
+                // Supervision: the cloud model reads local results.
+                let (c_sup, l_sup) =
+                    self.cloud_subtask(mix.supervision_tokens * n_local as u64, 64);
+                let quality = if f <= mix.easy_fraction {
+                    1.0
+                } else {
+                    1.0 - (f - mix.easy_fraction)
+                };
+                EdgePlan {
+                    strategy,
+                    cost_usd: cost_local + c_cloud * n_cloud + c_sup,
+                    latency_s: (t_local + l_sup).max(if n_cloud > 0.0 { l_cloud } else { 0.0 }),
+                    quality,
+                }
+            }
+        }
+    }
+
+    /// Sweep local fractions; return the cheapest plan meeting the
+    /// quality floor and latency bound.
+    pub fn best_plan(
+        &self,
+        mix: &TaskMix,
+        quality_floor: f64,
+        latency_bound_s: f64,
+    ) -> Option<EdgePlan> {
+        let mut candidates = vec![
+            self.evaluate(Strategy::AllCloud, mix),
+            self.evaluate(Strategy::AllLocal, mix),
+        ];
+        for k in 1..=20 {
+            let f = k as f64 / 20.0;
+            candidates.push(self.evaluate(Strategy::Split { local_fraction: f }, mix));
+        }
+        candidates
+            .into_iter()
+            .filter(|p| p.quality >= quality_floor && p.latency_s <= latency_bound_s)
+            .min_by(|a, b| a.cost_usd.partial_cmp(&b.cost_usd).unwrap())
+    }
+}
+
+/// A reasonable default edge device: a workstation-class GPU (A40-like
+/// but slower memory + low energy price).
+pub fn default_edge() -> EdgeDevice {
+    let mut spec = crate::cost::hardware::by_name("A40").unwrap();
+    spec.name = "EdgeGPU";
+    EdgeDevice {
+        name: "workstation".into(),
+        spec,
+        energy_usd_hr: 0.12, // 300 W @ $0.40/kWh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::model_profile::{llama3_70b, llama3_8b};
+    use crate::cost::Precision;
+
+    fn planner() -> EdgePlanner {
+        EdgePlanner {
+            edge: default_edge(),
+            local_model: llama3_8b(Precision::Fp8),
+            cloud: CloudEndpoint {
+                model_name: llama3_70b(Precision::Fp8).name.to_string(),
+                usd_per_mtok_in: 0.6,
+                usd_per_mtok_out: 2.4,
+                rtt_s: 0.08,
+            },
+            eff: Efficiency::default(),
+        }
+    }
+
+    fn mix() -> TaskMix {
+        TaskMix {
+            n_subtasks: 20,
+            easy_fraction: 0.7,
+            isl: 2048,
+            osl: 128,
+            supervision_tokens: 128,
+        }
+    }
+
+    #[test]
+    fn split_cuts_cost_vs_all_cloud_at_full_quality() {
+        // The MinionS headline: decompose + run easy pieces locally =>
+        // large cost reduction with no quality loss.
+        let p = planner();
+        let all_cloud = p.evaluate(Strategy::AllCloud, &mix());
+        let best = p.best_plan(&mix(), 1.0, f64::INFINITY).unwrap();
+        assert!(best.quality >= 1.0 - 1e-9);
+        assert!(
+            best.cost_usd < 0.7 * all_cloud.cost_usd,
+            "split ${} should be well under cloud ${}",
+            best.cost_usd,
+            all_cloud.cost_usd
+        );
+        match best.strategy {
+            Strategy::Split { local_fraction } => {
+                assert!(local_fraction > 0.0 && local_fraction <= 0.7 + 1e-9);
+            }
+            Strategy::AllCloud => panic!("expected a split"),
+            Strategy::AllLocal => panic!("all-local can't hit quality 1.0"),
+        }
+    }
+
+    #[test]
+    fn all_local_fails_quality_floor() {
+        let p = planner();
+        let plan = p.evaluate(Strategy::AllLocal, &mix());
+        assert!(plan.quality < 1.0);
+        assert!(plan.cost_usd < p.evaluate(Strategy::AllCloud, &mix()).cost_usd);
+    }
+
+    #[test]
+    fn tight_latency_pushes_back_to_cloud() {
+        // Sequential local execution is slow; a tight latency bound must
+        // shrink the local fraction (or go all-cloud).
+        let p = planner();
+        let loose = p.best_plan(&mix(), 1.0, f64::INFINITY).unwrap();
+        let tight = p.best_plan(&mix(), 1.0, 3.0).unwrap();
+        let frac = |s: &Strategy| match s {
+            Strategy::Split { local_fraction } => *local_fraction,
+            Strategy::AllLocal => 1.0,
+            Strategy::AllCloud => 0.0,
+        };
+        assert!(frac(&tight.strategy) <= frac(&loose.strategy));
+        assert!(tight.latency_s <= 3.0);
+    }
+
+    #[test]
+    fn infeasible_constraints_return_none() {
+        let p = planner();
+        assert!(p.best_plan(&mix(), 1.1, f64::INFINITY).is_none());
+        assert!(p.best_plan(&mix(), 1.0, 1e-6).is_none());
+    }
+
+    #[test]
+    fn quality_degrades_past_easy_fraction() {
+        let p = planner();
+        let q = |f: f64| {
+            p.evaluate(Strategy::Split { local_fraction: f }, &mix()).quality
+        };
+        assert_eq!(q(0.5), 1.0);
+        assert_eq!(q(0.7), 1.0);
+        assert!(q(0.9) < 1.0);
+        assert!(q(1.0) < q(0.9) + 1e-9);
+    }
+
+    #[test]
+    fn cheaper_cloud_shifts_the_split() {
+        // If cloud tokens get 10x cheaper, the optimal local fraction
+        // shouldn't grow.
+        let p = planner();
+        let mut cheap = planner();
+        cheap.cloud.usd_per_mtok_in /= 10.0;
+        cheap.cloud.usd_per_mtok_out /= 10.0;
+        let f = |pl: &EdgePlanner| match pl.best_plan(&mix(), 1.0, f64::INFINITY).unwrap().strategy {
+            Strategy::Split { local_fraction } => local_fraction,
+            Strategy::AllCloud => 0.0,
+            Strategy::AllLocal => 1.0,
+        };
+        assert!(f(&cheap) <= f(&p) + 1e-9);
+    }
+}

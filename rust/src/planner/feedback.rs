@@ -1,0 +1,131 @@
+//! Runtime cost feedback (Figure 6's "runtime resource feedback" edge):
+//! observed latencies refine the planner's profiled t_ij estimates via
+//! exponentially-weighted moving averages, keyed by (op, class).
+
+use std::collections::BTreeMap;
+
+/// EWMA latency profile store.
+#[derive(Debug)]
+pub struct ProfileStore {
+    alpha: f64,
+    entries: BTreeMap<(String, String), ProfileEntry>,
+}
+
+#[derive(Debug, Clone)]
+struct ProfileEntry {
+    ewma_s: f64,
+    samples: u64,
+}
+
+impl ProfileStore {
+    /// `alpha` = weight of each new observation (0 < alpha <= 1).
+    pub fn new(alpha: f64) -> ProfileStore {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        ProfileStore {
+            alpha,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Record an observed latency for (op, hardware class).
+    pub fn observe(&mut self, op: &str, class: &str, latency_s: f64) {
+        let key = (op.to_string(), class.to_string());
+        match self.entries.get_mut(&key) {
+            None => {
+                self.entries.insert(
+                    key,
+                    ProfileEntry {
+                        ewma_s: latency_s,
+                        samples: 1,
+                    },
+                );
+            }
+            Some(e) => {
+                e.ewma_s = self.alpha * latency_s + (1.0 - self.alpha) * e.ewma_s;
+                e.samples += 1;
+            }
+        }
+    }
+
+    /// Current estimate, falling back to `default_s` when unobserved.
+    pub fn estimate(&self, op: &str, class: &str, default_s: f64) -> f64 {
+        self.entries
+            .get(&(op.to_string(), class.to_string()))
+            .map(|e| e.ewma_s)
+            .unwrap_or(default_s)
+    }
+
+    pub fn samples(&self, op: &str, class: &str) -> u64 {
+        self.entries
+            .get(&(op.to_string(), class.to_string()))
+            .map(|e| e.samples)
+            .unwrap_or(0)
+    }
+
+    /// Ops whose observed latency deviates from `expected` by more than
+    /// `ratio` — candidates for replanning.
+    pub fn drifted(
+        &self,
+        expected: &BTreeMap<(String, String), f64>,
+        ratio: f64,
+    ) -> Vec<(String, String, f64, f64)> {
+        let mut out = Vec::new();
+        for ((op, class), e) in &self.entries {
+            if let Some(&exp) = expected.get(&(op.clone(), class.clone())) {
+                if exp > 0.0 && (e.ewma_s / exp > ratio || exp / e.ewma_s > ratio) {
+                    out.push((op.clone(), class.clone(), exp, e.ewma_s));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds() {
+        let mut p = ProfileStore::new(0.2);
+        p.observe("llm.prefill", "H100", 0.05);
+        assert_eq!(p.estimate("llm.prefill", "H100", 9.9), 0.05);
+        assert_eq!(p.samples("llm.prefill", "H100"), 1);
+    }
+
+    #[test]
+    fn ewma_converges_toward_new_level() {
+        let mut p = ProfileStore::new(0.3);
+        p.observe("op", "X", 0.1);
+        for _ in 0..50 {
+            p.observe("op", "X", 0.2);
+        }
+        let est = p.estimate("op", "X", 0.0);
+        assert!((est - 0.2).abs() < 1e-3, "est={est}");
+    }
+
+    #[test]
+    fn default_when_unobserved() {
+        let p = ProfileStore::new(0.5);
+        assert_eq!(p.estimate("nope", "X", 1.23), 1.23);
+    }
+
+    #[test]
+    fn drift_detection() {
+        let mut p = ProfileStore::new(1.0);
+        p.observe("llm.decode", "A40", 0.5);
+        p.observe("gp.compute", "CPU", 0.005);
+        let mut expected = BTreeMap::new();
+        expected.insert(("llm.decode".to_string(), "A40".to_string()), 0.1);
+        expected.insert(("gp.compute".to_string(), "CPU".to_string()), 0.005);
+        let drifted = p.drifted(&expected, 2.0);
+        assert_eq!(drifted.len(), 1);
+        assert_eq!(drifted[0].0, "llm.decode");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_alpha_panics() {
+        let _ = ProfileStore::new(0.0);
+    }
+}

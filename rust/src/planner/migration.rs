@@ -1,0 +1,152 @@
+//! Migration planning: when the optimizer's placement moves, produce a
+//! safe drain → transfer → activate step sequence (§4.1 "workload
+//! migration"). Steps are ordered so capacity never goes negative:
+//! activations precede the drains they replace.
+
+/// One migration action.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MigrationStep {
+    /// Bring up a pipeline of `count` devices of `device` for `role`.
+    Activate {
+        device: String,
+        role: String,
+        count: u32,
+    },
+    /// Move a session's KV bytes between nodes.
+    TransferKv { bytes: f64, from: String, to: String },
+    /// Stop routing to, then tear down, a pipeline.
+    Drain {
+        device: String,
+        role: String,
+        count: u32,
+    },
+}
+
+/// A role's worth of capacity (device name → pipeline count).
+pub type RoleMap = std::collections::BTreeMap<(String, String), u32>;
+
+/// A full migration plan with a cost estimate.
+#[derive(Debug, Clone)]
+pub struct MigrationPlan {
+    pub steps: Vec<MigrationStep>,
+    /// KV bytes that must move.
+    pub kv_bytes: f64,
+    /// Estimated wall time to complete, seconds.
+    pub est_duration_s: f64,
+}
+
+/// Diff two fleet layouts into an ordered step list.
+///
+/// `kv_per_drained_pipeline` prices the state that must leave each
+/// drained decode pipeline (prefill pipelines are stateless).
+pub fn plan_migration(
+    current: &RoleMap,
+    target: &RoleMap,
+    kv_per_drained_pipeline: f64,
+    link_bytes_per_s: f64,
+) -> MigrationPlan {
+    let mut steps = Vec::new();
+    let mut kv_bytes = 0.0;
+
+    // 1. Activations first (make-before-break).
+    for ((device, role), want) in target {
+        let have = current.get(&(device.clone(), role.clone())).copied().unwrap_or(0);
+        if *want > have {
+            steps.push(MigrationStep::Activate {
+                device: device.clone(),
+                role: role.clone(),
+                count: want - have,
+            });
+        }
+    }
+    // 2. KV transfers out of shrinking decode pipelines.
+    for ((device, role), have) in current {
+        let want = target.get(&(device.clone(), role.clone())).copied().unwrap_or(0);
+        if *have > want && role == "decode" {
+            let moved = (have - want) as f64 * kv_per_drained_pipeline;
+            kv_bytes += moved;
+            steps.push(MigrationStep::TransferKv {
+                bytes: moved,
+                from: device.clone(),
+                to: "fleet".into(),
+            });
+        }
+    }
+    // 3. Drains last.
+    for ((device, role), have) in current {
+        let want = target.get(&(device.clone(), role.clone())).copied().unwrap_or(0);
+        if *have > want {
+            steps.push(MigrationStep::Drain {
+                device: device.clone(),
+                role: role.clone(),
+                count: have - want,
+            });
+        }
+    }
+
+    MigrationPlan {
+        steps,
+        kv_bytes,
+        est_duration_s: kv_bytes / link_bytes_per_s + 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn role_map(entries: &[(&str, &str, u32)]) -> RoleMap {
+        entries
+            .iter()
+            .map(|(d, r, n)| ((d.to_string(), r.to_string()), *n))
+            .collect()
+    }
+
+    #[test]
+    fn activation_before_drain() {
+        let cur = role_map(&[("H100", "decode", 2)]);
+        let tgt = role_map(&[("Gaudi3", "decode", 2)]);
+        let plan = plan_migration(&cur, &tgt, 1e9, 50e9);
+        let first_activate = plan
+            .steps
+            .iter()
+            .position(|s| matches!(s, MigrationStep::Activate { .. }))
+            .unwrap();
+        let first_drain = plan
+            .steps
+            .iter()
+            .position(|s| matches!(s, MigrationStep::Drain { .. }))
+            .unwrap();
+        assert!(first_activate < first_drain);
+        assert_eq!(plan.kv_bytes, 2e9);
+        assert!(plan.est_duration_s > 1.0);
+    }
+
+    #[test]
+    fn no_change_no_steps() {
+        let cur = role_map(&[("H100", "prefill", 1), ("Gaudi3", "decode", 2)]);
+        let plan = plan_migration(&cur, &cur, 1e9, 50e9);
+        assert!(plan.steps.is_empty());
+        assert_eq!(plan.kv_bytes, 0.0);
+    }
+
+    #[test]
+    fn partial_shrink_moves_partial_kv() {
+        let cur = role_map(&[("Gaudi3", "decode", 4)]);
+        let tgt = role_map(&[("Gaudi3", "decode", 3)]);
+        let plan = plan_migration(&cur, &tgt, 5e8, 50e9);
+        assert_eq!(plan.kv_bytes, 5e8);
+        assert!(plan
+            .steps
+            .iter()
+            .any(|s| matches!(s, MigrationStep::Drain { count: 1, .. })));
+    }
+
+    #[test]
+    fn prefill_drain_moves_no_kv() {
+        let cur = role_map(&[("H100", "prefill", 2)]);
+        let tgt = role_map(&[("H100", "prefill", 1)]);
+        let plan = plan_migration(&cur, &tgt, 1e9, 50e9);
+        assert_eq!(plan.kv_bytes, 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Slow-path planner & scheduler (paper §4.1).
+//!
+//! "Continuously monitors hardware resources and workloads, dynamically
+//! allocating tasks based on the optimization strategies outlined in
+//! Section 3.1. This component handles workload migration, resource
+//! allocation, and planning."
+//!
+//! * [`plan`] — graph planning: run the IR pipeline, extract θ vectors,
+//!   build the §3.1.2 assignment problem over the device catalog (plus
+//!   a CPU class), and solve it;
+//! * [`migration`] — drain/transfer/activate step generation when the
+//!   optimum moves;
+//! * [`autoscale`] — utilization-driven pipeline scaling with
+//!   hysteresis;
+//! * [`feedback`] — EWMA profile updates from observed latencies
+//!   (Figure 6's "runtime resource feedback" arrow).
+
+pub mod autoscale;
+pub mod edge;
+pub mod feedback;
+pub mod migration;
+pub mod plan;
+
+pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use feedback::ProfileStore;
+pub use migration::{MigrationPlan, MigrationStep};
+pub use plan::{GraphPlan, Planner, PlannerConfig};

@@ -1,0 +1,497 @@
+//! Paper-artifact regeneration: every table and figure of the
+//! evaluation, as printable text + machine-readable JSON. Used by the
+//! `agentic-hetero repro` CLI and by `benches/*` (which time the
+//! underlying computations and print the same rows).
+
+use crate::cost::hardware::cost_efficiency;
+use crate::cost::model_profile::{by_short_name, table4, ModelProfile};
+use crate::cost::network::{bandwidth_requirement, bps_to_gbit};
+use crate::cost::tco::{table5, FinanceTerms};
+use crate::cost::workload::WorkloadClass;
+use crate::cost::{Precision, Resource};
+use crate::ir::passes::PassManager;
+use crate::ir::printer;
+use crate::opt::assignment::worked_example;
+use crate::opt::parallelism::{paper_pairs, tco_series, ExploreOpts, SeqShape, TcoBar};
+use crate::util::json::Json;
+
+/// A regenerated artifact: human text + JSON series.
+pub struct Artifact {
+    pub id: &'static str,
+    pub title: String,
+    pub text: String,
+    pub json: Json,
+}
+
+/// Figure 4: marginal cost-efficiency of the accelerator catalog.
+pub fn fig4() -> Artifact {
+    let rows = cost_efficiency();
+    let mut text = String::new();
+    text.push_str(&format!(
+        "{:<8} {:<8} {:>12} {:>16} {:>15} {:>10}\n",
+        "Device", "Vendor", "$/(GB/s)", "$/TFLOP(FP16)", "$/TFLOP(FP8)", "$/GB"
+    ));
+    let mut arr = Json::Arr(vec![]);
+    for r in &rows {
+        text.push_str(&format!(
+            "{:<8} {:<8} {:>12.2} {:>16.2} {:>15.2} {:>10.2}\n",
+            r.device,
+            r.vendor,
+            r.usd_per_gbps,
+            r.usd_per_tflop_fp16,
+            r.usd_per_tflop_fp8,
+            r.usd_per_gb
+        ));
+        arr.push(
+            Json::obj()
+                .set("device", r.device)
+                .set("vendor", r.vendor)
+                .set("usd_per_gbps", r.usd_per_gbps)
+                .set("usd_per_tflop_fp16", r.usd_per_tflop_fp16)
+                .set("usd_per_tflop_fp8", r.usd_per_tflop_fp8)
+                .set("usd_per_gb", r.usd_per_gb),
+        );
+    }
+    text.push_str(
+        "\nPaper shape: (a) Gaudi3/MI300x best $/GBps; (b) H100/Gaudi3/MI300x \
+         strong FP16; (c) B200 leads FP8; (d) A40 leads $/GB, MI300x best of \
+         the large-memory parts.\n",
+    );
+    Artifact {
+        id: "fig4",
+        title: "Figure 4: marginal cost-efficiency of AI accelerators".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Figure 3 / Table 2: workload radar profiles.
+pub fn fig3() -> Artifact {
+    let mut text = format!(
+        "{:<34} {:>7} {:>5} {:>5} {:>5} {:>6} {:>6}  {}\n",
+        "Workload", "MemCap", "Disk", "GP", "HP", "MemBW", "NetBW", "dominant"
+    );
+    let mut arr = Json::Arr(vec![]);
+    for w in WorkloadClass::ALL {
+        let r = w.radar();
+        text.push_str(&format!(
+            "{:<34} {:>7.0} {:>5.0} {:>5.0} {:>5.0} {:>6.0} {:>6.0}  {}\n",
+            w.name(),
+            r.mem_capacity,
+            r.disk_capacity,
+            r.gp_compute,
+            r.hp_compute,
+            r.mem_bandwidth,
+            r.net_bandwidth,
+            w.dominant().name()
+        ));
+        let mut o = Json::obj().set("workload", w.name()).set(
+            "wants_accelerator",
+            w.wants_accelerator(),
+        );
+        for res in Resource::ALL {
+            o = o.set(res.name(), r.get(res));
+        }
+        arr.push(o);
+    }
+    Artifact {
+        id: "fig3",
+        title: "Figure 3 / Table 2: workload resource-demand radar profiles".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Table 1: the agent task taxonomy as implemented by the IR dialects.
+pub fn table1() -> Artifact {
+    let mut text = format!("{:<22} {:<10} {:<8} {}\n", "Op", "Results", "Pure", "Workload class");
+    let mut arr = Json::Arr(vec![]);
+    for op in crate::ir::ops::REGISTRY {
+        text.push_str(&format!(
+            "{:<22} {:<10} {:<8} {}\n",
+            op.name,
+            op.results,
+            op.pure_op,
+            op.workload.map(|w| w.name()).unwrap_or("-")
+        ));
+        arr.push(
+            Json::obj()
+                .set("op", op.name)
+                .set("results", op.results)
+                .set("pure", op.pure_op)
+                .set(
+                    "workload",
+                    op.workload.map(|w| w.name()).unwrap_or("-"),
+                ),
+        );
+    }
+    Artifact {
+        id: "table1",
+        title: "Table 1: agent task types (IR dialect registry)".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Table 3 + §3.1.2 worked example.
+pub fn table3() -> Artifact {
+    let p = worked_example();
+    let mut text = String::new();
+    let options = [("A (all HP)", vec![0, 0]), ("B (HP::CO)", vec![0, 1]), ("C (all CO)", vec![1, 1])];
+    let mut arr = Json::Arr(vec![]);
+    for (name, choice) in &options {
+        let (cost, lat) = p.evaluate(choice);
+        let feasible = lat <= 0.120 + 1e-12;
+        text.push_str(&format!(
+            "Option {name:<12} t = {:>3.0} ms   cost = ${cost:.3}   {}\n",
+            lat * 1e3,
+            if feasible { "SLA satisfied" } else { "SLA violated" }
+        ));
+        arr.push(
+            Json::obj()
+                .set("option", *name)
+                .set("latency_ms", lat * 1e3)
+                .set("cost_usd", cost)
+                .set("feasible", feasible),
+        );
+    }
+    let best = p.solve_exact().expect("worked example is feasible");
+    text.push_str(&format!(
+        "\nOptimizer selects: {} (cost ${:.3}, {:.0} ms) — the paper's Option B.\n\
+         (Paper prints $0.07 for Option C; its stated rates give $0.06 — \
+         arithmetic slip, argmin unchanged.)\n",
+        best.describe(&p),
+        best.cost_usd,
+        best.latency_s * 1e3
+    ));
+    Artifact {
+        id: "table3",
+        title: "Table 3 / §3.1.2 worked example: prefill/decode under SLA".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Table 4: evaluated model configurations.
+pub fn table4_art() -> Artifact {
+    let mut text = format!(
+        "{:<24} {:>8} {:>10} {:>8} {:>8} {:>9} {:>14}\n",
+        "Model", "Params", "Precision", "Layers", "d_model", "KV B/tok", "Weights (GB)"
+    );
+    let mut arr = Json::Arr(vec![]);
+    for m in table4() {
+        text.push_str(&format!(
+            "{:<24} {:>7}B {:>10} {:>8} {:>8} {:>9.0} {:>14.1}\n",
+            m.name,
+            m.params_b,
+            m.precision.name(),
+            m.n_layers,
+            m.d_model,
+            m.kv_bytes_per_token(),
+            m.param_bytes() / 1e9
+        ));
+        arr.push(
+            Json::obj()
+                .set("model", m.name)
+                .set("params_b", m.params_b)
+                .set("precision", m.precision.name())
+                .set("kv_bytes_per_token", m.kv_bytes_per_token()),
+        );
+    }
+    Artifact {
+        id: "table4",
+        title: "Table 4: model configurations".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Table 5: device specs + operating cost (listed vs derived).
+pub fn table5_art() -> Artifact {
+    let terms = FinanceTerms::default();
+    let rows = table5(&terms);
+    let mut text = format!(
+        "{:<8} {:>9} {:>8} {:>9} {:>8} {:>11} {:>12} {:>12} {:>12}\n",
+        "Device", "Cost($)", "Mem(GB)", "BW(GB/s)", "TFLOPs", "Paper $/hr", "Capex $/hr", "Energy $/hr", "Derived $/hr"
+    );
+    let mut arr = Json::Arr(vec![]);
+    for r in &rows {
+        text.push_str(&format!(
+            "{:<8} {:>9.0} {:>8.0} {:>9.0} {:>8.0} {:>11.2} {:>12.3} {:>12.3} {:>12.3}\n",
+            r.device,
+            r.price_usd,
+            r.mem_gb,
+            r.bw_gbps,
+            r.tflops_fp16,
+            r.paper_opex,
+            r.derived_capex_hr,
+            r.derived_energy_hr,
+            r.derived_opex
+        ));
+        arr.push(
+            Json::obj()
+                .set("device", r.device)
+                .set("price_usd", r.price_usd)
+                .set("paper_opex_hr", r.paper_opex)
+                .set("derived_opex_hr", r.derived_opex),
+        );
+    }
+    text.push_str(
+        "\nNote: the stated formula (4-yr amortization @ 8% + max-TDP energy @ \
+         $0.40/kWh) yields more than the listed column for high-end parts; \
+         both are carried (see EXPERIMENTS.md).\n",
+    );
+    Artifact {
+        id: "table5",
+        title: "Table 5: accelerator specifications & operating cost".into(),
+        text,
+        json: arr,
+    }
+}
+
+fn tco_text(bars: &[TcoBar], models: &[ModelProfile]) -> (String, Json) {
+    let mut text = String::new();
+    let mut arr = Json::Arr(vec![]);
+    for m in models {
+        for sla in ["Latency SLA", "Throughput SLA"] {
+            text.push_str(&format!("\n{} — {}\n", m.name, sla));
+            for b in bars.iter().filter(|b| b.model == m.name && b.sla == sla) {
+                let nstars = (b.tco_benefit * 20.0).round() as usize;
+                text.push_str(&format!(
+                    "  {:<16} {:>5.2}x  {}  [p {} tp{} pp{} b{} | d {} tp{} pp{} b{} | ttft {:.0}ms tbt {:.1}ms]\n",
+                    b.pair,
+                    b.tco_benefit,
+                    "#".repeat(nstars.min(80)),
+                    b.config.prefill.device,
+                    b.config.prefill.par.tp,
+                    b.config.prefill.par.pp,
+                    b.config.prefill.batch,
+                    b.config.decode.device,
+                    b.config.decode.par.tp,
+                    b.config.decode.par.pp,
+                    b.config.decode.batch,
+                    b.config.ttft_s * 1e3,
+                    b.config.tbt_s * 1e3,
+                ));
+                arr.push(
+                    Json::obj()
+                        .set("model", b.model.clone())
+                        .set("sla", b.sla)
+                        .set("pair", b.pair.clone())
+                        .set("tco_benefit", b.tco_benefit)
+                        .set("usd_per_mtok", b.config.usd_per_mtok)
+                        .set("ttft_ms", b.config.ttft_s * 1e3)
+                        .set("tbt_ms", b.config.tbt_s * 1e3),
+                );
+            }
+        }
+    }
+    (text, arr)
+}
+
+/// Figures 8/9: TCO benefit bars for heterogeneous configs.
+pub fn fig_tco(shape: SeqShape, id: &'static str) -> Artifact {
+    let models = table4();
+    let opts = ExploreOpts::default();
+    let bars = tco_series(&models, &paper_pairs(), shape, &opts);
+    let (mut text, json) = tco_text(&bars, &models);
+    text.push_str(
+        "\nDashed baseline 1.0 = H100::H100. Paper shape: B200::Gaudi3 best \
+         overall (esp. FP8); H100::Gaudi3 comparable-or-better than B200::B200.\n",
+    );
+    Artifact {
+        id,
+        title: format!(
+            "TCO benefit for heterogeneous configs (input={}, output={})",
+            shape.isl, shape.osl
+        ),
+        text,
+        json,
+    }
+}
+
+/// Eqs. 1–3: KV sizing and interconnect feasibility up to 32K ISL.
+pub fn bandwidth() -> Artifact {
+    let mut text = format!(
+        "{:<24} {:>8} {:>12} {:>16} {:>16}\n",
+        "Model", "ISL", "KV (GB)", "Egress (Gbit/s)", "Ingress (Gbit/s)"
+    );
+    let mut arr = Json::Arr(vec![]);
+    // Interactive SLA targets; TTFT grows with ISL (superlinear prefill),
+    // modeled via the roofline on an H100 TP8 pipeline.
+    let h100 = crate::cost::hardware::by_name("H100").unwrap();
+    let eff = crate::cost::roofline::Efficiency::default();
+    for name in ["8b-fp16", "70b-fp16"] {
+        let m = by_short_name(name).unwrap();
+        for isl in [1024u64, 4096, 8192, 16_384, 32_768] {
+            let par = crate::cost::roofline::Parallelism { tp: 8, pp: 1 };
+            let ttft = crate::cost::roofline::prefill_time(&m, &h100, par, isl, 1, &eff)
+                .total();
+            let r = bandwidth_requirement(&m, isl, 1, ttft, 0.020, 8, 8);
+            text.push_str(&format!(
+                "{:<24} {:>8} {:>12.3} {:>16.1} {:>16.1}\n",
+                m.name,
+                isl,
+                r.kv_bytes / 1e9,
+                bps_to_gbit(r.peak_egress_bps),
+                bps_to_gbit(r.peak_ingress_bps)
+            ));
+            arr.push(
+                Json::obj()
+                    .set("model", m.name)
+                    .set("isl", isl)
+                    .set("kv_gb", r.kv_bytes / 1e9)
+                    .set("egress_gbit", bps_to_gbit(r.peak_egress_bps))
+                    .set("ingress_gbit", bps_to_gbit(r.peak_ingress_bps)),
+            );
+        }
+    }
+    text.push_str(
+        "\n§5.2 claim: a 200–400 Gb/s link suffices for KV transfer up to 32K \
+         ISL at interactive SLAs (per-GPU egress column stays below 400).\n",
+    );
+    Artifact {
+        id: "bandwidth",
+        title: "Eqs. 1–3: KV-cache transfer bandwidth model".into(),
+        text,
+        json: arr,
+    }
+}
+
+/// Figure 7: LangChain-style agent lowered through the IR pipeline.
+pub fn fig7() -> Artifact {
+    let g = crate::agents::langchain_style_agent("8b-fp16");
+    let before = printer::print(&g);
+    let mut lowered = g.clone();
+    let mut pm = PassManager::standard();
+    pm.run(&mut lowered).expect("pipeline runs");
+    let after = printer::print(&lowered);
+    let log: Vec<String> = pm
+        .log
+        .iter()
+        .map(|(n, c)| format!("{n}: {}", if *c { "changed" } else { "no-op" }))
+        .collect();
+    let text = format!(
+        "--- (a)+(b) authored / high-level IR ---\n{before}\n\
+         --- passes ---\n{}\n\n--- (c) decomposed IR ---\n{after}",
+        log.join("\n")
+    );
+    Artifact {
+        id: "fig7",
+        title: "Figure 7: agent program → high-level IR → decomposed IR".into(),
+        text,
+        json: Json::obj()
+            .set("before_ops", g.op_names().len())
+            .set("after_ops", lowered.op_names().len())
+            .set("passes", log),
+    }
+}
+
+/// Everything, in paper order.
+pub fn all() -> Vec<Artifact> {
+    vec![
+        table1(),
+        fig3(),
+        fig4(),
+        table3(),
+        table4_art(),
+        table5_art(),
+        fig_tco(SeqShape::fig8(), "fig8"),
+        fig_tco(SeqShape::fig9(), "fig9"),
+        bandwidth(),
+        fig7(),
+    ]
+}
+
+/// Look up one artifact by id.
+pub fn by_id(id: &str) -> Option<Artifact> {
+    match id {
+        "table1" => Some(table1()),
+        "fig3" | "table2" => Some(fig3()),
+        "fig4" => Some(fig4()),
+        "table3" => Some(table3()),
+        "table4" => Some(table4_art()),
+        "table5" => Some(table5_art()),
+        "fig8" => Some(fig_tco(SeqShape::fig8(), "fig8")),
+        "fig9" => Some(fig_tco(SeqShape::fig9(), "fig9")),
+        "bandwidth" | "eq13" => Some(bandwidth()),
+        "fig7" => Some(fig7()),
+        _ => None,
+    }
+}
+
+/// Sanity marker kept in sync with tests: FP8 precision exists.
+pub fn _precision_check() -> Precision {
+    Precision::Fp8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_artifacts_generate_nonempty() {
+        for a in all() {
+            assert!(!a.text.is_empty(), "{} empty", a.id);
+            assert!(!a.title.is_empty());
+            let j = a.json.to_string();
+            assert!(j.len() > 2, "{} json empty", a.id);
+        }
+    }
+
+    #[test]
+    fn by_id_resolves_all_paper_ids() {
+        for id in [
+            "table1", "fig3", "fig4", "table3", "table4", "table5", "fig8", "fig9",
+            "bandwidth", "fig7",
+        ] {
+            assert!(by_id(id).is_some(), "missing {id}");
+        }
+        assert!(by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn fig8_headline_claims_hold() {
+        let a = fig_tco(SeqShape::fig8(), "fig8");
+        // Parse back out of the JSON: B200::Gaudi3 must beat baseline
+        // for every FP8 model/SLA combination.
+        if let Json::Arr(rows) = &a.json {
+            let mut checked = 0;
+            for r in rows {
+                let pair = r.get("pair").and_then(|j| match j {
+                    Json::Str(s) => Some(s.as_str()),
+                    _ => None,
+                });
+                let model = r.get("model").and_then(|j| match j {
+                    Json::Str(s) => Some(s.as_str()),
+                    _ => None,
+                });
+                if pair == Some("B200::Gaudi3")
+                    && model.map(|m| m.contains("FP8")).unwrap_or(false)
+                {
+                    let benefit = match r.get("tco_benefit") {
+                        Some(Json::Num(v)) => *v,
+                        _ => panic!("missing benefit"),
+                    };
+                    assert!(benefit > 1.0, "{model:?} benefit {benefit}");
+                    checked += 1;
+                }
+            }
+            assert!(checked >= 2, "too few B200::Gaudi3 FP8 rows");
+        } else {
+            panic!("fig8 json not array");
+        }
+    }
+
+    #[test]
+    fn bandwidth_claim_holds_to_32k() {
+        let a = bandwidth();
+        if let Json::Arr(rows) = &a.json {
+            for r in rows {
+                if let Some(Json::Num(egress)) = r.get("egress_gbit") {
+                    assert!(*egress <= 400.0, "egress {egress} > 400 Gbit");
+                }
+            }
+        }
+    }
+}

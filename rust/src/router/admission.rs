@@ -1,0 +1,138 @@
+//! Admission control: token-bucket rate limiting plus queue-depth
+//! backpressure (§4.1's orchestration "helps prevent resource
+//! contention"). Requests rejected here never consume accelerator time.
+
+use std::time::Instant;
+
+/// Decision for one arriving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accept,
+    /// Over rate limit; client should retry after backoff.
+    Throttled,
+    /// System queue too deep; shed load.
+    Shed,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Sustained requests/second.
+    pub rate: f64,
+    /// Burst capacity (token bucket depth).
+    pub burst: f64,
+    /// Queue depth at which load is shed outright.
+    pub max_queue_depth: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            rate: 1000.0,
+            burst: 100.0,
+            max_queue_depth: 4096,
+        }
+    }
+}
+
+/// Token-bucket admission controller.
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    tokens: f64,
+    last: Instant,
+    pub accepted: u64,
+    pub throttled: u64,
+    pub shed: u64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController {
+            tokens: cfg.burst,
+            cfg,
+            last: Instant::now(),
+            accepted: 0,
+            throttled: 0,
+            shed: 0,
+        }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.cfg.rate).min(self.cfg.burst);
+    }
+
+    /// Decide for one request given current system queue depth.
+    pub fn admit(&mut self, now: Instant, queue_depth: usize) -> Admission {
+        self.refill(now);
+        if queue_depth >= self.cfg.max_queue_depth {
+            self.shed += 1;
+            return Admission::Shed;
+        }
+        if self.tokens < 1.0 {
+            self.throttled += 1;
+            return Admission::Throttled;
+        }
+        self.tokens -= 1.0;
+        self.accepted += 1;
+        Admission::Accept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ctl(rate: f64, burst: f64, depth: usize) -> AdmissionController {
+        AdmissionController::new(AdmissionConfig {
+            rate,
+            burst,
+            max_queue_depth: depth,
+        })
+    }
+
+    #[test]
+    fn burst_accepted_then_throttled() {
+        let mut c = ctl(10.0, 5.0, 100);
+        let now = Instant::now();
+        let mut accepted = 0;
+        for _ in 0..10 {
+            if c.admit(now, 0) == Admission::Accept {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 5);
+        assert_eq!(c.throttled, 5);
+    }
+
+    #[test]
+    fn refill_restores_admission() {
+        let mut c = ctl(1000.0, 2.0, 100);
+        let t0 = Instant::now();
+        assert_eq!(c.admit(t0, 0), Admission::Accept);
+        assert_eq!(c.admit(t0, 0), Admission::Accept);
+        assert_eq!(c.admit(t0, 0), Admission::Throttled);
+        // 10 ms later the bucket has refilled (1000/s × 0.01 = 10 > 2).
+        let t1 = t0 + Duration::from_millis(10);
+        assert_eq!(c.admit(t1, 0), Admission::Accept);
+    }
+
+    #[test]
+    fn deep_queue_sheds_regardless_of_tokens() {
+        let mut c = ctl(1000.0, 100.0, 8);
+        assert_eq!(c.admit(Instant::now(), 8), Admission::Shed);
+        assert_eq!(c.shed, 1);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = ctl(10.0, 1.0, 2);
+        let now = Instant::now();
+        c.admit(now, 0); // accept
+        c.admit(now, 0); // throttle
+        c.admit(now, 5); // shed
+        assert_eq!((c.accepted, c.throttled, c.shed), (1, 1, 1));
+    }
+}

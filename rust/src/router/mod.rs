@@ -1,0 +1,20 @@
+//! Fast-path request routing (paper §4.1 "Load Balancer / Request
+//! Router": "routes requests based on cache locality and model
+//! availability, optimizing resource utilization and request
+//! aggregation for performance").
+//!
+//! * [`router`] — per-request routing decisions: cache-locality first,
+//!   then least-outstanding-load, with model-availability filtering;
+//! * [`batcher`] — the continuous batcher that aggregates admitted
+//!   requests into bucketed prefill batches and rolling decode rounds
+//!   (bucket sizes match the AOT artifact set);
+//! * [`admission`] — token-bucket admission control and queue-depth
+//!   backpressure.
+
+pub mod admission;
+pub mod batcher;
+pub mod router;
+
+pub use admission::AdmissionController;
+pub use batcher::{Batcher, BatcherConfig};
+pub use router::{Router, RouterConfig, WorkerState};

@@ -1,0 +1,282 @@
+//! Cache-locality-aware load balancing.
+//!
+//! Decision order (richest information first):
+//! 1. a worker already holding this *session's* KV (multi-turn hit);
+//! 2. a worker holding a matching *prefix* cache (shared system prompt);
+//! 3. the least-loaded worker that serves the requested model.
+//!
+//! Workers whose queue depth exceeds `max_queue` are skipped (the
+//! admission controller should have shed these, but the router defends
+//! independently).
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::manager::CacheManager;
+use crate::{Error, Result};
+
+/// Router view of one worker (decode/prefill engine instance).
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub id: u32,
+    /// Models this worker has loaded (artifact names).
+    pub models: Vec<String>,
+    /// Outstanding requests.
+    pub outstanding: u32,
+    /// Draining workers accept no new work (planner migration).
+    pub draining: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Queue depth beyond which a worker is skipped.
+    pub max_queue: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { max_queue: 256 }
+    }
+}
+
+/// The decision the router made (for metrics/tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteReason {
+    SessionAffinity,
+    PrefixHit,
+    LeastLoaded,
+}
+
+/// The fast-path router.
+#[derive(Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+    workers: BTreeMap<u32, WorkerState>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router {
+            cfg,
+            workers: BTreeMap::new(),
+        }
+    }
+
+    pub fn upsert_worker(&mut self, w: WorkerState) {
+        self.workers.insert(w.id, w);
+    }
+
+    pub fn remove_worker(&mut self, id: u32) {
+        self.workers.remove(&id);
+    }
+
+    pub fn set_draining(&mut self, id: u32, draining: bool) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.draining = draining;
+        }
+    }
+
+    pub fn note_dispatch(&mut self, id: u32) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.outstanding += 1;
+        }
+    }
+
+    pub fn note_complete(&mut self, id: u32) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.outstanding = w.outstanding.saturating_sub(1);
+        }
+    }
+
+    pub fn worker(&self, id: u32) -> Option<&WorkerState> {
+        self.workers.get(&id)
+    }
+
+    fn eligible(&self, w: &WorkerState, model: &str) -> bool {
+        !w.draining
+            && w.outstanding < self.cfg.max_queue
+            && w.models.iter().any(|m| m == model)
+    }
+
+    /// Route a request; returns (worker id, reason).
+    pub fn route(
+        &self,
+        model: &str,
+        session: Option<u64>,
+        prefix_hash: Option<u64>,
+        cache: &CacheManager,
+    ) -> Result<(u32, RouteReason)> {
+        // 1. Session affinity.
+        if let Some(sid) = session {
+            if let Some((node, _tier)) = cache.locate(sid) {
+                if let Some(w) = self.workers.get(&node) {
+                    if self.eligible(w, model) {
+                        return Ok((node, RouteReason::SessionAffinity));
+                    }
+                }
+            }
+        }
+        // 2. Prefix-cache hit.
+        if let Some(ph) = prefix_hash {
+            if let Some(node) = cache.find_prefix(ph) {
+                if let Some(w) = self.workers.get(&node) {
+                    if self.eligible(w, model) {
+                        return Ok((node, RouteReason::PrefixHit));
+                    }
+                }
+            }
+        }
+        // 3. Least outstanding load.
+        self.workers
+            .values()
+            .filter(|w| self.eligible(w, model))
+            .min_by_key(|w| (w.outstanding, w.id))
+            .map(|w| (w.id, RouteReason::LeastLoaded))
+            .ok_or_else(|| {
+                Error::Capacity(format!("no eligible worker for model {model}"))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::{CacheManager, NodeBudget};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn cache(nodes: usize) -> CacheManager {
+        CacheManager::new(
+            (0..nodes)
+                .map(|_| NodeBudget {
+                    hbm: 1e9,
+                    dram: 4e9,
+                    disk: 1e12,
+                })
+                .collect(),
+        )
+    }
+
+    fn worker(id: u32, outstanding: u32) -> WorkerState {
+        WorkerState {
+            id,
+            models: vec!["tiny".into()],
+            outstanding,
+            draining: false,
+        }
+    }
+
+    fn router3() -> Router {
+        let mut r = Router::new(RouterConfig::default());
+        r.upsert_worker(worker(0, 5));
+        r.upsert_worker(worker(1, 2));
+        r.upsert_worker(worker(2, 9));
+        r
+    }
+
+    #[test]
+    fn least_loaded_wins_without_cache() {
+        let r = router3();
+        let c = cache(3);
+        let (id, why) = r.route("tiny", None, None, &c).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(why, RouteReason::LeastLoaded);
+    }
+
+    #[test]
+    fn session_affinity_beats_load() {
+        let r = router3();
+        let mut c = cache(3);
+        c.insert(77, 2, 100.0, 0xAA).unwrap(); // session 77 on busy worker 2
+        let (id, why) = r.route("tiny", Some(77), None, &c).unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(why, RouteReason::SessionAffinity);
+    }
+
+    #[test]
+    fn prefix_hit_beats_load() {
+        let r = router3();
+        let mut c = cache(3);
+        c.insert(1, 0, 10.0, 0xFEED).unwrap();
+        let (id, why) = r.route("tiny", None, Some(0xFEED), &c).unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(why, RouteReason::PrefixHit);
+    }
+
+    #[test]
+    fn draining_worker_skipped_even_with_affinity() {
+        let mut r = router3();
+        let mut c = cache(3);
+        c.insert(77, 2, 100.0, 0).unwrap();
+        r.set_draining(2, true);
+        let (id, why) = r.route("tiny", Some(77), None, &c).unwrap();
+        assert_ne!(id, 2);
+        assert_eq!(why, RouteReason::LeastLoaded);
+    }
+
+    #[test]
+    fn model_availability_filters() {
+        let mut r = router3();
+        r.upsert_worker(WorkerState {
+            id: 3,
+            models: vec!["big".into()],
+            outstanding: 0,
+            draining: false,
+        });
+        let c = cache(4);
+        let (id, _) = r.route("big", None, None, &c).unwrap();
+        assert_eq!(id, 3);
+        assert!(r.route("unknown-model", None, None, &c).is_err());
+    }
+
+    #[test]
+    fn full_queue_skipped() {
+        let mut r = Router::new(RouterConfig { max_queue: 4 });
+        r.upsert_worker(worker(0, 4)); // at limit
+        r.upsert_worker(worker(1, 3));
+        let c = cache(2);
+        let (id, _) = r.route("tiny", None, None, &c).unwrap();
+        assert_eq!(id, 1);
+        r.note_dispatch(1);
+        assert!(r.route("tiny", None, None, &c).is_err());
+    }
+
+    #[test]
+    fn dispatch_complete_bookkeeping() {
+        let mut r = router3();
+        r.note_dispatch(1);
+        r.note_dispatch(1);
+        assert_eq!(r.worker(1).unwrap().outstanding, 4);
+        r.note_complete(1);
+        assert_eq!(r.worker(1).unwrap().outstanding, 3);
+        // Underflow-safe.
+        let mut r2 = Router::new(RouterConfig::default());
+        r2.upsert_worker(worker(9, 0));
+        r2.note_complete(9);
+        assert_eq!(r2.worker(9).unwrap().outstanding, 0);
+    }
+
+    #[test]
+    fn balance_property_spreads_load() {
+        // Routing n requests (completing none) never leaves the gap
+        // between max and min outstanding above 1 when all workers are
+        // identical — the invariant of least-loaded balancing.
+        prop::check("router-balances", |rng: &mut Rng| {
+            let k = rng.index(4) + 2;
+            let mut r = Router::new(RouterConfig { max_queue: 10_000 });
+            for id in 0..k {
+                r.upsert_worker(worker(id as u32, 0));
+            }
+            let c = cache(k);
+            for _ in 0..rng.index(100) {
+                let (id, _) = r.route("tiny", None, None, &c).unwrap();
+                r.note_dispatch(id);
+            }
+            let outs: Vec<u32> = (0..k)
+                .map(|i| r.worker(i as u32).unwrap().outstanding)
+                .collect();
+            let max = *outs.iter().max().unwrap();
+            let min = *outs.iter().min().unwrap();
+            assert!(max - min <= 1, "unbalanced: {outs:?}");
+        });
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT execution engine: compiled prefill/decode executables per batch
+//! bucket, with KV state threaded between calls.
+//!
+//! Loading: `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile` — the pattern of `/opt/xla-example/load_hlo.rs`.
+//! Outputs arrive as a single tuple buffer (this PJRT build does not
+//! untuple), so every execute is followed by `to_literal_sync` +
+//! `decompose_tuple`; calling `to_vec`/`shape` on a tuple literal is a
+//! fatal CHECK in xla_extension — never do that.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use crate::{Error, Result};
+
+/// Opaque KV cache state for one in-flight batch (host literals).
+pub struct KvState {
+    pub bucket: usize,
+    k: Literal,
+    v: Literal,
+    /// Current absolute position per lane (next write index).
+    pub pos: Vec<i32>,
+}
+
+impl KvState {
+    /// Bytes held by this state (both sides).
+    pub fn bytes(&self) -> usize {
+        self.k.size_bytes() + self.v.size_bytes()
+    }
+}
+
+/// Result of a prefill call.
+pub struct PrefillResult {
+    /// Per-lane logits over the vocab (only the first `n` lanes of the
+    /// bucket are meaningful, where `n` = submitted prompts).
+    pub logits: Vec<Vec<f32>>,
+    pub kv: KvState,
+}
+
+/// The per-node engine.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load every bucket's executables from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for &b in &manifest.buckets {
+            prefill.insert(b, compile(&client, &manifest.artifact_path("prefill", b))?);
+            decode.insert(b, compile(&client, &manifest.artifact_path("decode", b))?);
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            prefill,
+            decode,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Prefill a batch of prompts (byte tokens). Prompts are truncated /
+    /// right-padded to the compiled prompt length; the bucket is the
+    /// smallest compiled batch ≥ prompts.len().
+    pub fn prefill(&self, prompts: &[Vec<u8>]) -> Result<PrefillResult> {
+        if prompts.is_empty() {
+            return Err(Error::Runtime("empty prefill batch".into()));
+        }
+        let bucket = self
+            .manifest
+            .bucket_for(prompts.len())
+            .ok_or_else(|| {
+                Error::Capacity(format!(
+                    "batch {} exceeds largest bucket {}",
+                    prompts.len(),
+                    self.manifest.buckets.last().unwrap()
+                ))
+            })?;
+        let seq = self.manifest.prefill_seq;
+
+        let mut tokens = vec![0i32; bucket * seq];
+        let mut lens = vec![1i32; bucket];
+        for (i, p) in prompts.iter().enumerate() {
+            let n = p.len().min(seq).max(1);
+            // Keep the *tail* of over-long prompts (most recent context).
+            let src = &p[p.len().saturating_sub(seq)..];
+            for (j, b) in src.iter().enumerate() {
+                tokens[i * seq + j] = *b as i32;
+            }
+            lens[i] = n as i32;
+        }
+
+        let toks_lit = Literal::vec1(&tokens).reshape(&[bucket as i64, seq as i64])?;
+        let lens_lit = Literal::vec1(&lens);
+        let exe = &self.prefill[&bucket];
+        let result = exe.execute::<Literal>(&[toks_lit, lens_lit])?;
+        let mut parts = result[0][0].to_literal_sync()?.decompose_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "prefill returned {} outputs, expected 3",
+                parts.len()
+            )));
+        }
+        let v = parts.pop().unwrap();
+        let k = parts.pop().unwrap();
+        let logits_flat = parts.pop().unwrap().to_vec::<f32>()?;
+        let vocab = self.manifest.vocab;
+        let logits = (0..bucket)
+            .map(|i| logits_flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+        let pos = lens.clone();
+        Ok(PrefillResult {
+            logits,
+            kv: KvState { bucket, k, v, pos },
+        })
+    }
+
+    /// One decode step for the whole batch: feeds `tokens[i]` at each
+    /// lane's current position, returns next-token logits per lane.
+    /// Lanes past their request's end can feed any token; callers ignore
+    /// their logits.
+    pub fn decode_step(&self, kv: &mut KvState, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != kv.bucket {
+            return Err(Error::Runtime(format!(
+                "decode batch {} != bucket {}",
+                tokens.len(),
+                kv.bucket
+            )));
+        }
+        for p in &kv.pos {
+            if *p as usize >= self.manifest.max_seq {
+                return Err(Error::Capacity(format!(
+                    "KV cache full (max_seq {})",
+                    self.manifest.max_seq
+                )));
+            }
+        }
+        let toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
+        let tok_lit = Literal::vec1(&toks);
+        let pos_lit = Literal::vec1(&kv.pos);
+        let exe = &self.decode[&kv.bucket];
+        // KV literals move in by reference; outputs replace them.
+        let result = exe.execute::<&Literal>(&[&tok_lit, &pos_lit, &kv.k, &kv.v])?;
+        let mut parts = result[0][0].to_literal_sync()?.decompose_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "decode returned {} outputs, expected 3",
+                parts.len()
+            )));
+        }
+        kv.v = parts.pop().unwrap();
+        kv.k = parts.pop().unwrap();
+        let logits_flat = parts.pop().unwrap().to_vec::<f32>()?;
+        for p in kv.pos.iter_mut() {
+            *p += 1;
+        }
+        let vocab = self.manifest.vocab;
+        Ok((0..kv.bucket)
+            .map(|i| logits_flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect())
+    }
+
+    /// Convenience: greedy-generate `max_new` tokens for a batch of
+    /// prompts (used by tests and the quickstart example).
+    pub fn generate_greedy(
+        &self,
+        prompts: &[Vec<u8>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        let pre = self.prefill(prompts)?;
+        let mut kv = pre.kv;
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
+        let mut next: Vec<u8> = (0..kv.bucket)
+            .map(|i| {
+                argmax(pre.logits.get(i).map(|l| l.as_slice()).unwrap_or(&[])) as u8
+            })
+            .collect();
+        for (i, o) in out.iter_mut().enumerate() {
+            o.push(next[i]);
+        }
+        for _ in 1..max_new {
+            if kv.pos.iter().any(|p| *p as usize >= self.manifest.max_seq) {
+                break;
+            }
+            let logits = self.decode_step(&mut kv, &next)?;
+            for i in 0..prompts.len() {
+                next[i] = argmax(&logits[i]) as u8;
+                out[i].push(next[i]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Argmax over logits (0 on empty — callers guard).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+    )?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+    }
+
+    // Engine execution tests live in rust/tests/runtime_e2e.rs (they
+    // need the artifact bundle from `make artifacts`).
+}

@@ -1,0 +1,200 @@
+//! Artifact-bundle manifest (`artifacts/manifest.txt`), written by
+//! `python/compile/aot.py` as `key=value` lines.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Parsed manifest: model hyperparameters + compiled buckets.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    /// Batch buckets, ascending.
+    pub buckets: Vec<usize>,
+    pub num_params: u64,
+    pub kv_cache_bytes_b1: u64,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let kv = parse_kv(&text);
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k)
+                .map(|s| s.as_str())
+                .ok_or_else(|| Error::Runtime(format!("manifest missing key {k}")))
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            get(k)?
+                .parse()
+                .map_err(|e| Error::Runtime(format!("manifest {k}: {e}")))
+        };
+        let buckets: Vec<usize> = get("buckets")?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| Error::Runtime(format!("manifest buckets: {e}")))?;
+        if buckets.is_empty() {
+            return Err(Error::Runtime("manifest has no buckets".into()));
+        }
+        let m = Manifest {
+            dir,
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            n_layers: get_usize("n_layers")?,
+            n_heads: get_usize("n_heads")?,
+            n_kv_heads: get_usize("n_kv_heads")?,
+            head_dim: get_usize("head_dim")?,
+            max_seq: get_usize("max_seq")?,
+            prefill_seq: get_usize("prefill_seq")?,
+            buckets,
+            num_params: get_usize("num_params")? as u64,
+            kv_cache_bytes_b1: get_usize("kv_cache_bytes_b1")? as u64,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.prefill_seq > self.max_seq {
+            return Err(Error::Runtime(format!(
+                "prefill_seq {} exceeds max_seq {}",
+                self.prefill_seq, self.max_seq
+            )));
+        }
+        let mut sorted = self.buckets.clone();
+        sorted.sort_unstable();
+        if sorted != self.buckets {
+            return Err(Error::Runtime("buckets must be ascending".into()));
+        }
+        for b in &self.buckets {
+            for stem in ["prefill", "decode"] {
+                let p = self.artifact_path(stem, *b);
+                if !p.exists() {
+                    return Err(Error::Runtime(format!(
+                        "missing artifact {}",
+                        p.display()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact_path(&self, stem: &str, bucket: usize) -> PathBuf {
+        self.dir.join(format!("{stem}_b{bucket}.hlo.txt"))
+    }
+
+    /// Smallest bucket that fits `batch` requests.
+    pub fn bucket_for(&self, batch: usize) -> Option<usize> {
+        self.buckets.iter().find(|b| **b >= batch).copied()
+    }
+
+    /// KV-state shape per side (k or v): (L, B, Hkv, Smax, D).
+    pub fn kv_dims(&self, bucket: usize) -> [usize; 5] {
+        [
+            self.n_layers,
+            bucket,
+            self.n_kv_heads,
+            self.max_seq,
+            self.head_dim,
+        ]
+    }
+}
+
+fn parse_kv(text: &str) -> BTreeMap<String, String> {
+    text.lines()
+        .filter_map(|l| {
+            let l = l.trim();
+            if l.is_empty() || l.starts_with('#') {
+                return None;
+            }
+            l.split_once('=')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_bundle(dir: &Path, buckets: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = format!(
+            "format=1\nvocab=256\nd_model=96\nn_layers=3\nn_heads=4\nn_kv_heads=2\n\
+             head_dim=24\nd_ff=256\nmax_seq=96\nprefill_seq=64\nbuckets={buckets}\n\
+             num_params=329376\nkv_cache_bytes_b1=55296\n"
+        );
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+        for b in buckets.split(',') {
+            for stem in ["prefill", "decode"] {
+                std::fs::write(dir.join(format!("{stem}_b{b}.hlo.txt")), "HloModule x")
+                    .unwrap();
+            }
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ah-manifest-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_bundle() {
+        let d = tmpdir("ok");
+        write_bundle(&d, "1,2,4");
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.buckets, vec![1, 2, 4]);
+        assert_eq!(m.kv_dims(2), [3, 2, 2, 96, 24]);
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(9), None);
+    }
+
+    #[test]
+    fn missing_artifact_rejected() {
+        let d = tmpdir("missing");
+        write_bundle(&d, "1,2");
+        std::fs::remove_file(d.join("decode_b2.hlo.txt")).unwrap();
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_hint() {
+        let d = tmpdir("nomanifest");
+        std::fs::create_dir_all(&d).unwrap();
+        let err = Manifest::load(&d).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_bundle_if_present() {
+        // When `make artifacts` has run, validate the real bundle too.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("manifest.txt").exists() {
+            let m = Manifest::load(&root).unwrap();
+            assert!(m.num_params > 0);
+            assert!(!m.buckets.is_empty());
+        }
+    }
+}

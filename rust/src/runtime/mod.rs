@@ -1,0 +1,21 @@
+//! Per-node runtime (paper §4.1 "Runtime"): loads AOT artifacts and
+//! executes model stages through the PJRT C API — Python never runs on
+//! the request path.
+//!
+//! * [`manifest`] — the artifact bundle description written by
+//!   `python/compile/aot.py`;
+//! * [`engine`] — PJRT client + compiled executables per batch bucket,
+//!   exposing `prefill` / `decode` with host-side KV state handles;
+//! * [`sampler`] — greedy / temperature token sampling.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `/opt/xla-example/README.md`).
+
+pub mod engine;
+pub mod manifest;
+pub mod sampler;
+
+pub use engine::{Engine, KvState, PrefillResult};
+pub use manifest::Manifest;
+pub use sampler::Sampler;

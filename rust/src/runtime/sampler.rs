@@ -1,0 +1,119 @@
+//! Token sampling: greedy, temperature, and top-k over logits.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    /// 0.0 = greedy.
+    pub temperature: f64,
+    /// 0 = no top-k truncation.
+    pub top_k: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn greedy() -> Sampler {
+        Sampler {
+            temperature: 0.0,
+            top_k: 0,
+            rng: Rng::new(0),
+        }
+    }
+
+    pub fn new(temperature: f64, top_k: usize, seed: u64) -> Sampler {
+        Sampler {
+            temperature,
+            top_k,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Sample one token id from logits.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if logits.is_empty() {
+            return 0;
+        }
+        if self.temperature <= 0.0 {
+            return super::engine::argmax(logits);
+        }
+        // Temperature softmax over (optionally) the top-k logits.
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.top_k > 0 && self.top_k < logits.len() {
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(self.top_k);
+        }
+        let max = idx
+            .iter()
+            .map(|&i| logits[i] as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| ((logits[i] as f64 - max) / self.temperature).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.f64() * total;
+        for (w, &i) in weights.iter().zip(&idx) {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.0, 5.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn temperature_zero_edge() {
+        let mut s = Sampler::new(0.0, 0, 1);
+        assert_eq!(s.sample(&[1.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn high_temp_spreads_low_temp_concentrates() {
+        let logits = [1.0f32, 0.0, -1.0];
+        let count_top = |temp: f64| {
+            let mut s = Sampler::new(temp, 0, 42);
+            (0..2000).filter(|_| s.sample(&logits) == 0).count()
+        };
+        let hot = count_top(10.0);
+        let cold = count_top(0.05);
+        assert!(cold > 1950, "cold={cold}");
+        assert!(hot < 1200, "hot={hot}");
+    }
+
+    #[test]
+    fn top_k_truncates_support() {
+        let logits = [5.0f32, 4.0, -100.0, -100.0];
+        let mut s = Sampler::new(1.0, 2, 7);
+        for _ in 0..500 {
+            let t = s.sample(&logits);
+            assert!(t < 2, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let logits = [0.5f32, 0.4, 0.3];
+        let mut a = Sampler::new(1.0, 0, 9);
+        let mut b = Sampler::new(1.0, 0, 9);
+        for _ in 0..100 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+    }
+
+    #[test]
+    fn empty_logits_safe() {
+        assert_eq!(Sampler::greedy().sample(&[]), 0);
+    }
+}

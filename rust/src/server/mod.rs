@@ -1,0 +1,21 @@
+//! Serving front-end: the leader's request loop over the real PJRT
+//! engine (§4.1 objectives: scalability via batching, flexibility via
+//! channel-fed synchronous/asynchronous submission, composability via
+//! multi-turn sessions).
+//!
+//! * [`request`] — request/response types and SLA accounting;
+//! * [`session`] — multi-turn session store (history → prompt
+//!   assembly within the compiled prompt bucket);
+//! * [`serve`] — the serving loop: admission → continuous batcher →
+//!   prefill/decode on the engine → streamed responses, on std threads
+//!   + mpsc (tokio is not in the offline registry; the event loop is a
+//!   single dispatcher thread with worker-side compute, which the tiny
+//!   CPU model saturates).
+
+pub mod request;
+pub mod serve;
+pub mod session;
+
+pub use request::{ChatRequest, ChatResponse};
+pub use serve::{Server, ServerConfig};
+pub use session::SessionStore;

@@ -1,0 +1,88 @@
+//! Request/response types for the serving loop.
+
+/// A chat/completion request (byte-level prompt — the tiny model is a
+/// byte LM).
+#[derive(Debug, Clone)]
+pub struct ChatRequest {
+    pub id: u64,
+    /// Multi-turn session affinity (None = stateless).
+    pub session: Option<u64>,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f64,
+}
+
+impl ChatRequest {
+    pub fn new(id: u64, prompt: impl Into<Vec<u8>>, max_new_tokens: usize) -> ChatRequest {
+        ChatRequest {
+            id,
+            session: None,
+            prompt: prompt.into(),
+            max_new_tokens,
+            temperature: 0.0,
+        }
+    }
+}
+
+/// The completed response with serving metrics attached.
+#[derive(Debug, Clone)]
+pub struct ChatResponse {
+    pub id: u64,
+    pub output: Vec<u8>,
+    /// Time to first token (from submission).
+    pub ttft_s: f64,
+    /// Mean token-to-token gap.
+    pub tbt_mean_s: f64,
+    /// Total latency.
+    pub e2e_s: f64,
+    pub tokens: usize,
+    /// Whether the request was rejected by admission control.
+    pub rejected: bool,
+}
+
+impl ChatResponse {
+    pub fn rejected(id: u64) -> ChatResponse {
+        ChatResponse {
+            id,
+            output: Vec::new(),
+            ttft_s: 0.0,
+            tbt_mean_s: 0.0,
+            e2e_s: 0.0,
+            tokens: 0,
+            rejected: true,
+        }
+    }
+
+    /// Lossy text rendering of the output bytes.
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.output).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder() {
+        let r = ChatRequest::new(7, "hello", 16);
+        assert_eq!(r.prompt, b"hello");
+        assert_eq!(r.max_new_tokens, 16);
+        assert!(r.session.is_none());
+    }
+
+    #[test]
+    fn response_text_lossy() {
+        let r = ChatResponse {
+            id: 1,
+            output: vec![104, 105, 0xFF],
+            ttft_s: 0.0,
+            tbt_mean_s: 0.0,
+            e2e_s: 0.0,
+            tokens: 3,
+            rejected: false,
+        };
+        assert!(r.text().starts_with("hi"));
+    }
+}

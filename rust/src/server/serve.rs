@@ -1,0 +1,240 @@
+//! The serving loop: channel-fed requests → admission → continuous
+//! batcher → PJRT prefill/decode → responses with SLA metrics.
+//!
+//! Threading model (tokio is unavailable offline): callers submit
+//! [`ChatRequest`]s on an `mpsc::Sender` from any number of threads;
+//! one dispatcher thread owns the engine and runs the batch loop;
+//! responses return on a per-server `mpsc::Receiver`. The engine is the
+//! serialized resource — exactly the "one compiled executable per model
+//! variant" runtime of the paper's design.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::obs::MetricsRegistry;
+use crate::router::admission::{Admission, AdmissionConfig, AdmissionController};
+use crate::router::batcher::{Batcher, BatcherConfig};
+use crate::runtime::{Engine, Sampler};
+use crate::server::request::{ChatRequest, ChatResponse};
+use crate::server::session::SessionStore;
+use crate::Result;
+
+/// Server knobs (subset of [`crate::config::DeployConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub batch: BatcherConfig,
+    pub admission: AdmissionConfig,
+    /// Hard cap on generated tokens per request.
+    pub max_new_tokens: usize,
+    /// History budget per session, bytes.
+    pub max_history: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch: BatcherConfig::default(),
+            admission: AdmissionConfig::default(),
+            max_new_tokens: 24,
+            max_history: 256,
+        }
+    }
+}
+
+struct InFlight {
+    req: ChatRequest,
+    submitted: Instant,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    engine: Arc<Engine>,
+    cfg: ServerConfig,
+    pub metrics: Arc<MetricsRegistry>,
+    sessions: SessionStore,
+}
+
+impl Server {
+    pub fn new(engine: impl Into<Arc<Engine>>, cfg: ServerConfig) -> Server {
+        let max_history = cfg.max_history;
+        Server {
+            engine: engine.into(),
+            cfg,
+            metrics: Arc::new(MetricsRegistry::new()),
+            sessions: SessionStore::new(max_history),
+        }
+    }
+
+    /// Serve until `rx` disconnects and all queued work drains. Designed
+    /// to run on a dedicated thread; responses go out through `tx`.
+    pub fn serve(
+        &mut self,
+        rx: mpsc::Receiver<ChatRequest>,
+        tx: mpsc::Sender<ChatResponse>,
+    ) -> Result<()> {
+        let mut batcher: Batcher<InFlight> = Batcher::new(self.cfg.batch.clone());
+        let mut admission = AdmissionController::new(self.cfg.admission.clone());
+        let m_req = self.metrics.counter("server_requests");
+        let m_rej = self.metrics.counter("server_rejected");
+        let m_tok = self.metrics.counter("server_tokens_out");
+        let m_batches = self.metrics.counter("server_batches");
+        let h_ttft = self.metrics.histogram("server_ttft");
+        let h_e2e = self.metrics.histogram("server_e2e");
+        let g_depth = self.metrics.gauge("server_queue_depth");
+
+        let mut open = true;
+        while open || !batcher.is_empty() {
+            // Pull everything currently available (bounded wait so the
+            // batcher timeout keeps ticking).
+            loop {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(req) => {
+                        m_req.inc();
+                        match admission.admit(Instant::now(), batcher.len()) {
+                            Admission::Accept => batcher.push(InFlight {
+                                req,
+                                submitted: Instant::now(),
+                            }),
+                            _ => {
+                                m_rej.inc();
+                                let _ = tx.send(ChatResponse::rejected(req_id(&req)));
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            g_depth.set(batcher.len() as f64);
+
+            let Some(batch) = batcher.poll(Instant::now()) else {
+                if !open && batcher.is_empty() {
+                    break;
+                }
+                continue;
+            };
+            m_batches.inc();
+            let responses = self.run_batch(batch.members)?;
+            for r in responses {
+                m_tok.add(r.tokens as u64);
+                h_ttft.record_secs(r.ttft_s);
+                h_e2e.record_secs(r.e2e_s);
+                let _ = tx.send(r);
+            }
+        }
+        Ok(())
+    }
+
+    /// Synchronous convenience: submit a fixed workload, get responses.
+    pub fn run_workload(&mut self, requests: Vec<ChatRequest>) -> Result<Vec<ChatResponse>> {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for r in requests {
+            req_tx.send(r).unwrap();
+        }
+        drop(req_tx);
+        self.serve(req_rx, resp_tx)?;
+        let mut out: Vec<ChatResponse> = resp_rx.into_iter().collect();
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// Execute one prefill+decode batch to completion.
+    fn run_batch(&mut self, members: Vec<InFlight>) -> Result<Vec<ChatResponse>> {
+        let seq_budget = self.engine.manifest.prefill_seq;
+        let prompts: Vec<Vec<u8>> = members
+            .iter()
+            .map(|f| self.sessions.assemble(f.req.session, &f.req.prompt, seq_budget))
+            .collect();
+        let t_batch0 = Instant::now();
+        let pre = self.engine.prefill(&prompts)?;
+        let mut kv = pre.kv;
+        let n = members.len();
+        let bucket = kv.bucket;
+
+        let mut samplers: Vec<Sampler> = members
+            .iter()
+            .map(|f| {
+                if f.req.temperature > 0.0 {
+                    Sampler::new(f.req.temperature, 0, f.req.id)
+                } else {
+                    Sampler::greedy()
+                }
+            })
+            .collect();
+
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
+        let mut first_token_at: Vec<Instant> = vec![t_batch0; n];
+        let mut last_token_at: Vec<Instant> = vec![t_batch0; n];
+        let mut gaps: Vec<Vec<f64>> = vec![Vec::new(); n];
+
+        // First token from prefill logits.
+        let now = Instant::now();
+        let mut next: Vec<u8> = vec![0; bucket];
+        for i in 0..n {
+            let tok = samplers[i].sample(&pre.logits[i]) as u8;
+            next[i] = tok;
+            outputs[i].push(tok);
+            first_token_at[i] = now;
+            last_token_at[i] = now;
+        }
+
+        // Decode rounds until every member hit its budget (lanes that
+        // finish keep feeding their last token; outputs stop growing).
+        let max_rounds = members
+            .iter()
+            .map(|f| f.req.max_new_tokens.saturating_sub(1))
+            .max()
+            .unwrap_or(0)
+            .min(self.engine.manifest.max_seq - seq_budget - 1);
+        for _round in 0..max_rounds {
+            let logits = self.engine.decode_step(&mut kv, &next)?;
+            let now = Instant::now();
+            for i in 0..n {
+                if outputs[i].len() >= members[i].req.max_new_tokens {
+                    continue;
+                }
+                let tok = samplers[i].sample(&logits[i]) as u8;
+                next[i] = tok;
+                outputs[i].push(tok);
+                gaps[i].push(now.duration_since(last_token_at[i]).as_secs_f64());
+                last_token_at[i] = now;
+            }
+        }
+
+        // Record sessions + build responses.
+        let mut responses = Vec::with_capacity(n);
+        for (i, f) in members.iter().enumerate() {
+            if let Some(sid) = f.req.session {
+                self.sessions.record_turn(sid, &f.req.prompt, &outputs[i]);
+            }
+            let ttft = first_token_at[i].duration_since(f.submitted).as_secs_f64();
+            let e2e = last_token_at[i].duration_since(f.submitted).as_secs_f64();
+            let tbt = if gaps[i].is_empty() {
+                0.0
+            } else {
+                gaps[i].iter().sum::<f64>() / gaps[i].len() as f64
+            };
+            responses.push(ChatResponse {
+                id: f.req.id,
+                output: outputs[i].clone(),
+                ttft_s: ttft,
+                tbt_mean_s: tbt,
+                e2e_s: e2e,
+                tokens: outputs[i].len(),
+                rejected: false,
+            });
+        }
+        Ok(responses)
+    }
+}
+
+fn req_id(r: &ChatRequest) -> u64 {
+    r.id
+}
+
+// Engine-backed tests live in rust/tests/runtime_e2e.rs (need artifacts).

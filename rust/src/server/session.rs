@@ -1,0 +1,120 @@
+//! Multi-turn session store: conversation history → prompt assembly.
+//!
+//! §4.1 "Composability: facilitates multi-turn interactions activated
+//! through repeated API calls or system state changes." History is
+//! byte-level (matching the tiny model); prompt assembly keeps the most
+//! recent `budget` bytes so the compiled prompt bucket always fits.
+
+use std::collections::BTreeMap;
+
+/// One session's transcript.
+#[derive(Debug, Clone, Default)]
+pub struct Session {
+    pub history: Vec<u8>,
+    pub turns: u32,
+}
+
+/// Thread-compatible session store (callers wrap in a mutex when shared).
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    sessions: BTreeMap<u64, Session>,
+    /// Cap on stored history per session, bytes.
+    pub max_history: usize,
+}
+
+impl SessionStore {
+    pub fn new(max_history: usize) -> SessionStore {
+        SessionStore {
+            sessions: BTreeMap::new(),
+            max_history,
+        }
+    }
+
+    /// Assemble the model prompt for a turn: recent history + new input,
+    /// trimmed from the front to `budget` bytes.
+    pub fn assemble(&self, session: Option<u64>, input: &[u8], budget: usize) -> Vec<u8> {
+        let mut prompt = Vec::with_capacity(budget);
+        if let Some(sid) = session {
+            if let Some(s) = self.sessions.get(&sid) {
+                prompt.extend_from_slice(&s.history);
+            }
+        }
+        prompt.extend_from_slice(input);
+        if prompt.len() > budget {
+            prompt.drain(..prompt.len() - budget);
+        }
+        prompt
+    }
+
+    /// Record a completed turn (user input + model output).
+    pub fn record_turn(&mut self, session: u64, input: &[u8], output: &[u8]) {
+        let s = self.sessions.entry(session).or_default();
+        s.history.extend_from_slice(input);
+        s.history.extend_from_slice(output);
+        s.turns += 1;
+        if s.history.len() > self.max_history {
+            let overflow = s.history.len() - self.max_history;
+            s.history.drain(..overflow);
+        }
+    }
+
+    pub fn turns(&self, session: u64) -> u32 {
+        self.sessions.get(&session).map(|s| s.turns).unwrap_or(0)
+    }
+
+    pub fn drop_session(&mut self, session: u64) -> bool {
+        self.sessions.remove(&session).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stateless_assembly_is_input() {
+        let s = SessionStore::new(1024);
+        assert_eq!(s.assemble(None, b"hello", 64), b"hello");
+    }
+
+    #[test]
+    fn history_prepended_and_trimmed() {
+        let mut s = SessionStore::new(1024);
+        s.record_turn(1, b"hi ", b"there ");
+        let p = s.assemble(Some(1), b"again", 64);
+        assert_eq!(p, b"hi there again");
+        // Tight budget keeps the tail.
+        let p = s.assemble(Some(1), b"again", 8);
+        assert_eq!(p.len(), 8);
+        assert!(p.ends_with(b"again"));
+    }
+
+    #[test]
+    fn history_capped() {
+        let mut s = SessionStore::new(10);
+        s.record_turn(1, b"0123456789", b"abcdefghij");
+        let p = s.assemble(Some(1), b"", 100);
+        assert_eq!(p, b"abcdefghij");
+        assert_eq!(s.turns(1), 1);
+    }
+
+    #[test]
+    fn sessions_isolated() {
+        let mut s = SessionStore::new(100);
+        s.record_turn(1, b"a", b"b");
+        s.record_turn(2, b"x", b"y");
+        assert_eq!(s.assemble(Some(1), b"", 10), b"ab");
+        assert_eq!(s.assemble(Some(2), b"", 10), b"xy");
+        assert!(s.drop_session(1));
+        assert!(!s.drop_session(1));
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Fabric topology: chassis with scale-up domains, RoCE scale-out links,
+//! and per-link FIFO contention.
+
+use crate::{Error, Result};
+
+/// Address of an accelerator: (chassis, slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeAddr {
+    pub chassis: u32,
+    pub slot: u32,
+}
+
+impl NodeAddr {
+    pub fn same_chassis(&self, other: &NodeAddr) -> bool {
+        self.chassis == other.chassis
+    }
+}
+
+/// Identifier of a directional link in the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkId {
+    /// Intra-chassis (scale-up) link of a chassis.
+    ScaleUp(u32),
+    /// NIC of a chassis onto the RoCE network (egress/ingress modeled
+    /// as one full-duplex pipe per direction pair).
+    ScaleOut(u32),
+}
+
+/// One contended pipe: serialized FIFO reservation model. A transfer of
+/// `bytes` starting at `now` completes at
+/// `max(now, busy_until) + latency + bytes / bandwidth`.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub bw_bytes_per_s: f64,
+    pub latency_s: f64,
+    pub busy_until_s: f64,
+    /// Total bytes carried (utilization accounting).
+    pub bytes_carried: f64,
+}
+
+impl Link {
+    pub fn new(bw_gbit: f64, latency_s: f64) -> Link {
+        Link {
+            bw_bytes_per_s: bw_gbit * 1e9 / 8.0,
+            latency_s,
+            busy_until_s: 0.0,
+            bytes_carried: 0.0,
+        }
+    }
+
+    /// Reserve the link for a transfer; returns (start, completion).
+    pub fn reserve(&mut self, bytes: f64, now_s: f64) -> (f64, f64) {
+        let start = now_s.max(self.busy_until_s);
+        let done = start + self.latency_s + bytes / self.bw_bytes_per_s;
+        self.busy_until_s = done;
+        self.bytes_carried += bytes;
+        (start, done)
+    }
+
+    /// Completion time without reserving (what-if query).
+    pub fn peek(&self, bytes: f64, now_s: f64) -> f64 {
+        now_s.max(self.busy_until_s) + self.latency_s + bytes / self.bw_bytes_per_s
+    }
+}
+
+/// The cluster fabric: per-chassis scale-up pipes + per-chassis NICs.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub n_chassis: u32,
+    pub slots_per_chassis: u32,
+    scaleup: Vec<Link>,
+    scaleout: Vec<Link>,
+}
+
+/// Default RoCE latencies (§5.2's "modern AI datacenter" assumptions).
+pub const SCALEUP_LATENCY_S: f64 = 2e-6;
+pub const SCALEOUT_LATENCY_S: f64 = 10e-6;
+
+impl Fabric {
+    /// Build a fabric of `n_chassis` × `slots` with the given bandwidths
+    /// (scale-up in GB/s per the device spec; scale-out in Gbit/s).
+    pub fn new(
+        n_chassis: u32,
+        slots_per_chassis: u32,
+        scaleup_gbps: f64,
+        scaleout_gbit: f64,
+    ) -> Fabric {
+        Fabric {
+            n_chassis,
+            slots_per_chassis,
+            scaleup: (0..n_chassis)
+                .map(|_| Link::new(scaleup_gbps * 8.0, SCALEUP_LATENCY_S))
+                .collect(),
+            scaleout: (0..n_chassis)
+                .map(|_| Link::new(scaleout_gbit, SCALEOUT_LATENCY_S))
+                .collect(),
+        }
+    }
+
+    pub fn validate_addr(&self, a: NodeAddr) -> Result<()> {
+        if a.chassis >= self.n_chassis || a.slot >= self.slots_per_chassis {
+            return Err(Error::Runtime(format!(
+                "address {a:?} outside fabric ({}x{})",
+                self.n_chassis, self.slots_per_chassis
+            )));
+        }
+        Ok(())
+    }
+
+    /// Schedule a transfer between accelerators; returns completion time.
+    ///
+    /// Same chassis ⇒ one scale-up hop. Cross chassis ⇒ source NIC +
+    /// destination NIC (both contended) — the RoCE path.
+    pub fn transfer(
+        &mut self,
+        from: NodeAddr,
+        to: NodeAddr,
+        bytes: f64,
+        now_s: f64,
+    ) -> Result<f64> {
+        self.validate_addr(from)?;
+        self.validate_addr(to)?;
+        if from == to {
+            return Ok(now_s); // local, free
+        }
+        if from.same_chassis(&to) {
+            let (_, done) = self.scaleup[from.chassis as usize].reserve(bytes, now_s);
+            Ok(done)
+        } else {
+            let (_, sent) = self.scaleout[from.chassis as usize].reserve(bytes, now_s);
+            let (_, done) = self.scaleout[to.chassis as usize].reserve(bytes, sent);
+            Ok(done)
+        }
+    }
+
+    /// Non-reserving estimate of a transfer's completion.
+    pub fn estimate(&self, from: NodeAddr, to: NodeAddr, bytes: f64, now_s: f64) -> f64 {
+        if from == to {
+            return now_s;
+        }
+        if from.same_chassis(&to) {
+            self.scaleup[from.chassis as usize].peek(bytes, now_s)
+        } else {
+            let sent = self.scaleout[from.chassis as usize].peek(bytes, now_s);
+            self.scaleout[to.chassis as usize].peek(bytes, sent)
+        }
+    }
+
+    /// Total bytes carried per tier (utilization reporting).
+    pub fn carried(&self) -> (f64, f64) {
+        (
+            self.scaleup.iter().map(|l| l.bytes_carried).sum(),
+            self.scaleout.iter().map(|l| l.bytes_carried).sum(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> Fabric {
+        // 2 chassis × 8 slots, 900 GB/s NVLink-ish, 400 Gbit RoCE.
+        Fabric::new(2, 8, 900.0, 400.0)
+    }
+
+    #[test]
+    fn local_transfer_is_free() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        assert_eq!(f.transfer(a, a, 1e9, 5.0).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn scaleup_faster_than_scaleout() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let b = NodeAddr { chassis: 0, slot: 1 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        let up = f.transfer(a, b, 1e9, 0.0).unwrap();
+        let mut f2 = fabric();
+        let out = f2.transfer(a, c, 1e9, 0.0).unwrap();
+        assert!(up < out, "scale-up {up} should beat scale-out {out}");
+    }
+
+    #[test]
+    fn contention_serializes() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        let t1 = f.transfer(a, c, 5e9, 0.0).unwrap();
+        let t2 = f.transfer(a, c, 5e9, 0.0).unwrap();
+        assert!(t2 > t1, "second transfer must queue behind the first");
+        // 5 GB over 50 GB/s = 0.1 s each (plus latency).
+        assert!((t1 - 0.2).abs() < 0.01, "t1={t1}");
+        assert!((t2 - 0.3).abs() < 0.01, "t2={t2}");
+    }
+
+    #[test]
+    fn cross_chassis_kv_transfer_realistic() {
+        // §5.2: 70B FP16 @ 4K-token KV ≈ 1.31 GB; over 400 Gbit ≈ 26 ms
+        // for each of two NIC hops in this model.
+        let mut f = fabric();
+        let kv = 4096.0 * 327_680.0;
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 1, slot: 3 };
+        let done = f.transfer(a, c, kv, 0.0).unwrap();
+        assert!(done > 0.02 && done < 0.1, "done={done}");
+    }
+
+    #[test]
+    fn estimate_does_not_reserve() {
+        let f2 = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        let e1 = f2.estimate(a, c, 1e9, 0.0);
+        let e2 = f2.estimate(a, c, 1e9, 0.0);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn bad_address_rejected() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let bad = NodeAddr { chassis: 9, slot: 0 };
+        assert!(f.transfer(a, bad, 1.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn carried_accounting() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let b = NodeAddr { chassis: 0, slot: 1 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        f.transfer(a, b, 100.0, 0.0).unwrap();
+        f.transfer(a, c, 50.0, 0.0).unwrap();
+        let (up, out) = f.carried();
+        assert_eq!(up, 100.0);
+        assert_eq!(out, 100.0); // 50 on each NIC
+    }
+}

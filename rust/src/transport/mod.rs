@@ -1,0 +1,17 @@
+//! RDMA transport layer model (paper §4.1 "RDMA Transport Layer",
+//! §5.2 "Deployment requirements and considerations").
+//!
+//! Two fabric tiers, as the paper assumes:
+//! * **scale-up** — shared-memory-semantics interconnect confined to a
+//!   single chassis ("typically supporting up to 8 accelerators");
+//! * **scale-out** — RoCE over commodity Ethernet, connecting chassis
+//!   without shared memory, "requiring explicit software coordination".
+//!
+//! [`fabric`] models topology + per-link contention; [`transfer`]
+//! schedules KV-cache movements and computes Eq. 1–2 feasibility.
+
+pub mod fabric;
+pub mod transfer;
+
+pub use fabric::{Fabric, LinkId, NodeAddr};
+pub use transfer::{TransferPlan, TransferScheduler};

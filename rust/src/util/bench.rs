@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Benches are built with `harness = false` in `Cargo.toml` and call
+//! [`Bench::run`] / [`Bench::throughput`]. The harness does warmup,
+//! adaptive iteration counts, and reports mean / p50 / p95 plus optional
+//! throughput — enough statistical hygiene for the §Perf iteration loop.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional items/sec derived from a per-iteration item count.
+    pub throughput: Option<f64>,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) if t >= 1e6 => format!("  {:>9.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>9.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {:>9.2} item/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters){}",
+            self.name,
+            super::fmt_duration(self.mean_s),
+            super::fmt_duration(self.p50_s),
+            super::fmt_duration(self.p95_s),
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    /// Target measurement time per case, seconds.
+    pub budget_s: f64,
+    /// Warmup time per case, seconds.
+    pub warmup_s: f64,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget_s: 1.0,
+            warmup_s: 0.2,
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI: tiny budgets.
+    pub fn quick() -> Self {
+        Bench {
+            budget_s: 0.2,
+            warmup_s: 0.05,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which is called repeatedly; returns the recorded sample.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Sample {
+        self.run_with_items(name, None, &mut || {
+            black_box(f());
+        })
+    }
+
+    /// Time `f` and report items/sec given `items` produced per call.
+    pub fn throughput<T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &Sample {
+        self.run_with_items(name, Some(items), &mut || {
+            black_box(f());
+        })
+    }
+
+    fn run_with_items(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &Sample {
+        // Warmup + calibration: find an iteration count that takes ~10ms.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = (t0.elapsed().as_secs_f64() / calib_iters as f64).max(1e-9);
+        let batch = ((0.01 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        // Measurement: batches until the budget is used, >= 5 batches.
+        let mut times = Vec::new();
+        let meas0 = Instant::now();
+        while meas0.elapsed().as_secs_f64() < self.budget_s || times.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / batch as f64);
+            if times.len() >= 10_000 {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p50 = times[times.len() / 2];
+        let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+        let sample = Sample {
+            name: name.to_string(),
+            iters: batch * times.len() as u64,
+            mean_s: mean,
+            p50_s: p50,
+            p95_s: p95,
+            min_s: times[0],
+            throughput: items.map(|n| n as f64 / mean),
+        };
+        println!("{}", sample.report());
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+}
+
+/// Percentile over a slice (nearest-rank); input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench {
+            budget_s: 0.02,
+            warmup_s: 0.005,
+            samples: Vec::new(),
+        };
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.samples.len(), 1);
+        assert!(b.samples[0].mean_s > 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench {
+            budget_s: 0.02,
+            warmup_s: 0.005,
+            samples: Vec::new(),
+        };
+        let s = b.throughput("vecsum", 1000, || (0..1000u64).sum::<u64>());
+        assert!(s.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Subcommand dispatch lives in `main.rs`; this module only tokenizes.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup with default; panics with a clear message on
+    /// malformed input (CLI surface, so fail loud and early).
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                panic!("invalid value for --{name}: {s:?}")
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("repro fig8 --models 8b,70b --verbose --seed 7");
+        assert_eq!(a.positional, vec!["repro", "fig8"]);
+        assert_eq!(a.get("models"), Some("8b,70b"));
+        assert_eq!(a.get_parsed::<u64>("seed", 0), 7);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--out=/tmp/x.json --n=3");
+        assert_eq!(a.get("out"), Some("/tmp/x.json"));
+        assert_eq!(a.get_parsed::<usize>("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("cmd --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_parsed::<u32>("missing", 42), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_typed_option_panics() {
+        parse("--n notanumber").get_parsed::<u32>("n", 0);
+    }
+}

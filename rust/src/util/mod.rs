@@ -1,0 +1,55 @@
+//! Utility substrate the offline environment forces us to own:
+//! deterministic PRNG, JSON emission, CLI parsing, a micro-benchmark
+//! harness (criterion is unavailable), and a property-testing harness
+//! (proptest is unavailable).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a duration in human units (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Format a byte count in human units.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.2}{}", v, UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(0.5e-9 * 2.0), "1.0ns");
+        assert!(fmt_duration(2.5e-6).ends_with("µs"));
+        assert!(fmt_duration(3e-3).ends_with("ms"));
+        assert!(fmt_duration(1.5).ends_with('s'));
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(fmt_bytes(512.0), "512.00B");
+        assert_eq!(fmt_bytes(2048.0), "2.00KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0 * 1024.0), "3.00GiB");
+    }
+}

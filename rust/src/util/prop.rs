@@ -1,0 +1,86 @@
+//! Property-testing harness (proptest is not in the offline registry).
+//!
+//! Minimal but honest: generators over a seeded [`Rng`](super::rng::Rng),
+//! a configurable case count, and failure reporting that prints the seed
+//! so any counterexample replays deterministically. Shrinking is traded
+//! for reproducibility — with a printed seed, `cargo test -- --nocapture`
+//! plus a temporary `case_seed` pin recovers the exact failing input.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `AH_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("AH_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` against `cases` seeded inputs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, mut prop: F) {
+    check_cases(name, default_cases(), &mut prop)
+}
+
+/// Run with an explicit case count.
+pub fn check_cases<F: FnMut(&mut Rng)>(name: &str, cases: u64, prop: &mut F) {
+    let base = 0xA6E5_7E50u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector with a random length in `[0, max_len]`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.index(max_len + 1);
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_cases("add-commutes", 64, &mut |rng| {
+            let a = rng.range(0, 1000);
+            let b = rng.range(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        // Quiet the expected panic's backtrace noise.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check_cases("always-fails", 8, &mut |_rng| panic!("boom"));
+        });
+        std::panic::set_hook(prev);
+        std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn vec_of_respects_max_len() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 7, |r| r.next_u64());
+            assert!(v.len() <= 7);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! IR integration: textual round-trips under randomized graphs, pass
+//! pipeline invariants (semantic preservation proxies), and parser
+//! robustness against malformed input.
+
+use agentic_hetero::ir::attr::Attr;
+use agentic_hetero::ir::parser::parse;
+use agentic_hetero::ir::passes::cleanup::Dce;
+use agentic_hetero::ir::passes::{Pass, PassManager};
+use agentic_hetero::ir::printer::print;
+use agentic_hetero::ir::verifier::verify;
+use agentic_hetero::ir::{Graph, GraphBuilder};
+use agentic_hetero::util::prop;
+use agentic_hetero::util::rng::Rng;
+
+/// Random linear-ish agent graph: a chain with occasional fan-out,
+/// drawn from the user-facing (pre-decomposition) op set.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let ops = [
+        "llm.infer",
+        "tool.call",
+        "mem.lookup",
+        "gp.compute",
+        "ctrl.plan",
+        "stt.transcribe",
+        "tts.synthesize",
+    ];
+    let mut b = GraphBuilder::new("random");
+    let mut values = vec![b.op("io.input", &[])];
+    let n = rng.index(12) + 1;
+    for _ in 0..n {
+        let op = *rng.choose(&ops);
+        let src = *rng.choose(&values);
+        let v = match op {
+            "llm.infer" => b.op_with(
+                op,
+                &[src],
+                &[
+                    ("model", Attr::Str("8b-fp16".into())),
+                    ("isl", Attr::Int(rng.range(16, 2048) as i64)),
+                    ("osl", Attr::Int(rng.range(8, 512) as i64)),
+                ],
+            ),
+            "tool.call" => b.op_with(op, &[src], &[("tool", Attr::Str("search".into()))]),
+            "gp.compute" => b.op_with(op, &[src], &[("op", Attr::Str("fmt".into()))]),
+            _ => b.op(op, &[src]),
+        };
+        values.push(v);
+    }
+    let out = *values.last().unwrap();
+    b.op("io.output", &[out]);
+    b.output(out);
+    b.finish()
+}
+
+#[test]
+fn random_graphs_roundtrip_and_verify() {
+    prop::check("ir-roundtrip", |rng| {
+        let g = random_graph(rng);
+        verify(&g).expect("generated graph verifies");
+        let text = print(&g);
+        let g2 = parse(&text).expect("round-trip parse");
+        verify(&g2).expect("parsed graph verifies");
+        assert_eq!(print(&g2), text, "print∘parse must be a fixpoint");
+        assert_eq!(g2.size(), g.size());
+    });
+}
+
+#[test]
+fn pipeline_preserves_io_and_verification() {
+    prop::check("ir-pipeline-invariants", |rng| {
+        let g = random_graph(rng);
+        let n_llm = g.op_names().iter().filter(|o| *o == "llm.infer").count();
+        let n_tools = g.op_names().iter().filter(|o| *o == "tool.call").count();
+        let mut lowered = g.clone();
+        PassManager::standard().run(&mut lowered).expect("pipeline");
+        verify(&lowered).expect("lowered verifies");
+
+        let names = lowered.op_names();
+        // Decomposition is total: no coarse ops survive...
+        assert!(!lowered.contains_op("llm.infer"));
+        assert!(!lowered.contains_op("tool.call"));
+        // ...and is conservative: every decomposed stage appears (unless
+        // it was dead and DCE removed the whole chain, which cannot
+        // happen here because the chain feeds io.output).
+        let live_prefills = names.iter().filter(|o| *o == "llm.prefill").count();
+        let live_lookups = names.iter().filter(|o| *o == "tool.lookup").count();
+        // Dead branches may prune some, never create extras.
+        assert!(live_prefills <= n_llm);
+        assert!(live_lookups <= n_tools);
+        // The output boundary survives everything.
+        assert!(lowered.contains_op("io.output"));
+        // Every surviving LLM stage carries cost annotation.
+        for node in &lowered.nodes {
+            if node.op == "llm.prefill" || node.op == "llm.decode" {
+                assert!(node.attr("wl_class").is_some(), "missing annotation");
+                assert!(node.attr("est_flops").is_some());
+            }
+        }
+    });
+}
+
+#[test]
+fn dce_never_removes_live_code() {
+    prop::check("ir-dce-liveness", |rng| {
+        let g = random_graph(rng);
+        let mut pruned = g.clone();
+        Dce.run(&mut pruned).unwrap();
+        verify(&pruned).unwrap();
+        // The value feeding io.output still has a producer chain back to
+        // io.input: check by re-verifying SSA + output op presence.
+        assert!(pruned.contains_op("io.output"));
+        assert!(pruned.contains_op("io.input"));
+        // Idempotence.
+        let mut again = pruned.clone();
+        let changed = Dce.run(&mut again).unwrap();
+        assert!(!changed, "DCE must reach a fixpoint in one run");
+    });
+}
+
+#[test]
+fn parser_rejects_garbage_without_panicking() {
+    let cases = [
+        "",
+        "graph",
+        "graph @g(",
+        "graph @g() { %0 = }",
+        "graph @g() { %0 = op(%1 }",
+        "graph @g() { yield %0 yield %1 }",
+        "graph @g() { %0 = io.input() } trailing",
+        "graph @g() { %0 = io.input() {k = } }",
+        "graph @g() { %0 = io.input() {k = \"unterminated} }",
+        "graph @g() {{}}",
+        "not even close",
+        "graph @g() { %999999999999999999999 = io.input() }",
+    ];
+    for src in cases {
+        let r = parse(src);
+        assert!(r.is_err(), "should reject: {src:?}");
+    }
+}
+
+#[test]
+fn parser_fuzz_never_panics() {
+    // Mutate valid IR text randomly; the parser must return Err or Ok,
+    // never panic (catch_unwind guards the claim).
+    prop::check_cases("ir-parser-fuzz", 256, &mut |rng: &mut Rng| {
+        let g = random_graph(rng);
+        let mut text: Vec<u8> = print(&g).into_bytes();
+        let mutations = rng.index(8);
+        for _ in 0..mutations {
+            if text.is_empty() {
+                break;
+            }
+            let i = rng.index(text.len());
+            match rng.index(3) {
+                0 => {
+                    text[i] = rng.range(32, 127) as u8;
+                }
+                1 => {
+                    text.remove(i);
+                }
+                _ => {
+                    let c = rng.range(32, 127) as u8;
+                    text.insert(i, c);
+                }
+            }
+        }
+        if let Ok(s) = String::from_utf8(text) {
+            let _ = parse(&s); // must not panic
+        }
+    });
+}
+
+#[test]
+fn deep_nesting_round_trips() {
+    // 6 levels of nested supervisors.
+    fn nest(depth: usize) -> Graph {
+        let mut b = GraphBuilder::new(&format!("level{depth}"));
+        let x = b.op("io.input", &[]);
+        let v = if depth == 0 {
+            b.op_with("llm.infer", &[x], &[("model", "8b-fp16".into())])
+        } else {
+            b.region_op("agent.graph", &[x], &[], nest(depth - 1))
+        };
+        b.output(v);
+        b.finish()
+    }
+    let g = nest(6);
+    verify(&g).unwrap();
+    let text = print(&g);
+    let g2 = parse(&text).unwrap();
+    verify(&g2).unwrap();
+    assert_eq!(print(&g2), text);
+    assert_eq!(g2.size(), g.size());
+}

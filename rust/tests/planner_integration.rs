@@ -1,0 +1,173 @@
+//! Planner integration: the full slow path (IR pipeline → cost
+//! annotation → assignment) over every Figure-1 agent pattern, SLA
+//! sweeps, feedback-driven replanning, and autoscale + migration
+//! round-trips.
+
+use agentic_hetero::agents::{self, patterns};
+use agentic_hetero::opt::assignment::Sla;
+use agentic_hetero::planner::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+use agentic_hetero::planner::feedback::ProfileStore;
+use agentic_hetero::planner::migration::{plan_migration, MigrationStep, RoleMap};
+use agentic_hetero::planner::plan::{Planner, PlannerConfig};
+
+fn planner(sla: Sla) -> Planner {
+    let mut cfg = PlannerConfig::default();
+    cfg.sla = sla;
+    Planner::new(cfg)
+}
+
+#[test]
+fn all_fig1_patterns_plan_successfully() {
+    let graphs = vec![
+        patterns::single_agent("8b-fp16", &["search", "calculator"]),
+        patterns::peer_network("8b-fp16", 3),
+        patterns::supervisor("8b-fp16", 3),
+        patterns::agent_as_tool("8b-fp16"),
+        patterns::custom("8b-fp16"),
+    ];
+    for g in graphs {
+        let plan = planner(Sla::None)
+            .plan(&g)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert!(!plan.placements.is_empty(), "{}", g.name);
+        assert!(plan.cost_usd.is_finite());
+        // Every placement is a real class.
+        for (_, class) in &plan.placements {
+            assert!(
+                ["A40", "A100", "Gaudi3", "MI300x", "H100", "B200", "CPU"]
+                    .contains(&class.as_str()),
+                "unknown class {class}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sla_sweep_traces_cost_latency_frontier() {
+    // As the SLA tightens, cost must be non-decreasing and latency
+    // non-increasing (a Pareto frontier walk).
+    let g = agents::voice_agent("70b-fp8", 1024, 256);
+    let loose = planner(Sla::None).plan(&g).unwrap();
+    let mut last_cost = loose.cost_usd;
+    let mut last_latency = loose.latency_s;
+    let mut tightened = 0;
+    for f in [0.95, 0.90, 0.85] {
+        let sla = loose.latency_s * f;
+        match planner(Sla::EndToEnd(sla)).plan(&g) {
+            Ok(p) => {
+                assert!(p.latency_s <= sla + 1e-9);
+                assert!(p.cost_usd >= last_cost - 1e-12, "cost must not drop");
+                assert!(p.latency_s <= last_latency + 1e-9);
+                last_cost = p.cost_usd;
+                last_latency = p.latency_s;
+                tightened += 1;
+            }
+            Err(_) => break, // below the feasible floor
+        }
+    }
+    assert!(tightened >= 1, "no feasible tightening at all");
+}
+
+#[test]
+fn moe_agent_plans_with_expert_parallelism() {
+    use agentic_hetero::ir::attr::Attr;
+    use agentic_hetero::ir::GraphBuilder;
+
+    let mut b = GraphBuilder::new("moe_agent");
+    let x = b.op("io.input", &[]);
+    let y = b.op_with(
+        "llm.infer",
+        &[x],
+        &[
+            ("model", "70b-fp8".into()),
+            ("experts", Attr::Int(4)),
+            ("top_k", Attr::Int(2)),
+        ],
+    );
+    b.op("io.output", &[y]);
+    let g = b.finish();
+
+    let plan = planner(Sla::None).plan(&g).unwrap();
+    // Expert decomposition happened and each expert got an accelerator.
+    let experts: Vec<_> = plan
+        .placements
+        .iter()
+        .filter(|(op, _)| op == "moe.expert_prefill")
+        .collect();
+    assert_eq!(experts.len(), 4);
+    for (_, class) in experts {
+        assert_ne!(class, "CPU");
+    }
+}
+
+#[test]
+fn feedback_store_flags_drift_for_replanning() {
+    let mut store = ProfileStore::new(0.5);
+    // Planner expected 50 ms prefill on H100; runtime observes 200 ms
+    // (e.g. thermal throttling) — drift detection must fire.
+    let mut expected = std::collections::BTreeMap::new();
+    expected.insert(("llm.prefill".to_string(), "H100".to_string()), 0.05);
+    for _ in 0..10 {
+        store.observe("llm.prefill", "H100", 0.2);
+    }
+    let drifted = store.drifted(&expected, 2.0);
+    assert_eq!(drifted.len(), 1);
+    let (op, class, exp, got) = &drifted[0];
+    assert_eq!(op, "llm.prefill");
+    assert_eq!(class, "H100");
+    assert!(got / exp > 3.0);
+}
+
+#[test]
+fn autoscale_then_migrate_roundtrip() {
+    // Load spike: autoscaler grows decode pipelines 2 -> 3; migration
+    // planner emits activate-before-drain steps for the fleet change.
+    let mut scaler = Autoscaler::new(AutoscalerConfig::default(), 2);
+    let mut grown = 2;
+    for _ in 0..3 {
+        if let ScaleDecision::ScaleUp(n) = scaler.observe(0.95) {
+            grown += n;
+        }
+    }
+    assert_eq!(grown, 3);
+
+    let mut current = RoleMap::new();
+    current.insert(("Gaudi3".into(), "decode".into()), 2);
+    let mut target = RoleMap::new();
+    target.insert(("Gaudi3".into(), "decode".into()), grown);
+    let plan = plan_migration(&current, &target, 4e9, 40e9);
+    assert_eq!(plan.steps.len(), 1);
+    assert!(matches!(
+        plan.steps[0],
+        MigrationStep::Activate { count: 1, .. }
+    ));
+    assert_eq!(plan.kv_bytes, 0.0, "growth moves no KV");
+}
+
+#[test]
+fn restricted_catalog_respected() {
+    // A fleet with only A40s and CPUs: the LLM must land on A40 even
+    // though better devices exist in the full catalog.
+    let g = agents::rag_agent("8b-fp16", 512, 64, 4);
+    let devices: Vec<_> = agentic_hetero::cost::hardware::catalog()
+        .into_iter()
+        .filter(|d| d.name == "A40")
+        .collect();
+    let p = Planner::new(PlannerConfig {
+        sla: Sla::None,
+        ..Default::default()
+    })
+    .with_devices(devices);
+    let plan = p.plan(&g).unwrap();
+    assert_eq!(plan.class_of("llm.prefill"), Some("A40"));
+    assert_eq!(plan.class_of("llm.decode"), Some("A40"));
+    // Every placement stays within the restricted fleet. (Light CPU-ish
+    // ops may legitimately collocate on the A40 when the γ transfer
+    // penalty exceeds the opex saving — the optimizer's call.)
+    for (op, class) in &plan.placements {
+        assert!(
+            class == "A40" || class == "CPU",
+            "{op} placed on {class}, outside the fleet"
+        );
+    }
+}

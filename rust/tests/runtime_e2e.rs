@@ -1,0 +1,167 @@
+//! Integration: the real PJRT runtime + serving loop over the AOT
+//! artifact bundle (requires `make artifacts`; tests self-skip when the
+//! bundle is absent so `cargo test` stays green pre-build).
+
+use std::path::PathBuf;
+
+use agentic_hetero::runtime::{Engine, Manifest};
+use agentic_hetero::server::{ChatRequest, Server, ServerConfig};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+// The xla PJRT client is !Send (Rc + raw pointers), so each test loads
+// its own engine; related assertions are consolidated per load to keep
+// the suite fast.
+macro_rules! require_engine {
+    () => {
+        match artifacts_dir() {
+            Some(d) => Engine::load(d).unwrap(),
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_matches_model_config() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.vocab, 256);
+    assert_eq!(m.d_model % m.n_heads, 0);
+    assert_eq!(m.head_dim, m.d_model / m.n_heads);
+    // Eq. 3 cross-check: 2·L·Hkv·D·Smax·BPE.
+    let expect = 2 * m.n_layers * m.n_kv_heads * m.head_dim * m.max_seq * 4;
+    assert_eq!(m.kv_cache_bytes_b1 as usize, expect);
+}
+
+#[test]
+fn engine_loads_and_generates_deterministically() {
+    let engine = require_engine!();
+    assert_eq!(engine.platform(), "cpu");
+
+    let prompts = vec![b"the system ".to_vec()];
+    let a = engine.generate_greedy(&prompts, 12).unwrap();
+    let b = engine.generate_greedy(&prompts, 12).unwrap();
+    assert_eq!(a, b, "greedy generation must be deterministic");
+    assert_eq!(a[0].len(), 12);
+}
+
+#[test]
+fn trained_model_emits_plausible_bytes() {
+    // The build-time training corpus is this repo's documentation, so a
+    // common-English prompt must yield mostly printable ASCII.
+    let engine = require_engine!();
+    let out = engine
+        .generate_greedy(&[b"the paper describes the ".to_vec()], 24)
+        .unwrap();
+    let printable = out[0]
+        .iter()
+        .filter(|b| (0x20..0x7F).contains(*b) || **b == b'\n')
+        .count();
+    assert!(
+        printable * 10 >= out[0].len() * 8,
+        "output not mostly printable: {:?}",
+        String::from_utf8_lossy(&out[0])
+    );
+}
+
+#[test]
+fn prefill_batch_lanes_are_independent() {
+    let engine = require_engine!();
+    let solo = engine.generate_greedy(&[b"hello world".to_vec()], 8).unwrap();
+    let pair = engine
+        .generate_greedy(&[b"hello world".to_vec(), b"and the cost ".to_vec()], 8)
+        .unwrap();
+    assert_eq!(solo[0], pair[0], "batch lane 0 must match solo run");
+}
+
+#[test]
+fn decode_respects_max_seq() {
+    let engine = require_engine!();
+    let m = &engine.manifest;
+    // Budget: max_seq - prefill_seq decode steps available.
+    let budget = m.max_seq - m.prefill_seq;
+    let out = engine
+        .generate_greedy(&[vec![b'a'; m.prefill_seq]], budget + 50)
+        .unwrap();
+    assert!(
+        out[0].len() <= budget + 1,
+        "generated {} > budget {}",
+        out[0].len(),
+        budget
+    );
+}
+
+#[test]
+fn server_serves_batched_workload_with_sla_metrics() {
+    let engine = require_engine!();
+    let mut server = Server::new(engine, ServerConfig::default());
+    let reqs: Vec<ChatRequest> = (0..6)
+        .map(|i| ChatRequest::new(i, format!("request number {i} says "), 8))
+        .collect();
+    let responses = server.run_workload(reqs).unwrap();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert!(!r.rejected);
+        assert_eq!(r.tokens, 8);
+        assert!(r.ttft_s >= 0.0 && r.e2e_s >= r.ttft_s);
+    }
+    let report = server.metrics.report();
+    assert!(report.contains("server_requests 6"), "{report}");
+    assert!(report.contains("server_tokens_out 48"), "{report}");
+}
+
+#[test]
+fn multi_turn_session_accumulates_history() {
+    let engine = require_engine!();
+    let mut server = Server::new(engine, ServerConfig::default());
+
+    let mut t1 = ChatRequest::new(1, "first turn. ", 6);
+    t1.session = Some(42);
+    let r1 = server.run_workload(vec![t1]).unwrap();
+
+    // Second turn in the same session vs a fresh session: same input,
+    // different context => (almost surely) different continuation.
+    let mut t2_same = ChatRequest::new(2, "next turn. ", 6);
+    t2_same.session = Some(42);
+    let r2 = server.run_workload(vec![t2_same]).unwrap();
+
+    assert_eq!(r1.len(), 1);
+    assert_eq!(r2.len(), 1);
+    assert_eq!(r2[0].tokens, 6);
+}
+
+#[test]
+fn sampling_temperature_produces_variation() {
+    let engine = require_engine!();
+    let mut server = Server::new(engine, ServerConfig::default());
+    let mut reqs = Vec::new();
+    for i in 0..4 {
+        let mut r = ChatRequest::new(i, "variation test ", 10);
+        r.temperature = 1.2;
+        reqs.push(r);
+    }
+    let responses = server.run_workload(reqs).unwrap();
+    // Different request ids seed different samplers: expect >=2 distinct
+    // outputs across 4 hot-temperature runs of the same prompt.
+    let distinct: std::collections::BTreeSet<Vec<u8>> =
+        responses.iter().map(|r| r.output.clone()).collect();
+    assert!(distinct.len() >= 2, "no sampling variation");
+}
