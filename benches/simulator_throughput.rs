@@ -52,4 +52,33 @@ fn main() {
         i += 1;
         fabric.transfer(from, to, 1e8, i as f64).unwrap()
     });
+
+    // Agent-DAG execution through the unified ExecutionPlan: the voice
+    // agent's full stage graph (CPU pre/post + disaggregated LLM) per
+    // request, against the planner's own fleet.
+    use agentic_hetero::cluster::sim::simulate_plan;
+    use agentic_hetero::opt::assignment::Sla;
+    use agentic_hetero::planner::plan::{Planner, PlannerConfig};
+
+    let agent = agentic_hetero::agents::voice_agent("8b-fp16", 512, 128);
+    let mut cfg = PlannerConfig::default();
+    cfg.sla = Sla::EndToEnd(5.0);
+    let plan = Planner::new(cfg).plan(&agent).unwrap();
+    let dag_trace = generate(&TraceConfig {
+        n_requests: 256,
+        rate: 16.0,
+        isl_mean: 512,
+        osl_mean: 64,
+        sigma: 0.3,
+        seed: 13,
+    });
+    let dag_events = simulate_plan(&plan, &dag_trace).unwrap().events_processed;
+    println!(
+        "agent-DAG trace of {} requests -> {} events",
+        dag_trace.len(),
+        dag_events
+    );
+    b.throughput("sim/dag_256req_trace_events", dag_events, || {
+        simulate_plan(&plan, &dag_trace).unwrap().tokens_per_s
+    });
 }

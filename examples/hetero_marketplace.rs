@@ -10,12 +10,17 @@
 //! cargo run --release --example hetero_marketplace
 //! ```
 
+use agentic_hetero::agents;
+use agentic_hetero::cluster::sim::simulate_plan;
+use agentic_hetero::cluster::trace::{generate, TraceConfig};
 use agentic_hetero::cost::hardware::catalog;
 use agentic_hetero::cost::model_profile::table4;
+use agentic_hetero::opt::assignment::Sla;
 use agentic_hetero::opt::parallelism::{best_config, ExploreOpts, SeqShape, SlaMode};
 use agentic_hetero::planner::migration::{plan_migration, RoleMap};
+use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let devices = catalog();
     let opts = ExploreOpts::default();
     let shape = SeqShape { isl: 1024, osl: 1024 };
@@ -65,5 +70,26 @@ fn main() -> anyhow::Result<()> {
         plan.kv_bytes / 1e9,
         plan.est_duration_s
     );
+
+    // Buyer-side validation: plan a RAG agent on the marketplace fleet
+    // and execute its full DAG (embed → vector lookup → assemble →
+    // prefill → decode → store) in the cluster simulator via the
+    // unified ExecutionPlan.
+    println!("\n=== buyer check: RAG agent DAG on the planned fleet ===");
+    let rag = agents::rag_agent("8b-fp16", 1024, 128, 8);
+    let mut pcfg = PlannerConfig::default();
+    pcfg.sla = Sla::EndToEnd(4.0);
+    let exec_plan = Planner::new(pcfg).plan(&rag)?;
+    println!("  {}", exec_plan.summary());
+    let trace = generate(&TraceConfig {
+        n_requests: 128,
+        rate: 8.0,
+        isl_mean: 1024,
+        osl_mean: 128,
+        sigma: 0.3,
+        seed: 21,
+    });
+    let report = simulate_plan(&exec_plan, &trace)?;
+    println!("  {}", report.summary());
     Ok(())
 }

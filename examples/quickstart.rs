@@ -11,7 +11,7 @@ use agentic_hetero::ir::printer;
 use agentic_hetero::opt::assignment::Sla;
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Author an agent — the paper's Figure-2 conversational voice
     //    agent with an 8B FP16 LLM, 512-token prompts, 256-token replies.
     let agent = agents::voice_agent("8b-fp16", 512, 256);
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let plan = planner.plan(&agent)?;
 
     println!("\n=== placement (SLA 2s) ===");
-    for (op, class) in &plan.placements {
+    for (op, class) in plan.placements() {
         println!("  {op:<22} -> {class}");
     }
     println!(

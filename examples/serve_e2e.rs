@@ -24,10 +24,10 @@ const MAX_NEW_TOKENS: usize = 24;
 const SLA_TTFT_S: f64 = 0.250;
 const SLA_TBT_S: f64 = 0.100;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t_load = Instant::now();
     let engine = Engine::load("artifacts")
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
     println!(
         "engine: platform={} model={} params, buckets {:?}, loaded in {:.1}s",
         engine.platform(),

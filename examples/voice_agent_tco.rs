@@ -1,36 +1,44 @@
 //! Voice-agent TCO study — the paper's §5 evaluation scenario end to
-//! end: plan the Figure-2 voice agent across the catalog, then validate
-//! the chosen disaggregated placement in the discrete-event cluster
-//! simulator under increasing load.
+//! end, driven by one serializable ExecutionPlan: plan the Figure-2
+//! voice agent across the catalog, round-trip the plan through JSON,
+//! and execute the *full agent DAG* (STT → search loop → prefill →
+//! decode → TTS) in the discrete-event cluster simulator under
+//! increasing load.
 //!
 //! ```bash
 //! cargo run --release --example voice_agent_tco
 //! ```
 
 use agentic_hetero::agents;
-use agentic_hetero::cluster::sim::{pair_placement, ClusterSim};
+use agentic_hetero::cluster::sim::simulate_plan;
 use agentic_hetero::cluster::trace::{voice_agent as voice_trace, TraceConfig};
 use agentic_hetero::cost::hardware::by_name;
 use agentic_hetero::cost::model_profile::llama3_8b;
-use agentic_hetero::cost::roofline::Parallelism;
 use agentic_hetero::cost::Precision;
 use agentic_hetero::opt::assignment::Sla;
 use agentic_hetero::opt::parallelism::{best_config, ExploreOpts, SeqShape, SlaMode};
+use agentic_hetero::plan::ExecutionPlan;
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
-use agentic_hetero::transport::fabric::Fabric;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ---- 1. Plan the agent graph (slow path) -------------------------
     let agent = agents::voice_agent("8b-fp16", 512, 256);
     let mut cfg = PlannerConfig::default();
     cfg.sla = Sla::EndToEnd(3.0);
     let plan = Planner::new(cfg).plan(&agent)?;
     println!("=== graph placement (SLA 3s) ===");
-    for (op, class) in &plan.placements {
+    for (op, class) in plan.placements() {
         println!("  {op:<22} -> {class}");
     }
+    println!("  {}", plan.summary());
 
-    // ---- 2. Size the LLM stages: which prefill::decode pair? ---------
+    // ---- 2. The plan is a durable artifact: JSON round-trip ----------
+    let json = plan.to_json_string();
+    let replayed = ExecutionPlan::parse_json(&json)?;
+    assert_eq!(replayed, plan, "plan must survive save/replay");
+    println!("\nplan JSON: {} bytes, round-trips losslessly", json.len());
+
+    // ---- 3. Size the LLM stages: which prefill::decode pair? ---------
     let m = llama3_8b(Precision::Fp16);
     let opts = ExploreOpts::default();
     let shape = SeqShape { isl: 512, osl: 256 };
@@ -64,23 +72,12 @@ fn main() -> anyhow::Result<()> {
     let (best_pair, best_cost) = best.expect("some pair feasible");
     println!("  -> winner: {best_pair} at ${best_cost:.3}/Mtok");
 
-    // ---- 3. Validate in the cluster simulator under rising load ------
-    println!("\n=== simulator validation (H100 prefill :: Gaudi3 decode) ===");
-    let h100 = by_name("H100").unwrap();
-    let gaudi = by_name("Gaudi3").unwrap();
+    // ---- 4. Execute the planned agent DAG under rising load ----------
+    // The same replayed plan drives the simulator: CPU stages (STT,
+    // search loop, TTS) on the worker pool, prefill/decode on the
+    // planned pipelines, KV handoffs over the fabric.
+    println!("\n=== agent-DAG simulation of the plan ===");
     for rate in [2.0, 8.0, 16.0] {
-        let placement = pair_placement(
-            &h100,
-            Parallelism { tp: 1, pp: 1 },
-            1,
-            8,
-            &gaudi,
-            Parallelism { tp: 1, pp: 1 },
-            2,
-            64,
-        );
-        let fabric = Fabric::new(4, 8, h100.scaleup_bw_gbps, 400.0);
-        let mut sim = ClusterSim::new(llama3_8b(Precision::Fp16), placement, fabric);
         let trace = voice_trace(&TraceConfig {
             n_requests: 192,
             rate,
@@ -89,14 +86,15 @@ fn main() -> anyhow::Result<()> {
             sigma: 0.3,
             seed: 7,
         });
-        let report = sim.run(&trace)?;
+        let report = simulate_plan(&replayed, &trace)?;
         println!("  rate {rate:>4.0} req/s: {}", report.summary());
     }
 
     println!(
-        "\nTakeaway: the planner pins STT/TTS/tools to CPUs, disaggregates the \
-         LLM, and the heterogeneous pair sustains the voice-agent SLA at a \
-         lower $/Mtok than the homogeneous H100 baseline."
+        "\nTakeaway: one ExecutionPlan pins STT/TTS/tools to CPUs, \
+         disaggregates the LLM across heterogeneous pipelines, survives a \
+         JSON round-trip, and sustains the voice-agent SLA in full-DAG \
+         simulation."
     );
     Ok(())
 }

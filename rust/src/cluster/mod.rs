@@ -9,12 +9,18 @@
 //! throughput, utilization, and $/Mtok — so planner decisions can be
 //! validated end-to-end rather than just analytically.
 //!
-//! * [`sim`] — the event loop, pipelines, continuous decode batching;
+//! * [`sim`] — the flat event loop, pipelines, continuous decode
+//!   batching, and [`sim::simulate_plan`] — the
+//!   [`ExecutionPlan`](crate::plan::ExecutionPlan)-native entry point;
+//! * [`dag`] — full agent-DAG execution per request (CPU stages, tool
+//!   calls, multiple LLM inferences, per-edge fabric transfers);
 //! * [`trace`] — workload generators (Poisson arrivals, lognormal
 //!   sequence lengths, the Figure-2 voice-agent stage structure).
 
+pub mod dag;
 pub mod sim;
 pub mod trace;
 
-pub use sim::{ClusterSim, Placement, PipelineSpec, SimReport};
+pub use dag::DagSim;
+pub use sim::{simulate_plan, ClusterSim, Placement, PipelineSpec, SimReport};
 pub use trace::{Request, TraceConfig};

@@ -191,6 +191,21 @@ impl ClusterSim {
         }
     }
 
+    /// Build a flat (single prefill→decode) simulator directly from an
+    /// [`ExecutionPlan`]: the placement, fabric, and model all come from
+    /// the plan, so the simulated fleet is exactly the planned fleet.
+    pub fn from_plan(plan: &crate::plan::ExecutionPlan) -> Result<ClusterSim> {
+        plan.validate()?;
+        let model = crate::cost::model_profile::by_short_name(&plan.model)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "plan model `{}` not in the profile catalog",
+                    plan.model
+                ))
+            })?;
+        Ok(ClusterSim::new(model, plan.placement()?, plan.build_fabric()?))
+    }
+
     fn push(&mut self, t: f64, ev: Ev) {
         self.seq += 1;
         self.heap.push(Reverse(Event {
@@ -456,6 +471,19 @@ impl ClusterSim {
             events_processed: events,
         })
     }
+}
+
+/// Execute an [`ExecutionPlan`](crate::plan::ExecutionPlan)'s full
+/// agent DAG against its planned fleet — CPU pre/post stages, tool/IO
+/// nodes, any number of LLM inferences per request, with per-edge
+/// fabric transfers. This is the plan-native entry point; the flat
+/// [`ClusterSim`] remains for single-LLM request streams and the
+/// analytic cross-checks.
+pub fn simulate_plan(
+    plan: &crate::plan::ExecutionPlan,
+    trace: &[Request],
+) -> Result<SimReport> {
+    super::dag::DagSim::new(plan)?.run(trace)
 }
 
 /// Convenience: build a homogeneous-pair placement (`n_p` prefill and

@@ -217,6 +217,10 @@ pub fn parse(src: &str) -> Result<Document> {
 #[derive(Debug, Clone)]
 pub struct DeployConfig {
     pub artifacts_dir: String,
+    /// Optional saved [`crate::plan::ExecutionPlan`] JSON; when set, the
+    /// server derives its batching/admission policy from the plan
+    /// instead of the knobs below (`[server] plan = "voice.plan.json"`).
+    pub plan_path: Option<String>,
     pub max_batch: usize,
     pub batch_wait_ms: u64,
     pub max_new_tokens: u64,
@@ -232,6 +236,7 @@ impl Default for DeployConfig {
     fn default() -> Self {
         DeployConfig {
             artifacts_dir: "artifacts".into(),
+            plan_path: None,
             max_batch: 4,
             batch_wait_ms: 5,
             max_new_tokens: 24,
@@ -262,6 +267,9 @@ impl DeployConfig {
         };
         if let Some(v) = doc.get("server", "artifacts_dir").and_then(|v| v.as_str()) {
             cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("server", "plan").and_then(|v| v.as_str()) {
+            cfg.plan_path = Some(v.to_string());
         }
         cfg.max_batch = get_i("server", "max_batch", cfg.max_batch as i64) as usize;
         cfg.batch_wait_ms = get_i("server", "batch_wait_ms", cfg.batch_wait_ms as i64) as u64;
@@ -353,6 +361,14 @@ models = ["tiny-llama"]
         assert_eq!(cfg.max_batch, 2);
         assert_eq!(cfg.sla_ttft_ms, 250.0); // default
         assert_eq!(cfg.workers.len(), 1);
+        assert_eq!(cfg.plan_path, None);
+    }
+
+    #[test]
+    fn plan_path_parses() {
+        let cfg =
+            DeployConfig::from_str_src("[server]\nplan = \"voice.plan.json\"\n").unwrap();
+        assert_eq!(cfg.plan_path.as_deref(), Some("voice.plan.json"));
     }
 
     #[test]

@@ -185,6 +185,30 @@ impl Graph {
         }
     }
 
+    /// Top-level dataflow edges as (producer index, consumer index)
+    /// pairs over `self.nodes` order, deduplicated. Nested regions are
+    /// closed scopes and contribute no edges here. This is the DAG the
+    /// planner binds and the cluster simulator executes per request.
+    pub fn dataflow_edges(&self) -> Vec<(usize, usize)> {
+        let mut producer_of: BTreeMap<ValueId, usize> = BTreeMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            for r in &n.results {
+                producer_of.insert(*r, i);
+            }
+        }
+        let mut edges = Vec::new();
+        for (j, n) in self.nodes.iter().enumerate() {
+            for o in &n.operands {
+                if let Some(&i) = producer_of.get(o) {
+                    if !edges.contains(&(i, j)) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+        }
+        edges
+    }
+
     /// Total node count including nested regions.
     pub fn size(&self) -> usize {
         self.nodes
@@ -295,6 +319,12 @@ mod tests {
         bad.reserve_value(v_future);
         bad.push("io.output", vec![v_future], 0, BTreeMap::new(), None);
         assert!(!bad.is_ssa_ordered(&[]));
+    }
+
+    #[test]
+    fn dataflow_edges_follow_ssa_chain() {
+        let g = simple_graph();
+        assert_eq!(g.dataflow_edges(), vec![(0, 1), (1, 2)]);
     }
 
     #[test]

@@ -169,15 +169,15 @@ mod tests {
         // Each inner LLM got inlined, decomposed, and placed on an
         // accelerator: 2 workers + the supervisor-merge LLM.
         let prefills: Vec<_> = plan
-            .placements
+            .bindings
             .iter()
-            .filter(|(op, _)| op == "llm.prefill")
+            .filter(|b| b.op == "llm.prefill")
             .collect();
-        assert_eq!(prefills.len(), 3, "{:?}", plan.placements);
-        for (_, class) in prefills {
-            assert_ne!(class, "CPU");
+        assert_eq!(prefills.len(), 3, "{:?}", plan.bindings);
+        for b in prefills {
+            assert_ne!(b.class, "CPU");
         }
-        assert!(!plan.placements.iter().any(|(op, _)| op == "agent.graph"));
+        assert!(!plan.bindings.iter().any(|b| b.op == "agent.graph"));
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod ir;
 pub mod kvcache;
 pub mod obs;
 pub mod opt;
+pub mod plan;
 pub mod planner;
 pub mod repro;
 pub mod router;
@@ -39,31 +40,57 @@ pub mod server;
 pub mod transport;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled Display/Error — the offline
+/// registry has no thiserror).
+#[derive(Debug)]
 pub enum Error {
-    #[error("ir error: {0}")]
     Ir(String),
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("verification failed: {0}")]
     Verify(String),
-    #[error("optimizer error: {0}")]
     Opt(String),
-    #[error("infeasible: {0}")]
     Infeasible(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("capacity exceeded: {0}")]
     Capacity(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Ir(m) => write!(f, "ir error: {m}"),
+            Error::Parse { line, msg } => {
+                write!(f, "parse error at line {line}: {msg}")
+            }
+            Error::Verify(m) => write!(f, "verification failed: {m}"),
+            Error::Opt(m) => write!(f, "optimizer error: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Capacity(m) => write!(f, "capacity exceeded: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

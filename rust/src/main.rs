@@ -3,15 +3,16 @@
 //! ```text
 //! agentic-hetero repro <id|all> [--json] [--out FILE]   regenerate paper tables/figures
 //! agentic-hetero plan  [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
+//!                      [--out PLAN.json]                emit an ExecutionPlan
 //! agentic-hetero ir    [--agent ...] [--raw]            print (lowered) agent IR
-//! agentic-hetero serve [--config FILE] [--requests N] [--max-new N]
-//! agentic-hetero simulate [--prefill H100] [--decode Gaudi3] [--model 8b-fp16]
-//!                        [--rate R] [--requests N]
+//! agentic-hetero serve [--config FILE] [--plan PLAN.json] [--requests N] [--max-new N]
+//! agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3]
+//!                        [--model 8b-fp16] [--rate R] [--requests N]
 //! agentic-hetero help
 //! ```
 
 use agentic_hetero::agents;
-use agentic_hetero::cluster::sim::{pair_placement, ClusterSim};
+use agentic_hetero::cluster::sim::{pair_placement, simulate_plan, ClusterSim};
 use agentic_hetero::cluster::trace::{voice_agent as voice_trace, TraceConfig};
 use agentic_hetero::config::DeployConfig;
 use agentic_hetero::cost::hardware::by_name;
@@ -20,12 +21,26 @@ use agentic_hetero::cost::roofline::Parallelism;
 use agentic_hetero::ir::passes::PassManager;
 use agentic_hetero::ir::printer;
 use agentic_hetero::opt::assignment::Sla;
+use agentic_hetero::plan::ExecutionPlan;
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 use agentic_hetero::runtime::Engine;
 use agentic_hetero::server::{ChatRequest, Server, ServerConfig};
 use agentic_hetero::transport::fabric::Fabric;
 use agentic_hetero::util::cli::Args;
 use agentic_hetero::util::json::Json;
+
+/// `args.get_parsed` with CLI error handling (exit code 2).
+macro_rules! parse_opt {
+    ($args:expr, $name:expr, $default:expr) => {
+        match $args.get_parsed($name, $default) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+}
 
 fn main() {
     let args = Args::from_env();
@@ -55,10 +70,16 @@ USAGE:
   agentic-hetero repro <all|fig3|fig4|fig7|fig8|fig9|table1|table3|table4|table5|bandwidth>
                  [--json] [--out FILE]
   agentic-hetero plan     [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
+                          [--out PLAN.json]
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
-  agentic-hetero serve    [--config FILE] [--artifacts DIR] [--requests N] [--max-new N]
-  agentic-hetero simulate [--prefill H100] [--decode Gaudi3] [--model 8b-fp16]
+  agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
+                          [--requests N] [--max-new N]
+  agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
                           [--rate R] [--requests N] [--voice]
+
+The `plan` command emits a serializable ExecutionPlan; `simulate --plan`
+replays it through the agent-DAG cluster simulator and `serve --plan`
+derives the batching/admission policy from the same artifact.
 ";
 
 fn cmd_repro(args: &Args) -> i32 {
@@ -77,11 +98,11 @@ fn cmd_repro(args: &Args) -> i32 {
     let as_json = args.flag("json");
     let mut out = String::new();
     if as_json {
-        let mut o = Json::obj();
+        let mut m = std::collections::BTreeMap::new();
         for a in &arts {
-            o = o.set(a.id, a.json.clone());
+            m.insert(a.id.to_string(), a.json.clone());
         }
-        out = o.pretty();
+        out = Json::Obj(m).pretty();
     } else {
         for a in &arts {
             out.push_str(&format!("\n=== {} ===\n{}\n", a.title, a.text));
@@ -100,6 +121,14 @@ fn cmd_repro(args: &Args) -> i32 {
     0
 }
 
+/// Load a saved ExecutionPlan from disk (shared by `serve` and
+/// `simulate`); the error string carries the path context.
+fn load_plan(path: &str) -> Result<ExecutionPlan, String> {
+    let src =
+        std::fs::read_to_string(path).map_err(|e| format!("plan {path}: {e}"))?;
+    ExecutionPlan::parse_json(&src).map_err(|e| format!("plan {path}: {e}"))
+}
+
 fn build_agent(args: &Args) -> agentic_hetero::ir::Graph {
     let model = args.get_or("model", "8b-fp16");
     if by_short_name(model).is_none() {
@@ -115,7 +144,7 @@ fn build_agent(args: &Args) -> agentic_hetero::ir::Graph {
 fn cmd_plan(args: &Args) -> i32 {
     let g = build_agent(args);
     let mut cfg = PlannerConfig::default();
-    let sla_ms: f64 = args.get_parsed("sla-ms", 5000.0);
+    let sla_ms: f64 = parse_opt!(args, "sla-ms", 5000.0);
     cfg.sla = if sla_ms <= 0.0 {
         Sla::None
     } else {
@@ -125,7 +154,7 @@ fn cmd_plan(args: &Args) -> i32 {
     match planner.plan(&g) {
         Ok(plan) => {
             println!("plan for @{} (SLA {:.0} ms):", g.name, sla_ms);
-            for (op, class) in &plan.placements {
+            for (op, class) in plan.placements() {
                 println!("  {op:<22} -> {class}");
             }
             println!(
@@ -133,6 +162,16 @@ fn cmd_plan(args: &Args) -> i32 {
                 plan.cost_usd,
                 plan.latency_s * 1e3
             );
+            println!("{}", plan.summary());
+            // `--out plan.json`: persist the ExecutionPlan for
+            // `simulate --plan` / `serve --plan` replay.
+            if let Some(path) = args.get("out") {
+                if let Err(e) = std::fs::write(path, plan.to_json_string()) {
+                    eprintln!("write {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
             0
         }
         Err(e) => {
@@ -170,8 +209,28 @@ fn cmd_serve(args: &Args) -> i32 {
         None => DeployConfig::default(),
     };
     let artifacts = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
-    let n: usize = args.get_parsed("requests", 16usize);
-    let max_new: usize = args.get_parsed("max-new", cfg.max_new_tokens as usize);
+    let n: usize = parse_opt!(args, "requests", 16usize);
+    let max_new: usize = parse_opt!(args, "max-new", cfg.max_new_tokens as usize);
+
+    // `--plan FILE` (or `[server] plan = ...` in the config) derives the
+    // batching/admission policy from a saved ExecutionPlan.
+    let plan_path = args
+        .get("plan")
+        .map(|s| s.to_string())
+        .or_else(|| cfg.plan_path.clone());
+    let server_cfg = match &plan_path {
+        Some(path) => match load_plan(path) {
+            Ok(plan) => {
+                eprintln!("serving with {}", plan.summary());
+                ServerConfig::from_plan(&plan)
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        None => ServerConfig::default(),
+    };
 
     eprintln!("loading engine from {artifacts}/ ...");
     let engine = match Engine::load(&artifacts) {
@@ -187,7 +246,7 @@ fn cmd_serve(args: &Args) -> i32 {
         engine.manifest.num_params,
         engine.manifest.buckets
     );
-    let mut server = Server::new(engine, ServerConfig::default());
+    let mut server = Server::new(engine, server_cfg);
     let prompts = [
         "the paper describes ",
         "heterogeneous systems ",
@@ -223,11 +282,48 @@ fn cmd_serve(args: &Args) -> i32 {
 }
 
 fn cmd_simulate(args: &Args) -> i32 {
+    let rate: f64 = parse_opt!(args, "rate", 8.0);
+    let n: usize = parse_opt!(args, "requests", 256usize);
+
+    // `--plan FILE`: replay a saved ExecutionPlan through the agent-DAG
+    // simulator instead of a hand-assembled pair placement.
+    if let Some(path) = args.get("plan") {
+        let plan = match load_plan(path) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let tc = TraceConfig {
+            n_requests: n,
+            rate,
+            isl_mean: 512,
+            osl_mean: 128,
+            sigma: 0.4,
+            seed: 0,
+        };
+        let trace = if args.flag("voice") {
+            voice_trace(&tc)
+        } else {
+            agentic_hetero::cluster::trace::generate(&tc)
+        };
+        return match simulate_plan(&plan, &trace) {
+            Ok(report) => {
+                println!("{}", plan.summary());
+                println!("{}", report.summary());
+                0
+            }
+            Err(e) => {
+                eprintln!("simulate: {e}");
+                1
+            }
+        };
+    }
+
     let prefill = args.get_or("prefill", "H100");
     let decode = args.get_or("decode", "Gaudi3");
     let model = args.get_or("model", "8b-fp16");
-    let rate: f64 = args.get_parsed("rate", 8.0);
-    let n: usize = args.get_parsed("requests", 256usize);
 
     let (Some(pd), Some(dd)) = (by_name(prefill), by_name(decode)) else {
         eprintln!("unknown device (catalog: A40 A100 Gaudi3 MI300x H100 B200)");

@@ -1,0 +1,810 @@
+//! The **ExecutionPlan**: one typed, JSON-serializable artifact flowing
+//! from planning to execution (paper §3–§4: "a dynamic orchestration
+//! system that can place the granular components across a heterogeneous
+//! compute infrastructure and stitch them together while meeting an
+//! end-to-end SLA").
+//!
+//! Before this module the repo had three disconnected deployment
+//! representations: the optimizer's `Assignment`, the simulator's
+//! `Placement`, and a hand-configured server. An [`ExecutionPlan`] is
+//! the single contract between them:
+//!
+//! ```text
+//!   planner::Planner::plan(graph) ──► ExecutionPlan ──► util::json (save / diff / replay)
+//!                                          │
+//!                      ┌───────────────────┼──────────────────────┐
+//!                      ▼                   ▼                      ▼
+//!         cluster::sim::simulate_plan   ExecutionPlan::placement  ServerConfig::from_plan
+//!         (full agent-DAG simulation)   (+ fabric, flat LLM sim)  (batcher + admission)
+//! ```
+//!
+//! The plan carries: the **agent DAG** (every graph node bound to a
+//! hardware class, with dependency edges and transfer-byte estimates),
+//! the **pipeline fleet** (device, TP×PP, batch limit, chassis,
+//! replicas per LLM stage), the **batching/admission policy**, and the
+//! **SLA envelope** — everything needed to simulate or serve the plan
+//! without consulting the planner again.
+
+use crate::cluster::sim::{Placement, PipelineSpec};
+use crate::cost::hardware::by_name;
+use crate::cost::roofline::Parallelism;
+use crate::opt::assignment::Sla;
+use crate::router::admission::AdmissionConfig;
+use crate::router::batcher::BatcherConfig;
+use crate::transport::fabric::Fabric;
+use crate::util::json::Json;
+use crate::{jobj, Error, Result};
+
+/// Current serialization format version.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Execution stage of a bound agent-graph node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// LLM prefill (or MoE expert prefill): runs on a prefill pipeline.
+    LlmPrefill,
+    /// LLM decode: runs on a decode pipeline with continuous batching.
+    LlmDecode,
+    /// Everything else — STT/TTS, tool calls, IO, control, memory ops —
+    /// executed on the CPU worker pool at the planner-profiled latency.
+    Cpu,
+}
+
+impl Stage {
+    /// Classify an IR op name.
+    pub fn of_op(op: &str) -> Stage {
+        match op {
+            "llm.prefill" | "moe.expert_prefill" => Stage::LlmPrefill,
+            "llm.decode" | "moe.expert_decode" => Stage::LlmDecode,
+            _ => Stage::Cpu,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::LlmPrefill => "llm_prefill",
+            Stage::LlmDecode => "llm_decode",
+            Stage::Cpu => "cpu",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<Stage> {
+        match s {
+            "llm_prefill" => Ok(Stage::LlmPrefill),
+            "llm_decode" => Ok(Stage::LlmDecode),
+            "cpu" => Ok(Stage::Cpu),
+            other => Err(Error::Config(format!("unknown stage `{other}`"))),
+        }
+    }
+}
+
+/// One agent-graph node bound to a hardware class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeBinding {
+    /// IR op name ("llm.prefill", "stt.transcribe", ...).
+    pub op: String,
+    /// Chosen hardware class ("H100", "CPU", ...).
+    pub class: String,
+    pub stage: Stage,
+    /// Planner-profiled latency on the chosen class, seconds. For LLM
+    /// stages the simulator re-times with the roofline model; for CPU
+    /// stages this is the simulated service time.
+    pub latency_s: f64,
+    /// Planner-estimated cost on the chosen class, $/request.
+    pub cost_usd: f64,
+    /// Dataflow dependencies: indices into `ExecutionPlan::bindings`.
+    pub deps: Vec<usize>,
+    /// Estimated bytes received over incoming edges (fabric transfers
+    /// when producer and consumer sit on different chassis).
+    pub xfer_bytes: f64,
+}
+
+/// Role of a serving pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Prefill,
+    Decode,
+}
+
+impl Role {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Prefill => "prefill",
+            Role::Decode => "decode",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<Role> {
+        match s {
+            "prefill" => Ok(Role::Prefill),
+            "decode" => Ok(Role::Decode),
+            other => Err(Error::Config(format!("unknown role `{other}`"))),
+        }
+    }
+}
+
+/// A serving pipeline group: `replicas` copies of a (device, TP×PP,
+/// batch limit) unit, occupying consecutive chassis starting at
+/// `chassis`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineBinding {
+    pub role: Role,
+    /// Device name, resolvable via [`crate::cost::hardware::by_name`].
+    pub device: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub max_batch: u64,
+    pub replicas: u32,
+    pub chassis: u32,
+}
+
+impl PipelineBinding {
+    pub fn par(&self) -> Parallelism {
+        Parallelism {
+            tp: self.tp,
+            pp: self.pp,
+        }
+    }
+}
+
+/// Continuous-batching policy for the serving loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPolicy {
+    /// Compiled batch buckets, ascending.
+    pub buckets: Vec<usize>,
+    /// Head-of-line wait before a partial batch is released, ms.
+    pub max_wait_ms: f64,
+    /// Decode round active-set cap.
+    pub max_decode_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            buckets: vec![1, 2, 4],
+            max_wait_ms: 10.0,
+            max_decode_batch: 4,
+        }
+    }
+}
+
+/// Admission policy (token bucket + queue-depth shedding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionPolicy {
+    pub rate: f64,
+    pub burst: f64,
+    pub max_queue_depth: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy {
+            rate: 1000.0,
+            burst: 100.0,
+            max_queue_depth: 4096,
+        }
+    }
+}
+
+/// Fabric sizing carried with the plan so simulation is reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    pub slots_per_chassis: u32,
+    /// Scale-out NIC bandwidth per chassis, Gbit/s.
+    pub scaleout_gbit: f64,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        FabricSpec {
+            slots_per_chassis: 8,
+            scaleout_gbit: 400.0,
+        }
+    }
+}
+
+/// Serializable mirror of [`crate::opt::assignment::Sla`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlaSpec {
+    None,
+    EndToEnd(f64),
+    Soft { t_sla_s: f64, lambda: f64 },
+}
+
+impl From<Sla> for SlaSpec {
+    fn from(s: Sla) -> SlaSpec {
+        match s {
+            Sla::None => SlaSpec::None,
+            Sla::EndToEnd(t) => SlaSpec::EndToEnd(t),
+            Sla::Soft { t_sla_s, lambda } => SlaSpec::Soft { t_sla_s, lambda },
+        }
+    }
+}
+
+impl From<SlaSpec> for Sla {
+    fn from(s: SlaSpec) -> Sla {
+        match s {
+            SlaSpec::None => Sla::None,
+            SlaSpec::EndToEnd(t) => Sla::EndToEnd(t),
+            SlaSpec::Soft { t_sla_s, lambda } => Sla::Soft { t_sla_s, lambda },
+        }
+    }
+}
+
+/// The unified planning → execution artifact. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Agent graph symbol name.
+    pub agent: String,
+    /// Model short name ("8b-fp16"); empty when the graph has no LLM.
+    pub model: String,
+    pub sla: SlaSpec,
+    /// The bound agent DAG, in graph node order (a topological order —
+    /// IR regions are SSA).
+    pub bindings: Vec<NodeBinding>,
+    /// The LLM serving fleet.
+    pub pipelines: Vec<PipelineBinding>,
+    pub batching: BatchPolicy,
+    pub admission: AdmissionPolicy,
+    pub fabric: FabricSpec,
+    /// CPU worker slots for non-LLM stages (tool calls, STT/TTS, ...).
+    pub cpu_workers: u32,
+    /// Planner objective value, $/request.
+    pub cost_usd: f64,
+    /// Planner critical-path latency estimate, seconds.
+    pub latency_s: f64,
+    /// Lowering pass log: (pass name, changed).
+    pub pass_log: Vec<(String, bool)>,
+}
+
+impl ExecutionPlan {
+    /// Which class a given op landed on (first occurrence).
+    pub fn class_of(&self, op: &str) -> Option<&str> {
+        self.bindings
+            .iter()
+            .find(|b| b.op == op)
+            .map(|b| b.class.as_str())
+    }
+
+    /// (op, class) pairs in DAG order — the shape the old `GraphPlan`
+    /// exposed, kept for display code.
+    pub fn placements(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.bindings
+            .iter()
+            .map(|b| (b.op.as_str(), b.class.as_str()))
+    }
+
+    /// Number of chassis the pipeline fleet occupies (≥ 1).
+    pub fn n_chassis(&self) -> u32 {
+        self.pipelines
+            .iter()
+            .map(|p| p.chassis + p.replicas)
+            .max()
+            .unwrap_or(0)
+            .max(1)
+    }
+
+    /// Structural validation: DAG sanity, resolvable devices, pipelines
+    /// for every LLM stage, sane policies. Run by every consumer.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.bindings.len();
+        for (i, b) in self.bindings.iter().enumerate() {
+            for &d in &b.deps {
+                if d >= n {
+                    return Err(Error::Config(format!(
+                        "binding {i} ({}) dep {d} out of range",
+                        b.op
+                    )));
+                }
+                if d >= i {
+                    return Err(Error::Config(format!(
+                        "binding {i} ({}) dep {d} not topologically earlier",
+                        b.op
+                    )));
+                }
+            }
+            if !b.latency_s.is_finite() || b.latency_s < 0.0 {
+                return Err(Error::Config(format!(
+                    "binding {i} ({}) has bad latency {}",
+                    b.op, b.latency_s
+                )));
+            }
+            if matches!(b.stage, Stage::LlmPrefill | Stage::LlmDecode) {
+                let role = if b.stage == Stage::LlmPrefill {
+                    Role::Prefill
+                } else {
+                    Role::Decode
+                };
+                if !self
+                    .pipelines
+                    .iter()
+                    .any(|p| p.role == role && p.device == b.class)
+                {
+                    return Err(Error::Config(format!(
+                        "binding {i} ({}) on {} has no {} pipeline",
+                        b.op,
+                        b.class,
+                        role.name()
+                    )));
+                }
+            }
+        }
+        for p in &self.pipelines {
+            if by_name(&p.device).is_none() {
+                return Err(Error::Config(format!(
+                    "pipeline device `{}` not in the hardware catalog",
+                    p.device
+                )));
+            }
+            if p.replicas == 0 || p.tp == 0 || p.pp == 0 || p.max_batch == 0 {
+                return Err(Error::Config(format!(
+                    "pipeline on `{}` has a zero-sized dimension",
+                    p.device
+                )));
+            }
+        }
+        if self.batching.buckets.is_empty() {
+            return Err(Error::Config("batching needs ≥ 1 bucket".into()));
+        }
+        if self.cpu_workers == 0 {
+            return Err(Error::Config("cpu_workers must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Lower the pipeline fleet to the simulator's [`Placement`]
+    /// (replicas expanded, chassis resolved, devices looked up).
+    pub fn placement(&self) -> Result<Placement> {
+        let mut prefill = Vec::new();
+        let mut decode = Vec::new();
+        for p in &self.pipelines {
+            let dev = by_name(&p.device).ok_or_else(|| {
+                Error::Config(format!("unknown device `{}`", p.device))
+            })?;
+            for r in 0..p.replicas {
+                let spec = PipelineSpec {
+                    device: dev.clone(),
+                    par: p.par(),
+                    max_batch: p.max_batch,
+                    chassis: p.chassis + r,
+                };
+                match p.role {
+                    Role::Prefill => prefill.push(spec),
+                    Role::Decode => decode.push(spec),
+                }
+            }
+        }
+        Ok(Placement { prefill, decode })
+    }
+
+    /// Build the fabric this plan assumes: one chassis per pipeline
+    /// replica, scale-up bandwidth of the fastest device in the fleet.
+    pub fn build_fabric(&self) -> Result<Fabric> {
+        let mut scaleup = 0.0f64;
+        for p in &self.pipelines {
+            let dev = by_name(&p.device).ok_or_else(|| {
+                Error::Config(format!("unknown device `{}`", p.device))
+            })?;
+            scaleup = scaleup.max(dev.scaleup_bw_gbps);
+        }
+        if scaleup == 0.0 {
+            scaleup = 900.0; // CPU-only plan: nominal NVLink-class default
+        }
+        Ok(Fabric::new(
+            self.n_chassis(),
+            self.fabric.slots_per_chassis,
+            scaleup,
+            self.fabric.scaleout_gbit,
+        ))
+    }
+
+    /// Router-facing batcher configuration.
+    pub fn batcher_config(&self) -> BatcherConfig {
+        BatcherConfig {
+            buckets: self.batching.buckets.clone(),
+            max_wait: std::time::Duration::from_secs_f64(
+                self.batching.max_wait_ms / 1e3,
+            ),
+            max_decode_batch: self.batching.max_decode_batch,
+        }
+    }
+
+    /// Router-facing admission configuration.
+    pub fn admission_config(&self) -> AdmissionConfig {
+        AdmissionConfig {
+            rate: self.admission.rate,
+            burst: self.admission.burst,
+            max_queue_depth: self.admission.max_queue_depth,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let n_llm = self
+            .bindings
+            .iter()
+            .filter(|b| b.stage != Stage::Cpu)
+            .count();
+        format!(
+            "plan @{}: {} nodes ({} llm), {} pipeline groups on {} chassis, \
+             est ${:.6}/req @ {:.0} ms",
+            self.agent,
+            self.bindings.len(),
+            n_llm,
+            self.pipelines.len(),
+            self.n_chassis(),
+            self.cost_usd,
+            self.latency_s * 1e3
+        )
+    }
+
+    // ---- JSON round-trip -------------------------------------------------
+
+    /// Serialize to the JSON tree (deterministic key order; safe to
+    /// diff). Inverse of [`ExecutionPlan::from_json`].
+    pub fn to_json(&self) -> Json {
+        let sla = match self.sla {
+            SlaSpec::None => jobj! { "kind" => "none" },
+            SlaSpec::EndToEnd(t) => jobj! { "kind" => "end_to_end", "t_sla_s" => t },
+            SlaSpec::Soft { t_sla_s, lambda } => jobj! {
+                "kind" => "soft", "t_sla_s" => t_sla_s, "lambda" => lambda,
+            },
+        };
+        let bindings: Vec<Json> = self
+            .bindings
+            .iter()
+            .map(|b| {
+                jobj! {
+                    "op" => b.op.clone(),
+                    "class" => b.class.clone(),
+                    "stage" => b.stage.name(),
+                    "latency_s" => b.latency_s,
+                    "cost_usd" => b.cost_usd,
+                    "deps" => b.deps.clone(),
+                    "xfer_bytes" => b.xfer_bytes,
+                }
+            })
+            .collect();
+        let pipelines: Vec<Json> = self
+            .pipelines
+            .iter()
+            .map(|p| {
+                jobj! {
+                    "role" => p.role.name(),
+                    "device" => p.device.clone(),
+                    "tp" => p.tp,
+                    "pp" => p.pp,
+                    "max_batch" => p.max_batch,
+                    "replicas" => p.replicas,
+                    "chassis" => p.chassis,
+                }
+            })
+            .collect();
+        let pass_log: Vec<Json> = self
+            .pass_log
+            .iter()
+            .map(|(name, changed)| jobj! { "pass" => name.clone(), "changed" => *changed })
+            .collect();
+        jobj! {
+            "version" => PLAN_VERSION,
+            "agent" => self.agent.clone(),
+            "model" => self.model.clone(),
+            "sla" => sla,
+            "bindings" => Json::Arr(bindings),
+            "pipelines" => Json::Arr(pipelines),
+            "batching" => jobj! {
+                "buckets" => self.batching.buckets.clone(),
+                "max_wait_ms" => self.batching.max_wait_ms,
+                "max_decode_batch" => self.batching.max_decode_batch,
+            },
+            "admission" => jobj! {
+                "rate" => self.admission.rate,
+                "burst" => self.admission.burst,
+                "max_queue_depth" => self.admission.max_queue_depth,
+            },
+            "fabric" => jobj! {
+                "slots_per_chassis" => self.fabric.slots_per_chassis,
+                "scaleout_gbit" => self.fabric.scaleout_gbit,
+            },
+            "cpu_workers" => self.cpu_workers,
+            "cost_usd" => self.cost_usd,
+            "latency_s" => self.latency_s,
+            "pass_log" => Json::Arr(pass_log),
+        }
+    }
+
+    /// Serialize to a pretty-printed JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// Parse a plan from a JSON string (see [`ExecutionPlan::to_json`]).
+    pub fn parse_json(src: &str) -> Result<ExecutionPlan> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    /// Rebuild a plan from its JSON tree; validates structure.
+    pub fn from_json(j: &Json) -> Result<ExecutionPlan> {
+        let version = req_u64(j, "version")?;
+        if version != PLAN_VERSION {
+            return Err(Error::Config(format!(
+                "plan version {version} unsupported (expected {PLAN_VERSION})"
+            )));
+        }
+        let sla_j = req(j, "sla")?;
+        let sla = match req_str(sla_j, "kind")? {
+            "none" => SlaSpec::None,
+            "end_to_end" => SlaSpec::EndToEnd(req_f64(sla_j, "t_sla_s")?),
+            "soft" => SlaSpec::Soft {
+                t_sla_s: req_f64(sla_j, "t_sla_s")?,
+                lambda: req_f64(sla_j, "lambda")?,
+            },
+            other => {
+                return Err(Error::Config(format!("unknown sla kind `{other}`")))
+            }
+        };
+        let mut bindings = Vec::new();
+        for b in req_arr(j, "bindings")? {
+            let deps = req_arr(b, "deps")?
+                .iter()
+                .map(|d| {
+                    d.as_u64().map(|v| v as usize).ok_or_else(|| {
+                        Error::Config("binding dep must be an integer".into())
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            bindings.push(NodeBinding {
+                op: req_str(b, "op")?.to_string(),
+                class: req_str(b, "class")?.to_string(),
+                stage: Stage::from_name(req_str(b, "stage")?)?,
+                latency_s: req_f64(b, "latency_s")?,
+                cost_usd: req_f64(b, "cost_usd")?,
+                deps,
+                xfer_bytes: req_f64(b, "xfer_bytes")?,
+            });
+        }
+        let mut pipelines = Vec::new();
+        for p in req_arr(j, "pipelines")? {
+            pipelines.push(PipelineBinding {
+                role: Role::from_name(req_str(p, "role")?)?,
+                device: req_str(p, "device")?.to_string(),
+                tp: req_u64(p, "tp")? as u32,
+                pp: req_u64(p, "pp")? as u32,
+                max_batch: req_u64(p, "max_batch")?,
+                replicas: req_u64(p, "replicas")? as u32,
+                chassis: req_u64(p, "chassis")? as u32,
+            });
+        }
+        let batching_j = req(j, "batching")?;
+        let batching = BatchPolicy {
+            buckets: req_arr(batching_j, "buckets")?
+                .iter()
+                .map(|b| {
+                    b.as_u64().map(|v| v as usize).ok_or_else(|| {
+                        Error::Config("bucket must be an integer".into())
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?,
+            max_wait_ms: req_f64(batching_j, "max_wait_ms")?,
+            max_decode_batch: req_u64(batching_j, "max_decode_batch")? as usize,
+        };
+        let admission_j = req(j, "admission")?;
+        let admission = AdmissionPolicy {
+            rate: req_f64(admission_j, "rate")?,
+            burst: req_f64(admission_j, "burst")?,
+            max_queue_depth: req_u64(admission_j, "max_queue_depth")? as usize,
+        };
+        let fabric_j = req(j, "fabric")?;
+        let fabric = FabricSpec {
+            slots_per_chassis: req_u64(fabric_j, "slots_per_chassis")? as u32,
+            scaleout_gbit: req_f64(fabric_j, "scaleout_gbit")?,
+        };
+        let mut pass_log = Vec::new();
+        for e in req_arr(j, "pass_log")? {
+            pass_log.push((
+                req_str(e, "pass")?.to_string(),
+                req(e, "changed")?.as_bool().ok_or_else(|| {
+                    Error::Config("pass_log.changed must be a bool".into())
+                })?,
+            ));
+        }
+        let plan = ExecutionPlan {
+            agent: req_str(j, "agent")?.to_string(),
+            model: req_str(j, "model")?.to_string(),
+            sla,
+            bindings,
+            pipelines,
+            batching,
+            admission,
+            fabric,
+            cpu_workers: req_u64(j, "cpu_workers")? as u32,
+            cost_usd: req_f64(j, "cost_usd")?,
+            latency_s: req_f64(j, "latency_s")?,
+            pass_log,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+// ---- JSON field helpers --------------------------------------------------
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| Error::Config(format!("plan json missing `{key}`")))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    req(j, key)?
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("plan json `{key}` must be a string")))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?
+        .as_f64()
+        .ok_or_else(|| Error::Config(format!("plan json `{key}` must be a number")))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    req(j, key)?.as_u64().ok_or_else(|| {
+        Error::Config(format!("plan json `{key}` must be a non-negative integer"))
+    })
+}
+
+fn req_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("plan json `{key}` must be an array")))
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A small hand-built plan: cpu → prefill → decode → cpu. Shared
+    /// with the DAG-simulator unit tests.
+    pub(crate) fn tiny_plan() -> ExecutionPlan {
+        ExecutionPlan {
+            agent: "tiny".into(),
+            model: "8b-fp16".into(),
+            sla: SlaSpec::EndToEnd(3.0),
+            bindings: vec![
+                NodeBinding {
+                    op: "io.input".into(),
+                    class: "CPU".into(),
+                    stage: Stage::Cpu,
+                    latency_s: 0.0005,
+                    cost_usd: 0.0,
+                    deps: vec![],
+                    xfer_bytes: 0.0,
+                },
+                NodeBinding {
+                    op: "llm.prefill".into(),
+                    class: "H100".into(),
+                    stage: Stage::LlmPrefill,
+                    latency_s: 0.05,
+                    cost_usd: 1e-5,
+                    deps: vec![0],
+                    xfer_bytes: 1e6,
+                },
+                NodeBinding {
+                    op: "llm.decode".into(),
+                    class: "Gaudi3".into(),
+                    stage: Stage::LlmDecode,
+                    latency_s: 0.5,
+                    cost_usd: 2e-5,
+                    deps: vec![1],
+                    xfer_bytes: 1e8,
+                },
+                NodeBinding {
+                    op: "io.output".into(),
+                    class: "CPU".into(),
+                    stage: Stage::Cpu,
+                    latency_s: 0.0005,
+                    cost_usd: 0.0,
+                    deps: vec![2],
+                    xfer_bytes: 0.0,
+                },
+            ],
+            pipelines: vec![
+                PipelineBinding {
+                    role: Role::Prefill,
+                    device: "H100".into(),
+                    tp: 1,
+                    pp: 1,
+                    max_batch: 8,
+                    replicas: 1,
+                    chassis: 0,
+                },
+                PipelineBinding {
+                    role: Role::Decode,
+                    device: "Gaudi3".into(),
+                    tp: 1,
+                    pp: 1,
+                    max_batch: 32,
+                    replicas: 2,
+                    chassis: 1,
+                },
+            ],
+            batching: BatchPolicy::default(),
+            admission: AdmissionPolicy::default(),
+            fabric: FabricSpec::default(),
+            cpu_workers: 64,
+            cost_usd: 3.1e-5,
+            latency_s: 0.551,
+            pass_log: vec![("decompose-llm".into(), true)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let plan = tiny_plan();
+        let text = plan.to_json_string();
+        let back = ExecutionPlan::parse_json(&text).unwrap();
+        assert_eq!(back, plan);
+        // And byte-stable: serializing again yields the same document.
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn validate_catches_bad_deps_and_missing_pipelines() {
+        let mut p = tiny_plan();
+        p.bindings[1].deps = vec![9];
+        assert!(p.validate().is_err());
+
+        let mut p = tiny_plan();
+        p.bindings[1].deps = vec![1]; // self/forward dep
+        assert!(p.validate().is_err());
+
+        let mut p = tiny_plan();
+        p.pipelines.retain(|pl| pl.role != Role::Decode);
+        assert!(p.validate().is_err(), "decode binding without pipeline");
+
+        let mut p = tiny_plan();
+        p.pipelines[0].device = "TPUv9".into();
+        assert!(p.validate().is_err(), "unknown device");
+    }
+
+    #[test]
+    fn placement_expands_replicas_and_chassis() {
+        let plan = tiny_plan();
+        let placement = plan.placement().unwrap();
+        assert_eq!(placement.prefill.len(), 1);
+        assert_eq!(placement.decode.len(), 2);
+        assert_eq!(placement.decode[0].chassis, 1);
+        assert_eq!(placement.decode[1].chassis, 2);
+        assert_eq!(plan.n_chassis(), 3);
+        let fabric = plan.build_fabric().unwrap();
+        assert_eq!(fabric.n_chassis, 3);
+    }
+
+    #[test]
+    fn router_configs_derive_from_policies() {
+        let plan = tiny_plan();
+        let b = plan.batcher_config();
+        assert_eq!(b.buckets, vec![1, 2, 4]);
+        assert!((b.max_wait.as_secs_f64() - 0.010).abs() < 1e-9);
+        let a = plan.admission_config();
+        assert_eq!(a.max_queue_depth, 4096);
+        assert_eq!(a.rate, 1000.0);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_version_and_missing_fields() {
+        let plan = tiny_plan();
+        let mut j = plan.to_json();
+        j.try_set("version", 99u64).unwrap();
+        assert!(ExecutionPlan::from_json(&j).is_err());
+        assert!(ExecutionPlan::parse_json("{}").is_err());
+        assert!(ExecutionPlan::parse_json("not json").is_err());
+    }
+
+    #[test]
+    fn stage_classification() {
+        assert_eq!(Stage::of_op("llm.prefill"), Stage::LlmPrefill);
+        assert_eq!(Stage::of_op("moe.expert_decode"), Stage::LlmDecode);
+        assert_eq!(Stage::of_op("tool.lookup"), Stage::Cpu);
+        assert_eq!(Stage::of_op("stt.transcribe"), Stage::Cpu);
+    }
+}

@@ -7,7 +7,9 @@
 //!
 //! * [`plan`] — graph planning: run the IR pipeline, extract θ vectors,
 //!   build the §3.1.2 assignment problem over the device catalog (plus
-//!   a CPU class), and solve it;
+//!   a CPU class), solve it, and lower the result into a serializable
+//!   [`crate::plan::ExecutionPlan`] consumed by the simulator and the
+//!   server alike;
 //! * [`migration`] — drain/transfer/activate step generation when the
 //!   optimum moves;
 //! * [`autoscale`] — utilization-driven pipeline scaling with
@@ -24,4 +26,4 @@ pub mod plan;
 pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
 pub use feedback::ProfileStore;
 pub use migration::{MigrationPlan, MigrationStep};
-pub use plan::{GraphPlan, Planner, PlannerConfig};
+pub use plan::{Planner, PlannerConfig};

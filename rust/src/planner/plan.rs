@@ -1,4 +1,4 @@
-//! Graph planning: annotated IR → assignment problem → placement.
+//! Graph planning: annotated IR → assignment problem → [`ExecutionPlan`].
 //!
 //! This is where the three pillars meet: the IR pipeline decomposes and
 //! annotates the agent graph (§4.2), the cost model prices each node on
@@ -7,6 +7,16 @@
 //! optimization framework places the non-LLM components of the voice
 //! agent on CPUs ... prefill and decode allocations are quite distinct"
 //! — falls out of exactly this pipeline (asserted in tests).
+//!
+//! The outcome is no longer a loose placement list: [`Planner::plan`]
+//! lowers the solved `Assignment` plus the `PlannerConfig` into a
+//! serializable [`ExecutionPlan`] — the single artifact the simulator
+//! executes ([`crate::cluster::sim::simulate_plan`]) and the server is
+//! configured from ([`crate::server::ServerConfig::from_plan`]). The
+//! LLM pipeline shapes (TP×PP×batch) come from the §5 configuration
+//! explorer ([`crate::opt::parallelism::best_config`]) when the model
+//! is in the catalog, unifying the Figure-8/9 machinery with graph
+//! planning.
 
 use crate::cost::hardware::{catalog, DeviceSpec};
 use crate::cost::model_profile::by_short_name;
@@ -17,7 +27,12 @@ use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
 use crate::ir::graph::Graph;
 use crate::ir::passes::PassManager;
 use crate::opt::assignment::{
-    Assignment, AssignmentProblem, EdgeSpec, HardwareClass, Sla, TaskSpec,
+    AssignmentProblem, EdgeSpec, HardwareClass, Sla, TaskSpec,
+};
+use crate::opt::parallelism::{best_config, ExploreOpts, SeqShape, SlaMode};
+use crate::plan::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding,
+    PipelineBinding, Role, Stage,
 };
 use crate::{Error, Result};
 
@@ -33,6 +48,18 @@ pub struct PlannerConfig {
     pub cpu_usd_hr: f64,
     /// Communication-penalty weight γ (per transferred byte, $).
     pub gamma_usd_per_byte: f64,
+    /// Prefill pipeline replicas per hardware class in the emitted plan.
+    pub prefill_replicas: u32,
+    /// Decode pipeline replicas per hardware class in the emitted plan.
+    pub decode_replicas: u32,
+    /// CPU worker slots for non-LLM stages.
+    pub cpu_workers: u32,
+    /// Serving-loop batching policy carried into the plan.
+    pub batching: BatchPolicy,
+    /// Admission policy carried into the plan.
+    pub admission: AdmissionPolicy,
+    /// Fabric sizing carried into the plan.
+    pub fabric: FabricSpec,
 }
 
 impl Default for PlannerConfig {
@@ -44,29 +71,13 @@ impl Default for PlannerConfig {
             sla: Sla::EndToEnd(5.0),
             cpu_usd_hr: 0.08,
             gamma_usd_per_byte: 4e-12, // ~ $0.004/GB moved
+            prefill_replicas: 1,
+            decode_replicas: 2,
+            cpu_workers: 64,
+            batching: BatchPolicy::default(),
+            admission: AdmissionPolicy::default(),
+            fabric: FabricSpec::default(),
         }
-    }
-}
-
-/// The outcome: per-node class choice with names resolved.
-#[derive(Debug, Clone)]
-pub struct GraphPlan {
-    /// (node op, chosen class name).
-    pub placements: Vec<(String, String)>,
-    pub cost_usd: f64,
-    pub latency_s: f64,
-    pub assignment: Assignment,
-    /// Pass log from the lowering pipeline.
-    pub pass_log: Vec<(String, bool)>,
-}
-
-impl GraphPlan {
-    /// Which class a given op landed on (first occurrence).
-    pub fn class_of(&self, op: &str) -> Option<&str> {
-        self.placements
-            .iter()
-            .find(|(o, _)| o == op)
-            .map(|(_, c)| c.as_str())
     }
 }
 
@@ -274,8 +285,9 @@ impl Planner {
         })
     }
 
-    /// Full pipeline: lower + annotate the graph, then solve placement.
-    pub fn plan(&self, g: &Graph) -> Result<GraphPlan> {
+    /// Full pipeline: lower + annotate the graph, solve placement, and
+    /// lower the result into a serializable [`ExecutionPlan`].
+    pub fn plan(&self, g: &Graph) -> Result<ExecutionPlan> {
         let mut g = g.clone();
         let mut pm = PassManager::standard();
         pm.run(&mut g)?;
@@ -286,19 +298,176 @@ impl Planner {
         // Exact B&B for small graphs; edge-aware local search beyond
         // (inlined hierarchical agents can expose dozens of tasks).
         let assignment = problem.solve_auto()?;
-        let placements = g
+        self.lower_to_execution_plan(&g, &problem, &assignment, pm.log.clone())
+    }
+
+    /// Lower a solved assignment into the unified plan artifact.
+    fn lower_to_execution_plan(
+        &self,
+        g: &Graph,
+        problem: &AssignmentProblem,
+        assignment: &crate::opt::assignment::Assignment,
+        pass_log: Vec<(String, bool)>,
+    ) -> Result<ExecutionPlan> {
+        // Model: first LLM-ish node carrying a resolvable `model` attr.
+        let model = g
             .nodes
             .iter()
-            .zip(&assignment.choice)
-            .map(|(n, &c)| (n.op.clone(), problem.classes[c].name.clone()))
-            .collect();
-        Ok(GraphPlan {
-            placements,
+            .filter(|n| {
+                Stage::of_op(&n.op) != Stage::Cpu
+                    || n.op.starts_with("llm.")
+                    || n.op.starts_with("moe.")
+            })
+            .filter_map(|n| n.attr_str("model"))
+            .find(|m| by_short_name(m).is_some())
+            .unwrap_or("")
+            .to_string();
+        let profile = by_short_name(&model);
+
+        // Per-node bindings with dataflow deps and transfer estimates.
+        let edges = g.dataflow_edges();
+        let mut bindings = Vec::with_capacity(g.nodes.len());
+        for (i, node) in g.nodes.iter().enumerate() {
+            let j = assignment.choice[i];
+            let stage = Stage::of_op(&node.op);
+            let xfer_bytes = match (stage, &profile) {
+                // Prefill → decode hands over the KV cache; size it from
+                // the model profile at the node's annotated ISL.
+                (Stage::LlmDecode, Some(m)) => {
+                    let isl = node.attr_int("isl").map(|v| v as u64).unwrap_or(512);
+                    crate::cost::kv::kv_cache_bytes(m, isl, 1)
+                }
+                _ => node.attr_f64("est_bytes").unwrap_or(1e6),
+            };
+            bindings.push(NodeBinding {
+                op: node.op.clone(),
+                class: problem.classes[j].name.clone(),
+                stage,
+                latency_s: problem.tasks[i].latency_s[j],
+                cost_usd: problem.tasks[i].cost_usd[j],
+                deps: edges
+                    .iter()
+                    .filter(|(_, to)| *to == i)
+                    .map(|(from, _)| *from)
+                    .collect(),
+                xfer_bytes,
+            });
+        }
+
+        // Pipeline fleet: one group per distinct (role, class) among the
+        // LLM bindings. TP×PP×batch via the §5 configuration explorer
+        // for the primary prefill::decode pair; conservative defaults
+        // elsewhere (or when the model is unknown).
+        let distinct = |stage: Stage| -> Vec<String> {
+            let mut out: Vec<String> = Vec::new();
+            for b in &bindings {
+                if b.stage == stage && b.class != "CPU" && !out.contains(&b.class) {
+                    out.push(b.class.clone());
+                }
+            }
+            out
+        };
+        let prefill_classes = distinct(Stage::LlmPrefill);
+        let decode_classes = distinct(Stage::LlmDecode);
+
+        let explored = match (&profile, prefill_classes.first(), decode_classes.first()) {
+            (Some(m), Some(pc), Some(dc)) => {
+                let (pd, dd) = (
+                    crate::cost::hardware::by_name(pc),
+                    crate::cost::hardware::by_name(dc),
+                );
+                match (pd, dd) {
+                    (Some(pd), Some(dd)) => {
+                        let shape = g
+                            .nodes
+                            .iter()
+                            .find(|n| Stage::of_op(&n.op) == Stage::LlmDecode)
+                            .map(|n| SeqShape {
+                                isl: n.attr_int("isl").map(|v| v as u64).unwrap_or(512),
+                                osl: n.attr_int("osl").map(|v| v as u64).unwrap_or(128),
+                            })
+                            .unwrap_or(SeqShape { isl: 512, osl: 128 });
+                        let opts = ExploreOpts {
+                            eff: self.cfg.eff,
+                            opex: self.cfg.opex,
+                            terms: self.cfg.terms,
+                            ..ExploreOpts::default()
+                        };
+                        best_config(m, &pd, &dd, shape, SlaMode::Throughput, &opts)
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+
+        let mut pipelines = Vec::new();
+        let mut chassis = 0u32;
+        for (role, classes, replicas, default_batch) in [
+            (
+                Role::Prefill,
+                &prefill_classes,
+                self.cfg.prefill_replicas.max(1),
+                8u64,
+            ),
+            (
+                Role::Decode,
+                &decode_classes,
+                self.cfg.decode_replicas.max(1),
+                32u64,
+            ),
+        ] {
+            for (ci, class) in classes.iter().enumerate() {
+                let (par, max_batch) = match (&explored, role, ci) {
+                    (Some(cfg), Role::Prefill, 0) => {
+                        (cfg.prefill.par, cfg.prefill.batch)
+                    }
+                    (Some(cfg), Role::Decode, 0) => (cfg.decode.par, cfg.decode.batch),
+                    _ => (Parallelism { tp: 1, pp: 1 }, default_batch),
+                };
+                pipelines.push(PipelineBinding {
+                    role,
+                    device: class.clone(),
+                    tp: par.tp,
+                    pp: par.pp,
+                    max_batch,
+                    replicas,
+                    chassis,
+                });
+                chassis += replicas;
+            }
+        }
+
+        // Serving-side decode cap follows the planned decode pipelines,
+        // so simulation and serving run the same batching policy (the
+        // prefill buckets stay config-driven: they must match the
+        // AOT-compiled artifact set, not the fleet).
+        let mut batching = self.cfg.batching.clone();
+        if let Some(mb) = pipelines
+            .iter()
+            .filter(|p| p.role == Role::Decode)
+            .map(|p| p.max_batch)
+            .max()
+        {
+            batching.max_decode_batch = mb as usize;
+        }
+
+        let plan = ExecutionPlan {
+            agent: g.name.clone(),
+            model,
+            sla: self.cfg.sla.into(),
+            bindings,
+            pipelines,
+            batching,
+            admission: self.cfg.admission.clone(),
+            fabric: self.cfg.fabric.clone(),
+            cpu_workers: self.cfg.cpu_workers,
             cost_usd: assignment.cost_usd,
             latency_s: assignment.latency_s,
-            assignment,
-            pass_log: pm.log.clone(),
-        })
+            pass_log,
+        };
+        plan.validate()?;
+        Ok(plan)
     }
 }
 

@@ -31,7 +31,7 @@ pub fn fig4() -> Artifact {
         "{:<8} {:<8} {:>12} {:>16} {:>15} {:>10}\n",
         "Device", "Vendor", "$/(GB/s)", "$/TFLOP(FP16)", "$/TFLOP(FP8)", "$/GB"
     ));
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for r in &rows {
         text.push_str(&format!(
             "{:<8} {:<8} {:>12.2} {:>16.2} {:>15.2} {:>10.2}\n",
@@ -42,15 +42,14 @@ pub fn fig4() -> Artifact {
             r.usd_per_tflop_fp8,
             r.usd_per_gb
         ));
-        arr.push(
-            Json::obj()
-                .set("device", r.device)
-                .set("vendor", r.vendor)
-                .set("usd_per_gbps", r.usd_per_gbps)
-                .set("usd_per_tflop_fp16", r.usd_per_tflop_fp16)
-                .set("usd_per_tflop_fp8", r.usd_per_tflop_fp8)
-                .set("usd_per_gb", r.usd_per_gb),
-        );
+        arr.push(crate::jobj! {
+            "device" => r.device,
+            "vendor" => r.vendor,
+            "usd_per_gbps" => r.usd_per_gbps,
+            "usd_per_tflop_fp16" => r.usd_per_tflop_fp16,
+            "usd_per_tflop_fp8" => r.usd_per_tflop_fp8,
+            "usd_per_gb" => r.usd_per_gb,
+        });
     }
     text.push_str(
         "\nPaper shape: (a) Gaudi3/MI300x best $/GBps; (b) H100/Gaudi3/MI300x \
@@ -61,7 +60,7 @@ pub fn fig4() -> Artifact {
         id: "fig4",
         title: "Figure 4: marginal cost-efficiency of AI accelerators".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
@@ -71,7 +70,7 @@ pub fn fig3() -> Artifact {
         "{:<34} {:>7} {:>5} {:>5} {:>5} {:>6} {:>6}  {}\n",
         "Workload", "MemCap", "Disk", "GP", "HP", "MemBW", "NetBW", "dominant"
     );
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for w in WorkloadClass::ALL {
         let r = w.radar();
         text.push_str(&format!(
@@ -85,27 +84,31 @@ pub fn fig3() -> Artifact {
             r.net_bandwidth,
             w.dominant().name()
         ));
-        let mut o = Json::obj().set("workload", w.name()).set(
-            "wants_accelerator",
-            w.wants_accelerator(),
+        // Dynamic keys: build the map directly rather than go through
+        // the fallible `try_set` on a value that is statically an object.
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("workload".to_string(), Json::from(w.name()));
+        row.insert(
+            "wants_accelerator".to_string(),
+            Json::from(w.wants_accelerator()),
         );
         for res in Resource::ALL {
-            o = o.set(res.name(), r.get(res));
+            row.insert(res.name().to_string(), Json::from(r.get(res)));
         }
-        arr.push(o);
+        arr.push(Json::Obj(row));
     }
     Artifact {
         id: "fig3",
         title: "Figure 3 / Table 2: workload resource-demand radar profiles".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
 /// Table 1: the agent task taxonomy as implemented by the IR dialects.
 pub fn table1() -> Artifact {
     let mut text = format!("{:<22} {:<10} {:<8} {}\n", "Op", "Results", "Pure", "Workload class");
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for op in crate::ir::ops::REGISTRY {
         text.push_str(&format!(
             "{:<22} {:<10} {:<8} {}\n",
@@ -114,22 +117,18 @@ pub fn table1() -> Artifact {
             op.pure_op,
             op.workload.map(|w| w.name()).unwrap_or("-")
         ));
-        arr.push(
-            Json::obj()
-                .set("op", op.name)
-                .set("results", op.results)
-                .set("pure", op.pure_op)
-                .set(
-                    "workload",
-                    op.workload.map(|w| w.name()).unwrap_or("-"),
-                ),
-        );
+        arr.push(crate::jobj! {
+            "op" => op.name,
+            "results" => op.results,
+            "pure" => op.pure_op,
+            "workload" => op.workload.map(|w| w.name()).unwrap_or("-"),
+        });
     }
     Artifact {
         id: "table1",
         title: "Table 1: agent task types (IR dialect registry)".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
@@ -138,7 +137,7 @@ pub fn table3() -> Artifact {
     let p = worked_example();
     let mut text = String::new();
     let options = [("A (all HP)", vec![0, 0]), ("B (HP::CO)", vec![0, 1]), ("C (all CO)", vec![1, 1])];
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for (name, choice) in &options {
         let (cost, lat) = p.evaluate(choice);
         let feasible = lat <= 0.120 + 1e-12;
@@ -147,13 +146,12 @@ pub fn table3() -> Artifact {
             lat * 1e3,
             if feasible { "SLA satisfied" } else { "SLA violated" }
         ));
-        arr.push(
-            Json::obj()
-                .set("option", *name)
-                .set("latency_ms", lat * 1e3)
-                .set("cost_usd", cost)
-                .set("feasible", feasible),
-        );
+        arr.push(crate::jobj! {
+            "option" => *name,
+            "latency_ms" => lat * 1e3,
+            "cost_usd" => cost,
+            "feasible" => feasible,
+        });
     }
     let best = p.solve_exact().expect("worked example is feasible");
     text.push_str(&format!(
@@ -168,7 +166,7 @@ pub fn table3() -> Artifact {
         id: "table3",
         title: "Table 3 / §3.1.2 worked example: prefill/decode under SLA".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
@@ -178,7 +176,7 @@ pub fn table4_art() -> Artifact {
         "{:<24} {:>8} {:>10} {:>8} {:>8} {:>9} {:>14}\n",
         "Model", "Params", "Precision", "Layers", "d_model", "KV B/tok", "Weights (GB)"
     );
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for m in table4() {
         text.push_str(&format!(
             "{:<24} {:>7}B {:>10} {:>8} {:>8} {:>9.0} {:>14.1}\n",
@@ -190,19 +188,18 @@ pub fn table4_art() -> Artifact {
             m.kv_bytes_per_token(),
             m.param_bytes() / 1e9
         ));
-        arr.push(
-            Json::obj()
-                .set("model", m.name)
-                .set("params_b", m.params_b)
-                .set("precision", m.precision.name())
-                .set("kv_bytes_per_token", m.kv_bytes_per_token()),
-        );
+        arr.push(crate::jobj! {
+            "model" => m.name,
+            "params_b" => m.params_b,
+            "precision" => m.precision.name(),
+            "kv_bytes_per_token" => m.kv_bytes_per_token(),
+        });
     }
     Artifact {
         id: "table4",
         title: "Table 4: model configurations".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
@@ -214,7 +211,7 @@ pub fn table5_art() -> Artifact {
         "{:<8} {:>9} {:>8} {:>9} {:>8} {:>11} {:>12} {:>12} {:>12}\n",
         "Device", "Cost($)", "Mem(GB)", "BW(GB/s)", "TFLOPs", "Paper $/hr", "Capex $/hr", "Energy $/hr", "Derived $/hr"
     );
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for r in &rows {
         text.push_str(&format!(
             "{:<8} {:>9.0} {:>8.0} {:>9.0} {:>8.0} {:>11.2} {:>12.3} {:>12.3} {:>12.3}\n",
@@ -228,13 +225,12 @@ pub fn table5_art() -> Artifact {
             r.derived_energy_hr,
             r.derived_opex
         ));
-        arr.push(
-            Json::obj()
-                .set("device", r.device)
-                .set("price_usd", r.price_usd)
-                .set("paper_opex_hr", r.paper_opex)
-                .set("derived_opex_hr", r.derived_opex),
-        );
+        arr.push(crate::jobj! {
+            "device" => r.device,
+            "price_usd" => r.price_usd,
+            "paper_opex_hr" => r.paper_opex,
+            "derived_opex_hr" => r.derived_opex,
+        });
     }
     text.push_str(
         "\nNote: the stated formula (4-yr amortization @ 8% + max-TDP energy @ \
@@ -245,13 +241,13 @@ pub fn table5_art() -> Artifact {
         id: "table5",
         title: "Table 5: accelerator specifications & operating cost".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
 fn tco_text(bars: &[TcoBar], models: &[ModelProfile]) -> (String, Json) {
     let mut text = String::new();
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     for m in models {
         for sla in ["Latency SLA", "Throughput SLA"] {
             text.push_str(&format!("\n{} — {}\n", m.name, sla));
@@ -273,20 +269,19 @@ fn tco_text(bars: &[TcoBar], models: &[ModelProfile]) -> (String, Json) {
                     b.config.ttft_s * 1e3,
                     b.config.tbt_s * 1e3,
                 ));
-                arr.push(
-                    Json::obj()
-                        .set("model", b.model.clone())
-                        .set("sla", b.sla)
-                        .set("pair", b.pair.clone())
-                        .set("tco_benefit", b.tco_benefit)
-                        .set("usd_per_mtok", b.config.usd_per_mtok)
-                        .set("ttft_ms", b.config.ttft_s * 1e3)
-                        .set("tbt_ms", b.config.tbt_s * 1e3),
-                );
+                arr.push(crate::jobj! {
+                    "model" => b.model.clone(),
+                    "sla" => b.sla,
+                    "pair" => b.pair.clone(),
+                    "tco_benefit" => b.tco_benefit,
+                    "usd_per_mtok" => b.config.usd_per_mtok,
+                    "ttft_ms" => b.config.ttft_s * 1e3,
+                    "tbt_ms" => b.config.tbt_s * 1e3,
+                });
             }
         }
     }
-    (text, arr)
+    (text, Json::Arr(arr))
 }
 
 /// Figures 8/9: TCO benefit bars for heterogeneous configs.
@@ -316,7 +311,7 @@ pub fn bandwidth() -> Artifact {
         "{:<24} {:>8} {:>12} {:>16} {:>16}\n",
         "Model", "ISL", "KV (GB)", "Egress (Gbit/s)", "Ingress (Gbit/s)"
     );
-    let mut arr = Json::Arr(vec![]);
+    let mut arr: Vec<Json> = Vec::new();
     // Interactive SLA targets; TTFT grows with ISL (superlinear prefill),
     // modeled via the roofline on an H100 TP8 pipeline.
     let h100 = crate::cost::hardware::by_name("H100").unwrap();
@@ -336,14 +331,13 @@ pub fn bandwidth() -> Artifact {
                 bps_to_gbit(r.peak_egress_bps),
                 bps_to_gbit(r.peak_ingress_bps)
             ));
-            arr.push(
-                Json::obj()
-                    .set("model", m.name)
-                    .set("isl", isl)
-                    .set("kv_gb", r.kv_bytes / 1e9)
-                    .set("egress_gbit", bps_to_gbit(r.peak_egress_bps))
-                    .set("ingress_gbit", bps_to_gbit(r.peak_ingress_bps)),
-            );
+            arr.push(crate::jobj! {
+                "model" => m.name,
+                "isl" => isl,
+                "kv_gb" => r.kv_bytes / 1e9,
+                "egress_gbit" => bps_to_gbit(r.peak_egress_bps),
+                "ingress_gbit" => bps_to_gbit(r.peak_ingress_bps),
+            });
         }
     }
     text.push_str(
@@ -354,7 +348,7 @@ pub fn bandwidth() -> Artifact {
         id: "bandwidth",
         title: "Eqs. 1–3: KV-cache transfer bandwidth model".into(),
         text,
-        json: arr,
+        json: Json::Arr(arr),
     }
 }
 
@@ -380,10 +374,11 @@ pub fn fig7() -> Artifact {
         id: "fig7",
         title: "Figure 7: agent program → high-level IR → decomposed IR".into(),
         text,
-        json: Json::obj()
-            .set("before_ops", g.op_names().len())
-            .set("after_ops", lowered.op_names().len())
-            .set("passes", log),
+        json: crate::jobj! {
+            "before_ops" => g.op_names().len(),
+            "after_ops" => lowered.op_names().len(),
+            "passes" => log,
+        },
     }
 }
 

@@ -1,0 +1,103 @@
+//! API-compatible stand-in for the PJRT engine (built when the `pjrt`
+//! feature is off). The real engine in `engine.rs` drives compiled HLO
+//! through the PJRT C API; this stub keeps every dependent layer —
+//! server, router, CLI, tests — compiling and running on machines
+//! without the xla toolchain. `Engine::load` always fails with a clear
+//! message, so call-sites degrade exactly as they do when the artifact
+//! bundle is missing.
+
+use std::path::Path;
+
+use super::manifest::Manifest;
+use crate::{Error, Result};
+
+/// Opaque KV cache state for one in-flight batch (stub: no buffers).
+pub struct KvState {
+    pub bucket: usize,
+    /// Current absolute position per lane (next write index).
+    pub pos: Vec<i32>,
+}
+
+impl KvState {
+    /// Bytes held by this state (stub holds none).
+    pub fn bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Result of a prefill call.
+pub struct PrefillResult {
+    pub logits: Vec<Vec<f32>>,
+    pub kv: KvState,
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT engine unavailable: built without the `pjrt` feature \
+         (rebuild with `--features pjrt` and a vendored xla crate)"
+            .into(),
+    )
+}
+
+/// The per-node engine (stub).
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails: the stub cannot execute artifacts.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        // Validate the manifest anyway so error messages distinguish
+        // "no artifacts" from "no PJRT".
+        let _ = Manifest::load(dir)?;
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn prefill(&self, _prompts: &[Vec<u8>]) -> Result<PrefillResult> {
+        Err(unavailable())
+    }
+
+    pub fn decode_step(&self, _kv: &mut KvState, _tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
+
+    pub fn generate_greedy(
+        &self,
+        _prompts: &[Vec<u8>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        Err(unavailable())
+    }
+}
+
+/// Argmax over logits (0 on empty — callers guard).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+    }
+
+    #[test]
+    fn stub_load_reports_feature_gate() {
+        // Nonexistent dir: the manifest error surfaces first.
+        assert!(Engine::load("/nonexistent").is_err());
+    }
+}

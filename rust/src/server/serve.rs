@@ -42,6 +42,23 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Derive the serving knobs from an
+    /// [`ExecutionPlan`](crate::plan::ExecutionPlan): the batcher
+    /// (buckets, wait, decode cap — the planner aligns the cap with the
+    /// planned decode pipelines) and the admission token bucket come
+    /// from the same artifact the simulator executed. Engine-bound
+    /// limits (max tokens, history) stay server defaults: they follow
+    /// the compiled artifact set, not the plan.
+    pub fn from_plan(plan: &crate::plan::ExecutionPlan) -> ServerConfig {
+        ServerConfig {
+            batch: plan.batcher_config(),
+            admission: plan.admission_config(),
+            ..ServerConfig::default()
+        }
+    }
+}
+
 struct InFlight {
     req: ChatRequest,
     submitted: Instant,
@@ -64,6 +81,16 @@ impl Server {
             metrics: Arc::new(MetricsRegistry::new()),
             sessions: SessionStore::new(max_history),
         }
+    }
+
+    /// Bring up a server configured by an execution plan (see
+    /// [`ServerConfig::from_plan`]).
+    pub fn from_plan(
+        engine: impl Into<Arc<Engine>>,
+        plan: &crate::plan::ExecutionPlan,
+    ) -> Result<Server> {
+        plan.validate()?;
+        Ok(Server::new(engine, ServerConfig::from_plan(plan)))
     }
 
     /// Serve until `rx` disconnects and all queued work drains. Designed
@@ -238,3 +265,24 @@ fn req_id(r: &ChatRequest) -> u64 {
 }
 
 // Engine-backed tests live in rust/tests/runtime_e2e.rs (need artifacts).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_derives_from_plan() {
+        let plan = crate::plan::tests::tiny_plan();
+        let cfg = ServerConfig::from_plan(&plan);
+        assert_eq!(cfg.batch.buckets, plan.batching.buckets);
+        assert_eq!(cfg.batch.max_decode_batch, plan.batching.max_decode_batch);
+        assert_eq!(cfg.admission.rate, plan.admission.rate);
+        assert_eq!(cfg.admission.burst, plan.admission.burst);
+        assert_eq!(
+            cfg.admission.max_queue_depth,
+            plan.admission.max_queue_depth
+        );
+        // Engine-independent defaults survive.
+        assert_eq!(cfg.max_new_tokens, ServerConfig::default().max_new_tokens);
+    }
+}

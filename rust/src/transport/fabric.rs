@@ -146,6 +146,15 @@ impl Fabric {
         }
     }
 
+    /// Clear reservation state (busy-until times and byte counters) so
+    /// one fabric description can be replayed across simulation runs.
+    pub fn reset(&mut self) {
+        for l in self.scaleup.iter_mut().chain(self.scaleout.iter_mut()) {
+            l.busy_until_s = 0.0;
+            l.bytes_carried = 0.0;
+        }
+    }
+
     /// Total bytes carried per tier (utilization reporting).
     pub fn carried(&self) -> (f64, f64) {
         (
@@ -224,6 +233,18 @@ mod tests {
         let a = NodeAddr { chassis: 0, slot: 0 };
         let bad = NodeAddr { chassis: 9, slot: 0 };
         assert!(f.transfer(a, bad, 1.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn reset_clears_reservations() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        let t1 = f.transfer(a, c, 5e9, 0.0).unwrap();
+        f.reset();
+        let t2 = f.transfer(a, c, 5e9, 0.0).unwrap();
+        assert_eq!(t1, t2, "reset must forget prior reservations");
+        assert_eq!(f.carried().1, 1e10); // only the post-reset transfer
     }
 
     #[test]

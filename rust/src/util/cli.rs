@@ -5,6 +5,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::{Error, Result};
+
 /// Parsed command line: positionals plus `--key [value]` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -55,13 +57,14 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Typed option lookup with default; panics with a clear message on
-    /// malformed input (CLI surface, so fail loud and early).
-    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+    /// Typed option lookup with default. Malformed input is an error the
+    /// caller reports (the former variant panicked from library code;
+    /// `main.rs` now turns the `Err` into exit code 2 + usage).
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
         match self.get(name) {
-            None => default,
-            Some(s) => s.parse().unwrap_or_else(|_| {
-                panic!("invalid value for --{name}: {s:?}")
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::Config(format!("invalid value for --{name}: {s:?}"))
             }),
         }
     }
@@ -80,7 +83,7 @@ mod tests {
         let a = parse("repro fig8 --models 8b,70b --verbose --seed 7");
         assert_eq!(a.positional, vec!["repro", "fig8"]);
         assert_eq!(a.get("models"), Some("8b,70b"));
-        assert_eq!(a.get_parsed::<u64>("seed", 0), 7);
+        assert_eq!(a.get_parsed::<u64>("seed", 0).unwrap(), 7);
         assert!(a.flag("verbose"));
     }
 
@@ -88,7 +91,7 @@ mod tests {
     fn equals_form() {
         let a = parse("--out=/tmp/x.json --n=3");
         assert_eq!(a.get("out"), Some("/tmp/x.json"));
-        assert_eq!(a.get_parsed::<usize>("n", 0), 3);
+        assert_eq!(a.get_parsed::<usize>("n", 0).unwrap(), 3);
     }
 
     #[test]
@@ -102,12 +105,14 @@ mod tests {
     fn defaults() {
         let a = parse("cmd");
         assert_eq!(a.get_or("missing", "d"), "d");
-        assert_eq!(a.get_parsed::<u32>("missing", 42), 42);
+        assert_eq!(a.get_parsed::<u32>("missing", 42).unwrap(), 42);
     }
 
     #[test]
-    #[should_panic(expected = "invalid value")]
-    fn malformed_typed_option_panics() {
-        parse("--n notanumber").get_parsed::<u32>("n", 0);
+    fn malformed_typed_option_errors() {
+        let err = parse("--n notanumber")
+            .get_parsed::<u32>("n", 0)
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid value for --n"));
     }
 }

@@ -1,11 +1,32 @@
-//! Minimal JSON document builder (serde is not in the offline registry).
+//! Minimal JSON document tree (serde is not in the offline registry).
 //!
 //! Benches and the CLI emit machine-readable results (EXPERIMENTS.md
-//! tables, plot series) through this writer. Parsing is intentionally not
-//! implemented — configs use the TOML-subset parser in [`crate::config`].
+//! tables, plot series) through the writer, and [`Json::parse`] reads
+//! them back — [`crate::plan::ExecutionPlan`] round-trips through this
+//! module so plans can be saved, diffed, and replayed. Human-authored
+//! configs still use the TOML-subset parser in [`crate::config`].
+//!
+//! Object literals are best written with the [`jobj!`](crate::jobj)
+//! macro; dynamic mutation uses the fallible [`Json::try_set`] /
+//! [`Json::try_push`] (no library-path panics).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use crate::{Error, Result};
+
+/// Build a [`Json::Obj`] from `key => value` pairs (values go through
+/// `Into<Json>`). Infallible by construction — the receiver is always
+/// an object — unlike mutating an arbitrary `Json` with `try_set`.
+#[macro_export]
+macro_rules! jobj {
+    ( $( $k:expr => $v:expr ),* $(,)? ) => {{
+        #[allow(unused_mut)]
+        let mut m = std::collections::BTreeMap::new();
+        $( m.insert(($k).to_string(), $crate::util::json::Json::from($v)); )*
+        $crate::util::json::Json::Obj(m)
+    }};
+}
 
 /// A JSON value tree.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,20 +45,44 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
-    pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
-        if let Json::Obj(ref mut m) = self {
-            m.insert(key.to_string(), val.into());
-        } else {
-            panic!("Json::set on non-object");
+    /// Insert `key` into an object; `Err` on non-objects (the former
+    /// `set` builder panicked here — library paths must not).
+    pub fn try_set(&mut self, key: &str, val: impl Into<Json>) -> Result<()> {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), val.into());
+                Ok(())
+            }
+            other => Err(Error::Runtime(format!(
+                "Json::try_set on non-object ({})",
+                other.kind()
+            ))),
         }
-        self
     }
 
-    pub fn push(&mut self, val: impl Into<Json>) {
-        if let Json::Arr(ref mut v) = self {
-            v.push(val.into());
-        } else {
-            panic!("Json::push on non-array");
+    /// Append to an array; `Err` on non-arrays.
+    pub fn try_push(&mut self, val: impl Into<Json>) -> Result<()> {
+        match self {
+            Json::Arr(v) => {
+                v.push(val.into());
+                Ok(())
+            }
+            other => Err(Error::Runtime(format!(
+                "Json::try_push on non-array ({})",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// The variant name, for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
         }
     }
 
@@ -48,7 +93,43 @@ impl Json {
         }
     }
 
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
     /// Serialize compactly.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
@@ -121,6 +202,24 @@ impl Json {
         }
     }
 
+    /// Parse a JSON document (the full grammar this writer emits, plus
+    /// standard escapes and `\uXXXX`). Numbers parse as `f64`, matching
+    /// the tree's representation.
+    pub fn parse(src: &str) -> Result<Json> {
+        let mut p = Parser {
+            bytes: src.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
     fn write_escaped(out: &mut String, s: &str) {
         out.push('"');
         for c in s.chars() {
@@ -137,6 +236,202 @@ impl Json {
             }
         }
         out.push('"');
+    }
+}
+
+/// Deepest container nesting the parser accepts. Recursive descent
+/// burns native stack per level; a bound turns adversarial inputs
+/// (100k `[`s) into `Err` instead of a stack overflow.
+const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over the input bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Parse {
+            // 1-based "line" is really a byte offset here; JSON payloads
+            // are machine-written single documents.
+            line: self.pos + 1,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected {:?}", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number bytes"))?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err(&format!("invalid number `{s}`")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            // Surrogates only arise for astral chars the
+                            // writer never emits; map them to U+FFFD.
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (multi-byte safe).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        self.enter()?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        self.enter()?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            m.insert(key, self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
     }
 }
 
@@ -192,14 +487,83 @@ mod tests {
 
     #[test]
     fn roundtrip_basic() {
-        let j = Json::obj()
-            .set("name", "h100")
-            .set("tflops", 1979.0)
-            .set("ok", true)
-            .set("tags", vec!["gpu", "nvidia"]);
+        let j = crate::jobj! {
+            "name" => "h100",
+            "tflops" => 1979.0,
+            "ok" => true,
+            "tags" => vec!["gpu", "nvidia"],
+        };
         assert_eq!(
             j.to_string(),
             r#"{"name":"h100","ok":true,"tags":["gpu","nvidia"],"tflops":1979}"#
+        );
+    }
+
+    #[test]
+    fn try_set_and_try_push() {
+        let mut o = Json::obj();
+        o.try_set("a", 1i64).unwrap();
+        assert_eq!(o.to_string(), r#"{"a":1}"#);
+        assert!(Json::Num(1.0).try_set("a", 1i64).is_err());
+
+        let mut a = Json::Arr(vec![]);
+        a.try_push("x").unwrap();
+        assert_eq!(a.to_string(), r#"["x"]"#);
+        assert!(Json::obj().try_push(1i64).is_err());
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = crate::jobj! {
+            "pipelines" => Json::Arr(vec![
+                crate::jobj! { "device" => "H100", "tp" => 2i64 },
+                crate::jobj! { "device" => "Gaudi3", "tp" => 1i64 },
+            ]),
+            "sla_s" => 0.25,
+            "name" => "voice\nagent \"v2\"",
+            "none" => Json::Null,
+            "on" => true,
+        };
+        for text in [j.to_string(), j.pretty()] {
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back, j);
+            assert_eq!(back.to_string(), j.to_string());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1,)",
+            "{\"a\" 1}",
+            "tru",
+            "1 2",
+            "{\"a\":}",
+            "\"unterminated",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_bounds_nesting_depth() {
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.to_string().contains("nesting too deep"), "{err}");
+        // Depth within the bound still parses.
+        let ok = "[".repeat(64) + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let j = Json::parse(r#""a\"b\\c\ndA π""#).unwrap();
+        assert_eq!(j, Json::Str("a\"b\\c\ndA π".to_string()));
+        assert_eq!(
+            Json::parse(r#""\u0041\u00e9""#).unwrap(),
+            Json::Str("A\u{00e9}".to_string())
         );
     }
 
@@ -217,7 +581,7 @@ mod tests {
 
     #[test]
     fn pretty_indents() {
-        let j = Json::obj().set("a", 1i64);
+        let j = crate::jobj! { "a" => 1i64 };
         assert_eq!(j.pretty(), "{\n  \"a\": 1\n}");
     }
 

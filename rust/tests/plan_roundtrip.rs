@@ -1,0 +1,172 @@
+//! The tentpole contract: an `ExecutionPlan` produced by
+//! `planner::plan` round-trips through `util::json` and is consumed
+//! *unmodified* by both the cluster simulator (`simulate_plan`) and the
+//! server configuration — planner → simulator → server all speak one
+//! plan language.
+
+use agentic_hetero::agents;
+use agentic_hetero::cluster::sim::{simulate_plan, ClusterSim};
+use agentic_hetero::cluster::trace::{generate, voice_agent as voice_trace, TraceConfig};
+use agentic_hetero::opt::assignment::Sla;
+use agentic_hetero::plan::{ExecutionPlan, Role, Stage};
+use agentic_hetero::planner::plan::{Planner, PlannerConfig};
+use agentic_hetero::server::ServerConfig;
+
+fn voice_plan(sla: Sla) -> ExecutionPlan {
+    let g = agents::voice_agent("8b-fp16", 512, 256);
+    let mut cfg = PlannerConfig::default();
+    cfg.sla = sla;
+    Planner::new(cfg).plan(&g).unwrap()
+}
+
+#[test]
+fn planner_output_round_trips_through_json() {
+    let plan = voice_plan(Sla::EndToEnd(3.0));
+    let text = plan.to_json_string();
+    let back = ExecutionPlan::parse_json(&text).unwrap();
+    assert_eq!(back, plan, "JSON round-trip must be lossless");
+    // Serialization is deterministic (diffable artifacts).
+    assert_eq!(back.to_json_string(), text);
+}
+
+#[test]
+fn round_tripped_plan_simulates_the_voice_agent_dag() {
+    let plan = voice_plan(Sla::EndToEnd(3.0));
+    let replayed = ExecutionPlan::parse_json(&plan.to_json_string()).unwrap();
+
+    // The plan carries the whole agent DAG: CPU stages and both LLM
+    // stages must be present and consistently bound.
+    assert!(replayed.bindings.iter().any(|b| b.op == "stt.transcribe"));
+    assert!(replayed.bindings.iter().any(|b| b.op == "tts.synthesize"));
+    assert_eq!(replayed.class_of("stt.transcribe"), Some("CPU"));
+    assert!(replayed
+        .bindings
+        .iter()
+        .any(|b| b.stage == Stage::LlmPrefill));
+    assert!(replayed.bindings.iter().any(|b| b.stage == Stage::LlmDecode));
+
+    let trace = voice_trace(&TraceConfig {
+        n_requests: 64,
+        rate: 4.0,
+        isl_mean: 512,
+        osl_mean: 64,
+        sigma: 0.3,
+        seed: 5,
+    });
+    let report = simulate_plan(&replayed, &trace).unwrap();
+    assert_eq!(report.n_requests, 64);
+    assert!(report.output_tokens > 0);
+    assert!(report.tokens_per_s > 0.0);
+    // The voice agent's STT floor (≥ ~0.1 s) must show up in TTFT —
+    // evidence the CPU stages actually execute in the DAG.
+    assert!(
+        report.ttft_p50_s > 0.05,
+        "TTFT {} too small for a DAG with CPU pre-stages",
+        report.ttft_p50_s
+    );
+    assert!(report.e2e_p50_s > report.ttft_p50_s);
+}
+
+#[test]
+fn same_plan_configures_the_server() {
+    let plan = voice_plan(Sla::EndToEnd(3.0));
+    let replayed = ExecutionPlan::parse_json(&plan.to_json_string()).unwrap();
+    let cfg = ServerConfig::from_plan(&replayed);
+    assert_eq!(cfg.batch.buckets, replayed.batching.buckets);
+    assert_eq!(cfg.admission.rate, replayed.admission.rate);
+    assert_eq!(
+        cfg.admission.max_queue_depth,
+        replayed.admission.max_queue_depth
+    );
+}
+
+#[test]
+fn flat_simulator_builds_from_the_same_plan() {
+    let plan = voice_plan(Sla::EndToEnd(3.0));
+    let mut sim = ClusterSim::from_plan(&plan).unwrap();
+    let trace = generate(&TraceConfig {
+        n_requests: 32,
+        rate: 4.0,
+        isl_mean: 512,
+        osl_mean: 32,
+        sigma: 0.0,
+        seed: 3,
+    });
+    let report = sim.run(&trace).unwrap();
+    assert_eq!(report.n_requests, 32);
+    assert!(report.tokens_per_s > 0.0);
+}
+
+#[test]
+fn multi_llm_agent_dag_executes_every_inference() {
+    // The supervisor pattern inlines 2 worker LLMs + 1 merge LLM: the
+    // DAG simulator must schedule all three prefill/decode pairs per
+    // request.
+    let g = agentic_hetero::agents::patterns::supervisor("8b-fp16", 2);
+    let mut cfg = PlannerConfig::default();
+    cfg.sla = Sla::None;
+    let plan = Planner::new(cfg).plan(&g).unwrap();
+    let n_decode = plan
+        .bindings
+        .iter()
+        .filter(|b| b.stage == Stage::LlmDecode)
+        .count();
+    assert_eq!(n_decode, 3, "supervisor(2) exposes 3 LLM inferences");
+
+    let trace = generate(&TraceConfig {
+        n_requests: 16,
+        rate: 2.0,
+        isl_mean: 256,
+        osl_mean: 16,
+        sigma: 0.0,
+        seed: 11,
+    });
+    let report = simulate_plan(&plan, &trace).unwrap();
+    // Every decode stage emits osl tokens per request.
+    assert_eq!(
+        report.output_tokens,
+        (16 * 16 * n_decode) as u64,
+        "all LLM inferences must run"
+    );
+}
+
+#[test]
+fn plan_pipelines_cover_all_llm_classes() {
+    let plan = voice_plan(Sla::None);
+    for b in &plan.bindings {
+        match b.stage {
+            Stage::LlmPrefill => assert!(plan
+                .pipelines
+                .iter()
+                .any(|p| p.role == Role::Prefill && p.device == b.class)),
+            Stage::LlmDecode => assert!(plan
+                .pipelines
+                .iter()
+                .any(|p| p.role == Role::Decode && p.device == b.class)),
+            Stage::Cpu => {}
+        }
+    }
+}
+
+#[test]
+fn saved_plan_file_replays() {
+    // Full save → load → simulate loop through the filesystem, as the
+    // CLI (`plan --out` / `simulate --plan`) does.
+    let plan = voice_plan(Sla::EndToEnd(3.0));
+    let dir = std::env::temp_dir();
+    let path = dir.join("agentic_hetero_test.plan.json");
+    std::fs::write(&path, plan.to_json_string()).unwrap();
+    let loaded =
+        ExecutionPlan::parse_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, plan);
+    let trace = generate(&TraceConfig {
+        n_requests: 8,
+        rate: 2.0,
+        isl_mean: 512,
+        osl_mean: 16,
+        sigma: 0.0,
+        seed: 2,
+    });
+    assert!(simulate_plan(&loaded, &trace).is_ok());
+}

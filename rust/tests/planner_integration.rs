@@ -29,16 +29,19 @@ fn all_fig1_patterns_plan_successfully() {
         let plan = planner(Sla::None)
             .plan(&g)
             .unwrap_or_else(|e| panic!("{}: {e}", g.name));
-        assert!(!plan.placements.is_empty(), "{}", g.name);
+        assert!(!plan.bindings.is_empty(), "{}", g.name);
         assert!(plan.cost_usd.is_finite());
         // Every placement is a real class.
-        for (_, class) in &plan.placements {
+        for b in &plan.bindings {
             assert!(
                 ["A40", "A100", "Gaudi3", "MI300x", "H100", "B200", "CPU"]
-                    .contains(&class.as_str()),
-                "unknown class {class}"
+                    .contains(&b.class.as_str()),
+                "unknown class {}",
+                b.class
             );
         }
+        // The lowered plan is structurally valid and self-describing.
+        plan.validate().unwrap();
     }
 }
 
@@ -90,13 +93,13 @@ fn moe_agent_plans_with_expert_parallelism() {
     let plan = planner(Sla::None).plan(&g).unwrap();
     // Expert decomposition happened and each expert got an accelerator.
     let experts: Vec<_> = plan
-        .placements
+        .bindings
         .iter()
-        .filter(|(op, _)| op == "moe.expert_prefill")
+        .filter(|b| b.op == "moe.expert_prefill")
         .collect();
     assert_eq!(experts.len(), 4);
-    for (_, class) in experts {
-        assert_ne!(class, "CPU");
+    for b in experts {
+        assert_ne!(b.class, "CPU");
     }
 }
 
@@ -164,10 +167,16 @@ fn restricted_catalog_respected() {
     // Every placement stays within the restricted fleet. (Light CPU-ish
     // ops may legitimately collocate on the A40 when the γ transfer
     // penalty exceeds the opex saving — the optimizer's call.)
-    for (op, class) in &plan.placements {
+    for b in &plan.bindings {
         assert!(
-            class == "A40" || class == "CPU",
-            "{op} placed on {class}, outside the fleet"
+            b.class == "A40" || b.class == "CPU",
+            "{} placed on {}, outside the fleet",
+            b.op,
+            b.class
         );
+    }
+    // The emitted pipelines live on the restricted fleet too.
+    for pl in &plan.pipelines {
+        assert_eq!(pl.device, "A40");
     }
 }

@@ -1,6 +1,11 @@
 //! Integration: the real PJRT runtime + serving loop over the AOT
 //! artifact bundle (requires `make artifacts`; tests self-skip when the
 //! bundle is absent so `cargo test` stays green pre-build).
+//!
+//! The whole file is additionally gated on the `pjrt` cargo feature:
+//! without it the engine is a stub and there is nothing to integrate.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,161 @@
+//! Property tests: the exact branch-and-bound solver and the relaxed
+//! MILP formulation agree on randomized small task graphs.
+//!
+//! `solve_relaxed` approximates pair-dependent edge transfers by their
+//! per-pair minimum (a valid lower bound, exact when transfers are
+//! assignment-independent), so the contract is:
+//!
+//! * **edge-free / constant-edge chains** — identical objective values;
+//! * **pair-dependent edges** — the exact solver is optimal, so its
+//!   true cost never exceeds the relaxed solver's realized cost;
+//! * the heuristic never beats the exact optimum either.
+
+use agentic_hetero::opt::assignment::{
+    AssignmentProblem, EdgeSpec, HardwareClass, Sla, TaskSpec,
+};
+use agentic_hetero::util::prop::{check_cases, vec_of};
+use agentic_hetero::util::rng::Rng;
+
+/// Random chain problem: 2–5 tasks × 2–3 classes, no forbidden sets.
+fn random_chain(rng: &mut Rng, with_edges: bool) -> AssignmentProblem {
+    let n = rng.index(4) + 2;
+    let h = rng.index(2) + 2;
+    let tasks: Vec<TaskSpec> = (0..n)
+        .map(|i| TaskSpec {
+            name: format!("t{i}"),
+            latency_s: (0..h).map(|_| 0.01 + rng.f64() * 0.1).collect(),
+            cost_usd: (0..h).map(|_| 0.05 + rng.f64()).collect(),
+            capacity_use: 0.0,
+            forbidden: vec![],
+        })
+        .collect();
+    let edges: Vec<EdgeSpec> = (1..n)
+        .map(|i| {
+            if with_edges {
+                // Pair-dependent transfer: zero on the diagonal (stay on
+                // the same class), a random penalty off-diagonal — the
+                // worked example's d_ij structure.
+                let penalty_c = rng.f64() * 0.2;
+                let penalty_t = rng.f64() * 0.02;
+                let mut lat = vec![vec![0.0; h]; h];
+                let mut cost = vec![vec![0.0; h]; h];
+                for (a, row) in lat.iter_mut().enumerate() {
+                    for (b, v) in row.iter_mut().enumerate() {
+                        if a != b {
+                            *v = penalty_t;
+                        }
+                    }
+                }
+                for (a, row) in cost.iter_mut().enumerate() {
+                    for (b, v) in row.iter_mut().enumerate() {
+                        if a != b {
+                            *v = penalty_c;
+                        }
+                    }
+                }
+                EdgeSpec {
+                    from: i - 1,
+                    to: i,
+                    latency_s: lat,
+                    cost_usd: cost,
+                }
+            } else {
+                EdgeSpec::free(i - 1, i, h)
+            }
+        })
+        .collect();
+    let classes = (0..h)
+        .map(|j| HardwareClass {
+            name: format!("C{j}"),
+            capacity: 0.0,
+        })
+        .collect();
+    AssignmentProblem {
+        classes,
+        tasks,
+        edges,
+        sla: Sla::None,
+    }
+}
+
+#[test]
+fn exact_and_relaxed_agree_without_edge_terms() {
+    check_cases("exact-vs-relaxed/edge-free", 64, &mut |rng| {
+        let p = random_chain(rng, false);
+        let e = p.solve_exact().unwrap();
+        let r = p.solve_relaxed().unwrap();
+        assert!(
+            (e.cost_usd - r.cost_usd).abs() < 1e-9,
+            "exact {} vs relaxed {} on {:?}",
+            e.cost_usd,
+            r.cost_usd,
+            p.tasks.iter().map(|t| &t.cost_usd).collect::<Vec<_>>()
+        );
+        assert_eq!(e.choice, r.choice);
+    });
+}
+
+#[test]
+fn exact_lower_bounds_relaxed_with_pair_dependent_edges() {
+    check_cases("exact-vs-relaxed/pair-dependent", 64, &mut |rng| {
+        let p = random_chain(rng, true);
+        let e = p.solve_exact().unwrap();
+        let r = p.solve_relaxed().unwrap();
+        // Exact is optimal over the true (edge-aware) objective; the
+        // relaxed solver's realized cost can only match or exceed it.
+        assert!(
+            e.cost_usd <= r.cost_usd + 1e-9,
+            "exact {} beats relaxed {}",
+            e.cost_usd,
+            r.cost_usd
+        );
+        // Both report the true evaluated cost of their choice.
+        let (re_cost, _) = p.evaluate(&r.choice);
+        assert!((re_cost - r.cost_usd).abs() < 1e-9);
+        let (ee_cost, _) = p.evaluate(&e.choice);
+        assert!((ee_cost - e.cost_usd).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn heuristic_never_beats_exact() {
+    check_cases("heuristic-vs-exact", 64, &mut |rng| {
+        let p = random_chain(rng, rng.bool(0.5));
+        let e = p.solve_exact().unwrap();
+        let h = p.solve_heuristic().unwrap();
+        assert!(
+            h.cost_usd >= e.cost_usd - 1e-9,
+            "heuristic {} beats exact {}",
+            h.cost_usd,
+            e.cost_usd
+        );
+    });
+}
+
+#[test]
+fn agreement_respects_forbidden_classes() {
+    check_cases("exact-vs-relaxed/forbidden", 48, &mut |rng| {
+        let mut p = random_chain(rng, false);
+        let h = p.classes.len();
+        // Forbid one random class on one random task (keep ≥1 allowed).
+        let ti = rng.index(p.tasks.len());
+        let cj = rng.index(h);
+        p.tasks[ti].forbidden = vec![cj];
+        let e = p.solve_exact().unwrap();
+        let r = p.solve_relaxed().unwrap();
+        assert_ne!(e.choice[ti], cj);
+        assert_ne!(r.choice[ti], cj);
+        assert!((e.cost_usd - r.cost_usd).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn vec_of_generator_available_for_future_shapes() {
+    // Exercise the prop harness's vector generator on task sizes so the
+    // helper stays covered (and documents how to extend these tests to
+    // DAG-shaped problems).
+    let mut rng = Rng::new(7);
+    let sizes = vec_of(&mut rng, 6, |r| r.index(4) + 2);
+    assert!(sizes.len() <= 6);
+    assert!(sizes.iter().all(|s| (2..=5).contains(s)));
+}
