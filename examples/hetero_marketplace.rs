@@ -61,7 +61,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut target = RoleMap::new();
     target.insert(("B200".into(), "prefill".into()), 1);
     target.insert(("Gaudi3".into(), "decode".into()), 4);
-    let plan = plan_migration(&current, &target, 8e9, 50e9 * 0.8);
+    // Price the KV motion over the same contended fabric the simulator
+    // uses: 8 chassis, 400 Gbit RoCE NICs.
+    let fabric = agentic_hetero::transport::fabric::Fabric::new(8, 8, 900.0, 400.0);
+    let plan = plan_migration(&current, &target, 8e9, &fabric);
     for step in &plan.steps {
         println!("  {step:?}");
     }

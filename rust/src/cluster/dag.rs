@@ -16,12 +16,25 @@
 //!   same roofline timing, bucketed prefill batching, and
 //!   continuous-batching decode rounds as the flat simulator — a
 //!   request may contain *several* LLM inferences (supervisor patterns,
-//!   MoE experts) and each is scheduled independently;
+//!   MoE experts) and each is scheduled independently, with the
+//!   request's ISL/OSL scaled by each node's `token_fraction` (expert
+//!   parallelism routes ~top_k/N of the stream per expert);
 //! * **edges** between stages on different chassis move their payload
 //!   over the contended [`Fabric`](crate::transport::fabric::Fabric)
 //!   (KV caches for prefill→decode handoffs, `est_bytes` otherwise).
 //!
-//! Entry point: [`crate::cluster::sim::simulate_plan`].
+//! The fleet is **time-varying**: [`DagSim::run_controlled`] invokes a
+//! [`FleetController`] at fixed observation windows, and the controller
+//! may hand back a new `ExecutionPlan`. Pipelines matching the new plan
+//! survive untouched; surplus pipelines retire gracefully (in-flight
+//! work finishes, queued decode sessions migrate their KV over the
+//! fabric — occupying real links); missing pipelines activate on their
+//! target chassis. No in-flight request is ever dropped. This is what
+//! the `orchestrator` subsystem drives to evaluate re-planning policies
+//! end-to-end against traced load swings.
+//!
+//! Entry point: [`crate::cluster::sim::simulate_plan`] (static fleet)
+//! or [`crate::orchestrator`] (closed-loop).
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -31,8 +44,8 @@ use super::trace::Request;
 use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency};
-use crate::cost::tco::{FinanceTerms, OpexModel};
-use crate::plan::{ExecutionPlan, Role, Stage};
+use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::plan::{ExecutionPlan, Role, SlaSpec, Stage};
 use crate::transport::fabric::{Fabric, NodeAddr};
 use crate::util::bench::percentile;
 use crate::{Error, Result};
@@ -56,6 +69,10 @@ enum Ev {
     PrefillDone { pipe: usize, batch: u64 },
     /// Decode round boundary on a pipeline.
     DecodeRound(usize),
+    /// A drained decode session's KV landed on pipeline `to`.
+    KvMigrated { job: Job, to: usize },
+    /// Observation-window boundary (controlled runs only).
+    WindowTick,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -87,6 +104,10 @@ struct PrefillPipe {
     busy_time: f64,
     next_batch: u64,
     in_flight: BTreeMap<u64, Vec<Job>>,
+    /// Draining: accepts no new work; in-flight batches finish.
+    retired: bool,
+    created_s: f64,
+    retired_s: Option<f64>,
 }
 
 struct DecodePipe {
@@ -95,12 +116,81 @@ struct DecodePipe {
     waiting: VecDeque<Job>,
     round_scheduled: bool,
     busy_time: f64,
+    /// Draining: active sessions finish here; waiting sessions migrate.
+    retired: bool,
+    created_s: f64,
+    retired_s: Option<f64>,
+}
+
+/// Per-window observations handed to the [`FleetController`] — the raw
+/// material for autoscaling and SLA-driven re-planning decisions.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    pub t0: f64,
+    pub t1: f64,
+    /// Requests that arrived / completed inside the window.
+    pub arrivals: usize,
+    pub completed: usize,
+    /// Fraction of window completions inside the plan SLA (1.0 when
+    /// nothing completed or the plan has no SLA).
+    pub sla_attained: f64,
+    /// Device-time utilization of live pipelines over the window.
+    pub prefill_util: f64,
+    pub decode_util: f64,
+    /// Instantaneous backlog at the window boundary.
+    pub prefill_queue: usize,
+    pub decode_queue: usize,
+    pub decode_active: usize,
+    /// KV bytes resident on decode pipelines right now (sizes the cost
+    /// of draining them).
+    pub kv_resident_bytes: f64,
+    /// Live pipeline counts per role.
+    pub prefill_pipes: u32,
+    pub decode_pipes: u32,
+}
+
+/// What a fleet change actually did (returned to the controller so it
+/// can reconcile planned vs observed migration cost).
+#[derive(Debug, Clone, Default)]
+pub struct FleetChangeStats {
+    pub t: f64,
+    /// Pipelines brought up / retired.
+    pub activated: u32,
+    pub retired: u32,
+    /// Decode sessions whose KV moved over the fabric.
+    pub kv_moves: u32,
+    pub kv_bytes: f64,
+    /// When the last in-flight KV migration lands (== `t` if none).
+    pub done_s: f64,
+}
+
+/// Closed-loop hook: observe window boundaries, optionally re-plan.
+pub trait FleetController {
+    /// Called at each window boundary. Returning a plan migrates the
+    /// running fleet to it — in-flight work is preserved. The plan must
+    /// keep the same model and cover every LLM binding's (role, class).
+    fn on_window(&mut self, stats: &WindowStats) -> Option<ExecutionPlan>;
+
+    /// Called after a returned plan has been applied.
+    fn on_applied(&mut self, _t: f64, _stats: &FleetChangeStats) {}
+}
+
+/// Static-fleet runs: never intervenes.
+struct NoopFleetController;
+
+impl FleetController for NoopFleetController {
+    fn on_window(&mut self, _stats: &WindowStats) -> Option<ExecutionPlan> {
+        None
+    }
 }
 
 /// Mutable per-run state (pipes, pools, per-job bookkeeping).
 struct RunState {
     prefill: Vec<PrefillPipe>,
     decode: Vec<DecodePipe>,
+    /// Live (non-retired) pipeline indices per hardware class.
+    prefill_pipes_of: BTreeMap<String, Vec<usize>>,
+    decode_pipes_of: BTreeMap<String, Vec<usize>>,
     cpu_free: u32,
     cpu_queue: VecDeque<(Job, f64)>,
     /// Unsatisfied dependency count per flat job index.
@@ -120,10 +210,41 @@ struct RunState {
     completed: usize,
     kv_bytes_moved: f64,
     output_tokens: u64,
+    // Window accumulators (reset at every tick).
+    win_arrivals: usize,
+    win_completed: usize,
+    win_sla_ok: usize,
+}
+
+impl RunState {
+    /// Rebuild the class → pipeline routing maps over live pipes (run
+    /// start and after every fleet change).
+    fn rebuild_routing_maps(&mut self) {
+        self.prefill_pipes_of.clear();
+        for (k, p) in self.prefill.iter().enumerate() {
+            if !p.retired {
+                self.prefill_pipes_of
+                    .entry(p.spec.device.name.to_string())
+                    .or_default()
+                    .push(k);
+            }
+        }
+        self.decode_pipes_of.clear();
+        for (k, d) in self.decode.iter().enumerate() {
+            if !d.retired {
+                self.decode_pipes_of
+                    .entry(d.spec.device.name.to_string())
+                    .or_default()
+                    .push(k);
+            }
+        }
+    }
 }
 
 /// The agent-DAG simulator. Construct with [`DagSim::new`] from a
-/// validated plan; [`DagSim::run`] executes a request trace.
+/// validated plan; [`DagSim::run`] executes a request trace against a
+/// static fleet, [`DagSim::run_controlled`] against a closed-loop
+/// controller that may re-plan the fleet mid-run.
 pub struct DagSim {
     pub eff: Efficiency,
     pub opex: OpexModel,
@@ -132,19 +253,32 @@ pub struct DagSim {
     /// None only when the plan has no LLM stages.
     model: Option<ModelProfile>,
     fabric: Fabric,
+    /// End-to-end SLA threshold, if the plan carries one.
+    sla_s: Option<f64>,
     /// Successor lists per node index.
     succ: Vec<Vec<usize>>,
     /// Static indegree per node index.
     indeg: Vec<u32>,
-    /// Pipeline candidates per (role, class), indices into the expanded
-    /// pipe vectors.
-    prefill_pipes_of: BTreeMap<String, Vec<usize>>,
-    decode_pipes_of: BTreeMap<String, Vec<usize>>,
-    /// Expanded pipeline specs (replicas resolved), prefill then decode.
+    /// Expanded pipeline specs of the *initial* fleet.
     prefill_specs: Vec<PipelineSpec>,
     decode_specs: Vec<PipelineSpec>,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
+}
+
+/// Shape identity of a pipeline (fleet changes match by shape). Must
+/// stay in lock-step with the per-role shape key in `plan/diff.rs` and
+/// `orchestrator::diff_apply::shape_map_of` — all three encode the same
+/// "which pipelines are the same rebuildable unit" rule.
+type ShapeKey = (String, u32, u32, u64);
+
+fn shape_of(spec: &PipelineSpec) -> ShapeKey {
+    (
+        spec.device.name.to_string(),
+        spec.par.tp,
+        spec.par.pp,
+        spec.max_batch,
+    )
 }
 
 impl DagSim {
@@ -160,6 +294,11 @@ impl DagSim {
         }
         let placement = plan.placement()?;
         let fabric = plan.build_fabric()?;
+        let sla_s = match plan.sla {
+            SlaSpec::None => None,
+            SlaSpec::EndToEnd(t) => Some(t),
+            SlaSpec::Soft { t_sla_s, .. } => Some(t_sla_s),
+        };
 
         let n = plan.bindings.len();
         let mut succ = vec![Vec::new(); n];
@@ -171,21 +310,6 @@ impl DagSim {
             }
         }
 
-        let mut prefill_pipes_of: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-        for (k, spec) in placement.prefill.iter().enumerate() {
-            prefill_pipes_of
-                .entry(spec.device.name.to_string())
-                .or_default()
-                .push(k);
-        }
-        let mut decode_pipes_of: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-        for (k, spec) in placement.decode.iter().enumerate() {
-            decode_pipes_of
-                .entry(spec.device.name.to_string())
-                .or_default()
-                .push(k);
-        }
-
         Ok(DagSim {
             eff: Efficiency::default(),
             opex: OpexModel::Derived,
@@ -193,10 +317,9 @@ impl DagSim {
             plan: plan.clone(),
             model,
             fabric,
+            sla_s,
             succ,
             indeg,
-            prefill_pipes_of,
-            decode_pipes_of,
             prefill_specs: placement.prefill,
             decode_specs: placement.decode,
             heap: BinaryHeap::new(),
@@ -217,17 +340,37 @@ impl DagSim {
         job.req * self.plan.bindings.len() + job.node
     }
 
+    /// Request ISL scaled by the node's token fraction (≥ 1 token).
+    fn isl_of(&self, job: Job, trace: &[Request]) -> u64 {
+        let tf = self.plan.bindings[job.node].token_fraction;
+        ((trace[job.req].isl as f64 * tf).round() as u64).max(1)
+    }
+
+    /// Request OSL scaled by the node's token fraction (≥ 1 token).
+    fn osl_of(&self, job: Job, trace: &[Request]) -> u64 {
+        let tf = self.plan.bindings[job.node].token_fraction;
+        ((trace[job.req].osl as f64 * tf).round() as u64).max(1)
+    }
+
     /// Start a prefill batch on pipe `pi` if idle with work queued.
     fn try_start_prefill(&mut self, st: &mut RunState, pi: usize, now: f64, trace: &[Request]) {
         let model = self.model.as_ref().expect("LLM job without model");
+        let batch: Vec<Job> = {
+            let p = &mut st.prefill[pi];
+            if p.retired || p.busy || p.queue.is_empty() {
+                return;
+            }
+            let take = (p.spec.max_batch as usize).min(p.queue.len());
+            p.queue.drain(..take).collect()
+        };
+        // Batch prefill time at the longest (token-fraction-scaled)
+        // prompt in the batch.
+        let isl = batch
+            .iter()
+            .map(|j| self.isl_of(*j, trace))
+            .max()
+            .unwrap_or(1);
         let p = &mut st.prefill[pi];
-        if p.busy || p.queue.is_empty() {
-            return;
-        }
-        let take = (p.spec.max_batch as usize).min(p.queue.len());
-        let batch: Vec<Job> = p.queue.drain(..take).collect();
-        // Batch prefill time at the longest prompt in the batch.
-        let isl = batch.iter().map(|j| trace[j.req].isl).max().unwrap_or(1);
         let t_pre = prefill_time(
             model,
             &p.spec.device,
@@ -248,26 +391,28 @@ impl DagSim {
     /// Schedule a decode round on pipe `di` if needed.
     fn maybe_schedule_round(&mut self, st: &mut RunState, di: usize, now: f64, trace: &[Request]) {
         let model = self.model.as_ref().expect("LLM job without model");
-        let n_nodes = self.plan.bindings.len();
-        let d = &mut st.decode[di];
-        if d.round_scheduled {
-            return;
-        }
-        while d.active.len() < d.spec.max_batch as usize {
-            match d.waiting.pop_front() {
-                Some(j) => d.active.push(j),
-                None => break,
+        {
+            let d = &mut st.decode[di];
+            if d.round_scheduled {
+                return;
+            }
+            while d.active.len() < d.spec.max_batch as usize {
+                match d.waiting.pop_front() {
+                    Some(j) => d.active.push(j),
+                    None => break,
+                }
+            }
+            if d.active.is_empty() {
+                return;
             }
         }
-        if d.active.is_empty() {
-            return;
-        }
-        let ctx: u64 = d
+        let ctx: u64 = st.decode[di]
             .active
             .iter()
-            .map(|j| trace[j.req].isl + st.tokens_done[j.req * n_nodes + j.node])
+            .map(|j| self.isl_of(*j, trace) + st.tokens_done[self.flat(*j)])
             .sum::<u64>()
-            / d.active.len() as u64;
+            / st.decode[di].active.len() as u64;
+        let d = &mut st.decode[di];
         let step = decode_step_time(
             model,
             &d.spec.device,
@@ -277,15 +422,17 @@ impl DagSim {
             &self.eff,
         )
         .total();
-        let d = &mut st.decode[di];
         d.round_scheduled = true;
         d.busy_time += step;
         self.push(now + step, Ev::DecodeRound(di));
     }
 
-    /// Least-loaded pipe among `candidates`.
+    /// Least-loaded live pipe serving `class`.
     fn pick_prefill(&self, st: &RunState, class: &str) -> usize {
-        let cands = &self.prefill_pipes_of[class];
+        let cands = st
+            .prefill_pipes_of
+            .get(class)
+            .unwrap_or_else(|| panic!("no live prefill pipelines for class {class}"));
         *cands
             .iter()
             .min_by_key(|&&k| st.prefill[k].queue.len() + st.prefill[k].busy as usize)
@@ -293,7 +440,10 @@ impl DagSim {
     }
 
     fn pick_decode(&self, st: &RunState, class: &str) -> usize {
-        let cands = &self.decode_pipes_of[class];
+        let cands = st
+            .decode_pipes_of
+            .get(class)
+            .unwrap_or_else(|| panic!("no live decode pipelines for class {class}"));
         *cands
             .iter()
             .min_by_key(|&&k| st.decode[k].active.len() + st.decode[k].waiting.len())
@@ -316,7 +466,7 @@ impl DagSim {
             Stage::LlmPrefill => {
                 let fi = self.flat(job);
                 let pi = match st.pipe_of[fi] {
-                    Some((Role::Prefill, k)) => k,
+                    Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
                     _ => self.pick_prefill(st, &binding.class.clone()),
                 };
                 st.pipe_of[fi] = Some((Role::Prefill, pi));
@@ -326,7 +476,7 @@ impl DagSim {
             Stage::LlmDecode => {
                 let fi = self.flat(job);
                 let di = match st.pipe_of[fi] {
-                    Some((Role::Decode, k)) => k,
+                    Some((Role::Decode, k)) if !st.decode[k].retired => k,
                     _ => self.pick_decode(st, &binding.class.clone()),
                 };
                 st.pipe_of[fi] = Some((Role::Decode, di));
@@ -358,6 +508,11 @@ impl DagSim {
         if st.nodes_left[job.req] == 0 {
             st.done_s[job.req] = now;
             st.completed += 1;
+            st.win_completed += 1;
+            let e2e = now - trace[job.req].arrive_s;
+            if self.sla_s.map_or(true, |s| e2e <= s) {
+                st.win_sla_ok += 1;
+            }
         }
         let from_chassis = self.chassis_of(st, job);
         let from_stage = self.plan.bindings[job.node].stage;
@@ -378,14 +533,14 @@ impl DagSim {
                 let (to_chassis, choice) = match succ_binding.stage {
                     Stage::LlmPrefill => {
                         let k = match st.pipe_of[fi] {
-                            Some((Role::Prefill, k)) => k,
+                            Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
                             _ => self.pick_prefill(st, &succ_binding.class.clone()),
                         };
                         (st.prefill[k].spec.chassis, (Role::Prefill, k))
                     }
                     Stage::LlmDecode => {
                         let k = match st.pipe_of[fi] {
-                            Some((Role::Decode, k)) => k,
+                            Some((Role::Decode, k)) if !st.decode[k].retired => k,
                             _ => self.pick_decode(st, &succ_binding.class.clone()),
                         };
                         (st.decode[k].spec.chassis, (Role::Decode, k))
@@ -403,13 +558,13 @@ impl DagSim {
                 };
                 if from != to {
                     // Prefill → decode hands over the KV cache, sized at
-                    // this request's actual prompt; other edges carry
-                    // the plan's estimate.
+                    // the consumer's token-fraction-scaled prompt; other
+                    // edges carry the plan's estimate.
                     let bytes = if from_stage == Stage::LlmPrefill
                         && succ_binding.stage == Stage::LlmDecode
                     {
                         match &self.model {
-                            Some(m) => kv_cache_bytes(m, trace[job.req].isl, 1),
+                            Some(m) => kv_cache_bytes(m, self.isl_of(succ_job, trace), 1),
                             None => succ_binding.xfer_bytes,
                         }
                     } else {
@@ -424,8 +579,304 @@ impl DagSim {
         Ok(())
     }
 
-    /// Execute the trace to completion; aggregate the serving metrics.
+    /// KV bytes currently resident on decode pipelines (active and
+    /// waiting sessions at their decoded-so-far context).
+    fn kv_resident(&self, st: &RunState, trace: &[Request]) -> f64 {
+        let Some(m) = &self.model else { return 0.0 };
+        let mut total = 0.0;
+        for d in &st.decode {
+            for j in d.active.iter().chain(d.waiting.iter()) {
+                let ctx = self.isl_of(*j, trace) + st.tokens_done[self.flat(*j)];
+                total += kv_cache_bytes(m, ctx, 1);
+            }
+        }
+        total
+    }
+
+    fn window_stats(
+        &self,
+        st: &RunState,
+        t0: f64,
+        t1: f64,
+        prev_pre_busy: f64,
+        prev_dec_busy: f64,
+        trace: &[Request],
+    ) -> (WindowStats, f64, f64) {
+        let pre_busy: f64 = st
+            .prefill
+            .iter()
+            .map(|p| p.busy_time * p.spec.par.devices() as f64)
+            .sum();
+        let dec_busy: f64 = st
+            .decode
+            .iter()
+            .map(|d| d.busy_time * d.spec.par.devices() as f64)
+            .sum();
+        // Denominators count live pipes plus retired pipes still
+        // draining (they accrue busy_time in the numerator, so leaving
+        // them out would read post-scale-down pressure as ~1.0 and
+        // oscillate the autoscaler: drain → spurious scale-up).
+        let pre_dev: f64 = st
+            .prefill
+            .iter()
+            .filter(|p| !p.retired || p.busy || !p.queue.is_empty())
+            .map(|p| p.spec.par.devices() as f64)
+            .sum();
+        let dec_dev: f64 = st
+            .decode
+            .iter()
+            .filter(|d| !d.retired || !d.active.is_empty() || !d.waiting.is_empty())
+            .map(|d| d.spec.par.devices() as f64)
+            .sum();
+        let wlen = (t1 - t0).max(1e-9);
+        let util = |busy: f64, prev: f64, dev: f64| {
+            if dev > 0.0 {
+                ((busy - prev) / (dev * wlen)).clamp(0.0, 1.0)
+            } else {
+                0.0
+            }
+        };
+        let stats = WindowStats {
+            t0,
+            t1,
+            arrivals: st.win_arrivals,
+            completed: st.win_completed,
+            sla_attained: if st.win_completed == 0 {
+                1.0
+            } else {
+                st.win_sla_ok as f64 / st.win_completed as f64
+            },
+            prefill_util: util(pre_busy, prev_pre_busy, pre_dev),
+            decode_util: util(dec_busy, prev_dec_busy, dec_dev),
+            prefill_queue: st.prefill.iter().map(|p| p.queue.len()).sum(),
+            decode_queue: st.decode.iter().map(|d| d.waiting.len()).sum(),
+            decode_active: st.decode.iter().map(|d| d.active.len()).sum(),
+            kv_resident_bytes: self.kv_resident(st, trace),
+            prefill_pipes: st.prefill.iter().filter(|p| !p.retired).count() as u32,
+            decode_pipes: st.decode.iter().filter(|d| !d.retired).count() as u32,
+        };
+        (stats, pre_busy, dec_busy)
+    }
+
+    /// Migrate the running fleet to `target`'s pipeline layout.
+    ///
+    /// Pipelines are matched by shape (device, TP×PP, batch limit):
+    /// surviving pipelines are untouched, surplus ones retire (queued
+    /// prefills re-route, waiting decode sessions move their KV over
+    /// the fabric, active sessions drain in place), missing ones
+    /// activate on their target chassis. The target must keep the
+    /// plan's model and cover every LLM binding's (role, class).
+    fn apply_fleet(
+        &mut self,
+        st: &mut RunState,
+        target: &ExecutionPlan,
+        now: f64,
+        trace: &[Request],
+    ) -> Result<FleetChangeStats> {
+        target.validate()?;
+        if target.model != self.plan.model {
+            return Err(Error::Config(format!(
+                "fleet change cannot swap model `{}` -> `{}` mid-run",
+                self.plan.model, target.model
+            )));
+        }
+        let placement = target.placement()?;
+        let max_chassis = placement
+            .prefill
+            .iter()
+            .chain(placement.decode.iter())
+            .map(|s| s.chassis + 1)
+            .max()
+            .unwrap_or(1);
+        self.fabric.grow(max_chassis);
+
+        let mut fc = FleetChangeStats {
+            t: now,
+            done_s: now,
+            ..Default::default()
+        };
+
+        // ---- prefill fleet -----------------------------------------
+        let mut prefill_requeue: Vec<Job> = Vec::new();
+        {
+            let mut want: BTreeMap<ShapeKey, Vec<PipelineSpec>> = BTreeMap::new();
+            for s in placement.prefill {
+                want.entry(shape_of(&s)).or_default().push(s);
+            }
+            let mut have: BTreeMap<ShapeKey, Vec<usize>> = BTreeMap::new();
+            for (k, p) in st.prefill.iter().enumerate() {
+                if !p.retired {
+                    have.entry(shape_of(&p.spec)).or_default().push(k);
+                }
+            }
+            for (key, specs) in &want {
+                let live = have.get(key).map_or(0, |v| v.len());
+                for s in specs.iter().skip(live) {
+                    st.prefill.push(PrefillPipe {
+                        spec: s.clone(),
+                        queue: VecDeque::new(),
+                        busy: false,
+                        busy_time: 0.0,
+                        next_batch: 0,
+                        in_flight: BTreeMap::new(),
+                        retired: false,
+                        created_s: now,
+                        retired_s: None,
+                    });
+                    fc.activated += 1;
+                }
+            }
+            for (key, idxs) in &have {
+                let keep = want.get(key).map_or(0, |v| v.len());
+                if idxs.len() > keep {
+                    // Retire the idle-most pipelines first.
+                    let mut by_load = idxs.clone();
+                    by_load.sort_by_key(|&k| {
+                        st.prefill[k].queue.len() + st.prefill[k].busy as usize
+                    });
+                    for &k in by_load.iter().take(idxs.len() - keep) {
+                        let p = &mut st.prefill[k];
+                        p.retired = true;
+                        p.retired_s = Some(now);
+                        prefill_requeue.extend(p.queue.drain(..));
+                        fc.retired += 1;
+                    }
+                }
+            }
+        }
+
+        // ---- decode fleet ------------------------------------------
+        let mut kv_moves: Vec<(Job, u32)> = Vec::new();
+        {
+            let mut want: BTreeMap<ShapeKey, Vec<PipelineSpec>> = BTreeMap::new();
+            for s in placement.decode {
+                want.entry(shape_of(&s)).or_default().push(s);
+            }
+            let mut have: BTreeMap<ShapeKey, Vec<usize>> = BTreeMap::new();
+            for (k, d) in st.decode.iter().enumerate() {
+                if !d.retired {
+                    have.entry(shape_of(&d.spec)).or_default().push(k);
+                }
+            }
+            for (key, specs) in &want {
+                let live = have.get(key).map_or(0, |v| v.len());
+                for s in specs.iter().skip(live) {
+                    st.decode.push(DecodePipe {
+                        spec: s.clone(),
+                        active: Vec::new(),
+                        waiting: VecDeque::new(),
+                        round_scheduled: false,
+                        busy_time: 0.0,
+                        retired: false,
+                        created_s: now,
+                        retired_s: None,
+                    });
+                    fc.activated += 1;
+                }
+            }
+            for (key, idxs) in &have {
+                let keep = want.get(key).map_or(0, |v| v.len());
+                if idxs.len() > keep {
+                    let mut by_load = idxs.clone();
+                    by_load.sort_by_key(|&k| {
+                        st.decode[k].active.len() + st.decode[k].waiting.len()
+                    });
+                    for &k in by_load.iter().take(idxs.len() - keep) {
+                        let d = &mut st.decode[k];
+                        d.retired = true;
+                        d.retired_s = Some(now);
+                        let from_ch = d.spec.chassis;
+                        kv_moves.extend(d.waiting.drain(..).map(|j| (j, from_ch)));
+                        fc.retired += 1;
+                    }
+                }
+            }
+        }
+
+        st.rebuild_routing_maps();
+
+        // ---- every in-flight class must still be servable ----------
+        for b in &self.plan.bindings {
+            let ok = match b.stage {
+                Stage::Cpu => true,
+                Stage::LlmPrefill => st
+                    .prefill_pipes_of
+                    .get(&b.class)
+                    .is_some_and(|v| !v.is_empty()),
+                Stage::LlmDecode => st
+                    .decode_pipes_of
+                    .get(&b.class)
+                    .is_some_and(|v| !v.is_empty()),
+            };
+            if !ok {
+                return Err(Error::Capacity(format!(
+                    "fleet change strands {} (no live {} pipelines for {})",
+                    b.op,
+                    b.class,
+                    b.stage.name()
+                )));
+            }
+        }
+
+        // ---- re-route displaced work -------------------------------
+        for job in prefill_requeue {
+            let class = self.plan.bindings[job.node].class.clone();
+            let pi = self.pick_prefill(st, &class);
+            let fi = self.flat(job);
+            st.pipe_of[fi] = Some((Role::Prefill, pi));
+            st.prefill[pi].queue.push_back(job);
+            self.try_start_prefill(st, pi, now, trace);
+        }
+        for (job, from_ch) in kv_moves {
+            let class = self.plan.bindings[job.node].class.clone();
+            let di = self.pick_decode(st, &class);
+            let to_ch = st.decode[di].spec.chassis;
+            let bytes = match &self.model {
+                Some(m) => {
+                    let ctx = self.isl_of(job, trace) + st.tokens_done[self.flat(job)];
+                    kv_cache_bytes(m, ctx, 1)
+                }
+                None => 0.0,
+            };
+            let arrive = if bytes > 0.0 && from_ch != to_ch {
+                self.fabric.transfer(
+                    NodeAddr {
+                        chassis: from_ch,
+                        slot: 0,
+                    },
+                    NodeAddr {
+                        chassis: to_ch,
+                        slot: 0,
+                    },
+                    bytes,
+                    now,
+                )?
+            } else {
+                now
+            };
+            st.kv_bytes_moved += bytes;
+            fc.kv_moves += 1;
+            fc.kv_bytes += bytes;
+            fc.done_s = fc.done_s.max(arrive);
+            self.push(arrive, Ev::KvMigrated { job, to: di });
+        }
+        Ok(fc)
+    }
+
+    /// Execute the trace to completion against a static fleet.
     pub fn run(&mut self, trace: &[Request]) -> Result<SimReport> {
+        self.run_controlled(trace, f64::INFINITY, &mut NoopFleetController)
+    }
+
+    /// Execute the trace with a closed-loop [`FleetController`] invoked
+    /// every `window_s` seconds (pass a non-finite window to disable
+    /// the ticks). Aggregates the same serving metrics as [`DagSim::run`].
+    pub fn run_controlled(
+        &mut self,
+        trace: &[Request],
+        window_s: f64,
+        ctl: &mut dyn FleetController,
+    ) -> Result<SimReport> {
         let n_req = trace.len();
         let n_nodes = self.plan.bindings.len();
         if n_nodes == 0 {
@@ -449,6 +900,9 @@ impl DagSim {
                     busy_time: 0.0,
                     next_batch: 0,
                     in_flight: BTreeMap::new(),
+                    retired: false,
+                    created_s: 0.0,
+                    retired_s: None,
                 })
                 .collect(),
             decode: self
@@ -461,8 +915,13 @@ impl DagSim {
                     waiting: VecDeque::new(),
                     round_scheduled: false,
                     busy_time: 0.0,
+                    retired: false,
+                    created_s: 0.0,
+                    retired_s: None,
                 })
                 .collect(),
+            prefill_pipes_of: BTreeMap::new(),
+            decode_pipes_of: BTreeMap::new(),
             cpu_free: self.plan.cpu_workers,
             cpu_queue: VecDeque::new(),
             remaining: (0..n_req)
@@ -478,12 +937,23 @@ impl DagSim {
             completed: 0,
             kv_bytes_moved: 0.0,
             output_tokens: 0,
+            win_arrivals: 0,
+            win_completed: 0,
+            win_sla_ok: 0,
         };
+        st.rebuild_routing_maps();
 
         for (i, r) in trace.iter().enumerate() {
             self.push(r.arrive_s, Ev::Arrival(i));
         }
+        let ticking = window_s.is_finite() && window_s > 0.0;
+        if ticking {
+            self.push(window_s, Ev::WindowTick);
+        }
 
+        let mut win_t0 = 0.0f64;
+        let mut prev_pre_busy = 0.0f64;
+        let mut prev_dec_busy = 0.0f64;
         let mut events = 0u64;
         let mut makespan = 0.0f64;
         while let Some(Reverse(Event { t, ev, .. })) = self.heap.pop() {
@@ -491,9 +961,14 @@ impl DagSim {
             if events > 100_000_000 {
                 return Err(Error::Runtime("event budget exceeded".into()));
             }
-            makespan = makespan.max(t);
+            // Window ticks are observation points, not work: they must
+            // not stretch the makespan past the last real event.
+            if !matches!(ev, Ev::WindowTick) {
+                makespan = makespan.max(t);
+            }
             match ev {
                 Ev::Arrival(req) => {
+                    st.win_arrivals += 1;
                     for node in 0..n_nodes {
                         if self.indeg[node] == 0 {
                             self.dispatch(&mut st, Job { req, node }, t, trace);
@@ -522,7 +997,9 @@ impl DagSim {
                     for job in members {
                         self.complete_node(&mut st, job, t, trace)?;
                     }
-                    self.try_start_prefill(&mut st, pipe, t, trace);
+                    if !st.prefill[pipe].retired {
+                        self.try_start_prefill(&mut st, pipe, t, trace);
+                    }
                 }
                 Ev::DecodeRound(di) => {
                     st.decode[di].round_scheduled = false;
@@ -540,7 +1017,7 @@ impl DagSim {
                         st.last_token_s[fi] = t;
                         st.tokens_done[fi] += 1;
                         st.output_tokens += 1;
-                        if st.tokens_done[fi] >= trace[job.req].osl {
+                        if st.tokens_done[fi] >= self.osl_of(job, trace) {
                             self.complete_node(&mut st, job, t, trace)?;
                         } else {
                             still.push(job);
@@ -548,6 +1025,43 @@ impl DagSim {
                     }
                     st.decode[di].active = still;
                     self.maybe_schedule_round(&mut st, di, t, trace);
+                }
+                Ev::KvMigrated { job, to } => {
+                    // Destination may itself have retired since the
+                    // transfer was scheduled; land on a live pipe.
+                    let di = if st.decode[to].retired {
+                        let class = self.plan.bindings[job.node].class.clone();
+                        self.pick_decode(&st, &class)
+                    } else {
+                        to
+                    };
+                    let fi = self.flat(job);
+                    st.pipe_of[fi] = Some((Role::Decode, di));
+                    st.decode[di].waiting.push_back(job);
+                    self.maybe_schedule_round(&mut st, di, t, trace);
+                }
+                Ev::WindowTick => {
+                    let (stats, pre_busy, dec_busy) = self.window_stats(
+                        &st,
+                        win_t0,
+                        t,
+                        prev_pre_busy,
+                        prev_dec_busy,
+                        trace,
+                    );
+                    prev_pre_busy = pre_busy;
+                    prev_dec_busy = dec_busy;
+                    st.win_arrivals = 0;
+                    st.win_completed = 0;
+                    st.win_sla_ok = 0;
+                    if let Some(next) = ctl.on_window(&stats) {
+                        let fcs = self.apply_fleet(&mut st, &next, t, trace)?;
+                        ctl.on_applied(t, &fcs);
+                    }
+                    win_t0 = t;
+                    if !self.heap.is_empty() {
+                        self.push(t + window_s, Ev::WindowTick);
+                    }
                 }
             }
         }
@@ -573,35 +1087,38 @@ impl DagSim {
             .map(|i| st.done_s[i] - trace[i].arrive_s)
             .collect();
 
-        // Fleet cost: the LLM pipelines (CPU workers are priced into the
-        // planner's per-request cost, not the serving fleet $/hr —
-        // matching the flat simulator's accounting).
-        let usd_per_hr = self
-            .plan
-            .placement()?
-            .usd_per_hour(self.opex, &self.terms);
+        // Fleet cost and utilization integrate each pipeline over its
+        // *lifespan* (activation → retirement), so time-varying fleets
+        // are priced for what they actually deployed. CPU workers are
+        // priced into the planner's per-request cost, as before.
+        let mut total_usd = 0.0f64;
+        let mut p_busy = 0.0f64;
+        let mut p_devsec = 0.0f64;
+        for p in &st.prefill {
+            let dev = p.spec.par.devices() as f64;
+            let end = p.retired_s.unwrap_or(makespan).min(makespan).max(p.created_s);
+            let span = end - p.created_s;
+            p_busy += p.busy_time * dev;
+            p_devsec += dev * span;
+            total_usd +=
+                dev * opex_usd_per_hour(&p.spec.device, self.opex, &self.terms) * span / 3600.0;
+        }
+        let mut d_busy = 0.0f64;
+        let mut d_devsec = 0.0f64;
+        for d in &st.decode {
+            let dev = d.spec.par.devices() as f64;
+            let end = d.retired_s.unwrap_or(makespan).min(makespan).max(d.created_s);
+            let span = end - d.created_s;
+            d_busy += d.busy_time * dev;
+            d_devsec += dev * span;
+            total_usd +=
+                dev * opex_usd_per_hour(&d.spec.device, self.opex, &self.terms) * span / 3600.0;
+        }
         let tokens_per_s = if makespan > 0.0 {
             st.output_tokens as f64 / makespan
         } else {
             0.0
         };
-        let dev_seconds = |pipes_busy: &[(f64, f64)]| -> (f64, f64) {
-            let busy: f64 = pipes_busy.iter().map(|(b, d)| b * d).sum();
-            let total: f64 = pipes_busy.iter().map(|(_, d)| d).sum::<f64>() * makespan;
-            (busy, total)
-        };
-        let (p_busy, p_total) = dev_seconds(
-            &st.prefill
-                .iter()
-                .map(|p| (p.busy_time, p.spec.par.devices() as f64))
-                .collect::<Vec<_>>(),
-        );
-        let (d_busy, d_total) = dev_seconds(
-            &st.decode
-                .iter()
-                .map(|d| (d.busy_time, d.spec.par.devices() as f64))
-                .collect::<Vec<_>>(),
-        );
 
         Ok(SimReport {
             n_requests: n_req,
@@ -621,13 +1138,21 @@ impl DagSim {
             e2e_p50_s: percentile(&e2es, 50.0),
             output_tokens: st.output_tokens,
             tokens_per_s,
-            usd_per_mtok: if tokens_per_s > 0.0 {
-                usd_per_hr / 3600.0 / tokens_per_s * 1e6
+            usd_per_mtok: if st.output_tokens > 0 {
+                total_usd / (st.output_tokens as f64 / 1e6)
             } else {
                 0.0
             },
-            prefill_utilization: if p_total > 0.0 { p_busy / p_total } else { 0.0 },
-            decode_utilization: if d_total > 0.0 { d_busy / d_total } else { 0.0 },
+            prefill_utilization: if p_devsec > 0.0 {
+                (p_busy / p_devsec).min(1.0)
+            } else {
+                0.0
+            },
+            decode_utilization: if d_devsec > 0.0 {
+                (d_busy / d_devsec).min(1.0)
+            } else {
+                0.0
+            },
             kv_bytes_moved: st.kv_bytes_moved,
             events_processed: events,
         })
@@ -694,6 +1219,30 @@ mod tests {
     }
 
     #[test]
+    fn token_fraction_scales_expert_work() {
+        // Halving a decode node's token fraction halves its generated
+        // tokens and shrinks the KV handed across the fabric.
+        let full = tiny_plan();
+        let mut half = tiny_plan();
+        half.bindings[2].token_fraction = 0.5; // llm.decode
+        let t = trace(12, 3.0);
+        let rf = DagSim::new(&full).unwrap().run(&t).unwrap();
+        let rh = DagSim::new(&half).unwrap().run(&t).unwrap();
+        let expect_half: u64 = t
+            .iter()
+            .map(|r| ((r.osl as f64 * 0.5).round() as u64).max(1))
+            .sum();
+        assert_eq!(rh.output_tokens, expect_half);
+        assert!(rh.output_tokens < rf.output_tokens);
+        assert!(
+            rh.kv_bytes_moved < rf.kv_bytes_moved,
+            "scaled ISL must shrink the prefill→decode KV handoff: {} vs {}",
+            rh.kv_bytes_moved,
+            rf.kv_bytes_moved
+        );
+    }
+
+    #[test]
     fn cpu_only_dag_runs_without_pipelines() {
         let plan = ExecutionPlan {
             agent: "tools_only".into(),
@@ -708,6 +1257,7 @@ mod tests {
                     cost_usd: 0.0,
                     deps: vec![],
                     xfer_bytes: 0.0,
+                    token_fraction: 1.0,
                 },
                 NodeBinding {
                     op: "tool.lookup".into(),
@@ -717,6 +1267,7 @@ mod tests {
                     cost_usd: 0.0,
                     deps: vec![0],
                     xfer_bytes: 0.0,
+                    token_fraction: 1.0,
                 },
                 NodeBinding {
                     op: "io.output".into(),
@@ -726,6 +1277,7 @@ mod tests {
                     cost_usd: 0.0,
                     deps: vec![1],
                     xfer_bytes: 0.0,
+                    token_fraction: 1.0,
                 },
             ],
             pipelines: vec![],
@@ -769,5 +1321,123 @@ mod tests {
             rn.makespan_s,
             rw.makespan_s
         );
+    }
+
+    /// Scripted controller: applies fixed plans at given window indices.
+    struct Scripted {
+        window: usize,
+        script: Vec<(usize, ExecutionPlan)>,
+        applied: Vec<FleetChangeStats>,
+        windows_seen: usize,
+    }
+
+    impl FleetController for Scripted {
+        fn on_window(&mut self, _stats: &WindowStats) -> Option<ExecutionPlan> {
+            let w = self.window;
+            self.window += 1;
+            self.windows_seen += 1;
+            self.script
+                .iter()
+                .find(|(at, _)| *at == w)
+                .map(|(_, p)| p.clone())
+        }
+
+        fn on_applied(&mut self, _t: f64, stats: &FleetChangeStats) {
+            self.applied.push(stats.clone());
+        }
+    }
+
+    #[test]
+    fn fleet_scales_up_and_down_without_dropping_requests() {
+        let base = tiny_plan(); // 1× H100 prefill, 2× Gaudi3 decode
+        let mut grown = tiny_plan();
+        grown.pipelines[1].replicas = 4;
+        let mut shrunk = tiny_plan();
+        shrunk.pipelines[1].replicas = 1;
+
+        // A hot trace that keeps decode busy across both migrations.
+        let t = trace(96, 24.0);
+        let mut sim = DagSim::new(&base).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(1, grown), (4, shrunk)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r = sim.run_controlled(&t, 0.5, &mut ctl).unwrap();
+        assert_eq!(r.n_requests, 96, "no request may be dropped");
+        assert_eq!(r.output_tokens, t.iter().map(|r| r.osl).sum::<u64>());
+        assert_eq!(ctl.applied.len(), 2, "both migrations must apply");
+        assert_eq!(ctl.applied[0].activated, 2, "2 → 4 decode pipelines");
+        assert!(ctl.applied[1].retired >= 1, "shrink must retire pipelines");
+        assert!(ctl.windows_seen >= 5);
+    }
+
+    #[test]
+    fn drained_decode_sessions_migrate_kv_over_fabric() {
+        let base = tiny_plan();
+        let mut shrunk = tiny_plan();
+        shrunk.pipelines[1].replicas = 1;
+        // Overload decode (2 pipes × batch 32) far past its active-set
+        // capacity so both pipes hold waiting sessions when the shrink
+        // lands a few windows in.
+        let t = trace(150, 200.0);
+        let mut sim = DagSim::new(&base).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(3, shrunk)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r = sim.run_controlled(&t, 0.2, &mut ctl).unwrap();
+        assert_eq!(r.n_requests, 150);
+        let fc = &ctl.applied[0];
+        assert_eq!(fc.retired, 1);
+        if fc.kv_moves > 0 {
+            assert!(fc.kv_bytes > 0.0);
+            assert!(
+                fc.done_s >= fc.t,
+                "KV landing cannot precede the migration"
+            );
+        }
+    }
+
+    #[test]
+    fn controlled_run_with_no_interventions_matches_static_run() {
+        let plan = tiny_plan();
+        let t = trace(24, 6.0);
+        let r_static = DagSim::new(&plan).unwrap().run(&t).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r_ctl = DagSim::new(&plan)
+            .unwrap()
+            .run_controlled(&t, 1.0, &mut ctl)
+            .unwrap();
+        assert_eq!(r_static.output_tokens, r_ctl.output_tokens);
+        assert_eq!(r_static.kv_bytes_moved, r_ctl.kv_bytes_moved);
+        assert!((r_static.makespan_s - r_ctl.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incompatible_fleet_change_rejected() {
+        let base = tiny_plan();
+        // A target that strands in-flight decode work: decode moves to
+        // H100 while the bindings still route llm.decode to Gaudi3.
+        let mut bad = tiny_plan();
+        bad.pipelines[1].device = "H100".into();
+        bad.bindings[2].class = "H100".into(); // keeps validate() happy
+        let t = trace(32, 50.0);
+        let mut sim = DagSim::new(&base).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(0, bad)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        assert!(sim.run_controlled(&t, 0.2, &mut ctl).is_err());
     }
 }

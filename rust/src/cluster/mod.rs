@@ -21,6 +21,6 @@ pub mod dag;
 pub mod sim;
 pub mod trace;
 
-pub use dag::DagSim;
+pub use dag::{DagSim, FleetChangeStats, FleetController, WindowStats};
 pub use sim::{simulate_plan, ClusterSim, Placement, PipelineSpec, SimReport};
-pub use trace::{Request, TraceConfig};
+pub use trace::{bursty, Request, TraceConfig};

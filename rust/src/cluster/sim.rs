@@ -478,7 +478,10 @@ impl ClusterSim {
 /// nodes, any number of LLM inferences per request, with per-edge
 /// fabric transfers. This is the plan-native entry point; the flat
 /// [`ClusterSim`] remains for single-LLM request streams and the
-/// analytic cross-checks.
+/// analytic cross-checks. For *time-varying* fleets (the orchestration
+/// loop re-planning mid-run), drive
+/// [`DagSim::run_controlled`](super::dag::DagSim::run_controlled)
+/// through [`crate::orchestrator::SimExecutor`] instead.
 pub fn simulate_plan(
     plan: &crate::plan::ExecutionPlan,
     trace: &[Request],

@@ -78,6 +78,38 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
         .collect()
 }
 
+/// Piecewise-Poisson arrivals with square-wave rate modulation: the
+/// first `burst_s` seconds of every `period_s` run at
+/// `cfg.rate * burst_mult`, the rest at `cfg.rate` — the diurnal /
+/// flash-crowd load swings the orchestration loop must absorb.
+pub fn bursty(cfg: &TraceConfig, burst_mult: f64, period_s: f64, burst_s: f64) -> Vec<Request> {
+    assert!(burst_mult > 0.0, "burst_mult must be positive");
+    assert!(
+        period_s > 0.0 && (0.0..=period_s).contains(&burst_s),
+        "need 0 <= burst_s <= period_s"
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0xB525_7ABC);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests as u64)
+        .map(|id| {
+            let rate = if t % period_s < burst_s {
+                cfg.rate * burst_mult
+            } else {
+                cfg.rate
+            };
+            t += rng.exp(rate);
+            Request {
+                id,
+                arrive_s: t,
+                isl: lognormal_len(&mut rng, cfg.isl_mean, cfg.sigma, 8, 32_768),
+                osl: lognormal_len(&mut rng, cfg.osl_mean, cfg.sigma, 1, 16_384),
+                pre_s: 0.0,
+                post_s: 0.0,
+            }
+        })
+        .collect()
+}
+
 /// The Figure-2 conversational voice agent: STT in front, TTS behind,
 /// and an occasional extra LLM round-trip for web search (the feedback
 /// loop is unrolled per §3.1's bounded-unrolling rule).
@@ -151,6 +183,44 @@ mod tests {
         let a = generate(&cfg);
         let b = generate(&cfg);
         assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.arrive_s == y.arrive_s && x.isl == y.isl));
+    }
+
+    #[test]
+    fn bursty_rate_modulation_shows_up() {
+        let cfg = TraceConfig {
+            n_requests: 4000,
+            rate: 2.0,
+            sigma: 0.0,
+            ..Default::default()
+        };
+        let t = bursty(&cfg, 10.0, 20.0, 5.0);
+        assert_eq!(t.len(), 4000);
+        for w in t.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s);
+        }
+        // Arrival density inside burst phases must clearly beat the
+        // off-phase density (10x rate -> expect >> 2x observed).
+        let span = t.last().unwrap().arrive_s;
+        let in_burst = t
+            .iter()
+            .filter(|r| r.arrive_s % 20.0 < 5.0)
+            .count() as f64;
+        let out_burst = t.len() as f64 - in_burst;
+        let burst_time: f64 = (span / 20.0).floor() * 5.0 + (span % 20.0).min(5.0);
+        let off_time = span - burst_time;
+        let density_ratio = (in_burst / burst_time) / (out_burst / off_time);
+        assert!(density_ratio > 2.0, "ratio={density_ratio}");
+    }
+
+    #[test]
+    fn bursty_deterministic_by_seed() {
+        let cfg = TraceConfig::default();
+        let a = bursty(&cfg, 5.0, 30.0, 6.0);
+        let b = bursty(&cfg, 5.0, 30.0, 6.0);
         assert!(a
             .iter()
             .zip(&b)

@@ -230,6 +230,14 @@ pub struct DeployConfig {
     pub sla_tbt_ms: f64,
     /// Workers: (name, model list).
     pub workers: Vec<(String, Vec<String>)>,
+    // `[orchestrator]` — the control loop's observation cadence and
+    // per-role autoscaler policy (see `orchestrator::OrchestratorConfig`).
+    pub orch_window_s: f64,
+    pub orch_high_watermark: f64,
+    pub orch_low_watermark: f64,
+    pub orch_patience: u32,
+    pub orch_min_pipelines: u32,
+    pub orch_max_pipelines: u32,
 }
 
 impl Default for DeployConfig {
@@ -245,6 +253,12 @@ impl Default for DeployConfig {
             sla_ttft_ms: 250.0,
             sla_tbt_ms: 100.0,
             workers: vec![("worker0".into(), vec!["tiny-llama".into()])],
+            orch_window_s: 5.0,
+            orch_high_watermark: 0.85,
+            orch_low_watermark: 0.30,
+            orch_patience: 3,
+            orch_min_pipelines: 1,
+            orch_max_pipelines: 64,
         }
     }
 }
@@ -279,6 +293,17 @@ impl DeployConfig {
         cfg.admission_burst = get_f("admission", "burst", cfg.admission_burst);
         cfg.sla_ttft_ms = get_f("sla", "ttft_ms", cfg.sla_ttft_ms);
         cfg.sla_tbt_ms = get_f("sla", "tbt_ms", cfg.sla_tbt_ms);
+        cfg.orch_window_s = get_f("orchestrator", "window_s", cfg.orch_window_s);
+        cfg.orch_high_watermark =
+            get_f("orchestrator", "high_watermark", cfg.orch_high_watermark);
+        cfg.orch_low_watermark =
+            get_f("orchestrator", "low_watermark", cfg.orch_low_watermark);
+        cfg.orch_patience =
+            get_i("orchestrator", "patience", cfg.orch_patience as i64) as u32;
+        cfg.orch_min_pipelines =
+            get_i("orchestrator", "min_pipelines", cfg.orch_min_pipelines as i64) as u32;
+        cfg.orch_max_pipelines =
+            get_i("orchestrator", "max_pipelines", cfg.orch_max_pipelines as i64) as u32;
         if let Some(workers) = doc.table_arrays.get("worker") {
             cfg.workers = workers
                 .iter()
@@ -362,6 +387,21 @@ models = ["tiny-llama"]
         assert_eq!(cfg.sla_ttft_ms, 250.0); // default
         assert_eq!(cfg.workers.len(), 1);
         assert_eq!(cfg.plan_path, None);
+    }
+
+    #[test]
+    fn orchestrator_section_parses_with_defaults() {
+        let cfg = DeployConfig::from_str_src(
+            "[orchestrator]\nwindow_s = 2.5\nhigh_watermark = 0.9\npatience = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.orch_window_s, 2.5);
+        assert_eq!(cfg.orch_high_watermark, 0.9);
+        assert_eq!(cfg.orch_patience, 2);
+        // Unset keys keep autoscaler defaults.
+        assert_eq!(cfg.orch_low_watermark, 0.30);
+        assert_eq!(cfg.orch_min_pipelines, 1);
+        assert_eq!(cfg.orch_max_pipelines, 64);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! * **L3 (this crate)** — the paper's coordination contribution: an
 //!   agent-graph IR with decomposition passes ([`ir`]), an analytic
 //!   cost/roofline/TCO model ([`cost`]), a cost-aware MILP/LP assignment
-//!   optimizer ([`opt`]), a slow-path planner ([`planner`]), a fast-path
-//!   router + continuous batcher ([`router`]), a paged KV-cache manager
+//!   optimizer ([`opt`]), a slow-path planner ([`planner`]), a closed-loop
+//!   orchestrator that re-plans, diffs, and live-migrates running fleets
+//!   ([`orchestrator`]), a fast-path router + continuous batcher
+//!   ([`router`]), a paged KV-cache manager
 //!   ([`kvcache`]), an RDMA-fabric model ([`transport`]), a heterogeneous
 //!   cluster discrete-event simulator ([`cluster`]), and a serving loop
 //!   ([`server`]).
@@ -31,6 +33,7 @@ pub mod ir;
 pub mod kvcache;
 pub mod obs;
 pub mod opt;
+pub mod orchestrator;
 pub mod plan;
 pub mod planner;
 pub mod repro;

@@ -13,7 +13,7 @@
 
 use agentic_hetero::agents;
 use agentic_hetero::cluster::sim::{pair_placement, simulate_plan, ClusterSim};
-use agentic_hetero::cluster::trace::{voice_agent as voice_trace, TraceConfig};
+use agentic_hetero::cluster::trace::{bursty, voice_agent as voice_trace, TraceConfig};
 use agentic_hetero::config::DeployConfig;
 use agentic_hetero::cost::hardware::by_name;
 use agentic_hetero::cost::model_profile::by_short_name;
@@ -21,7 +21,8 @@ use agentic_hetero::cost::roofline::Parallelism;
 use agentic_hetero::ir::passes::PassManager;
 use agentic_hetero::ir::printer;
 use agentic_hetero::opt::assignment::Sla;
-use agentic_hetero::plan::ExecutionPlan;
+use agentic_hetero::orchestrator::{Executor, Orchestrator, OrchestratorConfig, SimExecutor};
+use agentic_hetero::plan::{ExecutionPlan, PlanDiff};
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 use agentic_hetero::runtime::Engine;
 use agentic_hetero::server::{ChatRequest, Server, ServerConfig};
@@ -51,6 +52,7 @@ fn main() {
         "ir" => cmd_ir(&args),
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "orchestrate" => cmd_orchestrate(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             0
@@ -71,15 +73,23 @@ USAGE:
                  [--json] [--out FILE]
   agentic-hetero plan     [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
                           [--out PLAN.json]
+  agentic-hetero plan diff A.json B.json [--json]
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
   agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
                           [--requests N] [--max-new N]
   agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
                           [--rate R] [--requests N] [--voice]
+  agentic-hetero orchestrate [--plan PLAN.json | --agent voice] [--trace bursty|steady|voice]
+                          [--rate R] [--requests N] [--window S] [--config FILE]
+                          [--out TIMELINE.json]
 
 The `plan` command emits a serializable ExecutionPlan; `simulate --plan`
-replays it through the agent-DAG cluster simulator and `serve --plan`
-derives the batching/admission policy from the same artifact.
+replays it through the agent-DAG cluster simulator, `serve --plan`
+derives the batching/admission policy from the same artifact, `plan
+diff` renders the typed PlanDiff between two saved plans, and
+`orchestrate` runs the closed control loop (observe -> decide ->
+re-plan -> diff -> migrate -> apply) against a traced load swing,
+emitting a replayable timeline.
 ";
 
 fn cmd_repro(args: &Args) -> i32 {
@@ -141,7 +151,34 @@ fn build_agent(args: &Args) -> agentic_hetero::ir::Graph {
     }
 }
 
+/// `plan diff A.json B.json [--json]` — render the typed PlanDiff
+/// between two saved plans (the artifact review step before
+/// orchestration applies a change).
+fn cmd_plan_diff(args: &Args) -> i32 {
+    let (Some(a), Some(b)) = (args.positional.get(2), args.positional.get(3)) else {
+        eprintln!("usage: agentic-hetero plan diff A.json B.json [--json]");
+        return 2;
+    };
+    let (pa, pb) = match (load_plan(a), load_plan(b)) {
+        (Ok(pa), Ok(pb)) => (pa, pb),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let diff = PlanDiff::between(&pa, &pb);
+    if args.flag("json") {
+        println!("{}", diff.to_json().pretty());
+    } else {
+        print!("{}", diff.summary());
+    }
+    0
+}
+
 fn cmd_plan(args: &Args) -> i32 {
+    if args.positional.get(1).map(|s| s.as_str()) == Some("diff") {
+        return cmd_plan_diff(args);
+    }
     let g = build_agent(args);
     let mut cfg = PlannerConfig::default();
     let sla_ms: f64 = parse_opt!(args, "sla-ms", 5000.0);
@@ -367,6 +404,119 @@ fn cmd_simulate(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("simulate: {e}");
+            1
+        }
+    }
+}
+
+/// `orchestrate`: run the closed control loop against a traced load
+/// swing in the DAG simulator, emitting a replayable timeline of plans,
+/// diffs, migrations, and SLA attainment.
+fn cmd_orchestrate(args: &Args) -> i32 {
+    let rate: f64 = parse_opt!(args, "rate", 8.0);
+    let n: usize = parse_opt!(args, "requests", 384usize);
+
+    // Initial plan: a saved artifact (`--plan`) or a fresh slow-path
+    // plan over `--agent` (which also arms planner-backed re-planning).
+    let sla_ms: f64 = parse_opt!(args, "sla-ms", 5000.0);
+    let sla = if sla_ms <= 0.0 {
+        Sla::None
+    } else {
+        Sla::EndToEnd(sla_ms / 1e3)
+    };
+    let (plan, graph) = match args.get("plan") {
+        Some(path) => match load_plan(path) {
+            Ok(p) => (p, None),
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        None => {
+            let g = build_agent(args);
+            let mut cfg = PlannerConfig::default();
+            cfg.sla = sla;
+            match Planner::new(cfg).plan(&g) {
+                Ok(p) => (p, Some(g)),
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
+
+    let trace_kind = args.get_or("trace", "bursty").to_string();
+    let tc = TraceConfig {
+        n_requests: n,
+        rate,
+        isl_mean: 512,
+        osl_mean: 128,
+        sigma: 0.4,
+        seed: 0,
+    };
+    let trace = match trace_kind.as_str() {
+        "bursty" => bursty(&tc, 8.0, 40.0, 12.0),
+        "voice" => voice_trace(&tc),
+        _ => agentic_hetero::cluster::trace::generate(&tc),
+    };
+
+    // Loop knobs: `[orchestrator]` in --config, --window overrides.
+    let mut ocfg = match args.get("config") {
+        Some(path) => match DeployConfig::from_file(path) {
+            Ok(c) => OrchestratorConfig::from_deploy(&c),
+            Err(e) => {
+                eprintln!("config {path}: {e}");
+                return 1;
+            }
+        },
+        None => OrchestratorConfig::default(),
+    };
+    // A 5 s window × patience-3 hysteresis outlasts a 12 s burst; the
+    // standalone demo defaults to 2 s windows so bursts are actionable.
+    // An explicit --window (or `[orchestrator] window_s`) wins.
+    let default_window = if args.get("config").is_some() {
+        ocfg.window_s
+    } else {
+        2.0
+    };
+    ocfg.window_s = parse_opt!(args, "window", default_window);
+
+    let mut orch = match Orchestrator::new(ocfg, plan, &trace_kind, "sim") {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("orchestrate: {e}");
+            return 1;
+        }
+    };
+    if let Some(g) = graph {
+        let mut cfg = PlannerConfig::default();
+        cfg.sla = sla;
+        orch = orch.with_planner(Planner::new(cfg), g);
+    }
+    let metrics = orch.metrics.clone();
+
+    let mut exec = SimExecutor::new(&trace);
+    match exec.orchestrate(orch) {
+        Ok(timeline) => {
+            println!("{}", timeline.summary());
+            if let Some(r) = &exec.report {
+                println!("{}", r.summary());
+            }
+            for (k, v) in metrics.snapshot() {
+                println!("{k} {v}");
+            }
+            if let Some(path) = args.get("out") {
+                if let Err(e) = std::fs::write(path, timeline.to_json_string()) {
+                    eprintln!("write {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("orchestrate: {e}");
             1
         }
     }

@@ -151,6 +151,20 @@ impl MetricsRegistry {
             .clone()
     }
 
+    /// Flat numeric snapshot (counters and gauges, stable ordering) for
+    /// exporters — the orchestrator summarizes a run from this, and the
+    /// CLI prints it next to the timeline.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), c.get() as f64);
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), g.get());
+        }
+        out
+    }
+
     /// Flat text report, stable ordering.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -217,6 +231,18 @@ mod tests {
         assert!(rep.contains("a 1"));
         assert!(rep.contains("b 1"));
         assert!(rep.contains("c_count 1"));
+    }
+
+    #[test]
+    fn snapshot_is_flat_and_numeric() {
+        let r = MetricsRegistry::new();
+        r.counter("orch_decisions").add(3);
+        r.gauge("orch_decode_util").set(0.75);
+        r.histogram("latency").record_secs(0.01); // histograms excluded
+        let s = r.snapshot();
+        assert_eq!(s["orch_decisions"], 3.0);
+        assert_eq!(s["orch_decode_util"], 0.75);
+        assert!(!s.contains_key("latency"));
     }
 
     #[test]

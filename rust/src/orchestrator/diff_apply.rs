@@ -1,0 +1,268 @@
+//! Lowering [`PlanDiff`]s into capacity-safe migrations, and the
+//! retargeting / replay helpers the control loop and its property
+//! tests share.
+//!
+//! Invariants this module guarantees (and `rust/tests/orchestrator_props.rs`
+//! hammers):
+//!
+//! * a [`MigrationPlan`] replayed step-by-step over the source fleet
+//!   never drives any (device, role) capacity negative — activations
+//!   are ordered before the drains they replace;
+//! * the final capacity map equals the target fleet exactly;
+//! * [`retarget`] always yields a plan that passes
+//!   [`ExecutionPlan::validate`], keeps ≥ 1 replica per role, and
+//!   re-packs chassis consecutively.
+
+use std::collections::BTreeMap;
+
+use crate::plan::{ExecutionPlan, Role};
+use crate::planner::migration::{
+    plan_migration, role_replicas, MigrationPlan, MigrationStep, RoleMap,
+};
+use crate::{Error, Result};
+
+/// Shape-granular capacity view: one key per pipeline *shape*
+/// (device + TP×PP + batch limit — the same identity `plan/diff.rs`
+/// and `DagSim::apply_fleet` match on), so a TP or batch-limit rebuild
+/// surfaces as drain + activate steps instead of vanishing at plain
+/// (device, role) granularity. The device label carries the shape so
+/// migration steps stay self-describing.
+pub fn shape_map_of(plan: &ExecutionPlan) -> RoleMap {
+    let mut m = RoleMap::new();
+    for p in &plan.pipelines {
+        let device = format!("{} tp{} pp{} b{}", p.device, p.tp, p.pp, p.max_batch);
+        *m.entry((device, p.role.name().to_string())).or_insert(0) += p.replicas;
+    }
+    m
+}
+
+/// Total (replicas × max_batch) slots a plan deploys for one role.
+pub fn role_capacity(plan: &ExecutionPlan, role: Role) -> f64 {
+    plan.pipelines
+        .iter()
+        .filter(|p| p.role == role)
+        .map(|p| (p.replicas as u64 * p.max_batch) as f64)
+        .sum()
+}
+
+/// Emit a new plan with the per-role replica totals moved to
+/// `prefill_total` / `decode_total` (each clamped to ≥ 1).
+///
+/// The delta lands on the role's first (primary) pipeline group — the
+/// one the configuration explorer shaped — and chassis are re-packed
+/// consecutively. Admission rate follows decode capacity so the token
+/// bucket tracks what the resized fleet can actually absorb.
+pub fn retarget(plan: &ExecutionPlan, prefill_total: u32, decode_total: u32) -> ExecutionPlan {
+    let mut out = plan.clone();
+    for (role, want_total) in [
+        (Role::Prefill, prefill_total.max(1)),
+        (Role::Decode, decode_total.max(1)),
+    ] {
+        let have_total = role_replicas(plan, role);
+        if have_total == 0 {
+            continue; // role absent (e.g. CPU-only plan)
+        }
+        let delta = want_total as i64 - have_total as i64;
+        if delta == 0 {
+            continue;
+        }
+        if let Some(g) = out.pipelines.iter_mut().find(|p| p.role == role) {
+            g.replicas = (g.replicas as i64 + delta).max(1) as u32;
+        }
+    }
+    // Re-pack chassis consecutively in declaration order.
+    let mut chassis = 0u32;
+    for p in &mut out.pipelines {
+        p.chassis = chassis;
+        chassis += p.replicas;
+    }
+    // Admission tracks decode capacity.
+    let old_cap = role_capacity(plan, Role::Decode);
+    let new_cap = role_capacity(&out, Role::Decode);
+    if old_cap > 0.0 && new_cap > 0.0 && (new_cap - old_cap).abs() > 0.0 {
+        out.admission.rate = plan.admission.rate * new_cap / old_cap;
+    }
+    out
+}
+
+/// Lower the move `from → to` into an ordered, capacity-safe
+/// [`MigrationPlan`], pricing the KV motion over `from`'s fabric.
+///
+/// Capacity is compared at *shape* granularity ([`shape_map_of`]), so
+/// same-device rebuilds (TP/PP/batch changes) produce real drain +
+/// activate + KV-transfer steps — matching what `DagSim::apply_fleet`
+/// actually does to the fleet. `kv_resident_bytes` is the KV currently
+/// parked on decode pipelines (the simulator reports it per window);
+/// each drained decode pipeline is priced at its share.
+pub fn lower_diff(
+    from: &ExecutionPlan,
+    to: &ExecutionPlan,
+    kv_resident_bytes: f64,
+) -> Result<MigrationPlan> {
+    let cur = shape_map_of(from);
+    let tgt = shape_map_of(to);
+    let decode_pipes = role_replicas(from, Role::Decode).max(1);
+    let kv_per_pipeline = (kv_resident_bytes / decode_pipes as f64).max(0.0);
+    let fabric = from.build_fabric()?;
+    Ok(plan_migration(&cur, &tgt, kv_per_pipeline, &fabric))
+}
+
+/// Replay a step list over `current`, returning the capacity map after
+/// every step (index 0 = the starting map). Errs if any drain would
+/// push a (device, role) capacity negative — the safety property every
+/// migration must satisfy.
+pub fn capacity_trajectory(
+    current: &RoleMap,
+    steps: &[MigrationStep],
+) -> Result<Vec<RoleMap>> {
+    let mut m = current.clone();
+    let mut out = vec![m.clone()];
+    for step in steps {
+        match step {
+            MigrationStep::Activate {
+                device,
+                role,
+                count,
+            } => {
+                *m.entry((device.clone(), role.clone())).or_insert(0) += count;
+            }
+            MigrationStep::Drain {
+                device,
+                role,
+                count,
+            } => {
+                let key = (device.clone(), role.clone());
+                let have = m.get(&key).copied().unwrap_or(0);
+                if have < *count {
+                    return Err(Error::Capacity(format!(
+                        "drain of {count}× {device}/{role} underflows capacity {have}"
+                    )));
+                }
+                match have - count {
+                    0 => {
+                        m.remove(&key);
+                    }
+                    left => {
+                        m.insert(key, left);
+                    }
+                }
+            }
+            MigrationStep::TransferKv { bytes, .. } => {
+                if *bytes < 0.0 || !bytes.is_finite() {
+                    return Err(Error::Capacity(format!(
+                        "KV transfer of {bytes} bytes is nonsense"
+                    )));
+                }
+            }
+        }
+        out.push(m.clone());
+    }
+    Ok(out)
+}
+
+/// Does replaying `steps` over `current` land exactly on `target`?
+/// (Zero-count entries are normalized away on both sides.)
+pub fn converges(current: &RoleMap, target: &RoleMap, steps: &[MigrationStep]) -> bool {
+    let Ok(traj) = capacity_trajectory(current, steps) else {
+        return false;
+    };
+    let norm = |m: &RoleMap| -> BTreeMap<(String, String), u32> {
+        m.iter()
+            .filter(|(_, &v)| v > 0)
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    };
+    norm(traj.last().unwrap()) == norm(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::tests::tiny_plan;
+
+    #[test]
+    fn retarget_scales_roles_and_repacks_chassis() {
+        let plan = tiny_plan(); // 1× H100 prefill @0, 2× Gaudi3 decode @1
+        let up = retarget(&plan, 1, 5);
+        up.validate().unwrap();
+        assert_eq!(role_replicas(&up, Role::Decode), 5);
+        assert_eq!(role_replicas(&up, Role::Prefill), 1);
+        assert_eq!(up.pipelines[0].chassis, 0);
+        assert_eq!(up.pipelines[1].chassis, 1);
+        assert_eq!(up.n_chassis(), 6);
+        // Admission rate scaled with decode capacity (2×32 → 5×32).
+        assert!((up.admission.rate - plan.admission.rate * 2.5).abs() < 1e-9);
+
+        // Shrinking clamps at one replica per role.
+        let down = retarget(&plan, 0, 0);
+        down.validate().unwrap();
+        assert_eq!(role_replicas(&down, Role::Prefill), 1);
+        assert_eq!(role_replicas(&down, Role::Decode), 1);
+    }
+
+    #[test]
+    fn lower_diff_produces_convergent_capacity_safe_steps() {
+        let a = tiny_plan();
+        let b = retarget(&a, 2, 4);
+        let m = lower_diff(&a, &b, 8e9).unwrap();
+        let cur = shape_map_of(&a);
+        let tgt = shape_map_of(&b);
+        // Replay is capacity-safe at every step...
+        let traj = capacity_trajectory(&cur, &m.steps).unwrap();
+        assert_eq!(traj.len(), m.steps.len() + 1);
+        // ...and lands exactly on the target fleet.
+        assert!(converges(&cur, &tgt, &m.steps));
+        // Pure growth moves no KV.
+        assert_eq!(m.kv_bytes, 0.0);
+    }
+
+    #[test]
+    fn shrink_prices_kv_share_per_drained_pipeline() {
+        let a = tiny_plan(); // 2 decode pipelines
+        let b = retarget(&a, 1, 1); // drain one
+        let m = lower_diff(&a, &b, 8e9).unwrap();
+        // 8 GB resident over 2 pipelines → 4 GB leaves with the drained one.
+        assert!((m.kv_bytes - 4e9).abs() < 1.0, "kv={}", m.kv_bytes);
+        assert!(m.est_duration_s > 1.0);
+        assert!(converges(&shape_map_of(&a), &shape_map_of(&b), &m.steps));
+    }
+
+    #[test]
+    fn shape_rebuild_is_a_real_migration() {
+        // Same device, same replica count, different TP: invisible at
+        // (device, role) granularity but a full rebuild in the fleet —
+        // the migration must drain the old shape, move its KV, and
+        // activate the new one.
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.pipelines[1].tp = 2; // decode Gaudi3 rebuilt at TP2
+        let m = lower_diff(&a, &b, 8e9).unwrap();
+        assert!(
+            m.steps
+                .iter()
+                .any(|s| matches!(s, MigrationStep::Activate { .. })),
+            "rebuild must activate the new shape: {:?}",
+            m.steps
+        );
+        assert!(
+            m.steps
+                .iter()
+                .any(|s| matches!(s, MigrationStep::Drain { .. })),
+            "rebuild must drain the old shape"
+        );
+        assert!(m.kv_bytes > 0.0, "decode rebuild moves resident KV");
+        assert!(converges(&shape_map_of(&a), &shape_map_of(&b), &m.steps));
+    }
+
+    #[test]
+    fn trajectory_rejects_underflow() {
+        let cur = RoleMap::new();
+        let steps = vec![MigrationStep::Drain {
+            device: "H100".into(),
+            role: "decode".into(),
+            count: 1,
+        }];
+        assert!(capacity_trajectory(&cur, &steps).is_err());
+        assert!(!converges(&cur, &cur, &steps));
+    }
+}

@@ -1,0 +1,605 @@
+//! The closed-loop controller: observe → decide → re-plan → diff →
+//! migrate → apply, plus the two [`Executor`] backends that drive it.
+//!
+//! The [`Orchestrator`] is a *pure decision engine*: executors feed it
+//! [`WindowStats`] and it answers with an optional [`PlanChange`]
+//! (target plan + typed diff + capacity-safe migration). That keeps
+//! the loop testable without any backend and lets both backends share
+//! every policy knob:
+//!
+//! * [`SimExecutor`] plugs the orchestrator into
+//!   [`DagSim::run_controlled`] as a [`FleetController`] — load swings
+//!   from a traced workload drive real fleet changes in the simulator;
+//! * [`LiveExecutor`] chunks a request stream into windows against a
+//!   running [`Server`], re-deriving `ServerConfig::from_plan` whenever
+//!   the orchestrator re-plans (reconfiguration happens *between*
+//!   requests, never under one).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, WindowStats};
+use crate::cluster::sim::SimReport;
+use crate::cluster::trace::Request;
+use crate::ir::graph::Graph;
+use crate::obs::MetricsRegistry;
+use crate::plan::{ExecutionPlan, PlanDiff, Role, SlaSpec};
+use crate::planner::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+use crate::planner::migration::{role_replicas, MigrationPlan};
+use crate::planner::plan::Planner;
+use crate::server::{ChatRequest, Server, ServerConfig};
+use crate::util::bench::percentile;
+use crate::{Error, Result};
+
+use super::diff_apply::{lower_diff, retarget, role_capacity};
+use super::timeline::{Timeline, TimelineEvent};
+
+/// Control-loop knobs.
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    /// Observation window length, seconds (sim) — the live backend uses
+    /// request chunks instead but records the same cadence.
+    pub window_s: f64,
+    /// Per-role autoscaler policy (watermarks, patience, bounds).
+    pub autoscale: AutoscalerConfig,
+    /// Queue backlog equal to `backlog_factor ×` the role's batch
+    /// capacity reads as full (1.0) pressure even when utilization
+    /// lags (queues grow before device-time catches up).
+    pub backlog_factor: f64,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            window_s: 5.0,
+            autoscale: AutoscalerConfig::default(),
+            backlog_factor: 1.0,
+        }
+    }
+}
+
+impl OrchestratorConfig {
+    /// Pull the `[orchestrator]` knobs out of a deployment config.
+    pub fn from_deploy(cfg: &crate::config::DeployConfig) -> OrchestratorConfig {
+        OrchestratorConfig {
+            window_s: cfg.orch_window_s,
+            autoscale: AutoscalerConfig {
+                high_watermark: cfg.orch_high_watermark,
+                low_watermark: cfg.orch_low_watermark,
+                patience: cfg.orch_patience,
+                min_pipelines: cfg.orch_min_pipelines,
+                max_pipelines: cfg.orch_max_pipelines,
+            },
+            backlog_factor: 1.0,
+        }
+    }
+}
+
+/// What one loop iteration decided: the new target plan, the typed
+/// diff from the live plan, and the migration that realizes it.
+#[derive(Debug, Clone)]
+pub struct PlanChange {
+    pub target: ExecutionPlan,
+    pub diff: PlanDiff,
+    pub migration: MigrationPlan,
+}
+
+/// The decision engine. Feed it window observations; it drives the
+/// per-role autoscalers, re-plans, diffs, and lowers migrations —
+/// recording everything in a [`Timeline`].
+pub struct Orchestrator {
+    pub cfg: OrchestratorConfig,
+    pub metrics: Arc<MetricsRegistry>,
+    current: ExecutionPlan,
+    prefill_scaler: Autoscaler,
+    decode_scaler: Autoscaler,
+    /// When attached, re-plans run the full slow path (IR → assignment
+    /// → plan) instead of structurally retargeting the current plan.
+    planner: Option<(Planner, Graph)>,
+    timeline: Timeline,
+    plan_seq: u64,
+}
+
+impl Orchestrator {
+    pub fn new(
+        cfg: OrchestratorConfig,
+        initial: ExecutionPlan,
+        trace_name: &str,
+        backend: &str,
+    ) -> Result<Orchestrator> {
+        initial.validate()?;
+        let pre0 = role_replicas(&initial, Role::Prefill).max(1);
+        let dec0 = role_replicas(&initial, Role::Decode).max(1);
+        let mut timeline = Timeline::new(&initial.agent, trace_name, backend, cfg.window_s);
+        timeline.events.push(TimelineEvent::Plan {
+            t: 0.0,
+            seq: 0,
+            plan: initial.clone(),
+        });
+        Ok(Orchestrator {
+            prefill_scaler: Autoscaler::new(cfg.autoscale.clone(), pre0),
+            decode_scaler: Autoscaler::new(cfg.autoscale.clone(), dec0),
+            cfg,
+            metrics: Arc::new(MetricsRegistry::new()),
+            current: initial,
+            planner: None,
+            timeline,
+            plan_seq: 0,
+        })
+    }
+
+    /// Attach the slow-path planner: scale decisions then invoke
+    /// `Planner::plan` on the agent graph to emit the fresh plan
+    /// (falling back to structural retargeting when the planner's
+    /// class layout would strand in-flight work).
+    pub fn with_planner(mut self, planner: Planner, graph: Graph) -> Orchestrator {
+        self.planner = Some((planner, graph));
+        self
+    }
+
+    /// The plan currently considered live.
+    pub fn current(&self) -> &ExecutionPlan {
+        &self.current
+    }
+
+    /// Pressure signal for one role: device-time utilization, floored
+    /// by normalized queue backlog so saturation shows before busy-time
+    /// integrates.
+    fn pressure(&self, util: f64, queue: usize, role: Role) -> f64 {
+        let cap = role_capacity(&self.current, role) * self.cfg.backlog_factor;
+        let backlog = if cap > 0.0 {
+            (queue as f64 / cap).min(1.0)
+        } else {
+            0.0
+        };
+        util.max(backlog).clamp(0.0, 1.0)
+    }
+
+    /// Ingest one window of observations; returns the plan change to
+    /// apply, if any decision fired.
+    pub fn observe_window(&mut self, w: &WindowStats) -> Result<Option<PlanChange>> {
+        self.metrics.counter("orch_windows").inc();
+        self.metrics.gauge("orch_prefill_util").set(w.prefill_util);
+        self.metrics.gauge("orch_decode_util").set(w.decode_util);
+        self.metrics.gauge("orch_sla_attained").set(w.sla_attained);
+        self.timeline.events.push(TimelineEvent::Window {
+            t0: w.t0,
+            t1: w.t1,
+            arrivals: w.arrivals as u64,
+            completed: w.completed as u64,
+            sla_attained: w.sla_attained,
+            prefill_util: w.prefill_util,
+            decode_util: w.decode_util,
+        });
+
+        let pre_pressure = self.pressure(w.prefill_util, w.prefill_queue, Role::Prefill);
+        let dec_pressure = self.pressure(w.decode_util, w.decode_queue, Role::Decode);
+        let d_pre = self.prefill_scaler.observe(pre_pressure);
+        let d_dec = self.decode_scaler.observe(dec_pressure);
+        for (role, decision, replicas) in [
+            (Role::Prefill, d_pre, self.prefill_scaler.current),
+            (Role::Decode, d_dec, self.decode_scaler.current),
+        ] {
+            let (action, amount) = match decision {
+                ScaleDecision::ScaleUp(n) => ("scale_up", n),
+                ScaleDecision::ScaleDown(n) => ("scale_down", n),
+                ScaleDecision::Hold => continue,
+            };
+            self.metrics.counter("orch_decisions").inc();
+            self.timeline.events.push(TimelineEvent::Decision {
+                t: w.t1,
+                role: role.name().to_string(),
+                action: action.to_string(),
+                amount,
+                replicas,
+            });
+        }
+        if d_pre == ScaleDecision::Hold && d_dec == ScaleDecision::Hold {
+            return Ok(None);
+        }
+
+        let target = self.emit_target()?;
+        let diff = PlanDiff::between(&self.current, &target);
+        if diff.is_empty() {
+            return Ok(None);
+        }
+        let migration = lower_diff(&self.current, &target, w.kv_resident_bytes)?;
+        self.plan_seq += 1;
+        self.metrics.counter("orch_migrations").inc();
+        self.timeline.events.push(TimelineEvent::Plan {
+            t: w.t1,
+            seq: self.plan_seq,
+            plan: target.clone(),
+        });
+        self.timeline.events.push(TimelineEvent::Diff {
+            t: w.t1,
+            diff: diff.clone(),
+        });
+        self.timeline.events.push(TimelineEvent::Migration {
+            t: w.t1,
+            plan: migration.clone(),
+            applied_s: None,
+        });
+        self.current = target.clone();
+        Ok(Some(PlanChange {
+            target,
+            diff,
+            migration,
+        }))
+    }
+
+    /// Produce the next target plan at the autoscalers' replica totals:
+    /// a fresh slow-path plan when a planner is attached (and its class
+    /// layout stays compatible with in-flight work), else a structural
+    /// retarget of the live plan.
+    fn emit_target(&self) -> Result<ExecutionPlan> {
+        let base = match &self.planner {
+            Some((planner, graph)) => {
+                let fresh = planner.plan(graph)?;
+                // In-flight jobs keep routing by the *current* plan's
+                // classes; only adopt the fresh plan if it serves them.
+                let classes = |p: &ExecutionPlan| -> BTreeSet<(Role, String)> {
+                    p.pipelines
+                        .iter()
+                        .map(|pl| (pl.role, pl.device.clone()))
+                        .collect()
+                };
+                if classes(&fresh) == classes(&self.current) {
+                    fresh
+                } else {
+                    self.current.clone()
+                }
+            }
+            None => self.current.clone(),
+        };
+        let target = retarget(
+            &base,
+            self.prefill_scaler.current,
+            self.decode_scaler.current,
+        );
+        target.validate()?;
+        Ok(target)
+    }
+
+    /// Executor callback: the most recent migration finished applying.
+    pub fn record_applied(&mut self, t: f64, fc: &FleetChangeStats) {
+        if let Some(TimelineEvent::Migration { applied_s, .. }) = self
+            .timeline
+            .events
+            .iter_mut()
+            .rev()
+            .find(|e| matches!(e, TimelineEvent::Migration { .. }))
+        {
+            *applied_s = Some((fc.done_s - t).max(0.0));
+        }
+    }
+
+    /// Close the loop: append the end-of-run summary and hand back the
+    /// replayable timeline.
+    pub fn finish(mut self, report: Option<&SimReport>) -> Timeline {
+        if let Some(r) = report {
+            self.timeline.events.push(TimelineEvent::Summary {
+                t: r.makespan_s,
+                requests: r.n_requests as u64,
+                output_tokens: r.output_tokens,
+                makespan_s: r.makespan_s,
+            });
+        }
+        self.timeline
+    }
+}
+
+/// One interface, two backends: drive a workload to completion under
+/// orchestrator control and return the recorded timeline.
+pub trait Executor {
+    /// Backend label (lands in the timeline).
+    fn kind(&self) -> &'static str;
+
+    /// Consume the orchestrator, run the workload, return the timeline.
+    fn orchestrate(&mut self, orch: Orchestrator) -> Result<Timeline>;
+}
+
+// ---------------------------------------------------------------------
+// Simulation backend
+// ---------------------------------------------------------------------
+
+/// Evaluate orchestration policies end-to-end in the DAG simulator:
+/// the orchestrator's plan changes become live fleet changes (drains,
+/// activations, KV migrations over the fabric) mid-run.
+pub struct SimExecutor<'a> {
+    pub trace: &'a [Request],
+    /// Aggregate serving metrics of the finished run.
+    pub report: Option<SimReport>,
+}
+
+impl<'a> SimExecutor<'a> {
+    pub fn new(trace: &'a [Request]) -> SimExecutor<'a> {
+        SimExecutor {
+            trace,
+            report: None,
+        }
+    }
+}
+
+/// Adapter: the orchestrator as a [`FleetController`].
+struct OrchController {
+    orch: Orchestrator,
+    failed: Option<Error>,
+}
+
+impl FleetController for OrchController {
+    fn on_window(&mut self, stats: &WindowStats) -> Option<ExecutionPlan> {
+        if self.failed.is_some() {
+            return None;
+        }
+        match self.orch.observe_window(stats) {
+            Ok(Some(change)) => Some(change.target),
+            Ok(None) => None,
+            Err(e) => {
+                self.failed = Some(e);
+                None
+            }
+        }
+    }
+
+    fn on_applied(&mut self, t: f64, stats: &FleetChangeStats) {
+        self.orch.record_applied(t, stats);
+    }
+}
+
+impl Executor for SimExecutor<'_> {
+    fn kind(&self) -> &'static str {
+        "sim"
+    }
+
+    fn orchestrate(&mut self, orch: Orchestrator) -> Result<Timeline> {
+        let window_s = orch.cfg.window_s;
+        let mut sim = DagSim::new(orch.current())?;
+        let mut ctl = OrchController { orch, failed: None };
+        let report = sim.run_controlled(self.trace, window_s, &mut ctl)?;
+        if let Some(e) = ctl.failed {
+            return Err(e);
+        }
+        let timeline = ctl.orch.finish(Some(&report));
+        self.report = Some(report);
+        Ok(timeline)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live backend
+// ---------------------------------------------------------------------
+
+/// Reconfigure a running [`Server`] between request windows. The
+/// pressure signal is SLA-derived (observed p95 e2e against the plan's
+/// envelope) — a live server reports latencies, not device busy-time.
+pub struct LiveExecutor {
+    pub server: Server,
+    pub requests: Vec<ChatRequest>,
+    /// Requests per observation window.
+    pub window: usize,
+}
+
+impl LiveExecutor {
+    pub fn new(server: Server, requests: Vec<ChatRequest>, window: usize) -> LiveExecutor {
+        LiveExecutor {
+            server,
+            requests,
+            window: window.max(1),
+        }
+    }
+}
+
+impl Executor for LiveExecutor {
+    fn kind(&self) -> &'static str {
+        "live"
+    }
+
+    fn orchestrate(&mut self, mut orch: Orchestrator) -> Result<Timeline> {
+        let sla_s = match orch.current().sla {
+            SlaSpec::EndToEnd(t) => Some(t),
+            SlaSpec::Soft { t_sla_s, .. } => Some(t_sla_s),
+            SlaSpec::None => None,
+        };
+        let requests = std::mem::take(&mut self.requests);
+        let mut t = 0.0f64;
+        for chunk in requests.chunks(self.window) {
+            // Apply the live plan's serving policy before the window —
+            // reconfiguration lands between requests, never under one.
+            self.server
+                .reconfigure(ServerConfig::from_plan(orch.current()));
+            let wall0 = std::time::Instant::now();
+            let responses = self.server.run_workload(chunk.to_vec())?;
+            let wall = wall0.elapsed().as_secs_f64().max(1e-6);
+
+            let e2es: Vec<f64> = responses
+                .iter()
+                .filter(|r| !r.rejected)
+                .map(|r| r.e2e_s)
+                .collect();
+            let completed = e2es.len();
+            let ok = match sla_s {
+                Some(s) => e2es.iter().filter(|&&e| e <= s).count(),
+                None => completed,
+            };
+            let p95 = if e2es.is_empty() {
+                0.0
+            } else {
+                percentile(&e2es, 95.0)
+            };
+            // SLA-headroom pressure: e2e at the envelope reads as 1.0.
+            let pressure = match sla_s {
+                Some(s) if s > 0.0 => (p95 / s).clamp(0.0, 1.0),
+                _ => 0.0,
+            };
+            let stats = WindowStats {
+                t0: t,
+                t1: t + wall,
+                arrivals: chunk.len(),
+                completed,
+                sla_attained: if completed == 0 {
+                    1.0
+                } else {
+                    ok as f64 / completed as f64
+                },
+                prefill_util: pressure,
+                decode_util: pressure,
+                prefill_queue: 0,
+                decode_queue: 0,
+                decode_active: 0,
+                kv_resident_bytes: 0.0,
+                prefill_pipes: role_replicas(orch.current(), Role::Prefill),
+                decode_pipes: role_replicas(orch.current(), Role::Decode),
+            };
+            t += wall;
+            if orch.observe_window(&stats)?.is_some() {
+                // Live apply = policy swap at the next window boundary;
+                // it completes immediately from the loop's perspective.
+                let fc = FleetChangeStats {
+                    t,
+                    done_s: t,
+                    ..Default::default()
+                };
+                orch.record_applied(t, &fc);
+            }
+        }
+        Ok(orch.finish(None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::tests::tiny_plan;
+
+    fn stats(util: f64, t0: f64, t1: f64) -> WindowStats {
+        WindowStats {
+            t0,
+            t1,
+            arrivals: 10,
+            completed: 10,
+            sla_attained: 1.0,
+            prefill_util: util,
+            decode_util: util,
+            prefill_queue: 0,
+            decode_queue: 0,
+            decode_active: 0,
+            kv_resident_bytes: 4e9,
+            prefill_pipes: 1,
+            decode_pipes: 2,
+        }
+    }
+
+    fn quick_cfg() -> OrchestratorConfig {
+        OrchestratorConfig {
+            window_s: 1.0,
+            autoscale: AutoscalerConfig {
+                patience: 2,
+                ..Default::default()
+            },
+            backlog_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn sustained_pressure_emits_plan_diff_migration() {
+        let mut orch =
+            Orchestrator::new(quick_cfg(), tiny_plan(), "synthetic", "test").unwrap();
+        assert!(orch.observe_window(&stats(0.95, 0.0, 1.0)).unwrap().is_none());
+        let change = orch
+            .observe_window(&stats(0.95, 1.0, 2.0))
+            .unwrap()
+            .expect("patience=2 must fire on the second hot window");
+        // Decode grew; the diff and migration agree with the target.
+        assert!(role_replicas(&change.target, Role::Decode) > 2);
+        assert!(!change.diff.is_empty());
+        assert!(!change.migration.steps.is_empty());
+        assert_eq!(orch.current(), &change.target);
+        // Admission followed capacity up.
+        assert!(change.target.admission.rate > tiny_plan().admission.rate);
+
+        let tl = orch.finish(None);
+        assert_eq!(tl.n_plans(), 2);
+        assert_eq!(tl.n_migrations(), 1);
+        assert!(tl.n_decisions() >= 1);
+    }
+
+    #[test]
+    fn idle_windows_scale_back_down() {
+        let mut orch =
+            Orchestrator::new(quick_cfg(), tiny_plan(), "synthetic", "test").unwrap();
+        // Scale up first...
+        orch.observe_window(&stats(0.95, 0.0, 1.0)).unwrap();
+        let up = orch.observe_window(&stats(0.95, 1.0, 2.0)).unwrap().unwrap();
+        let grown = role_replicas(&up.target, Role::Decode);
+        // ...then two idle windows shrink the fleet.
+        orch.observe_window(&stats(0.05, 2.0, 3.0)).unwrap();
+        let down = orch
+            .observe_window(&stats(0.05, 3.0, 4.0))
+            .unwrap()
+            .expect("idle patience must trigger scale-down");
+        assert!(role_replicas(&down.target, Role::Decode) < grown);
+        // The shrink migration drains pipelines and moves their KV share.
+        assert!(down
+            .migration
+            .steps
+            .iter()
+            .any(|s| matches!(s, crate::planner::MigrationStep::Drain { .. })));
+        assert!(down.migration.kv_bytes > 0.0);
+    }
+
+    #[test]
+    fn backlog_counts_as_pressure_even_at_low_utilization() {
+        let mut orch =
+            Orchestrator::new(quick_cfg(), tiny_plan(), "synthetic", "test").unwrap();
+        let mut w = stats(0.1, 0.0, 1.0);
+        w.decode_queue = 10_000; // >> 2 pipes × batch 32
+        assert!(orch.observe_window(&w).unwrap().is_none());
+        let mut w2 = stats(0.1, 1.0, 2.0);
+        w2.decode_queue = 10_000;
+        let change = orch.observe_window(&w2).unwrap();
+        assert!(change.is_some(), "backlog alone must trigger scale-up");
+    }
+
+    #[test]
+    fn planner_backed_replan_keeps_compatible_classes() {
+        use crate::agents;
+        use crate::planner::plan::{Planner, PlannerConfig};
+
+        let g = agents::voice_agent("8b-fp16", 512, 128);
+        let mut pcfg = PlannerConfig::default();
+        pcfg.sla = crate::opt::assignment::Sla::None;
+        let planner = Planner::new(pcfg);
+        let initial = planner.plan(&g).unwrap();
+        let dec0 = role_replicas(&initial, Role::Decode);
+
+        let pcfg2 = {
+            let mut c = PlannerConfig::default();
+            c.sla = crate::opt::assignment::Sla::None;
+            c
+        };
+        let mut orch = Orchestrator::new(quick_cfg(), initial.clone(), "synthetic", "test")
+            .unwrap()
+            .with_planner(Planner::new(pcfg2), g);
+        orch.observe_window(&stats(0.95, 0.0, 1.0)).unwrap();
+        let change = orch
+            .observe_window(&stats(0.95, 1.0, 2.0))
+            .unwrap()
+            .expect("hot windows must re-plan");
+        // The planner-backed target serves the same classes, scaled up.
+        assert!(role_replicas(&change.target, Role::Decode) > dec0);
+        change.target.validate().unwrap();
+        let old: BTreeSet<(Role, String)> = initial
+            .pipelines
+            .iter()
+            .map(|p| (p.role, p.device.clone()))
+            .collect();
+        let new: BTreeSet<(Role, String)> = change
+            .target
+            .pipelines
+            .iter()
+            .map(|p| (p.role, p.device.clone()))
+            .collect();
+        assert_eq!(old, new);
+    }
+}

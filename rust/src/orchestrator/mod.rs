@@ -1,0 +1,51 @@
+//! The dynamic orchestration loop — the paper's third building block:
+//! "a dynamic orchestration system that can place the granular
+//! components across a heterogeneous compute infrastructure and stitch
+//! them together while meeting an end-to-end SLA" (§4.1).
+//!
+//! The subsystem closes the loop the planner left open. `planner`
+//! produces an [`ExecutionPlan`](crate::plan::ExecutionPlan); this
+//! module owns that plan's *runtime lifecycle*:
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────────┐
+//!            ▼                                                │
+//!   observe (WindowStats: util, backlog, SLA attainment)      │
+//!            │                                                │
+//!   decide  (per-role Autoscaler, hysteresis)                 │ apply
+//!            │                                                │ (Executor)
+//!   re-plan (planner::Planner / structural retarget           │
+//!            │          → NEW ExecutionPlan)                  │
+//!   diff    (plan::PlanDiff: added/removed/resized/policy)    │
+//!            │                                                │
+//!   migrate (planner::migration → capacity-safe MigrationPlan)│
+//!            └────────────────────────────────────────────────┘
+//! ```
+//!
+//! Every iteration is recorded in a replayable [`Timeline`] (plans,
+//! diffs, decisions, migrations, per-window SLA attainment) that
+//! round-trips losslessly through [`crate::util::json`].
+//!
+//! Execution sits behind one [`Executor`] trait with two backends:
+//!
+//! * [`SimExecutor`] — drives [`crate::cluster::dag::DagSim`] with a
+//!   time-varying fleet, so orchestration policies are evaluated
+//!   end-to-end against traced load swings (bursty arrivals, drain/
+//!   activate mid-run, KV migrations occupying real fabric links);
+//! * [`LiveExecutor`] — reconfigures a running
+//!   [`crate::server::Server`] between request windows, deriving the
+//!   serving policy of each new plan via `ServerConfig::from_plan`.
+//!
+//! CLI: `agentic-hetero orchestrate --plan x.json --trace bursty --out
+//! timeline.json`.
+
+pub mod diff_apply;
+#[path = "loop.rs"]
+pub mod control;
+pub mod timeline;
+
+pub use control::{
+    Executor, LiveExecutor, Orchestrator, OrchestratorConfig, PlanChange, SimExecutor,
+};
+pub use diff_apply::{capacity_trajectory, converges, lower_diff, retarget, shape_map_of};
+pub use timeline::{Timeline, TimelineEvent};

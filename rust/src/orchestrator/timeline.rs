@@ -1,0 +1,445 @@
+//! The replayable orchestration record: every window observation,
+//! scaling decision, emitted plan, diff, and migration — in order,
+//! serializable through [`crate::util::json`] so a run can be saved
+//! (`orchestrate --out timeline.json`), reviewed, and replayed.
+
+use crate::plan::{ExecutionPlan, PlanDiff};
+use crate::planner::migration::MigrationPlan;
+use crate::util::json::Json;
+use crate::{jobj, Error, Result};
+
+/// One entry in the orchestration timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TimelineEvent {
+    /// Window observation (see [`crate::cluster::dag::WindowStats`]).
+    Window {
+        t0: f64,
+        t1: f64,
+        arrivals: u64,
+        completed: u64,
+        sla_attained: f64,
+        prefill_util: f64,
+        decode_util: f64,
+    },
+    /// A per-role autoscaler fired.
+    Decision {
+        t: f64,
+        role: String,
+        /// "scale_up" | "scale_down"
+        action: String,
+        amount: u32,
+        /// Role replica total after the decision.
+        replicas: u32,
+    },
+    /// A (re-)planned `ExecutionPlan` became the orchestration target.
+    Plan {
+        t: f64,
+        /// 0 = the initial plan; increments per re-plan.
+        seq: u64,
+        plan: ExecutionPlan,
+    },
+    /// The typed diff connecting the previous plan to the new one.
+    Diff { t: f64, diff: PlanDiff },
+    /// The migration lowered from that diff.
+    Migration {
+        t: f64,
+        plan: MigrationPlan,
+        /// Observed apply duration, once the executor reports it.
+        applied_s: Option<f64>,
+    },
+    /// End-of-run rollup.
+    Summary {
+        t: f64,
+        requests: u64,
+        output_tokens: u64,
+        makespan_s: f64,
+    },
+}
+
+/// A full orchestration run record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timeline {
+    pub agent: String,
+    pub trace_name: String,
+    pub backend: String,
+    pub window_s: f64,
+    pub events: Vec<TimelineEvent>,
+}
+
+impl Timeline {
+    pub fn new(agent: &str, trace_name: &str, backend: &str, window_s: f64) -> Timeline {
+        Timeline {
+            agent: agent.to_string(),
+            trace_name: trace_name.to_string(),
+            backend: backend.to_string(),
+            window_s,
+            events: Vec::new(),
+        }
+    }
+
+    /// Distinct plans emitted (including the initial one).
+    pub fn n_plans(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Plan { .. }))
+            .count()
+    }
+
+    pub fn n_migrations(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Migration { .. }))
+            .count()
+    }
+
+    pub fn n_decisions(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Decision { .. }))
+            .count()
+    }
+
+    /// The emitted plans, in order.
+    pub fn plans(&self) -> Vec<&ExecutionPlan> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TimelineEvent::Plan { plan, .. } => Some(plan),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Completion-weighted SLA attainment across all windows (1.0 when
+    /// nothing completed).
+    pub fn sla_attainment(&self) -> f64 {
+        let (mut done, mut ok) = (0.0f64, 0.0f64);
+        for e in &self.events {
+            if let TimelineEvent::Window {
+                completed,
+                sla_attained,
+                ..
+            } = e
+            {
+                done += *completed as f64;
+                ok += *completed as f64 * sla_attained;
+            }
+        }
+        if done > 0.0 {
+            ok / done
+        } else {
+            1.0
+        }
+    }
+
+    /// One-paragraph human rollup.
+    pub fn summary(&self) -> String {
+        let windows = self
+            .events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Window { .. }))
+            .count();
+        format!(
+            "orchestrated @{} over `{}` ({}): {} windows of {}s, {} decisions, \
+             {} plans, {} migrations, SLA attainment {:.1}%",
+            self.agent,
+            self.trace_name,
+            self.backend,
+            windows,
+            self.window_s,
+            self.n_decisions(),
+            self.n_plans(),
+            self.n_migrations(),
+            self.sla_attainment() * 100.0
+        )
+    }
+
+    // ---- JSON round-trip -------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| match e {
+                TimelineEvent::Window {
+                    t0,
+                    t1,
+                    arrivals,
+                    completed,
+                    sla_attained,
+                    prefill_util,
+                    decode_util,
+                } => jobj! {
+                    "kind" => "window",
+                    "t0" => *t0,
+                    "t1" => *t1,
+                    "arrivals" => *arrivals,
+                    "completed" => *completed,
+                    "sla_attained" => *sla_attained,
+                    "prefill_util" => *prefill_util,
+                    "decode_util" => *decode_util,
+                },
+                TimelineEvent::Decision {
+                    t,
+                    role,
+                    action,
+                    amount,
+                    replicas,
+                } => jobj! {
+                    "kind" => "decision",
+                    "t" => *t,
+                    "role" => role.clone(),
+                    "action" => action.clone(),
+                    "amount" => *amount,
+                    "replicas" => *replicas,
+                },
+                TimelineEvent::Plan { t, seq, plan } => jobj! {
+                    "kind" => "plan",
+                    "t" => *t,
+                    "seq" => *seq,
+                    "plan" => plan.to_json(),
+                },
+                TimelineEvent::Diff { t, diff } => jobj! {
+                    "kind" => "diff",
+                    "t" => *t,
+                    "diff" => diff.to_json(),
+                },
+                TimelineEvent::Migration { t, plan, applied_s } => {
+                    let applied = match applied_s {
+                        Some(v) => Json::Num(*v),
+                        None => Json::Null,
+                    };
+                    jobj! {
+                        "kind" => "migration",
+                        "t" => *t,
+                        "migration" => plan.to_json(),
+                        "applied_s" => applied,
+                    }
+                }
+                TimelineEvent::Summary {
+                    t,
+                    requests,
+                    output_tokens,
+                    makespan_s,
+                } => jobj! {
+                    "kind" => "summary",
+                    "t" => *t,
+                    "requests" => *requests,
+                    "output_tokens" => *output_tokens,
+                    "makespan_s" => *makespan_s,
+                },
+            })
+            .collect();
+        jobj! {
+            "agent" => self.agent.clone(),
+            "trace" => self.trace_name.clone(),
+            "backend" => self.backend.clone(),
+            "window_s" => self.window_s,
+            "events" => Json::Arr(events),
+        }
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    pub fn parse_json(src: &str) -> Result<Timeline> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Timeline> {
+        let str_of = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| Error::Config(format!("timeline missing `{key}`")))
+        };
+        let mut tl = Timeline {
+            agent: str_of("agent")?,
+            trace_name: str_of("trace")?,
+            backend: str_of("backend")?,
+            window_s: j
+                .get("window_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| Error::Config("timeline missing `window_s`".into()))?,
+            events: Vec::new(),
+        };
+        let events = j
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Config("timeline missing `events`".into()))?;
+        for e in events {
+            let num = |key: &str| -> Result<f64> {
+                e.get(key).and_then(|v| v.as_f64()).ok_or_else(|| {
+                    Error::Config(format!("timeline event missing `{key}`"))
+                })
+            };
+            let int = |key: &str| -> Result<u64> {
+                e.get(key).and_then(|v| v.as_u64()).ok_or_else(|| {
+                    Error::Config(format!("timeline event missing `{key}`"))
+                })
+            };
+            let text = |key: &str| -> Result<String> {
+                e.get(key)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| {
+                        Error::Config(format!("timeline event missing `{key}`"))
+                    })
+            };
+            let ev = match e.get("kind").and_then(|v| v.as_str()) {
+                Some("window") => TimelineEvent::Window {
+                    t0: num("t0")?,
+                    t1: num("t1")?,
+                    arrivals: int("arrivals")?,
+                    completed: int("completed")?,
+                    sla_attained: num("sla_attained")?,
+                    prefill_util: num("prefill_util")?,
+                    decode_util: num("decode_util")?,
+                },
+                Some("decision") => TimelineEvent::Decision {
+                    t: num("t")?,
+                    role: text("role")?,
+                    action: text("action")?,
+                    amount: int("amount")? as u32,
+                    replicas: int("replicas")? as u32,
+                },
+                Some("plan") => TimelineEvent::Plan {
+                    t: num("t")?,
+                    seq: int("seq")?,
+                    plan: ExecutionPlan::from_json(e.get("plan").ok_or_else(|| {
+                        Error::Config("plan event missing `plan`".into())
+                    })?)?,
+                },
+                Some("diff") => TimelineEvent::Diff {
+                    t: num("t")?,
+                    diff: PlanDiff::from_json(e.get("diff").ok_or_else(|| {
+                        Error::Config("diff event missing `diff`".into())
+                    })?)?,
+                },
+                Some("migration") => TimelineEvent::Migration {
+                    t: num("t")?,
+                    plan: MigrationPlan::from_json(e.get("migration").ok_or_else(
+                        || Error::Config("migration event missing `migration`".into()),
+                    )?)?,
+                    applied_s: e.get("applied_s").and_then(|v| v.as_f64()),
+                },
+                Some("summary") => TimelineEvent::Summary {
+                    t: num("t")?,
+                    requests: int("requests")?,
+                    output_tokens: int("output_tokens")?,
+                    makespan_s: num("makespan_s")?,
+                },
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown timeline event kind {other:?}"
+                    )))
+                }
+            };
+            tl.events.push(ev);
+        }
+        Ok(tl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::diff_apply::{lower_diff, retarget};
+    use crate::plan::tests::tiny_plan;
+
+    fn sample() -> Timeline {
+        let a = tiny_plan();
+        let b = retarget(&a, 1, 3);
+        let mut tl = Timeline::new("tiny", "bursty", "sim", 2.0);
+        tl.events.push(TimelineEvent::Plan {
+            t: 0.0,
+            seq: 0,
+            plan: a.clone(),
+        });
+        tl.events.push(TimelineEvent::Window {
+            t0: 0.0,
+            t1: 2.0,
+            arrivals: 10,
+            completed: 8,
+            sla_attained: 0.75,
+            prefill_util: 0.4,
+            decode_util: 0.9,
+        });
+        tl.events.push(TimelineEvent::Decision {
+            t: 2.0,
+            role: "decode".into(),
+            action: "scale_up".into(),
+            amount: 1,
+            replicas: 3,
+        });
+        tl.events.push(TimelineEvent::Plan {
+            t: 2.0,
+            seq: 1,
+            plan: b.clone(),
+        });
+        tl.events.push(TimelineEvent::Diff {
+            t: 2.0,
+            diff: crate::plan::PlanDiff::between(&a, &b),
+        });
+        tl.events.push(TimelineEvent::Migration {
+            t: 2.0,
+            plan: lower_diff(&a, &b, 4e9).unwrap(),
+            applied_s: Some(1.25),
+        });
+        tl.events.push(TimelineEvent::Summary {
+            t: 10.0,
+            requests: 32,
+            output_tokens: 1024,
+            makespan_s: 9.5,
+        });
+        tl
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let tl = sample();
+        let text = tl.to_json_string();
+        let back = Timeline::parse_json(&text).unwrap();
+        assert_eq!(back, tl);
+        // Byte-stable re-serialization (diffable artifacts).
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn counters_and_rollups() {
+        let tl = sample();
+        assert_eq!(tl.n_plans(), 2);
+        assert_eq!(tl.n_migrations(), 1);
+        assert_eq!(tl.n_decisions(), 1);
+        assert_eq!(tl.plans().len(), 2);
+        assert!((tl.sla_attainment() - 0.75).abs() < 1e-12);
+        assert!(tl.summary().contains("1 migrations"));
+    }
+
+    #[test]
+    fn unapplied_migration_round_trips_as_null() {
+        let mut tl = sample();
+        if let Some(TimelineEvent::Migration { applied_s, .. }) = tl
+            .events
+            .iter_mut()
+            .find(|e| matches!(e, TimelineEvent::Migration { .. }))
+        {
+            *applied_s = None;
+        }
+        let back = Timeline::parse_json(&tl.to_json_string()).unwrap();
+        assert_eq!(back, tl);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Timeline::parse_json("{}").is_err());
+        assert!(Timeline::parse_json("not json").is_err());
+        let mut tl = sample();
+        tl.events.clear();
+        let mut j = tl.to_json();
+        j.try_set("events", vec![crate::jobj! { "kind" => "mystery" }])
+            .unwrap();
+        assert!(Timeline::from_json(&j).is_err());
+    }
+}

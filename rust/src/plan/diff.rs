@@ -1,0 +1,467 @@
+//! Typed diffs between two [`ExecutionPlan`]s.
+//!
+//! The orchestration loop never mutates a running fleet directly: it
+//! emits a *new* plan, computes a [`PlanDiff`] against the live one,
+//! and lowers the diff through `planner::migration` into an ordered
+//! drain/transfer/activate sequence. The diff is also a review artifact
+//! (`agentic-hetero plan diff a.json b.json`) and a timeline record —
+//! it serializes through [`crate::util::json`] like the plan itself.
+//!
+//! Pipeline fleets are compared by *shape* — (role, device, TP×PP,
+//! batch limit) — so a replica-count change is a [`PipelineResize`],
+//! while a TP or batch-limit change shows up as a remove + add pair
+//! (the honest migration: those pipelines must be rebuilt, not grown).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{req_arr, req_str, req_u64, ExecutionPlan, PipelineBinding, Role, SlaSpec};
+use crate::util::json::Json;
+use crate::{jobj, Result};
+
+/// Replica-count change of one pipeline shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineResize {
+    pub role: Role,
+    pub device: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub max_batch: u64,
+    pub from_replicas: u32,
+    pub to_replicas: u32,
+}
+
+/// An agent-graph node moved to a different hardware class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BindingRebind {
+    /// Index into `ExecutionPlan::bindings`.
+    pub index: usize,
+    pub op: String,
+    pub from_class: String,
+    pub to_class: String,
+}
+
+/// A scalar policy field change (admission, batching, SLA, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyChange {
+    pub field: String,
+    pub from: String,
+    pub to: String,
+}
+
+/// Structured difference between two plans.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlanDiff {
+    /// Pipeline shapes present only in the target (activate).
+    pub added: Vec<PipelineBinding>,
+    /// Pipeline shapes present only in the source (drain).
+    pub removed: Vec<PipelineBinding>,
+    /// Shapes in both with different replica counts.
+    pub resized: Vec<PipelineResize>,
+    /// Node bindings whose hardware class moved.
+    pub rebound: Vec<BindingRebind>,
+    /// Policy-level changes (admission, batching, SLA, workers, ...).
+    pub policy: Vec<PolicyChange>,
+}
+
+/// Shape identity of a pipeline group.
+type ShapeKey = (Role, String, u32, u32, u64);
+
+fn shapes(p: &ExecutionPlan) -> BTreeMap<ShapeKey, (u32, u32)> {
+    // value = (total replicas, chassis of the first group)
+    let mut m: BTreeMap<ShapeKey, (u32, u32)> = BTreeMap::new();
+    for pl in &p.pipelines {
+        let key = (pl.role, pl.device.clone(), pl.tp, pl.pp, pl.max_batch);
+        let e = m.entry(key).or_insert((0, pl.chassis));
+        e.0 += pl.replicas;
+    }
+    m
+}
+
+fn fmt_sla(s: &SlaSpec) -> String {
+    match s {
+        SlaSpec::None => "none".into(),
+        SlaSpec::EndToEnd(t) => format!("e2e {t}s"),
+        SlaSpec::Soft { t_sla_s, lambda } => format!("soft {t_sla_s}s λ{lambda}"),
+    }
+}
+
+impl PlanDiff {
+    /// Structural diff `from → to`.
+    pub fn between(from: &ExecutionPlan, to: &ExecutionPlan) -> PlanDiff {
+        let mut d = PlanDiff::default();
+
+        // ---- pipeline fleet, by shape -------------------------------
+        let a = shapes(from);
+        let b = shapes(to);
+        let keys: BTreeSet<&ShapeKey> = a.keys().chain(b.keys()).collect();
+        for key in keys {
+            let (role, device, tp, pp, max_batch) = key.clone();
+            match (a.get(key), b.get(key)) {
+                (Some(&(n, chassis)), None) => d.removed.push(PipelineBinding {
+                    role,
+                    device,
+                    tp,
+                    pp,
+                    max_batch,
+                    replicas: n,
+                    chassis,
+                }),
+                (None, Some(&(n, chassis))) => d.added.push(PipelineBinding {
+                    role,
+                    device,
+                    tp,
+                    pp,
+                    max_batch,
+                    replicas: n,
+                    chassis,
+                }),
+                (Some(&(na, _)), Some(&(nb, _))) if na != nb => {
+                    d.resized.push(PipelineResize {
+                        role,
+                        device,
+                        tp,
+                        pp,
+                        max_batch,
+                        from_replicas: na,
+                        to_replicas: nb,
+                    })
+                }
+                _ => {}
+            }
+        }
+
+        // ---- bindings ----------------------------------------------
+        if from.bindings.len() != to.bindings.len() {
+            d.pol(
+                "bindings.len",
+                from.bindings.len().to_string(),
+                to.bindings.len().to_string(),
+            );
+        } else {
+            for (i, (x, y)) in from.bindings.iter().zip(&to.bindings).enumerate() {
+                if x.op != y.op {
+                    d.pol(format!("bindings[{i}].op"), x.op.clone(), y.op.clone());
+                } else if x.class != y.class {
+                    d.rebound.push(BindingRebind {
+                        index: i,
+                        op: x.op.clone(),
+                        from_class: x.class.clone(),
+                        to_class: y.class.clone(),
+                    });
+                }
+            }
+        }
+
+        // ---- policies ----------------------------------------------
+        if from.agent != to.agent {
+            d.pol("agent", from.agent.clone(), to.agent.clone());
+        }
+        if from.model != to.model {
+            d.pol("model", from.model.clone(), to.model.clone());
+        }
+        if from.sla != to.sla {
+            d.pol("sla", fmt_sla(&from.sla), fmt_sla(&to.sla));
+        }
+        if from.admission.rate != to.admission.rate {
+            d.pol(
+                "admission.rate",
+                from.admission.rate.to_string(),
+                to.admission.rate.to_string(),
+            );
+        }
+        if from.admission.burst != to.admission.burst {
+            d.pol(
+                "admission.burst",
+                from.admission.burst.to_string(),
+                to.admission.burst.to_string(),
+            );
+        }
+        if from.admission.max_queue_depth != to.admission.max_queue_depth {
+            d.pol(
+                "admission.max_queue_depth",
+                from.admission.max_queue_depth.to_string(),
+                to.admission.max_queue_depth.to_string(),
+            );
+        }
+        if from.batching.buckets != to.batching.buckets {
+            d.pol(
+                "batching.buckets",
+                format!("{:?}", from.batching.buckets),
+                format!("{:?}", to.batching.buckets),
+            );
+        }
+        if from.batching.max_wait_ms != to.batching.max_wait_ms {
+            d.pol(
+                "batching.max_wait_ms",
+                from.batching.max_wait_ms.to_string(),
+                to.batching.max_wait_ms.to_string(),
+            );
+        }
+        if from.batching.max_decode_batch != to.batching.max_decode_batch {
+            d.pol(
+                "batching.max_decode_batch",
+                from.batching.max_decode_batch.to_string(),
+                to.batching.max_decode_batch.to_string(),
+            );
+        }
+        if from.cpu_workers != to.cpu_workers {
+            d.pol(
+                "cpu_workers",
+                from.cpu_workers.to_string(),
+                to.cpu_workers.to_string(),
+            );
+        }
+        if from.fabric.slots_per_chassis != to.fabric.slots_per_chassis {
+            d.pol(
+                "fabric.slots_per_chassis",
+                from.fabric.slots_per_chassis.to_string(),
+                to.fabric.slots_per_chassis.to_string(),
+            );
+        }
+        if from.fabric.scaleout_gbit != to.fabric.scaleout_gbit {
+            d.pol(
+                "fabric.scaleout_gbit",
+                from.fabric.scaleout_gbit.to_string(),
+                to.fabric.scaleout_gbit.to_string(),
+            );
+        }
+        d
+    }
+
+    fn pol(&mut self, field: impl Into<String>, from: String, to: String) {
+        self.policy.push(PolicyChange {
+            field: field.into(),
+            from,
+            to,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty()
+            && self.removed.is_empty()
+            && self.resized.is_empty()
+            && self.rebound.is_empty()
+            && self.policy.is_empty()
+    }
+
+    /// Pipeline units that must be brought up / torn down.
+    pub fn replica_delta(&self) -> (u32, u32) {
+        let mut up: u32 = self.added.iter().map(|p| p.replicas).sum();
+        let mut down: u32 = self.removed.iter().map(|p| p.replicas).sum();
+        for r in &self.resized {
+            if r.to_replicas > r.from_replicas {
+                up += r.to_replicas - r.from_replicas;
+            } else {
+                down += r.from_replicas - r.to_replicas;
+            }
+        }
+        (up, down)
+    }
+
+    /// Human-readable rendering, one change per line.
+    pub fn summary(&self) -> String {
+        if self.is_empty() {
+            return "(no changes)\n".to_string();
+        }
+        let mut out = String::new();
+        let shape = |p: &PipelineBinding| {
+            format!(
+                "{} {} tp{} pp{} b{}",
+                p.role.name(),
+                p.device,
+                p.tp,
+                p.pp,
+                p.max_batch
+            )
+        };
+        for p in &self.added {
+            out.push_str(&format!(
+                "+ {} ×{} @ chassis {}\n",
+                shape(p),
+                p.replicas,
+                p.chassis
+            ));
+        }
+        for p in &self.removed {
+            out.push_str(&format!("- {} ×{}\n", shape(p), p.replicas));
+        }
+        for r in &self.resized {
+            out.push_str(&format!(
+                "~ {} {} tp{} pp{} b{}: replicas {} -> {}\n",
+                r.role.name(),
+                r.device,
+                r.tp,
+                r.pp,
+                r.max_batch,
+                r.from_replicas,
+                r.to_replicas
+            ));
+        }
+        for b in &self.rebound {
+            out.push_str(&format!(
+                "~ binding {} ({}): {} -> {}\n",
+                b.index, b.op, b.from_class, b.to_class
+            ));
+        }
+        for p in &self.policy {
+            out.push_str(&format!("~ {}: {} -> {}\n", p.field, p.from, p.to));
+        }
+        out
+    }
+
+    // ---- JSON round-trip -------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let resized: Vec<Json> = self
+            .resized
+            .iter()
+            .map(|r| {
+                jobj! {
+                    "role" => r.role.name(),
+                    "device" => r.device.clone(),
+                    "tp" => r.tp,
+                    "pp" => r.pp,
+                    "max_batch" => r.max_batch,
+                    "from_replicas" => r.from_replicas,
+                    "to_replicas" => r.to_replicas,
+                }
+            })
+            .collect();
+        let rebound: Vec<Json> = self
+            .rebound
+            .iter()
+            .map(|b| {
+                jobj! {
+                    "index" => b.index,
+                    "op" => b.op.clone(),
+                    "from_class" => b.from_class.clone(),
+                    "to_class" => b.to_class.clone(),
+                }
+            })
+            .collect();
+        let policy: Vec<Json> = self
+            .policy
+            .iter()
+            .map(|p| {
+                jobj! {
+                    "field" => p.field.clone(),
+                    "from" => p.from.clone(),
+                    "to" => p.to.clone(),
+                }
+            })
+            .collect();
+        jobj! {
+            "added" => Json::Arr(self.added.iter().map(|p| p.to_json()).collect()),
+            "removed" => Json::Arr(self.removed.iter().map(|p| p.to_json()).collect()),
+            "resized" => Json::Arr(resized),
+            "rebound" => Json::Arr(rebound),
+            "policy" => Json::Arr(policy),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanDiff> {
+        let mut d = PlanDiff::default();
+        for p in req_arr(j, "added")? {
+            d.added.push(PipelineBinding::from_json(p)?);
+        }
+        for p in req_arr(j, "removed")? {
+            d.removed.push(PipelineBinding::from_json(p)?);
+        }
+        for r in req_arr(j, "resized")? {
+            d.resized.push(PipelineResize {
+                role: Role::from_name(req_str(r, "role")?)?,
+                device: req_str(r, "device")?.to_string(),
+                tp: req_u64(r, "tp")? as u32,
+                pp: req_u64(r, "pp")? as u32,
+                max_batch: req_u64(r, "max_batch")?,
+                from_replicas: req_u64(r, "from_replicas")? as u32,
+                to_replicas: req_u64(r, "to_replicas")? as u32,
+            });
+        }
+        for b in req_arr(j, "rebound")? {
+            d.rebound.push(BindingRebind {
+                index: req_u64(b, "index")? as usize,
+                op: req_str(b, "op")?.to_string(),
+                from_class: req_str(b, "from_class")?.to_string(),
+                to_class: req_str(b, "to_class")?.to_string(),
+            });
+        }
+        for p in req_arr(j, "policy")? {
+            d.policy.push(PolicyChange {
+                field: req_str(p, "field")?.to_string(),
+                from: req_str(p, "from")?.to_string(),
+                to: req_str(p, "to")?.to_string(),
+            });
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::tiny_plan;
+    use super::*;
+
+    #[test]
+    fn identical_plans_diff_empty() {
+        let p = tiny_plan();
+        let d = PlanDiff::between(&p, &p);
+        assert!(d.is_empty());
+        assert_eq!(d.summary(), "(no changes)\n");
+    }
+
+    #[test]
+    fn replica_change_is_a_resize() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.pipelines[1].replicas = 4; // decode Gaudi3: 2 -> 4
+        let d = PlanDiff::between(&a, &b);
+        assert!(d.added.is_empty() && d.removed.is_empty());
+        assert_eq!(d.resized.len(), 1);
+        assert_eq!(d.resized[0].from_replicas, 2);
+        assert_eq!(d.resized[0].to_replicas, 4);
+        assert_eq!(d.replica_delta(), (2, 0));
+        assert!(d.summary().contains("replicas 2 -> 4"));
+    }
+
+    #[test]
+    fn shape_change_is_remove_plus_add() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.pipelines[1].tp = 2; // decode pipelines rebuilt at TP2
+        let d = PlanDiff::between(&a, &b);
+        assert_eq!(d.removed.len(), 1);
+        assert_eq!(d.added.len(), 1);
+        assert!(d.resized.is_empty());
+        assert_eq!(d.replica_delta(), (2, 2));
+    }
+
+    #[test]
+    fn rebind_and_policy_changes_tracked() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.bindings[2].class = "H100".into();
+        b.admission.rate = 2000.0;
+        b.cpu_workers = 32;
+        let d = PlanDiff::between(&a, &b);
+        assert_eq!(d.rebound.len(), 1);
+        assert_eq!(d.rebound[0].op, "llm.decode");
+        assert_eq!(d.rebound[0].to_class, "H100");
+        assert!(d.policy.iter().any(|p| p.field == "admission.rate"));
+        assert!(d.policy.iter().any(|p| p.field == "cpu_workers"));
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.pipelines[0].replicas = 3;
+        b.pipelines[1].device = "MI300x".into();
+        b.bindings[1].class = "MI300x".into();
+        b.sla = SlaSpec::None;
+        let d = PlanDiff::between(&a, &b);
+        assert!(!d.is_empty());
+        let back = PlanDiff::from_json(&Json::parse(&d.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, d);
+    }
+}

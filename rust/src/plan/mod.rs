@@ -25,6 +25,10 @@
 //! **SLA envelope** — everything needed to simulate or serve the plan
 //! without consulting the planner again.
 
+pub mod diff;
+
+pub use diff::{BindingRebind, PipelineResize, PlanDiff, PolicyChange};
+
 use crate::cluster::sim::{Placement, PipelineSpec};
 use crate::cost::hardware::by_name;
 use crate::cost::roofline::Parallelism;
@@ -97,10 +101,15 @@ pub struct NodeBinding {
     /// Estimated bytes received over incoming edges (fabric transfers
     /// when producer and consumer sit on different chassis).
     pub xfer_bytes: f64,
+    /// Fraction of the request's tokens this node processes (expert
+    /// parallelism routes ~top_k/N of the stream to each expert; 1.0
+    /// for whole-stream nodes). The DAG simulator scales the request's
+    /// ISL/OSL by this per node.
+    pub token_fraction: f64,
 }
 
 /// Role of a serving pipeline.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Role {
     Prefill,
     Decode,
@@ -144,6 +153,33 @@ impl PipelineBinding {
             tp: self.tp,
             pp: self.pp,
         }
+    }
+
+    /// Serialize one pipeline group (shared by the plan writer and
+    /// [`diff::PlanDiff`]).
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "role" => self.role.name(),
+            "device" => self.device.clone(),
+            "tp" => self.tp,
+            "pp" => self.pp,
+            "max_batch" => self.max_batch,
+            "replicas" => self.replicas,
+            "chassis" => self.chassis,
+        }
+    }
+
+    /// Inverse of [`PipelineBinding::to_json`].
+    pub fn from_json(p: &Json) -> Result<PipelineBinding> {
+        Ok(PipelineBinding {
+            role: Role::from_name(req_str(p, "role")?)?,
+            device: req_str(p, "device")?.to_string(),
+            tp: req_u64(p, "tp")? as u32,
+            pp: req_u64(p, "pp")? as u32,
+            max_batch: req_u64(p, "max_batch")?,
+            replicas: req_u64(p, "replicas")? as u32,
+            chassis: req_u64(p, "chassis")? as u32,
+        })
     }
 }
 
@@ -309,6 +345,15 @@ impl ExecutionPlan {
                     b.op, b.latency_s
                 )));
             }
+            if !b.token_fraction.is_finite()
+                || b.token_fraction <= 0.0
+                || b.token_fraction > 1.0
+            {
+                return Err(Error::Config(format!(
+                    "binding {i} ({}) has bad token_fraction {}",
+                    b.op, b.token_fraction
+                )));
+            }
             if matches!(b.stage, Stage::LlmPrefill | Stage::LlmDecode) {
                 let role = if b.stage == Stage::LlmPrefill {
                     Role::Prefill
@@ -462,24 +507,12 @@ impl ExecutionPlan {
                     "cost_usd" => b.cost_usd,
                     "deps" => b.deps.clone(),
                     "xfer_bytes" => b.xfer_bytes,
+                    "token_fraction" => b.token_fraction,
                 }
             })
             .collect();
-        let pipelines: Vec<Json> = self
-            .pipelines
-            .iter()
-            .map(|p| {
-                jobj! {
-                    "role" => p.role.name(),
-                    "device" => p.device.clone(),
-                    "tp" => p.tp,
-                    "pp" => p.pp,
-                    "max_batch" => p.max_batch,
-                    "replicas" => p.replicas,
-                    "chassis" => p.chassis,
-                }
-            })
-            .collect();
+        let pipelines: Vec<Json> =
+            self.pipelines.iter().map(|p| p.to_json()).collect();
         let pass_log: Vec<Json> = self
             .pass_log
             .iter()
@@ -561,19 +594,17 @@ impl ExecutionPlan {
                 cost_usd: req_f64(b, "cost_usd")?,
                 deps,
                 xfer_bytes: req_f64(b, "xfer_bytes")?,
+                // Optional for plans written before expert-aware
+                // simulation: absent means the whole stream.
+                token_fraction: b
+                    .get("token_fraction")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1.0),
             });
         }
         let mut pipelines = Vec::new();
         for p in req_arr(j, "pipelines")? {
-            pipelines.push(PipelineBinding {
-                role: Role::from_name(req_str(p, "role")?)?,
-                device: req_str(p, "device")?.to_string(),
-                tp: req_u64(p, "tp")? as u32,
-                pp: req_u64(p, "pp")? as u32,
-                max_batch: req_u64(p, "max_batch")?,
-                replicas: req_u64(p, "replicas")? as u32,
-                chassis: req_u64(p, "chassis")? as u32,
-            });
+            pipelines.push(PipelineBinding::from_json(p)?);
         }
         let batching_j = req(j, "batching")?;
         let batching = BatchPolicy {
@@ -678,6 +709,7 @@ pub(crate) mod tests {
                     cost_usd: 0.0,
                     deps: vec![],
                     xfer_bytes: 0.0,
+                    token_fraction: 1.0,
                 },
                 NodeBinding {
                     op: "llm.prefill".into(),
@@ -687,6 +719,7 @@ pub(crate) mod tests {
                     cost_usd: 1e-5,
                     deps: vec![0],
                     xfer_bytes: 1e6,
+                    token_fraction: 1.0,
                 },
                 NodeBinding {
                     op: "llm.decode".into(),
@@ -696,6 +729,7 @@ pub(crate) mod tests {
                     cost_usd: 2e-5,
                     deps: vec![1],
                     xfer_bytes: 1e8,
+                    token_fraction: 1.0,
                 },
                 NodeBinding {
                     op: "io.output".into(),
@@ -705,6 +739,7 @@ pub(crate) mod tests {
                     cost_usd: 0.0,
                     deps: vec![2],
                     xfer_bytes: 0.0,
+                    token_fraction: 1.0,
                 },
             ],
             pipelines: vec![
@@ -764,6 +799,12 @@ pub(crate) mod tests {
         let mut p = tiny_plan();
         p.pipelines[0].device = "TPUv9".into();
         assert!(p.validate().is_err(), "unknown device");
+
+        let mut p = tiny_plan();
+        p.bindings[2].token_fraction = 0.0;
+        assert!(p.validate().is_err(), "zero token fraction");
+        p.bindings[2].token_fraction = 1.5;
+        assert!(p.validate().is_err(), "token fraction above 1");
     }
 
     #[test]

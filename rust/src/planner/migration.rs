@@ -2,6 +2,18 @@
 //! safe drain → transfer → activate step sequence (§4.1 "workload
 //! migration"). Steps are ordered so capacity never goes negative:
 //! activations precede the drains they replace.
+//!
+//! Duration estimates price the KV motion over the *same* contended
+//! fabric model the simulator uses ([`crate::transport::fabric`]): one
+//! transfer per drained decode pipeline, spread across source NICs, all
+//! issued together — per-link bandwidth and FIFO queueing set the
+//! completion time, so the planner's migration cost and the simulator's
+//! observed cost agree.
+
+use crate::plan::{ExecutionPlan, Role};
+use crate::transport::fabric::{Fabric, NodeAddr};
+use crate::util::json::Json;
+use crate::{jobj, Error, Result};
 
 /// One migration action.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,11 +34,104 @@ pub enum MigrationStep {
     },
 }
 
+impl MigrationStep {
+    pub fn to_json(&self) -> Json {
+        match self {
+            MigrationStep::Activate {
+                device,
+                role,
+                count,
+            } => jobj! {
+                "kind" => "activate",
+                "device" => device.clone(),
+                "role" => role.clone(),
+                "count" => *count,
+            },
+            MigrationStep::TransferKv { bytes, from, to } => jobj! {
+                "kind" => "transfer_kv",
+                "bytes" => *bytes,
+                "from" => from.clone(),
+                "to" => to.clone(),
+            },
+            MigrationStep::Drain {
+                device,
+                role,
+                count,
+            } => jobj! {
+                "kind" => "drain",
+                "device" => device.clone(),
+                "role" => role.clone(),
+                "count" => *count,
+            },
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<MigrationStep> {
+        let get_str = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| Error::Config(format!("migration step missing `{k}`")))
+        };
+        match j.get("kind").and_then(|v| v.as_str()) {
+            Some("activate") => Ok(MigrationStep::Activate {
+                device: get_str("device")?,
+                role: get_str("role")?,
+                count: j.get("count").and_then(|v| v.as_u64()).ok_or_else(|| {
+                    Error::Config("migration step missing `count`".into())
+                })? as u32,
+            }),
+            Some("transfer_kv") => Ok(MigrationStep::TransferKv {
+                bytes: j.get("bytes").and_then(|v| v.as_f64()).ok_or_else(|| {
+                    Error::Config("migration step missing `bytes`".into())
+                })?,
+                from: get_str("from")?,
+                to: get_str("to")?,
+            }),
+            Some("drain") => Ok(MigrationStep::Drain {
+                device: get_str("device")?,
+                role: get_str("role")?,
+                count: j.get("count").and_then(|v| v.as_u64()).ok_or_else(|| {
+                    Error::Config("migration step missing `count`".into())
+                })? as u32,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown migration step kind {other:?}"
+            ))),
+        }
+    }
+}
+
 /// A role's worth of capacity (device name → pipeline count).
 pub type RoleMap = std::collections::BTreeMap<(String, String), u32>;
 
+/// Lower a plan's pipeline fleet to the migration planner's capacity
+/// view: (device, role) → total replicas.
+pub fn role_map_of(plan: &ExecutionPlan) -> RoleMap {
+    let mut m = RoleMap::new();
+    for p in &plan.pipelines {
+        *m.entry((p.device.clone(), p.role.name().to_string()))
+            .or_insert(0) += p.replicas;
+    }
+    m
+}
+
+/// Total replicas a plan deploys for one role.
+pub fn role_replicas(plan: &ExecutionPlan, role: Role) -> u32 {
+    plan.pipelines
+        .iter()
+        .filter(|p| p.role == role)
+        .map(|p| p.replicas)
+        .sum()
+}
+
+/// Fixed bring-up/tear-down overhead per migration, seconds (weight
+/// loading, router reprogramming) — on top of the fabric-priced KV
+/// motion.
+pub const MIGRATION_OVERHEAD_S: f64 = 1.0;
+
 /// A full migration plan with a cost estimate.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MigrationPlan {
     pub steps: Vec<MigrationStep>,
     /// KV bytes that must move.
@@ -35,18 +140,53 @@ pub struct MigrationPlan {
     pub est_duration_s: f64,
 }
 
+impl MigrationPlan {
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "steps" => Json::Arr(self.steps.iter().map(|s| s.to_json()).collect()),
+            "kv_bytes" => self.kv_bytes,
+            "est_duration_s" => self.est_duration_s,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<MigrationPlan> {
+        let steps = j
+            .get("steps")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Config("migration plan missing `steps`".into()))?
+            .iter()
+            .map(MigrationStep::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| Error::Config(format!("migration plan missing `{k}`")))
+        };
+        Ok(MigrationPlan {
+            steps,
+            kv_bytes: num("kv_bytes")?,
+            est_duration_s: num("est_duration_s")?,
+        })
+    }
+}
+
 /// Diff two fleet layouts into an ordered step list.
 ///
 /// `kv_per_drained_pipeline` prices the state that must leave each
-/// drained decode pipeline (prefill pipelines are stateless).
+/// drained decode pipeline (prefill pipelines are stateless). The KV
+/// motion is priced over `fabric`: one transfer per drained pipeline,
+/// spread round-robin across source NICs and issued concurrently, so
+/// per-link bandwidth *and* contention (several drains sharing a NIC)
+/// both show up in `est_duration_s`.
 pub fn plan_migration(
     current: &RoleMap,
     target: &RoleMap,
     kv_per_drained_pipeline: f64,
-    link_bytes_per_s: f64,
+    fabric: &Fabric,
 ) -> MigrationPlan {
     let mut steps = Vec::new();
     let mut kv_bytes = 0.0;
+    let mut drained_decode: u32 = 0;
 
     // 1. Activations first (make-before-break).
     for ((device, role), want) in target {
@@ -63,8 +203,10 @@ pub fn plan_migration(
     for ((device, role), have) in current {
         let want = target.get(&(device.clone(), role.clone())).copied().unwrap_or(0);
         if *have > want && role == "decode" {
-            let moved = (have - want) as f64 * kv_per_drained_pipeline;
+            let n = have - want;
+            let moved = n as f64 * kv_per_drained_pipeline;
             kv_bytes += moved;
+            drained_decode += n;
             steps.push(MigrationStep::TransferKv {
                 bytes: moved,
                 from: device.clone(),
@@ -84,10 +226,30 @@ pub fn plan_migration(
         }
     }
 
+    // Price the KV motion over a private copy of the fabric (no
+    // reservation side effects leak to the caller).
+    let mut f = fabric.clone();
+    f.reset();
+    let n_chassis = f.n_chassis.max(1);
+    let mut done = 0.0f64;
+    for i in 0..drained_decode {
+        let from = NodeAddr {
+            chassis: i % n_chassis,
+            slot: 0,
+        };
+        let to = NodeAddr {
+            chassis: (i + 1) % n_chassis,
+            slot: 0,
+        };
+        if let Ok(t) = f.transfer(from, to, kv_per_drained_pipeline, 0.0) {
+            done = done.max(t);
+        }
+    }
+
     MigrationPlan {
         steps,
         kv_bytes,
-        est_duration_s: kv_bytes / link_bytes_per_s + 1.0,
+        est_duration_s: done + MIGRATION_OVERHEAD_S,
     }
 }
 
@@ -102,11 +264,16 @@ mod tests {
             .collect()
     }
 
+    fn fabric() -> Fabric {
+        // 4 chassis, 900 GB/s scale-up, 400 Gbit RoCE NICs.
+        Fabric::new(4, 8, 900.0, 400.0)
+    }
+
     #[test]
     fn activation_before_drain() {
         let cur = role_map(&[("H100", "decode", 2)]);
         let tgt = role_map(&[("Gaudi3", "decode", 2)]);
-        let plan = plan_migration(&cur, &tgt, 1e9, 50e9);
+        let plan = plan_migration(&cur, &tgt, 1e9, &fabric());
         let first_activate = plan
             .steps
             .iter()
@@ -119,22 +286,23 @@ mod tests {
             .unwrap();
         assert!(first_activate < first_drain);
         assert_eq!(plan.kv_bytes, 2e9);
-        assert!(plan.est_duration_s > 1.0);
+        assert!(plan.est_duration_s > MIGRATION_OVERHEAD_S);
     }
 
     #[test]
     fn no_change_no_steps() {
         let cur = role_map(&[("H100", "prefill", 1), ("Gaudi3", "decode", 2)]);
-        let plan = plan_migration(&cur, &cur, 1e9, 50e9);
+        let plan = plan_migration(&cur, &cur, 1e9, &fabric());
         assert!(plan.steps.is_empty());
         assert_eq!(plan.kv_bytes, 0.0);
+        assert_eq!(plan.est_duration_s, MIGRATION_OVERHEAD_S);
     }
 
     #[test]
     fn partial_shrink_moves_partial_kv() {
         let cur = role_map(&[("Gaudi3", "decode", 4)]);
         let tgt = role_map(&[("Gaudi3", "decode", 3)]);
-        let plan = plan_migration(&cur, &tgt, 5e8, 50e9);
+        let plan = plan_migration(&cur, &tgt, 5e8, &fabric());
         assert_eq!(plan.kv_bytes, 5e8);
         assert!(plan
             .steps
@@ -146,7 +314,55 @@ mod tests {
     fn prefill_drain_moves_no_kv() {
         let cur = role_map(&[("H100", "prefill", 2)]);
         let tgt = role_map(&[("H100", "prefill", 1)]);
-        let plan = plan_migration(&cur, &tgt, 1e9, 50e9);
+        let plan = plan_migration(&cur, &tgt, 1e9, &fabric());
         assert_eq!(plan.kv_bytes, 0.0);
+        assert_eq!(plan.est_duration_s, MIGRATION_OVERHEAD_S);
+    }
+
+    #[test]
+    fn duration_follows_fabric_bandwidth_and_contention() {
+        // 1 GB per drained pipeline over a 400 Gbit (50 GB/s) NIC path:
+        // two NIC hops ≈ 40 ms per transfer when uncontended.
+        let cur = role_map(&[("Gaudi3", "decode", 2)]);
+        let tgt = role_map(&[("Gaudi3", "decode", 1)]);
+        let one = plan_migration(&cur, &tgt, 1e9, &fabric());
+        let xfer_one = one.est_duration_s - MIGRATION_OVERHEAD_S;
+        assert!(xfer_one > 0.02 && xfer_one < 0.2, "xfer={xfer_one}");
+
+        // A fatter NIC moves the same KV faster.
+        let fat = Fabric::new(4, 8, 900.0, 1600.0);
+        let fast = plan_migration(&cur, &tgt, 1e9, &fat);
+        assert!(fast.est_duration_s < one.est_duration_s);
+
+        // Many drains on a tiny fabric contend for the same NICs: the
+        // aggregate slows down vs a single drain of the same per-pipe KV.
+        let tiny = Fabric::new(2, 8, 900.0, 400.0);
+        let cur8 = role_map(&[("Gaudi3", "decode", 8)]);
+        let tgt0 = role_map(&[("Gaudi3", "decode", 1)]);
+        let many = plan_migration(&cur8, &tgt0, 1e9, &tiny);
+        let single = plan_migration(&cur, &tgt, 1e9, &tiny);
+        assert!(
+            many.est_duration_s > single.est_duration_s,
+            "contention must slow the fleet-wide drain: {} vs {}",
+            many.est_duration_s,
+            single.est_duration_s
+        );
+    }
+
+    #[test]
+    fn role_map_lowering_and_json_round_trip() {
+        let plan = crate::plan::tests::tiny_plan();
+        let m = role_map_of(&plan);
+        assert_eq!(m[&("H100".to_string(), "prefill".to_string())], 1);
+        assert_eq!(m[&("Gaudi3".to_string(), "decode".to_string())], 2);
+        assert_eq!(role_replicas(&plan, Role::Prefill), 1);
+        assert_eq!(role_replicas(&plan, Role::Decode), 2);
+
+        let cur = role_map(&[("H100", "decode", 2), ("H100", "prefill", 1)]);
+        let tgt = role_map(&[("Gaudi3", "decode", 3), ("H100", "prefill", 1)]);
+        let mp = plan_migration(&cur, &tgt, 2e9, &fabric());
+        let back =
+            MigrationPlan::from_json(&Json::parse(&mp.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, mp);
     }
 }

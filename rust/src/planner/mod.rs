@@ -25,5 +25,7 @@ pub mod plan;
 
 pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
 pub use feedback::ProfileStore;
-pub use migration::{MigrationPlan, MigrationStep};
+pub use migration::{
+    plan_migration, role_map_of, role_replicas, MigrationPlan, MigrationStep, RoleMap,
+};
 pub use plan::{Planner, PlannerConfig};

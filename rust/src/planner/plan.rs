@@ -351,6 +351,12 @@ impl Planner {
                     .map(|(from, _)| *from)
                     .collect(),
                 xfer_bytes,
+                // Expert decomposition annotates ~top_k/N per expert;
+                // whole-stream nodes process every token.
+                token_fraction: node
+                    .attr_f64("token_fraction")
+                    .unwrap_or(1.0)
+                    .clamp(f64::MIN_POSITIVE, 1.0),
             });
         }
 

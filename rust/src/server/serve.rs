@@ -93,6 +93,21 @@ impl Server {
         Ok(Server::new(engine, ServerConfig::from_plan(plan)))
     }
 
+    /// Swap the serving policy between workloads — the orchestrator's
+    /// live backend applies each re-planned `ExecutionPlan` this way.
+    /// Takes effect at the next [`Server::serve`] / [`Server::run_workload`]
+    /// call (the batcher and admission controller are rebuilt from the
+    /// config there); sessions and metrics persist across the swap.
+    pub fn reconfigure(&mut self, cfg: ServerConfig) {
+        self.sessions.max_history = cfg.max_history;
+        self.cfg = cfg;
+    }
+
+    /// The active serving configuration.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
     /// Serve until `rx` disconnects and all queued work drains. Designed
     /// to run on a dedicated thread; responses go out through `tx`.
     pub fn serve(
@@ -284,5 +299,42 @@ mod tests {
         );
         // Engine-independent defaults survive.
         assert_eq!(cfg.max_new_tokens, ServerConfig::default().max_new_tokens);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn reconfigure_swaps_policy_between_requests() {
+        use crate::runtime::manifest::Manifest;
+        use crate::runtime::Engine;
+
+        // The stub engine can't load artifacts, but reconfiguration is
+        // pure policy state — construct the server around a manifest-only
+        // engine the same way the live orchestrator backend does.
+        let engine = Engine {
+            manifest: Manifest {
+                dir: std::path::PathBuf::new(),
+                vocab: 256,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 2,
+                head_dim: 32,
+                max_seq: 128,
+                prefill_seq: 64,
+                buckets: vec![1, 2, 4],
+                num_params: 1_000,
+                kv_cache_bytes_b1: 1_024,
+            },
+        };
+        let mut server = Server::new(engine, ServerConfig::default());
+        assert_eq!(server.config().admission.rate, 1000.0);
+
+        let mut plan = crate::plan::tests::tiny_plan();
+        plan.admission.rate = 333.0;
+        plan.batching.max_decode_batch = 9;
+        server.reconfigure(ServerConfig::from_plan(&plan));
+        assert_eq!(server.config().admission.rate, 333.0);
+        assert_eq!(server.config().batch.max_decode_batch, 9);
+        assert_eq!(server.sessions.max_history, ServerConfig::default().max_history);
     }
 }

@@ -146,6 +146,34 @@ impl Fabric {
         }
     }
 
+    /// Grow the fabric to at least `n_chassis` chassis (same link
+    /// bandwidths as the existing tiers). Orchestrated fleets activate
+    /// pipelines on fresh chassis mid-run; shrinking never removes
+    /// chassis — drained links simply go idle.
+    pub fn grow(&mut self, n_chassis: u32) {
+        while self.n_chassis < n_chassis {
+            let up = match self.scaleup.first() {
+                Some(l) => Link {
+                    busy_until_s: 0.0,
+                    bytes_carried: 0.0,
+                    ..l.clone()
+                },
+                None => Link::new(900.0 * 8.0, SCALEUP_LATENCY_S),
+            };
+            let out = match self.scaleout.first() {
+                Some(l) => Link {
+                    busy_until_s: 0.0,
+                    bytes_carried: 0.0,
+                    ..l.clone()
+                },
+                None => Link::new(400.0, SCALEOUT_LATENCY_S),
+            };
+            self.scaleup.push(up);
+            self.scaleout.push(out);
+            self.n_chassis += 1;
+        }
+    }
+
     /// Clear reservation state (busy-until times and byte counters) so
     /// one fabric description can be replayed across simulation runs.
     pub fn reset(&mut self) {
@@ -245,6 +273,30 @@ mod tests {
         let t2 = f.transfer(a, c, 5e9, 0.0).unwrap();
         assert_eq!(t1, t2, "reset must forget prior reservations");
         assert_eq!(f.carried().1, 1e10); // only the post-reset transfer
+    }
+
+    #[test]
+    fn grow_adds_addressable_chassis() {
+        let mut f = fabric();
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 3, slot: 0 };
+        assert!(f.transfer(a, c, 1.0, 0.0).is_err());
+        f.grow(4);
+        assert_eq!(f.n_chassis, 4);
+        assert!(f.transfer(a, c, 1.0, 0.0).is_ok());
+        // New links match the old tier's bandwidth.
+        let mut f2 = fabric();
+        f2.grow(4);
+        let t_old = f2.transfer(a, NodeAddr { chassis: 1, slot: 0 }, 1e9, 0.0).unwrap();
+        let mut f3 = fabric();
+        f3.grow(4);
+        let t_new = f3
+            .transfer(NodeAddr { chassis: 2, slot: 0 }, NodeAddr { chassis: 3, slot: 0 }, 1e9, 0.0)
+            .unwrap();
+        assert!((t_old - t_new).abs() < 1e-9);
+        // Growing to a smaller size is a no-op.
+        f.grow(2);
+        assert_eq!(f.n_chassis, 4);
     }
 
     #[test]

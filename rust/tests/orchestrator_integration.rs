@@ -1,0 +1,278 @@
+//! End-to-end orchestration: a bursty trace drives the closed loop
+//! (observe → decide → re-plan → diff → migrate → apply) through the
+//! DAG simulator. The loop must emit ≥ 2 distinct plans connected by
+//! valid migrations, the simulator must execute through the fleet
+//! changes without dropping in-flight requests, and the timeline must
+//! round-trip losslessly through `util::json`.
+
+use agentic_hetero::cluster::trace::{generate, Request, TraceConfig};
+use agentic_hetero::orchestrator::{
+    capacity_trajectory, converges, shape_map_of, Executor, Orchestrator, OrchestratorConfig,
+    SimExecutor, Timeline, TimelineEvent,
+};
+use agentic_hetero::plan::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, PipelineBinding,
+    Role, SlaSpec, Stage,
+};
+use agentic_hetero::planner::autoscale::AutoscalerConfig;
+use agentic_hetero::planner::migration::MigrationPlan;
+
+/// A deliberately undersized fleet: one H100 prefill pipeline and one
+/// Gaudi3 decode pipeline (batch 8), so a burst saturates decode fast.
+fn small_plan() -> ExecutionPlan {
+    ExecutionPlan {
+        agent: "burst_agent".into(),
+        model: "8b-fp16".into(),
+        sla: SlaSpec::EndToEnd(5.0),
+        bindings: vec![
+            NodeBinding {
+                op: "io.input".into(),
+                class: "CPU".into(),
+                stage: Stage::Cpu,
+                latency_s: 0.0005,
+                cost_usd: 0.0,
+                deps: vec![],
+                xfer_bytes: 0.0,
+                token_fraction: 1.0,
+            },
+            NodeBinding {
+                op: "llm.prefill".into(),
+                class: "H100".into(),
+                stage: Stage::LlmPrefill,
+                latency_s: 0.05,
+                cost_usd: 1e-5,
+                deps: vec![0],
+                xfer_bytes: 1e6,
+                token_fraction: 1.0,
+            },
+            NodeBinding {
+                op: "llm.decode".into(),
+                class: "Gaudi3".into(),
+                stage: Stage::LlmDecode,
+                latency_s: 0.5,
+                cost_usd: 2e-5,
+                deps: vec![1],
+                xfer_bytes: 1e8,
+                token_fraction: 1.0,
+            },
+            NodeBinding {
+                op: "io.output".into(),
+                class: "CPU".into(),
+                stage: Stage::Cpu,
+                latency_s: 0.0005,
+                cost_usd: 0.0,
+                deps: vec![2],
+                xfer_bytes: 0.0,
+                token_fraction: 1.0,
+            },
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: "H100".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: "Gaudi3".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 1,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 64,
+        cost_usd: 3e-5,
+        latency_s: 0.55,
+        pass_log: vec![],
+    }
+}
+
+/// Burst then lull: 120 requests at 30 req/s (~4 s of heavy load),
+/// then 40 at 0.25 req/s (a ~160 s quiet tail) — enough hot windows to
+/// scale up and enough idle ones to scale back down deterministically.
+fn burst_then_lull() -> Vec<Request> {
+    let burst = generate(&TraceConfig {
+        n_requests: 120,
+        rate: 30.0,
+        isl_mean: 256,
+        osl_mean: 64,
+        sigma: 0.0,
+        seed: 7,
+    });
+    let t0 = burst.last().unwrap().arrive_s;
+    let mut lull = generate(&TraceConfig {
+        n_requests: 40,
+        rate: 0.25,
+        isl_mean: 256,
+        osl_mean: 64,
+        sigma: 0.0,
+        seed: 8,
+    });
+    for (i, r) in lull.iter_mut().enumerate() {
+        r.arrive_s += t0;
+        r.id = 120 + i as u64;
+    }
+    let mut all = burst;
+    all.extend(lull);
+    all
+}
+
+fn orchestrator() -> Orchestrator {
+    let cfg = OrchestratorConfig {
+        window_s: 2.0,
+        autoscale: AutoscalerConfig {
+            high_watermark: 0.80,
+            low_watermark: 0.25,
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 16,
+        },
+        backlog_factor: 1.0,
+    };
+    Orchestrator::new(cfg, small_plan(), "burst_then_lull", "sim").unwrap()
+}
+
+#[test]
+fn bursty_trace_scales_up_then_down_and_timeline_round_trips() {
+    let trace = burst_then_lull();
+    let mut exec = SimExecutor::new(&trace);
+    let timeline = exec.orchestrate(orchestrator()).unwrap();
+    let report = exec.report.as_ref().expect("sim must finish");
+
+    // --- the simulator executed through every fleet change ----------
+    assert_eq!(report.n_requests, 160, "no in-flight request dropped");
+    assert_eq!(
+        report.output_tokens,
+        trace.iter().map(|r| r.osl).sum::<u64>()
+    );
+
+    // --- ≥ 2 distinct plans connected by valid migrations ------------
+    let plans = timeline.plans();
+    assert!(
+        plans.len() >= 2,
+        "burst must force a re-plan: {}",
+        timeline.summary()
+    );
+    assert!(
+        plans.windows(2).any(|w| w[0] != w[1]),
+        "emitted plans must be distinct"
+    );
+    for p in &plans {
+        p.validate().unwrap();
+    }
+    // Both directions fired: the burst scaled decode up, the lull back down.
+    let decode_totals: Vec<u32> = plans
+        .iter()
+        .map(|p| {
+            p.pipelines
+                .iter()
+                .filter(|pl| pl.role == Role::Decode)
+                .map(|pl| pl.replicas)
+                .sum()
+        })
+        .collect();
+    assert!(
+        decode_totals.windows(2).any(|w| w[1] > w[0]),
+        "scale-up missing: {decode_totals:?}"
+    );
+    assert!(
+        decode_totals.windows(2).any(|w| w[1] < w[0]),
+        "scale-down missing: {decode_totals:?}"
+    );
+
+    // Every migration in the timeline is capacity-safe and convergent
+    // against the plan sequence it connects: migration i moves the
+    // fleet from plan i to plan i+1.
+    let migs: Vec<&MigrationPlan> = timeline
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TimelineEvent::Migration { plan, .. } => Some(plan),
+            _ => None,
+        })
+        .collect();
+    assert!(migs.len() >= 2, "expected ≥2 migrations: {}", timeline.summary());
+    assert_eq!(
+        plans.len(),
+        migs.len() + 1,
+        "each re-plan carries exactly one migration"
+    );
+    for (i, m) in migs.iter().enumerate() {
+        let cur = shape_map_of(plans[i]);
+        let tgt = shape_map_of(plans[i + 1]);
+        capacity_trajectory(&cur, &m.steps).unwrap();
+        assert!(converges(&cur, &tgt, &m.steps));
+    }
+
+    // --- SLA attainment is recorded and sane -------------------------
+    let sla = timeline.sla_attainment();
+    assert!((0.0..=1.0).contains(&sla), "sla={sla}");
+    assert!(
+        timeline
+            .events
+            .iter()
+            .any(|e| matches!(e, TimelineEvent::Window { .. })),
+        "windows must be recorded"
+    );
+
+    // --- lossless JSON round-trip ------------------------------------
+    let text = timeline.to_json_string();
+    let back = Timeline::parse_json(&text).unwrap();
+    assert_eq!(back, timeline, "timeline must round-trip losslessly");
+    assert_eq!(back.to_json_string(), text, "byte-stable serialization");
+}
+
+#[test]
+fn orchestrated_run_is_deterministic() {
+    let trace = burst_then_lull();
+    let mut e1 = SimExecutor::new(&trace);
+    let t1 = e1.orchestrate(orchestrator()).unwrap();
+    let mut e2 = SimExecutor::new(&trace);
+    let t2 = e2.orchestrate(orchestrator()).unwrap();
+    assert_eq!(t1, t2, "same trace + same policy ⇒ same timeline");
+    assert_eq!(
+        e1.report.unwrap().events_processed,
+        e2.report.unwrap().events_processed
+    );
+}
+
+#[test]
+fn steady_load_never_migrates() {
+    // Mid-band utilization: the hysteresis must hold the fleet still.
+    let trace = generate(&TraceConfig {
+        n_requests: 64,
+        rate: 2.0,
+        isl_mean: 256,
+        osl_mean: 32,
+        sigma: 0.0,
+        seed: 11,
+    });
+    let mut plan = small_plan();
+    plan.pipelines[1].replicas = 2; // comfortable decode headroom
+    let cfg = OrchestratorConfig {
+        window_s: 2.0,
+        autoscale: AutoscalerConfig {
+            high_watermark: 0.95,
+            low_watermark: -1.0, // never scale down
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 16,
+        },
+        backlog_factor: 1.0,
+    };
+    let orch = Orchestrator::new(cfg, plan, "steady", "sim").unwrap();
+    let mut exec = SimExecutor::new(&trace);
+    let timeline = exec.orchestrate(orch).unwrap();
+    assert_eq!(timeline.n_plans(), 1, "{}", timeline.summary());
+    assert_eq!(timeline.n_migrations(), 0);
+    assert_eq!(exec.report.unwrap().n_requests, 64);
+}

@@ -1,0 +1,197 @@
+//! Property tests for the orchestration machinery: every migration
+//! produced from a plan diff must keep per-role capacity non-negative
+//! at each step and converge exactly to the target fleet; retargeted
+//! plans must stay structurally valid; plans round-trip through JSON
+//! with arbitrary token fractions.
+
+use agentic_hetero::orchestrator::{
+    capacity_trajectory, converges, lower_diff, retarget, shape_map_of,
+};
+use agentic_hetero::plan::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, PipelineBinding,
+    PlanDiff, Role, SlaSpec, Stage,
+};
+use agentic_hetero::planner::migration::{plan_migration, RoleMap};
+use agentic_hetero::transport::fabric::Fabric;
+use agentic_hetero::util::prop::check;
+use agentic_hetero::util::rng::Rng;
+
+const DEVICES: [&str; 4] = ["H100", "Gaudi3", "A100", "MI300x"];
+const ROLES: [&str; 2] = ["prefill", "decode"];
+
+fn random_role_map(rng: &mut Rng) -> RoleMap {
+    let mut m = RoleMap::new();
+    for d in DEVICES {
+        for r in ROLES {
+            if rng.bool(0.6) {
+                let n = rng.range(0, 6) as u32;
+                if n > 0 {
+                    m.insert((d.to_string(), r.to_string()), n);
+                }
+            }
+        }
+    }
+    m
+}
+
+/// A small valid plan: H100 prefill + Gaudi3 decode (mirrors the
+/// crate-internal test fixture, built from public types).
+fn base_plan() -> ExecutionPlan {
+    ExecutionPlan {
+        agent: "props".into(),
+        model: "8b-fp16".into(),
+        sla: SlaSpec::EndToEnd(3.0),
+        bindings: vec![
+            NodeBinding {
+                op: "io.input".into(),
+                class: "CPU".into(),
+                stage: Stage::Cpu,
+                latency_s: 0.0005,
+                cost_usd: 0.0,
+                deps: vec![],
+                xfer_bytes: 0.0,
+                token_fraction: 1.0,
+            },
+            NodeBinding {
+                op: "llm.prefill".into(),
+                class: "H100".into(),
+                stage: Stage::LlmPrefill,
+                latency_s: 0.05,
+                cost_usd: 1e-5,
+                deps: vec![0],
+                xfer_bytes: 1e6,
+                token_fraction: 1.0,
+            },
+            NodeBinding {
+                op: "llm.decode".into(),
+                class: "Gaudi3".into(),
+                stage: Stage::LlmDecode,
+                latency_s: 0.5,
+                cost_usd: 2e-5,
+                deps: vec![1],
+                xfer_bytes: 1e8,
+                token_fraction: 1.0,
+            },
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: "H100".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: "Gaudi3".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 32,
+                replicas: 2,
+                chassis: 1,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 16,
+        cost_usd: 3e-5,
+        latency_s: 0.55,
+        pass_log: vec![],
+    }
+}
+
+#[test]
+fn migration_steps_are_capacity_safe_and_convergent() {
+    let fabric = Fabric::new(4, 8, 900.0, 400.0);
+    check("migration-capacity-safe", |rng| {
+        let cur = random_role_map(rng);
+        let tgt = random_role_map(rng);
+        let kv_per = rng.f64() * 4e9;
+        let m = plan_migration(&cur, &tgt, kv_per, &fabric);
+
+        // Replaying never drives any (device, role) capacity negative...
+        let traj = capacity_trajectory(&cur, &m.steps)
+            .expect("migration plan must be capacity-safe");
+        assert_eq!(traj.len(), m.steps.len() + 1);
+        // ...and converges to exactly the target fleet.
+        assert!(
+            converges(&cur, &tgt, &m.steps),
+            "must land on target: cur={cur:?} tgt={tgt:?} steps={:?}",
+            m.steps
+        );
+        // Cost bookkeeping is sane.
+        assert!(m.kv_bytes >= 0.0 && m.kv_bytes.is_finite());
+        assert!(m.est_duration_s >= 1.0 && m.est_duration_s.is_finite());
+        // No change ⇒ no steps.
+        let idle = plan_migration(&cur, &cur, kv_per, &fabric);
+        assert!(idle.steps.is_empty());
+    });
+}
+
+#[test]
+fn retargeted_plans_stay_valid_and_their_migrations_converge() {
+    check("retarget-valid-and-convergent", |rng| {
+        let plan = base_plan();
+        let pre = rng.range(0, 8) as u32;
+        let dec = rng.range(0, 12) as u32;
+        let target = retarget(&plan, pre, dec);
+        target.validate().expect("retarget must stay valid");
+        // At least one replica per role survives any request.
+        assert!(target.pipelines.iter().all(|p| p.replicas >= 1));
+        // Chassis are packed consecutively.
+        let mut expect = 0u32;
+        for p in &target.pipelines {
+            assert_eq!(p.chassis, expect);
+            expect += p.replicas;
+        }
+        // The diff lowers to a convergent, capacity-safe migration
+        // (shape-granular: the capacity view the fleet actually matches).
+        let kv = rng.f64() * 1e10;
+        let m = lower_diff(&plan, &target, kv).unwrap();
+        let cur = shape_map_of(&plan);
+        let tgt = shape_map_of(&target);
+        capacity_trajectory(&cur, &m.steps).expect("capacity-safe");
+        assert!(converges(&cur, &tgt, &m.steps));
+        // An empty diff yields an empty migration.
+        if PlanDiff::between(&plan, &target).is_empty() {
+            assert!(m.steps.is_empty());
+        }
+    });
+}
+
+#[test]
+fn plan_json_round_trips_with_arbitrary_token_fractions() {
+    check("plan-roundtrip-token-fraction", |rng| {
+        let mut plan = base_plan();
+        for b in &mut plan.bindings {
+            // (0, 1] — the validated range.
+            b.token_fraction = (rng.f64().max(1e-9)).min(1.0);
+        }
+        plan.validate().unwrap();
+        let text = plan.to_json_string();
+        let back = ExecutionPlan::parse_json(&text).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.to_json_string(), text);
+    });
+}
+
+#[test]
+fn diff_is_reflexively_empty_and_detects_mutations() {
+    check("diff-detects-mutations", |rng| {
+        let plan = base_plan();
+        assert!(PlanDiff::between(&plan, &plan).is_empty());
+        let mut other = plan.clone();
+        // Mutate one tracked dimension at random; the diff must see it.
+        match rng.range(0, 4) {
+            0 => other.pipelines[1].replicas += rng.range(1, 4) as u32,
+            1 => other.bindings[2].class = "H100".into(),
+            2 => other.admission.rate *= 2.0,
+            _ => other.cpu_workers += 1,
+        }
+        let d = PlanDiff::between(&plan, &other);
+        assert!(!d.is_empty(), "mutation must surface in the diff");
+    });
+}

@@ -138,7 +138,8 @@ fn autoscale_then_migrate_roundtrip() {
     current.insert(("Gaudi3".into(), "decode".into()), 2);
     let mut target = RoleMap::new();
     target.insert(("Gaudi3".into(), "decode".into()), grown);
-    let plan = plan_migration(&current, &target, 4e9, 40e9);
+    let fabric = agentic_hetero::transport::fabric::Fabric::new(4, 8, 900.0, 400.0);
+    let plan = plan_migration(&current, &target, 4e9, &fabric);
     assert_eq!(plan.steps.len(), 1);
     assert!(matches!(
         plan.steps[0],
