@@ -45,6 +45,7 @@ use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency};
 use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::plan::instance::DagTopology;
 use crate::plan::{ExecutionPlan, Role, SlaSpec, Stage};
 use crate::transport::fabric::{Fabric, NodeAddr};
 use crate::util::bench::percentile;
@@ -137,6 +138,8 @@ pub struct WindowStats {
     /// Device-time utilization of live pipelines over the window.
     pub prefill_util: f64,
     pub decode_util: f64,
+    /// CPU worker-pool utilization over the window (tool/IO stages).
+    pub host_util: f64,
     /// Instantaneous backlog at the window boundary.
     pub prefill_queue: usize,
     pub decode_queue: usize,
@@ -193,8 +196,20 @@ struct RunState {
     decode_pipes_of: BTreeMap<String, Vec<usize>>,
     cpu_free: u32,
     cpu_queue: VecDeque<(Job, f64)>,
+    /// CPU pool busy time (service time attributed at start, like the
+    /// pipeline `busy_time`s).
+    cpu_busy_time: f64,
     /// Unsatisfied dependency count per flat job index.
     remaining: Vec<u32>,
+    /// Dispatch-ready time per flat job index (sojourn accounting).
+    ready_s: Vec<f64>,
+    /// Per-node sojourn (ready → complete) sums and counts.
+    node_lat_sum: Vec<f64>,
+    node_lat_n: Vec<u64>,
+    /// Jobs dispatched per stage kind (cross-backend conformance).
+    host_jobs: u64,
+    prefill_jobs: u64,
+    decode_jobs: u64,
     /// Decode progress per flat job index.
     tokens_done: Vec<u64>,
     /// Pipeline chosen for an LLM job (role, pipe index).
@@ -241,6 +256,20 @@ impl RunState {
     }
 }
 
+/// Per-stage execution detail of the last finished run — the quantities
+/// the cross-backend conformance suite (`rust/tests/sim_vs_live.rs`)
+/// compares against the live server's measured metrics.
+#[derive(Debug, Clone, Default)]
+pub struct DagDetail {
+    /// Jobs dispatched to the CPU worker pool.
+    pub host_jobs: u64,
+    /// Jobs dispatched to prefill / decode pipelines.
+    pub prefill_jobs: u64,
+    pub decode_jobs: u64,
+    /// Mean sojourn (dispatch-ready → complete) per plan binding.
+    pub node_mean_latency_s: Vec<f64>,
+}
+
 /// The agent-DAG simulator. Construct with [`DagSim::new`] from a
 /// validated plan; [`DagSim::run`] executes a request trace against a
 /// static fleet, [`DagSim::run_controlled`] against a closed-loop
@@ -264,6 +293,8 @@ pub struct DagSim {
     decode_specs: Vec<PipelineSpec>,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
+    /// Populated by the last completed run (see [`DagSim::last_detail`]).
+    detail: Option<DagDetail>,
 }
 
 /// Shape identity of a pipeline (fleet changes match by shape). Must
@@ -300,15 +331,7 @@ impl DagSim {
             SlaSpec::Soft { t_sla_s, .. } => Some(t_sla_s),
         };
 
-        let n = plan.bindings.len();
-        let mut succ = vec![Vec::new(); n];
-        let mut indeg = vec![0u32; n];
-        for (i, b) in plan.bindings.iter().enumerate() {
-            for &d in &b.deps {
-                succ[d].push(i);
-                indeg[i] += 1;
-            }
-        }
+        let topo = DagTopology::of(plan);
 
         Ok(DagSim {
             eff: Efficiency::default(),
@@ -318,13 +341,19 @@ impl DagSim {
             model,
             fabric,
             sla_s,
-            succ,
-            indeg,
+            succ: topo.succ,
+            indeg: topo.indeg,
             prefill_specs: placement.prefill,
             decode_specs: placement.decode,
             heap: BinaryHeap::new(),
             seq: 0,
+            detail: None,
         })
+    }
+
+    /// Per-stage detail of the last completed run (None before any).
+    pub fn last_detail(&self) -> Option<&DagDetail> {
+        self.detail.as_ref()
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
@@ -452,18 +481,22 @@ impl DagSim {
 
     /// All dependencies of `job` satisfied: dispatch it to its stage.
     fn dispatch(&mut self, st: &mut RunState, job: Job, now: f64, trace: &[Request]) {
+        st.ready_s[self.flat(job)] = now;
         let binding = &self.plan.bindings[job.node];
         match binding.stage {
             Stage::Cpu => {
+                st.host_jobs += 1;
                 let service = binding.latency_s;
                 if st.cpu_free > 0 {
                     st.cpu_free -= 1;
+                    st.cpu_busy_time += service;
                     self.push(now + service, Ev::CpuDone(job));
                 } else {
                     st.cpu_queue.push_back((job, service));
                 }
             }
             Stage::LlmPrefill => {
+                st.prefill_jobs += 1;
                 let fi = self.flat(job);
                 let pi = match st.pipe_of[fi] {
                     Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
@@ -474,6 +507,7 @@ impl DagSim {
                 self.try_start_prefill(st, pi, now, trace);
             }
             Stage::LlmDecode => {
+                st.decode_jobs += 1;
                 let fi = self.flat(job);
                 let di = match st.pipe_of[fi] {
                     Some((Role::Decode, k)) if !st.decode[k].retired => k,
@@ -504,6 +538,9 @@ impl DagSim {
         now: f64,
         trace: &[Request],
     ) -> Result<()> {
+        let fi = self.flat(job);
+        st.node_lat_sum[job.node] += now - st.ready_s[fi];
+        st.node_lat_n[job.node] += 1;
         st.nodes_left[job.req] -= 1;
         if st.nodes_left[job.req] == 0 {
             st.done_s[job.req] = now;
@@ -593,6 +630,7 @@ impl DagSim {
         total
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn window_stats(
         &self,
         st: &RunState,
@@ -600,8 +638,9 @@ impl DagSim {
         t1: f64,
         prev_pre_busy: f64,
         prev_dec_busy: f64,
+        prev_cpu_busy: f64,
         trace: &[Request],
-    ) -> (WindowStats, f64, f64) {
+    ) -> (WindowStats, f64, f64, f64) {
         let pre_busy: f64 = st
             .prefill
             .iter()
@@ -648,6 +687,11 @@ impl DagSim {
             },
             prefill_util: util(pre_busy, prev_pre_busy, pre_dev),
             decode_util: util(dec_busy, prev_dec_busy, dec_dev),
+            host_util: util(
+                st.cpu_busy_time,
+                prev_cpu_busy,
+                self.plan.cpu_workers as f64,
+            ),
             prefill_queue: st.prefill.iter().map(|p| p.queue.len()).sum(),
             decode_queue: st.decode.iter().map(|d| d.waiting.len()).sum(),
             decode_active: st.decode.iter().map(|d| d.active.len()).sum(),
@@ -655,7 +699,7 @@ impl DagSim {
             prefill_pipes: st.prefill.iter().filter(|p| !p.retired).count() as u32,
             decode_pipes: st.decode.iter().filter(|d| !d.retired).count() as u32,
         };
-        (stats, pre_busy, dec_busy)
+        (stats, pre_busy, dec_busy, st.cpu_busy_time)
     }
 
     /// Migrate the running fleet to `target`'s pipeline layout.
@@ -924,9 +968,16 @@ impl DagSim {
             decode_pipes_of: BTreeMap::new(),
             cpu_free: self.plan.cpu_workers,
             cpu_queue: VecDeque::new(),
+            cpu_busy_time: 0.0,
             remaining: (0..n_req)
                 .flat_map(|_| self.indeg.iter().copied())
                 .collect(),
+            ready_s: vec![0.0; n_req * n_nodes],
+            node_lat_sum: vec![0.0; n_nodes],
+            node_lat_n: vec![0; n_nodes],
+            host_jobs: 0,
+            prefill_jobs: 0,
+            decode_jobs: 0,
             tokens_done: vec![0; n_req * n_nodes],
             pipe_of: vec![None; n_req * n_nodes],
             nodes_left: vec![n_nodes; n_req],
@@ -954,6 +1005,7 @@ impl DagSim {
         let mut win_t0 = 0.0f64;
         let mut prev_pre_busy = 0.0f64;
         let mut prev_dec_busy = 0.0f64;
+        let mut prev_cpu_busy = 0.0f64;
         let mut events = 0u64;
         let mut makespan = 0.0f64;
         while let Some(Reverse(Event { t, ev, .. })) = self.heap.pop() {
@@ -985,6 +1037,7 @@ impl DagSim {
                 Ev::CpuDone(job) => {
                     // Hand the slot to the next queued stage, if any.
                     if let Some((next, service)) = st.cpu_queue.pop_front() {
+                        st.cpu_busy_time += service;
                         self.push(t + service, Ev::CpuDone(next));
                     } else {
                         st.cpu_free += 1;
@@ -1041,16 +1094,18 @@ impl DagSim {
                     self.maybe_schedule_round(&mut st, di, t, trace);
                 }
                 Ev::WindowTick => {
-                    let (stats, pre_busy, dec_busy) = self.window_stats(
+                    let (stats, pre_busy, dec_busy, cpu_busy) = self.window_stats(
                         &st,
                         win_t0,
                         t,
                         prev_pre_busy,
                         prev_dec_busy,
+                        prev_cpu_busy,
                         trace,
                     );
                     prev_pre_busy = pre_busy;
                     prev_dec_busy = dec_busy;
+                    prev_cpu_busy = cpu_busy;
                     st.win_arrivals = 0;
                     st.win_completed = 0;
                     st.win_sla_ok = 0;
@@ -1072,6 +1127,21 @@ impl DagSim {
                 st.completed, n_req
             )));
         }
+
+        self.detail = Some(DagDetail {
+            host_jobs: st.host_jobs,
+            prefill_jobs: st.prefill_jobs,
+            decode_jobs: st.decode_jobs,
+            node_mean_latency_s: (0..n_nodes)
+                .map(|i| {
+                    if st.node_lat_n[i] > 0 {
+                        st.node_lat_sum[i] / st.node_lat_n[i] as f64
+                    } else {
+                        0.0
+                    }
+                })
+                .collect(),
+        });
 
         let ttfts: Vec<f64> = (0..n_req)
             .map(|i| {

@@ -76,7 +76,7 @@ USAGE:
   agentic-hetero plan diff A.json B.json [--json]
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
   agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
-                          [--requests N] [--max-new N]
+                          [--requests N] [--max-new N] [--synthetic]
   agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
                           [--rate R] [--requests N] [--voice]
   agentic-hetero orchestrate [--plan PLAN.json | --agent voice] [--trace bursty|steady|voice]
@@ -85,11 +85,12 @@ USAGE:
 
 The `plan` command emits a serializable ExecutionPlan; `simulate --plan`
 replays it through the agent-DAG cluster simulator, `serve --plan`
-derives the batching/admission policy from the same artifact, `plan
-diff` renders the typed PlanDiff between two saved plans, and
-`orchestrate` runs the closed control loop (observe -> decide ->
-re-plan -> diff -> migrate -> apply) against a traced load swing,
-emitting a replayable timeline.
+executes the *full agent DAG* live (tool/IO stages on a bounded host
+pool, LLM stages batched on the engine; `--synthetic` runs the
+in-process byte LM so no artifacts are needed), `plan diff` renders the
+typed PlanDiff between two saved plans, and `orchestrate` runs the
+closed control loop (observe -> decide -> re-plan -> diff -> migrate ->
+apply) against a traced load swing, emitting a replayable timeline.
 ";
 
 fn cmd_repro(args: &Args) -> i32 {
@@ -234,6 +235,18 @@ fn cmd_ir(args: &Args) -> i32 {
     0
 }
 
+/// `--synthetic`: the deterministic in-process byte LM (non-pjrt builds
+/// only — the real engine always executes compiled artifacts).
+#[cfg(not(feature = "pjrt"))]
+fn synthetic_engine() -> Option<Engine> {
+    Some(Engine::synthetic_default())
+}
+
+#[cfg(feature = "pjrt")]
+fn synthetic_engine() -> Option<Engine> {
+    None
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = match args.get("config") {
         Some(path) => match DeployConfig::from_file(path) {
@@ -249,32 +262,47 @@ fn cmd_serve(args: &Args) -> i32 {
     let n: usize = parse_opt!(args, "requests", 16usize);
     let max_new: usize = parse_opt!(args, "max-new", cfg.max_new_tokens as usize);
 
-    // `--plan FILE` (or `[server] plan = ...` in the config) derives the
-    // batching/admission policy from a saved ExecutionPlan.
+    // `--plan FILE` (or `[server] plan = ...` in the config): the saved
+    // ExecutionPlan configures batching/admission *and* installs full
+    // agent-DAG execution — requests carry the plan's agent class and
+    // traverse every node binding (tool/IO stages on the host pool).
     let plan_path = args
         .get("plan")
         .map(|s| s.to_string())
         .or_else(|| cfg.plan_path.clone());
-    let server_cfg = match &plan_path {
+    let plan = match &plan_path {
         Some(path) => match load_plan(path) {
             Ok(plan) => {
                 eprintln!("serving with {}", plan.summary());
-                ServerConfig::from_plan(&plan)
+                Some(plan)
             }
             Err(e) => {
                 eprintln!("{e}");
                 return 1;
             }
         },
-        None => ServerConfig::default(),
+        None => None,
     };
 
-    eprintln!("loading engine from {artifacts}/ ...");
-    let engine = match Engine::load(&artifacts) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("engine: {e}");
-            return 1;
+    let engine = if args.flag("synthetic") {
+        match synthetic_engine() {
+            Some(e) => {
+                eprintln!("using the synthetic in-process engine");
+                e
+            }
+            None => {
+                eprintln!("--synthetic is only available in non-pjrt builds");
+                return 2;
+            }
+        }
+    } else {
+        eprintln!("loading engine from {artifacts}/ ...");
+        match Engine::load(&artifacts) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("engine: {e}");
+                return 1;
+            }
         }
     };
     eprintln!(
@@ -283,7 +311,32 @@ fn cmd_serve(args: &Args) -> i32 {
         engine.manifest.num_params,
         engine.manifest.buckets
     );
-    let mut server = Server::new(engine, server_cfg);
+    let (mut server, agent) = match &plan {
+        Some(p) => {
+            let mut s = Server::new(engine, ServerConfig::from_plan(p));
+            match s.install_plan(p) {
+                Ok(()) => {
+                    eprintln!(
+                        "agent-DAG execution installed: {} nodes, host pool {} workers",
+                        p.bindings.len(),
+                        s.host_capacity().unwrap_or(0)
+                    );
+                    let agent = Some(p.agent.clone());
+                    (s, agent)
+                }
+                // A plan whose DAG cannot execute live (e.g. model not
+                // in the profile catalog) still configures serving
+                // policy — the pre-DAG behavior: flat requests only.
+                Err(e) => {
+                    eprintln!(
+                        "plan install: {e}; serving flat requests with the plan's policy"
+                    );
+                    (s, None)
+                }
+            }
+        }
+        None => (Server::new(engine, ServerConfig::default()), None),
+    };
     let prompts = [
         "the paper describes ",
         "heterogeneous systems ",
@@ -291,7 +344,12 @@ fn cmd_serve(args: &Args) -> i32 {
         "agentic workloads are ",
     ];
     let reqs: Vec<ChatRequest> = (0..n as u64)
-        .map(|i| ChatRequest::new(i, prompts[(i as usize) % prompts.len()], max_new))
+        .map(|i| {
+            let mut r =
+                ChatRequest::new(i, prompts[(i as usize) % prompts.len()], max_new);
+            r.agent = agent.clone();
+            r
+        })
         .collect();
     let t0 = std::time::Instant::now();
     match server.run_workload(reqs) {
@@ -301,12 +359,31 @@ fn cmd_serve(args: &Args) -> i32 {
             for r in responses.iter().take(4) {
                 println!("#{}: {:?}", r.id, r.text());
             }
+            if let Some(r) = responses.iter().find(|r| !r.stages.is_empty()) {
+                println!("\nstage trace of request #{}:", r.id);
+                for s in &r.stages {
+                    println!(
+                        "  {:<22} {:<11} {:>8.2}ms -> {:>8.2}ms",
+                        s.op,
+                        s.role,
+                        s.start_s * 1e3,
+                        s.end_s * 1e3
+                    );
+                }
+            }
             println!(
                 "\n{} requests, {} tokens in {:.2}s -> {:.0} tok/s",
                 responses.len(),
                 tokens,
                 wall,
                 tokens as f64 / wall
+            );
+            let (pre, dec, host) = server.take_utilization(wall);
+            println!(
+                "measured utilization: prefill {:.1}% decode {:.1}% host {:.1}%",
+                pre * 100.0,
+                dec * 100.0,
+                host * 100.0
             );
             println!("\nmetrics:\n{}", server.metrics.report());
             0

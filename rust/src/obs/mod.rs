@@ -151,6 +151,14 @@ impl MetricsRegistry {
             .clone()
     }
 
+    /// Per-stage latency histogram for one agent-graph op — the live
+    /// DAG executor records every executed binding here (`stage_<op>`),
+    /// giving the per-stage view the simulator reports via
+    /// `DagDetail::node_mean_latency_s`.
+    pub fn stage_histogram(&self, op: &str) -> std::sync::Arc<Histogram> {
+        self.histogram(&format!("stage_{op}"))
+    }
+
     /// Flat numeric snapshot (counters and gauges, stable ordering) for
     /// exporters — the orchestrator summarizes a run from this, and the
     /// CLI prints it next to the timeline.

@@ -28,7 +28,6 @@ use crate::planner::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
 use crate::planner::migration::{role_replicas, MigrationPlan};
 use crate::planner::plan::Planner;
 use crate::server::{ChatRequest, Server, ServerConfig};
-use crate::util::bench::percentile;
 use crate::{Error, Result};
 
 use super::diff_apply::{lower_diff, retarget, role_capacity};
@@ -161,6 +160,7 @@ impl Orchestrator {
         self.metrics.counter("orch_windows").inc();
         self.metrics.gauge("orch_prefill_util").set(w.prefill_util);
         self.metrics.gauge("orch_decode_util").set(w.decode_util);
+        self.metrics.gauge("orch_host_util").set(w.host_util);
         self.metrics.gauge("orch_sla_attained").set(w.sla_attained);
         self.timeline.events.push(TimelineEvent::Window {
             t0: w.t0,
@@ -371,8 +371,12 @@ impl Executor for SimExecutor<'_> {
 // ---------------------------------------------------------------------
 
 /// Reconfigure a running [`Server`] between request windows. The
-/// pressure signal is SLA-derived (observed p95 e2e against the plan's
-/// envelope) — a live server reports latencies, not device busy-time.
+/// per-role pressure signal is **measured**: the server times engine
+/// prefill/decode execution and the host pool accumulates worker
+/// busy-time, so the orchestrator observes the same quantities here as
+/// it does from the DAG simulator (`Server::take_utilization`), not the
+/// old SLA-headroom proxy. SLA attainment is still tracked from
+/// response latencies against the plan envelope.
 pub struct LiveExecutor {
     pub server: Server,
     pub requests: Vec<ChatRequest>,
@@ -404,17 +408,28 @@ impl Executor for LiveExecutor {
         let requests = std::mem::take(&mut self.requests);
         let mut t = 0.0f64;
         for chunk in requests.chunks(self.window) {
-            // Apply the live plan's serving policy before the window —
-            // reconfiguration lands between requests, never under one.
-            self.server
-                .reconfigure(ServerConfig::from_plan(orch.current()));
+            // Apply the live plan before the window — reconfiguration
+            // lands between requests, never under one. The full-plan
+            // path also swaps the DAG execution structure + host-pool
+            // sizing; servers that cannot host the plan's DAG (e.g. no
+            // catalog model) still get the policy swap, with the
+            // non-plan knobs (token cap, history, time scale)
+            // preserved exactly as the success path preserves them.
+            if self.server.reconfigure_plan(orch.current()).is_err() {
+                let mut cfg = ServerConfig::from_plan(orch.current());
+                let cur = self.server.config();
+                cfg.max_new_tokens = cur.max_new_tokens;
+                cfg.max_history = cur.max_history;
+                cfg.time_scale = cur.time_scale;
+                self.server.reconfigure(cfg);
+            }
             let wall0 = std::time::Instant::now();
             let responses = self.server.run_workload(chunk.to_vec())?;
             let wall = wall0.elapsed().as_secs_f64().max(1e-6);
 
             let e2es: Vec<f64> = responses
                 .iter()
-                .filter(|r| !r.rejected)
+                .filter(|r| r.is_ok())
                 .map(|r| r.e2e_s)
                 .collect();
             let completed = e2es.len();
@@ -422,16 +437,8 @@ impl Executor for LiveExecutor {
                 Some(s) => e2es.iter().filter(|&&e| e <= s).count(),
                 None => completed,
             };
-            let p95 = if e2es.is_empty() {
-                0.0
-            } else {
-                percentile(&e2es, 95.0)
-            };
-            // SLA-headroom pressure: e2e at the envelope reads as 1.0.
-            let pressure = match sla_s {
-                Some(s) if s > 0.0 => (p95 / s).clamp(0.0, 1.0),
-                _ => 0.0,
-            };
+            let (prefill_util, decode_util, host_util) =
+                self.server.take_utilization(wall);
             let stats = WindowStats {
                 t0: t,
                 t1: t + wall,
@@ -442,8 +449,9 @@ impl Executor for LiveExecutor {
                 } else {
                     ok as f64 / completed as f64
                 },
-                prefill_util: pressure,
-                decode_util: pressure,
+                prefill_util,
+                decode_util,
+                host_util,
                 prefill_queue: 0,
                 decode_queue: 0,
                 decode_active: 0,
@@ -481,6 +489,7 @@ mod tests {
             sla_attained: 1.0,
             prefill_util: util,
             decode_util: util,
+            host_util: 0.0,
             prefill_queue: 0,
             decode_queue: 0,
             decode_active: 0,

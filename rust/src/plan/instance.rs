@@ -1,0 +1,220 @@
+//! Per-request DAG instantiation helpers shared by the simulator
+//! ([`crate::cluster::dag::DagSim`]) and the live server's DAG executor
+//! ([`crate::server::dag_exec`]): both walk the same bound agent graph,
+//! so the successor/indegree structure and the "which LLM bindings form
+//! one engine inference" rule live here, next to the plan itself.
+
+use super::{ExecutionPlan, Stage};
+
+/// Successor lists and indegrees of a plan's binding DAG. Bindings are
+/// already validated topological (deps point strictly earlier).
+#[derive(Debug, Clone)]
+pub struct DagTopology {
+    /// Successor node indices per node.
+    pub succ: Vec<Vec<usize>>,
+    /// Static indegree per node.
+    pub indeg: Vec<u32>,
+}
+
+impl DagTopology {
+    pub fn of(plan: &ExecutionPlan) -> DagTopology {
+        let n = plan.bindings.len();
+        let mut succ = vec![Vec::new(); n];
+        let mut indeg = vec![0u32; n];
+        for (i, b) in plan.bindings.iter().enumerate() {
+            for &d in &b.deps {
+                succ[d].push(i);
+                indeg[i] += 1;
+            }
+        }
+        DagTopology { succ, indeg }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indeg.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indeg.is_empty()
+    }
+
+    /// Nodes with no dependencies — dispatched on request arrival.
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.indeg.len())
+            .filter(|&i| self.indeg[i] == 0)
+            .collect()
+    }
+}
+
+/// One live-engine inference unit: a prefill binding fused with the
+/// decode binding that consumes it (when that decode depends *only* on
+/// the prefill), or a lone LLM binding. The engine executes prefill and
+/// decode back-to-back per batch, so the live executor schedules at
+/// unit granularity while per-role accounting stays per binding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LlmUnit {
+    /// Prefill binding index, if the unit has one.
+    pub prefill: Option<usize>,
+    /// Decode binding index, if the unit has one.
+    pub decode: Option<usize>,
+    /// Incoming dependency **edges** from outside the unit (binding
+    /// indices, sorted, with multiplicity): each edge delivers one
+    /// readiness signal, so `ext_deps.len()` is the unit's readiness
+    /// counter — the count both execution backends decrement.
+    pub ext_deps: Vec<usize>,
+}
+
+impl LlmUnit {
+    /// Binding indices belonging to this unit, in execution order.
+    pub fn members(&self) -> impl Iterator<Item = usize> + '_ {
+        self.prefill.into_iter().chain(self.decode.into_iter())
+    }
+}
+
+/// Group a plan's LLM bindings into engine inference units. Returns the
+/// units plus a node-index → unit-index map (None for CPU bindings).
+pub fn llm_units(plan: &ExecutionPlan) -> (Vec<LlmUnit>, Vec<Option<usize>>) {
+    let n = plan.bindings.len();
+    let mut units: Vec<LlmUnit> = Vec::new();
+    let mut unit_of: Vec<Option<usize>> = vec![None; n];
+
+    // Pass 1: every prefill binding opens a unit.
+    for (i, b) in plan.bindings.iter().enumerate() {
+        if b.stage == Stage::LlmPrefill {
+            unit_of[i] = Some(units.len());
+            units.push(LlmUnit {
+                prefill: Some(i),
+                decode: None,
+                ext_deps: Vec::new(),
+            });
+        }
+    }
+    // Pass 2: fuse each decode whose sole dependency is an unclaimed
+    // prefill; everything else becomes its own unit.
+    for (i, b) in plan.bindings.iter().enumerate() {
+        if b.stage != Stage::LlmDecode {
+            continue;
+        }
+        let fused = match b.deps.as_slice() {
+            [p] if plan.bindings[*p].stage == Stage::LlmPrefill => {
+                let u = unit_of[*p].expect("prefill bindings were assigned units");
+                if units[u].decode.is_none() {
+                    units[u].decode = Some(i);
+                    unit_of[i] = Some(u);
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        };
+        if !fused {
+            unit_of[i] = Some(units.len());
+            units.push(LlmUnit {
+                prefill: None,
+                decode: Some(i),
+                ext_deps: Vec::new(),
+            });
+        }
+    }
+    // Pass 3: external dependency edges — member deps outside the
+    // unit, kept with multiplicity (see `LlmUnit::ext_deps`).
+    for (u, unit) in units.iter_mut().enumerate() {
+        let mut ext: Vec<usize> = Vec::new();
+        for m in unit.prefill.into_iter().chain(unit.decode.into_iter()) {
+            for &d in &plan.bindings[m].deps {
+                if unit_of[d] != Some(u) {
+                    ext.push(d);
+                }
+            }
+        }
+        ext.sort_unstable();
+        unit.ext_deps = ext;
+    }
+    (units, unit_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::tests::tiny_plan;
+    use crate::plan::NodeBinding;
+
+    #[test]
+    fn topology_matches_tiny_plan() {
+        let plan = tiny_plan(); // cpu → prefill → decode → cpu
+        let t = DagTopology::of(&plan);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.roots(), vec![0]);
+        assert_eq!(t.succ[0], vec![1]);
+        assert_eq!(t.succ[2], vec![3]);
+        assert_eq!(t.indeg, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn prefill_decode_pair_fuses_into_one_unit() {
+        let plan = tiny_plan();
+        let (units, unit_of) = llm_units(&plan);
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].prefill, Some(1));
+        assert_eq!(units[0].decode, Some(2));
+        // The unit's only external dependency is the cpu input node.
+        assert_eq!(units[0].ext_deps, vec![0]);
+        assert_eq!(unit_of, vec![None, Some(0), Some(0), None]);
+        assert_eq!(units[0].members().collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn second_decode_on_same_prefill_becomes_own_unit() {
+        let mut plan = tiny_plan();
+        // A second decode consuming the same prefill (node 1).
+        plan.bindings.push(NodeBinding {
+            op: "llm.decode".into(),
+            class: "Gaudi3".into(),
+            stage: crate::plan::Stage::LlmDecode,
+            latency_s: 0.4,
+            cost_usd: 1e-5,
+            deps: vec![1],
+            xfer_bytes: 1e6,
+            token_fraction: 1.0,
+        });
+        plan.validate().unwrap();
+        let (units, unit_of) = llm_units(&plan);
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[1].prefill, None);
+        assert_eq!(units[1].decode, Some(4));
+        assert_eq!(units[1].ext_deps, vec![1]);
+        assert_eq!(unit_of[4], Some(1));
+    }
+
+    #[test]
+    fn ext_deps_keep_edge_multiplicity() {
+        let mut plan = tiny_plan();
+        // A decode-only unit consuming the same upstream node twice:
+        // two edges → two readiness signals → count must be 2.
+        plan.bindings.push(NodeBinding {
+            op: "llm.decode".into(),
+            class: "Gaudi3".into(),
+            stage: Stage::LlmDecode,
+            latency_s: 0.1,
+            cost_usd: 0.0,
+            deps: vec![0, 0],
+            xfer_bytes: 0.0,
+            token_fraction: 1.0,
+        });
+        plan.validate().unwrap();
+        let (units, _) = llm_units(&plan);
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[1].ext_deps, vec![0, 0], "edges, not distinct deps");
+    }
+
+    #[test]
+    fn cpu_only_plan_has_no_units() {
+        let mut plan = tiny_plan();
+        plan.bindings.truncate(1); // keep only the cpu input
+        plan.pipelines.clear();
+        let (units, unit_of) = llm_units(&plan);
+        assert!(units.is_empty());
+        assert_eq!(unit_of, vec![None]);
+    }
+}

@@ -26,8 +26,10 @@
 //! without consulting the planner again.
 
 pub mod diff;
+pub mod instance;
 
 pub use diff::{BindingRebind, PipelineResize, PlanDiff, PolicyChange};
+pub use instance::{DagTopology, LlmUnit};
 
 use crate::cluster::sim::{Placement, PipelineSpec};
 use crate::cost::hardware::by_name;

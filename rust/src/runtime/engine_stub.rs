@@ -1,27 +1,40 @@
 //! API-compatible stand-in for the PJRT engine (built when the `pjrt`
-//! feature is off). The real engine in `engine.rs` drives compiled HLO
-//! through the PJRT C API; this stub keeps every dependent layer —
-//! server, router, CLI, tests — compiling and running on machines
-//! without the xla toolchain. `Engine::load` always fails with a clear
-//! message, so call-sites degrade exactly as they do when the artifact
-//! bundle is missing.
+//! feature is off), plus a **synthetic** in-process byte-LM.
+//!
+//! The real engine in `engine.rs` drives compiled HLO through the PJRT
+//! C API. Without the xla toolchain there are two modes:
+//!
+//! * the plain stub (`Engine::load` always fails with a clear message,
+//!   so call-sites degrade exactly as they do when the artifact bundle
+//!   is missing), and
+//! * a **synthetic engine** ([`Engine::synthetic`]) — a deterministic
+//!   hash-mix byte LM that honours the full prefill/decode API. Decode
+//!   steps do work proportional to the attended context, so relative
+//!   stage costs (decode ≫ prefill per token stream) mirror the real
+//!   runtime. This is what lets the live serving stack — admission,
+//!   batcher, host pool, full agent-DAG execution — run end-to-end in
+//!   dependency-free builds and be conformance-tested against the DAG
+//!   simulator (`rust/tests/sim_vs_live.rs`).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use super::manifest::Manifest;
 use crate::{Error, Result};
 
-/// Opaque KV cache state for one in-flight batch (stub: no buffers).
+/// Opaque KV cache state for one in-flight batch (synthetic mode keeps
+/// a per-lane hash state standing in for the KV tensors).
 pub struct KvState {
     pub bucket: usize,
     /// Current absolute position per lane (next write index).
     pub pos: Vec<i32>,
+    /// Per-lane rolling context hash (synthetic attention state).
+    state: Vec<u64>,
 }
 
 impl KvState {
-    /// Bytes held by this state (stub holds none).
+    /// Bytes held by this state (synthetic mode holds only hashes).
     pub fn bytes(&self) -> usize {
-        0
+        self.state.len() * 8
     }
 }
 
@@ -34,14 +47,26 @@ pub struct PrefillResult {
 fn unavailable() -> Error {
     Error::Runtime(
         "PJRT engine unavailable: built without the `pjrt` feature \
-         (rebuild with `--features pjrt` and a vendored xla crate)"
+         (rebuild with `--features pjrt` and a vendored xla crate, or \
+         construct Engine::synthetic for the in-process byte LM)"
             .into(),
     )
 }
 
-/// The per-node engine (stub).
+/// splitmix64 — the same mixer `util::rng` builds on.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The per-node engine (stub / synthetic).
 pub struct Engine {
     pub manifest: Manifest,
+    /// When true, prefill/decode run the deterministic hash-mix LM
+    /// instead of failing.
+    synthetic: bool,
 }
 
 impl Engine {
@@ -53,24 +78,143 @@ impl Engine {
         Err(unavailable())
     }
 
+    /// A deterministic in-process byte LM honouring the engine API —
+    /// no artifacts, no PJRT. See module docs.
+    pub fn synthetic(manifest: Manifest) -> Engine {
+        Engine {
+            manifest,
+            synthetic: true,
+        }
+    }
+
+    /// [`Engine::synthetic`] over a built-in tiny manifest (byte vocab,
+    /// 96-token prompt bucket, 64-token decode budget).
+    pub fn synthetic_default() -> Engine {
+        Engine::synthetic(Manifest {
+            dir: PathBuf::new(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 32,
+            max_seq: 160,
+            prefill_seq: 96,
+            buckets: vec![1, 2, 4, 8],
+            num_params: 1_000,
+            kv_cache_bytes_b1: 1_024,
+        })
+    }
+
     pub fn platform(&self) -> String {
-        "stub".to_string()
+        if self.synthetic {
+            "synthetic".to_string()
+        } else {
+            "stub".to_string()
+        }
     }
 
-    pub fn prefill(&self, _prompts: &[Vec<u8>]) -> Result<PrefillResult> {
-        Err(unavailable())
+    /// Logits for one lane from its context hash.
+    fn logits_of(&self, state: u64) -> Vec<f32> {
+        let v = self.manifest.vocab.max(1);
+        (0..v)
+            .map(|b| {
+                // Low 16 bits of a per-byte mix → [0, 1) range logits.
+                (mix(state ^ (b as u64)) & 0xFFFF) as f32 / 65536.0
+            })
+            .collect()
     }
 
-    pub fn decode_step(&self, _kv: &mut KvState, _tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
-        Err(unavailable())
+    pub fn prefill(&self, prompts: &[Vec<u8>]) -> Result<PrefillResult> {
+        if !self.synthetic {
+            return Err(unavailable());
+        }
+        if prompts.is_empty() {
+            return Err(Error::Runtime("prefill on empty batch".into()));
+        }
+        let mut logits = Vec::with_capacity(prompts.len());
+        let mut pos = Vec::with_capacity(prompts.len());
+        let mut state = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            let take = p.len().min(self.manifest.prefill_seq);
+            let mut h = 0x5EED_u64;
+            for &b in &p[p.len() - take..] {
+                h = mix(h ^ (b as u64));
+            }
+            logits.push(self.logits_of(h));
+            pos.push(take as i32);
+            state.push(h);
+        }
+        Ok(PrefillResult {
+            logits,
+            kv: KvState {
+                bucket: prompts.len(),
+                pos,
+                state,
+            },
+        })
+    }
+
+    pub fn decode_step(&self, kv: &mut KvState, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        if !self.synthetic {
+            return Err(unavailable());
+        }
+        if tokens.len() < kv.state.len() {
+            return Err(Error::Runtime(format!(
+                "decode_step fed {} tokens for {} lanes",
+                tokens.len(),
+                kv.state.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(kv.state.len());
+        for i in 0..kv.state.len() {
+            let mut h = mix(kv.state[i] ^ (tokens[i] as u64));
+            // Synthetic attention: touch every cached position so a
+            // decode step costs O(context), as the real kernel does.
+            for p in 0..kv.pos[i].max(0) as u64 {
+                h ^= mix(h ^ p);
+            }
+            kv.state[i] = h;
+            kv.pos[i] += 1;
+            out.push(self.logits_of(h));
+        }
+        Ok(out)
     }
 
     pub fn generate_greedy(
         &self,
-        _prompts: &[Vec<u8>],
-        _max_new: usize,
+        prompts: &[Vec<u8>],
+        max_new: usize,
     ) -> Result<Vec<Vec<u8>>> {
-        Err(unavailable())
+        if !self.synthetic {
+            return Err(unavailable());
+        }
+        let pre = self.prefill(prompts)?;
+        let mut kv = pre.kv;
+        let n = prompts.len();
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
+        let mut next: Vec<u8> = vec![0; n];
+        for i in 0..n {
+            let tok = argmax(&pre.logits[i]) as u8;
+            next[i] = tok;
+            if max_new > 0 {
+                outputs[i].push(tok);
+            }
+        }
+        let budget = self
+            .manifest
+            .max_seq
+            .saturating_sub(self.manifest.prefill_seq)
+            .saturating_sub(1);
+        for _ in 1..max_new.min(budget + 1) {
+            let logits = self.decode_step(&mut kv, &next)?;
+            for i in 0..n {
+                let tok = argmax(&logits[i]) as u8;
+                next[i] = tok;
+                outputs[i].push(tok);
+            }
+        }
+        Ok(outputs)
     }
 }
 
@@ -99,5 +243,43 @@ mod tests {
     fn stub_load_reports_feature_gate() {
         // Nonexistent dir: the manifest error surfaces first.
         assert!(Engine::load("/nonexistent").is_err());
+    }
+
+    #[test]
+    fn synthetic_generation_is_deterministic() {
+        let e = Engine::synthetic_default();
+        assert_eq!(e.platform(), "synthetic");
+        let prompts = vec![b"the system ".to_vec(), b"another lane".to_vec()];
+        let a = e.generate_greedy(&prompts, 12).unwrap();
+        let b = e.generate_greedy(&prompts, 12).unwrap();
+        assert_eq!(a, b, "same prompts must generate the same bytes");
+        assert_eq!(a[0].len(), 12);
+        assert_ne!(a[0], a[1], "different prompts should diverge");
+    }
+
+    #[test]
+    fn synthetic_lanes_are_independent() {
+        let e = Engine::synthetic_default();
+        let solo = e.generate_greedy(&[b"hello".to_vec()], 8).unwrap();
+        let pair = e
+            .generate_greedy(&[b"hello".to_vec(), b"world".to_vec()], 8)
+            .unwrap();
+        assert_eq!(solo[0], pair[0], "batch lane 0 must match solo run");
+    }
+
+    #[test]
+    fn synthetic_respects_decode_budget() {
+        let e = Engine::synthetic_default();
+        let budget = e.manifest.max_seq - e.manifest.prefill_seq;
+        let out = e.generate_greedy(&[vec![b'a'; 200]], budget + 50).unwrap();
+        assert!(out[0].len() <= budget, "generated past the KV budget");
+    }
+
+    #[test]
+    fn plain_stub_still_fails_closed() {
+        let mut e = Engine::synthetic_default();
+        e.synthetic = false;
+        assert!(e.prefill(&[b"x".to_vec()]).is_err());
+        assert!(e.generate_greedy(&[b"x".to_vec()], 4).is_err());
     }
 }

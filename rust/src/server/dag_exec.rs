@@ -1,0 +1,766 @@
+//! Live agent-DAG execution: walk a request through its
+//! [`ExecutionPlan`] node bindings on the real serving stack — CPU/
+//! tool/IO stages on the bounded [`HostPool`], LLM stages through the
+//! admission → batcher → engine loop — exactly the graph the DAG
+//! simulator (`cluster/dag.rs`) executes in modeled time.
+//!
+//! Split of responsibilities:
+//!
+//! * [`DagRuntime`] — static, derived once per installed plan: the
+//!   topology ([`DagTopology`]), the engine inference units
+//!   ([`crate::plan::instance::llm_units`]), the virtual pipeline fleet
+//!   (expanded replicas with chassis, for per-role routing/accounting
+//!   and cross-chassis edge-transfer modeling), and the time scale that
+//!   maps planner-profiled latencies onto wall-clock sleeps.
+//! * [`DagDispatch`] — the per-request bookkeeping the serving loop
+//!   drives: dependency counts, ready-unit extraction, modeled transfer
+//!   timers, per-stage spans, and failure isolation (a failing tool
+//!   node terminates *its* request; every other request and the
+//!   dispatcher keep running).
+//!
+//! The dispatcher returns [`LlmJob`]s for the serving loop to feed into
+//! its continuous batcher, and receives [`UnitOutcome`]s back once the
+//! engine has executed a batch — it never touches the engine itself.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cost::kv::kv_cache_bytes;
+use crate::cost::model_profile::{by_short_name, ModelProfile};
+use crate::obs::MetricsRegistry;
+use crate::plan::instance::{llm_units, DagTopology, LlmUnit};
+use crate::plan::{ExecutionPlan, Role, Stage};
+use crate::server::hostpool::{HostDone, HostPool, HostTask};
+use crate::server::request::{ChatRequest, ChatResponse, StageSpan};
+use crate::{Error, Result};
+
+/// Globally-unique admission epochs: the host pool and the server's
+/// completion channel outlive individual `serve` sessions, so epoch
+/// uniqueness must span dispatchers — a stale completion or timer from
+/// any earlier session must never match a later run reusing an id.
+static EPOCH_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Fault-injection hook for host stages: `(op, request id) -> fail?`.
+/// Installed via [`crate::server::Server::inject_host_fault`]; used by
+/// the failure-injection tests to prove a failing tool node never
+/// wedges the dispatcher.
+pub type HostFault = Arc<dyn Fn(&str, u64) -> bool + Send + Sync>;
+
+/// One virtual pipeline replica of the plan's fleet (live builds have a
+/// single engine; the virtual fleet carries per-role routing, request
+/// accounting, and chassis placement for edge-transfer modeling).
+#[derive(Debug, Clone)]
+pub struct VPipe {
+    pub class: String,
+    pub chassis: u32,
+}
+
+/// Static per-plan execution structure. See module docs.
+pub struct DagRuntime {
+    pub plan: ExecutionPlan,
+    pub topo: DagTopology,
+    pub units: Vec<LlmUnit>,
+    pub unit_of: Vec<Option<usize>>,
+    /// Incoming unit-external edge count per unit (readiness counter).
+    unit_ext_edges: Vec<u32>,
+    pub prefill_pipes: Vec<VPipe>,
+    pub decode_pipes: Vec<VPipe>,
+    model: Option<ModelProfile>,
+    /// Uncontended scale-out bandwidth, bytes/second.
+    xfer_bytes_per_s: f64,
+    /// Wall-clock seconds per modeled second (CPU sleeps, transfers).
+    pub time_scale: f64,
+}
+
+impl DagRuntime {
+    pub fn new(plan: &ExecutionPlan, time_scale: f64) -> Result<DagRuntime> {
+        plan.validate()?;
+        if plan.bindings.is_empty() {
+            return Err(Error::Runtime(
+                "plan has no bindings to execute".into(),
+            ));
+        }
+        let has_llm = plan.bindings.iter().any(|b| b.stage != Stage::Cpu);
+        let model = by_short_name(&plan.model);
+        if has_llm && model.is_none() {
+            return Err(Error::Config(format!(
+                "plan model `{}` not in the profile catalog",
+                plan.model
+            )));
+        }
+        let topo = DagTopology::of(plan);
+        let (units, unit_of) = llm_units(plan);
+        // `ext_deps` carries one entry per incoming external edge, so
+        // its length is exactly the readiness count deliver_dep drains.
+        let unit_ext_edges = units.iter().map(|u| u.ext_deps.len() as u32).collect();
+        let placement = plan.placement()?;
+        let vp = |specs: &[crate::cluster::sim::PipelineSpec]| -> Vec<VPipe> {
+            specs
+                .iter()
+                .map(|s| VPipe {
+                    class: s.device.name.to_string(),
+                    chassis: s.chassis,
+                })
+                .collect()
+        };
+        Ok(DagRuntime {
+            topo,
+            units,
+            unit_of,
+            unit_ext_edges,
+            prefill_pipes: vp(&placement.prefill),
+            decode_pipes: vp(&placement.decode),
+            model,
+            xfer_bytes_per_s: (plan.fabric.scaleout_gbit * 1e9 / 8.0).max(1.0),
+            time_scale: time_scale.max(0.0),
+            plan: plan.clone(),
+        })
+    }
+
+    /// Prompt tokens a node processes (byte-LM: bytes ≈ tokens), scaled
+    /// by its `token_fraction` — mirrors `DagSim::isl_of`.
+    fn isl_of(&self, prompt_len: usize, node: usize) -> u64 {
+        let tf = self.plan.bindings[node].token_fraction;
+        ((prompt_len as f64 * tf).round() as u64).max(1)
+    }
+
+    /// Decode token budget of a node — mirrors `DagSim::osl_of`.
+    fn osl_of(&self, max_new: usize, node: usize) -> usize {
+        let tf = self.plan.bindings[node].token_fraction;
+        (((max_new as f64) * tf).round() as usize).max(1)
+    }
+}
+
+/// One engine inference the serving loop should batch: unit `unit` of
+/// request `req`.
+#[derive(Debug, Clone)]
+pub struct LlmJob {
+    pub req: u64,
+    pub unit: usize,
+    pub prompt: Vec<u8>,
+    /// Decode token budget (0 = prefill-only unit).
+    pub osl: usize,
+    pub temperature: f64,
+}
+
+/// What the engine did with one [`LlmJob`] (timestamps are wall-clock).
+#[derive(Debug)]
+pub struct UnitOutcome {
+    pub job: LlmJob,
+    /// Batch execution start (prefill stage start).
+    pub started: Instant,
+    pub prefill_end: Instant,
+    pub first_token: Option<Instant>,
+    /// Last decode token (== `prefill_end` when `osl == 0`).
+    pub last_token: Instant,
+    pub output: Vec<u8>,
+    /// Sum and count of token-to-token gaps.
+    pub tbt_sum_s: f64,
+    pub tbt_n: u64,
+}
+
+/// What one dispatcher step produced: jobs for the batcher, responses
+/// for the client channel.
+#[derive(Debug, Default)]
+pub struct Step {
+    pub jobs: Vec<LlmJob>,
+    pub responses: Vec<ChatResponse>,
+}
+
+/// A modeled cross-chassis transfer in flight: dependency `node` of
+/// request `req` arrives at `due`. `epoch` pins the timer to one
+/// admission of that id — a stale timer from a torn-down run must
+/// never deliver into a later request reusing the id.
+struct Timer {
+    due: Instant,
+    seq: u64,
+    req: u64,
+    node: usize,
+    epoch: u64,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.due.cmp(&other.due).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-request run state.
+struct ReqRun {
+    req: ChatRequest,
+    /// Admission epoch (see [`Timer::epoch`]).
+    epoch: u64,
+    submitted: Instant,
+    /// Unsatisfied dependency edges per node (CPU nodes).
+    remaining: Vec<u32>,
+    /// Unsatisfied external edges per unit (LLM nodes).
+    unit_remaining: Vec<u32>,
+    unit_dispatched: Vec<bool>,
+    node_done: Vec<bool>,
+    /// Virtual pipe each LLM node routed to.
+    node_pipe: Vec<Option<(Role, usize)>>,
+    pipe_released: Vec<bool>,
+    nodes_left: usize,
+    /// Host tasks + engine jobs currently in flight.
+    outstanding: u32,
+    failed: Option<String>,
+    first_token: Option<Instant>,
+    last_done: Instant,
+    output: Vec<u8>,
+    tokens: usize,
+    tbt_sum_s: f64,
+    tbt_n: u64,
+    stages: Vec<Option<StageSpan>>,
+}
+
+/// The per-request dispatcher the serving loop drives. See module docs.
+pub struct DagDispatch {
+    runs: BTreeMap<u64, ReqRun>,
+    timers: BinaryHeap<Reverse<Timer>>,
+    timer_seq: u64,
+    /// Outstanding LLM nodes routed to each virtual pipe, per role.
+    prefill_load: Vec<usize>,
+    decode_load: Vec<usize>,
+    /// Per-binding stage-latency histograms, resolved once (the op set
+    /// is fixed at plan install; no per-completion registry lookups).
+    stage_hist: Vec<Arc<crate::obs::Histogram>>,
+    metrics: Arc<MetricsRegistry>,
+    fault: Option<HostFault>,
+}
+
+impl DagDispatch {
+    pub fn new(
+        rt: &DagRuntime,
+        metrics: Arc<MetricsRegistry>,
+        fault: Option<HostFault>,
+    ) -> DagDispatch {
+        let stage_hist = rt
+            .plan
+            .bindings
+            .iter()
+            .map(|b| metrics.stage_histogram(&b.op))
+            .collect();
+        DagDispatch {
+            runs: BTreeMap::new(),
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            prefill_load: vec![0; rt.prefill_pipes.len()],
+            decode_load: vec![0; rt.decode_pipes.len()],
+            stage_hist,
+            metrics,
+            fault,
+        }
+    }
+
+    /// Requests admitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Is a request with this id already in flight? (Duplicate ids
+    /// would cross-apply completions; the server fails them closed.)
+    pub fn contains(&self, id: u64) -> bool {
+        self.runs.contains_key(&id)
+    }
+
+    /// Earliest pending modeled-transfer arrival, if any.
+    pub fn next_timer_due(&self) -> Option<Instant> {
+        self.timers.peek().map(|Reverse(t)| t.due)
+    }
+
+    /// Admit one agent request: instantiate its DAG, dispatch the
+    /// roots. Host stages go straight to the pool; ready LLM units come
+    /// back in the [`Step`] for the batcher.
+    pub fn admit(
+        &mut self,
+        rt: &DagRuntime,
+        req: ChatRequest,
+        now: Instant,
+        pool: &HostPool,
+    ) -> Step {
+        let mut step = Step::default();
+        let n = rt.topo.len();
+        let mut run = ReqRun {
+            epoch: EPOCH_SEQ.fetch_add(1, Ordering::Relaxed),
+            submitted: now,
+            remaining: rt.topo.indeg.clone(),
+            unit_remaining: rt.unit_ext_edges.clone(),
+            unit_dispatched: vec![false; rt.units.len()],
+            node_done: vec![false; n],
+            node_pipe: vec![None; n],
+            pipe_released: vec![false; n],
+            nodes_left: n,
+            outstanding: 0,
+            failed: None,
+            first_token: None,
+            last_done: now,
+            output: Vec::new(),
+            tokens: 0,
+            tbt_sum_s: 0.0,
+            tbt_n: 0,
+            stages: vec![None; n],
+            req,
+        };
+        // CPU roots.
+        for node in rt.topo.roots() {
+            if rt.plan.bindings[node].stage == Stage::Cpu {
+                self.dispatch_cpu(rt, &mut run, node, pool);
+            }
+        }
+        // Units with no external edges are ready at arrival.
+        for u in 0..rt.units.len() {
+            if run.unit_remaining[u] == 0 && !run.unit_dispatched[u] {
+                self.dispatch_unit(rt, &mut run, u, &mut step);
+            }
+        }
+        self.runs.insert(run.req.id, run);
+        step
+    }
+
+    /// One host-pool completion landed.
+    pub fn on_host_done(&mut self, rt: &DagRuntime, d: HostDone, pool: &HostPool) -> Step {
+        let mut step = Step::default();
+        let Some(mut run) = self.runs.remove(&d.req) else {
+            return step;
+        };
+        // A stale completion from an earlier serve session (or an
+        // earlier admission of this id) belongs to a torn-down run.
+        if run.epoch != d.epoch {
+            self.runs.insert(d.req, run);
+            return step;
+        }
+        run.outstanding = run.outstanding.saturating_sub(1);
+        match d.result {
+            Ok(()) => {
+                if run.failed.is_none() {
+                    let span = StageSpan {
+                        node: d.node,
+                        op: rt.plan.bindings[d.node].op.clone(),
+                        role: rt.plan.bindings[d.node].stage.name(),
+                        start_s: d.started.duration_since(run.submitted).as_secs_f64(),
+                        end_s: d.finished.duration_since(run.submitted).as_secs_f64(),
+                    };
+                    self.complete_node(rt, &mut run, d.node, d.finished, span, pool, &mut step);
+                }
+            }
+            Err(e) => {
+                if run.failed.is_none() {
+                    self.metrics.counter("server_stage_failures").inc();
+                    run.failed = Some(format!(
+                        "{} (node {}): {e}",
+                        rt.plan.bindings[d.node].op, d.node
+                    ));
+                }
+                // The failing stage's own wall time still counts
+                // toward the failed response's e2e.
+                if d.finished > run.last_done {
+                    run.last_done = d.finished;
+                }
+            }
+        }
+        self.settle(run, &mut step);
+        step
+    }
+
+    /// Deliver every modeled transfer due by `now`.
+    pub fn poll_timers(&mut self, rt: &DagRuntime, now: Instant, pool: &HostPool) -> Step {
+        let mut step = Step::default();
+        while matches!(self.timers.peek(), Some(Reverse(t)) if t.due <= now) {
+            let Reverse(t) = self.timers.pop().unwrap();
+            let Some(mut run) = self.runs.remove(&t.req) else {
+                continue;
+            };
+            // A stale timer from a torn-down run must not deliver into
+            // a later request that reused the id.
+            if run.epoch != t.epoch {
+                self.runs.insert(t.req, run);
+                continue;
+            }
+            if run.failed.is_none() {
+                self.deliver_dep(rt, &mut run, t.node, pool, &mut step);
+            }
+            self.settle(run, &mut step);
+        }
+        step
+    }
+
+    /// The engine finished a batch of units.
+    pub fn finish_units(
+        &mut self,
+        rt: &DagRuntime,
+        outcomes: Vec<UnitOutcome>,
+        pool: &HostPool,
+    ) -> Step {
+        let mut step = Step::default();
+        for o in outcomes {
+            let Some(mut run) = self.runs.remove(&o.job.req) else {
+                continue;
+            };
+            run.outstanding = run.outstanding.saturating_sub(1);
+            if run.failed.is_none() {
+                let unit = &rt.units[o.job.unit];
+                run.output.extend_from_slice(&o.output);
+                run.tokens += o.output.len();
+                if let Some(ft) = o.first_token {
+                    let earlier = match run.first_token {
+                        Some(cur) => ft < cur,
+                        None => true,
+                    };
+                    if earlier {
+                        run.first_token = Some(ft);
+                    }
+                }
+                run.tbt_sum_s += o.tbt_sum_s;
+                run.tbt_n += o.tbt_n;
+                if let Some(p) = unit.prefill {
+                    let span = StageSpan {
+                        node: p,
+                        op: rt.plan.bindings[p].op.clone(),
+                        role: rt.plan.bindings[p].stage.name(),
+                        start_s: o.started.duration_since(run.submitted).as_secs_f64(),
+                        end_s: o.prefill_end.duration_since(run.submitted).as_secs_f64(),
+                    };
+                    self.complete_node(rt, &mut run, p, o.prefill_end, span, pool, &mut step);
+                }
+                if let Some(dnode) = unit.decode {
+                    if run.failed.is_none() {
+                        let span = StageSpan {
+                            node: dnode,
+                            op: rt.plan.bindings[dnode].op.clone(),
+                            role: rt.plan.bindings[dnode].stage.name(),
+                            start_s: o
+                                .prefill_end
+                                .duration_since(run.submitted)
+                                .as_secs_f64(),
+                            end_s: o.last_token.duration_since(run.submitted).as_secs_f64(),
+                        };
+                        self.complete_node(
+                            rt, &mut run, dnode, o.last_token, span, pool, &mut step,
+                        );
+                    }
+                }
+            }
+            self.settle(run, &mut step);
+        }
+        step
+    }
+
+    /// Re-insert the run or finalize it into a response.
+    fn settle(&mut self, run: ReqRun, step: &mut Step) {
+        if let Some(err) = &run.failed {
+            if run.outstanding == 0 {
+                let e2e = run.last_done.duration_since(run.submitted).as_secs_f64();
+                self.release_pipes(&run);
+                step.responses
+                    .push(ChatResponse::failed(run.req.id, e2e, err.clone()));
+                return;
+            }
+        } else if run.nodes_left == 0 {
+            self.release_pipes(&run);
+            step.responses.push(finalize(run));
+            return;
+        }
+        self.runs.insert(run.req.id, run);
+    }
+
+    /// Return any still-held virtual-pipe slots (failure teardown).
+    fn release_pipes(&mut self, run: &ReqRun) {
+        for (node, p) in run.node_pipe.iter().enumerate() {
+            if let Some((role, k)) = p {
+                if !run.pipe_released[node] {
+                    match role {
+                        Role::Prefill => {
+                            self.prefill_load[*k] = self.prefill_load[*k].saturating_sub(1)
+                        }
+                        Role::Decode => {
+                            self.decode_load[*k] = self.decode_load[*k].saturating_sub(1)
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route an LLM node to the least-loaded virtual pipe of its class.
+    fn assign_pipe(&mut self, rt: &DagRuntime, run: &mut ReqRun, node: usize) {
+        if run.node_pipe[node].is_some() {
+            return;
+        }
+        let binding = &rt.plan.bindings[node];
+        let (pipes, loads, role) = match binding.stage {
+            Stage::LlmPrefill => (&rt.prefill_pipes, &mut self.prefill_load, Role::Prefill),
+            Stage::LlmDecode => (&rt.decode_pipes, &mut self.decode_load, Role::Decode),
+            Stage::Cpu => return,
+        };
+        let k = (0..pipes.len())
+            .filter(|&k| pipes[k].class == binding.class)
+            .min_by_key(|&k| loads[k]);
+        if let Some(k) = k {
+            loads[k] += 1;
+            run.node_pipe[node] = Some((role, k));
+        }
+    }
+
+    fn chassis_of(rt: &DagRuntime, run: &ReqRun, node: usize) -> Option<u32> {
+        match run.node_pipe[node] {
+            Some((Role::Prefill, k)) => Some(rt.prefill_pipes[k].chassis),
+            Some((Role::Decode, k)) => Some(rt.decode_pipes[k].chassis),
+            None => None,
+        }
+    }
+
+    /// Submit one CPU/tool/IO stage to the host pool.
+    fn dispatch_cpu(&mut self, rt: &DagRuntime, run: &mut ReqRun, node: usize, pool: &HostPool) {
+        let binding = &rt.plan.bindings[node];
+        let sleep_s = binding.latency_s * rt.time_scale;
+        let op = binding.op.clone();
+        let req_id = run.req.id;
+        let fault = self.fault.clone();
+        run.outstanding += 1;
+        self.metrics.counter("server_host_jobs").inc();
+        pool.submit(HostTask {
+            req: req_id,
+            node,
+            epoch: run.epoch,
+            work: Box::new(move || {
+                if sleep_s > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(sleep_s));
+                }
+                if let Some(f) = fault {
+                    if f(&op, req_id) {
+                        return Err(Error::Runtime(format!(
+                            "injected host-stage fault in {op}"
+                        )));
+                    }
+                }
+                Ok(())
+            }),
+        });
+    }
+
+    /// Emit one ready LLM unit as a job for the batcher.
+    fn dispatch_unit(&mut self, rt: &DagRuntime, run: &mut ReqRun, unit: usize, step: &mut Step) {
+        run.unit_dispatched[unit] = true;
+        run.outstanding += 1;
+        let u = &rt.units[unit];
+        for m in u.members() {
+            self.assign_pipe(rt, run, m);
+        }
+        if u.prefill.is_some() {
+            self.metrics.counter("server_prefill_jobs").inc();
+        }
+        let osl = match u.decode {
+            Some(d) => {
+                self.metrics.counter("server_decode_jobs").inc();
+                rt.osl_of(run.req.max_new_tokens, d)
+            }
+            None => 0,
+        };
+        step.jobs.push(LlmJob {
+            req: run.req.id,
+            unit,
+            prompt: run.req.prompt.clone(),
+            osl,
+            temperature: run.req.temperature,
+        });
+    }
+
+    /// One dependency edge into `node` is satisfied.
+    fn deliver_dep(
+        &mut self,
+        rt: &DagRuntime,
+        run: &mut ReqRun,
+        node: usize,
+        pool: &HostPool,
+        step: &mut Step,
+    ) {
+        match rt.plan.bindings[node].stage {
+            Stage::Cpu => {
+                run.remaining[node] = run.remaining[node].saturating_sub(1);
+                if run.remaining[node] == 0 {
+                    self.dispatch_cpu(rt, run, node, pool);
+                }
+            }
+            Stage::LlmPrefill | Stage::LlmDecode => {
+                let u = rt.unit_of[node].expect("LLM node must belong to a unit");
+                run.unit_remaining[u] = run.unit_remaining[u].saturating_sub(1);
+                if run.unit_remaining[u] == 0 && !run.unit_dispatched[u] {
+                    self.dispatch_unit(rt, run, u, step);
+                }
+            }
+        }
+    }
+
+    /// Node finished: record its span, release its pipe slot, and
+    /// propagate to successors (with modeled cross-chassis transfer
+    /// delays on pipeline → pipeline edges, as in the simulator).
+    #[allow(clippy::too_many_arguments)]
+    fn complete_node(
+        &mut self,
+        rt: &DagRuntime,
+        run: &mut ReqRun,
+        node: usize,
+        end: Instant,
+        span: StageSpan,
+        pool: &HostPool,
+        step: &mut Step,
+    ) {
+        if run.node_done[node] {
+            return;
+        }
+        run.node_done[node] = true;
+        self.stage_hist[node].record_secs(span.duration_s());
+        run.stages[node] = Some(span);
+        if end > run.last_done {
+            run.last_done = end;
+        }
+        run.nodes_left -= 1;
+        if let Some((role, k)) = run.node_pipe[node] {
+            if !run.pipe_released[node] {
+                run.pipe_released[node] = true;
+                match role {
+                    Role::Prefill => {
+                        self.prefill_load[k] = self.prefill_load[k].saturating_sub(1)
+                    }
+                    Role::Decode => {
+                        self.decode_load[k] = self.decode_load[k].saturating_sub(1)
+                    }
+                }
+            }
+        }
+        let from_chassis = Self::chassis_of(rt, run, node);
+        let from_stage = rt.plan.bindings[node].stage;
+        for &v in &rt.topo.succ[node] {
+            if run.failed.is_some() {
+                break;
+            }
+            // Intra-unit edges (prefill → its fused decode) execute
+            // back-to-back inside one engine pass; KV never leaves the
+            // device, so there is nothing to deliver or transfer.
+            if rt.unit_of[node].is_some() && rt.unit_of[node] == rt.unit_of[v] {
+                continue;
+            }
+            let to_binding = &rt.plan.bindings[v];
+            let mut delay_s = 0.0;
+            // Pipeline → pipeline edges pay the modeled fabric hop;
+            // host stages ingest as part of their profiled latency.
+            if to_binding.stage != Stage::Cpu && from_chassis.is_some() {
+                self.assign_pipe(rt, run, v);
+                if let Some(to_chassis) = Self::chassis_of(rt, run, v) {
+                    if from_chassis != Some(to_chassis) {
+                        let bytes = if from_stage == Stage::LlmPrefill
+                            && to_binding.stage == Stage::LlmDecode
+                        {
+                            match &rt.model {
+                                Some(m) => kv_cache_bytes(
+                                    m,
+                                    rt.isl_of(run.req.prompt.len(), v),
+                                    1,
+                                ),
+                                None => to_binding.xfer_bytes,
+                            }
+                        } else {
+                            to_binding.xfer_bytes
+                        };
+                        delay_s = bytes / rt.xfer_bytes_per_s * rt.time_scale;
+                    }
+                }
+            }
+            if delay_s > 1e-6 {
+                self.timer_seq += 1;
+                self.timers.push(Reverse(Timer {
+                    due: end + Duration::from_secs_f64(delay_s),
+                    seq: self.timer_seq,
+                    req: run.req.id,
+                    node: v,
+                    epoch: run.epoch,
+                }));
+            } else {
+                self.deliver_dep(rt, run, v, pool, step);
+            }
+        }
+    }
+}
+
+/// Build the final response for a fully-executed request.
+fn finalize(run: ReqRun) -> ChatResponse {
+    let e2e = run.last_done.duration_since(run.submitted).as_secs_f64();
+    let ttft = match run.first_token {
+        Some(ft) => ft.duration_since(run.submitted).as_secs_f64(),
+        // No decode stages: time to completion (the simulator's rule).
+        None => e2e,
+    };
+    let tbt = if run.tbt_n > 0 {
+        run.tbt_sum_s / run.tbt_n as f64
+    } else {
+        0.0
+    };
+    let mut stages: Vec<StageSpan> = run.stages.into_iter().flatten().collect();
+    stages.sort_by(|a, b| {
+        a.start_s
+            .partial_cmp(&b.start_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    ChatResponse {
+        id: run.req.id,
+        output: run.output,
+        ttft_s: ttft,
+        tbt_mean_s: tbt,
+        e2e_s: e2e,
+        tokens: run.tokens,
+        rejected: false,
+        failed: false,
+        error: None,
+        stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::tests::tiny_plan;
+
+    #[test]
+    fn runtime_derives_units_and_pipes() {
+        let plan = tiny_plan();
+        let rt = DagRuntime::new(&plan, 1.0).unwrap();
+        assert_eq!(rt.topo.len(), 4);
+        assert_eq!(rt.units.len(), 1);
+        assert_eq!(rt.unit_ext_edges, vec![1]); // cpu input → prefill
+        assert_eq!(rt.prefill_pipes.len(), 1);
+        assert_eq!(rt.decode_pipes.len(), 2); // 2 replicas expanded
+        assert_eq!(rt.decode_pipes[0].chassis, 1);
+        assert_eq!(rt.decode_pipes[1].chassis, 2);
+    }
+
+    #[test]
+    fn runtime_rejects_unknown_model() {
+        let mut plan = tiny_plan();
+        plan.model = "unknown-model".into();
+        assert!(DagRuntime::new(&plan, 1.0).is_err());
+    }
+
+    #[test]
+    fn osl_scales_with_token_fraction() {
+        let mut plan = tiny_plan();
+        plan.bindings[2].token_fraction = 0.5;
+        let rt = DagRuntime::new(&plan, 1.0).unwrap();
+        assert_eq!(rt.osl_of(24, 2), 12);
+        assert_eq!(rt.osl_of(1, 2), 1, "floors at one token");
+        assert_eq!(rt.isl_of(100, 2), 50);
+    }
+}

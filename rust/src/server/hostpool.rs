@@ -1,0 +1,389 @@
+//! Bounded host-side worker pool: executes the CPU/tool/IO stages of
+//! live agent-DAG requests (the counterpart of the simulator's
+//! `cpu_workers` slot pool in `cluster/dag.rs`).
+//!
+//! Design: `capacity` OS threads pull [`HostTask`]s from one shared
+//! queue (`Mutex<Receiver>` — the lock is held only across the blocking
+//! `recv`, so exactly one idle worker waits at a time and hand-off is
+//! FIFO). Completions flow back to the dispatcher thread over an mpsc
+//! channel; the pool never blocks the serving loop. Task closures that
+//! panic are caught and surfaced as `Err`, so a hostile tool stage can
+//! fail its request but never leak a worker or wedge the dispatcher.
+//!
+//! The pool is resizable in place ([`HostPool::resize`]) — the server
+//! re-derives its size from each new `ExecutionPlan`'s `cpu_workers`
+//! on reconfiguration.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::Result;
+
+/// One unit of host work: node `node` of request `req`.
+pub struct HostTask {
+    pub req: u64,
+    pub node: usize,
+    /// Admission epoch of the owning run (see
+    /// [`crate::server::dag_exec`]): completions are ignored unless
+    /// the epoch still matches, so a stale completion from an earlier
+    /// serve session can never cross-apply to a request reusing an id.
+    pub epoch: u64,
+    /// The actual stage body (tool call, IO, pre/post-processing).
+    pub work: Box<dyn FnOnce() -> Result<()> + Send + 'static>,
+}
+
+/// Completion record delivered back to the dispatcher.
+#[derive(Debug)]
+pub struct HostDone {
+    pub req: u64,
+    pub node: usize,
+    pub epoch: u64,
+    pub result: Result<()>,
+    pub started: Instant,
+    pub finished: Instant,
+}
+
+enum Msg {
+    Task(HostTask),
+    Stop,
+}
+
+/// Shared pool counters (atomics — read from the dispatcher thread).
+#[derive(Debug, Default)]
+struct PoolStats {
+    /// Nanoseconds of task execution across all workers.
+    busy_ns: AtomicU64,
+    /// Tasks currently executing.
+    running: AtomicU64,
+    /// Max of `running` ever observed (capacity-bound witness).
+    high_watermark: AtomicU64,
+    /// Tasks finished (ok or err).
+    completed: AtomicU64,
+    /// Tasks submitted but not yet started.
+    queued: AtomicU64,
+    /// Workers currently alive vs the configured capacity. Workers
+    /// self-retire (CAS on `alive`) whenever `alive > target`, checked
+    /// after every task — so a shrink takes effect as soon as each
+    /// surplus worker finishes its current task, even under backlog.
+    alive: AtomicU64,
+    target: AtomicU64,
+}
+
+/// Retire this worker if the pool is over its target width.
+fn try_retire(stats: &PoolStats) -> bool {
+    let target = stats.target.load(Ordering::SeqCst);
+    loop {
+        let alive = stats.alive.load(Ordering::SeqCst);
+        if alive <= target {
+            return false;
+        }
+        if stats
+            .alive
+            .compare_exchange(alive, alive - 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// The bounded worker pool. See module docs.
+pub struct HostPool {
+    tx: mpsc::Sender<Msg>,
+    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    done_tx: mpsc::Sender<HostDone>,
+    handles: Vec<thread::JoinHandle<()>>,
+    capacity: usize,
+    stats: Arc<PoolStats>,
+    /// busy_ns already handed out by `take_busy_seconds`.
+    busy_taken_ns: u64,
+}
+
+impl HostPool {
+    /// Spawn `capacity` workers (≥ 1). Completions go out on `done_tx`.
+    pub fn new(capacity: usize, done_tx: mpsc::Sender<HostDone>) -> HostPool {
+        let capacity = capacity.max(1);
+        let (tx, rx) = mpsc::channel();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(PoolStats::default());
+        stats.target.store(capacity as u64, Ordering::SeqCst);
+        let mut pool = HostPool {
+            tx,
+            rx,
+            done_tx,
+            handles: Vec::new(),
+            capacity: 0,
+            stats,
+            busy_taken_ns: 0,
+        };
+        pool.spawn_workers(capacity);
+        pool.capacity = capacity;
+        pool
+    }
+
+    fn spawn_workers(&mut self, n: usize) {
+        for _ in 0..n {
+            let rx = Arc::clone(&self.rx);
+            let done = self.done_tx.clone();
+            let stats = Arc::clone(&self.stats);
+            stats.alive.fetch_add(1, Ordering::SeqCst);
+            self.handles.push(thread::spawn(move || loop {
+                // Hold the lock only for the blocking recv: one idle
+                // worker waits; the rest park on the mutex.
+                let msg = match rx.lock() {
+                    Ok(guard) => guard.recv(),
+                    Err(_) => break, // poisoned: pool is going away
+                };
+                match msg {
+                    Ok(Msg::Task(t)) => {
+                        stats.queued.fetch_sub(1, Ordering::SeqCst);
+                        let running = stats.running.fetch_add(1, Ordering::SeqCst) + 1;
+                        stats.high_watermark.fetch_max(running, Ordering::SeqCst);
+                        let started = Instant::now();
+                        let result =
+                            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                t.work,
+                            )) {
+                                Ok(r) => r,
+                                Err(_) => Err(crate::Error::Runtime(format!(
+                                    "host stage panicked (req {}, node {})",
+                                    t.req, t.node
+                                ))),
+                            };
+                        let finished = Instant::now();
+                        stats.busy_ns.fetch_add(
+                            finished.duration_since(started).as_nanos() as u64,
+                            Ordering::SeqCst,
+                        );
+                        stats.running.fetch_sub(1, Ordering::SeqCst);
+                        stats.completed.fetch_add(1, Ordering::SeqCst);
+                        // Dispatcher gone ⇒ nothing left to notify.
+                        let _ = done.send(HostDone {
+                            req: t.req,
+                            node: t.node,
+                            epoch: t.epoch,
+                            result,
+                            started,
+                            finished,
+                        });
+                        // Shrinks land here: a surplus worker exits as
+                        // soon as its current task is done, even when
+                        // the queue is deep.
+                        if try_retire(&stats) {
+                            break;
+                        }
+                    }
+                    // Stop is a wakeup for blocked workers; it only
+                    // retires this worker if the pool is still over
+                    // target (a busy worker may have retired already).
+                    Ok(Msg::Stop) => {
+                        if try_retire(&stats) {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+    }
+
+    /// Queue one task (FIFO; starts as soon as a worker frees up).
+    pub fn submit(&self, task: HostTask) {
+        self.stats.queued.fetch_add(1, Ordering::SeqCst);
+        // Send can only fail if every worker exited, which only happens
+        // on shutdown — the pool outlives all submitters by design.
+        let _ = self.tx.send(Msg::Task(task));
+    }
+
+    /// Grow or shrink the worker set. Shrinking is graceful but
+    /// prompt: surplus workers exit as soon as their *current* task
+    /// finishes (idle workers are woken to retire immediately) — they
+    /// do not keep draining a deep backlog at the old width.
+    pub fn resize(&mut self, new_capacity: usize) {
+        let new_capacity = new_capacity.max(1);
+        // Reap handles of workers that already self-retired so the
+        // vec tracks ~live workers across many resize cycles.
+        self.handles.retain(|h| !h.is_finished());
+        self.stats
+            .target
+            .store(new_capacity as u64, Ordering::SeqCst);
+        // Grow/shrink against the *live* worker count, not the old
+        // configured capacity: pending retirees from an earlier shrink
+        // count toward the new target (their try_retire now no-ops),
+        // so a shrink→grow sequence never overshoots the bound.
+        let alive = self.stats.alive.load(Ordering::SeqCst) as usize;
+        if new_capacity > alive {
+            self.spawn_workers(new_capacity - alive);
+        } else {
+            for _ in new_capacity..alive {
+                let _ = self.tx.send(Msg::Stop);
+            }
+        }
+        self.capacity = new_capacity;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tasks submitted but not yet started.
+    pub fn queued(&self) -> u64 {
+        self.stats.queued.load(Ordering::SeqCst)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.stats.completed.load(Ordering::SeqCst)
+    }
+
+    /// Max concurrently-running tasks ever observed.
+    pub fn high_watermark(&self) -> u64 {
+        self.stats.high_watermark.load(Ordering::SeqCst)
+    }
+
+    /// Total worker-busy seconds since construction.
+    pub fn busy_seconds(&self) -> f64 {
+        self.stats.busy_ns.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    /// Busy seconds accumulated since the last call (windowed
+    /// utilization for the orchestrator's live backend).
+    pub fn take_busy_seconds(&mut self) -> f64 {
+        let total = self.stats.busy_ns.load(Ordering::SeqCst);
+        let delta = total.saturating_sub(self.busy_taken_ns);
+        self.busy_taken_ns = total;
+        delta as f64 / 1e9
+    }
+}
+
+impl Drop for HostPool {
+    fn drop(&mut self) {
+        // Target 0 retires every worker (busy ones after their current
+        // task); the Stops wake anyone blocked on the empty queue.
+        self.stats.target.store(0, Ordering::SeqCst);
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn tasks_complete_and_report() {
+        let (done_tx, done_rx) = mpsc::channel();
+        let pool = HostPool::new(2, done_tx);
+        for i in 0..6u64 {
+            pool.submit(HostTask {
+                req: i,
+                node: 0,
+                epoch: 0,
+                work: Box::new(|| {
+                    thread::sleep(Duration::from_millis(1));
+                    Ok(())
+                }),
+            });
+        }
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(d.result.is_ok());
+            assert!(d.finished >= d.started);
+            seen.push(d.req);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert!(pool.high_watermark() <= 2);
+        assert_eq!(pool.completed(), 6);
+        assert!(pool.busy_seconds() > 0.0);
+    }
+
+    #[test]
+    fn panicking_task_fails_closed_and_pool_survives() {
+        let (done_tx, done_rx) = mpsc::channel();
+        let pool = HostPool::new(1, done_tx);
+        pool.submit(HostTask {
+            req: 1,
+            node: 0,
+            epoch: 0,
+            work: Box::new(|| panic!("hostile tool")),
+        });
+        pool.submit(HostTask {
+            req: 2,
+            node: 0,
+            epoch: 0,
+            work: Box::new(|| Ok(())),
+        });
+        let d1 = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(d1.result.is_err(), "panic must surface as Err");
+        let d2 = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(d2.result.is_ok(), "pool must survive a panicking task");
+        assert_eq!(d2.req, 2);
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks() {
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut pool = HostPool::new(1, done_tx);
+        assert_eq!(pool.capacity(), 1);
+        pool.resize(4);
+        assert_eq!(pool.capacity(), 4);
+        // 4 concurrent sleepers: with 4 workers they overlap.
+        for i in 0..4u64 {
+            pool.submit(HostTask {
+                req: i,
+                node: 0,
+                epoch: 0,
+                work: Box::new(|| {
+                    thread::sleep(Duration::from_millis(20));
+                    Ok(())
+                }),
+            });
+        }
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(70),
+            "grown pool must run sleepers in parallel"
+        );
+        pool.resize(1);
+        assert_eq!(pool.capacity(), 1);
+        // Still serves work after the shrink.
+        pool.submit(HostTask {
+            req: 9,
+            node: 0,
+            epoch: 0,
+            work: Box::new(|| Ok(())),
+        });
+        let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(d.req, 9);
+    }
+
+    #[test]
+    fn take_busy_seconds_is_windowed() {
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut pool = HostPool::new(1, done_tx);
+        pool.submit(HostTask {
+            req: 0,
+            node: 0,
+            epoch: 0,
+            work: Box::new(|| {
+                thread::sleep(Duration::from_millis(5));
+                Ok(())
+            }),
+        });
+        done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let first = pool.take_busy_seconds();
+        assert!(first > 0.0);
+        assert_eq!(pool.take_busy_seconds(), 0.0, "window must reset");
+    }
+}

@@ -1,21 +1,33 @@
 //! Serving front-end: the leader's request loop over the real PJRT
 //! engine (§4.1 objectives: scalability via batching, flexibility via
 //! channel-fed synchronous/asynchronous submission, composability via
-//! multi-turn sessions).
+//! multi-turn sessions) — now executing **full agent DAGs** per
+//! request, not just the LLM stages.
 //!
-//! * [`request`] — request/response types and SLA accounting;
+//! * [`request`] — request/response types, per-stage execution spans,
+//!   and SLA accounting;
 //! * [`session`] — multi-turn session store (history → prompt
 //!   assembly within the compiled prompt bucket);
+//! * [`hostpool`] — bounded worker pool for CPU/tool/IO stages (the
+//!   live counterpart of the simulator's `cpu_workers` slots);
+//! * [`dag_exec`] — per-request DAG traversal over an installed
+//!   [`crate::plan::ExecutionPlan`]: dependency tracking, engine
+//!   inference units, modeled cross-chassis transfers, failure
+//!   isolation;
 //! * [`serve`] — the serving loop: admission → continuous batcher →
-//!   prefill/decode on the engine → streamed responses, on std threads
+//!   prefill/decode on the engine (+ host-pool completions and
+//!   transfer timers in DAG mode) → streamed responses, on std threads
 //!   + mpsc (tokio is not in the offline registry; the event loop is a
-//!   single dispatcher thread with worker-side compute, which the tiny
-//!   CPU model saturates).
+//!   single dispatcher thread with worker-side host stages).
 
+pub mod dag_exec;
+pub mod hostpool;
 pub mod request;
 pub mod serve;
 pub mod session;
 
-pub use request::{ChatRequest, ChatResponse};
+pub use dag_exec::{DagRuntime, HostFault, LlmJob, UnitOutcome};
+pub use hostpool::{HostDone, HostPool, HostTask};
+pub use request::{ChatRequest, ChatResponse, StageSpan};
 pub use serve::{Server, ServerConfig};
 pub use session::SessionStore;

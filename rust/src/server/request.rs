@@ -11,6 +11,11 @@ pub struct ChatRequest {
     pub max_new_tokens: usize,
     /// 0.0 = greedy.
     pub temperature: f64,
+    /// Agent-graph class: `Some(agent)` asks the server to execute the
+    /// request through its installed `ExecutionPlan`'s full DAG (tool/
+    /// IO stages on the host pool, LLM stages on the engine). `None` is
+    /// the classic flat prefill→decode path.
+    pub agent: Option<String>,
 }
 
 impl ChatRequest {
@@ -21,7 +26,36 @@ impl ChatRequest {
             prompt: prompt.into(),
             max_new_tokens,
             temperature: 0.0,
+            agent: None,
         }
+    }
+
+    /// Same request, routed through the named agent graph.
+    pub fn with_agent(mut self, agent: impl Into<String>) -> ChatRequest {
+        self.agent = Some(agent.into());
+        self
+    }
+}
+
+/// One executed stage of an agent-DAG request: which plan binding ran,
+/// on which role, and when (offsets from request submission, seconds).
+/// Execution spans, not queue spans — `start_s` is when a worker or the
+/// engine picked the stage up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpan {
+    /// Binding index in the server's `ExecutionPlan`.
+    pub node: usize,
+    /// IR op name ("tool.search", "llm.decode", ...).
+    pub op: String,
+    /// "cpu" | "llm_prefill" | "llm_decode".
+    pub role: &'static str,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl StageSpan {
+    pub fn duration_s(&self) -> f64 {
+        (self.end_s - self.start_s).max(0.0)
     }
 }
 
@@ -39,6 +73,14 @@ pub struct ChatResponse {
     pub tokens: usize,
     /// Whether the request was rejected by admission control.
     pub rejected: bool,
+    /// Whether a stage failed mid-DAG (the request is terminated; the
+    /// dispatcher and every other request keep running).
+    pub failed: bool,
+    /// Failure detail when `failed`.
+    pub error: Option<String>,
+    /// Per-stage execution trace (agent-DAG requests only; empty on the
+    /// flat path).
+    pub stages: Vec<StageSpan>,
 }
 
 impl ChatResponse {
@@ -51,7 +93,31 @@ impl ChatResponse {
             e2e_s: 0.0,
             tokens: 0,
             rejected: true,
+            failed: false,
+            error: None,
+            stages: Vec::new(),
         }
+    }
+
+    /// A request terminated by a failing stage.
+    pub fn failed(id: u64, e2e_s: f64, error: impl Into<String>) -> ChatResponse {
+        ChatResponse {
+            id,
+            output: Vec::new(),
+            ttft_s: 0.0,
+            tbt_mean_s: 0.0,
+            e2e_s,
+            tokens: 0,
+            rejected: false,
+            failed: true,
+            error: Some(error.into()),
+            stages: Vec::new(),
+        }
+    }
+
+    /// Completed normally (admitted, no stage failure).
+    pub fn is_ok(&self) -> bool {
+        !self.rejected && !self.failed
     }
 
     /// Lossy text rendering of the output bytes.
@@ -70,6 +136,9 @@ mod tests {
         assert_eq!(r.prompt, b"hello");
         assert_eq!(r.max_new_tokens, 16);
         assert!(r.session.is_none());
+        assert!(r.agent.is_none());
+        let r = r.with_agent("voice_agent");
+        assert_eq!(r.agent.as_deref(), Some("voice_agent"));
     }
 
     #[test]
@@ -82,7 +151,33 @@ mod tests {
             e2e_s: 0.0,
             tokens: 3,
             rejected: false,
+            failed: false,
+            error: None,
+            stages: Vec::new(),
         };
         assert!(r.text().starts_with("hi"));
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn failure_states_are_distinct() {
+        assert!(ChatResponse::rejected(1).rejected);
+        assert!(!ChatResponse::rejected(1).failed);
+        let f = ChatResponse::failed(2, 0.5, "tool exploded");
+        assert!(f.failed && !f.rejected && !f.is_ok());
+        assert_eq!(f.error.as_deref(), Some("tool exploded"));
+        assert_eq!(f.e2e_s, 0.5);
+    }
+
+    #[test]
+    fn stage_span_duration() {
+        let s = StageSpan {
+            node: 3,
+            op: "tool.search".into(),
+            role: "cpu",
+            start_s: 0.5,
+            end_s: 0.9,
+        };
+        assert!((s.duration_s() - 0.4).abs() < 1e-12);
     }
 }

@@ -1,21 +1,31 @@
 //! The serving loop: channel-fed requests → admission → continuous
-//! batcher → PJRT prefill/decode → responses with SLA metrics.
+//! batcher → PJRT prefill/decode → responses with SLA metrics — and,
+//! when an [`ExecutionPlan`] is installed, **full agent-DAG execution**:
+//! a [`ChatRequest`] carrying an agent class traverses every plan
+//! binding, with CPU/tool/IO stages on the bounded [`HostPool`] and LLM
+//! stages batched onto the engine, mirroring the DAG simulator
+//! (`cluster/dag.rs`) in wall-clock time.
 //!
 //! Threading model (tokio is unavailable offline): callers submit
 //! [`ChatRequest`]s on an `mpsc::Sender` from any number of threads;
-//! one dispatcher thread owns the engine and runs the batch loop;
-//! responses return on a per-server `mpsc::Receiver`. The engine is the
-//! serialized resource — exactly the "one compiled executable per model
-//! variant" runtime of the paper's design.
+//! one dispatcher thread owns the engine and runs the event loop
+//! (intake → host completions → modeled transfer timers → batch
+//! execution); host stages run on the pool's worker threads and report
+//! back over a completion channel. The engine is the serialized
+//! resource — exactly the "one compiled executable per model variant"
+//! runtime of the paper's design.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::obs::MetricsRegistry;
+use crate::obs::{Counter, Histogram, MetricsRegistry};
+use crate::plan::ExecutionPlan;
 use crate::router::admission::{Admission, AdmissionConfig, AdmissionController};
 use crate::router::batcher::{Batcher, BatcherConfig};
 use crate::runtime::{Engine, Sampler};
+use crate::server::dag_exec::{DagDispatch, DagRuntime, HostFault, LlmJob, Step, UnitOutcome};
+use crate::server::hostpool::HostPool;
 use crate::server::request::{ChatRequest, ChatResponse};
 use crate::server::session::SessionStore;
 use crate::Result;
@@ -29,6 +39,12 @@ pub struct ServerConfig {
     pub max_new_tokens: usize,
     /// History budget per session, bytes.
     pub max_history: usize,
+    /// Host worker pool size for the CPU/tool/IO stages of agent DAGs
+    /// (derived from the plan's `cpu_workers`).
+    pub host_workers: u32,
+    /// Wall-clock seconds per modeled second for host-stage latencies
+    /// and cross-chassis edge transfers (tests shrink it to run fast).
+    pub time_scale: f64,
 }
 
 impl Default for ServerConfig {
@@ -38,6 +54,8 @@ impl Default for ServerConfig {
             admission: AdmissionConfig::default(),
             max_new_tokens: 24,
             max_history: 256,
+            host_workers: 4,
+            time_scale: 1.0,
         }
     }
 }
@@ -46,14 +64,15 @@ impl ServerConfig {
     /// Derive the serving knobs from an
     /// [`ExecutionPlan`](crate::plan::ExecutionPlan): the batcher
     /// (buckets, wait, decode cap — the planner aligns the cap with the
-    /// planned decode pipelines) and the admission token bucket come
-    /// from the same artifact the simulator executed. Engine-bound
-    /// limits (max tokens, history) stay server defaults: they follow
-    /// the compiled artifact set, not the plan.
-    pub fn from_plan(plan: &crate::plan::ExecutionPlan) -> ServerConfig {
+    /// planned decode pipelines), the admission token bucket, and the
+    /// host-pool sizing all come from the same artifact the simulator
+    /// executed. Engine-bound limits (max tokens, history) stay server
+    /// defaults: they follow the compiled artifact set, not the plan.
+    pub fn from_plan(plan: &ExecutionPlan) -> ServerConfig {
         ServerConfig {
             batch: plan.batcher_config(),
             admission: plan.admission_config(),
+            host_workers: plan.cpu_workers,
             ..ServerConfig::default()
         }
     }
@@ -64,12 +83,63 @@ struct InFlight {
     submitted: Instant,
 }
 
+/// Batcher payload: classic flat requests and agent-DAG LLM units share
+/// the same continuous batcher (and therefore the same engine batches).
+enum Work {
+    Flat(InFlight),
+    Dag(LlmJob),
+}
+
+/// Response-side plumbing shared by every dispatch site in the loop.
+struct Sinks<'a> {
+    tx: &'a mpsc::Sender<ChatResponse>,
+    m_tok: Arc<Counter>,
+    h_ttft: Arc<Histogram>,
+    h_e2e: Arc<Histogram>,
+}
+
+impl Sinks<'_> {
+    /// Route a dispatcher step: jobs to the batcher, responses out.
+    fn drain(&self, step: Step, batcher: &mut Batcher<Work>) -> bool {
+        let progressed = !step.jobs.is_empty() || !step.responses.is_empty();
+        for j in step.jobs {
+            batcher.push(Work::Dag(j));
+        }
+        for r in step.responses {
+            self.send(r);
+        }
+        progressed
+    }
+
+    fn send(&self, r: ChatResponse) {
+        // Rejections/failures carry no meaningful latency — recording
+        // their zeros would improve p50/p95 the more load is shed.
+        if r.is_ok() {
+            self.m_tok.add(r.tokens as u64);
+            self.h_ttft.record_secs(r.ttft_s);
+            self.h_e2e.record_secs(r.e2e_s);
+        }
+        let _ = self.tx.send(r);
+    }
+}
+
 /// The serving coordinator.
 pub struct Server {
     engine: Arc<Engine>,
     cfg: ServerConfig,
     pub metrics: Arc<MetricsRegistry>,
     sessions: SessionStore,
+    /// Plan-derived DAG execution structure (None = flat-only server).
+    dag: Option<DagRuntime>,
+    /// Host worker pool for CPU/tool/IO stages; persists across
+    /// `serve` calls and resizes on reconfiguration.
+    host: Option<HostPool>,
+    host_done: Option<mpsc::Receiver<crate::server::hostpool::HostDone>>,
+    fault: Option<HostFault>,
+    /// Engine busy-time accumulators per role since the last
+    /// [`Server::take_utilization`] (measured, wall-clock).
+    prefill_busy_s: f64,
+    decode_busy_s: f64,
 }
 
 impl Server {
@@ -80,32 +150,132 @@ impl Server {
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
             sessions: SessionStore::new(max_history),
+            dag: None,
+            host: None,
+            host_done: None,
+            fault: None,
+            prefill_busy_s: 0.0,
+            decode_busy_s: 0.0,
         }
     }
 
     /// Bring up a server configured by an execution plan (see
-    /// [`ServerConfig::from_plan`]).
+    /// [`ServerConfig::from_plan`]) with full agent-DAG execution
+    /// installed: requests carrying the plan's agent class traverse
+    /// every node binding.
     pub fn from_plan(
         engine: impl Into<Arc<Engine>>,
-        plan: &crate::plan::ExecutionPlan,
+        plan: &ExecutionPlan,
     ) -> Result<Server> {
-        plan.validate()?;
-        Ok(Server::new(engine, ServerConfig::from_plan(plan)))
+        let mut server = Server::new(engine, ServerConfig::from_plan(plan));
+        server.install_plan(plan)?;
+        Ok(server)
+    }
+
+    /// Install (or swap) the agent-DAG execution structure derived from
+    /// `plan`, bringing the host pool to `cfg.host_workers`. Fails
+    /// before any state changes if the plan cannot execute live.
+    pub fn install_plan(&mut self, plan: &ExecutionPlan) -> Result<()> {
+        let rt = DagRuntime::new(plan, self.cfg.time_scale)?;
+        self.install_runtime(rt);
+        Ok(())
+    }
+
+    fn install_runtime(&mut self, rt: DagRuntime) {
+        match self.host.as_mut() {
+            Some(pool) => pool.resize(self.cfg.host_workers.max(1) as usize),
+            None => {
+                let (done_tx, done_rx) = mpsc::channel();
+                self.host = Some(HostPool::new(
+                    self.cfg.host_workers.max(1) as usize,
+                    done_tx,
+                ));
+                self.host_done = Some(done_rx);
+            }
+        }
+        self.dag = Some(rt);
     }
 
     /// Swap the serving policy between workloads — the orchestrator's
     /// live backend applies each re-planned `ExecutionPlan` this way.
-    /// Takes effect at the next [`Server::serve`] / [`Server::run_workload`]
-    /// call (the batcher and admission controller are rebuilt from the
-    /// config there); sessions and metrics persist across the swap.
+    /// Batcher and admission take effect at the next [`Server::serve`] /
+    /// [`Server::run_workload`] call; the host pool resizes immediately
+    /// to the new config's `host_workers` (the sizing the new plan
+    /// derived from its `cpu_workers`). Sessions and metrics persist
+    /// across the swap.
     pub fn reconfigure(&mut self, cfg: ServerConfig) {
         self.sessions.max_history = cfg.max_history;
+        if let Some(pool) = self.host.as_mut() {
+            pool.resize(cfg.host_workers.max(1) as usize);
+        }
         self.cfg = cfg;
+    }
+
+    /// Full live re-plan: serving policy *and* the DAG execution
+    /// structure (topology, units, virtual fleet, host-pool sizing)
+    /// follow the new plan. Engine-bound limits and the time scale are
+    /// preserved from the current config. All-or-nothing: an
+    /// unexecutable plan fails before any policy or pool state changes.
+    pub fn reconfigure_plan(&mut self, plan: &ExecutionPlan) -> Result<()> {
+        let mut cfg = ServerConfig::from_plan(plan);
+        cfg.max_new_tokens = self.cfg.max_new_tokens;
+        cfg.max_history = self.cfg.max_history;
+        cfg.time_scale = self.cfg.time_scale;
+        let rt = DagRuntime::new(plan, cfg.time_scale)?;
+        self.reconfigure(cfg);
+        self.install_runtime(rt);
+        Ok(())
     }
 
     /// The active serving configuration.
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// The installed execution plan, if any.
+    pub fn plan(&self) -> Option<&ExecutionPlan> {
+        self.dag.as_ref().map(|rt| &rt.plan)
+    }
+
+    /// Current host-pool capacity (None = no plan installed).
+    pub fn host_capacity(&self) -> Option<usize> {
+        self.host.as_ref().map(|p| p.capacity())
+    }
+
+    /// Max concurrently-running host stages ever observed.
+    pub fn host_high_watermark(&self) -> u64 {
+        self.host.as_ref().map(|p| p.high_watermark()).unwrap_or(0)
+    }
+
+    /// Install a host-stage fault hook (`(op, request id) -> fail?`) —
+    /// failure-injection tests prove a failing tool node terminates
+    /// only its request.
+    pub fn inject_host_fault(
+        &mut self,
+        f: impl Fn(&str, u64) -> bool + Send + Sync + 'static,
+    ) {
+        self.fault = Some(Arc::new(f));
+    }
+
+    /// Measured per-role utilization over the last `window_s` seconds:
+    /// (prefill, decode, host) busy fractions, from the engine's timed
+    /// stage execution and the host pool's worker busy-time. Resets the
+    /// accumulators — the orchestrator's live backend calls this once
+    /// per observation window.
+    pub fn take_utilization(&mut self, window_s: f64) -> (f64, f64, f64) {
+        let w = window_s.max(1e-9);
+        let pre = (self.prefill_busy_s / w).clamp(0.0, 1.0);
+        let dec = (self.decode_busy_s / w).clamp(0.0, 1.0);
+        self.prefill_busy_s = 0.0;
+        self.decode_busy_s = 0.0;
+        let host = match self.host.as_mut() {
+            Some(p) => {
+                let cap = p.capacity().max(1) as f64;
+                (p.take_busy_seconds() / (w * cap)).clamp(0.0, 1.0)
+            }
+            None => 0.0,
+        };
+        (pre, dec, host)
     }
 
     /// Serve until `rx` disconnects and all queued work drains. Designed
@@ -115,32 +285,61 @@ impl Server {
         rx: mpsc::Receiver<ChatRequest>,
         tx: mpsc::Sender<ChatResponse>,
     ) -> Result<()> {
-        let mut batcher: Batcher<InFlight> = Batcher::new(self.cfg.batch.clone());
+        let mut batcher: Batcher<Work> = Batcher::new(self.cfg.batch.clone());
         let mut admission = AdmissionController::new(self.cfg.admission.clone());
         let m_req = self.metrics.counter("server_requests");
         let m_rej = self.metrics.counter("server_rejected");
-        let m_tok = self.metrics.counter("server_tokens_out");
         let m_batches = self.metrics.counter("server_batches");
-        let h_ttft = self.metrics.histogram("server_ttft");
-        let h_e2e = self.metrics.histogram("server_e2e");
         let g_depth = self.metrics.gauge("server_queue_depth");
+        let g_host_queue = self.metrics.gauge("server_host_queue");
+        let sinks = Sinks {
+            tx: &tx,
+            m_tok: self.metrics.counter("server_tokens_out"),
+            h_ttft: self.metrics.histogram("server_ttft"),
+            h_e2e: self.metrics.histogram("server_e2e"),
+        };
+        let mut dispatch = self
+            .dag
+            .as_ref()
+            .map(|rt| DagDispatch::new(rt, self.metrics.clone(), self.fault.clone()));
 
         let mut open = true;
-        while open || !batcher.is_empty() {
-            // Pull everything currently available (bounded wait so the
-            // batcher timeout keeps ticking).
+        // Flat requests waiting in the batcher (DAG requests are
+        // admission-counted once via `dispatch.in_flight()`; counting
+        // their queued LLM units too would double-charge them).
+        let mut flat_queued = 0usize;
+        loop {
+            let mut progressed = false;
+            // ---- intake: pull everything currently available (bounded
+            // wait so batcher/transfer timeouts keep ticking) ---------
             loop {
                 match rx.recv_timeout(Duration::from_millis(1)) {
                     Ok(req) => {
+                        progressed = true;
                         m_req.inc();
-                        match admission.admit(Instant::now(), batcher.len()) {
-                            Admission::Accept => batcher.push(InFlight {
-                                req,
-                                submitted: Instant::now(),
-                            }),
+                        // Queue depth covers both execution paths:
+                        // flat requests queued for the engine plus
+                        // admitted-but-unfinished DAG requests (host-
+                        // heavy plans never touch the batcher, yet
+                        // must still shed load; each DAG request is
+                        // counted exactly once).
+                        let depth = flat_queued
+                            + dispatch.as_ref().map_or(0, |d| d.in_flight());
+                        match admission.admit(Instant::now(), depth) {
+                            Admission::Accept => {
+                                if req.agent.is_some() {
+                                    self.admit_dag(req, &mut dispatch, &sinks, &mut batcher);
+                                } else {
+                                    flat_queued += 1;
+                                    batcher.push(Work::Flat(InFlight {
+                                        req,
+                                        submitted: Instant::now(),
+                                    }));
+                                }
+                            }
                             _ => {
                                 m_rej.inc();
-                                let _ = tx.send(ChatResponse::rejected(req_id(&req)));
+                                sinks.send(ChatResponse::rejected(req.id));
                             }
                         }
                     }
@@ -151,24 +350,104 @@ impl Server {
                     }
                 }
             }
+
+            // ---- host-pool completions and modeled transfers --------
+            if let (Some(rt), Some(d), Some(done_rx), Some(pool)) = (
+                self.dag.as_ref(),
+                dispatch.as_mut(),
+                self.host_done.as_ref(),
+                self.host.as_ref(),
+            ) {
+                while let Ok(hd) = done_rx.try_recv() {
+                    progressed = true;
+                    let step = d.on_host_done(rt, hd, pool);
+                    sinks.drain(step, &mut batcher);
+                }
+                let step = d.poll_timers(rt, Instant::now(), pool);
+                progressed |= sinks.drain(step, &mut batcher);
+                g_host_queue.set(pool.queued() as f64);
+            }
             g_depth.set(batcher.len() as f64);
 
-            let Some(batch) = batcher.poll(Instant::now()) else {
-                if !open && batcher.is_empty() {
-                    break;
+            // ---- engine batch ---------------------------------------
+            if let Some(batch) = batcher.poll(Instant::now()) {
+                progressed = true;
+                m_batches.inc();
+                let mut flat = Vec::new();
+                let mut dag = Vec::new();
+                for w in batch.members {
+                    match w {
+                        Work::Flat(f) => flat.push(f),
+                        Work::Dag(j) => dag.push(j),
+                    }
                 }
-                continue;
-            };
-            m_batches.inc();
-            let responses = self.run_batch(batch.members)?;
-            for r in responses {
-                m_tok.add(r.tokens as u64);
-                h_ttft.record_secs(r.ttft_s);
-                h_e2e.record_secs(r.e2e_s);
-                let _ = tx.send(r);
+                flat_queued = flat_queued.saturating_sub(flat.len());
+                if !flat.is_empty() {
+                    for r in self.run_batch(flat)? {
+                        sinks.send(r);
+                    }
+                }
+                if !dag.is_empty() {
+                    let outcomes = self.run_dag_batch(dag)?;
+                    if let (Some(rt), Some(d), Some(pool)) =
+                        (self.dag.as_ref(), dispatch.as_mut(), self.host.as_ref())
+                    {
+                        let step = d.finish_units(rt, outcomes, pool);
+                        sinks.drain(step, &mut batcher);
+                    }
+                }
+            }
+
+            // ---- exit / idle ----------------------------------------
+            let dag_in_flight = dispatch.as_ref().map_or(0, |d| d.in_flight());
+            if !open && batcher.is_empty() && dag_in_flight == 0 {
+                break;
+            }
+            if !progressed {
+                // Waiting on host workers or a modeled transfer: park
+                // briefly instead of spinning the dispatcher.
+                std::thread::sleep(Duration::from_micros(200));
             }
         }
         Ok(())
+    }
+
+    /// Intake path for an agent-class request.
+    fn admit_dag(
+        &self,
+        req: ChatRequest,
+        dispatch: &mut Option<DagDispatch>,
+        sinks: &Sinks<'_>,
+        batcher: &mut Batcher<Work>,
+    ) {
+        let serveable = match (self.dag.as_ref(), dispatch.as_ref()) {
+            (Some(rt), Some(_)) => req.agent.as_deref() == Some(rt.plan.agent.as_str()),
+            _ => false,
+        };
+        if !serveable {
+            let agent = req.agent.clone().unwrap_or_default();
+            sinks.send(ChatResponse::failed(
+                req.id,
+                0.0,
+                format!("no installed plan serves agent `{agent}`"),
+            ));
+            return;
+        }
+        // Duplicate in-flight ids would cross-apply host completions
+        // between requests; fail the newcomer closed instead.
+        if dispatch.as_ref().is_some_and(|d| d.contains(req.id)) {
+            sinks.send(ChatResponse::failed(
+                req.id,
+                0.0,
+                format!("request id {} is already in flight", req.id),
+            ));
+            return;
+        }
+        let rt = self.dag.as_ref().expect("checked above");
+        let d = dispatch.as_mut().expect("checked above");
+        let pool = self.host.as_ref().expect("plan install creates the pool");
+        let step = d.admit(rt, req, Instant::now(), pool);
+        sinks.drain(step, batcher);
     }
 
     /// Synchronous convenience: submit a fixed workload, get responses.
@@ -185,7 +464,7 @@ impl Server {
         Ok(out)
     }
 
-    /// Execute one prefill+decode batch to completion.
+    /// Execute one flat prefill+decode batch to completion.
     fn run_batch(&mut self, members: Vec<InFlight>) -> Result<Vec<ChatResponse>> {
         let seq_budget = self.engine.manifest.prefill_seq;
         let prompts: Vec<Vec<u8>> = members
@@ -194,6 +473,8 @@ impl Server {
             .collect();
         let t_batch0 = Instant::now();
         let pre = self.engine.prefill(&prompts)?;
+        let t_prefill_end = Instant::now();
+        self.prefill_busy_s += t_prefill_end.duration_since(t_batch0).as_secs_f64();
         let mut kv = pre.kv;
         let n = members.len();
         let bucket = kv.bucket;
@@ -214,10 +495,14 @@ impl Server {
         let mut last_token_at: Vec<Instant> = vec![t_batch0; n];
         let mut gaps: Vec<Vec<f64>> = vec![Vec::new(); n];
 
-        // First token from prefill logits.
+        // First token from prefill logits (zero-budget requests emit
+        // nothing, matching the DAG path's `osl > 0` guard).
         let now = Instant::now();
-        let mut next: Vec<u8> = vec![0; bucket];
+        let mut next: Vec<u8> = vec![0; bucket.max(n)];
         for i in 0..n {
+            if members[i].req.max_new_tokens == 0 {
+                continue;
+            }
             let tok = samplers[i].sample(&pre.logits[i]) as u8;
             next[i] = tok;
             outputs[i].push(tok);
@@ -234,8 +519,10 @@ impl Server {
             .unwrap_or(0)
             .min(self.engine.manifest.max_seq - seq_budget - 1);
         for _round in 0..max_rounds {
+            let t_r0 = Instant::now();
             let logits = self.engine.decode_step(&mut kv, &next)?;
             let now = Instant::now();
+            self.decode_busy_s += now.duration_since(t_r0).as_secs_f64();
             for i in 0..n {
                 if outputs[i].len() >= members[i].req.max_new_tokens {
                     continue;
@@ -269,17 +556,108 @@ impl Server {
                 e2e_s: e2e,
                 tokens: outputs[i].len(),
                 rejected: false,
+                failed: false,
+                error: None,
+                stages: Vec::new(),
             });
         }
         Ok(responses)
     }
+
+    /// Execute one batch of agent-DAG LLM units: prefill the batch,
+    /// then continuous decode rounds until every unit hit its budget.
+    fn run_dag_batch(&mut self, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
+        let seq_budget = self.engine.manifest.prefill_seq;
+        let prompts: Vec<Vec<u8>> = jobs
+            .iter()
+            .map(|j| {
+                if j.prompt.len() > seq_budget {
+                    j.prompt[j.prompt.len() - seq_budget..].to_vec()
+                } else {
+                    j.prompt.clone()
+                }
+            })
+            .collect();
+        let t0 = Instant::now();
+        let pre = self.engine.prefill(&prompts)?;
+        let prefill_end = Instant::now();
+        self.prefill_busy_s += prefill_end.duration_since(t0).as_secs_f64();
+        let mut kv = pre.kv;
+        let n = jobs.len();
+
+        let mut samplers: Vec<Sampler> = jobs
+            .iter()
+            .map(|j| {
+                if j.temperature > 0.0 {
+                    Sampler::new(j.temperature, 0, j.req)
+                } else {
+                    Sampler::greedy()
+                }
+            })
+            .collect();
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
+        let mut next: Vec<u8> = vec![0; kv.bucket.max(n)];
+        let mut first_token: Vec<Option<Instant>> = vec![None; n];
+        let mut last_token: Vec<Instant> = vec![prefill_end; n];
+        let mut tbt_sum = vec![0.0f64; n];
+        let mut tbt_n = vec![0u64; n];
+        for i in 0..n {
+            if jobs[i].osl > 0 {
+                let tok = samplers[i].sample(&pre.logits[i]) as u8;
+                next[i] = tok;
+                outputs[i].push(tok);
+                first_token[i] = Some(prefill_end);
+            }
+        }
+        let budget_cap = self
+            .engine
+            .manifest
+            .max_seq
+            .saturating_sub(seq_budget)
+            .saturating_sub(1);
+        let max_rounds = jobs
+            .iter()
+            .map(|j| j.osl.saturating_sub(1))
+            .max()
+            .unwrap_or(0)
+            .min(budget_cap);
+        for _round in 0..max_rounds {
+            let t_r0 = Instant::now();
+            let logits = self.engine.decode_step(&mut kv, &next)?;
+            let now = Instant::now();
+            self.decode_busy_s += now.duration_since(t_r0).as_secs_f64();
+            for i in 0..n {
+                if outputs[i].len() >= jobs[i].osl {
+                    continue;
+                }
+                let tok = samplers[i].sample(&logits[i]) as u8;
+                next[i] = tok;
+                outputs[i].push(tok);
+                tbt_sum[i] += now.duration_since(last_token[i]).as_secs_f64();
+                tbt_n[i] += 1;
+                last_token[i] = now;
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(n);
+        for (i, job) in jobs.into_iter().enumerate() {
+            outcomes.push(UnitOutcome {
+                job,
+                started: t0,
+                prefill_end,
+                first_token: first_token[i],
+                last_token: last_token[i],
+                output: std::mem::take(&mut outputs[i]),
+                tbt_sum_s: tbt_sum[i],
+                tbt_n: tbt_n[i],
+            });
+        }
+        Ok(outcomes)
+    }
 }
 
-fn req_id(r: &ChatRequest) -> u64 {
-    r.id
-}
-
-// Engine-backed tests live in rust/tests/runtime_e2e.rs (need artifacts).
+// Engine-backed tests live in rust/tests/runtime_e2e.rs (need artifacts)
+// and rust/tests/sim_vs_live.rs (synthetic engine, non-pjrt builds).
 
 #[cfg(test)]
 mod tests {
@@ -297,6 +675,7 @@ mod tests {
             cfg.admission.max_queue_depth,
             plan.admission.max_queue_depth
         );
+        assert_eq!(cfg.host_workers, plan.cpu_workers);
         // Engine-independent defaults survive.
         assert_eq!(cfg.max_new_tokens, ServerConfig::default().max_new_tokens);
     }
@@ -304,28 +683,9 @@ mod tests {
     #[test]
     #[cfg(not(feature = "pjrt"))]
     fn reconfigure_swaps_policy_between_requests() {
-        use crate::runtime::manifest::Manifest;
         use crate::runtime::Engine;
 
-        // The stub engine can't load artifacts, but reconfiguration is
-        // pure policy state — construct the server around a manifest-only
-        // engine the same way the live orchestrator backend does.
-        let engine = Engine {
-            manifest: Manifest {
-                dir: std::path::PathBuf::new(),
-                vocab: 256,
-                d_model: 64,
-                n_layers: 2,
-                n_heads: 2,
-                n_kv_heads: 2,
-                head_dim: 32,
-                max_seq: 128,
-                prefill_seq: 64,
-                buckets: vec![1, 2, 4],
-                num_params: 1_000,
-                kv_cache_bytes_b1: 1_024,
-            },
-        };
+        let engine = Engine::synthetic_default();
         let mut server = Server::new(engine, ServerConfig::default());
         assert_eq!(server.config().admission.rate, 1000.0);
 
@@ -336,5 +696,103 @@ mod tests {
         assert_eq!(server.config().admission.rate, 333.0);
         assert_eq!(server.config().batch.max_decode_batch, 9);
         assert_eq!(server.sessions.max_history, ServerConfig::default().max_history);
+    }
+
+    /// Regression (PR 3): reconfiguration must also swap the host-pool
+    /// sizing derived from the new plan, not just batcher/admission.
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn reconfigure_resizes_host_pool_from_plan() {
+        use crate::runtime::Engine;
+
+        let mut plan_a = crate::plan::tests::tiny_plan();
+        plan_a.cpu_workers = 2;
+        let mut server =
+            Server::from_plan(Engine::synthetic_default(), &plan_a).unwrap();
+        assert_eq!(server.host_capacity(), Some(2));
+
+        let mut plan_b = crate::plan::tests::tiny_plan();
+        plan_b.cpu_workers = 6;
+        server.reconfigure(ServerConfig::from_plan(&plan_b));
+        assert_eq!(
+            server.host_capacity(),
+            Some(6),
+            "host pool must follow the new plan's cpu_workers"
+        );
+
+        // And the full-plan path keeps pool + DAG structure in step.
+        let mut plan_c = crate::plan::tests::tiny_plan();
+        plan_c.cpu_workers = 3;
+        server.reconfigure_plan(&plan_c).unwrap();
+        assert_eq!(server.host_capacity(), Some(3));
+        assert_eq!(server.plan().unwrap().cpu_workers, 3);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn dag_workload_runs_end_to_end_on_synthetic_engine() {
+        use crate::runtime::Engine;
+
+        let mut plan = crate::plan::tests::tiny_plan();
+        plan.cpu_workers = 2;
+        let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+        // Keep modeled sleeps/transfers tiny so the test is fast.
+        let mut cfg = server.config().clone();
+        cfg.time_scale = 1e-3;
+        server.reconfigure(cfg);
+        server.install_plan(&plan).unwrap();
+
+        let reqs: Vec<ChatRequest> = (0..6u64)
+            .map(|i| {
+                ChatRequest::new(i, format!("request {i} says "), 8)
+                    .with_agent(plan.agent.clone())
+            })
+            .collect();
+        let responses = server.run_workload(reqs).unwrap();
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(r.tokens, 8, "decode budget must be honoured");
+            assert_eq!(r.stages.len(), 4, "all four plan nodes must run");
+            assert!(r.e2e_s >= r.ttft_s);
+            assert!(r.ttft_s > 0.0);
+            // Dependency order: each stage starts at/after its
+            // predecessors end (cpu → prefill → decode → cpu).
+            let by_node: std::collections::BTreeMap<usize, _> =
+                r.stages.iter().map(|s| (s.node, s)).collect();
+            assert!(by_node[&0].end_s <= by_node[&1].start_s + 1e-9);
+            assert!(by_node[&1].end_s <= by_node[&2].start_s + 1e-9);
+            assert!(by_node[&2].end_s <= by_node[&3].start_s + 1e-9);
+        }
+        // Per-role execution counters: one prefill, one decode, two
+        // cpu stages per request.
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap["server_prefill_jobs"], 6.0);
+        assert_eq!(snap["server_decode_jobs"], 6.0);
+        assert_eq!(snap["server_host_jobs"], 12.0);
+        // Measured utilization is live and sane.
+        let (pre, dec, host) = server.take_utilization(1.0);
+        assert!((0.0..=1.0).contains(&pre));
+        assert!((0.0..=1.0).contains(&dec));
+        assert!(host > 0.0, "host pool did run stages");
+        assert!(host <= 1.0);
+        assert!(server.host_high_watermark() <= 2);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn agent_request_without_plan_fails_closed() {
+        use crate::runtime::Engine;
+
+        let mut server = Server::new(Engine::synthetic_default(), ServerConfig::default());
+        let req = ChatRequest::new(1, "hi", 4).with_agent("ghost_agent");
+        let responses = server.run_workload(vec![req]).unwrap();
+        assert_eq!(responses.len(), 1);
+        assert!(responses[0].failed);
+        assert!(responses[0]
+            .error
+            .as_deref()
+            .unwrap()
+            .contains("ghost_agent"));
     }
 }

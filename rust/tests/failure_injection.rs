@@ -215,6 +215,193 @@ fn fabric_rejects_out_of_range_addresses() {
     }
 }
 
+/// A failing tool node in the *live* DAG path fails only its own
+/// request: every other request completes, the dispatcher never wedges,
+/// and the server keeps serving subsequent workloads.
+#[test]
+#[cfg(not(feature = "pjrt"))]
+fn live_tool_stage_failure_isolates_request() {
+    use agentic_hetero::plan::{
+        AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, SlaSpec,
+        Stage,
+    };
+    use agentic_hetero::runtime::Engine;
+    use agentic_hetero::server::{ChatRequest, Server};
+
+    let cpu = |op: &str, latency_s: f64, deps: Vec<usize>| NodeBinding {
+        op: op.into(),
+        class: "CPU".into(),
+        stage: Stage::Cpu,
+        latency_s,
+        cost_usd: 0.0,
+        deps,
+        xfer_bytes: 0.0,
+        token_fraction: 1.0,
+    };
+    let plan = ExecutionPlan {
+        agent: "flaky_agent".into(),
+        model: String::new(),
+        sla: SlaSpec::None,
+        bindings: vec![
+            cpu("io.input", 0.0002, vec![]),
+            cpu("tool.flaky", 0.001, vec![0]),
+            cpu("io.output", 0.0002, vec![1]),
+        ],
+        pipelines: vec![],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 2,
+        cost_usd: 0.0,
+        latency_s: 0.002,
+        pass_log: vec![],
+    };
+    let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    // Request 3's tool call fails; everyone else is fine.
+    server.inject_host_fault(|op, req| op == "tool.flaky" && req == 3);
+
+    let reqs: Vec<ChatRequest> = (0..8u64)
+        .map(|i| ChatRequest::new(i, "x", 4).with_agent("flaky_agent"))
+        .collect();
+    let responses = server.run_workload(reqs).unwrap();
+    assert_eq!(responses.len(), 8, "every request must get a response");
+    for r in &responses {
+        if r.id == 3 {
+            assert!(r.failed, "request 3 must fail");
+            assert!(!r.rejected);
+            assert!(
+                r.error.as_deref().unwrap().contains("tool.flaky"),
+                "{:?}",
+                r.error
+            );
+        } else {
+            assert!(r.is_ok(), "request {} must survive: {:?}", r.id, r.error);
+            assert_eq!(r.stages.len(), 3);
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap["server_stage_failures"], 1.0);
+
+    // The dispatcher is not wedged: a second workload still serves.
+    let reqs: Vec<ChatRequest> = (10..14u64)
+        .map(|i| ChatRequest::new(i, "y", 4).with_agent("flaky_agent"))
+        .collect();
+    let responses = server.run_workload(reqs).unwrap();
+    assert_eq!(responses.len(), 4);
+    assert!(responses.iter().all(|r| r.is_ok()));
+}
+
+/// A fault on an upstream IO stage must prevent downstream stages of
+/// that request from running at all (fail fast, no orphan work), while
+/// the LLM path of other requests keeps flowing.
+#[test]
+#[cfg(not(feature = "pjrt"))]
+fn live_io_failure_skips_downstream_stages() {
+    use agentic_hetero::runtime::Engine;
+    use agentic_hetero::server::{ChatRequest, Server};
+
+    // tiny_plan shape from public types: cpu → prefill → decode → cpu.
+    let plan = {
+        use agentic_hetero::plan::{
+            AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding,
+            PipelineBinding, Role, SlaSpec, Stage,
+        };
+        ExecutionPlan {
+            agent: "io_agent".into(),
+            model: "8b-fp16".into(),
+            sla: SlaSpec::None,
+            bindings: vec![
+                NodeBinding {
+                    op: "io.input".into(),
+                    class: "CPU".into(),
+                    stage: Stage::Cpu,
+                    latency_s: 0.0002,
+                    cost_usd: 0.0,
+                    deps: vec![],
+                    xfer_bytes: 0.0,
+                    token_fraction: 1.0,
+                },
+                NodeBinding {
+                    op: "llm.prefill".into(),
+                    class: "H100".into(),
+                    stage: Stage::LlmPrefill,
+                    latency_s: 0.03,
+                    cost_usd: 1e-5,
+                    deps: vec![0],
+                    xfer_bytes: 1e6,
+                    token_fraction: 1.0,
+                },
+                NodeBinding {
+                    op: "llm.decode".into(),
+                    class: "H100".into(),
+                    stage: Stage::LlmDecode,
+                    latency_s: 0.3,
+                    cost_usd: 2e-5,
+                    deps: vec![1],
+                    xfer_bytes: 1e7,
+                    token_fraction: 1.0,
+                },
+                NodeBinding {
+                    op: "io.output".into(),
+                    class: "CPU".into(),
+                    stage: Stage::Cpu,
+                    latency_s: 0.0002,
+                    cost_usd: 0.0,
+                    deps: vec![2],
+                    xfer_bytes: 0.0,
+                    token_fraction: 1.0,
+                },
+            ],
+            pipelines: vec![
+                PipelineBinding {
+                    role: Role::Prefill,
+                    device: "H100".into(),
+                    tp: 1,
+                    pp: 1,
+                    max_batch: 8,
+                    replicas: 1,
+                    chassis: 0,
+                },
+                PipelineBinding {
+                    role: Role::Decode,
+                    device: "H100".into(),
+                    tp: 1,
+                    pp: 1,
+                    max_batch: 8,
+                    replicas: 1,
+                    chassis: 1,
+                },
+            ],
+            batching: BatchPolicy::default(),
+            admission: AdmissionPolicy::default(),
+            fabric: FabricSpec::default(),
+            cpu_workers: 2,
+            cost_usd: 3e-5,
+            latency_s: 0.33,
+            pass_log: vec![],
+        }
+    };
+    let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    server.inject_host_fault(|op, req| op == "io.input" && req == 0);
+
+    let reqs: Vec<ChatRequest> = (0..4u64)
+        .map(|i| ChatRequest::new(i, "hello engine ", 6).with_agent("io_agent"))
+        .collect();
+    let responses = server.run_workload(reqs).unwrap();
+    assert_eq!(responses.len(), 4);
+    assert!(responses[0].failed);
+    assert_eq!(responses[0].tokens, 0, "no LLM work for the failed request");
+    for r in &responses[1..] {
+        assert!(r.is_ok());
+        assert_eq!(r.tokens, 6);
+        assert_eq!(r.stages.len(), 4);
+    }
+    // The failed request never reached the engine: 3 prefill jobs only.
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap["server_prefill_jobs"], 3.0);
+    assert_eq!(snap["server_decode_jobs"], 3.0);
+}
+
 #[test]
 fn config_parser_hostile_inputs() {
     use agentic_hetero::config::{parse, DeployConfig};

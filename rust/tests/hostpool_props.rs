@@ -1,0 +1,270 @@
+//! Property tests for the live host pool and agent-DAG dispatcher:
+//!
+//! * arbitrary task storms complete, and concurrently-running tasks
+//!   never exceed the pool's capacity;
+//! * arbitrary CPU-only agent DAGs executed through the live server
+//!   never deadlock and always respect dependency order;
+//! * bounded workers never exceed the plan's host capacity, across
+//!   resizes.
+//!
+//! Gated off pjrt builds: the server side runs on the synthetic engine.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use agentic_hetero::plan::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, SlaSpec, Stage,
+};
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, ChatResponse, HostPool, HostTask, Server};
+use agentic_hetero::util::prop::check_cases;
+use agentic_hetero::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Pool-level properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_storms_complete_within_capacity() {
+    check_cases("pool-storm", 16, &mut |rng: &mut Rng| {
+        let capacity = rng.range(1, 5) as usize; // 1..=4
+        let n_tasks = rng.range(1, 25) as usize; // 1..=24
+        let (done_tx, done_rx) = mpsc::channel();
+        let pool = HostPool::new(capacity, done_tx);
+        for i in 0..n_tasks {
+            let sleep_us = rng.range(0, 1500);
+            pool.submit(HostTask {
+                req: i as u64,
+                node: 0,
+                epoch: 0,
+                work: Box::new(move || {
+                    if sleep_us > 0 {
+                        thread::sleep(Duration::from_micros(sleep_us));
+                    }
+                    Ok(())
+                }),
+            });
+        }
+        for _ in 0..n_tasks {
+            let d = done_rx
+                .recv_timeout(Duration::from_secs(20))
+                .expect("pool must drain every task");
+            assert!(d.result.is_ok());
+        }
+        assert_eq!(pool.completed(), n_tasks as u64);
+        assert!(
+            pool.high_watermark() <= capacity as u64,
+            "watermark {} exceeded capacity {capacity}",
+            pool.high_watermark()
+        );
+    });
+}
+
+#[test]
+fn pool_resize_preserves_capacity_bound() {
+    check_cases("pool-resize", 8, &mut |rng: &mut Rng| {
+        let (done_tx, done_rx) = mpsc::channel();
+        let first = rng.range(1, 4) as usize;
+        let mut pool = HostPool::new(first, done_tx);
+        let mut max_cap = first;
+        let mut total = 0u64;
+        for _round in 0..3 {
+            let cap = rng.range(1, 5) as usize;
+            pool.resize(cap);
+            max_cap = max_cap.max(cap);
+            let n = rng.range(1, 8);
+            for i in 0..n {
+                pool.submit(HostTask {
+                    req: i,
+                    node: 0,
+                    epoch: 0,
+                    work: Box::new(|| {
+                        thread::sleep(Duration::from_micros(200));
+                        Ok(())
+                    }),
+                });
+            }
+            for _ in 0..n {
+                done_rx
+                    .recv_timeout(Duration::from_secs(20))
+                    .expect("resized pool must still drain");
+            }
+            total += n;
+        }
+        assert_eq!(pool.completed(), total);
+        // Shrinks drain gracefully, so the bound is the max capacity
+        // the pool ever ran at.
+        assert!(pool.high_watermark() <= max_cap as u64);
+    });
+}
+
+// ---------------------------------------------------------------------
+// DAG-level properties (through the live server)
+// ---------------------------------------------------------------------
+
+/// Random CPU-only plan: every node depends on a random subset of
+/// earlier nodes, so any topology the generator emits is valid.
+fn random_cpu_plan(rng: &mut Rng) -> ExecutionPlan {
+    let n_nodes = rng.range(1, 8) as usize; // 1..=7
+    let mut bindings = Vec::with_capacity(n_nodes);
+    for i in 0..n_nodes {
+        let mut deps = Vec::new();
+        for j in 0..i {
+            if rng.bool(0.4) {
+                deps.push(j);
+            }
+        }
+        bindings.push(NodeBinding {
+            op: format!("tool.op{i}"),
+            class: "CPU".into(),
+            stage: Stage::Cpu,
+            latency_s: 0.0002 + rng.f64() * 0.0015,
+            cost_usd: 0.0,
+            deps,
+            xfer_bytes: 0.0,
+            token_fraction: 1.0,
+        });
+    }
+    ExecutionPlan {
+        agent: "prop_agent".into(),
+        model: String::new(),
+        sla: SlaSpec::None,
+        bindings,
+        pipelines: vec![],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: rng.range(1, 4) as u32, // 1..=3
+        cost_usd: 0.0,
+        latency_s: 0.01,
+        pass_log: vec![],
+    }
+}
+
+/// Run a workload with a watchdog so a scheduling deadlock fails the
+/// test instead of hanging CI.
+fn run_with_watchdog(
+    mut server: Server,
+    reqs: Vec<ChatRequest>,
+) -> (Server, Vec<ChatResponse>) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let out = server.run_workload(reqs);
+        let _ = done_tx.send(());
+        (server, out)
+    });
+    match done_rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(()) => {
+            let (server, out) = handle.join().expect("serve thread panicked");
+            (server, out.expect("serve must not error"))
+        }
+        Err(_) => panic!("DAG execution deadlocked (watchdog fired)"),
+    }
+}
+
+#[test]
+fn arbitrary_dags_never_deadlock_and_respect_dependency_order() {
+    check_cases("dag-order", 12, &mut |rng: &mut Rng| {
+        let plan = random_cpu_plan(rng);
+        plan.validate().expect("generator emits valid plans");
+        let server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+        let n_req = rng.range(1, 6);
+        let reqs: Vec<ChatRequest> = (0..n_req)
+            .map(|i| ChatRequest::new(i, "p", 4).with_agent("prop_agent"))
+            .collect();
+        let (server, responses) = run_with_watchdog(server, reqs);
+
+        assert_eq!(responses.len(), n_req as usize, "no request may be lost");
+        for r in &responses {
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(
+                r.stages.len(),
+                plan.bindings.len(),
+                "every node must execute exactly once"
+            );
+            for s in &r.stages {
+                for &d in &plan.bindings[s.node].deps {
+                    let dep = r
+                        .stages
+                        .iter()
+                        .find(|x| x.node == d)
+                        .expect("dependency must have executed");
+                    assert!(
+                        dep.end_s <= s.start_s + 1e-9,
+                        "node {} started at {} before dep {} finished at {}",
+                        s.node,
+                        s.start_s,
+                        d,
+                        dep.end_s
+                    );
+                }
+            }
+        }
+        assert!(
+            server.host_high_watermark() <= plan.cpu_workers as u64,
+            "pool ran {} stages concurrently with capacity {}",
+            server.host_high_watermark(),
+            plan.cpu_workers
+        );
+    });
+}
+
+#[test]
+fn wide_fanout_respects_plan_host_capacity() {
+    // One root fanning out to many parallel tools on a 2-slot pool:
+    // the pool must serialize, never exceeding the plan's capacity.
+    let mut bindings = vec![NodeBinding {
+        op: "io.input".into(),
+        class: "CPU".into(),
+        stage: Stage::Cpu,
+        latency_s: 0.0002,
+        cost_usd: 0.0,
+        deps: vec![],
+        xfer_bytes: 0.0,
+        token_fraction: 1.0,
+    }];
+    for i in 0..6 {
+        bindings.push(NodeBinding {
+            op: format!("tool.fan{i}"),
+            class: "CPU".into(),
+            stage: Stage::Cpu,
+            latency_s: 0.002,
+            cost_usd: 0.0,
+            deps: vec![0],
+            xfer_bytes: 0.0,
+            token_fraction: 1.0,
+        });
+    }
+    let plan = ExecutionPlan {
+        agent: "fan_agent".into(),
+        model: String::new(),
+        sla: SlaSpec::None,
+        bindings,
+        pipelines: vec![],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 2,
+        cost_usd: 0.0,
+        latency_s: 0.01,
+        pass_log: vec![],
+    };
+    let server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    let reqs: Vec<ChatRequest> = (0..4u64)
+        .map(|i| ChatRequest::new(i, "fan", 4).with_agent("fan_agent"))
+        .collect();
+    let (server, responses) = run_with_watchdog(server, reqs);
+    assert_eq!(responses.len(), 4);
+    for r in &responses {
+        assert!(r.is_ok());
+        assert_eq!(r.stages.len(), 7);
+    }
+    assert!(
+        server.host_high_watermark() <= 2,
+        "watermark {} exceeded the plan's 2 cpu workers",
+        server.host_high_watermark()
+    );
+}

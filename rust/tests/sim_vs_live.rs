@@ -1,0 +1,343 @@
+//! Cross-backend conformance: the same `ExecutionPlan` + workload run
+//! through the DAG **simulator** (`cluster/dag.rs`, modeled time) and
+//! the **live server** (`server/`, wall-clock on the synthetic engine +
+//! host pool) must agree on the execution structure:
+//!
+//! * per-role request counts match **exactly** (every binding of every
+//!   request runs exactly once, on the stage kind the plan bound);
+//! * per-stage latency orderings agree (slow tool stages dominate fast
+//!   IO stages; decode dominates prefill) — the backends measure
+//!   different clocks, so orderings, not absolute values, must match;
+//! * both backends report per-role utilization from the same plan, in
+//!   range, with the same busy-share ordering.
+//!
+//! Known modeling boundary: the live runtime executes a fused
+//! prefill+decode unit back-to-back on ONE engine, so the KV hop the
+//! simulator prices over the fabric for cross-chassis prefill→decode
+//! edges has no live counterpart (KV never leaves the device). Live
+//! latencies are therefore systematically below modeled ones on such
+//! plans — this suite compares structure and orderings, **not**
+//! absolute latency values. Cross-unit LLM→LLM edges do get modeled
+//! transfer delays in both backends.
+//!
+//! Gated off pjrt builds: the live side runs on the synthetic engine.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use agentic_hetero::cluster::dag::DagSim;
+use agentic_hetero::cluster::trace::{generate, TraceConfig};
+use agentic_hetero::plan::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, PipelineBinding,
+    Role, SlaSpec, Stage,
+};
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, ChatResponse, Server};
+
+fn cpu(op: &str, latency_s: f64, deps: Vec<usize>) -> NodeBinding {
+    NodeBinding {
+        op: op.into(),
+        class: "CPU".into(),
+        stage: Stage::Cpu,
+        latency_s,
+        cost_usd: 0.0,
+        deps,
+        xfer_bytes: 0.0,
+        token_fraction: 1.0,
+    }
+}
+
+fn llm(op: &str, stage: Stage, latency_s: f64, deps: Vec<usize>) -> NodeBinding {
+    NodeBinding {
+        op: op.into(),
+        class: "H100".into(),
+        stage,
+        latency_s,
+        cost_usd: 1e-5,
+        deps,
+        xfer_bytes: 1e6,
+        token_fraction: 1.0,
+    }
+}
+
+/// A two-inference voice/supervisor agent: STT → LLM → tool → LLM → TTS.
+/// Nine bindings, five on the host pool, two prefill+decode pairs.
+fn conformance_plan() -> ExecutionPlan {
+    ExecutionPlan {
+        agent: "conformance_agent".into(),
+        model: "8b-fp16".into(),
+        sla: SlaSpec::EndToEnd(60.0),
+        bindings: vec![
+            cpu("io.input", 0.0002, vec![]),            // 0
+            cpu("stt.transcribe", 0.02, vec![0]),       // 1
+            llm("llm.prefill", Stage::LlmPrefill, 0.03, vec![1]), // 2
+            llm("llm.decode", Stage::LlmDecode, 0.3, vec![2]),    // 3
+            cpu("tool.search", 0.06, vec![3]),          // 4
+            llm("llm.prefill", Stage::LlmPrefill, 0.03, vec![4]), // 5
+            llm("llm.decode", Stage::LlmDecode, 0.3, vec![5]),    // 6
+            cpu("tts.synthesize", 0.02, vec![6]),       // 7
+            cpu("io.output", 0.0005, vec![7]),          // 8
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: "H100".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: "H100".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 32,
+                replicas: 2,
+                chassis: 1,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 4,
+        cost_usd: 5e-5,
+        latency_s: 0.8,
+        pass_log: vec![],
+    }
+}
+
+const N_REQ: usize = 24;
+const ISL: usize = 64;
+const OSL: usize = 16;
+
+fn sim_trace() -> Vec<agentic_hetero::cluster::trace::Request> {
+    generate(&TraceConfig {
+        n_requests: N_REQ,
+        rate: 50.0,
+        isl_mean: ISL as u64,
+        osl_mean: OSL as u64,
+        sigma: 0.0,
+        seed: 5,
+    })
+}
+
+fn live_requests(agent: &str) -> Vec<ChatRequest> {
+    (0..N_REQ as u64)
+        .map(|i| {
+            let byte = b'a' + (i % 23) as u8;
+            ChatRequest::new(i, vec![byte; ISL], OSL).with_agent(agent)
+        })
+        .collect()
+}
+
+/// Run the live workload on its own thread with a deadlock watchdog.
+fn run_live(mut server: Server, reqs: Vec<ChatRequest>) -> (Server, Vec<ChatResponse>) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let out = server.run_workload(reqs);
+        let _ = done_tx.send(());
+        (server, out)
+    });
+    match done_rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(()) => {
+            let (server, out) = handle.join().expect("serve thread panicked");
+            (server, out.expect("live serve must not error"))
+        }
+        Err(_) => panic!("live DAG execution deadlocked (watchdog fired)"),
+    }
+}
+
+/// Mean execution-span duration of live stages matching `op`.
+fn live_mean_span(responses: &[ChatResponse], op: &str) -> f64 {
+    let durs: Vec<f64> = responses
+        .iter()
+        .flat_map(|r| r.stages.iter())
+        .filter(|s| s.op == op)
+        .map(|s| s.duration_s())
+        .collect();
+    assert!(!durs.is_empty(), "no live spans for op {op}");
+    durs.iter().sum::<f64>() / durs.len() as f64
+}
+
+/// Mean live span duration over all stages with the given role.
+fn live_mean_role(responses: &[ChatResponse], role: &str) -> f64 {
+    let durs: Vec<f64> = responses
+        .iter()
+        .flat_map(|r| r.stages.iter())
+        .filter(|s| s.role == role)
+        .map(|s| s.duration_s())
+        .collect();
+    assert!(!durs.is_empty(), "no live spans for role {role}");
+    durs.iter().sum::<f64>() / durs.len() as f64
+}
+
+#[test]
+fn sim_and_live_agree_on_dag_execution() {
+    let plan = conformance_plan();
+
+    // ---- simulator backend ------------------------------------------
+    let trace = sim_trace();
+    let mut sim = DagSim::new(&plan).unwrap();
+    let report = sim.run(&trace).unwrap();
+    let detail = sim.last_detail().expect("run populates detail").clone();
+
+    assert_eq!(report.n_requests, N_REQ);
+    // Two decode bindings per request, OSL tokens each.
+    assert_eq!(report.output_tokens, (N_REQ * 2 * OSL) as u64);
+
+    // ---- live backend -----------------------------------------------
+    let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    let mut cfg = server.config().clone();
+    cfg.time_scale = 0.05; // 60 ms tool stage → 3 ms wall sleep
+    cfg.max_new_tokens = OSL;
+    server.reconfigure(cfg);
+    server.install_plan(&plan).unwrap();
+
+    let t0 = Instant::now();
+    let (mut server, responses) = run_live(server, live_requests(&plan.agent));
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(responses.len(), N_REQ);
+    let mut live_tokens = 0u64;
+    for r in &responses {
+        assert!(r.is_ok(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(
+            r.stages.len(),
+            plan.bindings.len(),
+            "every plan binding must execute exactly once"
+        );
+        assert!(r.e2e_s >= r.ttft_s);
+        live_tokens += r.tokens as u64;
+        // Dependency order holds stage-by-stage.
+        for s in &r.stages {
+            for &d in &plan.bindings[s.node].deps {
+                let dep = r.stages.iter().find(|x| x.node == d).unwrap();
+                assert!(
+                    dep.end_s <= s.start_s + 1e-9,
+                    "node {} started before dep {} finished",
+                    s.node,
+                    d
+                );
+            }
+        }
+    }
+
+    // ---- per-role request counts match exactly ----------------------
+    assert_eq!(detail.host_jobs, (N_REQ * 5) as u64);
+    assert_eq!(detail.prefill_jobs, (N_REQ * 2) as u64);
+    assert_eq!(detail.decode_jobs, (N_REQ * 2) as u64);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap["server_host_jobs"], detail.host_jobs as f64);
+    assert_eq!(snap["server_prefill_jobs"], detail.prefill_jobs as f64);
+    assert_eq!(snap["server_decode_jobs"], detail.decode_jobs as f64);
+
+    // ---- token parity: both backends generate the same stream -------
+    assert_eq!(live_tokens, report.output_tokens);
+
+    // ---- per-stage latency orderings agree --------------------------
+    // Simulator: mean sojourn per binding index.
+    let sim_lat = &detail.node_mean_latency_s;
+    assert!(
+        sim_lat[4] > sim_lat[0],
+        "sim: tool.search ({}) must dominate io.input ({})",
+        sim_lat[4],
+        sim_lat[0]
+    );
+    assert!(
+        sim_lat[3] > sim_lat[2],
+        "sim: decode must dominate prefill"
+    );
+    // Live: mean execution span per op/role.
+    assert!(
+        live_mean_span(&responses, "tool.search") > live_mean_span(&responses, "io.input"),
+        "live: tool.search must dominate io.input"
+    );
+    assert!(
+        live_mean_role(&responses, "llm_decode") > live_mean_role(&responses, "llm_prefill"),
+        "live: decode must dominate prefill"
+    );
+
+    // ---- per-role utilization from the same plan --------------------
+    assert!(report.prefill_utilization > 0.0 && report.prefill_utilization <= 1.0);
+    assert!(report.decode_utilization > 0.0 && report.decode_utilization <= 1.0);
+    // Busy-share ordering: decode work dominates prefill in both
+    // backends (device-seconds in sim, engine-seconds live).
+    let sim_pre_busy = report.prefill_utilization * report.makespan_s; // 1 device
+    let sim_dec_busy = report.decode_utilization * 2.0 * report.makespan_s;
+    assert!(sim_dec_busy > sim_pre_busy);
+    let (live_pre, live_dec, live_host) = server.take_utilization(wall);
+    assert!(live_pre > 0.0 && live_pre <= 1.0, "prefill util {live_pre}");
+    assert!(live_dec > 0.0 && live_dec <= 1.0, "decode util {live_dec}");
+    assert!(live_host > 0.0 && live_host <= 1.0, "host util {live_host}");
+    assert!(
+        live_dec > live_pre,
+        "live decode busy-share ({live_dec}) must dominate prefill ({live_pre})"
+    );
+
+    // Host pool never exceeded the plan's capacity.
+    assert!(server.host_high_watermark() <= plan.cpu_workers as u64);
+}
+
+#[test]
+fn sim_and_live_agree_on_cpu_only_plans() {
+    // No LLM stages at all: the host pool carries the whole graph.
+    let plan = ExecutionPlan {
+        agent: "tools_only".into(),
+        model: String::new(),
+        sla: SlaSpec::None,
+        bindings: vec![
+            cpu("io.input", 0.0005, vec![]),
+            cpu("tool.lookup", 0.01, vec![0]),
+            cpu("io.output", 0.0005, vec![1]),
+        ],
+        pipelines: vec![],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 2,
+        cost_usd: 0.0,
+        latency_s: 0.011,
+        pass_log: vec![],
+    };
+    let trace = generate(&TraceConfig {
+        n_requests: 12,
+        rate: 100.0,
+        isl_mean: 16,
+        osl_mean: 4,
+        sigma: 0.0,
+        seed: 2,
+    });
+    let mut sim = DagSim::new(&plan).unwrap();
+    let report = sim.run(&trace).unwrap();
+    let detail = sim.last_detail().unwrap().clone();
+    assert_eq!(report.output_tokens, 0);
+    assert_eq!(detail.host_jobs, 36);
+    assert_eq!(detail.prefill_jobs, 0);
+
+    let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    let mut cfg = server.config().clone();
+    cfg.time_scale = 0.1;
+    server.reconfigure(cfg);
+    server.install_plan(&plan).unwrap();
+    let reqs: Vec<ChatRequest> = (0..12u64)
+        .map(|i| ChatRequest::new(i, "tooling", 4).with_agent("tools_only"))
+        .collect();
+    let (server, responses) = run_live(server, reqs);
+    assert_eq!(responses.len(), 12);
+    for r in &responses {
+        assert!(r.is_ok());
+        assert_eq!(r.tokens, 0, "no decode stages → no tokens");
+        assert_eq!(r.stages.len(), 3);
+        // TTFT falls back to completion time, the simulator's rule.
+        assert!((r.ttft_s - r.e2e_s).abs() < 1e-9);
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap["server_host_jobs"], 36.0);
+    assert_eq!(server.host_capacity(), Some(2));
+    assert!(server.host_high_watermark() <= 2);
+}
