@@ -150,6 +150,7 @@ fn main() {
                     max_pipelines: 16,
                 },
                 backlog_factor: 1.0,
+                cpu_autoscale: None,
             },
             bench_plan(),
             "bursty",

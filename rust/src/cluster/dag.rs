@@ -45,9 +45,9 @@ use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency};
 use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
-use crate::plan::instance::DagTopology;
+use crate::plan::instance::{edge_payload_bytes, DagTopology};
 use crate::plan::{ExecutionPlan, Role, SlaSpec, Stage};
-use crate::transport::fabric::{Fabric, NodeAddr};
+use crate::transport::fabric::TransferClock;
 use crate::util::bench::percentile;
 use crate::{Error, Result};
 
@@ -194,7 +194,13 @@ struct RunState {
     /// Live (non-retired) pipeline indices per hardware class.
     prefill_pipes_of: BTreeMap<String, Vec<usize>>,
     decode_pipes_of: BTreeMap<String, Vec<usize>>,
-    cpu_free: u32,
+    /// Current CPU pool width — fleet changes resize it mid-run (the
+    /// cpu_workers autoscaler's knob), so it lives in run state rather
+    /// than on the immutable plan.
+    cpu_workers: u32,
+    /// CPU stages currently executing (≤ `cpu_workers` except briefly
+    /// after a shrink, while over-width stages finish).
+    cpu_busy: u32,
     cpu_queue: VecDeque<(Job, f64)>,
     /// CPU pool busy time (service time attributed at start, like the
     /// pipeline `busy_time`s).
@@ -281,7 +287,9 @@ pub struct DagSim {
     plan: ExecutionPlan,
     /// None only when the plan has no LLM stages.
     model: Option<ModelProfile>,
-    fabric: Fabric,
+    /// Shared contended edge-transfer model (same clock the live
+    /// dispatcher drives — see `transport::fabric::TransferClock`).
+    clock: TransferClock,
     /// End-to-end SLA threshold, if the plan carries one.
     sla_s: Option<f64>,
     /// Successor lists per node index.
@@ -324,7 +332,7 @@ impl DagSim {
             )));
         }
         let placement = plan.placement()?;
-        let fabric = plan.build_fabric()?;
+        let clock = TransferClock::new(plan.build_fabric()?);
         let sla_s = match plan.sla {
             SlaSpec::None => None,
             SlaSpec::EndToEnd(t) => Some(t),
@@ -339,7 +347,7 @@ impl DagSim {
             terms: FinanceTerms::default(),
             plan: plan.clone(),
             model,
-            fabric,
+            clock,
             sla_s,
             succ: topo.succ,
             indeg: topo.indeg,
@@ -487,8 +495,8 @@ impl DagSim {
             Stage::Cpu => {
                 st.host_jobs += 1;
                 let service = binding.latency_s;
-                if st.cpu_free > 0 {
-                    st.cpu_free -= 1;
+                if st.cpu_busy < st.cpu_workers {
+                    st.cpu_busy += 1;
                     st.cpu_busy_time += service;
                     self.push(now + service, Ev::CpuDone(job));
                 } else {
@@ -585,30 +593,16 @@ impl DagSim {
                     Stage::Cpu => unreachable!(),
                 };
                 st.pipe_of[fi] = Some(choice);
-                let from = NodeAddr {
-                    chassis: from_chassis.unwrap(),
-                    slot: 0,
-                };
-                let to = NodeAddr {
-                    chassis: to_chassis,
-                    slot: 0,
-                };
-                if from != to {
-                    // Prefill → decode hands over the KV cache, sized at
-                    // the consumer's token-fraction-scaled prompt; other
-                    // edges carry the plan's estimate.
-                    let bytes = if from_stage == Stage::LlmPrefill
-                        && succ_binding.stage == Stage::LlmDecode
-                    {
-                        match &self.model {
-                            Some(m) => kv_cache_bytes(m, self.isl_of(succ_job, trace), 1),
-                            None => succ_binding.xfer_bytes,
-                        }
-                    } else {
-                        succ_binding.xfer_bytes
-                    };
+                let from_ch = from_chassis.unwrap();
+                if from_ch != to_chassis {
+                    let bytes = edge_payload_bytes(
+                        self.model.as_ref(),
+                        from_stage,
+                        succ_binding,
+                        self.isl_of(succ_job, trace),
+                    );
                     st.kv_bytes_moved += bytes;
-                    arrive = self.fabric.transfer(from, to, bytes, now)?;
+                    arrive = self.clock.transfer(from_ch, to_chassis, bytes, now)?;
                 }
             }
             self.push(arrive, Ev::DepArrived(succ_job));
@@ -687,11 +681,7 @@ impl DagSim {
             },
             prefill_util: util(pre_busy, prev_pre_busy, pre_dev),
             decode_util: util(dec_busy, prev_dec_busy, dec_dev),
-            host_util: util(
-                st.cpu_busy_time,
-                prev_cpu_busy,
-                self.plan.cpu_workers as f64,
-            ),
+            host_util: util(st.cpu_busy_time, prev_cpu_busy, st.cpu_workers as f64),
             prefill_queue: st.prefill.iter().map(|p| p.queue.len()).sum(),
             decode_queue: st.decode.iter().map(|d| d.waiting.len()).sum(),
             decode_active: st.decode.iter().map(|d| d.active.len()).sum(),
@@ -732,7 +722,7 @@ impl DagSim {
             .map(|s| s.chassis + 1)
             .max()
             .unwrap_or(1);
-        self.fabric.grow(max_chassis);
+        self.clock.grow(max_chassis);
 
         let mut fc = FleetChangeStats {
             t: now,
@@ -883,18 +873,7 @@ impl DagSim {
                 None => 0.0,
             };
             let arrive = if bytes > 0.0 && from_ch != to_ch {
-                self.fabric.transfer(
-                    NodeAddr {
-                        chassis: from_ch,
-                        slot: 0,
-                    },
-                    NodeAddr {
-                        chassis: to_ch,
-                        slot: 0,
-                    },
-                    bytes,
-                    now,
-                )?
+                self.clock.transfer(from_ch, to_ch, bytes, now)?
             } else {
                 now
             };
@@ -903,6 +882,25 @@ impl DagSim {
             fc.kv_bytes += bytes;
             fc.done_s = fc.done_s.max(arrive);
             self.push(arrive, Ev::KvMigrated { job, to: di });
+        }
+
+        // ---- CPU worker pool (the cpu_workers autoscaler's knob) ----
+        // Grows take effect immediately (queued tool/IO stages start on
+        // the fresh slots); shrinks let over-width stages finish — the
+        // same graceful semantics as the live host pool's resize.
+        if target.cpu_workers != st.cpu_workers {
+            st.cpu_workers = target.cpu_workers;
+            self.plan.cpu_workers = target.cpu_workers;
+            while st.cpu_busy < st.cpu_workers {
+                match st.cpu_queue.pop_front() {
+                    Some((job, service)) => {
+                        st.cpu_busy += 1;
+                        st.cpu_busy_time += service;
+                        self.push(now + service, Ev::CpuDone(job));
+                    }
+                    None => break,
+                }
+            }
         }
         Ok(fc)
     }
@@ -929,7 +927,7 @@ impl DagSim {
         if n_req == 0 {
             return Err(Error::Runtime("empty request trace".into()));
         }
-        self.fabric.reset();
+        self.clock.reset();
         self.heap.clear();
 
         let mut st = RunState {
@@ -966,7 +964,8 @@ impl DagSim {
                 .collect(),
             prefill_pipes_of: BTreeMap::new(),
             decode_pipes_of: BTreeMap::new(),
-            cpu_free: self.plan.cpu_workers,
+            cpu_workers: self.plan.cpu_workers,
+            cpu_busy: 0,
             cpu_queue: VecDeque::new(),
             cpu_busy_time: 0.0,
             remaining: (0..n_req)
@@ -1035,12 +1034,20 @@ impl DagSim {
                     }
                 }
                 Ev::CpuDone(job) => {
-                    // Hand the slot to the next queued stage, if any.
-                    if let Some((next, service)) = st.cpu_queue.pop_front() {
-                        st.cpu_busy_time += service;
-                        self.push(t + service, Ev::CpuDone(next));
-                    } else {
-                        st.cpu_free += 1;
+                    // Free the slot, then hand it (and any slots a
+                    // mid-run grow added) to queued stages — unless a
+                    // shrink left the pool over-width, in which case the
+                    // slot retires instead.
+                    st.cpu_busy = st.cpu_busy.saturating_sub(1);
+                    while st.cpu_busy < st.cpu_workers {
+                        match st.cpu_queue.pop_front() {
+                            Some((next, service)) => {
+                                st.cpu_busy += 1;
+                                st.cpu_busy_time += service;
+                                self.push(t + service, Ev::CpuDone(next));
+                            }
+                            None => break,
+                        }
                     }
                     self.complete_node(&mut st, job, t, trace)?;
                 }
@@ -1470,6 +1477,38 @@ mod tests {
                 "KV landing cannot precede the migration"
             );
         }
+    }
+
+    #[test]
+    fn fleet_change_resizes_cpu_pool_mid_run() {
+        // The cpu_workers autoscaler's knob: a plan change that only
+        // grows cpu_workers must widen the live pool (queued tool/IO
+        // stages start on the fresh slots) and shorten the run.
+        let mut narrow = tiny_plan();
+        narrow.cpu_workers = 1;
+        narrow.bindings[0].latency_s = 0.2; // make CPU the bottleneck
+        narrow.bindings[3].latency_s = 0.2;
+        let mut wide = narrow.clone();
+        wide.cpu_workers = 32;
+        let t = trace(24, 100.0);
+        let r_narrow = DagSim::new(&narrow).unwrap().run(&t).unwrap();
+        let mut sim = DagSim::new(&narrow).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(1, wide)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r_grown = sim.run_controlled(&t, 0.5, &mut ctl).unwrap();
+        assert_eq!(r_grown.n_requests, 24, "no request may be dropped");
+        assert_eq!(ctl.applied.len(), 1);
+        assert_eq!(ctl.applied[0].activated, 0, "no pipeline churn");
+        assert!(
+            r_grown.makespan_s < r_narrow.makespan_s * 0.8,
+            "grown pool must beat the narrow run: {} vs {}",
+            r_grown.makespan_s,
+            r_narrow.makespan_s
+        );
     }
 
     #[test]

@@ -238,6 +238,9 @@ pub struct DeployConfig {
     pub orch_patience: u32,
     pub orch_min_pipelines: u32,
     pub orch_max_pipelines: u32,
+    /// Ceiling of the `cpu_workers` autoscaler (host worker slots, not
+    /// pipelines); 0 disables host-pool autoscaling entirely.
+    pub orch_max_cpu_workers: u32,
 }
 
 impl Default for DeployConfig {
@@ -259,6 +262,7 @@ impl Default for DeployConfig {
             orch_patience: 3,
             orch_min_pipelines: 1,
             orch_max_pipelines: 64,
+            orch_max_cpu_workers: 512,
         }
     }
 }
@@ -304,6 +308,11 @@ impl DeployConfig {
             get_i("orchestrator", "min_pipelines", cfg.orch_min_pipelines as i64) as u32;
         cfg.orch_max_pipelines =
             get_i("orchestrator", "max_pipelines", cfg.orch_max_pipelines as i64) as u32;
+        cfg.orch_max_cpu_workers = get_i(
+            "orchestrator",
+            "max_cpu_workers",
+            cfg.orch_max_cpu_workers as i64,
+        ) as u32;
         if let Some(workers) = doc.table_arrays.get("worker") {
             cfg.workers = workers
                 .iter()

@@ -235,15 +235,17 @@ fn cmd_ir(args: &Args) -> i32 {
     0
 }
 
-/// `--synthetic`: the deterministic in-process byte LM (non-pjrt builds
-/// only — the real engine always executes compiled artifacts).
+/// `--synthetic`: a pool of deterministic in-process byte LMs — one
+/// engine per plan pipeline group, so LLM stages schedule onto the
+/// engine their role's group is bound to (non-pjrt builds only; the
+/// real engine always executes compiled artifacts).
 #[cfg(not(feature = "pjrt"))]
-fn synthetic_engine() -> Option<Engine> {
-    Some(Engine::synthetic_default())
+fn synthetic_engines(n: usize) -> Option<Vec<std::sync::Arc<Engine>>> {
+    Some(Engine::synthetic_pool(n))
 }
 
 #[cfg(feature = "pjrt")]
-fn synthetic_engine() -> Option<Engine> {
+fn synthetic_engines(_n: usize) -> Option<Vec<std::sync::Arc<Engine>>> {
     None
 }
 
@@ -284,10 +286,12 @@ fn cmd_serve(args: &Args) -> i32 {
         None => None,
     };
 
-    let engine = if args.flag("synthetic") {
-        match synthetic_engine() {
+    let engines = if args.flag("synthetic") {
+        // One engine per pipeline group of the plan (1 for flat serving).
+        let pool_n = plan.as_ref().map(|p| p.pipelines.len()).unwrap_or(1).max(1);
+        match synthetic_engines(pool_n) {
             Some(e) => {
-                eprintln!("using the synthetic in-process engine");
+                eprintln!("using {} synthetic in-process engine(s)", e.len());
                 e
             }
             None => {
@@ -298,7 +302,7 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         eprintln!("loading engine from {artifacts}/ ...");
         match Engine::load(&artifacts) {
-            Ok(e) => e,
+            Ok(e) => vec![std::sync::Arc::new(e)],
             Err(e) => {
                 eprintln!("engine: {e}");
                 return 1;
@@ -306,14 +310,21 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     eprintln!(
-        "engine up on {} ({} params, buckets {:?})",
-        engine.platform(),
-        engine.manifest.num_params,
-        engine.manifest.buckets
+        "{} engine(s) up on {} ({} params, buckets {:?})",
+        engines.len(),
+        engines[0].platform(),
+        engines[0].manifest.num_params,
+        engines[0].manifest.buckets
     );
     let (mut server, agent) = match &plan {
         Some(p) => {
-            let mut s = Server::new(engine, ServerConfig::from_plan(p));
+            let mut s = match Server::with_engines(engines, ServerConfig::from_plan(p)) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("server: {e}");
+                    return 1;
+                }
+            };
             match s.install_plan(p) {
                 Ok(()) => {
                     eprintln!(
@@ -335,7 +346,16 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
             }
         }
-        None => (Server::new(engine, ServerConfig::default()), None),
+        None => (
+            match Server::with_engines(engines, ServerConfig::default()) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("server: {e}");
+                    return 1;
+                }
+            },
+            None,
+        ),
     };
     let prompts = [
         "the paper describes ",

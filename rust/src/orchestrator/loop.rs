@@ -45,6 +45,11 @@ pub struct OrchestratorConfig {
     /// capacity reads as full (1.0) pressure even when utilization
     /// lags (queues grow before device-time catches up).
     pub backlog_factor: f64,
+    /// `cpu_workers` autoscaler consuming the `host_util` observation:
+    /// sustained host-pool pressure resizes the plan's CPU worker slots
+    /// (the count here is *workers*, not pipelines). `None` keeps the
+    /// host pool fixed.
+    pub cpu_autoscale: Option<AutoscalerConfig>,
 }
 
 impl Default for OrchestratorConfig {
@@ -53,6 +58,7 @@ impl Default for OrchestratorConfig {
             window_s: 5.0,
             autoscale: AutoscalerConfig::default(),
             backlog_factor: 1.0,
+            cpu_autoscale: None,
         }
     }
 }
@@ -70,17 +76,87 @@ impl OrchestratorConfig {
                 max_pipelines: cfg.orch_max_pipelines,
             },
             backlog_factor: 1.0,
+            // Host pool follows the same watermarks/patience, with its
+            // own worker-count ceiling (`[orchestrator] max_cpu_workers`;
+            // 0 keeps the pool fixed).
+            cpu_autoscale: if cfg.orch_max_cpu_workers == 0 {
+                None
+            } else {
+                Some(AutoscalerConfig {
+                    high_watermark: cfg.orch_high_watermark,
+                    low_watermark: cfg.orch_low_watermark,
+                    patience: cfg.orch_patience,
+                    min_pipelines: 1,
+                    max_pipelines: cfg.orch_max_cpu_workers,
+                })
+            },
         }
     }
 }
 
+/// A re-plan the orchestrator refused to adopt mid-run, with the reason
+/// — recorded as a typed [`TimelineEvent::Rejection`] and surfaced on
+/// the [`PlanChange`] so executors (and their operators) see *why* the
+/// fleet kept its current class layout instead of the change silently
+/// vanishing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRejection {
+    /// Pipeline role whose class layout the rejected plan would move.
+    pub role: String,
+    pub reason: String,
+}
+
 /// What one loop iteration decided: the new target plan, the typed
-/// diff from the live plan, and the migration that realizes it.
+/// diff from the live plan, the migration that realizes it, and any
+/// re-plan the loop had to reject along the way.
 #[derive(Debug, Clone)]
 pub struct PlanChange {
     pub target: ExecutionPlan,
     pub diff: PlanDiff,
     pub migration: MigrationPlan,
+    pub rejections: Vec<PlanRejection>,
+}
+
+/// Decide whether a freshly-planned layout can replace `current`
+/// mid-run. In-flight jobs keep routing by the current plan's (role,
+/// class) layout, so a fresh plan that moves any role's classes is
+/// rejected (typed, per role) and the current plan is structurally
+/// retargeted instead.
+pub fn reconcile_replan(
+    current: &ExecutionPlan,
+    fresh: ExecutionPlan,
+) -> (ExecutionPlan, Vec<PlanRejection>) {
+    let classes = |p: &ExecutionPlan, role: Role| -> BTreeSet<String> {
+        p.pipelines
+            .iter()
+            .filter(|pl| pl.role == role)
+            .map(|pl| pl.device.clone())
+            .collect()
+    };
+    let mut rejections = Vec::new();
+    for role in [Role::Prefill, Role::Decode] {
+        let cur = classes(current, role);
+        let new = classes(&fresh, role);
+        if cur != new {
+            rejections.push(PlanRejection {
+                role: role.name().to_string(),
+                reason: format!(
+                    "planner re-plan moves {} classes {:?} -> {:?} mid-run; \
+                     in-flight work keeps routing by the live classes, so the \
+                     fresh layout is rejected and the current plan is \
+                     structurally retargeted instead",
+                    role.name(),
+                    cur.iter().cloned().collect::<Vec<_>>(),
+                    new.iter().cloned().collect::<Vec<_>>()
+                ),
+            });
+        }
+    }
+    if rejections.is_empty() {
+        (fresh, rejections)
+    } else {
+        (current.clone(), rejections)
+    }
 }
 
 /// The decision engine. Feed it window observations; it drives the
@@ -92,6 +168,9 @@ pub struct Orchestrator {
     current: ExecutionPlan,
     prefill_scaler: Autoscaler,
     decode_scaler: Autoscaler,
+    /// Present when `cfg.cpu_autoscale` is set: scales `cpu_workers`
+    /// from the measured host-pool utilization.
+    host_scaler: Option<Autoscaler>,
     /// When attached, re-plans run the full slow path (IR → assignment
     /// → plan) instead of structurally retargeting the current plan.
     planner: Option<(Planner, Graph)>,
@@ -118,6 +197,10 @@ impl Orchestrator {
         Ok(Orchestrator {
             prefill_scaler: Autoscaler::new(cfg.autoscale.clone(), pre0),
             decode_scaler: Autoscaler::new(cfg.autoscale.clone(), dec0),
+            host_scaler: cfg
+                .cpu_autoscale
+                .clone()
+                .map(|c| Autoscaler::new(c, initial.cpu_workers.max(1))),
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
             current: initial,
@@ -176,9 +259,18 @@ impl Orchestrator {
         let dec_pressure = self.pressure(w.decode_util, w.decode_queue, Role::Decode);
         let d_pre = self.prefill_scaler.observe(pre_pressure);
         let d_dec = self.decode_scaler.observe(dec_pressure);
+        // The cpu_workers autoscaler consumes the measured host-pool
+        // utilization directly (tool/IO stages have no queue signal
+        // here; worker busy-time is the pressure).
+        let d_host = match self.host_scaler.as_mut() {
+            Some(s) => s.observe(w.host_util),
+            None => ScaleDecision::Hold,
+        };
+        let host_workers = self.host_scaler.as_ref().map(|s| s.current).unwrap_or(0);
         for (role, decision, replicas) in [
-            (Role::Prefill, d_pre, self.prefill_scaler.current),
-            (Role::Decode, d_dec, self.decode_scaler.current),
+            (Role::Prefill.name(), d_pre, self.prefill_scaler.current),
+            (Role::Decode.name(), d_dec, self.decode_scaler.current),
+            ("cpu", d_host, host_workers),
         ] {
             let (action, amount) = match decision {
                 ScaleDecision::ScaleUp(n) => ("scale_up", n),
@@ -188,17 +280,28 @@ impl Orchestrator {
             self.metrics.counter("orch_decisions").inc();
             self.timeline.events.push(TimelineEvent::Decision {
                 t: w.t1,
-                role: role.name().to_string(),
+                role: role.to_string(),
                 action: action.to_string(),
                 amount,
                 replicas,
             });
         }
-        if d_pre == ScaleDecision::Hold && d_dec == ScaleDecision::Hold {
+        if d_pre == ScaleDecision::Hold
+            && d_dec == ScaleDecision::Hold
+            && d_host == ScaleDecision::Hold
+        {
             return Ok(None);
         }
 
-        let target = self.emit_target()?;
+        let (target, rejections) = self.emit_target()?;
+        for r in &rejections {
+            self.metrics.counter("orch_rejections").inc();
+            self.timeline.events.push(TimelineEvent::Rejection {
+                t: w.t1,
+                role: r.role.clone(),
+                reason: r.reason.clone(),
+            });
+        }
         let diff = PlanDiff::between(&self.current, &target);
         if diff.is_empty() {
             return Ok(None);
@@ -225,40 +328,34 @@ impl Orchestrator {
             target,
             diff,
             migration,
+            rejections,
         }))
     }
 
     /// Produce the next target plan at the autoscalers' replica totals:
     /// a fresh slow-path plan when a planner is attached (and its class
-    /// layout stays compatible with in-flight work), else a structural
-    /// retarget of the live plan.
-    fn emit_target(&self) -> Result<ExecutionPlan> {
-        let base = match &self.planner {
+    /// layout stays compatible with in-flight work — incompatible
+    /// re-plans are rejected with a typed reason, not dropped), else a
+    /// structural retarget of the live plan. The cpu_workers scaler's
+    /// worker total rides along on the emitted plan.
+    fn emit_target(&self) -> Result<(ExecutionPlan, Vec<PlanRejection>)> {
+        let (base, rejections) = match &self.planner {
             Some((planner, graph)) => {
                 let fresh = planner.plan(graph)?;
-                // In-flight jobs keep routing by the *current* plan's
-                // classes; only adopt the fresh plan if it serves them.
-                let classes = |p: &ExecutionPlan| -> BTreeSet<(Role, String)> {
-                    p.pipelines
-                        .iter()
-                        .map(|pl| (pl.role, pl.device.clone()))
-                        .collect()
-                };
-                if classes(&fresh) == classes(&self.current) {
-                    fresh
-                } else {
-                    self.current.clone()
-                }
+                reconcile_replan(&self.current, fresh)
             }
-            None => self.current.clone(),
+            None => (self.current.clone(), Vec::new()),
         };
-        let target = retarget(
+        let mut target = retarget(
             &base,
             self.prefill_scaler.current,
             self.decode_scaler.current,
         );
+        if let Some(s) = &self.host_scaler {
+            target.cpu_workers = s.current.max(1);
+        }
         target.validate()?;
-        Ok(target)
+        Ok((target, rejections))
     }
 
     /// Executor callback: the most recent migration finished applying.
@@ -437,6 +534,20 @@ impl Executor for LiveExecutor {
                 Some(s) => e2es.iter().filter(|&&e| e <= s).count(),
                 None => completed,
             };
+            // Per-engine measured utilization first (take_utilization
+            // resets the window): each pool engine lands on its own
+            // gauge, so a hot decode engine is visible even when the
+            // role aggregate looks calm.
+            for (i, (pre, dec)) in
+                self.server.engine_utilization(wall).into_iter().enumerate()
+            {
+                orch.metrics
+                    .gauge(&format!("orch_engine{i}_prefill_util"))
+                    .set(pre);
+                orch.metrics
+                    .gauge(&format!("orch_engine{i}_decode_util"))
+                    .set(dec);
+            }
             let (prefill_util, decode_util, host_util) =
                 self.server.take_utilization(wall);
             let stats = WindowStats {
@@ -507,6 +618,7 @@ mod tests {
                 ..Default::default()
             },
             backlog_factor: 1.0,
+            cpu_autoscale: None,
         }
     }
 
@@ -555,6 +667,78 @@ mod tests {
             .iter()
             .any(|s| matches!(s, crate::planner::MigrationStep::Drain { .. })));
         assert!(down.migration.kv_bytes > 0.0);
+    }
+
+    #[test]
+    fn host_pressure_resizes_cpu_workers() {
+        let mut cfg = quick_cfg();
+        cfg.cpu_autoscale = Some(AutoscalerConfig {
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 512,
+            ..Default::default()
+        });
+        let mut orch =
+            Orchestrator::new(cfg, tiny_plan(), "synthetic", "test").unwrap();
+        // Mid-band pre/dec utilization holds the pipeline fleet still;
+        // only the host pool is under pressure.
+        let host = |util: f64, t0: f64, t1: f64| {
+            let mut w = stats(0.5, t0, t1);
+            w.host_util = util;
+            w
+        };
+        assert!(orch.observe_window(&host(0.95, 0.0, 1.0)).unwrap().is_none());
+        let up = orch
+            .observe_window(&host(0.95, 1.0, 2.0))
+            .unwrap()
+            .expect("host patience=2 must fire");
+        assert!(
+            up.target.cpu_workers > 64,
+            "cpu_workers must grow: {}",
+            up.target.cpu_workers
+        );
+        assert!(
+            up.diff.policy.iter().any(|p| p.field == "cpu_workers"),
+            "the diff must type the host-pool resize: {}",
+            up.diff.summary()
+        );
+        assert!(
+            up.migration.steps.is_empty(),
+            "a pure host-pool resize moves no pipelines"
+        );
+        assert!(up.rejections.is_empty());
+        let grown = up.target.cpu_workers;
+        // Two idle host windows shrink the pool back.
+        orch.observe_window(&host(0.05, 2.0, 3.0)).unwrap();
+        let down = orch
+            .observe_window(&host(0.05, 3.0, 4.0))
+            .unwrap()
+            .expect("idle host windows must scale the pool down");
+        assert!(down.target.cpu_workers < grown);
+    }
+
+    #[test]
+    fn incompatible_replan_is_rejected_with_typed_reason() {
+        let current = tiny_plan(); // decode on Gaudi3
+        let mut fresh = tiny_plan();
+        fresh.pipelines[1].device = "H100".into();
+        fresh.bindings[2].class = "H100".into();
+        let (kept, rejections) = reconcile_replan(&current, fresh);
+        assert_eq!(kept, current, "incompatible layouts keep the live plan");
+        assert_eq!(rejections.len(), 1);
+        assert_eq!(rejections[0].role, "decode");
+        assert!(
+            rejections[0].reason.contains("Gaudi3"),
+            "{}",
+            rejections[0].reason
+        );
+        // Compatible layouts (same classes, different replica counts)
+        // pass through untouched.
+        let mut resized = tiny_plan();
+        resized.pipelines[1].replicas = 5;
+        let (adopted, rej) = reconcile_replan(&current, resized.clone());
+        assert_eq!(adopted, resized);
+        assert!(rej.is_empty());
     }
 
     #[test]

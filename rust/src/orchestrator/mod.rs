@@ -45,7 +45,8 @@ pub mod control;
 pub mod timeline;
 
 pub use control::{
-    Executor, LiveExecutor, Orchestrator, OrchestratorConfig, PlanChange, SimExecutor,
+    reconcile_replan, Executor, LiveExecutor, Orchestrator, OrchestratorConfig, PlanChange,
+    PlanRejection, SimExecutor,
 };
 pub use diff_apply::{capacity_trajectory, converges, lower_diff, retarget, shape_map_of};
 pub use timeline::{Timeline, TimelineEvent};

@@ -40,6 +40,11 @@ pub enum TimelineEvent {
     },
     /// The typed diff connecting the previous plan to the new one.
     Diff { t: f64, diff: PlanDiff },
+    /// A re-plan the loop refused to adopt mid-run (e.g. a structural
+    /// retarget that would move a role's hardware classes under
+    /// in-flight work) — the role affected and why, so rejected
+    /// decisions leave a trace instead of silently vanishing.
+    Rejection { t: f64, role: String, reason: String },
     /// The migration lowered from that diff.
     Migration {
         t: f64,
@@ -96,6 +101,14 @@ impl Timeline {
         self.events
             .iter()
             .filter(|e| matches!(e, TimelineEvent::Decision { .. }))
+            .count()
+    }
+
+    /// Re-plans the loop refused to adopt mid-run.
+    pub fn n_rejections(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Rejection { .. }))
             .count()
     }
 
@@ -203,6 +216,12 @@ impl Timeline {
                     "kind" => "diff",
                     "t" => *t,
                     "diff" => diff.to_json(),
+                },
+                TimelineEvent::Rejection { t, role, reason } => jobj! {
+                    "kind" => "rejection",
+                    "t" => *t,
+                    "role" => role.clone(),
+                    "reason" => reason.clone(),
                 },
                 TimelineEvent::Migration { t, plan, applied_s } => {
                     let applied = match applied_s {
@@ -317,6 +336,11 @@ impl Timeline {
                         Error::Config("diff event missing `diff`".into())
                     })?)?,
                 },
+                Some("rejection") => TimelineEvent::Rejection {
+                    t: num("t")?,
+                    role: text("role")?,
+                    reason: text("reason")?,
+                },
                 Some("migration") => TimelineEvent::Migration {
                     t: num("t")?,
                     plan: MigrationPlan::from_json(e.get("migration").ok_or_else(
@@ -382,6 +406,11 @@ mod tests {
             t: 2.0,
             diff: crate::plan::PlanDiff::between(&a, &b),
         });
+        tl.events.push(TimelineEvent::Rejection {
+            t: 2.0,
+            role: "decode".into(),
+            reason: "planner re-plan moves decode classes mid-run".into(),
+        });
         tl.events.push(TimelineEvent::Migration {
             t: 2.0,
             plan: lower_diff(&a, &b, 4e9).unwrap(),
@@ -412,6 +441,7 @@ mod tests {
         assert_eq!(tl.n_plans(), 2);
         assert_eq!(tl.n_migrations(), 1);
         assert_eq!(tl.n_decisions(), 1);
+        assert_eq!(tl.n_rejections(), 1);
         assert_eq!(tl.plans().len(), 2);
         assert!((tl.sla_attainment() - 0.75).abs() < 1e-12);
         assert!(tl.summary().contains("1 migrations"));

@@ -4,7 +4,9 @@
 //! so the successor/indegree structure and the "which LLM bindings form
 //! one engine inference" rule live here, next to the plan itself.
 
-use super::{ExecutionPlan, Stage};
+use super::{ExecutionPlan, NodeBinding, Stage};
+use crate::cost::kv::kv_cache_bytes;
+use crate::cost::model_profile::ModelProfile;
 
 /// Successor lists and indegrees of a plan's binding DAG. Bindings are
 /// already validated topological (deps point strictly earlier).
@@ -69,6 +71,27 @@ impl LlmUnit {
     pub fn members(&self) -> impl Iterator<Item = usize> + '_ {
         self.prefill.into_iter().chain(self.decode.into_iter())
     }
+}
+
+/// Payload bytes an edge into `to` carries when producer and consumer
+/// sit on different chassis — the **shared** sizing rule of both
+/// execution backends: a prefill → decode edge hands over the KV cache
+/// (Eq. 3, sized at the consumer's token-fraction-scaled prompt
+/// `isl_tokens`); every other edge carries the plan's per-binding
+/// estimate. Kept here, next to the unit grouping, so the simulator and
+/// the live dispatcher cannot drift apart on what a hop costs.
+pub fn edge_payload_bytes(
+    model: Option<&ModelProfile>,
+    from_stage: Stage,
+    to: &NodeBinding,
+    isl_tokens: u64,
+) -> f64 {
+    if from_stage == Stage::LlmPrefill && to.stage == Stage::LlmDecode {
+        if let Some(m) = model {
+            return kv_cache_bytes(m, isl_tokens, 1);
+        }
+    }
+    to.xfer_bytes
 }
 
 /// Group a plan's LLM bindings into engine inference units. Returns the
@@ -206,6 +229,24 @@ mod tests {
         let (units, _) = llm_units(&plan);
         assert_eq!(units.len(), 2);
         assert_eq!(units[1].ext_deps, vec![0, 0], "edges, not distinct deps");
+    }
+
+    #[test]
+    fn edge_payload_sizing_rule() {
+        use crate::cost::model_profile::llama3_8b;
+        use crate::cost::Precision;
+
+        let plan = tiny_plan();
+        let m = llama3_8b(Precision::Fp16);
+        // prefill → decode carries KV, sized at the consumer's tokens.
+        let kv = edge_payload_bytes(Some(&m), Stage::LlmPrefill, &plan.bindings[2], 64);
+        assert!((kv - kv_cache_bytes(&m, 64, 1)).abs() < 1e-6);
+        // Without a model profile the plan's estimate stands in.
+        let est = edge_payload_bytes(None, Stage::LlmPrefill, &plan.bindings[2], 64);
+        assert_eq!(est, plan.bindings[2].xfer_bytes);
+        // Any other edge kind carries the plan's estimate.
+        let other = edge_payload_bytes(Some(&m), Stage::Cpu, &plan.bindings[1], 64);
+        assert_eq!(other, plan.bindings[1].xfer_bytes);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod diff;
 pub mod instance;
 
 pub use diff::{BindingRebind, PipelineResize, PlanDiff, PolicyChange};
-pub use instance::{DagTopology, LlmUnit};
+pub use instance::{edge_payload_bytes, DagTopology, LlmUnit};
 
 use crate::cluster::sim::{Placement, PipelineSpec};
 use crate::cost::hardware::by_name;

@@ -106,6 +106,16 @@ impl Engine {
         })
     }
 
+    /// A pool of `n` independent synthetic engines (≥ 1) sharing the
+    /// default manifest — the dependency-free stand-in for "one engine
+    /// per plan pipeline group" multi-engine serving
+    /// ([`crate::server::Server::with_engines`]).
+    pub fn synthetic_pool(n: usize) -> Vec<std::sync::Arc<Engine>> {
+        (0..n.max(1))
+            .map(|_| std::sync::Arc::new(Engine::synthetic_default()))
+            .collect()
+    }
+
     pub fn platform(&self) -> String {
         if self.synthetic {
             "synthetic".to_string()
@@ -255,6 +265,19 @@ mod tests {
         assert_eq!(a, b, "same prompts must generate the same bytes");
         assert_eq!(a[0].len(), 12);
         assert_ne!(a[0], a[1], "different prompts should diverge");
+    }
+
+    #[test]
+    fn synthetic_pool_builds_independent_engines() {
+        let pool = Engine::synthetic_pool(3);
+        assert_eq!(pool.len(), 3);
+        // Same manifest, same deterministic LM: any engine of the pool
+        // reconstructs the same state from the same context — the
+        // property the split prefill/decode phases rely on.
+        let a = pool[0].generate_greedy(&[b"ctx".to_vec()], 6).unwrap();
+        let b = pool[2].generate_greedy(&[b"ctx".to_vec()], 6).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(Engine::synthetic_pool(0).len(), 1, "pool floors at 1");
     }
 
     #[test]

@@ -31,7 +31,10 @@ pub struct HostTask {
     /// serve session can never cross-apply to a request reusing an id.
     pub epoch: u64,
     /// The actual stage body (tool call, IO, pre/post-processing).
-    pub work: Box<dyn FnOnce() -> Result<()> + Send + 'static>,
+    /// Returns the stage's output **payload** — real bytes the
+    /// dispatcher hands to downstream stages (tool results feed the
+    /// next LLM prompt), not just a latency model.
+    pub work: Box<dyn FnOnce() -> Result<Vec<u8>> + Send + 'static>,
 }
 
 /// Completion record delivered back to the dispatcher.
@@ -40,7 +43,8 @@ pub struct HostDone {
     pub req: u64,
     pub node: usize,
     pub epoch: u64,
-    pub result: Result<()>,
+    /// Stage payload on success (propagated along DAG edges).
+    pub result: Result<Vec<u8>>,
     pub started: Instant,
     pub finished: Instant,
 }
@@ -287,7 +291,7 @@ mod tests {
                 epoch: 0,
                 work: Box::new(|| {
                     thread::sleep(Duration::from_millis(1));
-                    Ok(())
+                    Ok(b"payload".to_vec())
                 }),
             });
         }
@@ -319,7 +323,7 @@ mod tests {
             req: 2,
             node: 0,
             epoch: 0,
-            work: Box::new(|| Ok(())),
+            work: Box::new(|| Ok(Vec::new())),
         });
         let d1 = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(d1.result.is_err(), "panic must surface as Err");
@@ -343,7 +347,7 @@ mod tests {
                 epoch: 0,
                 work: Box::new(|| {
                     thread::sleep(Duration::from_millis(20));
-                    Ok(())
+                    Ok(Vec::new())
                 }),
             });
         }
@@ -362,7 +366,7 @@ mod tests {
             req: 9,
             node: 0,
             epoch: 0,
-            work: Box::new(|| Ok(())),
+            work: Box::new(|| Ok(Vec::new())),
         });
         let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(d.req, 9);
@@ -378,7 +382,7 @@ mod tests {
             epoch: 0,
             work: Box::new(|| {
                 thread::sleep(Duration::from_millis(5));
-                Ok(())
+                Ok(Vec::new())
             }),
         });
         done_rx.recv_timeout(Duration::from_secs(5)).unwrap();

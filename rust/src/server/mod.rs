@@ -12,10 +12,12 @@
 //!   live counterpart of the simulator's `cpu_workers` slots);
 //! * [`dag_exec`] — per-request DAG traversal over an installed
 //!   [`crate::plan::ExecutionPlan`]: dependency tracking, engine
-//!   inference units, modeled cross-chassis transfers, failure
-//!   isolation;
+//!   inference units split into prefill/decode phases scheduled onto
+//!   their pipeline group's engine, contended cross-chassis transfers
+//!   (the fused prefill→decode KV hop included), payload propagation,
+//!   failure isolation;
 //! * [`serve`] — the serving loop: admission → continuous batcher →
-//!   prefill/decode on the engine (+ host-pool completions and
+//!   prefill/decode on the engine pool (+ host-pool completions and
 //!   transfer timers in DAG mode) → streamed responses, on std threads
 //!   + mpsc (tokio is not in the offline registry; the event loop is a
 //!   single dispatcher thread with worker-side host stages).
@@ -26,7 +28,7 @@ pub mod request;
 pub mod serve;
 pub mod session;
 
-pub use dag_exec::{DagRuntime, HostFault, LlmJob, UnitOutcome};
+pub use dag_exec::{host_payload, DagRuntime, HostFault, LlmJob, LlmPhase, UnitOutcome};
 pub use hostpool::{HostDone, HostPool, HostTask};
 pub use request::{ChatRequest, ChatResponse, StageSpan};
 pub use serve::{Server, ServerConfig};

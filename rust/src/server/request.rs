@@ -81,6 +81,15 @@ pub struct ChatResponse {
     /// Per-stage execution trace (agent-DAG requests only; empty on the
     /// flat path).
     pub stages: Vec<StageSpan>,
+    /// Bytes this request moved across chassis on pipeline → pipeline
+    /// edges — the fused prefill→decode KV handoff plus any cross-unit
+    /// LLM edges (agent-DAG requests; 0.0 on the flat path). Sized by
+    /// the same rule the simulator prices
+    /// ([`crate::plan::instance::edge_payload_bytes`]) and defined
+    /// identically to `DagSim`'s per-edge `kv_bytes_moved`, so
+    /// conformance tests can match live hops against the plan's unit
+    /// placement exactly.
+    pub kv_hop_bytes: f64,
 }
 
 impl ChatResponse {
@@ -96,6 +105,7 @@ impl ChatResponse {
             failed: false,
             error: None,
             stages: Vec::new(),
+            kv_hop_bytes: 0.0,
         }
     }
 
@@ -112,6 +122,7 @@ impl ChatResponse {
             failed: true,
             error: Some(error.into()),
             stages: Vec::new(),
+            kv_hop_bytes: 0.0,
         }
     }
 
@@ -154,6 +165,7 @@ mod tests {
             failed: false,
             error: None,
             stages: Vec::new(),
+            kv_hop_bytes: 0.0,
         };
         assert!(r.text().starts_with("hi"));
         assert!(r.is_ok());

@@ -8,27 +8,29 @@
 //!
 //! Threading model (tokio is unavailable offline): callers submit
 //! [`ChatRequest`]s on an `mpsc::Sender` from any number of threads;
-//! one dispatcher thread owns the engine and runs the event loop
-//! (intake → host completions → modeled transfer timers → batch
-//! execution); host stages run on the pool's worker threads and report
-//! back over a completion channel. The engine is the serialized
-//! resource — exactly the "one compiled executable per model variant"
-//! runtime of the paper's design.
+//! one dispatcher thread owns the **engine pool** (one engine per plan
+//! pipeline group — the "one compiled executable per model variant"
+//! runtime of the paper's design, replicated per group) and runs the
+//! event loop (intake → host completions → contended transfer timers →
+//! per-engine batch execution); host stages run on the pool's worker
+//! threads and report back over a completion channel.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::obs::{Counter, Histogram, MetricsRegistry};
-use crate::plan::ExecutionPlan;
+use crate::plan::{ExecutionPlan, Role};
 use crate::router::admission::{Admission, AdmissionConfig, AdmissionController};
 use crate::router::batcher::{Batcher, BatcherConfig};
 use crate::runtime::{Engine, Sampler};
-use crate::server::dag_exec::{DagDispatch, DagRuntime, HostFault, LlmJob, Step, UnitOutcome};
+use crate::server::dag_exec::{
+    DagDispatch, DagRuntime, HostFault, LlmJob, LlmPhase, Step, UnitOutcome,
+};
 use crate::server::hostpool::HostPool;
 use crate::server::request::{ChatRequest, ChatResponse};
 use crate::server::session::SessionStore;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Server knobs (subset of [`crate::config::DeployConfig`]).
 #[derive(Debug, Clone)]
@@ -125,7 +127,10 @@ impl Sinks<'_> {
 
 /// The serving coordinator.
 pub struct Server {
-    engine: Arc<Engine>,
+    /// The engine pool: one engine per plan pipeline group (groups wrap
+    /// round-robin when the pool is smaller; a single-engine pool hosts
+    /// every group). The flat request path always runs on `engines[0]`.
+    engines: Vec<Arc<Engine>>,
     cfg: ServerConfig,
     pub metrics: Arc<MetricsRegistry>,
     sessions: SessionStore,
@@ -136,17 +141,29 @@ pub struct Server {
     host: Option<HostPool>,
     host_done: Option<mpsc::Receiver<crate::server::hostpool::HostDone>>,
     fault: Option<HostFault>,
-    /// Engine busy-time accumulators per role since the last
-    /// [`Server::take_utilization`] (measured, wall-clock).
-    prefill_busy_s: f64,
-    decode_busy_s: f64,
+    /// Per-engine (prefill, decode) busy-second accumulators since the
+    /// last [`Server::take_utilization`] (measured, wall-clock).
+    engine_busy: Vec<(f64, f64)>,
 }
 
 impl Server {
     pub fn new(engine: impl Into<Arc<Engine>>, cfg: ServerConfig) -> Server {
+        Server::with_engines(vec![engine.into()], cfg)
+            .expect("a one-engine pool is always valid")
+    }
+
+    /// Bring up a server over an explicit engine pool — the live
+    /// counterpart of the plan's pipeline fleet: LLM stages are
+    /// scheduled onto the engine their role's pipeline group is bound
+    /// to (see [`DagRuntime::engine_of_group`]).
+    pub fn with_engines(engines: Vec<Arc<Engine>>, cfg: ServerConfig) -> Result<Server> {
+        if engines.is_empty() {
+            return Err(Error::Config("server needs ≥ 1 engine".into()));
+        }
         let max_history = cfg.max_history;
-        Server {
-            engine: engine.into(),
+        let n = engines.len();
+        Ok(Server {
+            engines,
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
             sessions: SessionStore::new(max_history),
@@ -154,9 +171,8 @@ impl Server {
             host: None,
             host_done: None,
             fault: None,
-            prefill_busy_s: 0.0,
-            decode_busy_s: 0.0,
-        }
+            engine_busy: vec![(0.0, 0.0); n],
+        })
     }
 
     /// Bring up a server configured by an execution plan (see
@@ -167,7 +183,15 @@ impl Server {
         engine: impl Into<Arc<Engine>>,
         plan: &ExecutionPlan,
     ) -> Result<Server> {
-        let mut server = Server::new(engine, ServerConfig::from_plan(plan));
+        Server::from_plan_with_engines(vec![engine.into()], plan)
+    }
+
+    /// [`Server::from_plan`] over an explicit engine pool.
+    pub fn from_plan_with_engines(
+        engines: Vec<Arc<Engine>>,
+        plan: &ExecutionPlan,
+    ) -> Result<Server> {
+        let mut server = Server::with_engines(engines, ServerConfig::from_plan(plan))?;
         server.install_plan(plan)?;
         Ok(server)
     }
@@ -176,7 +200,7 @@ impl Server {
     /// `plan`, bringing the host pool to `cfg.host_workers`. Fails
     /// before any state changes if the plan cannot execute live.
     pub fn install_plan(&mut self, plan: &ExecutionPlan) -> Result<()> {
-        let rt = DagRuntime::new(plan, self.cfg.time_scale)?;
+        let rt = DagRuntime::new(plan, self.cfg.time_scale, self.engines.len())?;
         self.install_runtime(rt);
         Ok(())
     }
@@ -221,7 +245,7 @@ impl Server {
         cfg.max_new_tokens = self.cfg.max_new_tokens;
         cfg.max_history = self.cfg.max_history;
         cfg.time_scale = self.cfg.time_scale;
-        let rt = DagRuntime::new(plan, cfg.time_scale)?;
+        let rt = DagRuntime::new(plan, cfg.time_scale, self.engines.len())?;
         self.reconfigure(cfg);
         self.install_runtime(rt);
         Ok(())
@@ -257,17 +281,63 @@ impl Server {
         self.fault = Some(Arc::new(f));
     }
 
+    /// Number of engines in the pool.
+    pub fn engine_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Engines hosting ≥ 1 pipeline group of each role — the per-role
+    /// utilization denominators. (1, 1) when no plan is installed: the
+    /// flat path runs everything on engine 0.
+    fn role_engine_counts(&self) -> (usize, usize) {
+        match &self.dag {
+            Some(rt) => {
+                let mut pre = std::collections::BTreeSet::new();
+                let mut dec = std::collections::BTreeSet::new();
+                for (g, p) in rt.plan.pipelines.iter().enumerate() {
+                    let e = rt.engine_of_group.get(g).copied().unwrap_or(0);
+                    match p.role {
+                        Role::Prefill => {
+                            pre.insert(e);
+                        }
+                        Role::Decode => {
+                            dec.insert(e);
+                        }
+                    }
+                }
+                (pre.len().max(1), dec.len().max(1))
+            }
+            None => (1, 1),
+        }
+    }
+
+    /// Measured per-**engine** busy fractions over the last `window_s`
+    /// seconds: (prefill, decode) per pool engine. Read-only — call
+    /// before [`Server::take_utilization`], which resets the window.
+    pub fn engine_utilization(&self, window_s: f64) -> Vec<(f64, f64)> {
+        let w = window_s.max(1e-9);
+        self.engine_busy
+            .iter()
+            .map(|b| ((b.0 / w).clamp(0.0, 1.0), (b.1 / w).clamp(0.0, 1.0)))
+            .collect()
+    }
+
     /// Measured per-role utilization over the last `window_s` seconds:
-    /// (prefill, decode, host) busy fractions, from the engine's timed
-    /// stage execution and the host pool's worker busy-time. Resets the
+    /// (prefill, decode, host) busy fractions, from each engine's timed
+    /// stage execution (normalized by the engines actually serving that
+    /// role) and the host pool's worker busy-time. Resets the
     /// accumulators — the orchestrator's live backend calls this once
     /// per observation window.
     pub fn take_utilization(&mut self, window_s: f64) -> (f64, f64, f64) {
         let w = window_s.max(1e-9);
-        let pre = (self.prefill_busy_s / w).clamp(0.0, 1.0);
-        let dec = (self.decode_busy_s / w).clamp(0.0, 1.0);
-        self.prefill_busy_s = 0.0;
-        self.decode_busy_s = 0.0;
+        let (pre_n, dec_n) = self.role_engine_counts();
+        let pre_busy: f64 = self.engine_busy.iter().map(|b| b.0).sum();
+        let dec_busy: f64 = self.engine_busy.iter().map(|b| b.1).sum();
+        for b in self.engine_busy.iter_mut() {
+            *b = (0.0, 0.0);
+        }
+        let pre = (pre_busy / (w * pre_n as f64)).clamp(0.0, 1.0);
+        let dec = (dec_busy / (w * dec_n as f64)).clamp(0.0, 1.0);
         let host = match self.host.as_mut() {
             Some(p) => {
                 let cap = p.capacity().max(1) as f64;
@@ -388,7 +458,7 @@ impl Server {
                     }
                 }
                 if !dag.is_empty() {
-                    let outcomes = self.run_dag_batch(dag)?;
+                    let outcomes = self.run_llm_batch(dag)?;
                     if let (Some(rt), Some(d), Some(pool)) =
                         (self.dag.as_ref(), dispatch.as_mut(), self.host.as_ref())
                     {
@@ -464,17 +534,19 @@ impl Server {
         Ok(out)
     }
 
-    /// Execute one flat prefill+decode batch to completion.
+    /// Execute one flat prefill+decode batch to completion (always on
+    /// engine 0 of the pool — the classic single-engine path).
     fn run_batch(&mut self, members: Vec<InFlight>) -> Result<Vec<ChatResponse>> {
-        let seq_budget = self.engine.manifest.prefill_seq;
+        let engine = Arc::clone(&self.engines[0]);
+        let seq_budget = engine.manifest.prefill_seq;
         let prompts: Vec<Vec<u8>> = members
             .iter()
             .map(|f| self.sessions.assemble(f.req.session, &f.req.prompt, seq_budget))
             .collect();
         let t_batch0 = Instant::now();
-        let pre = self.engine.prefill(&prompts)?;
+        let pre = engine.prefill(&prompts)?;
         let t_prefill_end = Instant::now();
-        self.prefill_busy_s += t_prefill_end.duration_since(t_batch0).as_secs_f64();
+        self.engine_busy[0].0 += t_prefill_end.duration_since(t_batch0).as_secs_f64();
         let mut kv = pre.kv;
         let n = members.len();
         let bucket = kv.bucket;
@@ -517,12 +589,12 @@ impl Server {
             .map(|f| f.req.max_new_tokens.saturating_sub(1))
             .max()
             .unwrap_or(0)
-            .min(self.engine.manifest.max_seq - seq_budget - 1);
+            .min(engine.manifest.max_seq - seq_budget - 1);
         for _round in 0..max_rounds {
             let t_r0 = Instant::now();
-            let logits = self.engine.decode_step(&mut kv, &next)?;
+            let logits = engine.decode_step(&mut kv, &next)?;
             let now = Instant::now();
-            self.decode_busy_s += now.duration_since(t_r0).as_secs_f64();
+            self.engine_busy[0].1 += now.duration_since(t_r0).as_secs_f64();
             for i in 0..n {
                 if outputs[i].len() >= members[i].req.max_new_tokens {
                     continue;
@@ -559,29 +631,97 @@ impl Server {
                 failed: false,
                 error: None,
                 stages: Vec::new(),
+                kv_hop_bytes: 0.0,
             });
         }
         Ok(responses)
     }
 
-    /// Execute one batch of agent-DAG LLM units: prefill the batch,
-    /// then continuous decode rounds until every unit hit its budget.
-    fn run_dag_batch(&mut self, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
-        let seq_budget = self.engine.manifest.prefill_seq;
+    /// Execute one batch of agent-DAG LLM phases, partitioned per
+    /// (engine, phase kind): every engine of the pool runs its prefill
+    /// ingests and its decode rounds as separate batched passes — the
+    /// live counterpart of "each pipeline group is its own serialized
+    /// resource".
+    fn run_llm_batch(&mut self, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
+        let n_engines = self.engines.len();
+        let mut prefill: Vec<Vec<LlmJob>> = (0..n_engines).map(|_| Vec::new()).collect();
+        let mut decode: Vec<Vec<LlmJob>> = (0..n_engines).map(|_| Vec::new()).collect();
+        for j in jobs {
+            let e = j.engine.min(n_engines - 1);
+            match j.phase {
+                LlmPhase::Prefill { .. } => prefill[e].push(j),
+                LlmPhase::Decode { .. } => decode[e].push(j),
+            }
+        }
+        let mut out = Vec::new();
+        for e in 0..n_engines {
+            let pre = std::mem::take(&mut prefill[e]);
+            if !pre.is_empty() {
+                out.extend(self.run_prefill_phase(e, pre)?);
+            }
+            let dec = std::mem::take(&mut decode[e]);
+            if !dec.is_empty() {
+                out.extend(self.run_decode_phase(e, dec)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Context ingestion for a batch of prefill phases on engine `e`.
+    fn run_prefill_phase(&mut self, e: usize, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
+        let engine = Arc::clone(&self.engines[e]);
+        let seq_budget = engine.manifest.prefill_seq;
         let prompts: Vec<Vec<u8>> = jobs
             .iter()
-            .map(|j| {
-                if j.prompt.len() > seq_budget {
-                    j.prompt[j.prompt.len() - seq_budget..].to_vec()
-                } else {
-                    j.prompt.clone()
-                }
+            .map(|j| match &j.phase {
+                LlmPhase::Prefill { prompt } => clip_tail(prompt, seq_budget),
+                LlmPhase::Decode { .. } => unreachable!("partitioned by phase"),
             })
             .collect();
         let t0 = Instant::now();
-        let pre = self.engine.prefill(&prompts)?;
-        let prefill_end = Instant::now();
-        self.prefill_busy_s += prefill_end.duration_since(t0).as_secs_f64();
+        engine.prefill(&prompts)?;
+        let finished = Instant::now();
+        self.engine_busy[e].0 += finished.duration_since(t0).as_secs_f64();
+        Ok(jobs
+            .into_iter()
+            .map(|job| UnitOutcome {
+                job,
+                started: t0,
+                finished,
+                first_token: None,
+                output: Vec::new(),
+                tbt_sum_s: 0.0,
+                tbt_n: 0,
+            })
+            .collect())
+    }
+
+    /// Decode rounds for a batch of decode phases on engine `e`:
+    /// rebuild each lane's context (the stand-in for adopting the
+    /// transferred KV cache — the synthetic state is a pure function of
+    /// the context, so this reconstructs exactly what the prefill
+    /// engine held), sample the first token, then continuous decode
+    /// rounds until every lane hits its budget.
+    fn run_decode_phase(&mut self, e: usize, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
+        let engine = Arc::clone(&self.engines[e]);
+        let seq_budget = engine.manifest.prefill_seq;
+        let mut prompts = Vec::with_capacity(jobs.len());
+        let mut osls = Vec::with_capacity(jobs.len());
+        for j in &jobs {
+            match &j.phase {
+                LlmPhase::Decode { prompt, osl } => {
+                    prompts.push(clip_tail(prompt, seq_budget));
+                    osls.push(*osl);
+                }
+                LlmPhase::Prefill { .. } => unreachable!("partitioned by phase"),
+            }
+        }
+        let t0 = Instant::now();
+        let pre = engine.prefill(&prompts)?;
+        let ctx_end = Instant::now();
+        // KV adoption is decode-side work: charge it to the decode
+        // engine's decode budget, not prefill.
+        self.engine_busy[e].1 += ctx_end.duration_since(t0).as_secs_f64();
         let mut kv = pre.kv;
         let n = jobs.len();
 
@@ -598,36 +738,35 @@ impl Server {
         let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
         let mut next: Vec<u8> = vec![0; kv.bucket.max(n)];
         let mut first_token: Vec<Option<Instant>> = vec![None; n];
-        let mut last_token: Vec<Instant> = vec![prefill_end; n];
+        let mut last_token: Vec<Instant> = vec![ctx_end; n];
         let mut tbt_sum = vec![0.0f64; n];
         let mut tbt_n = vec![0u64; n];
         for i in 0..n {
-            if jobs[i].osl > 0 {
+            if osls[i] > 0 {
                 let tok = samplers[i].sample(&pre.logits[i]) as u8;
                 next[i] = tok;
                 outputs[i].push(tok);
-                first_token[i] = Some(prefill_end);
+                first_token[i] = Some(ctx_end);
             }
         }
-        let budget_cap = self
-            .engine
+        let budget_cap = engine
             .manifest
             .max_seq
             .saturating_sub(seq_budget)
             .saturating_sub(1);
-        let max_rounds = jobs
+        let max_rounds = osls
             .iter()
-            .map(|j| j.osl.saturating_sub(1))
+            .map(|o| o.saturating_sub(1))
             .max()
             .unwrap_or(0)
             .min(budget_cap);
         for _round in 0..max_rounds {
             let t_r0 = Instant::now();
-            let logits = self.engine.decode_step(&mut kv, &next)?;
+            let logits = engine.decode_step(&mut kv, &next)?;
             let now = Instant::now();
-            self.decode_busy_s += now.duration_since(t_r0).as_secs_f64();
+            self.engine_busy[e].1 += now.duration_since(t_r0).as_secs_f64();
             for i in 0..n {
-                if outputs[i].len() >= jobs[i].osl {
+                if outputs[i].len() >= osls[i] {
                     continue;
                 }
                 let tok = samplers[i].sample(&logits[i]) as u8;
@@ -644,15 +783,24 @@ impl Server {
             outcomes.push(UnitOutcome {
                 job,
                 started: t0,
-                prefill_end,
+                finished: last_token[i],
                 first_token: first_token[i],
-                last_token: last_token[i],
                 output: std::mem::take(&mut outputs[i]),
                 tbt_sum_s: tbt_sum[i],
                 tbt_n: tbt_n[i],
             });
         }
         Ok(outcomes)
+    }
+}
+
+/// Keep the most recent `budget` bytes of a prompt (the compiled prompt
+/// bucket ingests the tail — most recent context wins).
+fn clip_tail(prompt: &[u8], budget: usize) -> Vec<u8> {
+    if prompt.len() > budget {
+        prompt[prompt.len() - budget..].to_vec()
+    } else {
+        prompt.to_vec()
     }
 }
 
@@ -730,12 +878,16 @@ mod tests {
 
     #[test]
     #[cfg(not(feature = "pjrt"))]
-    fn dag_workload_runs_end_to_end_on_synthetic_engine() {
+    fn dag_workload_runs_end_to_end_on_engine_pool() {
         use crate::runtime::Engine;
 
         let mut plan = crate::plan::tests::tiny_plan();
         plan.cpu_workers = 2;
-        let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+        // Two engines: the prefill group and the decode group each get
+        // their own (the multi-engine scheduling path).
+        let mut server =
+            Server::from_plan_with_engines(Engine::synthetic_pool(2), &plan).unwrap();
+        assert_eq!(server.engine_count(), 2);
         // Keep modeled sleeps/transfers tiny so the test is fast.
         let mut cfg = server.config().clone();
         cfg.time_scale = 1e-3;
@@ -750,12 +902,22 @@ mod tests {
             .collect();
         let responses = server.run_workload(reqs).unwrap();
         assert_eq!(responses.len(), 6);
+        let m = crate::cost::model_profile::llama3_8b(crate::cost::Precision::Fp16);
         for r in &responses {
             assert!(r.is_ok(), "{:?}", r.error);
             assert_eq!(r.tokens, 8, "decode budget must be honoured");
             assert_eq!(r.stages.len(), 4, "all four plan nodes must run");
             assert!(r.e2e_s >= r.ttft_s);
             assert!(r.ttft_s > 0.0);
+            // Prefill (chassis 0) → decode (chassis 1/2) is a real
+            // cross-chassis KV handoff, charged per request.
+            let expect_kv =
+                crate::cost::kv::kv_cache_bytes(&m, "request 0 says ".len() as u64, 1);
+            assert!(
+                (r.kv_hop_bytes - expect_kv).abs() < 1.0,
+                "kv hop {} vs expected {expect_kv}",
+                r.kv_hop_bytes
+            );
             // Dependency order: each stage starts at/after its
             // predecessors end (cpu → prefill → decode → cpu).
             let by_node: std::collections::BTreeMap<usize, _> =

@@ -192,6 +192,85 @@ impl Fabric {
     }
 }
 
+/// Chassis-granular contended transfer clock — the **shared** edge
+/// timing model of the two execution backends. The DAG simulator
+/// (`cluster/dag.rs`) drives it in modeled seconds; the live server's
+/// dispatcher (`server/dag_exec.rs`) drives it in scaled wall-clock
+/// converted to modeled seconds — so a cross-chassis payload pays the
+/// same FIFO link reservation (bandwidth + latency + queueing behind
+/// earlier transfers) no matter which backend executes the plan. Slot
+/// addressing is deliberately dropped: plans place pipelines per
+/// chassis, and both backends model hops NIC-to-NIC.
+#[derive(Debug, Clone)]
+pub struct TransferClock {
+    fabric: Fabric,
+}
+
+impl TransferClock {
+    pub fn new(fabric: Fabric) -> TransferClock {
+        TransferClock { fabric }
+    }
+
+    /// Reserve the hop between two chassis; returns the completion time
+    /// in the caller's (modeled) clock. Same chassis ⇒ free.
+    pub fn transfer(
+        &mut self,
+        from_chassis: u32,
+        to_chassis: u32,
+        bytes: f64,
+        now_s: f64,
+    ) -> Result<f64> {
+        self.fabric.transfer(
+            NodeAddr {
+                chassis: from_chassis,
+                slot: 0,
+            },
+            NodeAddr {
+                chassis: to_chassis,
+                slot: 0,
+            },
+            bytes,
+            now_s,
+        )
+    }
+
+    /// Non-reserving estimate of the same hop.
+    pub fn estimate(&self, from_chassis: u32, to_chassis: u32, bytes: f64, now_s: f64) -> f64 {
+        self.fabric.estimate(
+            NodeAddr {
+                chassis: from_chassis,
+                slot: 0,
+            },
+            NodeAddr {
+                chassis: to_chassis,
+                slot: 0,
+            },
+            bytes,
+            now_s,
+        )
+    }
+
+    /// Grow the underlying fabric (fleet changes activate pipelines on
+    /// fresh chassis mid-run).
+    pub fn grow(&mut self, n_chassis: u32) {
+        self.fabric.grow(n_chassis);
+    }
+
+    /// Forget reservations so one clock description replays across runs.
+    pub fn reset(&mut self) {
+        self.fabric.reset();
+    }
+
+    /// Total bytes carried per tier (scale-up, scale-out).
+    pub fn carried(&self) -> (f64, f64) {
+        self.fabric.carried()
+    }
+
+    pub fn n_chassis(&self) -> u32 {
+        self.fabric.n_chassis
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +376,33 @@ mod tests {
         // Growing to a smaller size is a no-op.
         f.grow(2);
         assert_eq!(f.n_chassis, 4);
+    }
+
+    #[test]
+    fn transfer_clock_matches_raw_fabric() {
+        // The clock is the same FIFO reservation model at chassis
+        // granularity: identical completion times, identical contention.
+        let mut raw = fabric();
+        let mut clock = TransferClock::new(fabric());
+        let a = NodeAddr { chassis: 0, slot: 0 };
+        let c = NodeAddr { chassis: 1, slot: 0 };
+        for i in 0..3 {
+            let t_raw = raw.transfer(a, c, 5e9, i as f64 * 0.01).unwrap();
+            let t_clk = clock.transfer(0, 1, 5e9, i as f64 * 0.01).unwrap();
+            assert_eq!(t_raw, t_clk, "hop {i}");
+        }
+        assert_eq!(raw.carried(), clock.carried());
+        // Same-chassis hops are free, bad chassis rejected, grow works.
+        assert_eq!(clock.transfer(1, 1, 1e9, 7.0).unwrap(), 7.0);
+        assert!(clock.transfer(0, 9, 1.0, 0.0).is_err());
+        clock.grow(10);
+        assert_eq!(clock.n_chassis(), 10);
+        assert!(clock.transfer(0, 9, 1.0, 0.0).is_ok());
+        // Estimate does not reserve; reset forgets reservations.
+        let e1 = clock.estimate(0, 1, 1e9, 100.0);
+        assert_eq!(e1, clock.estimate(0, 1, 1e9, 100.0));
+        clock.reset();
+        assert_eq!(clock.carried(), (0.0, 0.0));
     }
 
     #[test]

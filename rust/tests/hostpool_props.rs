@@ -44,7 +44,7 @@ fn pool_storms_complete_within_capacity() {
                     if sleep_us > 0 {
                         thread::sleep(Duration::from_micros(sleep_us));
                     }
-                    Ok(())
+                    Ok(Vec::new())
                 }),
             });
         }
@@ -83,7 +83,7 @@ fn pool_resize_preserves_capacity_bound() {
                     epoch: 0,
                     work: Box::new(|| {
                         thread::sleep(Duration::from_micros(200));
-                        Ok(())
+                        Ok(Vec::new())
                     }),
                 });
             }

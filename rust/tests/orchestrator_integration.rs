@@ -137,6 +137,7 @@ fn orchestrator() -> Orchestrator {
             max_pipelines: 16,
         },
         backlog_factor: 1.0,
+        cpu_autoscale: None,
     };
     Orchestrator::new(cfg, small_plan(), "burst_then_lull", "sim").unwrap()
 }
@@ -246,6 +247,63 @@ fn orchestrated_run_is_deterministic() {
 }
 
 #[test]
+fn host_heavy_trace_scales_cpu_workers_through_the_loop() {
+    // A CPU-bottlenecked plan (slow tool stages, 2 workers): sustained
+    // host_util drives the cpu_workers autoscaler, the plan diff types
+    // the resize, and the simulator's worker pool grows mid-run.
+    let mut plan = small_plan();
+    plan.cpu_workers = 2;
+    plan.bindings[0].latency_s = 0.05;
+    plan.bindings[3].latency_s = 0.05;
+    let trace = generate(&TraceConfig {
+        n_requests: 120,
+        rate: 30.0,
+        isl_mean: 64,
+        osl_mean: 8,
+        sigma: 0.0,
+        seed: 13,
+    });
+    let cfg = OrchestratorConfig {
+        window_s: 1.0,
+        autoscale: AutoscalerConfig {
+            high_watermark: 2.0, // unreachable: pipelines never scale
+            low_watermark: -1.0,
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 16,
+        },
+        backlog_factor: 1.0,
+        cpu_autoscale: Some(AutoscalerConfig {
+            high_watermark: 0.8,
+            low_watermark: -1.0, // never shrink (keeps the test focused)
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 64,
+        }),
+    };
+    let orch = Orchestrator::new(cfg, plan, "host_heavy", "sim").unwrap();
+    let mut exec = SimExecutor::new(&trace);
+    let timeline = exec.orchestrate(orch).unwrap();
+    assert_eq!(exec.report.unwrap().n_requests, 120, "no request dropped");
+    let workers: Vec<u32> = timeline.plans().iter().map(|p| p.cpu_workers).collect();
+    assert!(
+        workers.len() >= 2,
+        "host pressure must emit a re-plan: {}",
+        timeline.summary()
+    );
+    assert!(
+        workers.windows(2).any(|w| w[1] > w[0]),
+        "cpu_workers must grow under host pressure: {workers:?}"
+    );
+    // The resize is typed in the diff stream.
+    assert!(timeline.events.iter().any(|e| matches!(
+        e,
+        TimelineEvent::Diff { diff, .. }
+            if diff.policy.iter().any(|p| p.field == "cpu_workers")
+    )));
+}
+
+#[test]
 fn steady_load_never_migrates() {
     // Mid-band utilization: the hysteresis must hold the fleet still.
     let trace = generate(&TraceConfig {
@@ -268,6 +326,7 @@ fn steady_load_never_migrates() {
             max_pipelines: 16,
         },
         backlog_factor: 1.0,
+        cpu_autoscale: None,
     };
     let orch = Orchestrator::new(cfg, plan, "steady", "sim").unwrap();
     let mut exec = SimExecutor::new(&trace);
