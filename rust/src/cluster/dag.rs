@@ -103,6 +103,9 @@ struct PrefillPipe {
     queue: VecDeque<Job>,
     busy: bool,
     busy_time: f64,
+    /// `busy_time` at the last window boundary (per-group windowed
+    /// utilization).
+    prev_busy: f64,
     next_batch: u64,
     in_flight: BTreeMap<u64, Vec<Job>>,
     /// Draining: accepts no new work; in-flight batches finish.
@@ -117,10 +120,33 @@ struct DecodePipe {
     waiting: VecDeque<Job>,
     round_scheduled: bool,
     busy_time: f64,
+    /// `busy_time` at the last window boundary (per-group windowed
+    /// utilization).
+    prev_busy: f64,
     /// Draining: active sessions finish here; waiting sessions migrate.
     retired: bool,
     created_s: f64,
     retired_s: Option<f64>,
+}
+
+/// One pipeline group's window observation: the per-hardware-generation
+/// signal the orchestrator's group-granular rebalancing consumes. Both
+/// backends produce these — the simulator from per-pipe busy time, the
+/// live server from its engine pool ([`crate::server::Server::group_utilization`]).
+#[derive(Debug, Clone)]
+pub struct GroupWindow {
+    pub role: Role,
+    /// Canonical shape key (see [`crate::plan::PipelineBinding::shape_key`]).
+    pub key: String,
+    pub device: String,
+    /// Live (non-retired) replicas at the window boundary.
+    pub replicas: u32,
+    /// Per-replica batch limit (backlog normalization).
+    pub max_batch: u64,
+    /// Device-time utilization of the group over the window.
+    pub util: f64,
+    /// Queued jobs at the boundary (prefill queues / decode waiting).
+    pub queue: usize,
 }
 
 /// Per-window observations handed to the [`FleetController`] — the raw
@@ -150,6 +176,10 @@ pub struct WindowStats {
     /// Live pipeline counts per role.
     pub prefill_pipes: u32,
     pub decode_pipes: u32,
+    /// Per-pipeline-group observations (empty when the backend cannot
+    /// attribute load to groups — the loop then falls back to
+    /// role-aggregate decisions).
+    pub groups: Vec<GroupWindow>,
 }
 
 /// What a fleet change actually did (returned to the controller so it
@@ -216,6 +246,21 @@ struct RunState {
     host_jobs: u64,
     prefill_jobs: u64,
     decode_jobs: u64,
+    /// LLM jobs dispatched per pipeline group, keyed by shape key —
+    /// the per-group counts the cross-backend conformance suite pins
+    /// against the live server's `server_group_jobs:*` counters.
+    jobs_by_group: BTreeMap<String, u64>,
+    /// Per-node ISL/OSL snapshotted at request arrival (the request's
+    /// lengths scaled by each node's `token_fraction` *as bound at
+    /// arrival*): a mid-run token-fraction retune only redirects
+    /// requests that arrive after it — in-flight work keeps the split
+    /// it was admitted under.
+    isl_snap: Vec<u64>,
+    osl_snap: Vec<u64>,
+    /// Busy-time aggregates at the last window boundary.
+    prev_pre_busy: f64,
+    prev_dec_busy: f64,
+    prev_cpu_busy: f64,
     /// Decode progress per flat job index.
     tokens_done: Vec<u64>,
     /// Pipeline chosen for an LLM job (role, pipe index).
@@ -272,6 +317,10 @@ pub struct DagDetail {
     /// Jobs dispatched to prefill / decode pipelines.
     pub prefill_jobs: u64,
     pub decode_jobs: u64,
+    /// LLM jobs dispatched per pipeline group (shape key → count) —
+    /// compared 1:1 against the live server's per-group counters by
+    /// `rust/tests/sim_vs_live.rs`.
+    pub jobs_by_group: BTreeMap<String, u64>,
     /// Mean sojourn (dispatch-ready → complete) per plan binding.
     pub node_mean_latency_s: Vec<f64>,
 }
@@ -314,6 +363,20 @@ type ShapeKey = (String, u32, u32, u64);
 fn shape_of(spec: &PipelineSpec) -> ShapeKey {
     (
         spec.device.name.to_string(),
+        spec.par.tp,
+        spec.par.pp,
+        spec.max_batch,
+    )
+}
+
+/// The canonical group key of a pipe — formatted by the same
+/// [`crate::plan::shape_key_of`] as [`crate::plan::PipelineBinding::shape_key`],
+/// so per-group stats and counters line up byte-for-byte across the
+/// planner, both backends, and the conformance suite.
+fn group_key(role: Role, spec: &PipelineSpec) -> String {
+    crate::plan::shape_key_of(
+        role,
+        spec.device.name,
         spec.par.tp,
         spec.par.pp,
         spec.max_batch,
@@ -377,20 +440,25 @@ impl DagSim {
         job.req * self.plan.bindings.len() + job.node
     }
 
-    /// Request ISL scaled by the node's token fraction (≥ 1 token).
-    fn isl_of(&self, job: Job, trace: &[Request]) -> u64 {
-        let tf = self.plan.bindings[job.node].token_fraction;
-        ((trace[job.req].isl as f64 * tf).round() as u64).max(1)
+    /// A request length scaled by `node`'s *currently bound* token
+    /// fraction (≥ 1 token) — evaluated once per request at arrival.
+    fn scaled_len(&self, len: u64, node: usize) -> u64 {
+        let tf = self.plan.bindings[node].token_fraction;
+        ((len as f64 * tf).round() as u64).max(1)
     }
 
-    /// Request OSL scaled by the node's token fraction (≥ 1 token).
-    fn osl_of(&self, job: Job, trace: &[Request]) -> u64 {
-        let tf = self.plan.bindings[job.node].token_fraction;
-        ((trace[job.req].osl as f64 * tf).round() as u64).max(1)
+    /// Node ISL as snapshotted at the job's request arrival.
+    fn isl_of(&self, st: &RunState, job: Job) -> u64 {
+        st.isl_snap[self.flat(job)]
+    }
+
+    /// Node OSL as snapshotted at the job's request arrival.
+    fn osl_of(&self, st: &RunState, job: Job) -> u64 {
+        st.osl_snap[self.flat(job)]
     }
 
     /// Start a prefill batch on pipe `pi` if idle with work queued.
-    fn try_start_prefill(&mut self, st: &mut RunState, pi: usize, now: f64, trace: &[Request]) {
+    fn try_start_prefill(&mut self, st: &mut RunState, pi: usize, now: f64) {
         let model = self.model.as_ref().expect("LLM job without model");
         let batch: Vec<Job> = {
             let p = &mut st.prefill[pi];
@@ -404,7 +472,7 @@ impl DagSim {
         // prompt in the batch.
         let isl = batch
             .iter()
-            .map(|j| self.isl_of(*j, trace))
+            .map(|j| self.isl_of(st, *j))
             .max()
             .unwrap_or(1);
         let p = &mut st.prefill[pi];
@@ -426,7 +494,7 @@ impl DagSim {
     }
 
     /// Schedule a decode round on pipe `di` if needed.
-    fn maybe_schedule_round(&mut self, st: &mut RunState, di: usize, now: f64, trace: &[Request]) {
+    fn maybe_schedule_round(&mut self, st: &mut RunState, di: usize, now: f64) {
         let model = self.model.as_ref().expect("LLM job without model");
         {
             let d = &mut st.decode[di];
@@ -446,7 +514,7 @@ impl DagSim {
         let ctx: u64 = st.decode[di]
             .active
             .iter()
-            .map(|j| self.isl_of(*j, trace) + st.tokens_done[self.flat(*j)])
+            .map(|j| self.isl_of(st, *j) + st.tokens_done[self.flat(*j)])
             .sum::<u64>()
             / st.decode[di].active.len() as u64;
         let d = &mut st.decode[di];
@@ -488,7 +556,7 @@ impl DagSim {
     }
 
     /// All dependencies of `job` satisfied: dispatch it to its stage.
-    fn dispatch(&mut self, st: &mut RunState, job: Job, now: f64, trace: &[Request]) {
+    fn dispatch(&mut self, st: &mut RunState, job: Job, now: f64) {
         st.ready_s[self.flat(job)] = now;
         let binding = &self.plan.bindings[job.node];
         match binding.stage {
@@ -510,9 +578,12 @@ impl DagSim {
                     Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
                     _ => self.pick_prefill(st, &binding.class.clone()),
                 };
+                *st.jobs_by_group
+                    .entry(group_key(Role::Prefill, &st.prefill[pi].spec))
+                    .or_insert(0) += 1;
                 st.pipe_of[fi] = Some((Role::Prefill, pi));
                 st.prefill[pi].queue.push_back(job);
-                self.try_start_prefill(st, pi, now, trace);
+                self.try_start_prefill(st, pi, now);
             }
             Stage::LlmDecode => {
                 st.decode_jobs += 1;
@@ -521,9 +592,12 @@ impl DagSim {
                     Some((Role::Decode, k)) if !st.decode[k].retired => k,
                     _ => self.pick_decode(st, &binding.class.clone()),
                 };
+                *st.jobs_by_group
+                    .entry(group_key(Role::Decode, &st.decode[di].spec))
+                    .or_insert(0) += 1;
                 st.pipe_of[fi] = Some((Role::Decode, di));
                 st.decode[di].waiting.push_back(job);
-                self.maybe_schedule_round(st, di, now, trace);
+                self.maybe_schedule_round(st, di, now);
             }
         }
     }
@@ -599,7 +673,7 @@ impl DagSim {
                         self.model.as_ref(),
                         from_stage,
                         succ_binding,
-                        self.isl_of(succ_job, trace),
+                        self.isl_of(st, succ_job),
                     );
                     st.kv_bytes_moved += bytes;
                     arrive = self.clock.transfer(from_ch, to_chassis, bytes, now)?;
@@ -612,29 +686,19 @@ impl DagSim {
 
     /// KV bytes currently resident on decode pipelines (active and
     /// waiting sessions at their decoded-so-far context).
-    fn kv_resident(&self, st: &RunState, trace: &[Request]) -> f64 {
+    fn kv_resident(&self, st: &RunState) -> f64 {
         let Some(m) = &self.model else { return 0.0 };
         let mut total = 0.0;
         for d in &st.decode {
             for j in d.active.iter().chain(d.waiting.iter()) {
-                let ctx = self.isl_of(*j, trace) + st.tokens_done[self.flat(*j)];
+                let ctx = self.isl_of(st, *j) + st.tokens_done[self.flat(*j)];
                 total += kv_cache_bytes(m, ctx, 1);
             }
         }
         total
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn window_stats(
-        &self,
-        st: &RunState,
-        t0: f64,
-        t1: f64,
-        prev_pre_busy: f64,
-        prev_dec_busy: f64,
-        prev_cpu_busy: f64,
-        trace: &[Request],
-    ) -> (WindowStats, f64, f64, f64) {
+    fn window_stats(&self, st: &mut RunState, t0: f64, t1: f64) -> WindowStats {
         let pre_busy: f64 = st
             .prefill
             .iter()
@@ -669,6 +733,62 @@ impl DagSim {
                 0.0
             }
         };
+
+        // Per-group view: pipes bucketed by (role, shape), windowed on
+        // each pipe's own prev_busy snapshot. Draining pipes keep
+        // contributing devices (same anti-oscillation rule as above)
+        // but only live ones count as replicas.
+        #[derive(Default)]
+        struct Acc {
+            device: String,
+            max_batch: u64,
+            busy_delta: f64,
+            devices: f64,
+            replicas: u32,
+            queue: usize,
+        }
+        let mut acc: BTreeMap<(Role, String), Acc> = BTreeMap::new();
+        for p in &st.prefill {
+            if p.retired && !p.busy && p.queue.is_empty() {
+                continue;
+            }
+            let a = acc
+                .entry((Role::Prefill, group_key(Role::Prefill, &p.spec)))
+                .or_default();
+            a.device = p.spec.device.name.to_string();
+            a.max_batch = p.spec.max_batch;
+            a.busy_delta += (p.busy_time - p.prev_busy) * p.spec.par.devices() as f64;
+            a.devices += p.spec.par.devices() as f64;
+            a.replicas += u32::from(!p.retired);
+            a.queue += p.queue.len();
+        }
+        for d in &st.decode {
+            if d.retired && d.active.is_empty() && d.waiting.is_empty() {
+                continue;
+            }
+            let a = acc
+                .entry((Role::Decode, group_key(Role::Decode, &d.spec)))
+                .or_default();
+            a.device = d.spec.device.name.to_string();
+            a.max_batch = d.spec.max_batch;
+            a.busy_delta += (d.busy_time - d.prev_busy) * d.spec.par.devices() as f64;
+            a.devices += d.spec.par.devices() as f64;
+            a.replicas += u32::from(!d.retired);
+            a.queue += d.waiting.len();
+        }
+        let groups: Vec<GroupWindow> = acc
+            .into_iter()
+            .map(|((role, key), a)| GroupWindow {
+                role,
+                key,
+                device: a.device,
+                replicas: a.replicas,
+                max_batch: a.max_batch,
+                util: util(a.busy_delta, 0.0, a.devices),
+                queue: a.queue,
+            })
+            .collect();
+
         let stats = WindowStats {
             t0,
             t1,
@@ -679,17 +799,28 @@ impl DagSim {
             } else {
                 st.win_sla_ok as f64 / st.win_completed as f64
             },
-            prefill_util: util(pre_busy, prev_pre_busy, pre_dev),
-            decode_util: util(dec_busy, prev_dec_busy, dec_dev),
-            host_util: util(st.cpu_busy_time, prev_cpu_busy, st.cpu_workers as f64),
+            prefill_util: util(pre_busy, st.prev_pre_busy, pre_dev),
+            decode_util: util(dec_busy, st.prev_dec_busy, dec_dev),
+            host_util: util(st.cpu_busy_time, st.prev_cpu_busy, st.cpu_workers as f64),
             prefill_queue: st.prefill.iter().map(|p| p.queue.len()).sum(),
             decode_queue: st.decode.iter().map(|d| d.waiting.len()).sum(),
             decode_active: st.decode.iter().map(|d| d.active.len()).sum(),
-            kv_resident_bytes: self.kv_resident(st, trace),
+            kv_resident_bytes: self.kv_resident(st),
             prefill_pipes: st.prefill.iter().filter(|p| !p.retired).count() as u32,
             decode_pipes: st.decode.iter().filter(|d| !d.retired).count() as u32,
+            groups,
         };
-        (stats, pre_busy, dec_busy, st.cpu_busy_time)
+        // Roll the window: aggregate and per-pipe snapshots.
+        st.prev_pre_busy = pre_busy;
+        st.prev_dec_busy = dec_busy;
+        st.prev_cpu_busy = st.cpu_busy_time;
+        for p in &mut st.prefill {
+            p.prev_busy = p.busy_time;
+        }
+        for d in &mut st.decode {
+            d.prev_busy = d.busy_time;
+        }
+        stats
     }
 
     /// Migrate the running fleet to `target`'s pipeline layout.
@@ -705,7 +836,6 @@ impl DagSim {
         st: &mut RunState,
         target: &ExecutionPlan,
         now: f64,
-        trace: &[Request],
     ) -> Result<FleetChangeStats> {
         target.validate()?;
         if target.model != self.plan.model {
@@ -713,6 +843,24 @@ impl DagSim {
                 "fleet change cannot swap model `{}` -> `{}` mid-run",
                 self.plan.model, target.model
             )));
+        }
+        // Adopt binding-level retunes (token-fraction shifts between
+        // sibling classes, refreshed latency estimates) when the DAG
+        // *structure* is unchanged: requests arriving after this point
+        // snapshot the new fractions; in-flight work keeps the lengths
+        // it was admitted under (see `RunState::isl_snap`). A structural
+        // change (ops, classes, deps) is not adoptable mid-run — the
+        // orchestrator rejects those re-plans with a typed reason.
+        let same_structure = target.bindings.len() == self.plan.bindings.len()
+            && target
+                .bindings
+                .iter()
+                .zip(&self.plan.bindings)
+                .all(|(a, b)| {
+                    a.op == b.op && a.class == b.class && a.stage == b.stage && a.deps == b.deps
+                });
+        if same_structure {
+            self.plan.bindings = target.bindings.clone();
         }
         let placement = target.placement()?;
         let max_chassis = placement
@@ -751,6 +899,7 @@ impl DagSim {
                         queue: VecDeque::new(),
                         busy: false,
                         busy_time: 0.0,
+                        prev_busy: 0.0,
                         next_batch: 0,
                         in_flight: BTreeMap::new(),
                         retired: false,
@@ -801,6 +950,7 @@ impl DagSim {
                         waiting: VecDeque::new(),
                         round_scheduled: false,
                         busy_time: 0.0,
+                        prev_busy: 0.0,
                         retired: false,
                         created_s: now,
                         retired_s: None,
@@ -859,7 +1009,7 @@ impl DagSim {
             let fi = self.flat(job);
             st.pipe_of[fi] = Some((Role::Prefill, pi));
             st.prefill[pi].queue.push_back(job);
-            self.try_start_prefill(st, pi, now, trace);
+            self.try_start_prefill(st, pi, now);
         }
         for (job, from_ch) in kv_moves {
             let class = self.plan.bindings[job.node].class.clone();
@@ -867,7 +1017,7 @@ impl DagSim {
             let to_ch = st.decode[di].spec.chassis;
             let bytes = match &self.model {
                 Some(m) => {
-                    let ctx = self.isl_of(job, trace) + st.tokens_done[self.flat(job)];
+                    let ctx = self.isl_of(st, job) + st.tokens_done[self.flat(job)];
                     kv_cache_bytes(m, ctx, 1)
                 }
                 None => 0.0,
@@ -940,6 +1090,7 @@ impl DagSim {
                     queue: VecDeque::new(),
                     busy: false,
                     busy_time: 0.0,
+                    prev_busy: 0.0,
                     next_batch: 0,
                     in_flight: BTreeMap::new(),
                     retired: false,
@@ -957,6 +1108,7 @@ impl DagSim {
                     waiting: VecDeque::new(),
                     round_scheduled: false,
                     busy_time: 0.0,
+                    prev_busy: 0.0,
                     retired: false,
                     created_s: 0.0,
                     retired_s: None,
@@ -977,6 +1129,12 @@ impl DagSim {
             host_jobs: 0,
             prefill_jobs: 0,
             decode_jobs: 0,
+            jobs_by_group: BTreeMap::new(),
+            isl_snap: vec![0; n_req * n_nodes],
+            osl_snap: vec![0; n_req * n_nodes],
+            prev_pre_busy: 0.0,
+            prev_dec_busy: 0.0,
+            prev_cpu_busy: 0.0,
             tokens_done: vec![0; n_req * n_nodes],
             pipe_of: vec![None; n_req * n_nodes],
             nodes_left: vec![n_nodes; n_req],
@@ -1002,9 +1160,6 @@ impl DagSim {
         }
 
         let mut win_t0 = 0.0f64;
-        let mut prev_pre_busy = 0.0f64;
-        let mut prev_dec_busy = 0.0f64;
-        let mut prev_cpu_busy = 0.0f64;
         let mut events = 0u64;
         let mut makespan = 0.0f64;
         while let Some(Reverse(Event { t, ev, .. })) = self.heap.pop() {
@@ -1020,9 +1175,17 @@ impl DagSim {
             match ev {
                 Ev::Arrival(req) => {
                     st.win_arrivals += 1;
+                    // Snapshot every node's token-fraction-scaled
+                    // lengths now: a later retune redirects only
+                    // requests that have not arrived yet.
+                    for node in 0..n_nodes {
+                        let fi = req * n_nodes + node;
+                        st.isl_snap[fi] = self.scaled_len(trace[req].isl, node);
+                        st.osl_snap[fi] = self.scaled_len(trace[req].osl, node);
+                    }
                     for node in 0..n_nodes {
                         if self.indeg[node] == 0 {
-                            self.dispatch(&mut st, Job { req, node }, t, trace);
+                            self.dispatch(&mut st, Job { req, node }, t);
                         }
                     }
                 }
@@ -1030,7 +1193,7 @@ impl DagSim {
                     let fi = self.flat(job);
                     st.remaining[fi] -= 1;
                     if st.remaining[fi] == 0 {
-                        self.dispatch(&mut st, job, t, trace);
+                        self.dispatch(&mut st, job, t);
                     }
                 }
                 Ev::CpuDone(job) => {
@@ -1058,7 +1221,7 @@ impl DagSim {
                         self.complete_node(&mut st, job, t, trace)?;
                     }
                     if !st.prefill[pipe].retired {
-                        self.try_start_prefill(&mut st, pipe, t, trace);
+                        self.try_start_prefill(&mut st, pipe, t);
                     }
                 }
                 Ev::DecodeRound(di) => {
@@ -1077,14 +1240,14 @@ impl DagSim {
                         st.last_token_s[fi] = t;
                         st.tokens_done[fi] += 1;
                         st.output_tokens += 1;
-                        if st.tokens_done[fi] >= self.osl_of(job, trace) {
+                        if st.tokens_done[fi] >= self.osl_of(&st, job) {
                             self.complete_node(&mut st, job, t, trace)?;
                         } else {
                             still.push(job);
                         }
                     }
                     st.decode[di].active = still;
-                    self.maybe_schedule_round(&mut st, di, t, trace);
+                    self.maybe_schedule_round(&mut st, di, t);
                 }
                 Ev::KvMigrated { job, to } => {
                     // Destination may itself have retired since the
@@ -1098,26 +1261,15 @@ impl DagSim {
                     let fi = self.flat(job);
                     st.pipe_of[fi] = Some((Role::Decode, di));
                     st.decode[di].waiting.push_back(job);
-                    self.maybe_schedule_round(&mut st, di, t, trace);
+                    self.maybe_schedule_round(&mut st, di, t);
                 }
                 Ev::WindowTick => {
-                    let (stats, pre_busy, dec_busy, cpu_busy) = self.window_stats(
-                        &st,
-                        win_t0,
-                        t,
-                        prev_pre_busy,
-                        prev_dec_busy,
-                        prev_cpu_busy,
-                        trace,
-                    );
-                    prev_pre_busy = pre_busy;
-                    prev_dec_busy = dec_busy;
-                    prev_cpu_busy = cpu_busy;
+                    let stats = self.window_stats(&mut st, win_t0, t);
                     st.win_arrivals = 0;
                     st.win_completed = 0;
                     st.win_sla_ok = 0;
                     if let Some(next) = ctl.on_window(&stats) {
-                        let fcs = self.apply_fleet(&mut st, &next, t, trace)?;
+                        let fcs = self.apply_fleet(&mut st, &next, t)?;
                         ctl.on_applied(t, &fcs);
                     }
                     win_t0 = t;
@@ -1139,6 +1291,7 @@ impl DagSim {
             host_jobs: st.host_jobs,
             prefill_jobs: st.prefill_jobs,
             decode_jobs: st.decode_jobs,
+            jobs_by_group: st.jobs_by_group.clone(),
             node_mean_latency_s: (0..n_nodes)
                 .map(|i| {
                     if st.node_lat_n[i] > 0 {
@@ -1508,6 +1661,125 @@ mod tests {
             "grown pool must beat the narrow run: {} vs {}",
             r_grown.makespan_s,
             r_narrow.makespan_s
+        );
+    }
+
+    #[test]
+    fn per_group_jobs_and_window_signals_are_reported() {
+        use crate::plan::presets::mixed_generation;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 1);
+        let t = trace(16, 8.0);
+        let mut sim = DagSim::new(&plan).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r = sim.run_controlled(&t, 0.5, &mut ctl).unwrap();
+        assert_eq!(r.n_requests, 16);
+        let detail = sim.last_detail().unwrap();
+        // Every request runs one prefill (H100) and both decode
+        // siblings (one per generation): the per-group ledger is exact.
+        assert_eq!(
+            detail.jobs_by_group.get("prefill H100 tp1 pp1 b8"),
+            Some(&16)
+        );
+        assert_eq!(
+            detail.jobs_by_group.get("decode H100 tp1 pp1 b16"),
+            Some(&16)
+        );
+        assert_eq!(
+            detail.jobs_by_group.get("decode A100 tp1 pp1 b16"),
+            Some(&16)
+        );
+        assert_eq!(detail.jobs_by_group.values().sum::<u64>(), 48);
+    }
+
+    /// Controller that records every window's group observations.
+    struct GroupWatcher {
+        seen: Vec<Vec<GroupWindow>>,
+    }
+
+    impl FleetController for GroupWatcher {
+        fn on_window(&mut self, stats: &WindowStats) -> Option<ExecutionPlan> {
+            self.seen.push(stats.groups.clone());
+            None
+        }
+    }
+
+    #[test]
+    fn window_stats_carry_per_group_utilization() {
+        use crate::plan::presets::mixed_generation;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 1);
+        let t = trace(24, 12.0);
+        let mut sim = DagSim::new(&plan).unwrap();
+        let mut ctl = GroupWatcher { seen: Vec::new() };
+        sim.run_controlled(&t, 0.5, &mut ctl).unwrap();
+        assert!(!ctl.seen.is_empty());
+        // Every window names all three groups with sane readings.
+        for groups in &ctl.seen {
+            assert_eq!(groups.len(), 3, "{groups:?}");
+            for g in groups {
+                assert!((0.0..=1.0).contains(&g.util), "{g:?}");
+                assert!(g.replicas >= 1);
+                assert!(g.max_batch > 0);
+            }
+        }
+        // Some window saw decode work on both generations.
+        let busy = |key: &str| {
+            ctl.seen
+                .iter()
+                .flatten()
+                .any(|g| g.key == key && g.util > 0.0)
+        };
+        assert!(busy("decode H100 tp1 pp1 b16"));
+        assert!(busy("decode A100 tp1 pp1 b16"));
+    }
+
+    #[test]
+    fn token_fraction_retune_applies_to_future_arrivals_only() {
+        use crate::plan::presets::mixed_generation;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 1); // 0.5/0.5
+        // Retuned mid-run: the H100 sibling's fraction doubles (a
+        // deliberately lopsided retune so the adoption is observable in
+        // the token totals — a share-preserving retune conserves them).
+        let mut retuned = plan.clone();
+        retuned.bindings[2].token_fraction = 1.0;
+        // Arrivals spread over ~8 s; the retune lands at t=2 s.
+        let t = trace(32, 4.0);
+        let mut sim = DagSim::new(&plan).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(0, retuned)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r = sim.run_controlled(&t, 2.0, &mut ctl).unwrap();
+        assert_eq!(r.n_requests, 32, "no request dropped across the retune");
+        assert_eq!(ctl.applied.len(), 1, "the retune-only change applies");
+        assert_eq!(ctl.applied[0].activated, 0, "no pipeline churn");
+        // Requests arriving before the retune decode 0.5+0.5 of their
+        // OSL; later arrivals decode 1.0+0.5 — the mixed total sits
+        // strictly between the two extremes, proving the new fractions
+        // reached future arrivals and *only* future arrivals.
+        let total_at = |f2: f64, f3: f64| -> u64 {
+            t.iter()
+                .map(|r| {
+                    ((r.osl as f64 * f2).round() as u64).max(1)
+                        + ((r.osl as f64 * f3).round() as u64).max(1)
+                })
+                .sum()
+        };
+        let all_old = total_at(0.5, 0.5);
+        let all_new = total_at(1.0, 0.5);
+        assert!(
+            r.output_tokens > all_old && r.output_tokens < all_new,
+            "mixed split must land between the extremes: {} not in ({all_old}, {all_new})",
+            r.output_tokens
         );
     }
 

@@ -21,6 +21,6 @@ pub mod dag;
 pub mod sim;
 pub mod trace;
 
-pub use dag::{DagDetail, DagSim, FleetChangeStats, FleetController, WindowStats};
+pub use dag::{DagDetail, DagSim, FleetChangeStats, FleetController, GroupWindow, WindowStats};
 pub use sim::{simulate_plan, ClusterSim, Placement, PipelineSpec, SimReport};
 pub use trace::{bursty, Request, TraceConfig};

@@ -79,7 +79,8 @@ USAGE:
                           [--requests N] [--max-new N] [--synthetic]
   agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
                           [--rate R] [--requests N] [--voice]
-  agentic-hetero orchestrate [--plan PLAN.json | --agent voice] [--trace bursty|steady|voice]
+  agentic-hetero orchestrate [--plan PLAN.json | --agent voice | --fleet mixed]
+                          [--trace bursty|steady|voice] [--old A100] [--new H100]
                           [--rate R] [--requests N] [--window S] [--config FILE]
                           [--out TIMELINE.json]
 
@@ -91,6 +92,10 @@ in-process byte LM so no artifacts are needed), `plan diff` renders the
 typed PlanDiff between two saved plans, and `orchestrate` runs the
 closed control loop (observe -> decide -> re-plan -> diff -> migrate ->
 apply) against a traced load swing, emitting a replayable timeline.
+`orchestrate --fleet mixed` serves a two-generation fleet (decode split
+across --new and --old hardware), rebalances load between the
+generations group-by-group, and closes with the paper's TCO comparison
+against the newest-homogeneous fleet of equal decode capacity.
 ";
 
 fn cmd_repro(args: &Args) -> i32 {
@@ -521,27 +526,65 @@ fn cmd_orchestrate(args: &Args) -> i32 {
     } else {
         Sla::EndToEnd(sla_ms / 1e3)
     };
-    let (plan, graph) = match args.get("plan") {
-        Some(path) => match load_plan(path) {
-            Ok(p) => (p, None),
-            Err(e) => {
-                eprintln!("{e}");
-                return 1;
-            }
-        },
-        None => {
-            let g = build_agent(args);
-            let mut cfg = PlannerConfig::default();
-            cfg.sla = sla;
-            match Planner::new(cfg).plan(&g) {
-                Ok(p) => (p, Some(g)),
+    // `--fleet mixed`: the paper's headline scenario — a two-generation
+    // decode fleet (--new / --old devices) the group-granular retarget
+    // rebalances, with no slow-path planner attached (structural
+    // retargeting is exactly the path under test).
+    let mixed_fleet = args.get_or("fleet", "") == "mixed";
+    let new_dev = args.get_or("new", "H100").to_string();
+    let old_dev = args.get_or("old", "A100").to_string();
+    let (plan, graph) = if mixed_fleet {
+        if new_dev.eq_ignore_ascii_case(&old_dev) {
+            // Two groups of one device share a shape key, which folds
+            // every group-granular surface (rebalance lookups, streaks,
+            // per-group counters) into one entry — not a mixed fleet.
+            eprintln!(
+                "mixed fleet needs two distinct generations \
+                 (--new {new_dev} --old {old_dev})"
+            );
+            return 2;
+        }
+        let model = args.get_or("model", "8b-fp16");
+        let p = agentic_hetero::plan::presets::mixed_generation(model, &new_dev, &old_dev, 2, 2);
+        if let Err(e) = p.validate() {
+            eprintln!("mixed fleet: {e} (try --new H100 --old A100)");
+            return 2;
+        }
+        (p, None)
+    } else {
+        match args.get("plan") {
+            Some(path) => match load_plan(path) {
+                Ok(p) => (p, None),
                 Err(e) => {
-                    eprintln!("planning failed: {e}");
+                    eprintln!("{e}");
                     return 1;
+                }
+            },
+            None => {
+                let g = build_agent(args);
+                let mut cfg = PlannerConfig::default();
+                cfg.sla = sla;
+                match Planner::new(cfg).plan(&g) {
+                    Ok(p) => (p, Some(g)),
+                    Err(e) => {
+                        eprintln!("planning failed: {e}");
+                        return 1;
+                    }
                 }
             }
         }
     };
+
+    // Captured before the plan moves into the orchestrator: the
+    // homogeneous TCO baseline sizes itself to the *final* plan's
+    // decode total, falling back to the initial fleet's if the run
+    // never re-planned.
+    let initial_decode_total: u32 = plan
+        .pipelines
+        .iter()
+        .filter(|g| g.role == agentic_hetero::plan::Role::Decode)
+        .map(|g| g.replicas)
+        .sum();
 
     let trace_kind = args.get_or("trace", "bursty").to_string();
     let tc = TraceConfig {
@@ -597,11 +640,57 @@ fn cmd_orchestrate(args: &Args) -> i32 {
     match exec.orchestrate(orch) {
         Ok(timeline) => {
             println!("{}", timeline.summary());
+            println!(
+                "cross-group rebalances: {}",
+                timeline.n_cross_group_rebalances()
+            );
             if let Some(r) = &exec.report {
                 println!("{}", r.summary());
             }
             for (k, v) in metrics.snapshot() {
                 println!("{k} {v}");
+            }
+            // The paper's headline comparison: the orchestrated mixed
+            // fleet's serving cost vs a newest-homogeneous fleet of
+            // equal decode capacity on the *same* trace.
+            if mixed_fleet {
+                if let Some(mixed_report) = &exec.report {
+                    let dec_total: u32 = timeline
+                        .plans()
+                        .last()
+                        .map(|p| {
+                            p.pipelines
+                                .iter()
+                                .filter(|g| g.role == agentic_hetero::plan::Role::Decode)
+                                .map(|g| g.replicas)
+                                .sum()
+                        })
+                        .unwrap_or(initial_decode_total)
+                        .max(1);
+                    let homog = agentic_hetero::plan::presets::homogeneous(
+                        args.get_or("model", "8b-fp16"),
+                        &new_dev,
+                        dec_total,
+                    );
+                    match simulate_plan(&homog, &trace) {
+                        Ok(hr) => {
+                            println!("\nTCO, same trace (modeled $/Mtok):");
+                            println!(
+                                "  mixed {new_dev}+{old_dev}: {:.4}  ({:.0} tok/s)",
+                                mixed_report.usd_per_mtok, mixed_report.tokens_per_s
+                            );
+                            println!(
+                                "  homogeneous {new_dev} x{dec_total}: {:.4}  ({:.0} tok/s)",
+                                hr.usd_per_mtok, hr.tokens_per_s
+                            );
+                            println!(
+                                "  mixed/homogeneous cost ratio: {:.3}",
+                                mixed_report.usd_per_mtok / hr.usd_per_mtok.max(1e-12)
+                            );
+                        }
+                        Err(e) => eprintln!("homogeneous comparison failed: {e}"),
+                    }
+                }
             }
             if let Some(path) = args.get("out") {
                 if let Err(e) = std::fs::write(path, timeline.to_json_string()) {

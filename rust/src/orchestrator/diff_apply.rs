@@ -10,14 +10,23 @@
 //!   are ordered before the drains they replace;
 //! * the final capacity map equals the target fleet exactly;
 //! * [`retarget`] always yields a plan that passes
-//!   [`ExecutionPlan::validate`], keeps ≥ 1 replica per role, and
-//!   re-packs chassis consecutively.
+//!   [`ExecutionPlan::validate`], keeps ≥ 1 replica per *group* (every
+//!   bound class stays servable), and re-packs chassis consecutively.
+//!
+//! Retargeting is **heterogeneity-aware**: a role's replica delta is
+//! distributed across its pipeline groups by the cost model's
+//! [`score_groups`] ranking — growth lands on the cheapest
+//! $/throughput group, shrinkage retires the worst-TCO capacity first
+//! — and [`retune_token_fractions`] re-aligns expert-style sibling
+//! bindings' token splits with the resulting per-class capacity, so a
+//! replica shift between hardware generations also shifts the load.
 
 use std::collections::BTreeMap;
 
-use crate::plan::{ExecutionPlan, Role};
+use crate::plan::{ExecutionPlan, Role, Stage};
+use crate::planner::autoscale::{cheapest, rank, score_groups};
 use crate::planner::migration::{
-    plan_migration, role_replicas, MigrationPlan, MigrationStep, RoleMap,
+    plan_migration_routed, role_replicas, KvRoute, MigrationPlan, MigrationStep, RoleMap,
 };
 use crate::{Error, Result};
 
@@ -45,55 +54,204 @@ pub fn role_capacity(plan: &ExecutionPlan, role: Role) -> f64 {
         .sum()
 }
 
-/// Emit a new plan with the per-role replica totals moved to
-/// `prefill_total` / `decode_total` (each clamped to ≥ 1).
-///
-/// The delta lands on the role's first (primary) pipeline group — the
-/// one the configuration explorer shaped — and chassis are re-packed
-/// consecutively. Admission rate follows decode capacity so the token
-/// bucket tracks what the resized fleet can actually absorb.
-pub fn retarget(plan: &ExecutionPlan, prefill_total: u32, decode_total: u32) -> ExecutionPlan {
-    let mut out = plan.clone();
-    for (role, want_total) in [
-        (Role::Prefill, prefill_total.max(1)),
-        (Role::Decode, decode_total.max(1)),
-    ] {
-        let have_total = role_replicas(plan, role);
-        if have_total == 0 {
-            continue; // role absent (e.g. CPU-only plan)
-        }
-        let delta = want_total as i64 - have_total as i64;
-        if delta == 0 {
-            continue;
-        }
-        if let Some(g) = out.pipelines.iter_mut().find(|p| p.role == role) {
-            g.replicas = (g.replicas as i64 + delta).max(1) as u32;
-        }
-    }
-    // Re-pack chassis consecutively in declaration order.
+/// Re-pack chassis consecutively and track admission to the new decode
+/// capacity — the finishing step every retarget/rebalance shares.
+fn finalize_fleet(from: &ExecutionPlan, out: &mut ExecutionPlan) {
     let mut chassis = 0u32;
     for p in &mut out.pipelines {
         p.chassis = chassis;
         chassis += p.replicas;
     }
-    // Admission tracks decode capacity.
-    let old_cap = role_capacity(plan, Role::Decode);
-    let new_cap = role_capacity(&out, Role::Decode);
+    let old_cap = role_capacity(from, Role::Decode);
+    let new_cap = role_capacity(out, Role::Decode);
     if old_cap > 0.0 && new_cap > 0.0 && (new_cap - old_cap).abs() > 0.0 {
-        out.admission.rate = plan.admission.rate * new_cap / old_cap;
+        out.admission.rate = from.admission.rate * new_cap / old_cap;
+    }
+}
+
+/// Indices of a role's pipeline groups, in declaration order.
+fn groups_of(plan: &ExecutionPlan, role: Role) -> Vec<usize> {
+    plan.pipelines
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.role == role)
+        .map(|(g, _)| g)
+        .collect()
+}
+
+/// Distribute a role's replica total across its groups by the cost
+/// model's ranking: growth goes to the **cheapest** $/throughput group,
+/// shrinkage retires the **worst-TCO** groups first, flooring every
+/// group at one replica so no bound class is ever stranded. Ties break
+/// on declaration order (deterministic).
+fn distribute_role(out: &mut ExecutionPlan, role: Role, want_total: u32) {
+    let idxs = groups_of(out, role);
+    if idxs.is_empty() {
+        return; // role absent (e.g. CPU-only plan)
+    }
+    let have: u32 = idxs.iter().map(|&g| out.pipelines[g].replicas).sum();
+    // Floor: one replica per group keeps every class servable.
+    let want = want_total.max(idxs.len() as u32);
+    if want == have {
+        return;
+    }
+    let scores = score_groups(out, role);
+    if want > have {
+        // Buy the cheapest capacity that serves this role.
+        let best = cheapest(&scores).map(|s| s.group).unwrap_or(idxs[0]);
+        out.pipelines[best].replicas += want - have;
+    } else {
+        // Retire the worst-TCO capacity first.
+        let mut order: Vec<_> = scores.iter().collect();
+        order.sort_by(|a, b| rank(b, a));
+        let mut need = have - want;
+        for s in order {
+            if need == 0 {
+                break;
+            }
+            let take = need.min(out.pipelines[s.group].replicas.saturating_sub(1));
+            out.pipelines[s.group].replicas -= take;
+            need -= take;
+        }
+    }
+}
+
+/// Emit a new plan with the per-role replica totals moved to
+/// `prefill_total` / `decode_total` (each clamped to ≥ 1 per group).
+///
+/// The delta is distributed across the role's pipeline groups by the
+/// planner's cost model (see [`distribute_role`]) — on a heterogeneous
+/// fleet, scale-ups buy the cheapest capacity and scale-downs retire
+/// the worst-TCO generation first; on a single-group fleet this is the
+/// classic primary-group resize. Chassis are re-packed consecutively
+/// and the admission rate follows decode capacity so the token bucket
+/// tracks what the resized fleet can actually absorb.
+pub fn retarget(plan: &ExecutionPlan, prefill_total: u32, decode_total: u32) -> ExecutionPlan {
+    let mut out = plan.clone();
+    distribute_role(&mut out, Role::Prefill, prefill_total.max(1));
+    distribute_role(&mut out, Role::Decode, decode_total.max(1));
+    finalize_fleet(plan, &mut out);
+    out
+}
+
+/// Pure cross-group rebalance: move `n` replicas of `role` from the
+/// group keyed `from_key` to the group keyed `to_key` (shape keys, see
+/// [`crate::plan::PipelineBinding::shape_key`]), leaving the role total
+/// unchanged. The source keeps ≥ 1 replica; unknown keys are a no-op.
+pub fn rebalance(
+    plan: &ExecutionPlan,
+    role: Role,
+    from_key: &str,
+    to_key: &str,
+    n: u32,
+) -> ExecutionPlan {
+    let mut out = plan.clone();
+    let find = |p: &ExecutionPlan, key: &str| -> Option<usize> {
+        p.pipelines
+            .iter()
+            .enumerate()
+            .find(|(_, g)| g.role == role && g.shape_key() == key)
+            .map(|(g, _)| g)
+    };
+    let (Some(src), Some(dst)) = (find(&out, from_key), find(&out, to_key)) else {
+        return out;
+    };
+    if src == dst {
+        return out;
+    }
+    let moved = n.min(out.pipelines[src].replicas.saturating_sub(1));
+    if moved == 0 {
+        return out;
+    }
+    out.pipelines[src].replicas -= moved;
+    out.pipelines[dst].replicas += moved;
+    finalize_fleet(plan, &mut out);
+    out
+}
+
+/// Re-align expert-style sibling bindings' token fractions with the
+/// deployed per-class capacity share. Siblings are LLM bindings of the
+/// same stage with identical dependency lists and ≥ 2 distinct classes
+/// — the split the mixed-generation plans route load through. The
+/// sibling set's total fraction is preserved **exactly** (shares sum
+/// to 1, no per-member floor that could push the partition above its
+/// total at extreme capacity ratios; each member capped at 1.0 for
+/// plan validity), so a replica shift between generations moves the
+/// *work*, not just the hardware. Sets with a zero-capacity member are
+/// left untouched — a fraction of 0 would not validate.
+pub fn retune_token_fractions(plan: &ExecutionPlan) -> ExecutionPlan {
+    let mut out = plan.clone();
+    let mut sets: BTreeMap<(&'static str, Vec<usize>), Vec<usize>> = BTreeMap::new();
+    for (i, b) in plan.bindings.iter().enumerate() {
+        let role = match b.stage {
+            Stage::LlmPrefill => Role::Prefill,
+            Stage::LlmDecode => Role::Decode,
+            Stage::Cpu => continue,
+        };
+        sets.entry((role.name(), b.deps.clone())).or_default().push(i);
+    }
+    for ((role_name, _), members) in sets {
+        if members.len() < 2 {
+            continue;
+        }
+        let distinct: std::collections::BTreeSet<&str> = members
+            .iter()
+            .map(|&i| plan.bindings[i].class.as_str())
+            .collect();
+        if distinct.len() < 2 {
+            continue;
+        }
+        let role = if role_name == Role::Prefill.name() {
+            Role::Prefill
+        } else {
+            Role::Decode
+        };
+        let class_capacity = |class: &str| -> f64 {
+            plan.pipelines
+                .iter()
+                .filter(|p| p.role == role && p.device == class)
+                .map(|p| (p.replicas as u64 * p.max_batch) as f64)
+                .sum()
+        };
+        // Members sharing a class split that class's capacity between
+        // them, so per-member weights never double-count a class.
+        let mut members_on: BTreeMap<&str, f64> = BTreeMap::new();
+        for &i in &members {
+            *members_on.entry(plan.bindings[i].class.as_str()).or_insert(0.0) += 1.0;
+        }
+        let weight = |i: usize| -> f64 {
+            let class = plan.bindings[i].class.as_str();
+            class_capacity(class) / members_on[class]
+        };
+        let total_fraction: f64 = members
+            .iter()
+            .map(|&i| plan.bindings[i].token_fraction)
+            .sum();
+        let total_weight: f64 = members.iter().map(|&i| weight(i)).sum();
+        if total_weight <= 0.0 || members.iter().any(|&i| weight(i) <= 0.0) {
+            continue;
+        }
+        for &i in &members {
+            let share = weight(i) / total_weight;
+            out.bindings[i].token_fraction = (total_fraction * share).min(1.0);
+        }
     }
     out
 }
 
 /// Lower the move `from → to` into an ordered, capacity-safe
-/// [`MigrationPlan`], pricing the KV motion over `from`'s fabric.
+/// [`MigrationPlan`], pricing the KV motion on the contended transfer
+/// clock over `from`'s fabric.
 ///
 /// Capacity is compared at *shape* granularity ([`shape_map_of`]), so
 /// same-device rebuilds (TP/PP/batch changes) produce real drain +
 /// activate + KV-transfer steps — matching what `DagSim::apply_fleet`
 /// actually does to the fleet. `kv_resident_bytes` is the KV currently
 /// parked on decode pipelines (the simulator reports it per window);
-/// each drained decode pipeline is priced at its share.
+/// each drained decode pipeline is priced at its share. Every drained
+/// decode shape gets a real [`KvRoute`]: its own chassis to the chassis
+/// of the cheapest surviving decode group in the target — the
+/// cross-group move the heterogeneous retarget produces.
 pub fn lower_diff(
     from: &ExecutionPlan,
     to: &ExecutionPlan,
@@ -104,7 +262,52 @@ pub fn lower_diff(
     let decode_pipes = role_replicas(from, Role::Decode).max(1);
     let kv_per_pipeline = (kv_resident_bytes / decode_pipes as f64).max(0.0);
     let fabric = from.build_fabric()?;
-    Ok(plan_migration(&cur, &tgt, kv_per_pipeline, &fabric))
+
+    // Cheapest surviving decode capacity in the target absorbs the
+    // drained sessions (the same ranking that placed the growth). The
+    // migration runs on the *current* fleet layout, so the absorber's
+    // chassis is resolved in `from` when its shape already exists there
+    // (the target's re-packed numbering only applies after the move).
+    let target_scores = score_groups(to, Role::Decode);
+    let absorber = cheapest(&target_scores).map(|s| {
+        let chassis = from
+            .pipelines
+            .iter()
+            .find(|p| p.role == Role::Decode && p.shape_key() == s.key)
+            .map(|p| p.chassis)
+            .unwrap_or(to.pipelines[s.group].chassis);
+        (chassis, s.key.clone())
+    });
+    let mut routes: BTreeMap<String, KvRoute> = BTreeMap::new();
+    if let Some((to_chassis, to_label)) = absorber {
+        for p in &from.pipelines {
+            if p.role != Role::Decode {
+                continue;
+            }
+            let shape = format!("{} tp{} pp{} b{}", p.device, p.tp, p.pp, p.max_batch);
+            let key = (shape.clone(), Role::Decode.name().to_string());
+            let have = cur.get(&key).copied().unwrap_or(0);
+            let want = tgt.get(&key).copied().unwrap_or(0);
+            if have > want {
+                // Drains retire a group's top replicas first, so the KV
+                // leaves from the group's highest chassis — distinct
+                // from the absorber's base chassis even on intra-group
+                // shrinks (survivors occupy the base).
+                routes.entry(shape).or_insert(KvRoute {
+                    from_chassis: p.chassis + p.replicas.saturating_sub(1),
+                    to_chassis,
+                    to_label: to_label.clone(),
+                });
+            }
+        }
+    }
+    Ok(plan_migration_routed(
+        &cur,
+        &tgt,
+        kv_per_pipeline,
+        &fabric,
+        &routes,
+    ))
 }
 
 /// Replay a step list over `current`, returning the capacity map after
@@ -252,6 +455,129 @@ mod tests {
         );
         assert!(m.kv_bytes > 0.0, "decode rebuild moves resident KV");
         assert!(converges(&shape_map_of(&a), &shape_map_of(&b), &m.steps));
+    }
+
+    #[test]
+    fn retarget_distributes_delta_by_tco_score() {
+        use crate::plan::presets::mixed_generation;
+        use crate::planner::autoscale::score_groups;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        let scores = score_groups(&plan, Role::Decode);
+        let cheapest = scores
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .unwrap()
+            .group;
+        let worst = scores
+            .iter()
+            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .unwrap()
+            .group;
+        assert_ne!(cheapest, worst, "two generations must rank differently");
+
+        // Scale-up buys only the cheapest group's capacity.
+        let up = retarget(&plan, 1, 7);
+        up.validate().unwrap();
+        assert_eq!(role_replicas(&up, Role::Decode), 7);
+        assert_eq!(
+            up.pipelines[cheapest].replicas,
+            plan.pipelines[cheapest].replicas + 3,
+            "growth lands on the cheapest $/throughput group"
+        );
+        assert_eq!(up.pipelines[worst].replicas, plan.pipelines[worst].replicas);
+
+        // Scale-down retires the worst-TCO capacity first (floor 1).
+        let down = retarget(&plan, 1, 2);
+        down.validate().unwrap();
+        assert_eq!(role_replicas(&down, Role::Decode), 2);
+        assert_eq!(
+            down.pipelines[worst].replicas, 1,
+            "the expensive generation drains to its floor first"
+        );
+        assert_eq!(down.pipelines[cheapest].replicas, 1);
+        // The floor holds: a role never drops below one replica/group.
+        let floor = retarget(&plan, 0, 0);
+        floor.validate().unwrap();
+        assert_eq!(role_replicas(&floor, Role::Decode), 2);
+    }
+
+    #[test]
+    fn rebalance_moves_replicas_between_groups_without_changing_total() {
+        use crate::plan::presets::mixed_generation;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 3);
+        let from_key = plan.pipelines[2].shape_key(); // decode A100
+        let to_key = plan.pipelines[1].shape_key(); // decode H100
+        let out = rebalance(&plan, Role::Decode, &from_key, &to_key, 2);
+        out.validate().unwrap();
+        assert_eq!(role_replicas(&out, Role::Decode), 4, "total unchanged");
+        assert_eq!(out.pipelines[1].replicas, 3);
+        assert_eq!(out.pipelines[2].replicas, 1);
+        // The diff is a genuine cross-group rebalance.
+        let d = crate::plan::PlanDiff::between(&plan, &out);
+        assert!(d.is_cross_group(), "{}", d.summary());
+        // Source floor: never drains a group to zero.
+        let all = rebalance(&plan, Role::Decode, &from_key, &to_key, 99);
+        assert_eq!(all.pipelines[2].replicas, 1);
+        // Unknown keys are a no-op.
+        let noop = rebalance(&plan, Role::Decode, "nope", &to_key, 1);
+        assert_eq!(noop, plan);
+    }
+
+    #[test]
+    fn retune_follows_capacity_share() {
+        use crate::plan::presets::mixed_generation;
+
+        // Equal capacity → 0.5/0.5 split (the preset's starting point).
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        let same = retune_token_fractions(&plan);
+        assert_eq!(same, plan, "unchanged capacity must be a fixed point");
+
+        // Shift capacity 3:1 → fractions follow 0.75/0.25.
+        let from_key = plan.pipelines[2].shape_key();
+        let to_key = plan.pipelines[1].shape_key();
+        let shifted = rebalance(&plan, Role::Decode, &from_key, &to_key, 1);
+        let retuned = retune_token_fractions(&shifted);
+        assert!((retuned.bindings[2].token_fraction - 0.75).abs() < 1e-9);
+        assert!((retuned.bindings[3].token_fraction - 0.25).abs() < 1e-9);
+        retuned.validate().unwrap();
+        let d = crate::plan::PlanDiff::between(&shifted, &retuned);
+        assert_eq!(d.retuned.len(), 2, "both siblings retype: {}", d.summary());
+
+        // Single-class plans are untouched.
+        let tiny = tiny_plan();
+        assert_eq!(retune_token_fractions(&tiny), tiny);
+    }
+
+    #[test]
+    fn cross_group_shift_lowers_to_a_routed_capacity_safe_migration() {
+        use crate::plan::presets::mixed_generation;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 3);
+        let from_key = plan.pipelines[2].shape_key();
+        let to_key = plan.pipelines[1].shape_key();
+        let target = rebalance(&plan, Role::Decode, &from_key, &to_key, 2);
+        let m = lower_diff(&plan, &target, 8e9).unwrap();
+        // Capacity-safe and convergent at shape granularity.
+        let cur = shape_map_of(&plan);
+        let tgt = shape_map_of(&target);
+        capacity_trajectory(&cur, &m.steps).unwrap();
+        assert!(converges(&cur, &tgt, &m.steps));
+        // The drained generation's KV is routed to a *named* surviving
+        // group, not the anonymous fleet.
+        assert!(
+            m.steps.iter().any(|s| matches!(
+                s,
+                MigrationStep::TransferKv { to, .. } if to.starts_with("decode ")
+            )),
+            "KV route must name the absorbing group: {:?}",
+            m.steps
+        );
+        // 8 GB over 4 decode pipes → 2 GB leaves with each of the 2
+        // drained A100 pipelines.
+        assert!((m.kv_bytes - 4e9).abs() < 1.0, "kv={}", m.kv_bytes);
+        assert!(m.est_duration_s > 1.0, "real cross-chassis hop priced");
     }
 
     #[test]

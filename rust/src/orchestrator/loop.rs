@@ -18,19 +18,22 @@
 use std::collections::BTreeSet;
 use std::sync::Arc;
 
-use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, WindowStats};
+use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, GroupWindow, WindowStats};
 use crate::cluster::sim::SimReport;
 use crate::cluster::trace::Request;
 use crate::ir::graph::Graph;
 use crate::obs::MetricsRegistry;
 use crate::plan::{ExecutionPlan, PlanDiff, Role, SlaSpec};
-use crate::planner::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+use crate::planner::autoscale::{
+    cheapest, rank, score_groups, worst, Autoscaler, AutoscalerConfig, GroupScaler, GroupScore,
+    ScaleDecision,
+};
 use crate::planner::migration::{role_replicas, MigrationPlan};
 use crate::planner::plan::Planner;
 use crate::server::{ChatRequest, Server, ServerConfig};
 use crate::{Error, Result};
 
-use super::diff_apply::{lower_diff, retarget, role_capacity};
+use super::diff_apply::{lower_diff, rebalance, retarget, retune_token_fractions, role_capacity};
 use super::timeline::{Timeline, TimelineEvent};
 
 /// Control-loop knobs.
@@ -103,6 +106,9 @@ impl OrchestratorConfig {
 pub struct PlanRejection {
     /// Pipeline role whose class layout the rejected plan would move.
     pub role: String,
+    /// Shape key of the live pipeline group the rejected change
+    /// targeted (`None` = the role's primary group).
+    pub group: Option<String>,
     pub reason: String,
 }
 
@@ -138,8 +144,20 @@ pub fn reconcile_replan(
         let cur = classes(current, role);
         let new = classes(&fresh, role);
         if cur != new {
+            // Name the live group whose class the re-plan moved (the
+            // symmetric difference), not blindly the role's first
+            // group — on a mixed fleet only one generation may be
+            // affected.
+            let moved: BTreeSet<String> =
+                cur.symmetric_difference(&new).cloned().collect();
             rejections.push(PlanRejection {
                 role: role.name().to_string(),
+                group: current
+                    .pipelines
+                    .iter()
+                    .find(|pl| pl.role == role && moved.contains(&pl.device))
+                    .or_else(|| current.pipelines.iter().find(|pl| pl.role == role))
+                    .map(|pl| pl.shape_key()),
                 reason: format!(
                     "planner re-plan moves {} classes {:?} -> {:?} mid-run; \
                      in-flight work keeps routing by the live classes, so the \
@@ -168,6 +186,11 @@ pub struct Orchestrator {
     current: ExecutionPlan,
     prefill_scaler: Autoscaler,
     decode_scaler: Autoscaler,
+    /// Per-group streak detection over the executors' per-group window
+    /// signals: a group persistently hot while a sibling idles triggers
+    /// a cross-group rebalance (replicas move between hardware
+    /// generations; the role total stays put).
+    group_scaler: GroupScaler,
     /// Present when `cfg.cpu_autoscale` is set: scales `cpu_workers`
     /// from the measured host-pool utilization.
     host_scaler: Option<Autoscaler>,
@@ -176,6 +199,28 @@ pub struct Orchestrator {
     planner: Option<(Planner, Graph)>,
     timeline: Timeline,
     plan_seq: u64,
+}
+
+/// One pending cross-group move: `amount` replicas of `role` from the
+/// group keyed `from` to the group keyed `to`.
+#[derive(Debug, Clone)]
+struct PendingRebalance {
+    role: Role,
+    from: String,
+    to: String,
+    amount: u32,
+}
+
+/// The one pressure rule both granularities are judged by: utilization
+/// floored by queue backlog normalized against `capacity` (already
+/// scaled by the backlog factor), clamped to [0, 1].
+fn pressure_signal(util: f64, queue: usize, capacity: f64) -> f64 {
+    let backlog = if capacity > 0.0 {
+        (queue as f64 / capacity).min(1.0)
+    } else {
+        0.0
+    };
+    util.max(backlog).clamp(0.0, 1.0)
 }
 
 impl Orchestrator {
@@ -194,9 +239,25 @@ impl Orchestrator {
             seq: 0,
             plan: initial.clone(),
         });
+        // The scored retarget floors every group at one replica, so a
+        // role scaler must never target below its group count —
+        // otherwise its `current` drifts under the deployed total
+        // during a lull and the next real scale-up is swallowed by an
+        // empty diff (and Decision records misreport the fleet).
+        let scaler_cfg = |role: Role| -> AutoscalerConfig {
+            let groups = initial.pipelines.iter().filter(|p| p.role == role).count() as u32;
+            let mut c = cfg.autoscale.clone();
+            c.min_pipelines = c.min_pipelines.max(groups.max(1));
+            // The floor wins over a max configured below the group
+            // count — the fleet physically cannot shrink past one
+            // replica per bound class.
+            c.max_pipelines = c.max_pipelines.max(c.min_pipelines);
+            c
+        };
         Ok(Orchestrator {
-            prefill_scaler: Autoscaler::new(cfg.autoscale.clone(), pre0),
-            decode_scaler: Autoscaler::new(cfg.autoscale.clone(), dec0),
+            prefill_scaler: Autoscaler::new(scaler_cfg(Role::Prefill), pre0),
+            decode_scaler: Autoscaler::new(scaler_cfg(Role::Decode), dec0),
+            group_scaler: GroupScaler::new(cfg.autoscale.clone()),
             host_scaler: cfg
                 .cpu_autoscale
                 .clone()
@@ -228,13 +289,11 @@ impl Orchestrator {
     /// by normalized queue backlog so saturation shows before busy-time
     /// integrates.
     fn pressure(&self, util: f64, queue: usize, role: Role) -> f64 {
-        let cap = role_capacity(&self.current, role) * self.cfg.backlog_factor;
-        let backlog = if cap > 0.0 {
-            (queue as f64 / cap).min(1.0)
-        } else {
-            0.0
-        };
-        util.max(backlog).clamp(0.0, 1.0)
+        pressure_signal(
+            util,
+            queue,
+            role_capacity(&self.current, role) * self.cfg.backlog_factor,
+        )
     }
 
     /// Ingest one window of observations; returns the plan change to
@@ -267,10 +326,12 @@ impl Orchestrator {
             None => ScaleDecision::Hold,
         };
         let host_workers = self.host_scaler.as_ref().map(|s| s.current).unwrap_or(0);
-        for (role, decision, replicas) in [
-            (Role::Prefill.name(), d_pre, self.prefill_scaler.current),
-            (Role::Decode.name(), d_dec, self.decode_scaler.current),
-            ("cpu", d_host, host_workers),
+        let pre_group = self.delta_group(Role::Prefill, d_pre);
+        let dec_group = self.delta_group(Role::Decode, d_dec);
+        for (role, decision, replicas, group) in [
+            (Role::Prefill.name(), d_pre, self.prefill_scaler.current, pre_group),
+            (Role::Decode.name(), d_dec, self.decode_scaler.current, dec_group),
+            ("cpu", d_host, host_workers, None),
         ] {
             let (action, amount) = match decision {
                 ScaleDecision::ScaleUp(n) => ("scale_up", n),
@@ -284,21 +345,57 @@ impl Orchestrator {
                 action: action.to_string(),
                 amount,
                 replicas,
+                group,
             });
         }
+
+        // Per-group streaks over the executor's group signals: a group
+        // persistently hot while a sibling of the same role idles is a
+        // *rebalance*, not a resize — replicas move from the idle
+        // worst-TCO group to the hot one, role total unchanged. Only
+        // when the role scaler holds: a firing role scaler already
+        // redistributes through the scored retarget.
+        let rebalances = self.plan_rebalances(w, d_pre, d_dec);
+
         if d_pre == ScaleDecision::Hold
             && d_dec == ScaleDecision::Hold
             && d_host == ScaleDecision::Hold
+            && rebalances.is_empty()
         {
             return Ok(None);
         }
 
-        let (target, rejections) = self.emit_target()?;
+        let (target, rejections, applied_rebalances) = self.emit_target(&rebalances)?;
+        // Record only the rebalances that actually moved replicas — a
+        // requested move whose keys a planner-fresh layout doesn't
+        // carry is dropped, not logged.
+        for rb in &applied_rebalances {
+            self.metrics.counter("orch_rebalances").inc();
+            let total = match rb.role {
+                Role::Prefill => self.prefill_scaler.current,
+                Role::Decode => self.decode_scaler.current,
+            };
+            for (action, group) in [
+                ("rebalance_out", rb.from.clone()),
+                ("rebalance_in", rb.to.clone()),
+            ] {
+                self.metrics.counter("orch_decisions").inc();
+                self.timeline.events.push(TimelineEvent::Decision {
+                    t: w.t1,
+                    role: rb.role.name().to_string(),
+                    action: action.to_string(),
+                    amount: rb.amount,
+                    replicas: total,
+                    group: Some(group),
+                });
+            }
+        }
         for r in &rejections {
             self.metrics.counter("orch_rejections").inc();
             self.timeline.events.push(TimelineEvent::Rejection {
                 t: w.t1,
                 role: r.role.clone(),
+                group: r.group.clone(),
                 reason: r.reason.clone(),
             });
         }
@@ -332,13 +429,117 @@ impl Orchestrator {
         }))
     }
 
+    /// Which group a role scaler's delta lands on *first* (for the
+    /// decision record): growth buys the cheapest $/throughput group;
+    /// shrinkage starts at the worst-TCO group **that still has
+    /// replicas above its one-replica floor** — the same ranking and
+    /// floor rule `retarget`'s scored distribution uses. A shrink
+    /// larger than that group's spare replicas spills into the
+    /// next-worst groups (the diff records the full spread); `None`
+    /// when every group already sits at its floor and nothing will
+    /// drain.
+    fn delta_group(&self, role: Role, decision: ScaleDecision) -> Option<String> {
+        let scores = score_groups(&self.current, role);
+        match decision {
+            ScaleDecision::ScaleUp(_) => cheapest(&scores).map(|s| s.key.clone()),
+            ScaleDecision::ScaleDown(_) => {
+                let drainable: Vec<_> = scores
+                    .iter()
+                    .filter(|s| self.current.pipelines[s.group].replicas > 1)
+                    .cloned()
+                    .collect();
+                worst(&drainable).map(|s| s.key.clone())
+            }
+            ScaleDecision::Hold => None,
+        }
+    }
+
+    /// Detect cross-group imbalance from the window's per-group
+    /// signals. For each role whose total is holding: if a group's
+    /// pressure streak fired hot while a sibling group sits at/below
+    /// the low watermark with spare replicas, move replicas from the
+    /// idle group to the hot one — preferring to *retire* the
+    /// worst-TCO idle capacity and *grow* the cheapest hot group, the
+    /// paper's mixed-fleet economics.
+    fn plan_rebalances(
+        &mut self,
+        w: &WindowStats,
+        d_pre: ScaleDecision,
+        d_dec: ScaleDecision,
+    ) -> Vec<PendingRebalance> {
+        if w.groups.is_empty() {
+            return Vec::new();
+        }
+        // Pressure per group: the shared rule against the group's own
+        // batch capacity. (`backlog_factor` copied out so the closure
+        // holds no `self` borrow — `group_scaler.observe` below needs
+        // `self` mutably.)
+        let backlog_factor = self.cfg.backlog_factor;
+        let pressure_of = move |g: &GroupWindow| -> f64 {
+            let cap = (g.replicas.max(1) as u64 * g.max_batch) as f64 * backlog_factor;
+            pressure_signal(g.util, g.queue, cap)
+        };
+        let pressures: Vec<(String, f64)> =
+            w.groups.iter().map(|g| (g.key.clone(), pressure_of(g))).collect();
+        let fired = self.group_scaler.observe(&pressures);
+
+        let mut out = Vec::new();
+        for (role, decision) in [(Role::Prefill, d_pre), (Role::Decode, d_dec)] {
+            if decision != ScaleDecision::Hold {
+                continue; // the scored retarget already moves this role
+            }
+            let scores = score_groups(&self.current, role);
+            if scores.len() < 2 {
+                continue;
+            }
+            // Receiver: a group whose hot streak fired *this* window
+            // (edge), cheapest first on ties.
+            let hot: Option<&GroupScore> = fired
+                .iter()
+                .filter(|f| f.hot)
+                .filter_map(|f| scores.iter().find(|s| s.key == f.key))
+                .min_by(|a, b| rank(a, b));
+            let Some(hot) = hot else { continue };
+            // Donor: a sibling that has *sustained* its cold streak
+            // (level — so an offset between the two crossings cannot
+            // starve the pairing), with spare replicas; the worst-TCO
+            // generation gives its capacity up first.
+            let cold: Option<&GroupScore> = scores
+                .iter()
+                .filter(|s| s.key != hot.key)
+                .filter(|s| self.group_scaler.sustained_cold(&s.key))
+                .filter(|s| self.current.pipelines[s.group].replicas > 1)
+                .max_by(|a, b| rank(a, b));
+            let Some(cold) = cold else { continue };
+            let spare = self.current.pipelines[cold.group].replicas.saturating_sub(1);
+            let amount = ((spare as f64 * 0.5).ceil() as u32).clamp(1, spare);
+            out.push(PendingRebalance {
+                role,
+                from: cold.key.clone(),
+                to: hot.key.clone(),
+                amount,
+            });
+        }
+        out
+    }
+
     /// Produce the next target plan at the autoscalers' replica totals:
     /// a fresh slow-path plan when a planner is attached (and its class
     /// layout stays compatible with in-flight work — incompatible
     /// re-plans are rejected with a typed reason, not dropped), else a
-    /// structural retarget of the live plan. The cpu_workers scaler's
-    /// worker total rides along on the emitted plan.
-    fn emit_target(&self) -> Result<(ExecutionPlan, Vec<PlanRejection>)> {
+    /// structural retarget of the live plan. The role deltas distribute
+    /// across pipeline groups by TCO score and pending cross-group
+    /// rebalances apply on top (returning the subset that actually
+    /// moved replicas, so the decision record never claims a move a
+    /// foreign group layout swallowed). Sibling token fractions
+    /// re-align with per-class capacity **only when the fleet itself
+    /// changed** — a policy-only emit (e.g. a cpu_workers resize) must
+    /// not overwrite a planner-chosen split. The cpu_workers scaler's
+    /// worker total rides along.
+    fn emit_target(
+        &self,
+        rebalances: &[PendingRebalance],
+    ) -> Result<(ExecutionPlan, Vec<PlanRejection>, Vec<PendingRebalance>)> {
         let (base, rejections) = match &self.planner {
             Some((planner, graph)) => {
                 let fresh = planner.plan(graph)?;
@@ -351,11 +552,22 @@ impl Orchestrator {
             self.prefill_scaler.current,
             self.decode_scaler.current,
         );
+        let mut applied = Vec::new();
+        for rb in rebalances {
+            let moved = rebalance(&target, rb.role, &rb.from, &rb.to, rb.amount);
+            if moved.pipelines != target.pipelines {
+                applied.push(rb.clone());
+            }
+            target = moved;
+        }
+        if target.pipelines != base.pipelines {
+            target = retune_token_fractions(&target);
+        }
         if let Some(s) = &self.host_scaler {
             target.cpu_workers = s.current.max(1);
         }
         target.validate()?;
-        Ok((target, rejections))
+        Ok((target, rejections, applied))
     }
 
     /// Executor callback: the most recent migration finished applying.
@@ -548,6 +760,25 @@ impl Executor for LiveExecutor {
                     .gauge(&format!("orch_engine{i}_decode_util"))
                     .set(dec);
             }
+            // Per-group signals before take_utilization resets the
+            // window: each plan group reads its engine's role half, so
+            // the orchestrator sees which hardware generation is hot.
+            let group_utils = self.server.group_utilization(wall);
+            let groups: Vec<GroupWindow> = orch
+                .current()
+                .pipelines
+                .iter()
+                .enumerate()
+                .map(|(g, p)| GroupWindow {
+                    role: p.role,
+                    key: p.shape_key(),
+                    device: p.device.clone(),
+                    replicas: p.replicas,
+                    max_batch: p.max_batch,
+                    util: group_utils.get(g).copied().unwrap_or(0.0),
+                    queue: 0,
+                })
+                .collect();
             let (prefill_util, decode_util, host_util) =
                 self.server.take_utilization(wall);
             let stats = WindowStats {
@@ -569,6 +800,7 @@ impl Executor for LiveExecutor {
                 kv_resident_bytes: 0.0,
                 prefill_pipes: role_replicas(orch.current(), Role::Prefill),
                 decode_pipes: role_replicas(orch.current(), Role::Decode),
+                groups,
             };
             t += wall;
             if orch.observe_window(&stats)?.is_some() {
@@ -607,6 +839,7 @@ mod tests {
             kv_resident_bytes: 4e9,
             prefill_pipes: 1,
             decode_pipes: 2,
+            groups: Vec::new(),
         }
     }
 
@@ -727,6 +960,11 @@ mod tests {
         assert_eq!(kept, current, "incompatible layouts keep the live plan");
         assert_eq!(rejections.len(), 1);
         assert_eq!(rejections[0].role, "decode");
+        assert_eq!(
+            rejections[0].group.as_deref(),
+            Some("decode Gaudi3 tp1 pp1 b32"),
+            "the rejection names the live group it kept"
+        );
         assert!(
             rejections[0].reason.contains("Gaudi3"),
             "{}",
@@ -752,6 +990,119 @@ mod tests {
         w2.decode_queue = 10_000;
         let change = orch.observe_window(&w2).unwrap();
         assert!(change.is_some(), "backlog alone must trigger scale-up");
+    }
+
+    #[test]
+    fn hot_and_cold_groups_trigger_a_pure_cross_group_rebalance() {
+        use crate::plan::presets::mixed_generation;
+
+        // A100 decode capacity idles while the H100 group runs hot and
+        // the role aggregate stays mid-band: nothing for the role
+        // scaler, everything for the rebalancer.
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 3);
+        let hot_key = plan.pipelines[1].shape_key(); // decode H100 ×1
+        let cold_key = plan.pipelines[2].shape_key(); // decode A100 ×3
+        let mut orch =
+            Orchestrator::new(quick_cfg(), plan.clone(), "synthetic", "test").unwrap();
+        let window = |t0: f64, t1: f64| {
+            let mut w = stats(0.5, t0, t1); // aggregate mid-band: role holds
+            w.groups = plan
+                .pipelines
+                .iter()
+                .map(|p| GroupWindow {
+                    role: p.role,
+                    key: p.shape_key(),
+                    device: p.device.clone(),
+                    replicas: p.replicas,
+                    max_batch: p.max_batch,
+                    util: if p.shape_key() == hot_key {
+                        0.97
+                    } else if p.shape_key() == cold_key {
+                        0.05
+                    } else {
+                        0.5
+                    },
+                    queue: 0,
+                })
+                .collect();
+            w
+        };
+        assert!(orch.observe_window(&window(0.0, 1.0)).unwrap().is_none());
+        let change = orch
+            .observe_window(&window(1.0, 2.0))
+            .unwrap()
+            .expect("patience=2 group streaks must fire a rebalance");
+        // Role total unchanged; replicas moved cold → hot.
+        assert_eq!(role_replicas(&change.target, Role::Decode), 4);
+        let by_key = |p: &ExecutionPlan, key: &str| -> u32 {
+            p.pipelines
+                .iter()
+                .find(|g| g.shape_key() == key)
+                .map(|g| g.replicas)
+                .unwrap_or(0)
+        };
+        assert_eq!(by_key(&change.target, &hot_key), 2, "{}", change.diff.summary());
+        assert_eq!(by_key(&change.target, &cold_key), 2);
+        assert!(change.diff.is_cross_group(), "{}", change.diff.summary());
+        // The load follows the hardware: sibling fractions re-aligned
+        // to the new 50/50 capacity split.
+        assert!(
+            change.diff.retuned.len() == 2,
+            "fraction shift must be typed: {}",
+            change.diff.summary()
+        );
+        assert!((change.target.bindings[2].token_fraction - 0.5).abs() < 1e-9);
+        // The decision trail names both groups.
+        let tl = orch.finish(None);
+        let actions: Vec<(String, Option<String>)> = tl
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TimelineEvent::Decision { action, group, .. } => {
+                    Some((action.clone(), group.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(actions.contains(&("rebalance_out".to_string(), Some(cold_key.clone()))));
+        assert!(actions.contains(&("rebalance_in".to_string(), Some(hot_key.clone()))));
+    }
+
+    #[test]
+    fn aggregate_pressure_on_mixed_fleet_scales_the_cheapest_group() {
+        use crate::plan::presets::mixed_generation;
+        use crate::planner::autoscale::score_groups;
+
+        let plan = mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        let scores = score_groups(&plan, Role::Decode);
+        let cheapest_key = scores
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .unwrap()
+            .key
+            .clone();
+        let mut orch =
+            Orchestrator::new(quick_cfg(), plan.clone(), "synthetic", "test").unwrap();
+        orch.observe_window(&stats(0.95, 0.0, 1.0)).unwrap();
+        let change = orch
+            .observe_window(&stats(0.95, 1.0, 2.0))
+            .unwrap()
+            .expect("sustained pressure must fire");
+        // The growth bought the cheapest generation's capacity only.
+        let grew: Vec<&str> = change
+            .diff
+            .resized
+            .iter()
+            .filter(|r| r.role == Role::Decode && r.to_replicas > r.from_replicas)
+            .map(|r| r.device.as_str())
+            .collect();
+        assert_eq!(grew.len(), 1, "{}", change.diff.summary());
+        assert!(
+            cheapest_key.contains(grew[0]),
+            "growth must land on {cheapest_key}, grew {grew:?}"
+        );
+        // And the token split followed the capacity.
+        assert!(!change.diff.retuned.is_empty(), "{}", change.diff.summary());
     }
 
     #[test]

@@ -48,5 +48,8 @@ pub use control::{
     reconcile_replan, Executor, LiveExecutor, Orchestrator, OrchestratorConfig, PlanChange,
     PlanRejection, SimExecutor,
 };
-pub use diff_apply::{capacity_trajectory, converges, lower_diff, retarget, shape_map_of};
+pub use diff_apply::{
+    capacity_trajectory, converges, lower_diff, rebalance, retarget, retune_token_fractions,
+    shape_map_of,
+};
 pub use timeline::{Timeline, TimelineEvent};

@@ -21,15 +21,18 @@ pub enum TimelineEvent {
         prefill_util: f64,
         decode_util: f64,
     },
-    /// A per-role autoscaler fired.
+    /// A per-role autoscaler (or cross-group rebalance) fired.
     Decision {
         t: f64,
         role: String,
-        /// "scale_up" | "scale_down"
+        /// "scale_up" | "scale_down" | "rebalance_out" | "rebalance_in"
         action: String,
         amount: u32,
         /// Role replica total after the decision.
         replicas: u32,
+        /// Shape key of the pipeline group the decision targets; `None`
+        /// = the role's primary group (pre-group-granular records).
+        group: Option<String>,
     },
     /// A (re-)planned `ExecutionPlan` became the orchestration target.
     Plan {
@@ -43,8 +46,16 @@ pub enum TimelineEvent {
     /// A re-plan the loop refused to adopt mid-run (e.g. a structural
     /// retarget that would move a role's hardware classes under
     /// in-flight work) — the role affected and why, so rejected
-    /// decisions leave a trace instead of silently vanishing.
-    Rejection { t: f64, role: String, reason: String },
+    /// decisions leave a trace instead of silently vanishing. `group`
+    /// is the shape key of the pipeline group the rejected change
+    /// targeted; `None` = the role's primary group (records written
+    /// before diffs became group-granular parse that way).
+    Rejection {
+        t: f64,
+        role: String,
+        group: Option<String>,
+        reason: String,
+    },
     /// The migration lowered from that diff.
     Migration {
         t: f64,
@@ -109,6 +120,16 @@ impl Timeline {
         self.events
             .iter()
             .filter(|e| matches!(e, TimelineEvent::Rejection { .. }))
+            .count()
+    }
+
+    /// Diffs that moved capacity or load *between* pipeline groups (see
+    /// [`PlanDiff::is_cross_group`]) — the heterogeneous-rebalance
+    /// count the mixed-fleet demo reports.
+    pub fn n_cross_group_rebalances(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TimelineEvent::Diff { diff, .. } if diff.is_cross_group()))
             .count()
     }
 
@@ -198,14 +219,23 @@ impl Timeline {
                     action,
                     amount,
                     replicas,
-                } => jobj! {
-                    "kind" => "decision",
-                    "t" => *t,
-                    "role" => role.clone(),
-                    "action" => action.clone(),
-                    "amount" => *amount,
-                    "replicas" => *replicas,
-                },
+                    group,
+                } => {
+                    let mut j = jobj! {
+                        "kind" => "decision",
+                        "t" => *t,
+                        "role" => role.clone(),
+                        "action" => action.clone(),
+                        "amount" => *amount,
+                        "replicas" => *replicas,
+                    };
+                    // Written only when set: pre-group records stay
+                    // byte-identical and old readers stay compatible.
+                    if let Some(g) = group {
+                        j.try_set("group", g.clone()).expect("decision json is an object");
+                    }
+                    j
+                }
                 TimelineEvent::Plan { t, seq, plan } => jobj! {
                     "kind" => "plan",
                     "t" => *t,
@@ -217,12 +247,23 @@ impl Timeline {
                     "t" => *t,
                     "diff" => diff.to_json(),
                 },
-                TimelineEvent::Rejection { t, role, reason } => jobj! {
-                    "kind" => "rejection",
-                    "t" => *t,
-                    "role" => role.clone(),
-                    "reason" => reason.clone(),
-                },
+                TimelineEvent::Rejection {
+                    t,
+                    role,
+                    group,
+                    reason,
+                } => {
+                    let mut j = jobj! {
+                        "kind" => "rejection",
+                        "t" => *t,
+                        "role" => role.clone(),
+                        "reason" => reason.clone(),
+                    };
+                    if let Some(g) = group {
+                        j.try_set("group", g.clone()).expect("rejection json is an object");
+                    }
+                    j
+                }
                 TimelineEvent::Migration { t, plan, applied_s } => {
                     let applied = match applied_s {
                         Some(v) => Json::Num(*v),
@@ -322,6 +363,11 @@ impl Timeline {
                     action: text("action")?,
                     amount: int("amount")? as u32,
                     replicas: int("replicas")? as u32,
+                    // Back-compat: absent = the role's primary group.
+                    group: e
+                        .get("group")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
                 },
                 Some("plan") => TimelineEvent::Plan {
                     t: num("t")?,
@@ -339,6 +385,11 @@ impl Timeline {
                 Some("rejection") => TimelineEvent::Rejection {
                     t: num("t")?,
                     role: text("role")?,
+                    // Back-compat: absent = the role's primary group.
+                    group: e
+                        .get("group")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
                     reason: text("reason")?,
                 },
                 Some("migration") => TimelineEvent::Migration {
@@ -396,6 +447,7 @@ mod tests {
             action: "scale_up".into(),
             amount: 1,
             replicas: 3,
+            group: Some("decode Gaudi3 tp1 pp1 b32".into()),
         });
         tl.events.push(TimelineEvent::Plan {
             t: 2.0,
@@ -409,6 +461,7 @@ mod tests {
         tl.events.push(TimelineEvent::Rejection {
             t: 2.0,
             role: "decode".into(),
+            group: Some("decode Gaudi3 tp1 pp1 b32".into()),
             reason: "planner re-plan moves decode classes mid-run".into(),
         });
         tl.events.push(TimelineEvent::Migration {
@@ -445,6 +498,56 @@ mod tests {
         assert_eq!(tl.plans().len(), 2);
         assert!((tl.sla_attainment() - 0.75).abs() < 1e-12);
         assert!(tl.summary().contains("1 migrations"));
+    }
+
+    #[test]
+    fn rejection_group_round_trips_and_absent_parses_as_primary() {
+        // Present: the group id survives the round trip.
+        let tl = sample();
+        let back = Timeline::parse_json(&tl.to_json_string()).unwrap();
+        let rej = back
+            .events
+            .iter()
+            .find(|e| matches!(e, TimelineEvent::Rejection { .. }))
+            .unwrap();
+        let TimelineEvent::Rejection { group, .. } = rej else {
+            unreachable!()
+        };
+        assert_eq!(group.as_deref(), Some("decode Gaudi3 tp1 pp1 b32"));
+
+        // Absent (a record written before diffs became group-granular):
+        // parses as None — the role's primary group — and re-serializes
+        // without inventing the field.
+        let mut old = sample();
+        for e in &mut old.events {
+            match e {
+                TimelineEvent::Rejection { group, .. }
+                | TimelineEvent::Decision { group, .. } => *group = None,
+                _ => {}
+            }
+        }
+        let text = old.to_json_string();
+        assert!(
+            !text.contains("\"group\""),
+            "pre-group records must not grow a group field"
+        );
+        let back = Timeline::parse_json(&text).unwrap();
+        assert_eq!(back, old);
+        assert_eq!(back.to_json_string(), text, "byte-stable");
+    }
+
+    #[test]
+    fn cross_group_rebalances_counted_from_diffs() {
+        let mut tl = sample();
+        assert_eq!(tl.n_cross_group_rebalances(), 0, "primary-group resize only");
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.bindings[2].token_fraction = 0.5;
+        tl.events.push(TimelineEvent::Diff {
+            t: 3.0,
+            diff: crate::plan::PlanDiff::between(&a, &b),
+        });
+        assert_eq!(tl.n_cross_group_rebalances(), 1);
     }
 
     #[test]

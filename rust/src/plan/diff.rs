@@ -14,7 +14,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use super::{req_arr, req_str, req_u64, ExecutionPlan, PipelineBinding, Role, SlaSpec};
+use super::{req_arr, req_f64, req_str, req_u64, ExecutionPlan, PipelineBinding, Role, SlaSpec};
 use crate::util::json::Json;
 use crate::{jobj, Result};
 
@@ -48,6 +48,20 @@ pub struct PolicyChange {
     pub to: String,
 }
 
+/// A binding's token fraction moved — load shifted *between* the
+/// hardware classes an expert-style sibling split routes to, without
+/// the binding changing class. This is how a heterogeneous rebalance
+/// moves work onto the generation whose capacity grew.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FractionShift {
+    /// Index into `ExecutionPlan::bindings`.
+    pub index: usize,
+    pub op: String,
+    pub class: String,
+    pub from_fraction: f64,
+    pub to_fraction: f64,
+}
+
 /// Structured difference between two plans.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PlanDiff {
@@ -59,6 +73,9 @@ pub struct PlanDiff {
     pub resized: Vec<PipelineResize>,
     /// Node bindings whose hardware class moved.
     pub rebound: Vec<BindingRebind>,
+    /// Node bindings whose token fraction moved (class unchanged):
+    /// group-granular load shifts between hardware generations.
+    pub retuned: Vec<FractionShift>,
     /// Policy-level changes (admission, batching, SLA, workers, ...).
     pub policy: Vec<PolicyChange>,
 }
@@ -147,6 +164,14 @@ impl PlanDiff {
                         op: x.op.clone(),
                         from_class: x.class.clone(),
                         to_class: y.class.clone(),
+                    });
+                } else if x.token_fraction != y.token_fraction {
+                    d.retuned.push(FractionShift {
+                        index: i,
+                        op: x.op.clone(),
+                        class: x.class.clone(),
+                        from_fraction: x.token_fraction,
+                        to_fraction: y.token_fraction,
                     });
                 }
             }
@@ -241,7 +266,30 @@ impl PlanDiff {
             && self.removed.is_empty()
             && self.resized.is_empty()
             && self.rebound.is_empty()
+            && self.retuned.is_empty()
             && self.policy.is_empty()
+    }
+
+    /// Does this diff move capacity or load *between* groups? True when
+    /// ≥ 2 distinct pipeline shapes of one role changed together (one
+    /// side grows while another shrinks or rebuilds), or when any token
+    /// fraction shifted between sibling classes. A plain primary-group
+    /// grow/shrink is *not* cross-group.
+    pub fn is_cross_group(&self) -> bool {
+        if !self.retuned.is_empty() {
+            return true;
+        }
+        let mut shapes_of: BTreeMap<Role, BTreeSet<String>> = BTreeMap::new();
+        for p in self.added.iter().chain(self.removed.iter()) {
+            shapes_of.entry(p.role).or_default().insert(p.shape_key());
+        }
+        for r in &self.resized {
+            shapes_of
+                .entry(r.role)
+                .or_default()
+                .insert(super::shape_key_of(r.role, &r.device, r.tp, r.pp, r.max_batch));
+        }
+        shapes_of.values().any(|s| s.len() >= 2)
     }
 
     /// Pipeline units that must be brought up / torn down.
@@ -303,6 +351,12 @@ impl PlanDiff {
                 b.index, b.op, b.from_class, b.to_class
             ));
         }
+        for s in &self.retuned {
+            out.push_str(&format!(
+                "~ binding {} ({} @ {}): token_fraction {:.4} -> {:.4}\n",
+                s.index, s.op, s.class, s.from_fraction, s.to_fraction
+            ));
+        }
         for p in &self.policy {
             out.push_str(&format!("~ {}: {} -> {}\n", p.field, p.from, p.to));
         }
@@ -339,6 +393,19 @@ impl PlanDiff {
                 }
             })
             .collect();
+        let retuned: Vec<Json> = self
+            .retuned
+            .iter()
+            .map(|s| {
+                jobj! {
+                    "index" => s.index,
+                    "op" => s.op.clone(),
+                    "class" => s.class.clone(),
+                    "from_fraction" => s.from_fraction,
+                    "to_fraction" => s.to_fraction,
+                }
+            })
+            .collect();
         let policy: Vec<Json> = self
             .policy
             .iter()
@@ -355,6 +422,7 @@ impl PlanDiff {
             "removed" => Json::Arr(self.removed.iter().map(|p| p.to_json()).collect()),
             "resized" => Json::Arr(resized),
             "rebound" => Json::Arr(rebound),
+            "retuned" => Json::Arr(retuned),
             "policy" => Json::Arr(policy),
         }
     }
@@ -385,6 +453,19 @@ impl PlanDiff {
                 from_class: req_str(b, "from_class")?.to_string(),
                 to_class: req_str(b, "to_class")?.to_string(),
             });
+        }
+        // Back-compat: diffs written before group-granular retargeting
+        // have no `retuned` array.
+        if let Some(arr) = j.get("retuned").and_then(|v| v.as_arr()) {
+            for s in arr {
+                d.retuned.push(FractionShift {
+                    index: req_u64(s, "index")? as usize,
+                    op: req_str(s, "op")?.to_string(),
+                    class: req_str(s, "class")?.to_string(),
+                    from_fraction: req_f64(s, "from_fraction")?,
+                    to_fraction: req_f64(s, "to_fraction")?,
+                });
+            }
         }
         for p in req_arr(j, "policy")? {
             d.policy.push(PolicyChange {
@@ -458,10 +539,72 @@ mod tests {
         b.pipelines[0].replicas = 3;
         b.pipelines[1].device = "MI300x".into();
         b.bindings[1].class = "MI300x".into();
+        b.bindings[2].token_fraction = 0.625;
         b.sla = SlaSpec::None;
         let d = PlanDiff::between(&a, &b);
         assert!(!d.is_empty());
+        assert_eq!(d.retuned.len(), 1, "fraction shift must be typed");
         let back = PlanDiff::from_json(&Json::parse(&d.to_json().pretty()).unwrap()).unwrap();
         assert_eq!(back, d);
+    }
+
+    #[test]
+    fn fraction_shift_is_typed_and_cross_group() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.bindings[2].token_fraction = 0.5; // llm.decode keeps its class
+        let d = PlanDiff::between(&a, &b);
+        assert!(d.rebound.is_empty());
+        assert_eq!(d.retuned.len(), 1);
+        assert_eq!(d.retuned[0].index, 2);
+        assert_eq!(d.retuned[0].class, "Gaudi3");
+        assert_eq!(d.retuned[0].from_fraction, 1.0);
+        assert_eq!(d.retuned[0].to_fraction, 0.5);
+        assert!(d.is_cross_group(), "a load shift between classes is cross-group");
+        assert!(d.summary().contains("token_fraction"));
+    }
+
+    #[test]
+    fn cross_group_requires_two_shapes_of_one_role() {
+        let a = tiny_plan();
+        // Primary-group grow only: not cross-group.
+        let mut grow = tiny_plan();
+        grow.pipelines[1].replicas = 4;
+        assert!(!PlanDiff::between(&a, &grow).is_cross_group());
+        // One decode group shrinks while another appears: cross-group.
+        let mut shift = tiny_plan();
+        shift.pipelines[1].replicas = 1;
+        shift.pipelines.push(PipelineBinding {
+            role: Role::Decode,
+            device: "A100".into(),
+            tp: 1,
+            pp: 1,
+            max_batch: 32,
+            replicas: 1,
+            chassis: 3,
+        });
+        let d = PlanDiff::between(&a, &shift);
+        assert!(d.is_cross_group(), "{}", d.summary());
+        // Changes on different *roles* don't count as one rebalance.
+        let mut both = tiny_plan();
+        both.pipelines[0].replicas = 2;
+        both.pipelines[1].replicas = 4;
+        assert!(!PlanDiff::between(&a, &both).is_cross_group());
+    }
+
+    #[test]
+    fn pre_retune_diff_json_still_parses() {
+        // Diffs serialized before the `retuned` field existed.
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.pipelines[1].replicas = 4;
+        let d = PlanDiff::between(&a, &b);
+        let mut j = d.to_json();
+        // Simulate an old artifact: drop the retuned array entirely.
+        if let Json::Obj(m) = &mut j {
+            m.remove("retuned");
+        }
+        let back = PlanDiff::from_json(&j).unwrap();
+        assert_eq!(back, d, "absent retuned parses as empty");
     }
 }

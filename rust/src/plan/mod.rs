@@ -27,8 +27,9 @@
 
 pub mod diff;
 pub mod instance;
+pub mod presets;
 
-pub use diff::{BindingRebind, PipelineResize, PlanDiff, PolicyChange};
+pub use diff::{BindingRebind, FractionShift, PipelineResize, PlanDiff, PolicyChange};
 pub use instance::{edge_payload_bytes, DagTopology, LlmUnit};
 
 use crate::cluster::sim::{Placement, PipelineSpec};
@@ -134,6 +135,16 @@ impl Role {
     }
 }
 
+/// The one true spelling of a pipeline group's shape key. Every
+/// group-granular surface — [`PipelineBinding::shape_key`], the DAG
+/// simulator's per-group stats/counters, [`diff::PlanDiff`]'s
+/// cross-group detection, rebalance lookups, the live server's
+/// `server_group_jobs:*` metrics — formats through this function, so
+/// the keys can never drift apart byte-wise.
+pub fn shape_key_of(role: Role, device: &str, tp: u32, pp: u32, max_batch: u64) -> String {
+    format!("{} {device} tp{tp} pp{pp} b{max_batch}", role.name())
+}
+
 /// A serving pipeline group: `replicas` copies of a (device, TP×PP,
 /// batch limit) unit, occupying consecutive chassis starting at
 /// `chassis`.
@@ -155,6 +166,15 @@ impl PipelineBinding {
             tp: self.tp,
             pp: self.pp,
         }
+    }
+
+    /// Canonical shape identity of this group — the string every
+    /// group-granular surface keys on (plan diffs, per-group window
+    /// stats, per-group job counters, rebalance decisions), so the
+    /// orchestrator, both execution backends, and the conformance suite
+    /// all name the same group the same way.
+    pub fn shape_key(&self) -> String {
+        shape_key_of(self.role, &self.device, self.tp, self.pp, self.max_batch)
     }
 
     /// Serialize one pipeline group (shared by the plan writer and

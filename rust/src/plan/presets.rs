@@ -1,0 +1,223 @@
+//! Ready-made [`ExecutionPlan`]s for the heterogeneity demos and the
+//! cross-backend conformance suite.
+//!
+//! The paper's headline TCO result is that a **mixed-generation** fleet
+//! — older accelerators kept in service next to the newest parts — can
+//! match the cost-efficiency of the latest homogeneous design.
+//! [`mixed_generation`] builds the plan shape that exercises it: one
+//! prefill group on the new hardware and the decode stream **split
+//! across two decode groups of different generations** (expert-style
+//! sibling bindings whose `token_fraction`s sum to 1, each routed to
+//! its own hardware class), so the orchestrator's group-granular
+//! retarget has real cross-generation capacity to shift.
+//! [`homogeneous`] is the newest-only counterpart the demo compares
+//! TCO against (`agentic-hetero orchestrate --fleet mixed`).
+
+use super::{
+    AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, PipelineBinding,
+    Role, SlaSpec, Stage,
+};
+
+fn cpu(op: &str, latency_s: f64, deps: Vec<usize>) -> NodeBinding {
+    NodeBinding {
+        op: op.into(),
+        class: "CPU".into(),
+        stage: Stage::Cpu,
+        latency_s,
+        cost_usd: 0.0,
+        deps,
+        xfer_bytes: 0.0,
+        token_fraction: 1.0,
+    }
+}
+
+fn llm(
+    op: &str,
+    class: &str,
+    stage: Stage,
+    latency_s: f64,
+    deps: Vec<usize>,
+    tf: f64,
+) -> NodeBinding {
+    NodeBinding {
+        op: op.into(),
+        class: class.into(),
+        stage,
+        latency_s,
+        cost_usd: 1e-5,
+        deps,
+        xfer_bytes: 1e6,
+        token_fraction: tf,
+    }
+}
+
+/// A two-generation serving plan: prefill on `new_dev`, decode split
+/// across a `new_dev` group (`new_decode` replicas) and an `old_dev`
+/// group (`old_decode` replicas). The decode siblings' token fractions
+/// start proportional to each class's deployed batch capacity — the
+/// same rule `orchestrator::retune_token_fractions` re-applies after
+/// every cross-group replica shift.
+pub fn mixed_generation(
+    model: &str,
+    new_dev: &str,
+    old_dev: &str,
+    new_decode: u32,
+    old_decode: u32,
+) -> ExecutionPlan {
+    let new_decode = new_decode.max(1);
+    let old_decode = old_decode.max(1);
+    let max_batch: u64 = 16;
+    let cap_new = (new_decode as u64 * max_batch) as f64;
+    let cap_old = (old_decode as u64 * max_batch) as f64;
+    let share_new = cap_new / (cap_new + cap_old);
+    ExecutionPlan {
+        agent: "mixed_generation".into(),
+        model: model.into(),
+        sla: SlaSpec::EndToEnd(10.0),
+        bindings: vec![
+            cpu("io.input", 0.0005, vec![]),
+            llm("llm.prefill", new_dev, Stage::LlmPrefill, 0.04, vec![0], 1.0),
+            llm(
+                "llm.decode",
+                new_dev,
+                Stage::LlmDecode,
+                0.4,
+                vec![1],
+                share_new.clamp(0.01, 1.0),
+            ),
+            llm(
+                "llm.decode",
+                old_dev,
+                Stage::LlmDecode,
+                0.6,
+                vec![1],
+                (1.0 - share_new).clamp(0.01, 1.0),
+            ),
+            cpu("io.output", 0.0005, vec![2, 3]),
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: new_dev.into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: new_dev.into(),
+                tp: 1,
+                pp: 1,
+                max_batch,
+                replicas: new_decode,
+                chassis: 1,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: old_dev.into(),
+                tp: 1,
+                pp: 1,
+                max_batch,
+                replicas: old_decode,
+                chassis: 1 + new_decode,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 32,
+        cost_usd: 4e-5,
+        latency_s: 0.65,
+        pass_log: vec![],
+    }
+}
+
+/// The newest-homogeneous counterpart: the same DAG shape served by a
+/// single decode group on `dev` — the baseline the mixed fleet's TCO is
+/// compared against.
+pub fn homogeneous(model: &str, dev: &str, decode_replicas: u32) -> ExecutionPlan {
+    ExecutionPlan {
+        agent: "homogeneous".into(),
+        model: model.into(),
+        sla: SlaSpec::EndToEnd(10.0),
+        bindings: vec![
+            cpu("io.input", 0.0005, vec![]),
+            llm("llm.prefill", dev, Stage::LlmPrefill, 0.04, vec![0], 1.0),
+            llm("llm.decode", dev, Stage::LlmDecode, 0.4, vec![1], 1.0),
+            cpu("io.output", 0.0005, vec![2]),
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: dev.into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: dev.into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 16,
+                replicas: decode_replicas.max(1),
+                chassis: 1,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 32,
+        cost_usd: 4e-5,
+        latency_s: 0.45,
+        pass_log: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_generation_plan_is_valid_and_split() {
+        let p = mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        p.validate().unwrap();
+        // Two decode groups on different generations.
+        let decode_devs: Vec<&str> = p
+            .pipelines
+            .iter()
+            .filter(|g| g.role == Role::Decode)
+            .map(|g| g.device.as_str())
+            .collect();
+        assert_eq!(decode_devs, vec!["H100", "A100"]);
+        // Sibling decode bindings split the stream and sum to ~1.
+        let tf: f64 = p.bindings[2].token_fraction + p.bindings[3].token_fraction;
+        assert!((tf - 1.0).abs() < 1e-9, "fractions sum to 1: {tf}");
+        assert_eq!(p.bindings[2].deps, p.bindings[3].deps);
+        // Equal capacity ⇒ equal split.
+        assert!((p.bindings[2].token_fraction - 0.5).abs() < 1e-9);
+        // JSON round-trip (the demo saves these).
+        let back = ExecutionPlan::parse_json(&p.to_json_string()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn uneven_capacity_skews_the_split() {
+        let p = mixed_generation("8b-fp16", "H100", "A100", 3, 1);
+        p.validate().unwrap();
+        assert!((p.bindings[2].token_fraction - 0.75).abs() < 1e-9);
+        assert!((p.bindings[3].token_fraction - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn homogeneous_counterpart_is_valid() {
+        let p = homogeneous("8b-fp16", "H100", 4);
+        p.validate().unwrap();
+        assert_eq!(p.pipelines.len(), 2);
+        assert!(p.bindings.iter().all(|b| b.token_fraction == 1.0));
+    }
+}

@@ -1,6 +1,24 @@
 //! Utilization-driven autoscaling with hysteresis (§4.1 "Automatically
 //! scales agentic workloads across heterogeneous hardware resources
 //! based on load and utilization").
+//!
+//! Two granularities live here:
+//!
+//! * [`Autoscaler`] — one per pipeline *role*, deciding the role's
+//!   replica total from the aggregate pressure signal;
+//! * [`GroupScaler`] + [`score_groups`] — per pipeline *group* (a
+//!   hardware generation within a role): streak detection over
+//!   per-group utilization, and the cost-model score that decides
+//!   *which* group a scale delta lands on — scale-ups buy the cheapest
+//!   $/throughput capacity, scale-downs retire the worst-TCO capacity
+//!   first (the paper's mixed-fleet efficiency argument, MARS-style
+//!   heterogeneous co-scheduling).
+
+use std::collections::BTreeMap;
+
+use crate::cost::hardware::by_name;
+use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::plan::{ExecutionPlan, Role};
 
 /// Scaling decision for one pipeline role.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +109,168 @@ impl Autoscaler {
     }
 }
 
+// ---------------------------------------------------------------------
+// Per-group scoring and streak detection
+// ---------------------------------------------------------------------
+
+/// Cost/throughput standing of one pipeline group, derived from the
+/// planner's cost model ([`crate::cost`]): the derived opex of the
+/// group's device times its TP×PP footprint, over a role-appropriate
+/// throughput proxy (decode is HBM-bandwidth-bound, prefill
+/// compute-bound). `score` is $ per unit of throughput per hour —
+/// **lower is cheaper capacity**.
+#[derive(Debug, Clone)]
+pub struct GroupScore {
+    /// Index into `ExecutionPlan::pipelines`.
+    pub group: usize,
+    /// The group's canonical shape key ([`crate::plan::PipelineBinding::shape_key`]).
+    pub key: String,
+    /// Derived operating cost of one replica, $/hour.
+    pub usd_per_hour: f64,
+    /// Relative serving throughput of one replica (role-appropriate
+    /// roofline proxy; comparable within a role only).
+    pub throughput: f64,
+    /// usd_per_hour / throughput — the TCO ranking the retarget uses.
+    pub score: f64,
+}
+
+/// Score every pipeline group of `role`. Unknown devices score
+/// infinitely expensive, so they are always first to retire and never
+/// chosen for growth.
+pub fn score_groups(plan: &ExecutionPlan, role: Role) -> Vec<GroupScore> {
+    plan.pipelines
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.role == role)
+        .map(|(g, p)| {
+            let devices = (p.tp * p.pp).max(1) as f64;
+            let (usd_per_hour, throughput) = match by_name(&p.device) {
+                Some(d) => {
+                    let usd = devices
+                        * opex_usd_per_hour(&d, OpexModel::Derived, &FinanceTerms::default());
+                    let per_device = match role {
+                        Role::Decode => d.mem_bw_gbps,
+                        Role::Prefill => d.tflops_fp16,
+                    };
+                    (usd, per_device * devices)
+                }
+                None => (f64::INFINITY, 1.0),
+            };
+            GroupScore {
+                group: g,
+                key: p.shape_key(),
+                usd_per_hour,
+                throughput,
+                score: usd_per_hour / throughput.max(1e-9),
+            }
+        })
+        .collect()
+}
+
+/// Deterministic TCO ordering over [`GroupScore`]s: by score, ties by
+/// declaration order. The single comparator every consumer ranks with,
+/// so "which group is cheapest" can never diverge between the decision
+/// record, the retarget distribution, and the migration routing.
+pub fn rank(a: &GroupScore, b: &GroupScore) -> std::cmp::Ordering {
+    a.score
+        .partial_cmp(&b.score)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.group.cmp(&b.group))
+}
+
+/// The cheapest-$/throughput group (best to grow).
+pub fn cheapest(scores: &[GroupScore]) -> Option<&GroupScore> {
+    scores.iter().min_by(|a, b| rank(a, b))
+}
+
+/// The worst-TCO group (first to retire).
+pub fn worst(scores: &[GroupScore]) -> Option<&GroupScore> {
+    scores.iter().max_by(|a, b| rank(a, b))
+}
+
+/// A group whose pressure streak crossed a watermark for `patience`
+/// consecutive windows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupFired {
+    /// Shape key of the group.
+    pub key: String,
+    /// True = sustained hot (≥ high watermark); false = sustained cold
+    /// (≤ low watermark).
+    pub hot: bool,
+}
+
+/// Per-group hysteresis: the [`Autoscaler`] streak rule applied to each
+/// group's own pressure signal. Where the role scaler answers "how many
+/// replicas in total", this answers "which groups are persistently hot
+/// or idle" — the trigger for pure cross-group rebalances that move
+/// replicas between hardware generations without changing the total.
+#[derive(Debug)]
+pub struct GroupScaler {
+    cfg: AutoscalerConfig,
+    /// key → (hot streak, cold streak).
+    streaks: BTreeMap<String, (u32, u32)>,
+}
+
+impl GroupScaler {
+    pub fn new(cfg: AutoscalerConfig) -> GroupScaler {
+        GroupScaler {
+            cfg,
+            streaks: BTreeMap::new(),
+        }
+    }
+
+    /// Feed one window of per-group pressures; returns the groups whose
+    /// streak just crossed patience. Hot streaks reset on firing (an
+    /// *edge* signal, exactly like [`Autoscaler::observe`] — they
+    /// re-fire every `patience` hot windows). Cold streaks keep
+    /// counting (fired once, at the crossing), so
+    /// [`GroupScaler::sustained_cold`] stays true for as long as the
+    /// group actually idles — the *level* signal a rebalance donor is
+    /// picked by, which keeps a hot edge and a cold level pairable even
+    /// when their crossings land on different windows. Groups absent
+    /// from `pressures` (retired by a fleet change) are forgotten.
+    pub fn observe(&mut self, pressures: &[(String, f64)]) -> Vec<GroupFired> {
+        let live: std::collections::BTreeSet<&String> =
+            pressures.iter().map(|(k, _)| k).collect();
+        self.streaks.retain(|k, _| live.contains(k));
+        let mut fired = Vec::new();
+        for (key, p) in pressures {
+            let s = self.streaks.entry(key.clone()).or_insert((0, 0));
+            if *p >= self.cfg.high_watermark {
+                s.0 += 1;
+                s.1 = 0;
+            } else if *p <= self.cfg.low_watermark {
+                s.1 += 1;
+                s.0 = 0;
+            } else {
+                *s = (0, 0);
+            }
+            if s.0 >= self.cfg.patience {
+                s.0 = 0;
+                fired.push(GroupFired {
+                    key: key.clone(),
+                    hot: true,
+                });
+            } else if self.cfg.patience > 0 && s.1 == self.cfg.patience {
+                fired.push(GroupFired {
+                    key: key.clone(),
+                    hot: false,
+                });
+            }
+        }
+        fired
+    }
+
+    /// Has `key` sat at/below the low watermark for ≥ `patience`
+    /// consecutive windows (and not recovered since)? The donor-side
+    /// condition for cross-group rebalances.
+    pub fn sustained_cold(&self, key: &str) -> bool {
+        self.streaks
+            .get(key)
+            .is_some_and(|s| s.1 >= self.cfg.patience)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,5 +336,74 @@ mod tests {
         a.observe(0.9);
         assert_eq!(a.observe(0.9), ScaleDecision::ScaleUp(4));
         assert_eq!(a.current, 12);
+    }
+
+    #[test]
+    fn group_scores_follow_the_cost_model() {
+        let plan = crate::plan::presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        let scores = score_groups(&plan, Role::Decode);
+        assert_eq!(scores.len(), 2);
+        // Scores are the cost model verbatim: $/hr over the bandwidth
+        // proxy, per replica.
+        for s in &scores {
+            let p = &plan.pipelines[s.group];
+            let d = by_name(&p.device).unwrap();
+            let usd = opex_usd_per_hour(&d, OpexModel::Derived, &FinanceTerms::default());
+            assert!((s.usd_per_hour - usd).abs() < 1e-12, "{}", s.key);
+            assert!((s.throughput - d.mem_bw_gbps).abs() < 1e-9);
+            assert!((s.score - usd / d.mem_bw_gbps).abs() < 1e-12);
+            assert!(s.key.starts_with("decode "));
+        }
+        // Doubling TP doubles both cost and throughput: score invariant.
+        let mut tp2 = plan.clone();
+        tp2.pipelines[1].tp = 2;
+        let s1 = &score_groups(&plan, Role::Decode)[0];
+        let s2 = &score_groups(&tp2, Role::Decode)[0];
+        assert!((s1.score - s2.score).abs() < 1e-12);
+        assert!((s2.usd_per_hour - 2.0 * s1.usd_per_hour).abs() < 1e-9);
+        // Prefill uses the compute proxy.
+        let pre = score_groups(&plan, Role::Prefill);
+        assert_eq!(pre.len(), 1);
+        let h100 = by_name("H100").unwrap();
+        assert!((pre[0].throughput - h100.tflops_fp16).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_device_scores_infinitely_expensive() {
+        let mut plan = crate::plan::presets::mixed_generation("8b-fp16", "H100", "A100", 1, 1);
+        plan.pipelines[2].device = "TPUv9".into();
+        let scores = score_groups(&plan, Role::Decode);
+        assert!(scores[1].score.is_infinite());
+        assert!(scores[0].score.is_finite());
+    }
+
+    #[test]
+    fn group_scaler_fires_per_group_after_patience() {
+        let cfg = AutoscalerConfig {
+            patience: 2,
+            ..Default::default()
+        };
+        let mut gs = GroupScaler::new(cfg);
+        let window = |hot: f64, cold: f64| {
+            vec![("a".to_string(), hot), ("b".to_string(), cold)]
+        };
+        assert!(gs.observe(&window(0.95, 0.1)).is_empty());
+        assert!(!gs.sustained_cold("b"), "one cold window is not sustained");
+        let fired = gs.observe(&window(0.95, 0.1));
+        assert_eq!(fired.len(), 2);
+        assert!(fired.contains(&GroupFired { key: "a".into(), hot: true }));
+        assert!(fired.contains(&GroupFired { key: "b".into(), hot: false }));
+        // Hot resets (edge) and re-arms; cold keeps counting (level):
+        // the fired list is empty but the donor signal stays up.
+        assert!(gs.observe(&window(0.95, 0.1)).is_empty());
+        assert!(gs.sustained_cold("b"), "cold level persists past the edge");
+        assert!(!gs.sustained_cold("a"));
+        // Mid-band resets; vanished groups are forgotten.
+        gs.observe(&window(0.5, 0.5));
+        let only_a = [("a".to_string(), 0.95)];
+        gs.observe(&only_a);
+        let fired = gs.observe(&only_a);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].key, "a");
     }
 }

@@ -3,15 +3,20 @@
 //! migration"). Steps are ordered so capacity never goes negative:
 //! activations precede the drains they replace.
 //!
-//! Duration estimates price the KV motion over the *same* contended
-//! fabric model the simulator uses ([`crate::transport::fabric`]): one
-//! transfer per drained decode pipeline, spread across source NICs, all
-//! issued together — per-link bandwidth and FIFO queueing set the
-//! completion time, so the planner's migration cost and the simulator's
-//! observed cost agree.
+//! Duration estimates price the KV motion on the *same* contended
+//! [`TransferClock`](crate::transport::fabric::TransferClock) both
+//! execution backends drive: one transfer per drained decode pipeline,
+//! all issued together, each paying per-link bandwidth, latency, and
+//! FIFO queueing — so the planner's migration cost and the backends'
+//! observed cost agree. Cross-group moves carry real chassis routes
+//! ([`KvRoute`]): the drained group's chassis to the surviving group
+//! that absorbs its sessions (see `orchestrator::lower_diff`), instead
+//! of the old synthetic round-robin spread.
+
+use std::collections::BTreeMap;
 
 use crate::plan::{ExecutionPlan, Role};
-use crate::transport::fabric::{Fabric, NodeAddr};
+use crate::transport::fabric::{Fabric, TransferClock};
 use crate::util::json::Json;
 use crate::{jobj, Error, Result};
 
@@ -170,23 +175,63 @@ impl MigrationPlan {
     }
 }
 
+/// Where one drained group's KV travels: source chassis (the drained
+/// group's **top** replica — the `j`-th drained replica of the group
+/// prices from `from_chassis - j`, matching the simulator's
+/// retire-top-replicas-first drain, so concurrent drains spread over
+/// distinct NICs instead of FIFO-serializing on one link) to the
+/// chassis of the surviving same-role capacity that absorbs its
+/// sessions, plus the surviving group's label for the
+/// [`MigrationStep::TransferKv`] destination.
+#[derive(Debug, Clone)]
+pub struct KvRoute {
+    pub from_chassis: u32,
+    pub to_chassis: u32,
+    /// Human-readable destination (the absorbing group's shape key).
+    pub to_label: String,
+}
+
 /// Diff two fleet layouts into an ordered step list.
 ///
 /// `kv_per_drained_pipeline` prices the state that must leave each
 /// drained decode pipeline (prefill pipelines are stateless). The KV
-/// motion is priced over `fabric`: one transfer per drained pipeline,
-/// spread round-robin across source NICs and issued concurrently, so
-/// per-link bandwidth *and* contention (several drains sharing a NIC)
-/// both show up in `est_duration_s`.
+/// motion is priced on a private [`TransferClock`] over `fabric`: one
+/// transfer per drained pipeline, all issued together, so per-link
+/// bandwidth *and* contention (several drains sharing a NIC) both show
+/// up in `est_duration_s`. Without routes, sources spread round-robin
+/// across chassis and the destination is the anonymous "fleet" — use
+/// [`plan_migration_routed`] when the caller knows the group placement.
 pub fn plan_migration(
     current: &RoleMap,
     target: &RoleMap,
     kv_per_drained_pipeline: f64,
     fabric: &Fabric,
 ) -> MigrationPlan {
+    plan_migration_routed(
+        current,
+        target,
+        kv_per_drained_pipeline,
+        fabric,
+        &BTreeMap::new(),
+    )
+}
+
+/// [`plan_migration`] with per-device KV routes: `routes[device]` names
+/// the chassis pair and destination group for the KV leaving that
+/// drained decode device — the cross-group move the orchestrator's
+/// group-granular retarget produces. Devices without a route fall back
+/// to the round-robin spread.
+pub fn plan_migration_routed(
+    current: &RoleMap,
+    target: &RoleMap,
+    kv_per_drained_pipeline: f64,
+    fabric: &Fabric,
+    routes: &BTreeMap<String, KvRoute>,
+) -> MigrationPlan {
     let mut steps = Vec::new();
     let mut kv_bytes = 0.0;
-    let mut drained_decode: u32 = 0;
+    // (device, drained count) per shrinking decode entry, in map order.
+    let mut drained: Vec<(String, u32)> = Vec::new();
 
     // 1. Activations first (make-before-break).
     for ((device, role), want) in target {
@@ -206,11 +251,14 @@ pub fn plan_migration(
             let n = have - want;
             let moved = n as f64 * kv_per_drained_pipeline;
             kv_bytes += moved;
-            drained_decode += n;
+            drained.push((device.clone(), n));
             steps.push(MigrationStep::TransferKv {
                 bytes: moved,
                 from: device.clone(),
-                to: "fleet".into(),
+                to: routes
+                    .get(device)
+                    .map(|r| r.to_label.clone())
+                    .unwrap_or_else(|| "fleet".into()),
             });
         }
     }
@@ -226,23 +274,34 @@ pub fn plan_migration(
         }
     }
 
-    // Price the KV motion over a private copy of the fabric (no
-    // reservation side effects leak to the caller).
-    let mut f = fabric.clone();
-    f.reset();
-    let n_chassis = f.n_chassis.max(1);
+    // Price the KV motion on a private contended clock — the same FIFO
+    // reservation model both execution backends charge hops on. No
+    // reservation side effects leak to the caller.
+    let mut clock = TransferClock::new(fabric.clone());
+    clock.reset();
+    let max_route_chassis = routes
+        .values()
+        .map(|r| r.from_chassis.max(r.to_chassis) + 1)
+        .max()
+        .unwrap_or(0);
+    clock.grow(max_route_chassis);
+    let n_chassis = clock.n_chassis().max(1);
     let mut done = 0.0f64;
-    for i in 0..drained_decode {
-        let from = NodeAddr {
-            chassis: i % n_chassis,
-            slot: 0,
-        };
-        let to = NodeAddr {
-            chassis: (i + 1) % n_chassis,
-            slot: 0,
-        };
-        if let Ok(t) = f.transfer(from, to, kv_per_drained_pipeline, 0.0) {
-            done = done.max(t);
+    let mut i = 0u32;
+    for (device, n) in &drained {
+        for j in 0..*n {
+            let (from, to) = match routes.get(device) {
+                // The j-th drained replica leaves from one chassis
+                // below the previous (top-down retirement), so the
+                // transfers contend only where replicas truly share a
+                // NIC.
+                Some(r) => (r.from_chassis.saturating_sub(j), r.to_chassis),
+                None => (i % n_chassis, (i + 1) % n_chassis),
+            };
+            if let Ok(t) = clock.transfer(from, to, kv_per_drained_pipeline, 0.0) {
+                done = done.max(t);
+            }
+            i += 1;
         }
     }
 
@@ -347,6 +406,60 @@ mod tests {
             many.est_duration_s,
             single.est_duration_s
         );
+    }
+
+    #[test]
+    fn routed_kv_names_the_absorbing_group_and_prices_the_real_hop() {
+        let cur = role_map(&[("A100", "decode", 2), ("H100", "decode", 1)]);
+        let tgt = role_map(&[("A100", "decode", 1), ("H100", "decode", 2)]);
+        let mut routes = BTreeMap::new();
+        routes.insert(
+            "A100".to_string(),
+            KvRoute {
+                from_chassis: 3,
+                to_chassis: 1,
+                to_label: "decode H100 tp1 pp1 b16".to_string(),
+            },
+        );
+        let routed = plan_migration_routed(&cur, &tgt, 1e9, &fabric(), &routes);
+        // The transfer step names the surviving group, not "fleet".
+        assert!(routed.steps.iter().any(|s| matches!(
+            s,
+            MigrationStep::TransferKv { to, from, .. }
+                if to == "decode H100 tp1 pp1 b16" && from == "A100"
+        )));
+        assert_eq!(routed.kv_bytes, 1e9);
+        // Same-chassis route ⇒ scale-up hop ⇒ cheaper than the NIC path.
+        let mut local = BTreeMap::new();
+        local.insert(
+            "A100".to_string(),
+            KvRoute {
+                from_chassis: 1,
+                to_chassis: 1,
+                to_label: "x".into(),
+            },
+        );
+        let free = plan_migration_routed(&cur, &tgt, 1e9, &fabric(), &local);
+        assert!(free.est_duration_s <= routed.est_duration_s);
+        assert!((free.est_duration_s - MIGRATION_OVERHEAD_S).abs() < 1e-9);
+        // Routes outside the fabric grow it rather than erroring.
+        let mut far = BTreeMap::new();
+        far.insert(
+            "A100".to_string(),
+            KvRoute {
+                from_chassis: 9,
+                to_chassis: 0,
+                to_label: "x".into(),
+            },
+        );
+        let grown = plan_migration_routed(&cur, &tgt, 1e9, &fabric(), &far);
+        assert!(grown.est_duration_s > MIGRATION_OVERHEAD_S);
+        // Unrouted devices keep the round-robin fallback (legacy path).
+        let plain = plan_migration(&cur, &tgt, 1e9, &fabric());
+        assert!(plain
+            .steps
+            .iter()
+            .any(|s| matches!(s, MigrationStep::TransferKv { to, .. } if to == "fleet")));
     }
 
     #[test]

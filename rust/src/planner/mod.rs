@@ -23,9 +23,13 @@ pub mod feedback;
 pub mod migration;
 pub mod plan;
 
-pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use autoscale::{
+    score_groups, Autoscaler, AutoscalerConfig, GroupFired, GroupScaler, GroupScore,
+    ScaleDecision,
+};
 pub use feedback::ProfileStore;
 pub use migration::{
-    plan_migration, role_map_of, role_replicas, MigrationPlan, MigrationStep, RoleMap,
+    plan_migration, plan_migration_routed, role_map_of, role_replicas, KvRoute, MigrationPlan,
+    MigrationStep, RoleMap,
 };
 pub use plan::{Planner, PlannerConfig};

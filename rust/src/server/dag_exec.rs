@@ -696,6 +696,24 @@ impl DagDispatch {
         }
     }
 
+    /// Bump the per-group job ledger for a routed LLM node — the live
+    /// counterpart of the simulator's `DagDetail::jobs_by_group`. Keys
+    /// are `server_group_jobs:<shape key>` in the metrics snapshot, so
+    /// the conformance suite can pin per-group request counts across
+    /// backends exactly.
+    fn count_group_job(&self, rt: &DagRuntime, run: &ReqRun, node: usize) {
+        let group = match run.node_pipe[node] {
+            Some((Role::Prefill, k)) => rt.prefill_pipes[k].group,
+            Some((Role::Decode, k)) => rt.decode_pipes[k].group,
+            None => return,
+        };
+        if let Some(p) = rt.plan.pipelines.get(group) {
+            self.metrics
+                .counter(&format!("server_group_jobs:{}", p.shape_key()))
+                .inc();
+        }
+    }
+
     /// Submit one CPU/tool/IO stage to the host pool.
     fn dispatch_cpu(&mut self, rt: &DagRuntime, run: &mut ReqRun, node: usize, pool: &HostPool) {
         let binding = &rt.plan.bindings[node];
@@ -735,6 +753,7 @@ impl DagDispatch {
         if let Some(p) = u.prefill {
             self.assign_pipe(rt, run, p);
             self.metrics.counter("server_prefill_jobs").inc();
+            self.count_group_job(rt, run, p);
             run.outstanding += 1;
             let engine = run.node_pipe[p]
                 .map(|(role, k)| rt.engine_of(role, k))
@@ -760,6 +779,7 @@ impl DagDispatch {
             .expect("decode phase scheduled for unit without decode");
         self.assign_pipe(rt, run, d);
         self.metrics.counter("server_decode_jobs").inc();
+        self.count_group_job(rt, run, d);
         run.outstanding += 1;
         let engine = run.node_pipe[d]
             .map(|(role, k)| rt.engine_of(role, k))

@@ -322,6 +322,36 @@ impl Server {
             .collect()
     }
 
+    /// Measured busy fraction per **plan pipeline group** over the last
+    /// `window_s` seconds, aligned with the installed plan's
+    /// `pipelines` order: each group reads the (prefill or decode) half
+    /// of the engine it is bound to, so the orchestrator's group
+    /// signals name which hardware generation is hot. Groups sharing an
+    /// engine read the same signal (the pool wraps round-robin). Empty
+    /// when no plan is installed. Read-only — call before
+    /// [`Server::take_utilization`], which resets the window.
+    pub fn group_utilization(&self, window_s: f64) -> Vec<f64> {
+        let w = window_s.max(1e-9);
+        match &self.dag {
+            Some(rt) => rt
+                .plan
+                .pipelines
+                .iter()
+                .enumerate()
+                .map(|(g, p)| {
+                    let e = rt.engine_of_group.get(g).copied().unwrap_or(0);
+                    let b = self.engine_busy.get(e).copied().unwrap_or((0.0, 0.0));
+                    let busy = match p.role {
+                        Role::Prefill => b.0,
+                        Role::Decode => b.1,
+                    };
+                    (busy / w).clamp(0.0, 1.0)
+                })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
     /// Measured per-role utilization over the last `window_s` seconds:
     /// (prefill, decode, host) busy fractions, from each engine's timed
     /// stage execution (normalized by the engines actually serving that
@@ -932,6 +962,15 @@ mod tests {
         assert_eq!(snap["server_prefill_jobs"], 6.0);
         assert_eq!(snap["server_decode_jobs"], 6.0);
         assert_eq!(snap["server_host_jobs"], 12.0);
+        // Per-group ledger: every LLM job attributed to its pipeline
+        // group's shape key (the cross-backend parity counters).
+        assert_eq!(snap["server_group_jobs:prefill H100 tp1 pp1 b8"], 6.0);
+        assert_eq!(snap["server_group_jobs:decode Gaudi3 tp1 pp1 b32"], 6.0);
+        // Per-group utilization aligns with the plan's groups (read
+        // before take_utilization resets the window).
+        let gu = server.group_utilization(1.0);
+        assert_eq!(gu.len(), 2);
+        assert!(gu.iter().all(|u| (0.0..=1.0).contains(u)));
         // Measured utilization is live and sane.
         let (pre, dec, host) = server.take_utilization(1.0);
         assert!((0.0..=1.0).contains(&pre));

@@ -304,6 +304,78 @@ fn host_heavy_trace_scales_cpu_workers_through_the_loop() {
 }
 
 #[test]
+fn mixed_generation_fleet_rebalances_across_groups() {
+    use agentic_hetero::plan::presets::mixed_generation;
+
+    // The paper's headline scenario: decode split across two hardware
+    // generations. A burst then a lull forces scale-up and scale-down;
+    // the scored retarget distributes both across the generations and
+    // re-aligns the token split — every fleet change on this plan is a
+    // cross-group rebalance. Deliberately tiny decode batch slots so
+    // the burst's *backlog* (not a device-model-dependent utilization
+    // figure) drives the pressure signal deterministically.
+    let mut plan = mixed_generation("8b-fp16", "H100", "A100", 1, 1);
+    plan.pipelines[1].max_batch = 2;
+    plan.pipelines[2].max_batch = 2;
+    let trace = burst_then_lull();
+    let cfg = OrchestratorConfig {
+        window_s: 2.0,
+        autoscale: AutoscalerConfig {
+            high_watermark: 0.80,
+            low_watermark: 0.25,
+            patience: 2,
+            min_pipelines: 1,
+            max_pipelines: 16,
+        },
+        backlog_factor: 1.0,
+        cpu_autoscale: None,
+    };
+    let orch = Orchestrator::new(cfg, plan.clone(), "burst_then_lull", "sim").unwrap();
+    let mut exec = SimExecutor::new(&trace);
+    let timeline = exec.orchestrate(orch).unwrap();
+    let report = exec.report.as_ref().expect("sim must finish");
+
+    // Nothing dropped across the cross-group fleet changes.
+    assert_eq!(report.n_requests, 160);
+
+    // ≥ 1 cross-group rebalance diff in the timeline (the acceptance
+    // gate for `orchestrate` on a mixed-generation trace).
+    assert!(
+        timeline.n_cross_group_rebalances() >= 1,
+        "mixed fleet must rebalance across groups: {}",
+        timeline.summary()
+    );
+    // The rebalanced plans keep both generations alive and shift the
+    // sibling token split with the capacity.
+    for p in timeline.plans() {
+        p.validate().unwrap();
+        let decode_devs: Vec<&str> = p
+            .pipelines
+            .iter()
+            .filter(|g| g.role == Role::Decode)
+            .map(|g| g.device.as_str())
+            .collect();
+        assert_eq!(decode_devs, vec!["H100", "A100"]);
+        let tf_sum = p.bindings[2].token_fraction + p.bindings[3].token_fraction;
+        assert!((tf_sum - 1.0).abs() < 1e-6, "split stays a partition: {tf_sum}");
+    }
+    // At least one emitted plan moved the token split off the initial
+    // 50/50 (load followed the hardware).
+    assert!(
+        timeline.plans().iter().any(|p| {
+            (p.bindings[2].token_fraction - 0.5).abs() > 1e-9
+        }),
+        "token fractions must follow the capacity shift"
+    );
+
+    // The record round-trips losslessly with its group-granular events.
+    let text = timeline.to_json_string();
+    let back = Timeline::parse_json(&text).unwrap();
+    assert_eq!(back, timeline);
+    assert_eq!(back.to_json_string(), text);
+}
+
+#[test]
 fn steady_load_never_migrates() {
     // Mid-band utilization: the hysteresis must hold the fleet still.
     let trace = generate(&TraceConfig {

@@ -473,6 +473,151 @@ fn cross_chassis_live_does_not_undercut_sim() {
     let _ = std::fs::write("CONFORMANCE_cross_chassis.json", report_json.pretty());
 }
 
+/// Scripted fleet controller for the simulator side of the
+/// two-generation conformance run: applies `plan` at window `at`.
+struct ApplyOnce {
+    at: usize,
+    window: usize,
+    plan: ExecutionPlan,
+    applied: Vec<agentic_hetero::cluster::dag::FleetChangeStats>,
+}
+
+impl agentic_hetero::cluster::dag::FleetController for ApplyOnce {
+    fn on_window(
+        &mut self,
+        _stats: &agentic_hetero::cluster::dag::WindowStats,
+    ) -> Option<ExecutionPlan> {
+        let w = self.window;
+        self.window += 1;
+        (w == self.at).then(|| self.plan.clone())
+    }
+
+    fn on_applied(&mut self, _t: f64, stats: &agentic_hetero::cluster::dag::FleetChangeStats) {
+        self.applied.push(stats.clone());
+    }
+}
+
+/// The group-granular rebalancing conformance gate: a two-generation
+/// decode fleet (H100 + A100) takes a cross-group rebalance diff
+/// mid-workload on BOTH backends — the simulator via a controlled fleet
+/// change, the live server via `reconfigure_plan` between windows —
+/// and afterwards the per-group request counts match **exactly**
+/// (`DagDetail::jobs_by_group` vs the `server_group_jobs:*` counters),
+/// the retired generation's pipelines drain without dropping a single
+/// in-flight request, and token totals stay identical.
+#[test]
+fn two_generation_rebalance_keeps_per_group_parity() {
+    use agentic_hetero::orchestrator::rebalance;
+    use agentic_hetero::plan::presets::mixed_generation;
+    use agentic_hetero::plan::{PlanDiff, Role};
+
+    const N: usize = 24;
+    const MG_ISL: usize = 48;
+    const MG_OSL: usize = 16;
+
+    let plan_a = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
+    let a100_key = plan_a.pipelines[2].shape_key();
+    let h100_key = plan_a.pipelines[1].shape_key();
+    // The rebalance under test: one replica moves A100 → H100.
+    let plan_b = rebalance(&plan_a, Role::Decode, &a100_key, &h100_key, 1);
+    let diff = PlanDiff::between(&plan_a, &plan_b);
+    assert!(diff.is_cross_group(), "{}", diff.summary());
+
+    // ---- simulator: the rebalance lands mid-run ---------------------
+    let trace = generate(&TraceConfig {
+        n_requests: N,
+        rate: 40.0,
+        isl_mean: MG_ISL as u64,
+        osl_mean: MG_OSL as u64,
+        sigma: 0.0,
+        seed: 17,
+    });
+    let mut sim = DagSim::new(&plan_a).unwrap();
+    let mut ctl = ApplyOnce {
+        at: 0,
+        window: 0,
+        plan: plan_b.clone(),
+        applied: Vec::new(),
+    };
+    let report = sim.run_controlled(&trace, 0.2, &mut ctl).unwrap();
+    assert_eq!(report.n_requests, N, "the retiring group must drain, not drop");
+    assert_eq!(ctl.applied.len(), 1, "the rebalance must apply");
+    assert!(ctl.applied[0].activated >= 1, "H100 capacity comes up");
+    assert!(ctl.applied[0].retired >= 1, "A100 capacity drains");
+    let detail = sim.last_detail().unwrap().clone();
+    // Structural per-group ledger: one prefill + each decode sibling
+    // per request, attributed to its generation's group.
+    let expect: Vec<(&str, u64)> = vec![
+        ("prefill H100 tp1 pp1 b8", N as u64),
+        ("decode H100 tp1 pp1 b16", N as u64),
+        ("decode A100 tp1 pp1 b16", N as u64),
+    ];
+    for (key, n) in &expect {
+        assert_eq!(
+            detail.jobs_by_group.get(*key),
+            Some(n),
+            "sim group ledger for {key}: {:?}",
+            detail.jobs_by_group
+        );
+    }
+
+    // ---- live server: same plans, same rebalance boundary -----------
+    let mut server = Server::from_plan_with_engines(
+        Engine::synthetic_pool(plan_a.pipelines.len()),
+        &plan_a,
+    )
+    .unwrap();
+    let mut cfg = server.config().clone();
+    cfg.time_scale = 0.02;
+    cfg.max_new_tokens = MG_OSL;
+    server.reconfigure(cfg);
+    server.install_plan(&plan_a).unwrap();
+    let reqs: Vec<ChatRequest> = (0..N as u64)
+        .map(|i| {
+            let byte = b'a' + (i % 23) as u8;
+            ChatRequest::new(i, vec![byte; MG_ISL], MG_OSL).with_agent(plan_a.agent.as_str())
+        })
+        .collect();
+    let first: Vec<ChatRequest> = reqs[..N / 2].to_vec();
+    let second: Vec<ChatRequest> = reqs[N / 2..].to_vec();
+    let (mut server, r1) = run_live(server, first);
+    // The cross-group rebalance applies between windows, exactly like
+    // the orchestrator's live backend.
+    server
+        .reconfigure_plan(&plan_b)
+        .expect("rebalanced plan must install live");
+    let (server, r2) = run_live(server, second);
+    let responses: Vec<ChatResponse> = r1.into_iter().chain(r2).collect();
+    assert_eq!(responses.len(), N);
+    let mut live_tokens = 0u64;
+    for r in &responses {
+        assert!(r.is_ok(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(
+            r.stages.len(),
+            plan_a.bindings.len(),
+            "every binding executes exactly once across the rebalance"
+        );
+        live_tokens += r.tokens as u64;
+    }
+
+    // ---- per-group request counts match exactly ---------------------
+    let snap = server.metrics.snapshot();
+    for (key, n) in &expect {
+        assert_eq!(
+            snap.get(&format!("server_group_jobs:{key}")).copied(),
+            Some(*n as f64),
+            "live group counter for {key}"
+        );
+    }
+    // And the aggregate role counters still agree with the sim.
+    assert_eq!(snap["server_prefill_jobs"], detail.prefill_jobs as f64);
+    assert_eq!(snap["server_decode_jobs"], detail.decode_jobs as f64);
+    assert_eq!(snap["server_host_jobs"], detail.host_jobs as f64);
+
+    // ---- token parity across the rebalance --------------------------
+    assert_eq!(live_tokens, report.output_tokens);
+}
+
 #[test]
 fn sim_and_live_agree_on_cpu_only_plans() {
     // No LLM stages at all: the host pool carries the whole graph.

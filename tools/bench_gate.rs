@@ -1,0 +1,269 @@
+//! CI perf-ledger regression gate.
+//!
+//! Compares the freshly-produced `BENCH_orchestrator.json` (written by
+//! `cargo bench --bench orchestrator_loop`) against the committed
+//! `BENCH_baseline.json` and **fails the workflow** on regression,
+//! printing a per-metric delta table either way.
+//!
+//! Tolerance rules (see also the comments in `.github/workflows/ci.yml`):
+//!
+//! * **Deterministic metrics** (`migration_steps`, `plans_emitted`,
+//!   `migrations`, `sla_attainment`) come from seeded, modeled-time
+//!   runs — any drift is a behavior change. They gate at ±20% relative
+//!   (`BENCH_GATE_TOL`, default 0.20).
+//! * **Timing metrics** (`decisions_per_s`) depend on the runner's
+//!   silicon, so they only gate on a *collapse*: current must stay
+//!   above `baseline / BENCH_GATE_TIMING_COLLAPSE` (default 5×) —
+//!   catching an order-of-magnitude hot-path regression without
+//!   flaking on CI hardware variance.
+//! * A baseline value of `null` means "not yet pinned" — the metric is
+//!   reported but does not gate (used to bootstrap a metric before its
+//!   first green CI run produces a number to commit).
+//!
+//! Baseline refresh (after an *intentional* perf/behavior change):
+//!
+//! ```text
+//! cargo bench --bench orchestrator_loop   # writes BENCH_orchestrator.json
+//! cargo run --release --bin bench_gate -- --refresh
+//! git add BENCH_baseline.json             # commit with the change
+//! ```
+
+use agentic_hetero::util::json::Json;
+
+const LEDGER: &str = "BENCH_orchestrator.json";
+const BASELINE: &str = "BENCH_baseline.json";
+
+/// Metrics whose absolute values are machine-dependent (gated only on
+/// collapse, never on improvement or modest drift).
+const TIMING_METRICS: &[&str] = &["decisions_per_s"];
+
+#[derive(Debug, PartialEq)]
+enum Verdict {
+    Ok,
+    Regressed,
+    Unpinned,
+    Missing,
+}
+
+struct RowResult {
+    metric: String,
+    baseline: Option<f64>,
+    current: Option<f64>,
+    delta_pct: Option<f64>,
+    verdict: Verdict,
+}
+
+/// Compare one metric under the gate's tolerance rules.
+fn judge(
+    metric: &str,
+    baseline: Option<f64>,
+    current: Option<f64>,
+    tol: f64,
+    collapse: f64,
+) -> RowResult {
+    let delta_pct = match (baseline, current) {
+        (Some(b), Some(c)) if b != 0.0 => Some((c - b) / b * 100.0),
+        _ => None,
+    };
+    let verdict = match (baseline, current) {
+        (None, _) => Verdict::Unpinned,
+        (Some(_), None) => Verdict::Missing,
+        (Some(b), Some(c)) => {
+            let regressed = if TIMING_METRICS.contains(&metric) {
+                c < b / collapse
+            } else if b == 0.0 {
+                c != 0.0
+            } else {
+                ((c - b) / b).abs() > tol
+            };
+            if regressed {
+                Verdict::Regressed
+            } else {
+                Verdict::Ok
+            }
+        }
+    };
+    RowResult {
+        metric: metric.to_string(),
+        baseline,
+        current,
+        delta_pct,
+        verdict,
+    }
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn num(v: &Json) -> Option<f64> {
+    v.as_f64()
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.6}"),
+        None => "—".to_string(),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let refresh = args.iter().any(|a| a == "--refresh");
+
+    let ledger_src = match std::fs::read_to_string(LEDGER) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "bench_gate: cannot read {LEDGER}: {e} \
+                 (run `cargo bench --bench orchestrator_loop` first)"
+            );
+            std::process::exit(2);
+        }
+    };
+    let ledger = match Json::parse(&ledger_src) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_gate: {LEDGER} is not valid JSON: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    if refresh {
+        // Pin the current ledger as the new baseline verbatim.
+        if let Err(e) = std::fs::write(BASELINE, ledger.pretty()) {
+            eprintln!("bench_gate: write {BASELINE}: {e}");
+            std::process::exit(2);
+        }
+        println!("bench_gate: pinned {BASELINE} from {LEDGER}");
+        return;
+    }
+
+    let baseline_src = match std::fs::read_to_string(BASELINE) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {BASELINE}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let baseline = match Json::parse(&baseline_src) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_gate: {BASELINE} is not valid JSON: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let tol = env_f64("BENCH_GATE_TOL", 0.20);
+    let collapse = env_f64("BENCH_GATE_TIMING_COLLAPSE", 5.0);
+
+    // Every metric named by the baseline gates; ledger-only metrics are
+    // reported as unpinned (candidates for the next refresh).
+    let mut metrics: Vec<String> = Vec::new();
+    for j in [&baseline, &ledger] {
+        if let Json::Obj(m) = j {
+            for k in m.keys() {
+                if !metrics.iter().any(|x| x == k) {
+                    metrics.push(k.clone());
+                }
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    for m in &metrics {
+        let b = baseline.get(m).and_then(num);
+        let c = ledger.get(m).and_then(num);
+        rows.push(judge(m, b, c, tol, collapse));
+    }
+
+    println!(
+        "bench_gate: {LEDGER} vs {BASELINE} (tol ±{:.0}%, timing collapse {collapse}x)",
+        tol * 100.0
+    );
+    println!(
+        "{:<22} {:>14} {:>14} {:>9}  verdict",
+        "metric", "baseline", "current", "delta"
+    );
+    let mut failed = false;
+    for r in &rows {
+        let verdict = match r.verdict {
+            Verdict::Ok => "ok",
+            Verdict::Regressed => {
+                failed = true;
+                "REGRESSED"
+            }
+            Verdict::Unpinned => "unpinned (not gated)",
+            Verdict::Missing => {
+                failed = true;
+                "MISSING from ledger"
+            }
+        };
+        let delta = match r.delta_pct {
+            Some(d) => format!("{d:+.1}%"),
+            None => "—".to_string(),
+        };
+        println!(
+            "{:<22} {:>14} {:>14} {:>9}  {verdict}",
+            r.metric,
+            fmt_opt(r.baseline),
+            fmt_opt(r.current),
+            delta
+        );
+    }
+    if failed {
+        eprintln!(
+            "bench_gate: REGRESSION — if intentional, refresh the baseline: \
+             `cargo run --release --bin bench_gate -- --refresh` and commit {BASELINE}"
+        );
+        std::process::exit(1);
+    }
+    println!("bench_gate: ok");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_metrics_gate_at_tolerance() {
+        let r = judge("migrations", Some(10.0), Some(11.9), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+        assert!((r.delta_pct.unwrap() - 19.0).abs() < 1e-9);
+        let r = judge("migrations", Some(10.0), Some(12.1), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        // Both directions gate: a deterministic count changing at all
+        // beyond tolerance is a behavior change.
+        let r = judge("migrations", Some(10.0), Some(7.9), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        // Zero baselines require exact zero.
+        let r = judge("plans_emitted", Some(0.0), Some(0.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+        let r = judge("plans_emitted", Some(0.0), Some(1.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+    }
+
+    #[test]
+    fn timing_metrics_gate_only_on_collapse() {
+        // 3x slower: noisy CI silicon, still ok.
+        let r = judge("decisions_per_s", Some(1000.0), Some(350.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+        // 10x slower: a hot-path regression.
+        let r = judge("decisions_per_s", Some(1000.0), Some(99.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        // Faster never fails.
+        let r = judge("decisions_per_s", Some(1000.0), Some(9000.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn unpinned_and_missing_metrics() {
+        let r = judge("new_metric", None, Some(5.0), 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Unpinned);
+        let r = judge("gone_metric", Some(5.0), None, 0.20, 5.0);
+        assert_eq!(r.verdict, Verdict::Missing);
+    }
+}
