@@ -4,17 +4,21 @@
 //! trace. Emits `BENCH_orchestrator.json` (decisions/s, migration
 //! steps, SLA attainment) for the perf ledger.
 
+use agentic_hetero::cluster::sim::simulate_plan;
 use agentic_hetero::cluster::trace::{bursty, TraceConfig};
 use agentic_hetero::jobj;
 use agentic_hetero::orchestrator::{
     lower_diff, retarget, Executor, Orchestrator, OrchestratorConfig, SimExecutor,
 };
+use agentic_hetero::plan::presets::mixed_generation;
 use agentic_hetero::plan::{
     AdmissionPolicy, BatchPolicy, ExecutionPlan, FabricSpec, NodeBinding, PipelineBinding,
     PlanDiff, Role, SlaSpec, Stage,
 };
 use agentic_hetero::planner::autoscale::AutoscalerConfig;
 use agentic_hetero::planner::migration::{plan_migration, RoleMap};
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, Server};
 use agentic_hetero::transport::fabric::Fabric;
 use agentic_hetero::util::bench::Bench;
 use agentic_hetero::util::json::Json;
@@ -168,6 +172,60 @@ fn main() {
         exec.orchestrate(orch()).unwrap().n_migrations()
     });
 
+    // 4. Raw simulator event throughput: one `simulate_plan` pass over
+    //    the bursty trace, normalised to discrete events processed.
+    let sim_report =
+        simulate_plan(&plan, &trace).expect("bench plan must simulate");
+    let sim_mean_s = b
+        .run("orchestrator/simulate_plan_192req", || {
+            simulate_plan(&plan, &trace).unwrap().events_processed
+        })
+        .mean_s;
+    let sim_events_per_s = sim_report.events_processed as f64 / sim_mean_s.max(1e-12);
+
+    // 5. Live serving throughput: a synthetic burst through the
+    //    threaded dispatcher on the two-generation plan (one engine
+    //    worker thread per pipeline group; `time_scale = 0` so the
+    //    measurement is dispatch + compute, not modeled sleeps). The
+    //    heavier gated run lives in `tools/stress_serve.rs`; this is
+    //    the ledger's trend line.
+    let live_n: usize = 256;
+    let live_plan = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
+    let live_wall_s = {
+        let mut server = Server::from_plan_with_engines(
+            Engine::synthetic_pool(live_plan.pipelines.len()),
+            &live_plan,
+        )
+        .expect("live plan must install");
+        let mut cfg = server.config().clone();
+        cfg.time_scale = 0.0;
+        cfg.max_new_tokens = 16;
+        cfg.admission.rate = 1e9;
+        cfg.admission.burst = 1e9;
+        cfg.admission.max_queue_depth = live_n * 2;
+        server.reconfigure(cfg);
+        server.install_plan(&live_plan).expect("live plan must install");
+        let reqs: Vec<ChatRequest> = (0..live_n as u64)
+            .map(|i| {
+                let byte = b'a' + (i % 23) as u8;
+                ChatRequest::new(i, vec![byte; 48], 16)
+                    .with_agent(live_plan.agent.as_str())
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let responses = server.run_workload(reqs).expect("live burst must serve");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(responses.len(), live_n, "live burst dropped requests");
+        assert!(responses.iter().all(|r| r.is_ok()), "live burst failed");
+        wall
+    };
+    let live_requests_per_s = live_n as f64 / live_wall_s.max(1e-12);
+    println!(
+        "orchestrator/live_serve_{live_n}req      mean {:>9.3} ms   {:>12.1} req/s",
+        live_wall_s * 1e3,
+        live_requests_per_s
+    );
+
     // Perf ledger artifact.
     let out = jobj! {
         "decisions_per_s" => decisions_per_s,
@@ -175,6 +233,8 @@ fn main() {
         "plans_emitted" => timeline.n_plans() as u64,
         "migrations" => timeline.n_migrations() as u64,
         "sla_attainment" => timeline.sla_attainment(),
+        "sim_events_per_s" => sim_events_per_s,
+        "live_requests_per_s" => live_requests_per_s,
     };
     let path = "BENCH_orchestrator.json";
     match std::fs::write(path, out.pretty()) {

@@ -48,6 +48,14 @@ pub struct Engine {
     decode: BTreeMap<usize, PjRtLoadedExecutable>,
 }
 
+// The serving pool shares each engine (`Arc<Engine>`) with its worker
+// thread; a PJRT client/executable that stops being thread-shareable
+// must fail the build here, not deadlock in production.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
+
 impl Engine {
     /// Load every bucket's executables from an artifact directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {

@@ -69,6 +69,14 @@ pub struct Engine {
     synthetic: bool,
 }
 
+// The serving pool shares each engine (`Arc<Engine>`) with its worker
+// thread; keep the stub honest about the same bound the PJRT engine
+// must satisfy.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
+
 impl Engine {
     /// Always fails: the stub cannot execute artifacts.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {

@@ -17,7 +17,10 @@
 //!   drives: dependency counts, ready-unit extraction, **contended**
 //!   cross-chassis transfer timers (the same
 //!   [`TransferClock`](crate::transport::fabric::TransferClock) FIFO
-//!   reservation model the simulator prices), per-stage spans, payload
+//!   reservation model the simulator prices, behind the thread-safe
+//!   [`SharedTransferClock`] handle so KV handoffs charge one shared
+//!   reservation state no matter which engine thread ran the prefill),
+//!   per-stage spans, payload
 //!   propagation along DAG edges, and failure isolation (a failing tool
 //!   node terminates *its* request; every other request and the
 //!   dispatcher keep running).
@@ -47,7 +50,7 @@ use crate::plan::instance::{edge_payload_bytes, llm_units, DagTopology, LlmUnit}
 use crate::plan::{ExecutionPlan, Role, Stage};
 use crate::server::hostpool::{HostDone, HostPool, HostTask};
 use crate::server::request::{ChatRequest, ChatResponse, StageSpan};
-use crate::transport::fabric::{Fabric, TransferClock};
+use crate::transport::fabric::{Fabric, SharedTransferClock};
 use crate::{Error, Result};
 
 /// Globally-unique admission epochs: the host pool and the server's
@@ -333,8 +336,11 @@ pub struct DagDispatch {
     timers: BinaryHeap<Reverse<Timer>>,
     timer_seq: u64,
     /// Contended edge-transfer clock (modeled seconds; `origin` is the
-    /// wall instant that maps to modeled t = 0).
-    clock: TransferClock,
+    /// wall instant that maps to modeled t = 0). Thread-safe so the
+    /// reservation state could be shared beyond the dispatcher; today
+    /// only the dispatcher charges hops, which keeps the chassis-
+    /// granular FIFO order deterministic per completion-event order.
+    clock: SharedTransferClock,
     origin: Instant,
     /// Outstanding LLM nodes routed to each virtual pipe, per role.
     prefill_load: Vec<usize>,
@@ -362,7 +368,7 @@ impl DagDispatch {
             runs: BTreeMap::new(),
             timers: BinaryHeap::new(),
             timer_seq: 0,
-            clock: TransferClock::new(rt.fabric.clone()),
+            clock: SharedTransferClock::new(rt.fabric.clone()),
             origin: Instant::now(),
             prefill_load: vec![0; rt.prefill_pipes.len()],
             decode_load: vec![0; rt.decode_pipes.len()],
@@ -625,6 +631,30 @@ impl DagDispatch {
                         );
                     }
                 }
+            }
+            self.settle(run, &mut step);
+        }
+        step
+    }
+
+    /// An engine batch died wholesale (engine error or worker panic):
+    /// fail one outstanding engine job per entry in `reqs`. Each job's
+    /// outstanding slot is returned and its request terminates once the
+    /// rest of its in-flight work drains — the same isolation rule as a
+    /// failing host stage: only the affected requests die.
+    pub fn fail_engine_jobs(&mut self, reqs: &[u64], err: &str, now: Instant) -> Step {
+        let mut step = Step::default();
+        for &id in reqs {
+            let Some(mut run) = self.runs.remove(&id) else {
+                continue;
+            };
+            run.outstanding = run.outstanding.saturating_sub(1);
+            if run.failed.is_none() {
+                self.metrics.counter("server_stage_failures").inc();
+                run.failed = Some(format!("engine phase failed: {err}"));
+            }
+            if now > run.last_done {
+                run.last_done = now;
             }
             self.settle(run, &mut step);
         }

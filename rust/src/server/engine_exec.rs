@@ -1,0 +1,579 @@
+//! Engine-side batch execution: the prefill/decode phase runners shared
+//! by the worker-thread engine pool and the serialized fallback path,
+//! plus the worker threads themselves.
+//!
+//! Each engine of the server's pool is owned by **one** worker thread
+//! ([`spawn_engine_worker`]) with its own `mpsc::Receiver<EngineWork>`
+//! queue — no shared work queue, no locking on the hot path. The
+//! dispatcher sends batches in; the worker executes them against its
+//! engine (engines take `&self` for inference, so the `Arc` is shared,
+//! not moved) and reports an [`EngineDone`] through the server's
+//! unified event channel. Busy time is accumulated into per-engine
+//! atomic counters ([`EngineStats`]) as phases execute, so the
+//! dispatcher reports *measured per-thread* utilization without any
+//! cross-thread bookkeeping or locks.
+//!
+//! Failure isolation mirrors the host pool: an engine error or a panic
+//! inside a batch fails exactly the requests of that batch (their ids
+//! come back in `EngineDone::*::failed`) — the worker, the engine, and
+//! every other request keep running.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{Engine, Sampler};
+use crate::server::dag_exec::{LlmJob, LlmPhase, UnitOutcome};
+use crate::server::request::ChatRequest;
+use crate::Error;
+
+/// Per-engine cumulative busy time, split by role half. Shared between
+/// the worker thread (writer) and the dispatcher (reader) — the same
+/// atomics shape as the host pool's `PoolStats`.
+#[derive(Debug, Default)]
+pub(crate) struct EngineStats {
+    prefill_busy_ns: AtomicU64,
+    decode_busy_ns: AtomicU64,
+}
+
+impl EngineStats {
+    fn add_prefill(&self, d: Duration) {
+        self.prefill_busy_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn add_decode(&self, d: Duration) {
+        self.decode_busy_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Cumulative (prefill, decode) busy nanoseconds since construction.
+    pub(crate) fn busy_ns(&self) -> (u64, u64) {
+        (
+            self.prefill_busy_ns.load(Ordering::Relaxed),
+            self.decode_busy_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One admitted flat (non-agent) request, session prompt already
+/// assembled by the dispatcher (the `SessionStore` stays dispatcher-
+/// owned; workers never touch it).
+pub(crate) struct FlatSlot {
+    pub req: ChatRequest,
+    pub submitted: Instant,
+    pub prompt: Vec<u8>,
+}
+
+/// A completed flat request, latencies measured against submission.
+pub(crate) struct FlatOutcome {
+    pub req: ChatRequest,
+    pub output: Vec<u8>,
+    pub ttft_s: f64,
+    pub tbt_mean_s: f64,
+    pub e2e_s: f64,
+}
+
+/// One batch handed to an engine worker.
+pub(crate) enum EngineWork {
+    /// Agent-DAG LLM phases (already partitioned onto this engine).
+    Dag(Vec<LlmJob>),
+    /// Flat prefill+decode requests (always engine 0).
+    Flat(Vec<FlatSlot>),
+}
+
+/// What a worker did with one [`EngineWork`]. `failed` carries the
+/// request id of every job/slot whose batch died (engine error or
+/// panic) — one entry per job, so the dispatcher can return each one's
+/// outstanding slot.
+pub(crate) enum EngineDone {
+    Dag {
+        outcomes: Vec<UnitOutcome>,
+        failed: Vec<u64>,
+        error: Option<String>,
+    },
+    Flat {
+        outcomes: Vec<FlatOutcome>,
+        failed: Vec<u64>,
+        error: Option<String>,
+    },
+}
+
+/// Execute one work item against `engine`, panic-isolated. Runs on the
+/// engine's worker thread (threaded mode) or inline on the dispatcher
+/// (`serialize_engines` — the measured baseline the perf gate compares
+/// against).
+pub(crate) fn execute_work(engine: &Engine, stats: &EngineStats, work: EngineWork) -> EngineDone {
+    match work {
+        EngineWork::Dag(jobs) => {
+            let ids: Vec<u64> = jobs.iter().map(|j| j.req).collect();
+            match catch_unwind(AssertUnwindSafe(|| run_dag_batch(engine, stats, jobs))) {
+                Ok((outcomes, failed, error)) => EngineDone::Dag {
+                    outcomes,
+                    failed,
+                    error,
+                },
+                Err(_) => EngineDone::Dag {
+                    outcomes: Vec::new(),
+                    failed: ids,
+                    error: Some("engine batch panicked".into()),
+                },
+            }
+        }
+        EngineWork::Flat(slots) => {
+            let ids: Vec<u64> = slots.iter().map(|s| s.req.id).collect();
+            match catch_unwind(AssertUnwindSafe(|| run_flat_batch(engine, stats, slots))) {
+                Ok(Ok(outcomes)) => EngineDone::Flat {
+                    outcomes,
+                    failed: Vec::new(),
+                    error: None,
+                },
+                Ok(Err((e, slots))) => EngineDone::Flat {
+                    outcomes: Vec::new(),
+                    failed: slots.iter().map(|s| s.req.id).collect(),
+                    error: Some(e.to_string()),
+                },
+                Err(_) => EngineDone::Flat {
+                    outcomes: Vec::new(),
+                    failed: ids,
+                    error: Some("engine batch panicked".into()),
+                },
+            }
+        }
+    }
+}
+
+/// Spawn the worker thread owning engine `index` of the pool: block on
+/// the work queue, execute, report through `done` via `wrap` (the
+/// server wraps each [`EngineDone`] into its unified event type). The
+/// worker exits when every `EngineWork` sender is dropped (server
+/// teardown) or the event channel closes.
+pub(crate) fn spawn_engine_worker<E, F>(
+    index: usize,
+    engine: Arc<Engine>,
+    stats: Arc<EngineStats>,
+    rx: mpsc::Receiver<EngineWork>,
+    done: mpsc::Sender<E>,
+    wrap: F,
+) -> thread::JoinHandle<()>
+where
+    E: Send + 'static,
+    F: Fn(EngineDone) -> E + Send + 'static,
+{
+    thread::Builder::new()
+        .name(format!("engine-worker-{index}"))
+        .spawn(move || {
+            while let Ok(work) = rx.recv() {
+                let d = execute_work(&engine, &stats, work);
+                if done.send(wrap(d)).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn engine worker")
+}
+
+/// Run one mixed batch of DAG phases: the engine's prefill ingests and
+/// its decode rounds execute as separate batched passes (each pipeline
+/// group is its own serialized resource). Returns (outcomes, failed
+/// request ids, first error).
+fn run_dag_batch(
+    engine: &Engine,
+    stats: &EngineStats,
+    jobs: Vec<LlmJob>,
+) -> (Vec<UnitOutcome>, Vec<u64>, Option<String>) {
+    let mut pre = Vec::new();
+    let mut dec = Vec::new();
+    for j in jobs {
+        match j.phase {
+            LlmPhase::Prefill { .. } => pre.push(j),
+            LlmPhase::Decode { .. } => dec.push(j),
+        }
+    }
+    let mut outcomes = Vec::new();
+    let mut failed = Vec::new();
+    let mut error = None;
+    if !pre.is_empty() {
+        match run_prefill_phase(engine, stats, pre) {
+            Ok(o) => outcomes.extend(o),
+            Err((e, js)) => {
+                failed.extend(js.iter().map(|j| j.req));
+                error.get_or_insert(e.to_string());
+            }
+        }
+    }
+    if !dec.is_empty() {
+        match run_decode_phase(engine, stats, dec) {
+            Ok(o) => outcomes.extend(o),
+            Err((e, js)) => {
+                failed.extend(js.iter().map(|j| j.req));
+                error.get_or_insert(e.to_string());
+            }
+        }
+    }
+    (outcomes, failed, error)
+}
+
+/// Context ingestion for a batch of prefill phases.
+fn run_prefill_phase(
+    engine: &Engine,
+    stats: &EngineStats,
+    jobs: Vec<LlmJob>,
+) -> Result<Vec<UnitOutcome>, (Error, Vec<LlmJob>)> {
+    let seq_budget = engine.manifest.prefill_seq;
+    let prompts: Vec<Vec<u8>> = jobs
+        .iter()
+        .map(|j| match &j.phase {
+            LlmPhase::Prefill { prompt } => clip_tail(prompt, seq_budget),
+            LlmPhase::Decode { .. } => unreachable!("partitioned by phase"),
+        })
+        .collect();
+    let t0 = Instant::now();
+    if let Err(e) = engine.prefill(&prompts) {
+        return Err((e, jobs));
+    }
+    let finished = Instant::now();
+    stats.add_prefill(finished.duration_since(t0));
+    Ok(jobs
+        .into_iter()
+        .map(|job| UnitOutcome {
+            job,
+            started: t0,
+            finished,
+            first_token: None,
+            output: Vec::new(),
+            tbt_sum_s: 0.0,
+            tbt_n: 0,
+        })
+        .collect())
+}
+
+/// Decode rounds for a batch of decode phases: rebuild each lane's
+/// context (the stand-in for adopting the transferred KV cache — the
+/// synthetic state is a pure function of the context, so this
+/// reconstructs exactly what the prefill engine held), sample the first
+/// token, then continuous decode rounds until every lane hits its
+/// budget.
+fn run_decode_phase(
+    engine: &Engine,
+    stats: &EngineStats,
+    jobs: Vec<LlmJob>,
+) -> Result<Vec<UnitOutcome>, (Error, Vec<LlmJob>)> {
+    let seq_budget = engine.manifest.prefill_seq;
+    let mut prompts = Vec::with_capacity(jobs.len());
+    let mut osls = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        match &j.phase {
+            LlmPhase::Decode { prompt, osl } => {
+                prompts.push(clip_tail(prompt, seq_budget));
+                osls.push(*osl);
+            }
+            LlmPhase::Prefill { .. } => unreachable!("partitioned by phase"),
+        }
+    }
+    let t0 = Instant::now();
+    let pre = match engine.prefill(&prompts) {
+        Ok(p) => p,
+        Err(e) => return Err((e, jobs)),
+    };
+    let ctx_end = Instant::now();
+    // KV adoption is decode-side work: charge it to the decode engine's
+    // decode budget, not prefill.
+    stats.add_decode(ctx_end.duration_since(t0));
+    let mut kv = pre.kv;
+    let n = jobs.len();
+
+    let mut samplers: Vec<Sampler> = jobs
+        .iter()
+        .map(|j| {
+            if j.temperature > 0.0 {
+                Sampler::new(j.temperature, 0, j.req)
+            } else {
+                Sampler::greedy()
+            }
+        })
+        .collect();
+    let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
+    let mut next: Vec<u8> = vec![0; kv.bucket.max(n)];
+    let mut first_token: Vec<Option<Instant>> = vec![None; n];
+    let mut last_token: Vec<Instant> = vec![ctx_end; n];
+    let mut tbt_sum = vec![0.0f64; n];
+    let mut tbt_n = vec![0u64; n];
+    for i in 0..n {
+        if osls[i] > 0 {
+            let tok = samplers[i].sample(&pre.logits[i]) as u8;
+            next[i] = tok;
+            outputs[i].push(tok);
+            first_token[i] = Some(ctx_end);
+        }
+    }
+    let budget_cap = engine
+        .manifest
+        .max_seq
+        .saturating_sub(seq_budget)
+        .saturating_sub(1);
+    let max_rounds = osls
+        .iter()
+        .map(|o| o.saturating_sub(1))
+        .max()
+        .unwrap_or(0)
+        .min(budget_cap);
+    for _round in 0..max_rounds {
+        let t_r0 = Instant::now();
+        let logits = match engine.decode_step(&mut kv, &next) {
+            Ok(l) => l,
+            Err(e) => return Err((e, jobs)),
+        };
+        let now = Instant::now();
+        stats.add_decode(now.duration_since(t_r0));
+        for i in 0..n {
+            if outputs[i].len() >= osls[i] {
+                continue;
+            }
+            let tok = samplers[i].sample(&logits[i]) as u8;
+            next[i] = tok;
+            outputs[i].push(tok);
+            tbt_sum[i] += now.duration_since(last_token[i]).as_secs_f64();
+            tbt_n[i] += 1;
+            last_token[i] = now;
+        }
+    }
+
+    let mut outcomes = Vec::with_capacity(n);
+    for (i, job) in jobs.into_iter().enumerate() {
+        outcomes.push(UnitOutcome {
+            job,
+            started: t0,
+            finished: last_token[i],
+            first_token: first_token[i],
+            output: std::mem::take(&mut outputs[i]),
+            tbt_sum_s: tbt_sum[i],
+            tbt_n: tbt_n[i],
+        });
+    }
+    Ok(outcomes)
+}
+
+/// Execute one flat prefill+decode batch to completion.
+fn run_flat_batch(
+    engine: &Engine,
+    stats: &EngineStats,
+    members: Vec<FlatSlot>,
+) -> Result<Vec<FlatOutcome>, (Error, Vec<FlatSlot>)> {
+    let prompts: Vec<Vec<u8>> = members.iter().map(|f| f.prompt.clone()).collect();
+    let t_batch0 = Instant::now();
+    let pre = match engine.prefill(&prompts) {
+        Ok(p) => p,
+        Err(e) => return Err((e, members)),
+    };
+    let t_prefill_end = Instant::now();
+    stats.add_prefill(t_prefill_end.duration_since(t_batch0));
+    let mut kv = pre.kv;
+    let n = members.len();
+    let bucket = kv.bucket;
+
+    let mut samplers: Vec<Sampler> = members
+        .iter()
+        .map(|f| {
+            if f.req.temperature > 0.0 {
+                Sampler::new(f.req.temperature, 0, f.req.id)
+            } else {
+                Sampler::greedy()
+            }
+        })
+        .collect();
+
+    let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
+    let mut first_token_at: Vec<Instant> = vec![t_batch0; n];
+    let mut last_token_at: Vec<Instant> = vec![t_batch0; n];
+    let mut gaps: Vec<Vec<f64>> = vec![Vec::new(); n];
+
+    // First token from prefill logits (zero-budget requests emit
+    // nothing, matching the DAG path's `osl > 0` guard).
+    let now = Instant::now();
+    let mut next: Vec<u8> = vec![0; bucket.max(n)];
+    for i in 0..n {
+        if members[i].req.max_new_tokens == 0 {
+            continue;
+        }
+        let tok = samplers[i].sample(&pre.logits[i]) as u8;
+        next[i] = tok;
+        outputs[i].push(tok);
+        first_token_at[i] = now;
+        last_token_at[i] = now;
+    }
+
+    // Decode rounds until every member hit its budget (lanes that
+    // finish keep feeding their last token; outputs stop growing).
+    let seq_budget = engine.manifest.prefill_seq;
+    let max_rounds = members
+        .iter()
+        .map(|f| f.req.max_new_tokens.saturating_sub(1))
+        .max()
+        .unwrap_or(0)
+        .min(engine.manifest.max_seq - seq_budget - 1);
+    for _round in 0..max_rounds {
+        let t_r0 = Instant::now();
+        let logits = match engine.decode_step(&mut kv, &next) {
+            Ok(l) => l,
+            Err(e) => return Err((e, members)),
+        };
+        let now = Instant::now();
+        stats.add_decode(now.duration_since(t_r0));
+        for i in 0..n {
+            if outputs[i].len() >= members[i].req.max_new_tokens {
+                continue;
+            }
+            let tok = samplers[i].sample(&logits[i]) as u8;
+            next[i] = tok;
+            outputs[i].push(tok);
+            gaps[i].push(now.duration_since(last_token_at[i]).as_secs_f64());
+            last_token_at[i] = now;
+        }
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for (i, f) in members.into_iter().enumerate() {
+        let ttft = first_token_at[i].duration_since(f.submitted).as_secs_f64();
+        let e2e = last_token_at[i].duration_since(f.submitted).as_secs_f64();
+        let tbt = if gaps[i].is_empty() {
+            0.0
+        } else {
+            gaps[i].iter().sum::<f64>() / gaps[i].len() as f64
+        };
+        out.push(FlatOutcome {
+            req: f.req,
+            output: std::mem::take(&mut outputs[i]),
+            ttft_s: ttft,
+            tbt_mean_s: tbt,
+            e2e_s: e2e,
+        });
+    }
+    Ok(out)
+}
+
+/// Keep the most recent `budget` bytes of a prompt (the compiled prompt
+/// bucket ingests the tail — most recent context wins).
+pub(crate) fn clip_tail(prompt: &[u8], budget: usize) -> Vec<u8> {
+    if prompt.len() > budget {
+        prompt[prompt.len() - budget..].to_vec()
+    } else {
+        prompt.to_vec()
+    }
+}
+
+#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_executes_and_reports_through_wrap() {
+        let engine = Arc::new(Engine::synthetic_default());
+        let stats = Arc::new(EngineStats::default());
+        let (work_tx, work_rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel();
+        let h = spawn_engine_worker(0, Arc::clone(&engine), Arc::clone(&stats), work_rx, done_tx, |d| d);
+        work_tx
+            .send(EngineWork::Flat(vec![FlatSlot {
+                req: ChatRequest::new(7, "hello worker", 4),
+                submitted: Instant::now(),
+                prompt: b"hello worker".to_vec(),
+            }]))
+            .unwrap();
+        let done = done_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        match done {
+            EngineDone::Flat { outcomes, failed, error } => {
+                assert!(failed.is_empty());
+                assert!(error.is_none());
+                assert_eq!(outcomes.len(), 1);
+                assert_eq!(outcomes[0].req.id, 7);
+                assert_eq!(outcomes[0].output.len(), 4);
+                assert!(outcomes[0].e2e_s >= outcomes[0].ttft_s);
+            }
+            EngineDone::Dag { .. } => panic!("flat work must yield a flat outcome"),
+        }
+        let (p, d) = stats.busy_ns();
+        assert!(p > 0, "prefill busy time must be measured");
+        assert!(d > 0, "decode busy time must be measured");
+        drop(work_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flat_outputs_match_generate_semantics_across_batch_shapes() {
+        // Lanes are independent in the synthetic engine: batch
+        // composition must not change any request's tokens. This is the
+        // invariant that makes threaded serving deterministic.
+        let engine = Engine::synthetic_default();
+        let stats = EngineStats::default();
+        let solo = |id: u64, prompt: &str| {
+            let r = run_flat_batch(
+                &engine,
+                &stats,
+                vec![FlatSlot {
+                    req: ChatRequest::new(id, prompt, 6),
+                    submitted: Instant::now(),
+                    prompt: prompt.as_bytes().to_vec(),
+                }],
+            )
+            .unwrap();
+            r.into_iter().next().unwrap().output
+        };
+        let a = solo(1, "first prompt");
+        let b = solo(2, "second prompt longer");
+        let batched = run_flat_batch(
+            &engine,
+            &stats,
+            vec![
+                FlatSlot {
+                    req: ChatRequest::new(1, "first prompt", 6),
+                    submitted: Instant::now(),
+                    prompt: b"first prompt".to_vec(),
+                },
+                FlatSlot {
+                    req: ChatRequest::new(2, "second prompt longer", 6),
+                    submitted: Instant::now(),
+                    prompt: b"second prompt longer".to_vec(),
+                },
+            ],
+        )
+        .unwrap();
+        assert_eq!(batched[0].output, a);
+        assert_eq!(batched[1].output, b);
+    }
+
+    #[test]
+    fn empty_batch_fails_closed_with_ids() {
+        // The synthetic engine rejects empty prefill batches; the ids
+        // must come back so the dispatcher can fail those requests.
+        let engine = Engine::synthetic_default();
+        let stats = EngineStats::default();
+        let done = execute_work(
+            &engine,
+            &stats,
+            EngineWork::Flat(vec![FlatSlot {
+                req: ChatRequest::new(3, "", 0),
+                submitted: Instant::now(),
+                prompt: Vec::new(),
+            }]),
+        );
+        // A 1-slot batch with an empty prompt still prefills (prompt
+        // bytes are hashed, len 0 is fine) — build a genuinely failing
+        // case via a zero-length batch instead.
+        match done {
+            EngineDone::Flat { outcomes, .. } => assert_eq!(outcomes.len(), 1),
+            EngineDone::Dag { .. } => panic!("wrong arm"),
+        }
+        match execute_work(&engine, &stats, EngineWork::Flat(Vec::new())) {
+            EngineDone::Flat { outcomes, failed, error } => {
+                assert!(outcomes.is_empty());
+                assert!(failed.is_empty());
+                assert!(error.is_some(), "empty batch is an engine error");
+            }
+            EngineDone::Dag { .. } => panic!("wrong arm"),
+        }
+    }
+}

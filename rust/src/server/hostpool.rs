@@ -5,8 +5,11 @@
 //! Design: `capacity` OS threads pull [`HostTask`]s from one shared
 //! queue (`Mutex<Receiver>` — the lock is held only across the blocking
 //! `recv`, so exactly one idle worker waits at a time and hand-off is
-//! FIFO). Completions flow back to the dispatcher thread over an mpsc
-//! channel; the pool never blocks the serving loop. Task closures that
+//! FIFO). Completions flow back to the dispatcher through a pluggable
+//! sink — an mpsc sender by default ([`HostPool::new`]), or any closure
+//! ([`HostPool::with_sink`]) so the threaded server can merge host
+//! completions into its unified event channel; the pool never blocks
+//! the serving loop. Task closures that
 //! panic are caught and surfaced as `Err`, so a hostile tool stage can
 //! fail its request but never leak a worker or wedge the dispatcher.
 //!
@@ -54,6 +57,11 @@ enum Msg {
     Stop,
 }
 
+/// Where completions go. The threaded server injects a closure that
+/// wraps each [`HostDone`] into its unified dispatcher event; plain
+/// channel consumers get the [`HostPool::new`] adapter.
+type DoneSink = Arc<dyn Fn(HostDone) + Send + Sync>;
+
 /// Shared pool counters (atomics — read from the dispatcher thread).
 #[derive(Debug, Default)]
 struct PoolStats {
@@ -97,7 +105,7 @@ fn try_retire(stats: &PoolStats) -> bool {
 pub struct HostPool {
     tx: mpsc::Sender<Msg>,
     rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
-    done_tx: mpsc::Sender<HostDone>,
+    done: DoneSink,
     handles: Vec<thread::JoinHandle<()>>,
     capacity: usize,
     stats: Arc<PoolStats>,
@@ -108,6 +116,19 @@ pub struct HostPool {
 impl HostPool {
     /// Spawn `capacity` workers (≥ 1). Completions go out on `done_tx`.
     pub fn new(capacity: usize, done_tx: mpsc::Sender<HostDone>) -> HostPool {
+        Self::with_sink(capacity, move |d| {
+            // Dispatcher gone ⇒ nothing left to notify.
+            let _ = done_tx.send(d);
+        })
+    }
+
+    /// Spawn `capacity` workers delivering completions to an arbitrary
+    /// sink. The sink runs on worker threads, so it must be cheap and
+    /// non-blocking (a channel send).
+    pub fn with_sink(
+        capacity: usize,
+        sink: impl Fn(HostDone) + Send + Sync + 'static,
+    ) -> HostPool {
         let capacity = capacity.max(1);
         let (tx, rx) = mpsc::channel();
         let rx = Arc::new(Mutex::new(rx));
@@ -116,7 +137,7 @@ impl HostPool {
         let mut pool = HostPool {
             tx,
             rx,
-            done_tx,
+            done: Arc::new(sink),
             handles: Vec::new(),
             capacity: 0,
             stats,
@@ -130,7 +151,7 @@ impl HostPool {
     fn spawn_workers(&mut self, n: usize) {
         for _ in 0..n {
             let rx = Arc::clone(&self.rx);
-            let done = self.done_tx.clone();
+            let done = Arc::clone(&self.done);
             let stats = Arc::clone(&self.stats);
             stats.alive.fetch_add(1, Ordering::SeqCst);
             self.handles.push(thread::spawn(move || loop {
@@ -163,8 +184,7 @@ impl HostPool {
                         );
                         stats.running.fetch_sub(1, Ordering::SeqCst);
                         stats.completed.fetch_add(1, Ordering::SeqCst);
-                        // Dispatcher gone ⇒ nothing left to notify.
-                        let _ = done.send(HostDone {
+                        done(HostDone {
                             req: t.req,
                             node: t.node,
                             epoch: t.epoch,
@@ -370,6 +390,31 @@ mod tests {
         });
         let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(d.req, 9);
+    }
+
+    #[test]
+    fn sink_constructor_delivers_completions() {
+        use std::sync::atomic::AtomicU64;
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = Arc::clone(&seen);
+        let pool = HostPool::with_sink(2, move |d: HostDone| {
+            assert!(d.result.is_ok());
+            seen2.fetch_add(1, Ordering::SeqCst);
+        });
+        for i in 0..4u64 {
+            pool.submit(HostTask {
+                req: i,
+                node: 0,
+                epoch: 0,
+                work: Box::new(|| Ok(Vec::new())),
+            });
+        }
+        let t0 = Instant::now();
+        while seen.load(Ordering::SeqCst) < 4 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "sink never saw 4 completions");
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.completed(), 4);
     }
 
     #[test]

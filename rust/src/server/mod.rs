@@ -16,13 +16,19 @@
 //!   their pipeline group's engine, contended cross-chassis transfers
 //!   (the fused prefill→decode KV hop included), payload propagation,
 //!   failure isolation;
-//! * [`serve`] — the serving loop: admission → continuous batcher →
-//!   prefill/decode on the engine pool (+ host-pool completions and
-//!   transfer timers in DAG mode) → streamed responses, on std threads
-//!   + mpsc (tokio is not in the offline registry; the event loop is a
-//!   single dispatcher thread with worker-side host stages).
+//! * [`engine_exec`] — the per-engine worker threads: batch execution
+//!   (prefill/decode phases, flat generate) with measured busy-time
+//!   accounting and panic isolation, reporting completions onto the
+//!   dispatcher's unified event channel;
+//! * [`serve`] — the dispatcher: admission → continuous batchers →
+//!   per-engine worker threads (+ host-pool completions and transfer
+//!   timers in DAG mode) → streamed responses, on std threads + mpsc
+//!   (tokio is not in the offline registry). The dispatcher blocks on
+//!   one merged event channel; engines on different threads execute
+//!   truly concurrently (see ARCHITECTURE.md "Threading model").
 
 pub mod dag_exec;
+pub(crate) mod engine_exec;
 pub mod hostpool;
 pub mod request;
 pub mod serve;

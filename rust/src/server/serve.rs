@@ -3,31 +3,43 @@
 //! when an [`ExecutionPlan`] is installed, **full agent-DAG execution**:
 //! a [`ChatRequest`] carrying an agent class traverses every plan
 //! binding, with CPU/tool/IO stages on the bounded [`HostPool`] and LLM
-//! stages batched onto the engine, mirroring the DAG simulator
+//! stages batched onto the engine pool, mirroring the DAG simulator
 //! (`cluster/dag.rs`) in wall-clock time.
 //!
-//! Threading model (tokio is unavailable offline): callers submit
-//! [`ChatRequest`]s on an `mpsc::Sender` from any number of threads;
-//! one dispatcher thread owns the **engine pool** (one engine per plan
-//! pipeline group — the "one compiled executable per model variant"
-//! runtime of the paper's design, replicated per group) and runs the
-//! event loop (intake → host completions → contended transfer timers →
-//! per-engine batch execution); host stages run on the pool's worker
-//! threads and report back over a completion channel.
+//! Threading model (tokio is unavailable offline; see also
+//! ARCHITECTURE.md "Threading model"):
+//!
+//! * **Engine workers** — one thread per pool engine
+//!   ([`crate::server::engine_exec`]), each owning its own work queue.
+//!   Engines on different threads execute truly concurrently, so the
+//!   pipeline groups of a plan overlap in wall-clock — the property the
+//!   paper's heterogeneous fleets need to realize their planned
+//!   throughput. `ServerConfig::serialize_engines` forces the old
+//!   inline execution (the measured baseline the perf gate compares
+//!   against).
+//! * **Host workers** — the bounded [`HostPool`] for CPU/tool/IO
+//!   stages, unchanged.
+//! * **The dispatcher** — the thread calling [`Server::serve`]: pure
+//!   admission + batching + completion routing. It blocks on ONE
+//!   unified event channel (intake, host completions, engine
+//!   completions) with `recv`/`recv_timeout` deadlines from batcher
+//!   waits and modeled-transfer timers — an idle server burns ~0 CPU.
+//! * **An intake forwarder** — a short-lived thread per `serve` call
+//!   that moves the caller's request receiver into the unified event
+//!   stream, so the dispatcher has a single blocking point.
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::plan::{ExecutionPlan, Role};
 use crate::router::admission::{Admission, AdmissionConfig, AdmissionController};
 use crate::router::batcher::{Batcher, BatcherConfig};
-use crate::runtime::{Engine, Sampler};
-use crate::server::dag_exec::{
-    DagDispatch, DagRuntime, HostFault, LlmJob, LlmPhase, Step, UnitOutcome,
-};
-use crate::server::hostpool::HostPool;
+use crate::runtime::Engine;
+use crate::server::dag_exec::{DagDispatch, DagRuntime, HostFault, Step};
+use crate::server::engine_exec::{self, EngineDone, EngineStats, EngineWork, FlatSlot};
+use crate::server::hostpool::{HostDone, HostPool};
 use crate::server::request::{ChatRequest, ChatResponse};
 use crate::server::session::SessionStore;
 use crate::{Error, Result};
@@ -47,6 +59,11 @@ pub struct ServerConfig {
     /// Wall-clock seconds per modeled second for host-stage latencies
     /// and cross-chassis edge transfers (tests shrink it to run fast).
     pub time_scale: f64,
+    /// Execute engine batches inline on the dispatcher thread instead
+    /// of on the per-engine workers. This is the pre-threading behavior
+    /// kept as a measured A/B baseline: the live-throughput gate proves
+    /// the worker pool beats it on multi-group plans.
+    pub serialize_engines: bool,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +75,7 @@ impl Default for ServerConfig {
             max_history: 256,
             host_workers: 4,
             time_scale: 1.0,
+            serialize_engines: false,
         }
     }
 }
@@ -80,16 +98,24 @@ impl ServerConfig {
     }
 }
 
-struct InFlight {
-    req: ChatRequest,
-    submitted: Instant,
+/// Batcher payload: classic flat requests and agent-DAG LLM units share
+/// the same continuous batchers (and therefore the same engine batches).
+enum Work {
+    Flat(FlatSlot),
+    Dag(crate::server::dag_exec::LlmJob),
 }
 
-/// Batcher payload: classic flat requests and agent-DAG LLM units share
-/// the same continuous batcher (and therefore the same engine batches).
-enum Work {
-    Flat(InFlight),
-    Dag(LlmJob),
+/// Everything the dispatcher can be woken by, merged onto one channel
+/// so it can block instead of spinning.
+enum Event {
+    /// A request arrived (relayed by the intake forwarder).
+    Intake(ChatRequest),
+    /// The caller's request channel disconnected.
+    IntakeClosed,
+    /// A host-pool stage finished.
+    Host(HostDone),
+    /// An engine worker finished a batch.
+    Engine(EngineDone),
 }
 
 /// Response-side plumbing shared by every dispatch site in the loop.
@@ -101,16 +127,17 @@ struct Sinks<'a> {
 }
 
 impl Sinks<'_> {
-    /// Route a dispatcher step: jobs to the batcher, responses out.
-    fn drain(&self, step: Step, batcher: &mut Batcher<Work>) -> bool {
-        let progressed = !step.jobs.is_empty() || !step.responses.is_empty();
+    /// Route a dispatcher step: jobs to their engine's batcher,
+    /// responses out.
+    fn drain(&self, step: Step, batchers: &mut [Batcher<Work>]) {
+        let n = batchers.len();
         for j in step.jobs {
-            batcher.push(Work::Dag(j));
+            let e = j.engine.min(n - 1);
+            batchers[e].push(Work::Dag(j));
         }
         for r in step.responses {
             self.send(r);
         }
-        progressed
     }
 
     fn send(&self, r: ChatResponse) {
@@ -131,6 +158,19 @@ pub struct Server {
     /// round-robin when the pool is smaller; a single-engine pool hosts
     /// every group). The flat request path always runs on `engines[0]`.
     engines: Vec<Arc<Engine>>,
+    /// Per-engine busy-time atomics, written by the worker threads.
+    engine_stats: Vec<Arc<EngineStats>>,
+    /// busy_ns already handed out by `take_utilization`, per engine
+    /// (the windowing cursor over the cumulative counters).
+    engine_taken_ns: Vec<(u64, u64)>,
+    /// Per-engine work queues into the worker threads.
+    engine_tx: Vec<mpsc::Sender<EngineWork>>,
+    engine_handles: Vec<std::thread::JoinHandle<()>>,
+    /// The unified dispatcher event channel. The sender half is cloned
+    /// into the host-pool sink, the engine workers, and each serve
+    /// call's intake forwarder.
+    event_tx: mpsc::Sender<Event>,
+    event_rx: mpsc::Receiver<Event>,
     cfg: ServerConfig,
     pub metrics: Arc<MetricsRegistry>,
     sessions: SessionStore,
@@ -139,11 +179,7 @@ pub struct Server {
     /// Host worker pool for CPU/tool/IO stages; persists across
     /// `serve` calls and resizes on reconfiguration.
     host: Option<HostPool>,
-    host_done: Option<mpsc::Receiver<crate::server::hostpool::HostDone>>,
     fault: Option<HostFault>,
-    /// Per-engine (prefill, decode) busy-second accumulators since the
-    /// last [`Server::take_utilization`] (measured, wall-clock).
-    engine_busy: Vec<(f64, f64)>,
 }
 
 impl Server {
@@ -155,23 +191,46 @@ impl Server {
     /// Bring up a server over an explicit engine pool — the live
     /// counterpart of the plan's pipeline fleet: LLM stages are
     /// scheduled onto the engine their role's pipeline group is bound
-    /// to (see [`DagRuntime::engine_of_group`]).
+    /// to (see [`DagRuntime::engine_of_group`]). One worker thread is
+    /// spawned per engine and lives until the server drops.
     pub fn with_engines(engines: Vec<Arc<Engine>>, cfg: ServerConfig) -> Result<Server> {
         if engines.is_empty() {
             return Err(Error::Config("server needs ≥ 1 engine".into()));
         }
         let max_history = cfg.max_history;
         let n = engines.len();
+        let (event_tx, event_rx) = mpsc::channel();
+        let mut engine_stats = Vec::with_capacity(n);
+        let mut engine_tx = Vec::with_capacity(n);
+        let mut engine_handles = Vec::with_capacity(n);
+        for (i, e) in engines.iter().enumerate() {
+            let stats = Arc::new(EngineStats::default());
+            let (wtx, wrx) = mpsc::channel();
+            engine_handles.push(engine_exec::spawn_engine_worker(
+                i,
+                Arc::clone(e),
+                Arc::clone(&stats),
+                wrx,
+                event_tx.clone(),
+                Event::Engine,
+            ));
+            engine_stats.push(stats);
+            engine_tx.push(wtx);
+        }
         Ok(Server {
             engines,
+            engine_stats,
+            engine_taken_ns: vec![(0, 0); n],
+            engine_tx,
+            engine_handles,
+            event_tx,
+            event_rx,
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
             sessions: SessionStore::new(max_history),
             dag: None,
             host: None,
-            host_done: None,
             fault: None,
-            engine_busy: vec![(0.0, 0.0); n],
         })
     }
 
@@ -209,12 +268,20 @@ impl Server {
         match self.host.as_mut() {
             Some(pool) => pool.resize(self.cfg.host_workers.max(1) as usize),
             None => {
-                let (done_tx, done_rx) = mpsc::channel();
-                self.host = Some(HostPool::new(
+                // Host completions feed the unified event channel
+                // directly — no side channel for the dispatcher to
+                // poll. The Mutex makes the sender shareable across the
+                // pool's workers (mpsc senders are not Sync on older
+                // toolchains); completions are low-rate, so the lock is
+                // uncontended.
+                let tx = std::sync::Mutex::new(self.event_tx.clone());
+                self.host = Some(HostPool::with_sink(
                     self.cfg.host_workers.max(1) as usize,
-                    done_tx,
+                    move |d| {
+                        let guard = tx.lock().unwrap_or_else(|e| e.into_inner());
+                        let _ = guard.send(Event::Host(d));
+                    },
                 ));
-                self.host_done = Some(done_rx);
             }
         }
         self.dag = Some(rt);
@@ -237,14 +304,16 @@ impl Server {
 
     /// Full live re-plan: serving policy *and* the DAG execution
     /// structure (topology, units, virtual fleet, host-pool sizing)
-    /// follow the new plan. Engine-bound limits and the time scale are
-    /// preserved from the current config. All-or-nothing: an
-    /// unexecutable plan fails before any policy or pool state changes.
+    /// follow the new plan. Engine-bound limits, the time scale, and
+    /// the dispatch mode are preserved from the current config.
+    /// All-or-nothing: an unexecutable plan fails before any policy or
+    /// pool state changes.
     pub fn reconfigure_plan(&mut self, plan: &ExecutionPlan) -> Result<()> {
         let mut cfg = ServerConfig::from_plan(plan);
         cfg.max_new_tokens = self.cfg.max_new_tokens;
         cfg.max_history = self.cfg.max_history;
         cfg.time_scale = self.cfg.time_scale;
+        cfg.serialize_engines = self.cfg.serialize_engines;
         let rt = DagRuntime::new(plan, cfg.time_scale, self.engines.len())?;
         self.reconfigure(cfg);
         self.install_runtime(rt);
@@ -311,12 +380,30 @@ impl Server {
         }
     }
 
+    /// Per-engine (prefill, decode) busy seconds accumulated since the
+    /// last [`Server::take_utilization`] — the delta between each
+    /// worker thread's cumulative atomics and the windowing cursor.
+    fn engine_busy_window(&self) -> Vec<(f64, f64)> {
+        self.engine_stats
+            .iter()
+            .zip(self.engine_taken_ns.iter())
+            .map(|(s, taken)| {
+                let (p, d) = s.busy_ns();
+                (
+                    p.saturating_sub(taken.0) as f64 / 1e9,
+                    d.saturating_sub(taken.1) as f64 / 1e9,
+                )
+            })
+            .collect()
+    }
+
     /// Measured per-**engine** busy fractions over the last `window_s`
-    /// seconds: (prefill, decode) per pool engine. Read-only — call
-    /// before [`Server::take_utilization`], which resets the window.
+    /// seconds: (prefill, decode) per pool engine, from each worker
+    /// thread's measured execution time. Read-only — call before
+    /// [`Server::take_utilization`], which resets the window.
     pub fn engine_utilization(&self, window_s: f64) -> Vec<(f64, f64)> {
         let w = window_s.max(1e-9);
-        self.engine_busy
+        self.engine_busy_window()
             .iter()
             .map(|b| ((b.0 / w).clamp(0.0, 1.0), (b.1 / w).clamp(0.0, 1.0)))
             .collect()
@@ -333,38 +420,41 @@ impl Server {
     pub fn group_utilization(&self, window_s: f64) -> Vec<f64> {
         let w = window_s.max(1e-9);
         match &self.dag {
-            Some(rt) => rt
-                .plan
-                .pipelines
-                .iter()
-                .enumerate()
-                .map(|(g, p)| {
-                    let e = rt.engine_of_group.get(g).copied().unwrap_or(0);
-                    let b = self.engine_busy.get(e).copied().unwrap_or((0.0, 0.0));
-                    let busy = match p.role {
-                        Role::Prefill => b.0,
-                        Role::Decode => b.1,
-                    };
-                    (busy / w).clamp(0.0, 1.0)
-                })
-                .collect(),
+            Some(rt) => {
+                let busy = self.engine_busy_window();
+                rt.plan
+                    .pipelines
+                    .iter()
+                    .enumerate()
+                    .map(|(g, p)| {
+                        let e = rt.engine_of_group.get(g).copied().unwrap_or(0);
+                        let b = busy.get(e).copied().unwrap_or((0.0, 0.0));
+                        let busy = match p.role {
+                            Role::Prefill => b.0,
+                            Role::Decode => b.1,
+                        };
+                        (busy / w).clamp(0.0, 1.0)
+                    })
+                    .collect()
+            }
             None => Vec::new(),
         }
     }
 
     /// Measured per-role utilization over the last `window_s` seconds:
-    /// (prefill, decode, host) busy fractions, from each engine's timed
-    /// stage execution (normalized by the engines actually serving that
-    /// role) and the host pool's worker busy-time. Resets the
-    /// accumulators — the orchestrator's live backend calls this once
-    /// per observation window.
+    /// (prefill, decode, host) busy fractions, from each engine worker
+    /// thread's timed stage execution (normalized by the engines
+    /// actually serving that role) and the host pool's worker
+    /// busy-time. Resets the accumulators — the orchestrator's live
+    /// backend calls this once per observation window.
     pub fn take_utilization(&mut self, window_s: f64) -> (f64, f64, f64) {
         let w = window_s.max(1e-9);
         let (pre_n, dec_n) = self.role_engine_counts();
-        let pre_busy: f64 = self.engine_busy.iter().map(|b| b.0).sum();
-        let dec_busy: f64 = self.engine_busy.iter().map(|b| b.1).sum();
-        for b in self.engine_busy.iter_mut() {
-            *b = (0.0, 0.0);
+        let busy = self.engine_busy_window();
+        let pre_busy: f64 = busy.iter().map(|b| b.0).sum();
+        let dec_busy: f64 = busy.iter().map(|b| b.1).sum();
+        for (s, taken) in self.engine_stats.iter().zip(self.engine_taken_ns.iter_mut()) {
+            *taken = s.busy_ns();
         }
         let pre = (pre_busy / (w * pre_n as f64)).clamp(0.0, 1.0);
         let dec = (dec_busy / (w * dec_n as f64)).clamp(0.0, 1.0);
@@ -378,14 +468,46 @@ impl Server {
         (pre, dec, host)
     }
 
+    /// Route one released batch to its engine: the worker's queue in
+    /// threaded mode, inline execution under `serialize_engines` (the
+    /// completion still round-trips through the event channel, so both
+    /// modes share one code path downstream).
+    fn dispatch_engine_work(&self, e: usize, work: EngineWork) {
+        if self.cfg.serialize_engines {
+            let done =
+                engine_exec::execute_work(&self.engines[e], &self.engine_stats[e], work);
+            let _ = self.event_tx.send(Event::Engine(done));
+            return;
+        }
+        if let Err(mpsc::SendError(work)) = self.engine_tx[e].send(work) {
+            // A dead worker is unreachable by construction (batch
+            // execution is panic-isolated); degrade to inline execution
+            // rather than dropping requests if it ever happens.
+            let done =
+                engine_exec::execute_work(&self.engines[e], &self.engine_stats[e], work);
+            let _ = self.event_tx.send(Event::Engine(done));
+        }
+    }
+
     /// Serve until `rx` disconnects and all queued work drains. Designed
     /// to run on a dedicated thread; responses go out through `tx`.
+    ///
+    /// Drain ordering at exit: the loop returns only once intake is
+    /// closed, every flat request has answered, every DAG request has
+    /// settled, and every engine batch in flight has been consumed off
+    /// the event channel — so no completion from this session can leak
+    /// into a later `serve` call (admission epochs additionally guard
+    /// host completions, which can outlive a session only on failure
+    /// teardown paths).
     pub fn serve(
         &mut self,
         rx: mpsc::Receiver<ChatRequest>,
         tx: mpsc::Sender<ChatResponse>,
     ) -> Result<()> {
-        let mut batcher: Batcher<Work> = Batcher::new(self.cfg.batch.clone());
+        let n_engines = self.engines.len();
+        let mut batchers: Vec<Batcher<Work>> = (0..n_engines)
+            .map(|_| Batcher::new(self.cfg.batch.clone()))
+            .collect();
         let mut admission = AdmissionController::new(self.cfg.admission.clone());
         let m_req = self.metrics.counter("server_requests");
         let m_rej = self.metrics.counter("server_rejected");
@@ -402,38 +524,65 @@ impl Server {
             .dag
             .as_ref()
             .map(|rt| DagDispatch::new(rt, self.metrics.clone(), self.fault.clone()));
+        let seq_budget = self.engines[0].manifest.prefill_seq;
+        let max_wait = self.cfg.batch.max_wait;
+
+        // Intake forwarder: merge the caller's request channel into the
+        // unified event stream so the dispatcher blocks on ONE receiver.
+        let intake_tx = self.event_tx.clone();
+        let forwarder = std::thread::spawn(move || {
+            for req in rx.iter() {
+                if intake_tx.send(Event::Intake(req)).is_err() {
+                    return;
+                }
+            }
+            let _ = intake_tx.send(Event::IntakeClosed);
+        });
 
         let mut open = true;
-        // Flat requests waiting in the batcher (DAG requests are
-        // admission-counted once via `dispatch.in_flight()`; counting
-        // their queued LLM units too would double-charge them).
-        let mut flat_queued = 0usize;
+        // Flat requests admitted but not yet answered (queued + on an
+        // engine). DAG requests are admission-counted once via
+        // `dispatch.in_flight()`; counting their queued LLM units too
+        // would double-charge them.
+        let mut flat_open = 0usize;
+        // Engine batches sent but not yet reported back.
+        let mut engine_inflight = 0usize;
+        let mut pending: Option<Event> = None;
         loop {
-            let mut progressed = false;
-            // ---- intake: pull everything currently available (bounded
-            // wait so batcher/transfer timeouts keep ticking) ---------
+            // ---- consume every available event ----------------------
             loop {
-                match rx.recv_timeout(Duration::from_millis(1)) {
-                    Ok(req) => {
-                        progressed = true;
+                let ev = match pending.take() {
+                    Some(ev) => ev,
+                    None => match self.event_rx.try_recv() {
+                        Ok(ev) => ev,
+                        Err(_) => break,
+                    },
+                };
+                match ev {
+                    Event::Intake(req) => {
                         m_req.inc();
-                        // Queue depth covers both execution paths:
-                        // flat requests queued for the engine plus
-                        // admitted-but-unfinished DAG requests (host-
-                        // heavy plans never touch the batcher, yet
-                        // must still shed load; each DAG request is
-                        // counted exactly once).
-                        let depth = flat_queued
-                            + dispatch.as_ref().map_or(0, |d| d.in_flight());
+                        // Queue depth covers both execution paths: open
+                        // flat requests plus admitted-but-unfinished
+                        // DAG requests (host-heavy plans never touch
+                        // the batcher, yet must still shed load; each
+                        // DAG request is counted exactly once).
+                        let depth =
+                            flat_open + dispatch.as_ref().map_or(0, |d| d.in_flight());
                         match admission.admit(Instant::now(), depth) {
                             Admission::Accept => {
                                 if req.agent.is_some() {
-                                    self.admit_dag(req, &mut dispatch, &sinks, &mut batcher);
+                                    self.admit_dag(req, &mut dispatch, &sinks, &mut batchers);
                                 } else {
-                                    flat_queued += 1;
-                                    batcher.push(Work::Flat(InFlight {
+                                    flat_open += 1;
+                                    let prompt = self.sessions.assemble(
+                                        req.session,
+                                        &req.prompt,
+                                        seq_budget,
+                                    );
+                                    batchers[0].push(Work::Flat(FlatSlot {
                                         req,
                                         submitted: Instant::now(),
+                                        prompt,
                                     }));
                                 }
                             }
@@ -443,72 +592,166 @@ impl Server {
                             }
                         }
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        open = false;
-                        break;
+                    Event::IntakeClosed => open = false,
+                    Event::Host(hd) => {
+                        if let (Some(rt), Some(d), Some(pool)) =
+                            (self.dag.as_ref(), dispatch.as_mut(), self.host.as_ref())
+                        {
+                            let step = d.on_host_done(rt, hd, pool);
+                            sinks.drain(step, &mut batchers);
+                        }
+                    }
+                    Event::Engine(done) => {
+                        engine_inflight = engine_inflight.saturating_sub(1);
+                        match done {
+                            EngineDone::Dag { outcomes, failed, error } => {
+                                if let (Some(rt), Some(d), Some(pool)) = (
+                                    self.dag.as_ref(),
+                                    dispatch.as_mut(),
+                                    self.host.as_ref(),
+                                ) {
+                                    if !outcomes.is_empty() {
+                                        let step = d.finish_units(rt, outcomes, pool);
+                                        sinks.drain(step, &mut batchers);
+                                    }
+                                    if !failed.is_empty() {
+                                        let msg = error
+                                            .unwrap_or_else(|| "engine failure".into());
+                                        let step = d.fail_engine_jobs(
+                                            &failed,
+                                            &msg,
+                                            Instant::now(),
+                                        );
+                                        sinks.drain(step, &mut batchers);
+                                    }
+                                }
+                            }
+                            EngineDone::Flat { outcomes, failed, error } => {
+                                for o in outcomes {
+                                    flat_open = flat_open.saturating_sub(1);
+                                    if let Some(sid) = o.req.session {
+                                        self.sessions.record_turn(
+                                            sid,
+                                            &o.req.prompt,
+                                            &o.output,
+                                        );
+                                    }
+                                    let tokens = o.output.len();
+                                    sinks.send(ChatResponse {
+                                        id: o.req.id,
+                                        output: o.output,
+                                        ttft_s: o.ttft_s,
+                                        tbt_mean_s: o.tbt_mean_s,
+                                        e2e_s: o.e2e_s,
+                                        tokens,
+                                        rejected: false,
+                                        failed: false,
+                                        error: None,
+                                        stages: Vec::new(),
+                                        kv_hop_bytes: 0.0,
+                                    });
+                                }
+                                if !failed.is_empty() {
+                                    let msg =
+                                        error.unwrap_or_else(|| "engine failure".into());
+                                    for id in failed {
+                                        flat_open = flat_open.saturating_sub(1);
+                                        sinks.send(ChatResponse::failed(
+                                            id,
+                                            0.0,
+                                            msg.clone(),
+                                        ));
+                                    }
+                                }
+                            }
+                        }
                     }
                 }
             }
 
-            // ---- host-pool completions and modeled transfers --------
-            if let (Some(rt), Some(d), Some(done_rx), Some(pool)) = (
-                self.dag.as_ref(),
-                dispatch.as_mut(),
-                self.host_done.as_ref(),
-                self.host.as_ref(),
-            ) {
-                while let Ok(hd) = done_rx.try_recv() {
-                    progressed = true;
-                    let step = d.on_host_done(rt, hd, pool);
-                    sinks.drain(step, &mut batcher);
-                }
+            // ---- due modeled transfers ------------------------------
+            if let (Some(rt), Some(d), Some(pool)) =
+                (self.dag.as_ref(), dispatch.as_mut(), self.host.as_ref())
+            {
                 let step = d.poll_timers(rt, Instant::now(), pool);
-                progressed |= sinks.drain(step, &mut batcher);
+                sinks.drain(step, &mut batchers);
                 g_host_queue.set(pool.queued() as f64);
             }
-            g_depth.set(batcher.len() as f64);
 
-            // ---- engine batch ---------------------------------------
-            if let Some(batch) = batcher.poll(Instant::now()) {
-                progressed = true;
-                m_batches.inc();
-                let mut flat = Vec::new();
-                let mut dag = Vec::new();
-                for w in batch.members {
-                    match w {
-                        Work::Flat(f) => flat.push(f),
-                        Work::Dag(j) => dag.push(j),
+            // ---- release due batches to the engines -----------------
+            let now = Instant::now();
+            for (e, batcher) in batchers.iter_mut().enumerate() {
+                while let Some(batch) = batcher.poll(now) {
+                    m_batches.inc();
+                    let mut flat = Vec::new();
+                    let mut dag = Vec::new();
+                    for w in batch.members {
+                        match w {
+                            Work::Flat(s) => flat.push(s),
+                            Work::Dag(j) => dag.push(j),
+                        }
                     }
-                }
-                flat_queued = flat_queued.saturating_sub(flat.len());
-                if !flat.is_empty() {
-                    for r in self.run_batch(flat)? {
-                        sinks.send(r);
+                    if !flat.is_empty() {
+                        engine_inflight += 1;
+                        self.dispatch_engine_work(e, EngineWork::Flat(flat));
                     }
-                }
-                if !dag.is_empty() {
-                    let outcomes = self.run_llm_batch(dag)?;
-                    if let (Some(rt), Some(d), Some(pool)) =
-                        (self.dag.as_ref(), dispatch.as_mut(), self.host.as_ref())
-                    {
-                        let step = d.finish_units(rt, outcomes, pool);
-                        sinks.drain(step, &mut batcher);
+                    if !dag.is_empty() {
+                        engine_inflight += 1;
+                        self.dispatch_engine_work(e, EngineWork::Dag(dag));
                     }
                 }
             }
+            g_depth.set(
+                (flat_open + dispatch.as_ref().map_or(0, |d| d.in_flight())) as f64,
+            );
 
-            // ---- exit / idle ----------------------------------------
+            // ---- exit -----------------------------------------------
             let dag_in_flight = dispatch.as_ref().map_or(0, |d| d.in_flight());
-            if !open && batcher.is_empty() && dag_in_flight == 0 {
+            if !open
+                && flat_open == 0
+                && dag_in_flight == 0
+                && engine_inflight == 0
+                && batchers.iter().all(|b| b.is_empty())
+            {
                 break;
             }
-            if !progressed {
-                // Waiting on host workers or a modeled transfer: park
-                // briefly instead of spinning the dispatcher.
-                std::thread::sleep(Duration::from_micros(200));
+
+            // ---- block until the next event or deadline -------------
+            // Deadlines: the earliest pending modeled-transfer arrival
+            // and each non-empty batcher's max-wait expiry. With
+            // neither, block indefinitely — engine/host completions and
+            // intake all arrive as events, so an idle server burns no
+            // CPU (this replaces the old 200 µs busy-sleep).
+            let now = Instant::now();
+            let mut deadline: Option<Instant> =
+                dispatch.as_ref().and_then(|d| d.next_timer_due());
+            for b in &batchers {
+                if !b.is_empty() {
+                    let due = now + max_wait.saturating_sub(b.head_wait(now));
+                    deadline = Some(match deadline {
+                        Some(d) => d.min(due),
+                        None => due,
+                    });
+                }
+            }
+            match deadline {
+                Some(d) => {
+                    let wait = d.saturating_duration_since(now);
+                    if !wait.is_zero() {
+                        if let Ok(ev) = self.event_rx.recv_timeout(wait) {
+                            pending = Some(ev);
+                        }
+                    }
+                }
+                None => match self.event_rx.recv() {
+                    Ok(ev) => pending = Some(ev),
+                    // Unreachable (we hold a sender), but not worth
+                    // spinning on if it ever happens.
+                    Err(_) => break,
+                },
             }
         }
+        let _ = forwarder.join();
         Ok(())
     }
 
@@ -518,7 +761,7 @@ impl Server {
         req: ChatRequest,
         dispatch: &mut Option<DagDispatch>,
         sinks: &Sinks<'_>,
-        batcher: &mut Batcher<Work>,
+        batchers: &mut [Batcher<Work>],
     ) {
         let serveable = match (self.dag.as_ref(), dispatch.as_ref()) {
             (Some(rt), Some(_)) => req.agent.as_deref() == Some(rt.plan.agent.as_str()),
@@ -547,7 +790,7 @@ impl Server {
         let d = dispatch.as_mut().expect("checked above");
         let pool = self.host.as_ref().expect("plan install creates the pool");
         let step = d.admit(rt, req, Instant::now(), pool);
-        sinks.drain(step, batcher);
+        sinks.drain(step, batchers);
     }
 
     /// Synchronous convenience: submit a fixed workload, get responses.
@@ -563,279 +806,23 @@ impl Server {
         out.sort_by_key(|r| r.id);
         Ok(out)
     }
-
-    /// Execute one flat prefill+decode batch to completion (always on
-    /// engine 0 of the pool — the classic single-engine path).
-    fn run_batch(&mut self, members: Vec<InFlight>) -> Result<Vec<ChatResponse>> {
-        let engine = Arc::clone(&self.engines[0]);
-        let seq_budget = engine.manifest.prefill_seq;
-        let prompts: Vec<Vec<u8>> = members
-            .iter()
-            .map(|f| self.sessions.assemble(f.req.session, &f.req.prompt, seq_budget))
-            .collect();
-        let t_batch0 = Instant::now();
-        let pre = engine.prefill(&prompts)?;
-        let t_prefill_end = Instant::now();
-        self.engine_busy[0].0 += t_prefill_end.duration_since(t_batch0).as_secs_f64();
-        let mut kv = pre.kv;
-        let n = members.len();
-        let bucket = kv.bucket;
-
-        let mut samplers: Vec<Sampler> = members
-            .iter()
-            .map(|f| {
-                if f.req.temperature > 0.0 {
-                    Sampler::new(f.req.temperature, 0, f.req.id)
-                } else {
-                    Sampler::greedy()
-                }
-            })
-            .collect();
-
-        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
-        let mut first_token_at: Vec<Instant> = vec![t_batch0; n];
-        let mut last_token_at: Vec<Instant> = vec![t_batch0; n];
-        let mut gaps: Vec<Vec<f64>> = vec![Vec::new(); n];
-
-        // First token from prefill logits (zero-budget requests emit
-        // nothing, matching the DAG path's `osl > 0` guard).
-        let now = Instant::now();
-        let mut next: Vec<u8> = vec![0; bucket.max(n)];
-        for i in 0..n {
-            if members[i].req.max_new_tokens == 0 {
-                continue;
-            }
-            let tok = samplers[i].sample(&pre.logits[i]) as u8;
-            next[i] = tok;
-            outputs[i].push(tok);
-            first_token_at[i] = now;
-            last_token_at[i] = now;
-        }
-
-        // Decode rounds until every member hit its budget (lanes that
-        // finish keep feeding their last token; outputs stop growing).
-        let max_rounds = members
-            .iter()
-            .map(|f| f.req.max_new_tokens.saturating_sub(1))
-            .max()
-            .unwrap_or(0)
-            .min(engine.manifest.max_seq - seq_budget - 1);
-        for _round in 0..max_rounds {
-            let t_r0 = Instant::now();
-            let logits = engine.decode_step(&mut kv, &next)?;
-            let now = Instant::now();
-            self.engine_busy[0].1 += now.duration_since(t_r0).as_secs_f64();
-            for i in 0..n {
-                if outputs[i].len() >= members[i].req.max_new_tokens {
-                    continue;
-                }
-                let tok = samplers[i].sample(&logits[i]) as u8;
-                next[i] = tok;
-                outputs[i].push(tok);
-                gaps[i].push(now.duration_since(last_token_at[i]).as_secs_f64());
-                last_token_at[i] = now;
-            }
-        }
-
-        // Record sessions + build responses.
-        let mut responses = Vec::with_capacity(n);
-        for (i, f) in members.iter().enumerate() {
-            if let Some(sid) = f.req.session {
-                self.sessions.record_turn(sid, &f.req.prompt, &outputs[i]);
-            }
-            let ttft = first_token_at[i].duration_since(f.submitted).as_secs_f64();
-            let e2e = last_token_at[i].duration_since(f.submitted).as_secs_f64();
-            let tbt = if gaps[i].is_empty() {
-                0.0
-            } else {
-                gaps[i].iter().sum::<f64>() / gaps[i].len() as f64
-            };
-            responses.push(ChatResponse {
-                id: f.req.id,
-                output: outputs[i].clone(),
-                ttft_s: ttft,
-                tbt_mean_s: tbt,
-                e2e_s: e2e,
-                tokens: outputs[i].len(),
-                rejected: false,
-                failed: false,
-                error: None,
-                stages: Vec::new(),
-                kv_hop_bytes: 0.0,
-            });
-        }
-        Ok(responses)
-    }
-
-    /// Execute one batch of agent-DAG LLM phases, partitioned per
-    /// (engine, phase kind): every engine of the pool runs its prefill
-    /// ingests and its decode rounds as separate batched passes — the
-    /// live counterpart of "each pipeline group is its own serialized
-    /// resource".
-    fn run_llm_batch(&mut self, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
-        let n_engines = self.engines.len();
-        let mut prefill: Vec<Vec<LlmJob>> = (0..n_engines).map(|_| Vec::new()).collect();
-        let mut decode: Vec<Vec<LlmJob>> = (0..n_engines).map(|_| Vec::new()).collect();
-        for j in jobs {
-            let e = j.engine.min(n_engines - 1);
-            match j.phase {
-                LlmPhase::Prefill { .. } => prefill[e].push(j),
-                LlmPhase::Decode { .. } => decode[e].push(j),
-            }
-        }
-        let mut out = Vec::new();
-        for e in 0..n_engines {
-            let pre = std::mem::take(&mut prefill[e]);
-            if !pre.is_empty() {
-                out.extend(self.run_prefill_phase(e, pre)?);
-            }
-            let dec = std::mem::take(&mut decode[e]);
-            if !dec.is_empty() {
-                out.extend(self.run_decode_phase(e, dec)?);
-            }
-        }
-        Ok(out)
-    }
-
-    /// Context ingestion for a batch of prefill phases on engine `e`.
-    fn run_prefill_phase(&mut self, e: usize, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
-        let engine = Arc::clone(&self.engines[e]);
-        let seq_budget = engine.manifest.prefill_seq;
-        let prompts: Vec<Vec<u8>> = jobs
-            .iter()
-            .map(|j| match &j.phase {
-                LlmPhase::Prefill { prompt } => clip_tail(prompt, seq_budget),
-                LlmPhase::Decode { .. } => unreachable!("partitioned by phase"),
-            })
-            .collect();
-        let t0 = Instant::now();
-        engine.prefill(&prompts)?;
-        let finished = Instant::now();
-        self.engine_busy[e].0 += finished.duration_since(t0).as_secs_f64();
-        Ok(jobs
-            .into_iter()
-            .map(|job| UnitOutcome {
-                job,
-                started: t0,
-                finished,
-                first_token: None,
-                output: Vec::new(),
-                tbt_sum_s: 0.0,
-                tbt_n: 0,
-            })
-            .collect())
-    }
-
-    /// Decode rounds for a batch of decode phases on engine `e`:
-    /// rebuild each lane's context (the stand-in for adopting the
-    /// transferred KV cache — the synthetic state is a pure function of
-    /// the context, so this reconstructs exactly what the prefill
-    /// engine held), sample the first token, then continuous decode
-    /// rounds until every lane hits its budget.
-    fn run_decode_phase(&mut self, e: usize, jobs: Vec<LlmJob>) -> Result<Vec<UnitOutcome>> {
-        let engine = Arc::clone(&self.engines[e]);
-        let seq_budget = engine.manifest.prefill_seq;
-        let mut prompts = Vec::with_capacity(jobs.len());
-        let mut osls = Vec::with_capacity(jobs.len());
-        for j in &jobs {
-            match &j.phase {
-                LlmPhase::Decode { prompt, osl } => {
-                    prompts.push(clip_tail(prompt, seq_budget));
-                    osls.push(*osl);
-                }
-                LlmPhase::Prefill { .. } => unreachable!("partitioned by phase"),
-            }
-        }
-        let t0 = Instant::now();
-        let pre = engine.prefill(&prompts)?;
-        let ctx_end = Instant::now();
-        // KV adoption is decode-side work: charge it to the decode
-        // engine's decode budget, not prefill.
-        self.engine_busy[e].1 += ctx_end.duration_since(t0).as_secs_f64();
-        let mut kv = pre.kv;
-        let n = jobs.len();
-
-        let mut samplers: Vec<Sampler> = jobs
-            .iter()
-            .map(|j| {
-                if j.temperature > 0.0 {
-                    Sampler::new(j.temperature, 0, j.req)
-                } else {
-                    Sampler::greedy()
-                }
-            })
-            .collect();
-        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); n];
-        let mut next: Vec<u8> = vec![0; kv.bucket.max(n)];
-        let mut first_token: Vec<Option<Instant>> = vec![None; n];
-        let mut last_token: Vec<Instant> = vec![ctx_end; n];
-        let mut tbt_sum = vec![0.0f64; n];
-        let mut tbt_n = vec![0u64; n];
-        for i in 0..n {
-            if osls[i] > 0 {
-                let tok = samplers[i].sample(&pre.logits[i]) as u8;
-                next[i] = tok;
-                outputs[i].push(tok);
-                first_token[i] = Some(ctx_end);
-            }
-        }
-        let budget_cap = engine
-            .manifest
-            .max_seq
-            .saturating_sub(seq_budget)
-            .saturating_sub(1);
-        let max_rounds = osls
-            .iter()
-            .map(|o| o.saturating_sub(1))
-            .max()
-            .unwrap_or(0)
-            .min(budget_cap);
-        for _round in 0..max_rounds {
-            let t_r0 = Instant::now();
-            let logits = engine.decode_step(&mut kv, &next)?;
-            let now = Instant::now();
-            self.engine_busy[e].1 += now.duration_since(t_r0).as_secs_f64();
-            for i in 0..n {
-                if outputs[i].len() >= osls[i] {
-                    continue;
-                }
-                let tok = samplers[i].sample(&logits[i]) as u8;
-                next[i] = tok;
-                outputs[i].push(tok);
-                tbt_sum[i] += now.duration_since(last_token[i]).as_secs_f64();
-                tbt_n[i] += 1;
-                last_token[i] = now;
-            }
-        }
-
-        let mut outcomes = Vec::with_capacity(n);
-        for (i, job) in jobs.into_iter().enumerate() {
-            outcomes.push(UnitOutcome {
-                job,
-                started: t0,
-                finished: last_token[i],
-                first_token: first_token[i],
-                output: std::mem::take(&mut outputs[i]),
-                tbt_sum_s: tbt_sum[i],
-                tbt_n: tbt_n[i],
-            });
-        }
-        Ok(outcomes)
-    }
 }
 
-/// Keep the most recent `budget` bytes of a prompt (the compiled prompt
-/// bucket ingests the tail — most recent context wins).
-fn clip_tail(prompt: &[u8], budget: usize) -> Vec<u8> {
-    if prompt.len() > budget {
-        prompt[prompt.len() - budget..].to_vec()
-    } else {
-        prompt.to_vec()
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Closing the work queues retires the engine workers; join so
+        // no worker outlives the engines/stats it borrows. (The host
+        // pool joins its own workers in its Drop.)
+        self.engine_tx.clear();
+        for h in self.engine_handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
 // Engine-backed tests live in rust/tests/runtime_e2e.rs (need artifacts)
-// and rust/tests/sim_vs_live.rs (synthetic engine, non-pjrt builds).
+// and rust/tests/sim_vs_live.rs + rust/tests/stress_serve.rs (synthetic
+// engine, non-pjrt builds).
 
 #[cfg(test)]
 mod tests {
@@ -856,6 +843,7 @@ mod tests {
         assert_eq!(cfg.host_workers, plan.cpu_workers);
         // Engine-independent defaults survive.
         assert_eq!(cfg.max_new_tokens, ServerConfig::default().max_new_tokens);
+        assert!(!cfg.serialize_engines, "threaded dispatch is the default");
     }
 
     #[test]
@@ -914,7 +902,7 @@ mod tests {
         let mut plan = crate::plan::tests::tiny_plan();
         plan.cpu_workers = 2;
         // Two engines: the prefill group and the decode group each get
-        // their own (the multi-engine scheduling path).
+        // their own worker thread (the multi-engine scheduling path).
         let mut server =
             Server::from_plan_with_engines(Engine::synthetic_pool(2), &plan).unwrap();
         assert_eq!(server.engine_count(), 2);
@@ -978,6 +966,62 @@ mod tests {
         assert!(host > 0.0, "host pool did run stages");
         assert!(host <= 1.0);
         assert!(server.host_high_watermark() <= 2);
+    }
+
+    /// The serialized fallback runs the same workload through the same
+    /// event plumbing, just inline — and produces identical tokens.
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn serialized_dispatch_matches_threaded_outputs() {
+        use crate::runtime::Engine;
+
+        let mut plan = crate::plan::tests::tiny_plan();
+        plan.cpu_workers = 2;
+        let run = |serialize: bool| {
+            let mut server =
+                Server::from_plan_with_engines(Engine::synthetic_pool(2), &plan).unwrap();
+            let mut cfg = server.config().clone();
+            cfg.time_scale = 1e-3;
+            cfg.serialize_engines = serialize;
+            server.reconfigure(cfg);
+            server.install_plan(&plan).unwrap();
+            let reqs: Vec<ChatRequest> = (0..4u64)
+                .map(|i| {
+                    ChatRequest::new(i, format!("req {i}"), 6).with_agent(plan.agent.clone())
+                })
+                .collect();
+            server
+                .run_workload(reqs)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.output, r.kv_hop_bytes))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    /// Windowed utilization accounting: busy time reported once, then
+    /// the cursor advances (the PR 5 autoscalers rely on this).
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn take_utilization_windows_engine_busy_time() {
+        use crate::runtime::Engine;
+
+        let mut server = Server::new(Engine::synthetic_default(), ServerConfig::default());
+        let reqs: Vec<ChatRequest> =
+            (0..3u64).map(|i| ChatRequest::new(i, "measure me", 6)).collect();
+        let responses = server.run_workload(reqs).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(responses.iter().all(|r| r.is_ok()));
+        let eu = server.engine_utilization(1.0);
+        assert_eq!(eu.len(), 1);
+        assert!(eu[0].0 > 0.0, "prefill busy time must be measured");
+        assert!(eu[0].1 > 0.0, "decode busy time must be measured");
+        let (pre, dec, _) = server.take_utilization(1.0);
+        assert!(pre > 0.0 && dec > 0.0);
+        // Window reset: nothing ran since the take.
+        let (pre2, dec2, _) = server.take_utilization(1.0);
+        assert_eq!((pre2, dec2), (0.0, 0.0));
     }
 
     #[test]

@@ -271,6 +271,73 @@ impl TransferClock {
     }
 }
 
+/// Thread-safe handle to one shared [`TransferClock`].
+///
+/// The live server runs each engine of the pool on its own worker
+/// thread, but a cross-chassis prefill→decode KV handoff must still be
+/// charged against the *same* chassis-granular FIFO reservation state
+/// regardless of which thread finished the prefill. A single `Mutex`
+/// (not sharded) is deliberate: the FIFO semantics of `Link::reserve`
+/// are only well-defined when reservations on one link are totally
+/// ordered, and the critical section is a handful of float ops — far
+/// cheaper than the engine work on either side of it. Lock poisoning is
+/// ignored (`into_inner`): the clock holds plain floats, so a panic in
+/// an unrelated part of a holder's call stack cannot leave it torn.
+#[derive(Debug, Clone)]
+pub struct SharedTransferClock {
+    inner: std::sync::Arc<std::sync::Mutex<TransferClock>>,
+}
+
+impl SharedTransferClock {
+    pub fn new(fabric: Fabric) -> SharedTransferClock {
+        SharedTransferClock {
+            inner: std::sync::Arc::new(std::sync::Mutex::new(TransferClock::new(fabric))),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TransferClock> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Reserve the hop between two chassis (see
+    /// [`TransferClock::transfer`]). Takes `&self`: reservation order
+    /// across threads is whatever order callers win the lock — exactly
+    /// the FIFO arrival order the link model wants.
+    pub fn transfer(
+        &self,
+        from_chassis: u32,
+        to_chassis: u32,
+        bytes: f64,
+        now_s: f64,
+    ) -> Result<f64> {
+        self.lock().transfer(from_chassis, to_chassis, bytes, now_s)
+    }
+
+    /// Non-reserving estimate of the same hop.
+    pub fn estimate(&self, from_chassis: u32, to_chassis: u32, bytes: f64, now_s: f64) -> f64 {
+        self.lock().estimate(from_chassis, to_chassis, bytes, now_s)
+    }
+
+    /// Grow the underlying fabric.
+    pub fn grow(&self, n_chassis: u32) {
+        self.lock().grow(n_chassis);
+    }
+
+    /// Forget reservations.
+    pub fn reset(&self) {
+        self.lock().reset();
+    }
+
+    /// Total bytes carried per tier (scale-up, scale-out).
+    pub fn carried(&self) -> (f64, f64) {
+        self.lock().carried()
+    }
+
+    pub fn n_chassis(&self) -> u32 {
+        self.lock().n_chassis()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +470,52 @@ mod tests {
         assert_eq!(e1, clock.estimate(0, 1, 1e9, 100.0));
         clock.reset();
         assert_eq!(clock.carried(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn shared_clock_matches_raw_clock() {
+        // The shared handle is the same reservation model — identical
+        // completion times and carried bytes for an identical schedule.
+        let mut raw = TransferClock::new(fabric());
+        let shared = SharedTransferClock::new(fabric());
+        for i in 0..4 {
+            let t_raw = raw.transfer(0, 1, 5e9, i as f64 * 0.01).unwrap();
+            let t_shr = shared.transfer(0, 1, 5e9, i as f64 * 0.01).unwrap();
+            assert_eq!(t_raw, t_shr, "hop {i}");
+        }
+        assert_eq!(raw.carried(), shared.carried());
+        assert_eq!(shared.transfer(1, 1, 1e9, 3.0).unwrap(), 3.0);
+        assert!(shared.transfer(0, 9, 1.0, 0.0).is_err());
+        shared.grow(4);
+        assert_eq!(shared.n_chassis(), 4);
+        let e = shared.estimate(0, 1, 1e9, 50.0);
+        assert_eq!(e, shared.estimate(0, 1, 1e9, 50.0), "estimate must not reserve");
+        shared.reset();
+        assert_eq!(shared.carried(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn shared_clock_serializes_concurrent_reservations() {
+        // N threads race one link at now=0: FIFO reservation must hand
+        // out N distinct, strictly increasing completion slots with no
+        // lost updates — the exact set a serial schedule produces.
+        let shared = SharedTransferClock::new(fabric());
+        let n = 8;
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let clk = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                clk.transfer(0, 1, 5e9, 0.0).unwrap()
+            }));
+        }
+        let mut done: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        done.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut serial = TransferClock::new(fabric());
+        let expect: Vec<f64> = (0..n).map(|_| serial.transfer(0, 1, 5e9, 0.0).unwrap()).collect();
+        for (i, (d, e)) in done.iter().zip(expect.iter()).enumerate() {
+            assert!((d - e).abs() < 1e-9, "slot {i}: got {d}, want {e}");
+        }
+        assert_eq!(shared.carried(), serial.carried());
     }
 
     #[test]

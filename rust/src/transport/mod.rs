@@ -13,5 +13,5 @@
 pub mod fabric;
 pub mod transfer;
 
-pub use fabric::{Fabric, LinkId, NodeAddr, TransferClock};
+pub use fabric::{Fabric, LinkId, NodeAddr, SharedTransferClock, TransferClock};
 pub use transfer::{TransferPlan, TransferScheduler};

@@ -676,3 +676,83 @@ fn sim_and_live_agree_on_cpu_only_plans() {
     assert_eq!(server.host_capacity(), Some(2));
     assert!(server.host_high_watermark() <= 2);
 }
+
+/// Threading must be invisible to conformance: the same mixed-generation
+/// workload run with engines on worker threads and with
+/// `serialize_engines` (every batch executed inline on the dispatcher
+/// thread, the pre-threading behaviour) must produce byte-identical
+/// outputs, identical KV-hop accounting, and identical per-group job
+/// ledgers. This is the bridge between the sim-vs-live gates above and
+/// the worker-thread engine pool: sim == serialized == threaded.
+#[test]
+fn serialized_and_threaded_dispatch_agree() {
+    use agentic_hetero::plan::presets::mixed_generation;
+
+    const N: usize = 24;
+    const MG_ISL: usize = 48;
+    const MG_OSL: usize = 12;
+
+    let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
+
+    let run = |serialize: bool| {
+        let mut server = Server::from_plan_with_engines(
+            Engine::synthetic_pool(plan.pipelines.len()),
+            &plan,
+        )
+        .unwrap();
+        let mut cfg = server.config().clone();
+        cfg.time_scale = 0.0; // structure, not timing, is under test
+        cfg.max_new_tokens = MG_OSL;
+        cfg.serialize_engines = serialize;
+        server.reconfigure(cfg);
+        server.install_plan(&plan).unwrap();
+        let reqs: Vec<ChatRequest> = (0..N as u64)
+            .map(|i| {
+                let byte = b'a' + (i % 23) as u8;
+                ChatRequest::new(i, vec![byte; MG_ISL], MG_OSL)
+                    .with_agent(plan.agent.as_str())
+            })
+            .collect();
+        let (server, mut responses) = run_live(server, reqs);
+        responses.sort_by_key(|r| r.id);
+        let snap = server.metrics.snapshot();
+        let groups: Vec<(String, f64)> = snap
+            .iter()
+            .filter(|(k, _)| k.starts_with("server_group_jobs:"))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        (responses, groups)
+    };
+
+    let (threaded, threaded_groups) = run(false);
+    let (serialized, serialized_groups) = run(true);
+
+    assert_eq!(threaded.len(), N);
+    assert_eq!(serialized.len(), N);
+    for (t, s) in threaded.iter().zip(&serialized) {
+        assert!(t.is_ok(), "threaded request {} failed: {:?}", t.id, t.error);
+        assert!(s.is_ok(), "serialized request {} failed: {:?}", s.id, s.error);
+        assert_eq!(t.id, s.id);
+        assert_eq!(
+            t.output, s.output,
+            "request {}: threaded dispatch changed the token stream",
+            t.id
+        );
+        assert_eq!(t.tokens, s.tokens);
+        assert!(
+            (t.kv_hop_bytes - s.kv_hop_bytes).abs() < 1.0,
+            "request {}: threaded dispatch changed KV-hop accounting",
+            t.id
+        );
+        assert_eq!(t.stages.len(), s.stages.len());
+    }
+
+    // Per-group job ledgers are identical: the same unit landed on the
+    // same pipeline group under both dispatch modes.
+    assert_eq!(threaded_groups, serialized_groups);
+    assert_eq!(
+        threaded_groups.len(),
+        plan.pipelines.len(),
+        "one job counter per pipeline group: {threaded_groups:?}"
+    );
+}

@@ -1,0 +1,203 @@
+//! Serving-stack stress: the threaded dispatcher must sustain 10k+
+//! concurrent synthetic requests without dropping, corrupting, or
+//! deadlocking anything.
+//!
+//! The interesting properties at this scale are structural, not
+//! timing-based (the release-mode throughput gate lives in
+//! `tools/stress_serve.rs`, run by CI):
+//!
+//! * **zero drops** — every admitted request produces exactly one
+//!   response, ids are unique, and none is rejected or failed;
+//! * **determinism under load** — responses match what the synthetic
+//!   engine produces for the same request run in isolation, proving
+//!   batch composition and thread interleaving never leak into token
+//!   streams;
+//! * **bounded memory** — the host pool's high watermark stays within
+//!   the plan's `cpu_workers`, and per-group job counters account for
+//!   every request exactly once (nothing duplicated, nothing lost).
+//!
+//! Both the agent-DAG path (mixed-generation plan: one prefill group +
+//! two decode sibling groups on separate engine threads) and the flat
+//! path (no plan installed) are stressed.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use agentic_hetero::plan::presets::mixed_generation;
+use agentic_hetero::runtime::Engine;
+use agentic_hetero::server::{ChatRequest, ChatResponse, Server};
+
+const N_STRESS: usize = 10_000;
+const ISL: usize = 24;
+const OSL: usize = 4;
+
+/// Run the workload on its own thread with a deadlock watchdog: a hung
+/// dispatcher must fail the test, not hang the suite.
+fn run_live(
+    mut server: Server,
+    reqs: Vec<ChatRequest>,
+    timeout: Duration,
+) -> (Server, Vec<ChatResponse>) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let out = server.run_workload(reqs);
+        let _ = done_tx.send(());
+        (server, out)
+    });
+    match done_rx.recv_timeout(timeout) {
+        Ok(()) => {
+            let (server, out) = handle.join().expect("serve thread panicked");
+            (server, out.expect("live serve must not error"))
+        }
+        Err(_) => panic!("stress serve deadlocked (watchdog fired)"),
+    }
+}
+
+fn stress_requests(n: usize, agent: Option<&str>) -> Vec<ChatRequest> {
+    (0..n as u64)
+        .map(|i| {
+            let byte = b'a' + (i % 23) as u8;
+            let req = ChatRequest::new(i, vec![byte; ISL], OSL);
+            match agent {
+                Some(a) => req.with_agent(a),
+                None => req,
+            }
+        })
+        .collect()
+}
+
+/// Open the admission gate wide enough for the whole burst: the stress
+/// measures the dispatcher, not the token bucket.
+fn open_admission(server: &mut Server) {
+    let mut cfg = server.config().clone();
+    cfg.admission.rate = 1e9;
+    cfg.admission.burst = 1e9;
+    cfg.admission.max_queue_depth = N_STRESS * 2;
+    cfg.max_new_tokens = OSL;
+    cfg.time_scale = 0.0; // modeled host/transfer time costs zero wall-clock
+    server.reconfigure(cfg);
+}
+
+#[test]
+fn ten_thousand_concurrent_dag_requests_zero_drops() {
+    let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
+    let mut server =
+        Server::from_plan_with_engines(Engine::synthetic_pool(plan.pipelines.len()), &plan)
+            .unwrap();
+    assert_eq!(server.engine_count(), plan.pipelines.len());
+    open_admission(&mut server);
+    server.install_plan(&plan).unwrap();
+
+    let reqs = stress_requests(N_STRESS, Some(plan.agent.as_str()));
+    let (server, responses) = run_live(server, reqs, Duration::from_secs(300));
+
+    // ---- zero drops: one response per request, all successful -------
+    assert_eq!(responses.len(), N_STRESS);
+    let mut ids = HashSet::with_capacity(N_STRESS);
+    for r in &responses {
+        assert!(
+            r.is_ok(),
+            "request {} not ok under load: rejected={} error={:?}",
+            r.id,
+            r.rejected,
+            r.error
+        );
+        assert!(ids.insert(r.id), "duplicate response for request {}", r.id);
+        assert_eq!(
+            r.stages.len(),
+            plan.bindings.len(),
+            "request {}: every binding must run exactly once",
+            r.id
+        );
+    }
+    assert_eq!(ids.len(), N_STRESS);
+
+    // ---- bounded memory: the host pool never queues past its slots --
+    assert!(
+        server.host_high_watermark() <= plan.cpu_workers as u64,
+        "host watermark {} exceeded cpu_workers {}",
+        server.host_high_watermark(),
+        plan.cpu_workers
+    );
+
+    // ---- per-group accounting: every request hit every group once ---
+    let snap = server.metrics.snapshot();
+    for pipe in &plan.pipelines {
+        let key = format!("server_group_jobs:{}", pipe.shape_key());
+        assert_eq!(
+            snap.get(&key).copied().unwrap_or(0.0),
+            N_STRESS as f64,
+            "group {key} job count off under load"
+        );
+    }
+
+    // ---- determinism: sampled responses match isolated runs ---------
+    let mut solo_server =
+        Server::from_plan_with_engines(Engine::synthetic_pool(plan.pipelines.len()), &plan)
+            .unwrap();
+    open_admission(&mut solo_server);
+    solo_server.install_plan(&plan).unwrap();
+    let sample: Vec<u64> = (0..16).map(|i| i * (N_STRESS as u64 / 16)).collect();
+    let solo_reqs: Vec<ChatRequest> = sample
+        .iter()
+        .map(|&i| {
+            let byte = b'a' + (i % 23) as u8;
+            ChatRequest::new(i, vec![byte; ISL], OSL).with_agent(plan.agent.as_str())
+        })
+        .collect();
+    let (_solo, solo_out) = run_live(solo_server, solo_reqs, Duration::from_secs(60));
+    for s in &solo_out {
+        let under_load = responses.iter().find(|r| r.id == s.id).unwrap();
+        assert_eq!(
+            under_load.output, s.output,
+            "request {}: output under 10k-way load diverged from the \
+             isolated run — batching/threading leaked into tokens",
+            s.id
+        );
+        assert_eq!(under_load.tokens, s.tokens);
+        assert!(
+            (under_load.kv_hop_bytes - s.kv_hop_bytes).abs() < 1.0,
+            "request {}: KV hop bytes changed under load",
+            s.id
+        );
+    }
+}
+
+#[test]
+fn ten_thousand_flat_requests_zero_drops() {
+    // No plan installed: the flat prompt→generate path through the
+    // continuous batcher and a single engine worker thread.
+    let mut server = Server::new(Engine::synthetic_default(), Default::default());
+    open_admission(&mut server);
+
+    let reqs = stress_requests(N_STRESS, None);
+    let (_server, responses) = run_live(server, reqs, Duration::from_secs(300));
+
+    assert_eq!(responses.len(), N_STRESS);
+    let mut ids = HashSet::with_capacity(N_STRESS);
+    for r in &responses {
+        assert!(r.is_ok(), "flat request {} failed: {:?}", r.id, r.error);
+        assert!(ids.insert(r.id), "duplicate flat response {}", r.id);
+        assert_eq!(r.tokens, OSL, "flat request {} token count", r.id);
+    }
+
+    // Determinism: lanes are independent in the synthetic engine, so a
+    // request's bytes must match a fresh single-request run.
+    let engine = Engine::synthetic_default();
+    for &probe in &[0u64, 4_999, 9_999] {
+        let byte = b'a' + (probe % 23) as u8;
+        let expect = engine
+            .generate_greedy(&[vec![byte; ISL]], OSL)
+            .unwrap()
+            .remove(0);
+        let got = responses.iter().find(|r| r.id == probe).unwrap();
+        assert_eq!(
+            got.output, expect,
+            "flat request {probe} diverged from solo generate"
+        );
+    }
+}

@@ -7,15 +7,22 @@
 //!
 //! Tolerance rules (see also the comments in `.github/workflows/ci.yml`):
 //!
-//! * **Deterministic metrics** (`migration_steps`, `plans_emitted`,
-//!   `migrations`, `sla_attainment`) come from seeded, modeled-time
-//!   runs — any drift is a behavior change. They gate at ±20% relative
-//!   (`BENCH_GATE_TOL`, default 0.20).
-//! * **Timing metrics** (`decisions_per_s`) depend on the runner's
-//!   silicon, so they only gate on a *collapse*: current must stay
-//!   above `baseline / BENCH_GATE_TIMING_COLLAPSE` (default 5×) —
-//!   catching an order-of-magnitude hot-path regression without
-//!   flaking on CI hardware variance.
+//! * **Deterministic metrics** (`sla_attainment`) come from seeded,
+//!   modeled-time runs — any drift is a behavior change. They gate at
+//!   ±20% relative (`BENCH_GATE_TOL`, default 0.20).
+//! * **Count metrics** (`migration_steps`, `plans_emitted`,
+//!   `migrations`) are also deterministic, but they are *small
+//!   integers that step discretely* — a planner emitting one more plan
+//!   is a ±25% relative move on a baseline of 4 while still being the
+//!   measurement floor, not a regression. They pass when
+//!   `|current − baseline| ≤ max(tol·|baseline|, BENCH_GATE_COUNT_SLACK)`
+//!   (absolute slack, default 3).
+//! * **Timing metrics** (`decisions_per_s`, `live_requests_per_s`,
+//!   `sim_events_per_s`) depend on the runner's silicon, so they only
+//!   gate on a *collapse*: current must stay above
+//!   `baseline / BENCH_GATE_TIMING_COLLAPSE` (default 5×) — catching
+//!   an order-of-magnitude hot-path regression without flaking on CI
+//!   hardware variance.
 //! * A baseline value of `null` means "not yet pinned" — the metric is
 //!   reported but does not gate (used to bootstrap a metric before its
 //!   first green CI run produces a number to commit).
@@ -35,7 +42,16 @@ const BASELINE: &str = "BENCH_baseline.json";
 
 /// Metrics whose absolute values are machine-dependent (gated only on
 /// collapse, never on improvement or modest drift).
-const TIMING_METRICS: &[&str] = &["decisions_per_s"];
+const TIMING_METRICS: &[&str] = &[
+    "decisions_per_s",
+    "live_requests_per_s",
+    "sim_events_per_s",
+];
+
+/// Deterministic small-integer counters: discrete steps, so they get
+/// an absolute slack on top of the relative tolerance (see module
+/// docs).
+const COUNT_METRICS: &[&str] = &["migration_steps", "plans_emitted", "migrations"];
 
 #[derive(Debug, PartialEq)]
 enum Verdict {
@@ -60,6 +76,7 @@ fn judge(
     current: Option<f64>,
     tol: f64,
     collapse: f64,
+    count_slack: f64,
 ) -> RowResult {
     let delta_pct = match (baseline, current) {
         (Some(b), Some(c)) if b != 0.0 => Some((c - b) / b * 100.0),
@@ -71,6 +88,8 @@ fn judge(
         (Some(b), Some(c)) => {
             let regressed = if TIMING_METRICS.contains(&metric) {
                 c < b / collapse
+            } else if COUNT_METRICS.contains(&metric) {
+                (c - b).abs() > (tol * b.abs()).max(count_slack)
             } else if b == 0.0 {
                 c != 0.0
             } else {
@@ -159,6 +178,7 @@ fn main() {
 
     let tol = env_f64("BENCH_GATE_TOL", 0.20);
     let collapse = env_f64("BENCH_GATE_TIMING_COLLAPSE", 5.0);
+    let count_slack = env_f64("BENCH_GATE_COUNT_SLACK", 3.0);
 
     // Every metric named by the baseline gates; ledger-only metrics are
     // reported as unpinned (candidates for the next refresh).
@@ -177,11 +197,12 @@ fn main() {
     for m in &metrics {
         let b = baseline.get(m).and_then(num);
         let c = ledger.get(m).and_then(num);
-        rows.push(judge(m, b, c, tol, collapse));
+        rows.push(judge(m, b, c, tol, collapse, count_slack));
     }
 
     println!(
-        "bench_gate: {LEDGER} vs {BASELINE} (tol ±{:.0}%, timing collapse {collapse}x)",
+        "bench_gate: {LEDGER} vs {BASELINE} (tol ±{:.0}%, timing collapse \
+         {collapse}x, count slack ±{count_slack})",
         tol * 100.0
     );
     println!(
@@ -230,40 +251,64 @@ mod tests {
 
     #[test]
     fn deterministic_metrics_gate_at_tolerance() {
-        let r = judge("migrations", Some(10.0), Some(11.9), 0.20, 5.0);
+        let r = judge("sla_attainment", Some(10.0), Some(11.9), 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Ok);
         assert!((r.delta_pct.unwrap() - 19.0).abs() < 1e-9);
-        let r = judge("migrations", Some(10.0), Some(12.1), 0.20, 5.0);
+        let r = judge("sla_attainment", Some(10.0), Some(12.1), 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Regressed);
-        // Both directions gate: a deterministic count changing at all
+        // Both directions gate: a deterministic metric changing at all
         // beyond tolerance is a behavior change.
-        let r = judge("migrations", Some(10.0), Some(7.9), 0.20, 5.0);
+        let r = judge("sla_attainment", Some(10.0), Some(7.9), 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Regressed);
         // Zero baselines require exact zero.
-        let r = judge("plans_emitted", Some(0.0), Some(0.0), 0.20, 5.0);
+        let r = judge("sla_attainment", Some(0.0), Some(0.0), 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Ok);
-        let r = judge("plans_emitted", Some(0.0), Some(1.0), 0.20, 5.0);
+        let r = judge("sla_attainment", Some(0.0), Some(1.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+    }
+
+    #[test]
+    fn count_metrics_get_absolute_slack() {
+        // +2 on a baseline of 4 is +50% relative but within the ±3
+        // discrete-step slack: not a regression.
+        let r = judge("plans_emitted", Some(4.0), Some(6.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+        // Past the slack, the count gates in both directions.
+        let r = judge("plans_emitted", Some(4.0), Some(8.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        let r = judge("migrations", Some(10.0), Some(6.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        // Large counts fall back to the relative tolerance once it
+        // exceeds the slack: 100 → 115 is within ±20%.
+        let r = judge("migration_steps", Some(100.0), Some(115.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Ok);
+        let r = judge("migration_steps", Some(100.0), Some(121.0), 0.20, 5.0, 3.0);
+        assert_eq!(r.verdict, Verdict::Regressed);
+        // Zero slack restores the pure relative rule.
+        let r = judge("plans_emitted", Some(4.0), Some(6.0), 0.20, 5.0, 0.0);
         assert_eq!(r.verdict, Verdict::Regressed);
     }
 
     #[test]
     fn timing_metrics_gate_only_on_collapse() {
-        // 3x slower: noisy CI silicon, still ok.
-        let r = judge("decisions_per_s", Some(1000.0), Some(350.0), 0.20, 5.0);
-        assert_eq!(r.verdict, Verdict::Ok);
-        // 10x slower: a hot-path regression.
-        let r = judge("decisions_per_s", Some(1000.0), Some(99.0), 0.20, 5.0);
-        assert_eq!(r.verdict, Verdict::Regressed);
-        // Faster never fails.
-        let r = judge("decisions_per_s", Some(1000.0), Some(9000.0), 0.20, 5.0);
-        assert_eq!(r.verdict, Verdict::Ok);
+        for m in ["decisions_per_s", "live_requests_per_s", "sim_events_per_s"] {
+            // 3x slower: noisy CI silicon, still ok.
+            let r = judge(m, Some(1000.0), Some(350.0), 0.20, 5.0, 3.0);
+            assert_eq!(r.verdict, Verdict::Ok);
+            // 10x slower: a hot-path regression.
+            let r = judge(m, Some(1000.0), Some(99.0), 0.20, 5.0, 3.0);
+            assert_eq!(r.verdict, Verdict::Regressed);
+            // Faster never fails.
+            let r = judge(m, Some(1000.0), Some(9000.0), 0.20, 5.0, 3.0);
+            assert_eq!(r.verdict, Verdict::Ok);
+        }
     }
 
     #[test]
     fn unpinned_and_missing_metrics() {
-        let r = judge("new_metric", None, Some(5.0), 0.20, 5.0);
+        let r = judge("new_metric", None, Some(5.0), 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Unpinned);
-        let r = judge("gone_metric", Some(5.0), None, 0.20, 5.0);
+        let r = judge("gone_metric", Some(5.0), None, 0.20, 5.0, 3.0);
         assert_eq!(r.verdict, Verdict::Missing);
     }
 }

@@ -1,0 +1,142 @@
+//! Release-mode serving stress + live-throughput gate (CI: `rust` job).
+//!
+//! Pushes a 10k-request synthetic burst through the server twice on the
+//! two-generation `mixed_generation` plan — once with engines on worker
+//! threads (the default), once with `serialize_engines` (every batch
+//! executed inline on the dispatcher thread, the pre-threading
+//! behaviour) — and fails if:
+//!
+//! * any request is dropped, rejected, duplicated, or failed, or
+//! * threaded throughput < `STRESS_MIN_SPEEDUP` × serialized
+//!   throughput (default 1.5; the plan's prefill group and two decode
+//!   sibling groups live on three engine threads, so ~2x is expected).
+//!
+//! Writes `BENCH_live_serve.json` next to `BENCH_orchestrator.json` so
+//! CI archives live throughput alongside the perf ledger.
+//!
+//! Env knobs: `STRESS_REQUESTS` (default 10000), `STRESS_MIN_SPEEDUP`
+//! (default 1.5, `0` records without gating).
+//!
+//! The synthetic engine only exists in dependency-free builds; under
+//! `--features pjrt` the bin degrades to a clear error (mirroring how
+//! the sim/live conformance suite is feature-gated).
+
+#[cfg(not(feature = "pjrt"))]
+use std::collections::HashSet;
+#[cfg(not(feature = "pjrt"))]
+use std::time::Instant;
+
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::jobj;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::plan::presets::mixed_generation;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::plan::ExecutionPlan;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::runtime::Engine;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::server::{ChatRequest, Server};
+
+#[cfg(not(feature = "pjrt"))]
+const ISL: usize = 48;
+#[cfg(not(feature = "pjrt"))]
+const OSL: usize = 16;
+
+#[cfg(not(feature = "pjrt"))]
+fn env_or(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One full burst through a fresh server; returns wall seconds.
+#[cfg(not(feature = "pjrt"))]
+fn run_mode(plan: &ExecutionPlan, n: usize, serialize: bool) -> f64 {
+    let mut server =
+        Server::from_plan_with_engines(Engine::synthetic_pool(plan.pipelines.len()), plan)
+            .expect("plan must install");
+    let mut cfg = server.config().clone();
+    cfg.time_scale = 0.0; // no modeled sleeps: measure dispatch + compute
+    cfg.max_new_tokens = OSL;
+    cfg.serialize_engines = serialize;
+    cfg.admission.rate = 1e9;
+    cfg.admission.burst = 1e9;
+    cfg.admission.max_queue_depth = n * 2;
+    server.reconfigure(cfg);
+    server.install_plan(plan).expect("plan must install");
+
+    let reqs: Vec<ChatRequest> = (0..n as u64)
+        .map(|i| {
+            let byte = b'a' + (i % 23) as u8;
+            ChatRequest::new(i, vec![byte; ISL], OSL).with_agent(plan.agent.as_str())
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let responses = server.run_workload(reqs).expect("serve must not error");
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Zero drops, no duplicates, everything succeeded.
+    assert_eq!(responses.len(), n, "dropped responses");
+    let mut ids = HashSet::with_capacity(n);
+    for r in &responses {
+        assert!(
+            r.is_ok(),
+            "request {} not ok: rejected={} error={:?}",
+            r.id,
+            r.rejected,
+            r.error
+        );
+        assert!(ids.insert(r.id), "duplicate response {}", r.id);
+    }
+    wall
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    eprintln!("stress_serve drives the synthetic engine: build without --features pjrt");
+    std::process::exit(2);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    let n = env_or("STRESS_REQUESTS", 10_000.0) as usize;
+    let min_speedup = env_or("STRESS_MIN_SPEEDUP", 1.5);
+    let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
+
+    // Warm-up: fault in lazily-initialised state on both paths.
+    run_mode(&plan, (n / 20).max(64), false);
+    run_mode(&plan, (n / 20).max(64), true);
+
+    let serial_s = run_mode(&plan, n, true);
+    let threaded_s = run_mode(&plan, n, false);
+
+    let serial_rps = n as f64 / serial_s.max(1e-9);
+    let live_rps = n as f64 / threaded_s.max(1e-9);
+    let speedup = live_rps / serial_rps.max(1e-9);
+
+    println!("stress_serve: {n} requests on `{}`", plan.agent);
+    println!("  serialized dispatch : {serial_rps:10.1} req/s ({serial_s:.2}s)");
+    println!("  threaded dispatch   : {live_rps:10.1} req/s ({threaded_s:.2}s)");
+    println!("  speedup             : {speedup:.2}x (gate: {min_speedup}x)");
+
+    let report = jobj! {
+        "requests" => n,
+        "serialized_requests_per_s" => serial_rps,
+        "live_requests_per_s" => live_rps,
+        "threaded_speedup" => speedup,
+        "min_speedup" => min_speedup,
+    };
+    std::fs::write("BENCH_live_serve.json", report.pretty())
+        .expect("write BENCH_live_serve.json");
+
+    if min_speedup > 0.0 && speedup < min_speedup {
+        eprintln!(
+            "FAIL: threaded dispatch {speedup:.2}x < required {min_speedup}x \
+             over the serialized baseline"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS");
+}
