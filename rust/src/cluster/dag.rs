@@ -38,6 +38,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use super::sim::{PipelineSpec, SimReport};
 use super::trace::Request;
@@ -45,6 +46,7 @@ use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency};
 use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::obs::trace::{classify_host_op, Span, SpanKind, TraceSink};
 use crate::plan::instance::{edge_payload_bytes, DagTopology};
 use crate::plan::{ExecutionPlan, Role, SlaSpec, Stage};
 use crate::transport::fabric::TransferClock;
@@ -63,7 +65,9 @@ enum Ev {
     /// Request hits the front door; its root nodes become ready.
     Arrival(usize),
     /// One incoming dependency of `job` is satisfied (post-transfer).
-    DepArrived(Job),
+    /// `from` is the completed upstream node — the last one to arrive
+    /// becomes the job's gating edge (`Span::parent`).
+    DepArrived { job: Job, from: usize },
     /// CPU-pool stage finished.
     CpuDone(Job),
     /// Prefill batch `batch` on pipeline `pipe` finished.
@@ -239,6 +243,12 @@ struct RunState {
     remaining: Vec<u32>,
     /// Dispatch-ready time per flat job index (sojourn accounting).
     ready_s: Vec<f64>,
+    /// Execution-start time per flat job index (NaN until started) —
+    /// `Span::t_start`, with `start - ready` as the queue wait.
+    start_s: Vec<f64>,
+    /// Last-arriving dependency node per flat job index (-1 for roots)
+    /// — the gating edge recorded as `Span::parent`.
+    dep_from: Vec<i64>,
     /// Per-node sojourn (ready → complete) sums and counts.
     node_lat_sum: Vec<f64>,
     node_lat_n: Vec<u64>,
@@ -352,6 +362,10 @@ pub struct DagSim {
     seq: u64,
     /// Populated by the last completed run (see [`DagSim::last_detail`]).
     detail: Option<DagDetail>,
+    /// When attached, every executed stage, cross-chassis transfer, and
+    /// request envelope is emitted as a [`Span`] (see `obs::trace`) —
+    /// the same schema the live server records.
+    trace_sink: Option<Arc<TraceSink>>,
 }
 
 /// Shape identity of a pipeline (fleet changes match by shape). Must
@@ -419,12 +433,26 @@ impl DagSim {
             heap: BinaryHeap::new(),
             seq: 0,
             detail: None,
+            trace_sink: None,
         })
     }
 
     /// Per-stage detail of the last completed run (None before any).
     pub fn last_detail(&self) -> Option<&DagDetail> {
         self.detail.as_ref()
+    }
+
+    /// Attach a span recorder: subsequent runs emit every executed
+    /// stage, KV transfer, and request envelope into it.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) {
+        self.trace_sink = Some(sink);
+    }
+
+    #[inline]
+    fn emit(&self, span: Span) {
+        if let Some(s) = &self.trace_sink {
+            s.record(span);
+        }
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
@@ -468,6 +496,9 @@ impl DagSim {
             let take = (p.spec.max_batch as usize).min(p.queue.len());
             p.queue.drain(..take).collect()
         };
+        for j in &batch {
+            st.start_s[self.flat(*j)] = now;
+        }
         // Batch prefill time at the longest (token-fraction-scaled)
         // prompt in the batch.
         let isl = batch
@@ -496,19 +527,33 @@ impl DagSim {
     /// Schedule a decode round on pipe `di` if needed.
     fn maybe_schedule_round(&mut self, st: &mut RunState, di: usize, now: f64) {
         let model = self.model.as_ref().expect("LLM job without model");
-        {
+        let admitted: Vec<Job> = {
             let d = &mut st.decode[di];
             if d.round_scheduled {
                 return;
             }
+            let mut admitted = Vec::new();
             while d.active.len() < d.spec.max_batch as usize {
                 match d.waiting.pop_front() {
-                    Some(j) => d.active.push(j),
+                    Some(j) => {
+                        d.active.push(j);
+                        admitted.push(j);
+                    }
                     None => break,
                 }
             }
             if d.active.is_empty() {
                 return;
+            }
+            admitted
+        };
+        // First admission starts the decode span; a KV-migrated session
+        // re-admitted elsewhere keeps its original start (its span
+        // covers the migration gap).
+        for j in admitted {
+            let fi = self.flat(j);
+            if st.start_s[fi].is_nan() {
+                st.start_s[fi] = now;
             }
         }
         let ctx: u64 = st.decode[di]
@@ -566,6 +611,7 @@ impl DagSim {
                 if st.cpu_busy < st.cpu_workers {
                     st.cpu_busy += 1;
                     st.cpu_busy_time += service;
+                    st.start_s[self.flat(job)] = now;
                     self.push(now + service, Ev::CpuDone(job));
                 } else {
                     st.cpu_queue.push_back((job, service));
@@ -623,6 +669,48 @@ impl DagSim {
         let fi = self.flat(job);
         st.node_lat_sum[job.node] += now - st.ready_s[fi];
         st.node_lat_n[job.node] += 1;
+        if self.trace_sink.is_some() {
+            let binding = &self.plan.bindings[job.node];
+            let start = if st.start_s[fi].is_nan() {
+                st.ready_s[fi]
+            } else {
+                st.start_s[fi]
+            };
+            let (kind, group, chassis) = match binding.stage {
+                Stage::Cpu => (classify_host_op(&binding.op), "host".to_string(), 0),
+                Stage::LlmPrefill => {
+                    let k = match st.pipe_of[fi] {
+                        Some((Role::Prefill, k)) => k,
+                        _ => unreachable!("prefill job completed without a pipe"),
+                    };
+                    let spec = &st.prefill[k].spec;
+                    (
+                        SpanKind::Prefill,
+                        group_key(Role::Prefill, spec),
+                        spec.chassis,
+                    )
+                }
+                Stage::LlmDecode => {
+                    let k = match st.pipe_of[fi] {
+                        Some((Role::Decode, k)) => k,
+                        _ => unreachable!("decode job completed without a pipe"),
+                    };
+                    let spec = &st.decode[k].spec;
+                    (SpanKind::Decode, group_key(Role::Decode, spec), spec.chassis)
+                }
+            };
+            self.emit(Span {
+                request: job.req as u64,
+                node: job.node as i64,
+                kind,
+                group,
+                chassis,
+                t_start: start,
+                t_end: now,
+                parent: st.dep_from[fi],
+                queue_wait: (start - st.ready_s[fi]).max(0.0),
+            });
+        }
         st.nodes_left[job.req] -= 1;
         if st.nodes_left[job.req] == 0 {
             st.done_s[job.req] = now;
@@ -632,6 +720,19 @@ impl DagSim {
             if self.sla_s.map_or(true, |s| e2e <= s) {
                 st.win_sla_ok += 1;
             }
+            // Request envelope: submit → final completion. The sim has
+            // no admission gate, so the envelope's queue_wait is 0.
+            self.emit(Span {
+                request: job.req as u64,
+                node: -1,
+                kind: SpanKind::Request,
+                group: String::new(),
+                chassis: 0,
+                t_start: trace[job.req].arrive_s,
+                t_end: now,
+                parent: -1,
+                queue_wait: 0.0,
+            });
         }
         let from_chassis = self.chassis_of(st, job);
         let from_stage = self.plan.bindings[job.node].stage;
@@ -677,9 +778,32 @@ impl DagSim {
                     );
                     st.kv_bytes_moved += bytes;
                     arrive = self.clock.transfer(from_ch, to_chassis, bytes, now)?;
+                    if self.trace_sink.is_some() {
+                        let group = match choice {
+                            (Role::Prefill, k) => group_key(Role::Prefill, &st.prefill[k].spec),
+                            (Role::Decode, k) => group_key(Role::Decode, &st.decode[k].spec),
+                        };
+                        self.emit(Span {
+                            request: job.req as u64,
+                            node: s as i64,
+                            kind: SpanKind::KvTransfer,
+                            group,
+                            chassis: to_chassis,
+                            t_start: now,
+                            t_end: arrive,
+                            parent: job.node as i64,
+                            queue_wait: 0.0,
+                        });
+                    }
                 }
             }
-            self.push(arrive, Ev::DepArrived(succ_job));
+            self.push(
+                arrive,
+                Ev::DepArrived {
+                    job: succ_job,
+                    from: job.node,
+                },
+            );
         }
         Ok(())
     }
@@ -1023,7 +1147,24 @@ impl DagSim {
                 None => 0.0,
             };
             let arrive = if bytes > 0.0 && from_ch != to_ch {
-                self.clock.transfer(from_ch, to_ch, bytes, now)?
+                let arrive = self.clock.transfer(from_ch, to_ch, bytes, now)?;
+                // Mid-decode KV migration: keyed to the job's own node
+                // as both span node and parent (it is not a dependency
+                // edge — the decode span it interrupts covers the gap).
+                if self.trace_sink.is_some() {
+                    self.emit(Span {
+                        request: job.req as u64,
+                        node: job.node as i64,
+                        kind: SpanKind::KvTransfer,
+                        group: group_key(Role::Decode, &st.decode[di].spec),
+                        chassis: to_ch,
+                        t_start: now,
+                        t_end: arrive,
+                        parent: job.node as i64,
+                        queue_wait: 0.0,
+                    });
+                }
+                arrive
             } else {
                 now
             };
@@ -1046,6 +1187,7 @@ impl DagSim {
                     Some((job, service)) => {
                         st.cpu_busy += 1;
                         st.cpu_busy_time += service;
+                        st.start_s[self.flat(job)] = now;
                         self.push(now + service, Ev::CpuDone(job));
                     }
                     None => break,
@@ -1124,6 +1266,8 @@ impl DagSim {
                 .flat_map(|_| self.indeg.iter().copied())
                 .collect(),
             ready_s: vec![0.0; n_req * n_nodes],
+            start_s: vec![f64::NAN; n_req * n_nodes],
+            dep_from: vec![-1; n_req * n_nodes],
             node_lat_sum: vec![0.0; n_nodes],
             node_lat_n: vec![0; n_nodes],
             host_jobs: 0,
@@ -1189,8 +1333,11 @@ impl DagSim {
                         }
                     }
                 }
-                Ev::DepArrived(job) => {
+                Ev::DepArrived { job, from } => {
                     let fi = self.flat(job);
+                    // Deps arrive in time order, so the value standing
+                    // when the count hits zero is the gating edge.
+                    st.dep_from[fi] = from as i64;
                     st.remaining[fi] -= 1;
                     if st.remaining[fi] == 0 {
                         self.dispatch(&mut st, job, t);
@@ -1207,6 +1354,7 @@ impl DagSim {
                             Some((next, service)) => {
                                 st.cpu_busy += 1;
                                 st.cpu_busy_time += service;
+                                st.start_s[self.flat(next)] = t;
                                 self.push(t + service, Ev::CpuDone(next));
                             }
                             None => break,

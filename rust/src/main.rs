@@ -8,8 +8,15 @@
 //! agentic-hetero serve [--config FILE] [--plan PLAN.json] [--requests N] [--max-new N]
 //! agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3]
 //!                        [--model 8b-fp16] [--rate R] [--requests N]
+//! agentic-hetero trace-report TRACE.json                print SLA attribution of a trace
 //! agentic-hetero help
 //! ```
+//!
+//! `serve`, `simulate --plan`, and `orchestrate` all accept
+//! `--trace-out FILE`: span tracing is enabled for the run and the
+//! spans are written as Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing` loadable). `trace-report` re-reads such a file
+//! and prints the critical-path SLA attribution table.
 
 use agentic_hetero::agents;
 use agentic_hetero::cluster::sim::{pair_placement, simulate_plan, ClusterSim};
@@ -20,6 +27,8 @@ use agentic_hetero::cost::model_profile::by_short_name;
 use agentic_hetero::cost::roofline::Parallelism;
 use agentic_hetero::ir::passes::PassManager;
 use agentic_hetero::ir::printer;
+use agentic_hetero::obs::critical_path::attribute_all;
+use agentic_hetero::obs::trace::{spans_from_chrome_json, to_chrome_json, TraceSink};
 use agentic_hetero::opt::assignment::Sla;
 use agentic_hetero::orchestrator::{Executor, Orchestrator, OrchestratorConfig, SimExecutor};
 use agentic_hetero::plan::{ExecutionPlan, PlanDiff};
@@ -53,6 +62,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "orchestrate" => cmd_orchestrate(&args),
+        "trace-report" => cmd_trace_report(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             0
@@ -77,12 +87,15 @@ USAGE:
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
   agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
                           [--requests N] [--max-new N] [--synthetic]
+                          [--trace-out TRACE.json]
   agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
                           [--rate R] [--requests N] [--voice]
+                          [--trace-out TRACE.json]
   agentic-hetero orchestrate [--plan PLAN.json | --agent voice | --fleet mixed]
                           [--trace bursty|steady|voice] [--old A100] [--new H100]
                           [--rate R] [--requests N] [--window S] [--config FILE]
-                          [--out TIMELINE.json]
+                          [--out TIMELINE.json] [--trace-out TRACE.json]
+  agentic-hetero trace-report TRACE.json
 
 The `plan` command emits a serializable ExecutionPlan; `simulate --plan`
 replays it through the agent-DAG cluster simulator, `serve --plan`
@@ -96,7 +109,68 @@ apply) against a traced load swing, emitting a replayable timeline.
 across --new and --old hardware), rebalances load between the
 generations group-by-group, and closes with the paper's TCO comparison
 against the newest-homogeneous fleet of equal decode capacity.
+
+`--trace-out FILE` (on serve, simulate --plan, orchestrate) records
+every request's spans — host/tool stages, prefill, decode, KV
+transfers, the request envelope — and writes Chrome trace-event JSON
+loadable in Perfetto. `trace-report FILE` replays such a trace through
+the critical-path analyzer and prints the per-group SLA attribution
+table (queue / prefill / decode / kv_transfer / host / tool_io).
 ";
+
+/// Write a recorded trace as Chrome trace-event JSON. Returns `false`
+/// (after printing the error) when the file cannot be written.
+fn write_trace_file(sink: &TraceSink, path: &str) -> bool {
+    let spans = sink.spans();
+    let doc = to_chrome_json(&spans);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => {
+            eprintln!("wrote {path} ({} spans)", spans.len());
+            true
+        }
+        Err(e) => {
+            eprintln!("write {path}: {e}");
+            false
+        }
+    }
+}
+
+/// `trace-report TRACE.json` — re-read a `--trace-out` file (from
+/// either backend; the span schema is shared) and print the
+/// critical-path SLA attribution table.
+fn cmd_trace_report(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: agentic-hetero trace-report TRACE.json");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace {path}: {e}");
+            return 1;
+        }
+    };
+    let doc = match Json::parse(&src) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("trace {path}: {e}");
+            return 1;
+        }
+    };
+    let spans = match spans_from_chrome_json(&doc) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace {path}: {e}");
+            return 1;
+        }
+    };
+    if spans.is_empty() {
+        println!("{path}: no spans recorded");
+        return 0;
+    }
+    print!("{}", attribute_all(&spans).table());
+    0
+}
 
 fn cmd_repro(args: &Args) -> i32 {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
@@ -362,6 +436,14 @@ fn cmd_serve(args: &Args) -> i32 {
             None,
         ),
     };
+    // `--trace-out FILE`: record spans during the run (agent-DAG
+    // requests only — flat serving has no DAG dispatcher to trace) and
+    // export them as Chrome trace-event JSON afterwards.
+    let trace_out = args.get("trace-out");
+    let trace_sink = trace_out.map(|_| TraceSink::new());
+    if let Some(sink) = &trace_sink {
+        server.set_trace_sink(std::sync::Arc::clone(sink));
+    }
     let prompts = [
         "the paper describes ",
         "heterogeneous systems ",
@@ -411,6 +493,11 @@ fn cmd_serve(args: &Args) -> i32 {
                 host * 100.0
             );
             println!("\nmetrics:\n{}", server.metrics.report());
+            if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
+                if !write_trace_file(sink, path) {
+                    return 1;
+                }
+            }
             0
         }
         Err(e) => {
@@ -447,10 +534,25 @@ fn cmd_simulate(args: &Args) -> i32 {
         } else {
             agentic_hetero::cluster::trace::generate(&tc)
         };
-        return match simulate_plan(&plan, &trace) {
+        // Inline DagSim (rather than `simulate_plan`) so `--trace-out`
+        // can attach a span sink before the run.
+        let trace_out = args.get("trace-out");
+        let trace_sink = trace_out.map(|_| TraceSink::new());
+        let report = agentic_hetero::cluster::dag::DagSim::new(&plan).and_then(|mut sim| {
+            if let Some(sink) = &trace_sink {
+                sim.set_trace_sink(std::sync::Arc::clone(sink));
+            }
+            sim.run(&trace)
+        });
+        return match report {
             Ok(report) => {
                 println!("{}", plan.summary());
                 println!("{}", report.summary());
+                if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
+                    if !write_trace_file(sink, path) {
+                        return 1;
+                    }
+                }
                 0
             }
             Err(e) => {
@@ -458,6 +560,11 @@ fn cmd_simulate(args: &Args) -> i32 {
                 1
             }
         };
+    }
+
+    if args.get("trace-out").is_some() {
+        eprintln!("--trace-out requires --plan (the flat pair simulator has no span tracing)");
+        return 2;
     }
 
     let prefill = args.get_or("prefill", "H100");
@@ -637,6 +744,13 @@ fn cmd_orchestrate(args: &Args) -> i32 {
     let metrics = orch.metrics.clone();
 
     let mut exec = SimExecutor::new(&trace);
+    // `--trace-out FILE`: span-trace the simulated run; window
+    // attribution lands in the timeline and `orch_attr_*` gauges.
+    let trace_out = args.get("trace-out");
+    let trace_sink = trace_out.map(|_| TraceSink::new());
+    if let Some(sink) = &trace_sink {
+        exec.trace_sink = Some(std::sync::Arc::clone(sink));
+    }
     match exec.orchestrate(orch) {
         Ok(timeline) => {
             println!("{}", timeline.summary());
@@ -690,6 +804,13 @@ fn cmd_orchestrate(args: &Args) -> i32 {
                         }
                         Err(e) => eprintln!("homogeneous comparison failed: {e}"),
                     }
+                }
+            }
+            if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
+                println!("\nSLA attribution (critical path):");
+                print!("{}", attribute_all(&sink.spans()).table());
+                if !write_trace_file(sink, path) {
+                    return 1;
                 }
             }
             if let Some(path) = args.get("out") {

@@ -1,0 +1,499 @@
+//! Critical-path SLA attribution over [`Span`] trees.
+//!
+//! For each request, walk the span DAG backwards from the
+//! last-finishing execution span along `parent` edges (each span names
+//! the dependency that gated it — the last-arriving input), and charge
+//! every second of end-to-end latency to one of six buckets:
+//!
+//! `queue` · `prefill` · `decode` · `kv_transfer` · `host` · `tool_io`
+//!
+//! Execution time goes to the span's kind, recorded queue waits and any
+//! *unspanned* residual gaps on the critical path go to `queue`, so the
+//! buckets always sum to the request's e2e latency exactly. The
+//! `coverage` figure reports how much of that total was **explicitly
+//! measured** (execution + transfers + recorded waits) rather than
+//! inferred residual — the honest number behind "attribution sums to
+//! ≥95% of e2e".
+//!
+//! Aggregation is per window ([`attribute_windows`] aligns to the
+//! orchestrator's observation windows by request completion time) and
+//! per pipeline group, which is what turns a trace into the
+//! measured-work signal the `GroupScaler` wants: "what fraction of p95
+//! was fabric contention on the old-generation chassis" is a lookup in
+//! [`SlaAttribution::by_group`].
+
+use std::collections::BTreeMap;
+
+use super::trace::{Span, SpanKind};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// The six attribution buckets, in reporting order.
+pub const BUCKETS: [&str; 6] = [
+    "queue",
+    "prefill",
+    "decode",
+    "kv_transfer",
+    "host",
+    "tool_io",
+];
+
+fn bucket_of(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Prefill => "prefill",
+        SpanKind::Decode => "decode",
+        SpanKind::KvTransfer => "kv_transfer",
+        SpanKind::Host => "host",
+        SpanKind::ToolIo => "tool_io",
+        SpanKind::Request => "queue", // envelope time itself is never charged here
+    }
+}
+
+/// Latency attribution aggregated over one window of completed
+/// requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlaAttribution {
+    /// Window bounds (modeled seconds); requests are assigned by
+    /// completion time.
+    pub t0: f64,
+    pub t1: f64,
+    /// Completed requests attributed in this window.
+    pub requests: u64,
+    /// Sum of per-request e2e latencies (== sum over all buckets).
+    pub e2e_total_s: f64,
+    /// Fraction of `e2e_total_s` that was explicitly measured (span
+    /// execution + transfers + recorded queue waits) rather than
+    /// residual gap.
+    pub coverage: f64,
+    /// Worst per-request explicit coverage in the window.
+    pub min_request_coverage: f64,
+    /// Seconds per bucket, summed over requests.
+    pub by_bucket: BTreeMap<String, f64>,
+    /// Seconds per bucket per pipeline group (`"host"` for host-pool
+    /// stages).
+    pub by_group: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+impl SlaAttribution {
+    fn empty(t0: f64, t1: f64) -> SlaAttribution {
+        SlaAttribution {
+            t0,
+            t1,
+            requests: 0,
+            e2e_total_s: 0.0,
+            coverage: 1.0,
+            min_request_coverage: 1.0,
+            by_bucket: BTreeMap::new(),
+            by_group: BTreeMap::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let bucket_obj = |m: &BTreeMap<String, f64>| {
+            let mut o = Json::obj();
+            for (k, v) in m {
+                let _ = o.try_set(k, *v);
+            }
+            o
+        };
+        let mut groups = Json::obj();
+        for (g, m) in &self.by_group {
+            let _ = groups.try_set(g, bucket_obj(m));
+        }
+        crate::jobj! {
+            "t0" => self.t0,
+            "t1" => self.t1,
+            "requests" => self.requests,
+            "e2e_total_s" => self.e2e_total_s,
+            "coverage" => self.coverage,
+            "min_request_coverage" => self.min_request_coverage,
+            "by_bucket" => bucket_obj(&self.by_bucket),
+            "by_group" => groups,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<SlaAttribution> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| Error::Runtime(format!("attribution missing `{k}`")))
+        };
+        let buckets_of = |v: &Json| -> BTreeMap<String, f64> {
+            match v {
+                Json::Obj(m) => m
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect(),
+                _ => BTreeMap::new(),
+            }
+        };
+        let mut by_group = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("by_group") {
+            for (g, v) in m {
+                by_group.insert(g.clone(), buckets_of(v));
+            }
+        }
+        Ok(SlaAttribution {
+            t0: f("t0")?,
+            t1: f("t1")?,
+            requests: f("requests")? as u64,
+            e2e_total_s: f("e2e_total_s")?,
+            coverage: f("coverage")?,
+            min_request_coverage: f("min_request_coverage")?,
+            by_bucket: j.get("by_bucket").map(buckets_of).unwrap_or_default(),
+            by_group,
+        })
+    }
+
+    /// Seconds charged to `bucket` (0 when absent).
+    pub fn bucket_s(&self, bucket: &str) -> f64 {
+        self.by_bucket.get(bucket).copied().unwrap_or(0.0)
+    }
+
+    /// Render the aggregate attribution table (the `trace-report`
+    /// output): one row per group plus a totals row, with per-bucket
+    /// seconds and the share of total e2e.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} requests, e2e total {:.3}s, explicit coverage {:.1}% \
+             (worst request {:.1}%)\n",
+            self.requests,
+            self.e2e_total_s,
+            self.coverage * 100.0,
+            self.min_request_coverage * 100.0
+        ));
+        out.push_str(&format!("{:<34}", "group"));
+        for b in BUCKETS {
+            out.push_str(&format!(" {b:>12}"));
+        }
+        out.push_str(&format!(" {:>12}\n", "total"));
+        let mut row = |name: &str, m: &BTreeMap<String, f64>| {
+            out.push_str(&format!("{name:<34}"));
+            let mut total = 0.0;
+            for b in BUCKETS {
+                let v = m.get(b).copied().unwrap_or(0.0);
+                total += v;
+                out.push_str(&format!(" {:>11.3}s", v));
+            }
+            out.push_str(&format!(" {total:>11.3}s\n"));
+        };
+        for (g, m) in &self.by_group {
+            let name = if g.is_empty() { "(admission)" } else { g.as_str() };
+            row(name, m);
+        }
+        row("TOTAL", &self.by_bucket);
+        if self.e2e_total_s > 0.0 {
+            out.push_str(&format!("{:<34}", "share of e2e"));
+            for b in BUCKETS {
+                out.push_str(&format!(
+                    " {:>11.1}%",
+                    self.bucket_s(b) / self.e2e_total_s * 100.0
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One request's walked critical path.
+struct RequestWalk {
+    e2e: f64,
+    explicit: f64,
+    /// (group, bucket, seconds)
+    contributions: Vec<(String, &'static str, f64)>,
+}
+
+/// Walk one request's spans. `spans` must all share the same request
+/// id. Returns `None` when the request has no spans at all.
+fn walk_request(spans: &[&Span]) -> Option<RequestWalk> {
+    let envelope = spans.iter().find(|s| s.kind == SpanKind::Request);
+    // Execution spans by node; KV transfers by (destination, source).
+    let mut exec: BTreeMap<i64, &Span> = BTreeMap::new();
+    let mut kv: BTreeMap<(i64, i64), &Span> = BTreeMap::new();
+    for s in spans {
+        match s.kind {
+            SpanKind::Request => {}
+            SpanKind::KvTransfer => {
+                kv.insert((s.node, s.parent), s);
+            }
+            _ => {
+                // Keep the latest-finishing span per node (decode
+                // rounds fold into one span already, but be defensive).
+                exec.entry(s.node)
+                    .and_modify(|e| {
+                        if s.t_end > e.t_end {
+                            *e = s;
+                        }
+                    })
+                    .or_insert(s);
+            }
+        }
+    }
+    let (r_start, r_end, admission) = match envelope {
+        Some(e) => (e.t_start, e.t_end, e.queue_wait.max(0.0)),
+        None => {
+            let lo = spans
+                .iter()
+                .map(|s| s.t_start - s.queue_wait)
+                .fold(f64::INFINITY, f64::min);
+            let hi = spans.iter().map(|s| s.t_end).fold(0.0f64, f64::max);
+            if !lo.is_finite() {
+                return None;
+            }
+            (lo, hi, 0.0)
+        }
+    };
+    let e2e = (r_end - r_start).max(0.0);
+    let mut contributions: Vec<(String, &'static str, f64)> = Vec::new();
+    let mut explicit = 0.0;
+
+    let Some(last) = exec.values().max_by(|a, b| a.t_end.total_cmp(&b.t_end)) else {
+        // No execution spans: the whole request is unexplained queue.
+        contributions.push((String::new(), "queue", e2e));
+        return Some(RequestWalk {
+            e2e,
+            explicit: 0.0,
+            contributions,
+        });
+    };
+
+    // Tail gap: completion bookkeeping after the last span.
+    let tail = (r_end - last.t_end).max(0.0);
+    if tail > 0.0 {
+        contributions.push((last.group.clone(), "queue", tail));
+    }
+
+    let mut cur = *last;
+    let mut visited: std::collections::BTreeSet<i64> = std::collections::BTreeSet::new();
+    loop {
+        if !visited.insert(cur.node) {
+            break; // malformed parent cycle: stop, residual covers it
+        }
+        let dur = cur.duration_s();
+        contributions.push((cur.group.clone(), bucket_of(cur.kind), dur));
+        explicit += dur;
+        let wait = cur.queue_wait.max(0.0);
+        if wait > 0.0 {
+            contributions.push((cur.group.clone(), "queue", wait));
+            explicit += wait;
+        }
+        // When this span became ready/enqueued.
+        let mut cursor = cur.t_start - wait;
+        if cur.parent < 0 {
+            // Root: admission wait, then any unexplained lead-in gap.
+            if admission > 0.0 {
+                contributions.push((String::new(), "queue", admission));
+                explicit += admission;
+            }
+            let gap = (cursor - r_start - admission).max(0.0);
+            if gap > 0.0 {
+                contributions.push((cur.group.clone(), "queue", gap));
+            }
+            break;
+        }
+        // A fabric transfer may have delivered the gating input.
+        if let Some(t) = kv.get(&(cur.node, cur.parent)) {
+            let gap = (cursor - t.t_end).max(0.0);
+            if gap > 0.0 {
+                contributions.push((cur.group.clone(), "queue", gap));
+            }
+            let tdur = t.duration_s();
+            contributions.push((t.group.clone(), "kv_transfer", tdur));
+            explicit += tdur;
+            cursor = t.t_start;
+        }
+        let Some(parent) = exec.get(&cur.parent) else {
+            // Parent span missing (e.g. truncated trace): charge the
+            // remaining lead-in to queue and stop.
+            let gap = (cursor - r_start).max(0.0);
+            if gap > 0.0 {
+                contributions.push((cur.group.clone(), "queue", gap));
+            }
+            break;
+        };
+        let gap = (cursor - parent.t_end).max(0.0);
+        if gap > 0.0 {
+            contributions.push((cur.group.clone(), "queue", gap));
+        }
+        cur = parent;
+    }
+
+    // Normalize: float drift and overlapping parallel paths can make
+    // the walked total differ slightly from e2e; scale the bucket sums
+    // so they add to e2e exactly (the walk is a single chain, so this
+    // is a no-op in the common case).
+    let total: f64 = contributions.iter().map(|(_, _, s)| s).sum();
+    if total > 0.0 && e2e > 0.0 && (total - e2e).abs() > 1e-9 {
+        let scale = e2e / total;
+        for c in &mut contributions {
+            c.2 *= scale;
+        }
+        explicit *= scale;
+    }
+    Some(RequestWalk {
+        e2e,
+        explicit,
+        contributions,
+    })
+}
+
+/// Attribute every request whose completion lands in `[t0, t1)`.
+pub fn attribute(spans: &[Span], t0: f64, t1: f64) -> SlaAttribution {
+    let mut by_req: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    for s in spans {
+        by_req.entry(s.request).or_default().push(s);
+    }
+    let mut out = SlaAttribution::empty(t0, t1);
+    let mut explicit_total = 0.0;
+    for (_, req_spans) in by_req {
+        let end = req_spans
+            .iter()
+            .find(|s| s.kind == SpanKind::Request)
+            .map(|s| s.t_end)
+            .unwrap_or_else(|| req_spans.iter().map(|s| s.t_end).fold(0.0f64, f64::max));
+        if end < t0 || end >= t1 {
+            continue;
+        }
+        let Some(walk) = walk_request(&req_spans) else {
+            continue;
+        };
+        out.requests += 1;
+        out.e2e_total_s += walk.e2e;
+        explicit_total += walk.explicit;
+        let req_cov = if walk.e2e > 0.0 {
+            (walk.explicit / walk.e2e).min(1.0)
+        } else {
+            1.0
+        };
+        out.min_request_coverage = out.min_request_coverage.min(req_cov);
+        for (group, bucket, secs) in walk.contributions {
+            *out.by_bucket.entry(bucket.to_string()).or_insert(0.0) += secs;
+            *out
+                .by_group
+                .entry(group)
+                .or_default()
+                .entry(bucket.to_string())
+                .or_insert(0.0) += secs;
+        }
+    }
+    out.coverage = if out.e2e_total_s > 0.0 {
+        (explicit_total / out.e2e_total_s).min(1.0)
+    } else {
+        1.0
+    };
+    out
+}
+
+/// Attribute the whole trace as one window.
+pub fn attribute_all(spans: &[Span]) -> SlaAttribution {
+    attribute(spans, f64::NEG_INFINITY, f64::INFINITY)
+}
+
+/// Attribute per observation window (aligned with the autoscaler's
+/// windows by request **completion** time, matching how
+/// `WindowStats.completed` counts them).
+pub fn attribute_windows(spans: &[Span], windows: &[(f64, f64)]) -> Vec<SlaAttribution> {
+    windows
+        .iter()
+        .map(|&(t0, t1)| attribute(spans, t0, t1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        request: u64,
+        node: i64,
+        kind: SpanKind,
+        group: &str,
+        t_start: f64,
+        t_end: f64,
+        parent: i64,
+        queue_wait: f64,
+    ) -> Span {
+        Span {
+            request,
+            node,
+            kind,
+            group: group.into(),
+            chassis: 0,
+            t_start,
+            t_end,
+            parent,
+            queue_wait,
+        }
+    }
+
+    /// One request: admission 0.05, host 0.1 (root), queued 0.05 before
+    /// prefill 0.2, kv hop 0.3, decode 0.25, tail 0.05.
+    fn chain() -> Vec<Span> {
+        vec![
+            span(7, -1, SpanKind::Request, "", 0.0, 1.0, -1, 0.05),
+            span(7, 0, SpanKind::Host, "host", 0.05, 0.15, -1, 0.0),
+            span(7, 1, SpanKind::Prefill, "pre", 0.2, 0.4, 0, 0.05),
+            span(7, 2, SpanKind::KvTransfer, "dec", 0.4, 0.7, 1, 0.0),
+            span(7, 2, SpanKind::Decode, "dec", 0.7, 0.95, 1, 0.0),
+        ]
+    }
+
+    #[test]
+    fn buckets_sum_to_e2e_and_coverage_is_explicit() {
+        let a = attribute_all(&chain());
+        assert_eq!(a.requests, 1);
+        assert!((a.e2e_total_s - 1.0).abs() < 1e-9);
+        let sum: f64 = a.by_bucket.values().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "buckets must sum to e2e: {sum}");
+        assert!((a.bucket_s("host") - 0.1).abs() < 1e-9);
+        assert!((a.bucket_s("prefill") - 0.2).abs() < 1e-9);
+        assert!((a.bucket_s("kv_transfer") - 0.3).abs() < 1e-9);
+        assert!((a.bucket_s("decode") - 0.25).abs() < 1e-9);
+        // queue = admission 0.05 + recorded wait 0.05 + tail 0.05 = 0.15
+        assert!((a.bucket_s("queue") - 0.15).abs() < 1e-9);
+        // Only the 0.05 tail gap is residual: coverage 95%.
+        assert!((a.coverage - 0.95).abs() < 1e-9, "{}", a.coverage);
+        assert!((a.min_request_coverage - 0.95).abs() < 1e-9);
+        // Group split: the hop is charged to the decode group.
+        assert!((a.by_group["dec"]["kv_transfer"] - 0.3).abs() < 1e-9);
+        assert!((a.by_group["pre"]["prefill"] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windows_assign_by_completion_time() {
+        let mut spans = chain();
+        let mut late = chain();
+        for s in &mut late {
+            s.request = 8;
+            s.t_start += 2.0;
+            s.t_end += 2.0;
+        }
+        spans.extend(late);
+        let ws = attribute_windows(&spans, &[(0.0, 2.0), (2.0, 4.0)]);
+        assert_eq!(ws[0].requests, 1);
+        assert_eq!(ws[1].requests, 1);
+        assert!((ws[1].e2e_total_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribution_json_round_trips() {
+        let a = attribute_all(&chain());
+        let j = a.to_json();
+        let back = SlaAttribution::from_json(&j).unwrap();
+        assert_eq!(back, a);
+        // Byte-stable through the writer.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn table_mentions_groups_and_buckets() {
+        let t = attribute_all(&chain()).table();
+        assert!(t.contains("kv_transfer"), "{t}");
+        assert!(t.contains("dec"), "{t}");
+        assert!(t.contains("TOTAL"), "{t}");
+        assert!(t.contains("share of e2e"), "{t}");
+    }
+}

@@ -9,6 +9,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+pub mod critical_path;
+pub mod trace;
+
 /// Monotonic counter.
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
@@ -45,7 +48,9 @@ impl Gauge {
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
-    sum_us: AtomicU64,
+    /// Nanosecond sum: sub-µs samples (fast host stages) accumulate
+    /// instead of truncating to zero.
+    sum_ns: AtomicU64,
     count: AtomicU64,
 }
 
@@ -59,15 +64,19 @@ fn bucket_for(us: f64) -> usize {
     ((us.log10() / 0.2) as usize).min(N_BUCKETS - 1)
 }
 
-fn bucket_upper_us(i: usize) -> f64 {
-    10f64.powf((i + 1) as f64 * 0.2)
+/// Geometric midpoint of bucket `i` (which covers
+/// `[10^(0.2i), 10^(0.2(i+1)))` µs) — an unbiased point estimate for
+/// percentile reporting, unlike the upper bound which always
+/// over-reports by up to 1.585x.
+fn bucket_mid_us(i: usize) -> f64 {
+    10f64.powf((i as f64 + 0.5) * 0.2)
 }
 
 impl Default for Histogram {
     fn default() -> Self {
         Histogram {
             buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            sum_us: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
         }
     }
@@ -77,7 +86,9 @@ impl Histogram {
     pub fn record_secs(&self, secs: f64) {
         let us = secs * 1e6;
         self.buckets[bucket_for(us)].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        // u64 nanoseconds: ~584 years of accumulated busy-time headroom.
+        self.sum_ns
+            .fetch_add((secs * 1e9).round().max(0.0) as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -90,10 +101,11 @@ impl Histogram {
         if c == 0 {
             return 0.0;
         }
-        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
     }
 
-    /// Approximate percentile from bucket boundaries.
+    /// Approximate percentile: the geometric midpoint of the bucket the
+    /// target rank lands in.
     pub fn percentile_secs(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -104,10 +116,10 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return bucket_upper_us(i) / 1e6;
+                return bucket_mid_us(i) / 1e6;
             }
         }
-        bucket_upper_us(N_BUCKETS - 1) / 1e6
+        bucket_mid_us(N_BUCKETS - 1) / 1e6
     }
 }
 
@@ -159,9 +171,11 @@ impl MetricsRegistry {
         self.histogram(&format!("stage_{op}"))
     }
 
-    /// Flat numeric snapshot (counters and gauges, stable ordering) for
-    /// exporters — the orchestrator summarizes a run from this, and the
-    /// CLI prints it next to the timeline.
+    /// Flat numeric snapshot (stable ordering) for exporters — the
+    /// orchestrator summarizes a run from this, and the CLI prints it
+    /// next to the timeline. Histograms contribute summary keys
+    /// (`{name}_count`, `{name}_p50`, `{name}_p95`, seconds) so latency
+    /// percentiles flow into timelines alongside counters/gauges.
     pub fn snapshot(&self) -> BTreeMap<String, f64> {
         let mut out = BTreeMap::new();
         for (k, c) in self.counters.lock().unwrap().iter() {
@@ -169,6 +183,11 @@ impl MetricsRegistry {
         }
         for (k, g) in self.gauges.lock().unwrap().iter() {
             out.insert(k.clone(), g.get());
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.insert(format!("{k}_count"), h.count() as f64);
+            out.insert(format!("{k}_p50"), h.percentile_secs(50.0));
+            out.insert(format!("{k}_p95"), h.percentile_secs(95.0));
         }
         out
     }
@@ -215,11 +234,25 @@ mod tests {
         for i in 1..=1000 {
             h.record_secs(i as f64 * 1e-3); // 1ms .. 1s uniform
         }
+        // The bucket-midpoint estimate sits within one log-bucket
+        // (1.585x) of the true p50 = 0.5s, not biased to the bucket's
+        // upper edge.
         let p50 = h.percentile_secs(50.0);
-        assert!(p50 > 0.2 && p50 < 1.0, "p50={p50}");
+        assert!(p50 > 0.5 / 1.585 && p50 < 0.5 * 1.585, "p50={p50}");
         let p99 = h.percentile_secs(99.0);
         assert!(p99 >= p50);
-        assert!((h.mean_secs() - 0.5).abs() < 0.05);
+        assert!((h.mean_secs() - 0.5005).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_mean_keeps_sub_microsecond_samples() {
+        // 0.4µs samples truncated to 0 under the old µs accumulator;
+        // the ns sum keeps them.
+        let h = Histogram::default();
+        for _ in 0..1000 {
+            h.record_secs(4e-7);
+        }
+        assert!((h.mean_secs() - 4e-7).abs() < 1e-9, "{}", h.mean_secs());
     }
 
     #[test]
@@ -246,11 +279,16 @@ mod tests {
         let r = MetricsRegistry::new();
         r.counter("orch_decisions").add(3);
         r.gauge("orch_decode_util").set(0.75);
-        r.histogram("latency").record_secs(0.01); // histograms excluded
+        r.histogram("latency").record_secs(0.01);
         let s = r.snapshot();
         assert_eq!(s["orch_decisions"], 3.0);
         assert_eq!(s["orch_decode_util"], 0.75);
+        // Histograms surface as flat summary keys, never as a nested
+        // entry under their bare name.
         assert!(!s.contains_key("latency"));
+        assert_eq!(s["latency_count"], 1.0);
+        assert!(s["latency_p50"] > 0.005 && s["latency_p50"] < 0.02);
+        assert!(s["latency_p95"] >= s["latency_p50"]);
     }
 
     #[test]

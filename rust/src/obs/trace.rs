@@ -1,0 +1,412 @@
+//! Unified span tracing: one schema, two backends.
+//!
+//! A [`Span`] is one timed segment of one request — a host/tool stage,
+//! an LLM prefill or decode, a cross-chassis KV transfer, or the
+//! request envelope itself — stamped with the pipeline group and
+//! chassis it ran on, the dependency edge that gated it (`parent`), and
+//! how long it queued before starting (`queue_wait`). The live server
+//! (`server/dag_exec.rs` + friends) records spans in **modeled
+//! seconds** (wall time divided by the time scale), and the DAG
+//! simulator (`cluster/dag.rs`) emits the *same schema* from its event
+//! loop, so `obs/critical_path.rs` and the `trace-report` CLI analyze
+//! either backend's output interchangeably — and a conformance test can
+//! pin that the two span trees match structurally.
+//!
+//! The [`TraceSink`] is lock-light: recording takes one atomic
+//! fetch-add plus a short push under one of a fixed set of shard
+//! mutexes, so engine workers, host-pool workers, and the dispatcher
+//! never serialize on a single lock. When tracing is disabled the sink
+//! is simply absent (`Option<Arc<TraceSink>>`) and [`record_with`]
+//! never runs its closure — the fast path allocates nothing.
+//!
+//! Export is Chrome trace-event JSON ([`to_chrome_json`]), viewable in
+//! Perfetto / `chrome://tracing`: spans become `ph:"X"` complete
+//! events (µs timestamps), pipeline groups become processes (named via
+//! `ph:"M"` metadata events), and requests become threads. The full
+//! span fields ride in `args`, so [`spans_from_chrome_json`] recovers
+//! the exact `Vec<Span>` for offline attribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// What kind of work a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// The request envelope: submit → final completion. `queue_wait`
+    /// holds the admission wait (0 in the simulator, which admits
+    /// instantly at arrival).
+    Request,
+    /// Generic host CPU stage (STT, TTS, pre/post-processing).
+    Host,
+    /// Tool call or IO stage (`tool.*` / `io.*` ops) — split from
+    /// `Host` because agent patterns exist where these dominate.
+    ToolIo,
+    /// LLM prefill execution on a prefill-group engine.
+    Prefill,
+    /// LLM decode execution (all rounds) on a decode-group engine.
+    Decode,
+    /// A cross-chassis transfer on the contended fabric (fused
+    /// prefill→decode KV handoff or a DAG-edge payload).
+    KvTransfer,
+}
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Host => "host",
+            SpanKind::ToolIo => "tool_io",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::KvTransfer => "kv_transfer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "request" => SpanKind::Request,
+            "host" => SpanKind::Host,
+            "tool_io" => SpanKind::ToolIo,
+            "prefill" => SpanKind::Prefill,
+            "decode" => SpanKind::Decode,
+            "kv_transfer" => SpanKind::KvTransfer,
+            _ => return None,
+        })
+    }
+}
+
+/// Classify a host-pool op into its attribution kind: `tool.*` and
+/// `io.*` stages are [`SpanKind::ToolIo`]; everything else that runs on
+/// the host pool is [`SpanKind::Host`]. Both backends use this one
+/// classifier, so the split can never drift between sim and live.
+pub fn classify_host_op(op: &str) -> SpanKind {
+    if op.starts_with("tool.") || op.starts_with("io.") {
+        SpanKind::ToolIo
+    } else {
+        SpanKind::Host
+    }
+}
+
+/// One timed segment of one request. Times are **modeled seconds**
+/// from the run origin in both backends (the live path divides wall
+/// time by its time scale; with `time_scale <= 0` raw wall seconds are
+/// used — relative structure is preserved either way).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Request id.
+    pub request: u64,
+    /// DAG node (binding index) this span executes; `-1` for the
+    /// request envelope. KV-transfer spans carry the *destination*
+    /// node (the one whose input is in flight).
+    pub node: i64,
+    pub kind: SpanKind,
+    /// Pipeline-group shape key (`"decode H100 tp1 pp1 b32"`), `"host"`
+    /// for host-pool stages, `""` for the request envelope.
+    pub group: String,
+    /// Chassis the work ran on (0 for host / envelope spans).
+    pub chassis: u32,
+    /// Execution start (after any queueing), modeled seconds.
+    pub t_start: f64,
+    /// Execution end, modeled seconds.
+    pub t_end: f64,
+    /// The dependency node whose completion gated this span (the
+    /// last-arriving input — the critical-path edge); `-1` for roots
+    /// and the request envelope.
+    pub parent: i64,
+    /// Seconds spent queued before `t_start` (admission wait for the
+    /// envelope, batcher+channel wait for LLM stages, host-pool queue
+    /// for host stages, 0 for transfers — the fabric clock already
+    /// serializes contention into the span itself).
+    pub queue_wait: f64,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        (self.t_end - self.t_start).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::jobj! {
+            "request" => self.request,
+            "node" => self.node,
+            "kind" => self.kind.as_str(),
+            "group" => self.group.as_str(),
+            "chassis" => self.chassis,
+            "t_start" => self.t_start,
+            "t_end" => self.t_end,
+            "parent" => self.parent,
+            "queue_wait" => self.queue_wait,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Span> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| Error::Runtime(format!("span missing numeric `{k}`")))
+        };
+        let kind_s = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Runtime("span missing `kind`".into()))?;
+        Ok(Span {
+            request: f("request")? as u64,
+            node: f("node")? as i64,
+            kind: SpanKind::parse(kind_s)
+                .ok_or_else(|| Error::Runtime(format!("unknown span kind `{kind_s}`")))?,
+            group: j
+                .get("group")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            chassis: f("chassis")? as u32,
+            t_start: f("t_start")?,
+            t_end: f("t_end")?,
+            parent: f("parent")? as i64,
+            queue_wait: f("queue_wait")?,
+        })
+    }
+}
+
+/// Shard count: recording threads (dispatcher + engine workers + host
+/// workers) spread pushes across this many mutexes.
+const SHARDS: usize = 8;
+
+/// Lock-light span recorder shared by every thread of a run. Spans
+/// carry a global sequence number so [`TraceSink::drain`] returns a
+/// deterministic emission order regardless of which shard each landed
+/// in.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    seq: AtomicU64,
+    shards: [Mutex<Vec<(u64, Span)>>; SHARDS],
+}
+
+impl TraceSink {
+    pub fn new() -> Arc<TraceSink> {
+        Arc::new(TraceSink::default())
+    }
+
+    pub fn record(&self, span: Span) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shards[(seq as usize) % SHARDS].lock().unwrap();
+        shard.push((seq, span));
+    }
+
+    /// Spans recorded so far.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove and return every span in emission order.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut all: Vec<(u64, Span)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            all.append(&mut shard.lock().unwrap());
+        }
+        all.sort_by_key(|(seq, _)| *seq);
+        all.into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Copy of every span in emission order (non-destructive).
+    pub fn spans(&self) -> Vec<Span> {
+        let mut all: Vec<(u64, Span)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|(seq, _)| *seq);
+        all.into_iter().map(|(_, s)| s).collect()
+    }
+}
+
+/// Record a span iff tracing is enabled. The closure only runs when a
+/// sink is attached, so the disabled fast path does no allocation and
+/// no formatting work — instrumentation sites stay free when off.
+#[inline]
+pub fn record_with(sink: &Option<Arc<TraceSink>>, make: impl FnOnce() -> Span) {
+    if let Some(s) = sink {
+        s.record(make());
+    }
+}
+
+/// Serialize spans as a Chrome trace-event document (Perfetto /
+/// `chrome://tracing` loadable). Groups map to processes (stable pid
+/// per distinct group name, named with `ph:"M"` metadata records),
+/// requests map to threads, and each span becomes a `ph:"X"` complete
+/// event with µs timestamps. `args` carries the full span fields for
+/// lossless re-import.
+pub fn to_chrome_json(spans: &[Span]) -> Json {
+    use std::collections::BTreeMap;
+    let mut pids: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in spans {
+        let next = pids.len();
+        pids.entry(s.group.as_str()).or_insert(next);
+    }
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + pids.len());
+    for (group, pid) in &pids {
+        let name = if group.is_empty() { "requests" } else { group };
+        events.push(crate::jobj! {
+            "ph" => "M",
+            "name" => "process_name",
+            "pid" => *pid,
+            "tid" => 0u64,
+            "args" => crate::jobj! { "name" => name },
+        });
+    }
+    for s in spans {
+        events.push(crate::jobj! {
+            "ph" => "X",
+            "name" => s.kind.as_str(),
+            "cat" => s.kind.as_str(),
+            "pid" => pids[s.group.as_str()],
+            "tid" => s.request,
+            "ts" => s.t_start * 1e6,
+            "dur" => s.duration_s() * 1e6,
+            "args" => s.to_json(),
+        });
+    }
+    crate::jobj! {
+        "displayTimeUnit" => "ms",
+        "traceEvents" => Json::Arr(events),
+    }
+}
+
+/// Recover the `Vec<Span>` from a Chrome trace document written by
+/// [`to_chrome_json`] (metadata events are skipped; `args` is
+/// authoritative).
+pub fn spans_from_chrome_json(doc: &Json) -> Result<Vec<Span>> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Runtime("trace document has no `traceEvents`".into()))?;
+    let mut out = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(|v| v.as_str()) != Some("X") {
+            continue;
+        }
+        let args = e
+            .get("args")
+            .ok_or_else(|| Error::Runtime("trace event has no `args`".into()))?;
+        out.push(Span::from_json(args)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            Span {
+                request: 0,
+                node: -1,
+                kind: SpanKind::Request,
+                group: String::new(),
+                chassis: 0,
+                t_start: 0.0,
+                t_end: 1.0,
+                parent: -1,
+                queue_wait: 0.05,
+            },
+            Span {
+                request: 0,
+                node: 2,
+                kind: SpanKind::Prefill,
+                group: "prefill H100 tp1 pp1 b8".into(),
+                chassis: 0,
+                t_start: 0.1,
+                t_end: 0.2,
+                parent: 1,
+                queue_wait: 0.02,
+            },
+            Span {
+                request: 0,
+                node: 3,
+                kind: SpanKind::KvTransfer,
+                group: "decode Gaudi3 tp1 pp1 b32".into(),
+                chassis: 1,
+                t_start: 0.2,
+                t_end: 0.45,
+                parent: 2,
+                queue_wait: 0.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn span_json_round_trips() {
+        for s in sample_spans() {
+            let back = Span::from_json(&s.to_json()).unwrap();
+            assert_eq!(back, s);
+        }
+    }
+
+    #[test]
+    fn chrome_export_round_trips_and_is_byte_stable() {
+        let spans = sample_spans();
+        let doc = to_chrome_json(&spans);
+        let text = doc.to_string();
+        // Byte-stable: BTreeMap ordering makes re-serialization exact.
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+        let back = spans_from_chrome_json(&reparsed).unwrap();
+        assert_eq!(back, spans);
+        // Structure: one metadata record per distinct group, µs stamps.
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("M"))
+            .count();
+        assert_eq!(metas, 3);
+        let x0 = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+            .unwrap();
+        assert_eq!(x0.get("dur").unwrap().as_f64().unwrap(), 1e6);
+    }
+
+    #[test]
+    fn sink_orders_by_emission_across_shards() {
+        let sink = TraceSink::new();
+        let mut spans = sample_spans();
+        // More spans than shards so ordering must come from seq.
+        for i in 0..20u64 {
+            let mut s = spans[1].clone();
+            s.request = i;
+            sink.record(s.clone());
+            spans.push(s);
+        }
+        let drained = sink.drain();
+        assert_eq!(drained.len(), 20);
+        let ids: Vec<u64> = drained.iter().map(|s| s.request).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>());
+        assert!(sink.is_empty(), "drain must consume");
+    }
+
+    #[test]
+    fn disabled_sink_skips_the_closure() {
+        let sink: Option<Arc<TraceSink>> = None;
+        let mut ran = false;
+        record_with(&sink, || {
+            ran = true;
+            sample_spans().pop().unwrap()
+        });
+        assert!(!ran, "disabled tracing must not evaluate the span");
+    }
+
+    #[test]
+    fn host_op_classifier() {
+        assert_eq!(classify_host_op("tool.search"), SpanKind::ToolIo);
+        assert_eq!(classify_host_op("io.input"), SpanKind::ToolIo);
+        assert_eq!(classify_host_op("stt.transcribe"), SpanKind::Host);
+        assert_eq!(classify_host_op("tts.synthesize"), SpanKind::Host);
+    }
+}

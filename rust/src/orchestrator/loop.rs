@@ -22,6 +22,8 @@ use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, GroupWindow
 use crate::cluster::sim::SimReport;
 use crate::cluster::trace::Request;
 use crate::ir::graph::Graph;
+use crate::obs::critical_path::{attribute_all, attribute_windows, SlaAttribution, BUCKETS};
+use crate::obs::trace::{Span, TraceSink};
 use crate::obs::MetricsRegistry;
 use crate::plan::{ExecutionPlan, PlanDiff, Role, SlaSpec};
 use crate::planner::autoscale::{
@@ -312,6 +314,9 @@ impl Orchestrator {
             sla_attained: w.sla_attained,
             prefill_util: w.prefill_util,
             decode_util: w.decode_util,
+            // Filled post-run from the traced spans (if any): spans of
+            // in-flight requests are only complete once the run drains.
+            attribution: None,
         });
 
         let pre_pressure = self.pressure(w.prefill_util, w.prefill_queue, Role::Prefill);
@@ -598,6 +603,40 @@ impl Orchestrator {
     }
 }
 
+/// Fill each recorded window's `attribution` from a traced run's spans
+/// (windows match by their recorded `[t0, t1)` bounds; requests are
+/// assigned by completion time) and export the whole-run critical-path
+/// totals as `orch_attr_<bucket>_s` gauges plus `orch_attr_coverage` —
+/// the measured "where did the latency go" signal next to the
+/// utilization gauges the autoscalers consume.
+pub fn attach_window_attribution(
+    timeline: &mut Timeline,
+    spans: &[Span],
+    metrics: &MetricsRegistry,
+) {
+    let windows: Vec<(f64, f64)> = timeline
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TimelineEvent::Window { t0, t1, .. } => Some((*t0, *t1)),
+            _ => None,
+        })
+        .collect();
+    let mut attrs = attribute_windows(spans, &windows).into_iter();
+    for e in &mut timeline.events {
+        if let TimelineEvent::Window { attribution, .. } = e {
+            *attribution = attrs.next();
+        }
+    }
+    let total = attribute_all(spans);
+    for b in BUCKETS {
+        metrics
+            .gauge(&format!("orch_attr_{b}_s"))
+            .set(total.bucket_s(b));
+    }
+    metrics.gauge("orch_attr_coverage").set(total.coverage);
+}
+
 /// One interface, two backends: drive a workload to completion under
 /// orchestrator control and return the recorded timeline.
 pub trait Executor {
@@ -619,6 +658,9 @@ pub struct SimExecutor<'a> {
     pub trace: &'a [Request],
     /// Aggregate serving metrics of the finished run.
     pub report: Option<SimReport>,
+    /// When set, the simulator records [`Span`]s into it and the
+    /// returned timeline's windows carry critical-path attribution.
+    pub trace_sink: Option<Arc<TraceSink>>,
 }
 
 impl<'a> SimExecutor<'a> {
@@ -626,6 +668,7 @@ impl<'a> SimExecutor<'a> {
         SimExecutor {
             trace,
             report: None,
+            trace_sink: None,
         }
     }
 }
@@ -664,12 +707,19 @@ impl Executor for SimExecutor<'_> {
     fn orchestrate(&mut self, orch: Orchestrator) -> Result<Timeline> {
         let window_s = orch.cfg.window_s;
         let mut sim = DagSim::new(orch.current())?;
+        if let Some(sink) = &self.trace_sink {
+            sim.set_trace_sink(Arc::clone(sink));
+        }
         let mut ctl = OrchController { orch, failed: None };
         let report = sim.run_controlled(self.trace, window_s, &mut ctl)?;
         if let Some(e) = ctl.failed {
             return Err(e);
         }
-        let timeline = ctl.orch.finish(Some(&report));
+        let metrics = Arc::clone(&ctl.orch.metrics);
+        let mut timeline = ctl.orch.finish(Some(&report));
+        if let Some(sink) = &self.trace_sink {
+            attach_window_attribution(&mut timeline, &sink.spans(), &metrics);
+        }
         self.report = Some(report);
         Ok(timeline)
     }
@@ -691,6 +741,12 @@ pub struct LiveExecutor {
     pub requests: Vec<ChatRequest>,
     /// Requests per observation window.
     pub window: usize,
+    /// When set, the server records [`Span`]s into it and the returned
+    /// timeline's windows carry critical-path attribution. Each `serve`
+    /// session stamps span times from its own origin, so live windows
+    /// attribute the spans recorded *during* them (a cursor over the
+    /// sink) instead of bucketing by timestamp.
+    pub trace_sink: Option<Arc<TraceSink>>,
 }
 
 impl LiveExecutor {
@@ -699,6 +755,7 @@ impl LiveExecutor {
             server,
             requests,
             window: window.max(1),
+            trace_sink: None,
         }
     }
 }
@@ -714,6 +771,13 @@ impl Executor for LiveExecutor {
             SlaSpec::Soft { t_sla_s, .. } => Some(t_sla_s),
             SlaSpec::None => None,
         };
+        if let Some(sink) = &self.trace_sink {
+            self.server.set_trace_sink(Arc::clone(sink));
+        }
+        // Per-window attribution over the spans each window recorded
+        // (see `trace_sink` docs), attached to the timeline post-run.
+        let mut window_attrs: Vec<SlaAttribution> = Vec::new();
+        let mut spans_seen = 0usize;
         let requests = std::mem::take(&mut self.requests);
         let mut t = 0.0f64;
         for chunk in requests.chunks(self.window) {
@@ -813,8 +877,37 @@ impl Executor for LiveExecutor {
                 };
                 orch.record_applied(t, &fc);
             }
+            if let Some(sink) = &self.trace_sink {
+                let all = sink.spans();
+                let mut a = attribute_all(&all[spans_seen.min(all.len())..]);
+                spans_seen = all.len();
+                // Relabel with the recorded window bounds: span clocks
+                // restart per serve session and cannot place windows.
+                a.t0 = stats.t0;
+                a.t1 = stats.t1;
+                window_attrs.push(a);
+            }
         }
-        Ok(orch.finish(None))
+        let metrics = Arc::clone(&orch.metrics);
+        let mut timeline = orch.finish(None);
+        if let Some(sink) = &self.trace_sink {
+            let mut attrs = window_attrs.into_iter();
+            for e in &mut timeline.events {
+                if let TimelineEvent::Window { attribution, .. } = e {
+                    *attribution = attrs.next();
+                }
+            }
+            // Whole-run bucket totals: per-request walks are clock-
+            // independent, so overlapping session clocks are fine here.
+            let total = attribute_all(&sink.spans());
+            for b in BUCKETS {
+                metrics
+                    .gauge(&format!("orch_attr_{b}_s"))
+                    .set(total.bucket_s(b));
+            }
+            metrics.gauge("orch_attr_coverage").set(total.coverage);
+        }
+        Ok(timeline)
     }
 }
 

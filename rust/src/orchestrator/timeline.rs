@@ -3,6 +3,7 @@
 //! serializable through [`crate::util::json`] so a run can be saved
 //! (`orchestrate --out timeline.json`), reviewed, and replayed.
 
+use crate::obs::critical_path::SlaAttribution;
 use crate::plan::{ExecutionPlan, PlanDiff};
 use crate::planner::migration::MigrationPlan;
 use crate::util::json::Json;
@@ -20,6 +21,11 @@ pub enum TimelineEvent {
         sla_attained: f64,
         prefill_util: f64,
         decode_util: f64,
+        /// Critical-path latency attribution for requests completing in
+        /// this window — present only when the run traced spans
+        /// (`--trace-out`); `None` otherwise, and records written
+        /// before attribution existed parse that way.
+        attribution: Option<SlaAttribution>,
     },
     /// A per-role autoscaler (or cross-group rebalance) fired.
     Decision {
@@ -203,16 +209,26 @@ impl Timeline {
                     sla_attained,
                     prefill_util,
                     decode_util,
-                } => jobj! {
-                    "kind" => "window",
-                    "t0" => *t0,
-                    "t1" => *t1,
-                    "arrivals" => *arrivals,
-                    "completed" => *completed,
-                    "sla_attained" => *sla_attained,
-                    "prefill_util" => *prefill_util,
-                    "decode_util" => *decode_util,
-                },
+                    attribution,
+                } => {
+                    let mut j = jobj! {
+                        "kind" => "window",
+                        "t0" => *t0,
+                        "t1" => *t1,
+                        "arrivals" => *arrivals,
+                        "completed" => *completed,
+                        "sla_attained" => *sla_attained,
+                        "prefill_util" => *prefill_util,
+                        "decode_util" => *decode_util,
+                    };
+                    // Written only when traced: untraced records stay
+                    // byte-identical and old readers stay compatible.
+                    if let Some(a) = attribution {
+                        j.try_set("attribution", a.to_json())
+                            .expect("window json is an object");
+                    }
+                    j
+                }
                 TimelineEvent::Decision {
                     t,
                     role,
@@ -356,6 +372,11 @@ impl Timeline {
                     sla_attained: num("sla_attained")?,
                     prefill_util: num("prefill_util")?,
                     decode_util: num("decode_util")?,
+                    // Back-compat: absent = the run was not traced.
+                    attribution: match e.get("attribution") {
+                        Some(a) => Some(SlaAttribution::from_json(a)?),
+                        None => None,
+                    },
                 },
                 Some("decision") => TimelineEvent::Decision {
                     t: num("t")?,
@@ -440,6 +461,7 @@ mod tests {
             sla_attained: 0.75,
             prefill_util: 0.4,
             decode_util: 0.9,
+            attribution: None,
         });
         tl.events.push(TimelineEvent::Decision {
             t: 2.0,
@@ -533,6 +555,57 @@ mod tests {
         );
         let back = Timeline::parse_json(&text).unwrap();
         assert_eq!(back, old);
+        assert_eq!(back.to_json_string(), text, "byte-stable");
+    }
+
+    #[test]
+    fn window_attribution_round_trips_and_absent_stays_absent() {
+        use crate::obs::critical_path::attribute_all;
+        use crate::obs::trace::{Span, SpanKind};
+
+        // Untraced record: no attribution field is ever written.
+        let plain = sample();
+        let text = plain.to_json_string();
+        assert!(
+            !text.contains("\"attribution\""),
+            "untraced windows must not grow an attribution field"
+        );
+
+        // Traced record: the attribution survives the round trip.
+        let spans = vec![
+            Span {
+                request: 1,
+                node: -1,
+                kind: SpanKind::Request,
+                group: String::new(),
+                chassis: 0,
+                t_start: 0.0,
+                t_end: 1.0,
+                parent: -1,
+                queue_wait: 0.1,
+            },
+            Span {
+                request: 1,
+                node: 0,
+                kind: SpanKind::Host,
+                group: "host".into(),
+                chassis: 0,
+                t_start: 0.1,
+                t_end: 1.0,
+                parent: -1,
+                queue_wait: 0.0,
+            },
+        ];
+        let mut tl = sample();
+        for e in &mut tl.events {
+            if let TimelineEvent::Window { attribution, .. } = e {
+                *attribution = Some(attribute_all(&spans));
+            }
+        }
+        let text = tl.to_json_string();
+        assert!(text.contains("\"attribution\""));
+        let back = Timeline::parse_json(&text).unwrap();
+        assert_eq!(back, tl);
         assert_eq!(back.to_json_string(), text, "byte-stable");
     }
 

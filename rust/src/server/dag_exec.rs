@@ -45,6 +45,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::cost::model_profile::{by_short_name, ModelProfile};
+use crate::obs::trace::{classify_host_op, Span, SpanKind, TraceSink};
 use crate::obs::MetricsRegistry;
 use crate::plan::instance::{edge_payload_bytes, llm_units, DagTopology, LlmUnit};
 use crate::plan::{ExecutionPlan, Role, Stage};
@@ -231,6 +232,9 @@ pub struct LlmJob {
     pub engine: usize,
     pub phase: LlmPhase,
     pub temperature: f64,
+    /// When the dispatcher emitted the job — `started - enqueued` is
+    /// the batcher + channel wait ([`Span::queue_wait`] for LLM spans).
+    pub enqueued: Instant,
 }
 
 /// What an engine did with one [`LlmJob`] (timestamps are wall-clock).
@@ -260,8 +264,10 @@ pub struct Step {
 /// What a due transfer timer delivers.
 #[derive(Debug, Clone, Copy)]
 enum TimerKind {
-    /// A dependency edge's payload arrived at `node`.
-    Dep { node: usize },
+    /// A dependency edge's payload arrived at `node`. `from` is the
+    /// completed upstream node the payload left (the candidate gating
+    /// edge recorded as [`Span::parent`]).
+    Dep { node: usize, from: i64 },
     /// The fused prefill → decode KV handoff landed: the unit's decode
     /// phase may start on its engine.
     KvArrived { unit: usize },
@@ -310,6 +316,13 @@ struct ReqRun {
     node_done: Vec<bool>,
     /// Virtual pipe each LLM node routed to.
     node_pipe: Vec<Option<(Role, usize)>>,
+    /// Last-arriving (gating) dependency edge per node, -1 = root —
+    /// [`Span::parent`], same overwrite-on-arrival rule as the
+    /// simulator's `dep_from`.
+    dep_from: Vec<i64>,
+    /// Seconds the request waited in admission before `submitted`
+    /// (intake-channel wait), carried onto the envelope span.
+    admit_wait_s: f64,
     pipe_released: Vec<bool>,
     /// Output payload per completed node (real dataflow between stages).
     payload: Vec<Option<Vec<u8>>>,
@@ -350,6 +363,12 @@ pub struct DagDispatch {
     stage_hist: Vec<Arc<crate::obs::Histogram>>,
     metrics: Arc<MetricsRegistry>,
     fault: Option<HostFault>,
+    /// Span recorder shared with the serving loop (None = tracing off —
+    /// the emission sites skip all span allocation on that path).
+    trace: Option<Arc<TraceSink>>,
+    /// Copy of [`DagRuntime::time_scale`] so span timestamps can be
+    /// mapped to modeled seconds without threading `rt` everywhere.
+    time_scale: f64,
 }
 
 impl DagDispatch {
@@ -357,6 +376,7 @@ impl DagDispatch {
         rt: &DagRuntime,
         metrics: Arc<MetricsRegistry>,
         fault: Option<HostFault>,
+        trace: Option<Arc<TraceSink>>,
     ) -> DagDispatch {
         let stage_hist = rt
             .plan
@@ -375,6 +395,37 @@ impl DagDispatch {
             stage_hist,
             metrics,
             fault,
+            trace,
+            time_scale: rt.time_scale,
+        }
+    }
+
+    /// Wall instant → span time: modeled seconds since the dispatcher's
+    /// origin (wall ÷ time scale), or raw wall seconds when the scale
+    /// collapses modeled time — the same clock the simulator stamps
+    /// spans in, so sim and live traces line up unit-for-unit.
+    fn span_time(&self, at: Instant) -> f64 {
+        let wall = at.saturating_duration_since(self.origin).as_secs_f64();
+        if self.time_scale > 0.0 {
+            wall / self.time_scale
+        } else {
+            wall
+        }
+    }
+
+    /// Wall duration → span seconds (same scaling as [`Self::span_time`]).
+    fn span_secs(&self, wall_s: f64) -> f64 {
+        if self.time_scale > 0.0 {
+            wall_s / self.time_scale
+        } else {
+            wall_s
+        }
+    }
+
+    #[inline]
+    fn emit(&self, span: Span) {
+        if let Some(s) = &self.trace {
+            s.record(span);
         }
     }
 
@@ -437,12 +488,15 @@ impl DagDispatch {
 
     /// Admit one agent request: instantiate its DAG, dispatch the
     /// roots. Host stages go straight to the pool; ready LLM units come
-    /// back in the [`Step`] for the batcher.
+    /// back in the [`Step`] for the batcher. `received` is when the
+    /// request entered the server's intake channel — `now - received`
+    /// is the admission wait carried onto the envelope span.
     pub fn admit(
         &mut self,
         rt: &DagRuntime,
         req: ChatRequest,
         now: Instant,
+        received: Instant,
         pool: &HostPool,
     ) -> Step {
         let mut step = Step::default();
@@ -455,6 +509,9 @@ impl DagDispatch {
             unit_dispatched: vec![false; rt.units.len()],
             node_done: vec![false; n],
             node_pipe: vec![None; n],
+            dep_from: vec![-1; n],
+            admit_wait_s: self
+                .span_secs(now.saturating_duration_since(received).as_secs_f64()),
             pipe_released: vec![false; n],
             payload: vec![None; n],
             nodes_left: n,
@@ -510,6 +567,23 @@ impl DagDispatch {
                         start_s: d.started.duration_since(run.submitted).as_secs_f64(),
                         end_s: d.finished.duration_since(run.submitted).as_secs_f64(),
                     };
+                    if self.trace.is_some() {
+                        self.emit(Span {
+                            request: d.req,
+                            node: d.node as i64,
+                            kind: classify_host_op(&rt.plan.bindings[d.node].op),
+                            group: "host".to_string(),
+                            chassis: 0,
+                            t_start: self.span_time(d.started),
+                            t_end: self.span_time(d.finished),
+                            parent: run.dep_from[d.node],
+                            queue_wait: self.span_secs(
+                                d.started
+                                    .saturating_duration_since(d.submitted)
+                                    .as_secs_f64(),
+                            ),
+                        });
+                    }
                     self.complete_node(rt, &mut run, d.node, d.finished, span, pool, &mut step);
                 }
             }
@@ -548,8 +622,8 @@ impl DagDispatch {
             }
             if run.failed.is_none() {
                 match t.kind {
-                    TimerKind::Dep { node } => {
-                        self.deliver_dep(rt, &mut run, node, pool, &mut step);
+                    TimerKind::Dep { node, from } => {
+                        self.deliver_dep(rt, &mut run, node, from, pool, &mut step);
                     }
                     TimerKind::KvArrived { unit } => {
                         self.dispatch_decode(rt, &mut run, unit, &mut step);
@@ -582,6 +656,24 @@ impl DagDispatch {
                             .prefill
                             .expect("prefill phase dispatched for unit without prefill");
                         run.payload[p] = Some(Vec::new());
+                        if self.trace.is_some() {
+                            let (group, chassis) = Self::span_placement(rt, &run, p);
+                            self.emit(Span {
+                                request: o.job.req,
+                                node: p as i64,
+                                kind: SpanKind::Prefill,
+                                group,
+                                chassis,
+                                t_start: self.span_time(o.started),
+                                t_end: self.span_time(o.finished),
+                                parent: run.dep_from[p],
+                                queue_wait: self.span_secs(
+                                    o.started
+                                        .saturating_duration_since(o.job.enqueued)
+                                        .as_secs_f64(),
+                                ),
+                            });
+                        }
                         let span = StageSpan {
                             node: p,
                             op: rt.plan.bindings[p].op.clone(),
@@ -618,6 +710,24 @@ impl DagDispatch {
                         }
                         run.tbt_sum_s += o.tbt_sum_s;
                         run.tbt_n += o.tbt_n;
+                        if self.trace.is_some() {
+                            let (group, chassis) = Self::span_placement(rt, &run, dnode);
+                            self.emit(Span {
+                                request: o.job.req,
+                                node: dnode as i64,
+                                kind: SpanKind::Decode,
+                                group,
+                                chassis,
+                                t_start: self.span_time(o.started),
+                                t_end: self.span_time(o.finished),
+                                parent: run.dep_from[dnode],
+                                queue_wait: self.span_secs(
+                                    o.started
+                                        .saturating_duration_since(o.job.enqueued)
+                                        .as_secs_f64(),
+                                ),
+                            });
+                        }
                         let span = StageSpan {
                             node: dnode,
                             op: rt.plan.bindings[dnode].op.clone(),
@@ -674,6 +784,22 @@ impl DagDispatch {
             }
         } else if run.nodes_left == 0 {
             self.release_pipes(&run);
+            if self.trace.is_some() {
+                // Request envelope — the root the critical-path walk
+                // starts from (node -1, empty group), mirroring the
+                // simulator's completion-time envelope span.
+                self.emit(Span {
+                    request: run.req.id,
+                    node: -1,
+                    kind: SpanKind::Request,
+                    group: String::new(),
+                    chassis: 0,
+                    t_start: self.span_time(run.submitted),
+                    t_end: self.span_time(run.last_done),
+                    parent: -1,
+                    queue_wait: run.admit_wait_s,
+                });
+            }
             step.responses.push(finalize(run));
             return;
         }
@@ -726,6 +852,23 @@ impl DagDispatch {
         }
     }
 
+    /// (pipeline-group shape key, chassis) of a routed LLM node — the
+    /// same `Span::group` key the simulator stamps (both sides build on
+    /// `shape_key_of`), so cross-backend traces share track names.
+    fn span_placement(rt: &DagRuntime, run: &ReqRun, node: usize) -> (String, u32) {
+        match run.node_pipe[node] {
+            Some((Role::Prefill, k)) => {
+                let p = &rt.prefill_pipes[k];
+                (rt.plan.pipelines[p.group].shape_key(), p.chassis)
+            }
+            Some((Role::Decode, k)) => {
+                let p = &rt.decode_pipes[k];
+                (rt.plan.pipelines[p.group].shape_key(), p.chassis)
+            }
+            None => (String::new(), 0),
+        }
+    }
+
     /// Bump the per-group job ledger for a routed LLM node — the live
     /// counterpart of the simulator's `DagDetail::jobs_by_group`. Keys
     /// are `server_group_jobs:<shape key>` in the metrics snapshot, so
@@ -758,6 +901,7 @@ impl DagDispatch {
             req: req_id,
             node,
             epoch: run.epoch,
+            submitted: Instant::now(),
             work: Box::new(move || {
                 if sleep_s > 0.0 {
                     std::thread::sleep(Duration::from_secs_f64(sleep_s));
@@ -795,6 +939,7 @@ impl DagDispatch {
                 engine,
                 phase: LlmPhase::Prefill { prompt },
                 temperature: run.req.temperature,
+                enqueued: Instant::now(),
             });
         } else {
             self.dispatch_decode(rt, run, unit, step);
@@ -826,6 +971,7 @@ impl DagDispatch {
             engine,
             phase: LlmPhase::Decode { prompt, osl },
             temperature: run.req.temperature,
+            enqueued: Instant::now(),
         });
     }
 
@@ -845,6 +991,9 @@ impl DagDispatch {
             return;
         };
         self.assign_pipe(rt, run, d);
+        // The fused decode is gated by its prefill — the KV edge is its
+        // parent, same as the simulator's intra-unit dependency.
+        run.dep_from[d] = p as i64;
         let from = Self::chassis_of(rt, run, p);
         let to = Self::chassis_of(rt, run, d);
         let mut delay_s = 0.0;
@@ -856,6 +1005,21 @@ impl DagDispatch {
             }
         }
         if delay_s > 1e-6 {
+            if self.trace.is_some() {
+                let (group, chassis) = Self::span_placement(rt, run, d);
+                let t0 = self.span_time(end);
+                self.emit(Span {
+                    request: run.req.id,
+                    node: d as i64,
+                    kind: SpanKind::KvTransfer,
+                    group,
+                    chassis,
+                    t_start: t0,
+                    t_end: t0 + self.span_secs(delay_s),
+                    parent: p as i64,
+                    queue_wait: 0.0,
+                });
+            }
             self.timer_seq += 1;
             self.timers.push(Reverse(Timer {
                 due: end + Duration::from_secs_f64(delay_s),
@@ -869,15 +1033,20 @@ impl DagDispatch {
         }
     }
 
-    /// One dependency edge into `node` is satisfied.
+    /// One dependency edge into `node` is satisfied. `from` is the
+    /// upstream node it came from: edges land in completion order, so
+    /// the last write before the node dispatches is its gating edge
+    /// ([`Span::parent`]) — the simulator applies the same rule.
     fn deliver_dep(
         &mut self,
         rt: &DagRuntime,
         run: &mut ReqRun,
         node: usize,
+        from: i64,
         pool: &HostPool,
         step: &mut Step,
     ) {
+        run.dep_from[node] = from;
         match rt.plan.bindings[node].stage {
             Stage::Cpu => {
                 run.remaining[node] = run.remaining[node].saturating_sub(1);
@@ -965,16 +1134,31 @@ impl DagDispatch {
                 }
             }
             if delay_s > 1e-6 {
+                if self.trace.is_some() {
+                    let (group, chassis) = Self::span_placement(rt, run, v);
+                    let t0 = self.span_time(end);
+                    self.emit(Span {
+                        request: run.req.id,
+                        node: v as i64,
+                        kind: SpanKind::KvTransfer,
+                        group,
+                        chassis,
+                        t_start: t0,
+                        t_end: t0 + self.span_secs(delay_s),
+                        parent: node as i64,
+                        queue_wait: 0.0,
+                    });
+                }
                 self.timer_seq += 1;
                 self.timers.push(Reverse(Timer {
                     due: end + Duration::from_secs_f64(delay_s),
                     seq: self.timer_seq,
                     req: run.req.id,
                     epoch: run.epoch,
-                    kind: TimerKind::Dep { node: v },
+                    kind: TimerKind::Dep { node: v, from: node as i64 },
                 }));
             } else {
-                self.deliver_dep(rt, run, v, pool, step);
+                self.deliver_dep(rt, run, v, node as i64, pool, step);
             }
         }
     }

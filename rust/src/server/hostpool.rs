@@ -33,6 +33,9 @@ pub struct HostTask {
     /// the epoch still matches, so a stale completion from an earlier
     /// serve session can never cross-apply to a request reusing an id.
     pub epoch: u64,
+    /// When the dispatcher queued the task — `started - submitted` is
+    /// the pool queue wait (`Span::queue_wait` for host stages).
+    pub submitted: Instant,
     /// The actual stage body (tool call, IO, pre/post-processing).
     /// Returns the stage's output **payload** — real bytes the
     /// dispatcher hands to downstream stages (tool results feed the
@@ -48,6 +51,8 @@ pub struct HostDone {
     pub epoch: u64,
     /// Stage payload on success (propagated along DAG edges).
     pub result: Result<Vec<u8>>,
+    /// Echoed from [`HostTask::submitted`] (queue-wait attribution).
+    pub submitted: Instant,
     pub started: Instant,
     pub finished: Instant,
 }
@@ -189,6 +194,7 @@ impl HostPool {
                             node: t.node,
                             epoch: t.epoch,
                             result,
+                            submitted: t.submitted,
                             started,
                             finished,
                         });
@@ -309,6 +315,7 @@ mod tests {
                 req: i,
                 node: 0,
                 epoch: 0,
+                submitted: Instant::now(),
                 work: Box::new(|| {
                     thread::sleep(Duration::from_millis(1));
                     Ok(b"payload".to_vec())
@@ -337,12 +344,14 @@ mod tests {
             req: 1,
             node: 0,
             epoch: 0,
+                submitted: Instant::now(),
             work: Box::new(|| panic!("hostile tool")),
         });
         pool.submit(HostTask {
             req: 2,
             node: 0,
             epoch: 0,
+                submitted: Instant::now(),
             work: Box::new(|| Ok(Vec::new())),
         });
         let d1 = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -365,6 +374,7 @@ mod tests {
                 req: i,
                 node: 0,
                 epoch: 0,
+                submitted: Instant::now(),
                 work: Box::new(|| {
                     thread::sleep(Duration::from_millis(20));
                     Ok(Vec::new())
@@ -386,6 +396,7 @@ mod tests {
             req: 9,
             node: 0,
             epoch: 0,
+                submitted: Instant::now(),
             work: Box::new(|| Ok(Vec::new())),
         });
         let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -406,6 +417,7 @@ mod tests {
                 req: i,
                 node: 0,
                 epoch: 0,
+                submitted: Instant::now(),
                 work: Box::new(|| Ok(Vec::new())),
             });
         }
@@ -425,6 +437,7 @@ mod tests {
             req: 0,
             node: 0,
             epoch: 0,
+                submitted: Instant::now(),
             work: Box::new(|| {
                 thread::sleep(Duration::from_millis(5));
                 Ok(Vec::new())

@@ -32,6 +32,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::obs::trace::TraceSink;
 use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::plan::{ExecutionPlan, Role};
 use crate::router::admission::{Admission, AdmissionConfig, AdmissionController};
@@ -108,8 +109,9 @@ enum Work {
 /// Everything the dispatcher can be woken by, merged onto one channel
 /// so it can block instead of spinning.
 enum Event {
-    /// A request arrived (relayed by the intake forwarder).
-    Intake(ChatRequest),
+    /// A request arrived (relayed by the intake forwarder); the instant
+    /// is when it entered the event stream — admission wait for spans.
+    Intake(ChatRequest, Instant),
     /// The caller's request channel disconnected.
     IntakeClosed,
     /// A host-pool stage finished.
@@ -180,6 +182,9 @@ pub struct Server {
     /// `serve` calls and resizes on reconfiguration.
     host: Option<HostPool>,
     fault: Option<HostFault>,
+    /// Span recorder for the live DAG path (None = tracing off; the
+    /// dispatcher then skips every span allocation).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl Server {
@@ -231,7 +236,17 @@ impl Server {
             dag: None,
             host: None,
             fault: None,
+            trace: None,
         })
+    }
+
+    /// Install a span recorder: every subsequent [`Server::serve`] call
+    /// emits [`crate::obs::trace::Span`]s for each admitted agent
+    /// request into it (host, prefill/decode, KV-transfer, and request
+    /// envelope spans in modeled seconds — the same schema the DAG
+    /// simulator records). No-op for the flat request path.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) {
+        self.trace = Some(sink);
     }
 
     /// Bring up a server configured by an execution plan (see
@@ -520,10 +535,9 @@ impl Server {
             h_ttft: self.metrics.histogram("server_ttft"),
             h_e2e: self.metrics.histogram("server_e2e"),
         };
-        let mut dispatch = self
-            .dag
-            .as_ref()
-            .map(|rt| DagDispatch::new(rt, self.metrics.clone(), self.fault.clone()));
+        let mut dispatch = self.dag.as_ref().map(|rt| {
+            DagDispatch::new(rt, self.metrics.clone(), self.fault.clone(), self.trace.clone())
+        });
         let seq_budget = self.engines[0].manifest.prefill_seq;
         let max_wait = self.cfg.batch.max_wait;
 
@@ -532,7 +546,7 @@ impl Server {
         let intake_tx = self.event_tx.clone();
         let forwarder = std::thread::spawn(move || {
             for req in rx.iter() {
-                if intake_tx.send(Event::Intake(req)).is_err() {
+                if intake_tx.send(Event::Intake(req, Instant::now())).is_err() {
                     return;
                 }
             }
@@ -559,7 +573,7 @@ impl Server {
                     },
                 };
                 match ev {
-                    Event::Intake(req) => {
+                    Event::Intake(req, received) => {
                         m_req.inc();
                         // Queue depth covers both execution paths: open
                         // flat requests plus admitted-but-unfinished
@@ -571,7 +585,13 @@ impl Server {
                         match admission.admit(Instant::now(), depth) {
                             Admission::Accept => {
                                 if req.agent.is_some() {
-                                    self.admit_dag(req, &mut dispatch, &sinks, &mut batchers);
+                                    self.admit_dag(
+                                        req,
+                                        received,
+                                        &mut dispatch,
+                                        &sinks,
+                                        &mut batchers,
+                                    );
                                 } else {
                                     flat_open += 1;
                                     let prompt = self.sessions.assemble(
@@ -755,10 +775,12 @@ impl Server {
         Ok(())
     }
 
-    /// Intake path for an agent-class request.
+    /// Intake path for an agent-class request. `received` is when the
+    /// request entered the event stream (admission wait for spans).
     fn admit_dag(
         &self,
         req: ChatRequest,
+        received: Instant,
         dispatch: &mut Option<DagDispatch>,
         sinks: &Sinks<'_>,
         batchers: &mut [Batcher<Work>],
@@ -789,7 +811,7 @@ impl Server {
         let rt = self.dag.as_ref().expect("checked above");
         let d = dispatch.as_mut().expect("checked above");
         let pool = self.host.as_ref().expect("plan install creates the pool");
-        let step = d.admit(rt, req, Instant::now(), pool);
+        let step = d.admit(rt, req, Instant::now(), received, pool);
         sinks.drain(step, batchers);
     }
 

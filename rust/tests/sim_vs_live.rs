@@ -618,6 +618,156 @@ fn two_generation_rebalance_keeps_per_group_parity() {
     assert_eq!(live_tokens, report.output_tokens);
 }
 
+/// The unified-tracing conformance gate: the same plan run through both
+/// backends must emit **structurally identical span trees** — one
+/// envelope per request plus exactly one execution span per binding,
+/// with the same kinds, the same gating parents, and the same pipeline
+/// group keys. The plan is pinned to one chassis so neither backend
+/// emits KV-transfer spans and the tree is fully deterministic (every
+/// node is single-dep, so the gating edge *is* the dep). On top of the
+/// structure, the critical-path attribution must explain each request's
+/// e2e exactly (buckets sum to e2e) on both backends.
+#[test]
+fn sim_and_live_emit_matching_span_trees() {
+    use agentic_hetero::obs::critical_path::{attribute_all, BUCKETS};
+    use agentic_hetero::obs::trace::{classify_host_op, Span, SpanKind, TraceSink};
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::sync::Arc;
+
+    let mut plan = conformance_plan();
+    plan.pipelines[1].chassis = 0; // same chassis: no fabric hops → no KV spans
+
+    let prefill_key = plan.pipelines[0].shape_key();
+    let decode_key = plan.pipelines[1].shape_key();
+
+    // The expected span tree of one request, derived from the plan:
+    // (node, kind, gating parent, group).
+    let expected: BTreeSet<(i64, &'static str, i64, String)> = plan
+        .bindings
+        .iter()
+        .enumerate()
+        .map(|(n, b)| {
+            let (kind, group) = match b.stage {
+                Stage::LlmPrefill => (SpanKind::Prefill, prefill_key.clone()),
+                Stage::LlmDecode => (SpanKind::Decode, decode_key.clone()),
+                _ => (classify_host_op(&b.op), "host".to_string()),
+            };
+            let parent = b.deps.first().map(|&d| d as i64).unwrap_or(-1);
+            (n as i64, kind.as_str(), parent, group)
+        })
+        .collect();
+
+    let check_tree = |backend: &str, spans: &[Span]| {
+        let mut by_req: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+        for s in spans {
+            by_req.entry(s.request).or_default().push(s);
+        }
+        assert_eq!(by_req.len(), N_REQ, "{backend}: every request must trace");
+        for (req, spans) in by_req {
+            let envelopes: Vec<&&Span> = spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Request)
+                .collect();
+            assert_eq!(envelopes.len(), 1, "{backend} req {req}: one envelope");
+            let env = envelopes[0];
+            assert_eq!(env.node, -1, "{backend} req {req}");
+            assert_eq!(env.parent, -1, "{backend} req {req}");
+            assert_eq!(env.group, "", "{backend} req {req}");
+            assert!(
+                !spans.iter().any(|s| s.kind == SpanKind::KvTransfer),
+                "{backend} req {req}: same-chassis plan must not emit KV spans"
+            );
+            let got: BTreeSet<(i64, &str, i64, String)> = spans
+                .iter()
+                .filter(|s| s.kind != SpanKind::Request)
+                .map(|s| (s.node, s.kind.as_str(), s.parent, s.group.clone()))
+                .collect();
+            assert_eq!(
+                got, expected,
+                "{backend} req {req}: span tree diverges from the plan"
+            );
+            // Temporal structure: spans sit inside the envelope and
+            // start only after their gating parent finished.
+            for s in &spans {
+                assert!(s.t_end >= s.t_start - 1e-9, "{backend} req {req}");
+                if s.kind == SpanKind::Request {
+                    continue;
+                }
+                assert!(
+                    s.t_start >= env.t_start - 1e-6 && s.t_end <= env.t_end + 1e-6,
+                    "{backend} req {req} node {}: span outside envelope",
+                    s.node
+                );
+                if s.parent >= 0 {
+                    let p = spans
+                        .iter()
+                        .find(|x| x.node == s.parent && x.kind != SpanKind::Request)
+                        .expect("gating parent span exists");
+                    assert!(
+                        p.t_end <= s.t_start + 1e-6,
+                        "{backend} req {req}: node {} started before gating dep {}",
+                        s.node,
+                        s.parent
+                    );
+                }
+            }
+        }
+    };
+
+    // ---- simulator backend ------------------------------------------
+    let sim_sink = TraceSink::new();
+    let mut sim = DagSim::new(&plan).unwrap();
+    sim.set_trace_sink(Arc::clone(&sim_sink));
+    sim.run(&sim_trace()).unwrap();
+    let sim_spans = sim_sink.spans();
+    check_tree("sim", &sim_spans);
+
+    // ---- live backend -----------------------------------------------
+    let mut server = Server::from_plan(Engine::synthetic_default(), &plan).unwrap();
+    let mut cfg = server.config().clone();
+    cfg.time_scale = 0.05;
+    cfg.max_new_tokens = OSL;
+    server.reconfigure(cfg);
+    server.install_plan(&plan).unwrap();
+    let live_sink = TraceSink::new();
+    server.set_trace_sink(Arc::clone(&live_sink));
+    let (_server, responses) = run_live(server, live_requests(&plan.agent));
+    assert_eq!(responses.len(), N_REQ);
+    for r in &responses {
+        assert!(r.is_ok(), "request {} failed: {:?}", r.id, r.error);
+    }
+    let live_spans = live_sink.spans();
+    check_tree("live", &live_spans);
+
+    // ---- attribution explains e2e on both backends ------------------
+    // Buckets sum to e2e exactly by construction; `coverage` is the
+    // honest explicitly-measured share — near-total in the simulator,
+    // bounded below on the live path (channel/dispatch gaps between
+    // spans land in the implicit queue residual).
+    for (backend, spans, min_cov) in
+        [("sim", &sim_spans, 0.95), ("live", &live_spans, 0.5)]
+    {
+        let a = attribute_all(spans);
+        assert_eq!(a.requests as usize, N_REQ, "{backend}");
+        let bucket_sum: f64 = BUCKETS.iter().map(|b| a.bucket_s(b)).sum();
+        assert!(
+            (bucket_sum - a.e2e_total_s).abs() <= 1e-6 * a.e2e_total_s.max(1.0),
+            "{backend}: buckets ({bucket_sum}) must sum to e2e ({})",
+            a.e2e_total_s
+        );
+        assert!(
+            a.min_request_coverage >= min_cov,
+            "{backend}: worst-request coverage {} < {min_cov}",
+            a.min_request_coverage
+        );
+        // This plan's decode dominates prefill, and both host-pool
+        // buckets see work (stt/tts → host, io/tool → tool_io).
+        assert!(a.bucket_s("decode") > a.bucket_s("prefill"), "{backend}");
+        assert!(a.bucket_s("host") > 0.0, "{backend}");
+        assert!(a.bucket_s("tool_io") > 0.0, "{backend}");
+    }
+}
+
 #[test]
 fn sim_and_live_agree_on_cpu_only_plans() {
     // No LLM stages at all: the host pool carries the whole graph.

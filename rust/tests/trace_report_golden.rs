@@ -1,0 +1,90 @@
+//! Golden test for the `trace-report` pipeline on a two-generation
+//! trace: a hand-built span set (one request served by the H100
+//! decode generation, one by the A100 generation behind a cross-chassis
+//! KV hop) goes through the exact path the CLI uses — Chrome
+//! trace-event export, byte round-trip, span recovery, critical-path
+//! attribution — and the rendered table must match character for
+//! character. Any change to the bucket math, the group aggregation, or
+//! the table format shows up as a diff against GOLDEN.
+
+use agentic_hetero::obs::critical_path::attribute_all;
+use agentic_hetero::obs::trace::{spans_from_chrome_json, to_chrome_json, Span, SpanKind};
+use agentic_hetero::util::json::Json;
+
+fn span(
+    request: u64,
+    node: i64,
+    kind: SpanKind,
+    group: &str,
+    t_start: f64,
+    t_end: f64,
+    parent: i64,
+    queue_wait: f64,
+) -> Span {
+    Span {
+        request,
+        node,
+        kind,
+        group: group.into(),
+        chassis: 0,
+        t_start,
+        t_end,
+        parent,
+        queue_wait,
+    }
+}
+
+/// Two requests, one per decode generation:
+///
+/// * request 0 (H100): 0.1 s admission, prefill 0.1→0.3, decode
+///   0.3→1.0 — fully explicit, coverage 100%;
+/// * request 1 (A100): prefill 0.0→0.5, KV hop 0.5→0.9 into the A100
+///   chassis, a 0.1 s unspanned gap, decode 1.0→2.0 — coverage 95%.
+fn two_generation_trace() -> Vec<Span> {
+    let h100 = "decode H100 tp1 pp1 b16";
+    let a100 = "decode A100 tp1 pp1 b16";
+    let pre = "prefill H100 tp1 pp1 b8";
+    vec![
+        span(0, -1, SpanKind::Request, "", 0.0, 1.0, -1, 0.1),
+        span(0, 1, SpanKind::Prefill, pre, 0.1, 0.3, -1, 0.0),
+        span(0, 2, SpanKind::Decode, h100, 0.3, 1.0, 1, 0.0),
+        span(1, -1, SpanKind::Request, "", 0.0, 2.0, -1, 0.0),
+        span(1, 1, SpanKind::Prefill, pre, 0.0, 0.5, -1, 0.0),
+        span(1, 2, SpanKind::KvTransfer, a100, 0.5, 0.9, 1, 0.0),
+        span(1, 2, SpanKind::Decode, a100, 1.0, 2.0, 1, 0.0),
+    ]
+}
+
+const GOLDEN: &str = "\
+2 requests, e2e total 3.000s, explicit coverage 96.7% (worst request 95.0%)
+group                                     queue      prefill       decode  kv_transfer         host      tool_io        total
+(admission)                              0.100s       0.000s       0.000s       0.000s       0.000s       0.000s       0.100s
+decode A100 tp1 pp1 b16                  0.100s       0.000s       1.000s       0.400s       0.000s       0.000s       1.500s
+decode H100 tp1 pp1 b16                  0.000s       0.000s       0.700s       0.000s       0.000s       0.000s       0.700s
+prefill H100 tp1 pp1 b8                  0.000s       0.700s       0.000s       0.000s       0.000s       0.000s       0.700s
+TOTAL                                    0.200s       0.700s       1.700s       0.400s       0.000s       0.000s       3.000s
+share of e2e                               6.7%        23.3%        56.7%        13.3%         0.0%         0.0%
+";
+
+#[test]
+fn trace_report_renders_the_golden_two_generation_table() {
+    let spans = two_generation_trace();
+
+    // The CLI path: export → serialize → reparse → recover → attribute.
+    let doc = to_chrome_json(&spans);
+    let text = doc.to_string();
+    let reparsed = Json::parse(&text).expect("trace file parses");
+    assert_eq!(reparsed.to_string(), text, "export is byte-stable");
+    let recovered = spans_from_chrome_json(&reparsed).expect("spans recover");
+    assert_eq!(recovered, spans, "lossless span round-trip");
+
+    let attr = attribute_all(&recovered);
+    assert_eq!(attr.requests, 2);
+    assert_eq!(attr.table(), GOLDEN);
+
+    // The attribution itself round-trips through JSON too (the form
+    // that rides inside orchestrator timeline windows).
+    let back = agentic_hetero::obs::critical_path::SlaAttribution::from_json(&attr.to_json())
+        .expect("attribution json round-trips");
+    assert_eq!(back, attr);
+}

@@ -1,0 +1,74 @@
+//! Disabled tracing must be free: `record_with` on an absent sink may
+//! not run its closure, and therefore may not allocate. Pinned with a
+//! counting global allocator, which is why this lives in its own
+//! integration-test binary (one `#[global_allocator]` per binary, and a
+//! single #[test] so no parallel test pollutes the counter).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use agentic_hetero::obs::trace::{record_with, Span, SpanKind, TraceSink};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn span(i: u64) -> Span {
+    Span {
+        request: i,
+        node: 0,
+        kind: SpanKind::Host,
+        // Per-span heap work the disabled path must never do.
+        group: format!("group-{i}"),
+        chassis: 0,
+        t_start: i as f64,
+        t_end: i as f64 + 1.0,
+        parent: -1,
+        queue_wait: 0.0,
+    }
+}
+
+#[test]
+fn disabled_tracing_allocates_nothing() {
+    // Phase 1: tracing off. The closure builds a Span with a formatted
+    // String, so *any* evaluation shows up in the allocation counter.
+    let off: Option<Arc<TraceSink>> = None;
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..10_000u64 {
+        record_with(&off, || span(i));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled tracing must not allocate (the span closure ran)"
+    );
+
+    // Phase 2 (control): with a sink attached the same loop must both
+    // allocate and record — proving the counter actually observes the
+    // instrumentation path and phase 1 isn't vacuous.
+    let sink = TraceSink::new();
+    let on = Some(Arc::clone(&sink));
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..100u64 {
+        record_with(&on, || span(i));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert!(after > before, "enabled tracing allocates spans");
+    assert_eq!(sink.len(), 100);
+}

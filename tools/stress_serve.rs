@@ -11,11 +11,19 @@
 //!   throughput (default 1.5; the plan's prefill group and two decode
 //!   sibling groups live on three engine threads, so ~2x is expected).
 //!
+//! With `--traced`, a third threaded leg runs with a span
+//! [`TraceSink`] attached (the `--trace-out` path): it fails if traced
+//! throughput drops more than `STRESS_TRACE_MAX_DROP` (default 5%)
+//! below the untraced threaded run — the "tracing is cheap enough to
+//! leave on" gate — and writes the captured spans as
+//! `STRESS_trace.json` (Chrome trace-event JSON, uploaded by CI).
+//!
 //! Writes `BENCH_live_serve.json` next to `BENCH_orchestrator.json` so
 //! CI archives live throughput alongside the perf ledger.
 //!
 //! Env knobs: `STRESS_REQUESTS` (default 10000), `STRESS_MIN_SPEEDUP`
-//! (default 1.5, `0` records without gating).
+//! (default 1.5, `0` records without gating), `STRESS_TRACE_MAX_DROP`
+//! (default 0.05, `0` records without gating).
 //!
 //! The synthetic engine only exists in dependency-free builds; under
 //! `--features pjrt` the bin degrades to a clear error (mirroring how
@@ -24,10 +32,14 @@
 #[cfg(not(feature = "pjrt"))]
 use std::collections::HashSet;
 #[cfg(not(feature = "pjrt"))]
+use std::sync::Arc;
+#[cfg(not(feature = "pjrt"))]
 use std::time::Instant;
 
 #[cfg(not(feature = "pjrt"))]
 use agentic_hetero::jobj;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::obs::trace::{to_chrome_json, TraceSink};
 #[cfg(not(feature = "pjrt"))]
 use agentic_hetero::plan::presets::mixed_generation;
 #[cfg(not(feature = "pjrt"))]
@@ -52,7 +64,12 @@ fn env_or(name: &str, default: f64) -> f64 {
 
 /// One full burst through a fresh server; returns wall seconds.
 #[cfg(not(feature = "pjrt"))]
-fn run_mode(plan: &ExecutionPlan, n: usize, serialize: bool) -> f64 {
+fn run_mode(
+    plan: &ExecutionPlan,
+    n: usize,
+    serialize: bool,
+    trace: Option<&Arc<TraceSink>>,
+) -> f64 {
     let mut server =
         Server::from_plan_with_engines(Engine::synthetic_pool(plan.pipelines.len()), plan)
             .expect("plan must install");
@@ -65,6 +82,9 @@ fn run_mode(plan: &ExecutionPlan, n: usize, serialize: bool) -> f64 {
     cfg.admission.max_queue_depth = n * 2;
     server.reconfigure(cfg);
     server.install_plan(plan).expect("plan must install");
+    if let Some(sink) = trace {
+        server.set_trace_sink(Arc::clone(sink));
+    }
 
     let reqs: Vec<ChatRequest> = (0..n as u64)
         .map(|i| {
@@ -106,11 +126,11 @@ fn main() {
     let plan = mixed_generation("8b-fp16", "H100", "A100", 1, 2);
 
     // Warm-up: fault in lazily-initialised state on both paths.
-    run_mode(&plan, (n / 20).max(64), false);
-    run_mode(&plan, (n / 20).max(64), true);
+    run_mode(&plan, (n / 20).max(64), false, None);
+    run_mode(&plan, (n / 20).max(64), true, None);
 
-    let serial_s = run_mode(&plan, n, true);
-    let threaded_s = run_mode(&plan, n, false);
+    let serial_s = run_mode(&plan, n, true, None);
+    let threaded_s = run_mode(&plan, n, false, None);
 
     let serial_rps = n as f64 / serial_s.max(1e-9);
     let live_rps = n as f64 / threaded_s.max(1e-9);
@@ -121,13 +141,51 @@ fn main() {
     println!("  threaded dispatch   : {live_rps:10.1} req/s ({threaded_s:.2}s)");
     println!("  speedup             : {speedup:.2}x (gate: {min_speedup}x)");
 
-    let report = jobj! {
+    // `--traced`: the tracing-overhead leg. Same threaded burst with a
+    // span sink attached; the captured trace becomes the CI artifact.
+    let traced = std::env::args().any(|a| a == "--traced");
+    let max_drop = env_or("STRESS_TRACE_MAX_DROP", 0.05);
+    let mut traced_rps = 0.0;
+    let mut trace_drop = 0.0;
+    if traced {
+        let sink = TraceSink::new();
+        let traced_s = run_mode(&plan, n, false, Some(&sink));
+        traced_rps = n as f64 / traced_s.max(1e-9);
+        trace_drop = 1.0 - traced_rps / live_rps.max(1e-9);
+        let spans = sink.spans();
+        assert!(
+            !spans.is_empty(),
+            "traced leg recorded no spans: tracing is not wired"
+        );
+        std::fs::write("STRESS_trace.json", to_chrome_json(&spans).to_string())
+            .expect("write STRESS_trace.json");
+        println!(
+            "  traced dispatch     : {traced_rps:10.1} req/s ({traced_s:.2}s, \
+             {} spans -> STRESS_trace.json)",
+            spans.len()
+        );
+        println!(
+            "  tracing overhead    : {:.1}% throughput drop (gate: {:.0}%)",
+            trace_drop * 100.0,
+            max_drop * 100.0
+        );
+    }
+
+    let mut report = jobj! {
         "requests" => n,
         "serialized_requests_per_s" => serial_rps,
         "live_requests_per_s" => live_rps,
         "threaded_speedup" => speedup,
         "min_speedup" => min_speedup,
     };
+    if traced {
+        report
+            .try_set("traced_requests_per_s", traced_rps)
+            .expect("report is an object");
+        report
+            .try_set("tracing_throughput_drop", trace_drop)
+            .expect("report is an object");
+    }
     std::fs::write("BENCH_live_serve.json", report.pretty())
         .expect("write BENCH_live_serve.json");
 
@@ -135,6 +193,14 @@ fn main() {
         eprintln!(
             "FAIL: threaded dispatch {speedup:.2}x < required {min_speedup}x \
              over the serialized baseline"
+        );
+        std::process::exit(1);
+    }
+    if traced && max_drop > 0.0 && trace_drop > max_drop {
+        eprintln!(
+            "FAIL: tracing costs {:.1}% of live throughput (> {:.0}% budget)",
+            trace_drop * 100.0,
+            max_drop * 100.0
         );
         std::process::exit(1);
     }
