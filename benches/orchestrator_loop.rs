@@ -38,6 +38,7 @@ fn bench_plan() -> ExecutionPlan {
                 deps: vec![],
                 xfer_bytes: 0.0,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.prefill".into(),
@@ -48,6 +49,7 @@ fn bench_plan() -> ExecutionPlan {
                 deps: vec![0],
                 xfer_bytes: 1e6,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.decode".into(),
@@ -58,6 +60,7 @@ fn bench_plan() -> ExecutionPlan {
                 deps: vec![1],
                 xfer_bytes: 1e8,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
         ],
         pipelines: vec![

@@ -46,6 +46,8 @@ use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::cost::roofline::{decode_step_time, prefill_time, Efficiency};
 use crate::cost::tco::{opex_usd_per_hour, FinanceTerms, OpexModel};
+use crate::kvcache::manager::NodeBudget;
+use crate::kvcache::{CacheManager, PagedAllocator, Tier};
 use crate::obs::trace::{classify_host_op, Span, SpanKind, TraceSink};
 use crate::plan::instance::{edge_payload_bytes, DagTopology};
 use crate::plan::{ExecutionPlan, Role, SlaSpec, Stage};
@@ -95,10 +97,10 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap()
-            .then(self.seq.cmp(&other.seq))
+        // total_cmp: a non-finite event time must not poison the heap's
+        // ordering invariant (admission rejects them, but the ordering
+        // itself stays total regardless).
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -151,6 +153,12 @@ pub struct GroupWindow {
     pub util: f64,
     /// Queued jobs at the boundary (prefill queues / decode waiting).
     pub queue: usize,
+    /// Prefix-cache hits / misses over the window — 0 unless KV reuse
+    /// is active on the backend. A high hit rate means the group's
+    /// effective prefill demand is lower than its job count suggests,
+    /// which the orchestrator folds into its scaling pressure.
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
 }
 
 /// Per-window observations handed to the [`FleetController`] — the raw
@@ -199,6 +207,219 @@ pub struct FleetChangeStats {
     pub kv_bytes: f64,
     /// When the last in-flight KV migration lands (== `t` if none).
     pub done_s: f64,
+}
+
+/// splitmix64 finalizer — the same mixer the live dispatcher uses for
+/// its payload digests; here it derives context/prefix identities.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Per-group tiered budgets for cross-step prefix-KV reuse. When
+/// attached via [`DagSim::set_kv_reuse`], LLM prefill admission hashes
+/// each job's gating parents (the same context identity the live
+/// dispatcher derives from its concatenated input payloads), consults a
+/// per-pipeline-group [`CacheManager`] + [`PagedAllocator`], and
+/// charges prefill only for the uncached suffix. Reuse is **off by
+/// default**: runs without it are bit-identical to before.
+#[derive(Debug, Clone)]
+pub struct KvReuseConfig {
+    /// Per-group HBM prefix-pool bytes (page-quantized).
+    pub hbm_bytes: f64,
+    /// DRAM / disk spill tiers per group — a colder-tier hit pays the
+    /// tier's restore latency instead of a full re-prefill.
+    pub dram_bytes: f64,
+    pub disk_bytes: f64,
+    /// Paged-allocator page size, tokens.
+    pub page_tokens: u32,
+}
+
+impl Default for KvReuseConfig {
+    fn default() -> KvReuseConfig {
+        KvReuseConfig {
+            hbm_bytes: 16e9,
+            dram_bytes: 64e9,
+            disk_bytes: 256e9,
+            page_tokens: 256,
+        }
+    }
+}
+
+/// Per-run prefix-cache state: one cache node and one HBM page pool per
+/// prefill pipeline group, assigned lazily as groups first dispatch.
+/// The [`CacheManager`] is the tier directory (LRU demotion under
+/// pressure), the [`PagedAllocator`] shadows HBM residency at page
+/// granularity; both are sized from the same budget so they agree on
+/// capacity. Shared with the live dispatcher
+/// (`server::dag_exec::DagDispatch`) so both backends run *identical*
+/// hit/miss accounting — the basis of the conformance suite's exact
+/// per-group hit-count parity.
+pub(crate) struct KvReuse {
+    cache: CacheManager,
+    pages: Vec<PagedAllocator>,
+    /// Sessions currently shadowed in each group's page pool.
+    resident: Vec<Vec<u64>>,
+    node_of_group: BTreeMap<String, u32>,
+    /// Cached prefix length per session, tokens.
+    tokens_of: BTreeMap<u64, u64>,
+    /// KV bytes per token of the plan's model (page pricing).
+    token_bytes: f64,
+    page_tokens: u32,
+    /// Cumulative per-group hit/miss ledgers plus window snapshots.
+    hits: BTreeMap<String, u64>,
+    misses: BTreeMap<String, u64>,
+    prev_hits: BTreeMap<String, u64>,
+    prev_misses: BTreeMap<String, u64>,
+}
+
+impl KvReuse {
+    pub(crate) fn new(cfg: &KvReuseConfig, n_groups: usize, token_bytes: f64) -> KvReuse {
+        let page_bytes = cfg.page_tokens as f64 * token_bytes;
+        let pages_per_group = ((cfg.hbm_bytes / page_bytes).floor() as u32).max(1);
+        // Quantize the HBM budget to whole pages so the directory and
+        // the page pool can never disagree on what fits.
+        let hbm = pages_per_group as f64 * page_bytes;
+        let budgets = vec![
+            NodeBudget {
+                hbm,
+                dram: cfg.dram_bytes,
+                disk: cfg.disk_bytes,
+            };
+            n_groups
+        ];
+        KvReuse {
+            cache: CacheManager::new(budgets),
+            pages: (0..n_groups)
+                .map(|_| PagedAllocator::new(pages_per_group, cfg.page_tokens))
+                .collect(),
+            resident: vec![Vec::new(); n_groups],
+            node_of_group: BTreeMap::new(),
+            tokens_of: BTreeMap::new(),
+            token_bytes,
+            page_tokens: cfg.page_tokens,
+            hits: BTreeMap::new(),
+            misses: BTreeMap::new(),
+            prev_hits: BTreeMap::new(),
+            prev_misses: BTreeMap::new(),
+        }
+    }
+
+    /// The tier directory, read-only — what the prefix-hit
+    /// [`crate::router::Router`] probes (`find_prefix` worker ids are
+    /// the cache node ids handed out by [`Self::node_for`]).
+    pub(crate) fn cache(&self) -> &CacheManager {
+        &self.cache
+    }
+
+    /// Cache node for a group key, assigned on first sight. None when
+    /// more groups appeared (fleet changes) than nodes were pre-sized
+    /// for — those groups bypass the cache (every lookup misses).
+    pub(crate) fn node_for(&mut self, key: &str) -> Option<u32> {
+        if let Some(&n) = self.node_of_group.get(key) {
+            return Some(n);
+        }
+        let n = self.node_of_group.len();
+        if n < self.pages.len() {
+            self.node_of_group.insert(key.to_string(), n as u32);
+            Some(n as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Session identity of a context hash pinned to a group: the first
+    /// job writes it, every later job with the same context hits it.
+    fn session_of(node: u32, hash: u64) -> u64 {
+        mix64(hash ^ (((node as u64) << 48) | 0x5EED))
+    }
+
+    /// Whether `key`'s group already holds `hash` (read-only; the
+    /// prefix-affinity routing probe).
+    fn holds(&self, key: &str, hash: u64) -> bool {
+        self.node_of_group
+            .get(key)
+            .is_some_and(|&n| self.cache.locate(Self::session_of(n, hash)).is_some())
+    }
+
+    /// Reconcile the page shadow with the directory: free pages of
+    /// sessions the manager demoted out of HBM since the last sync.
+    fn sync_pages(&mut self, node: u32) {
+        let ni = node as usize;
+        let cache = &self.cache;
+        let pages = &mut self.pages[ni];
+        self.resident[ni].retain(|&s| {
+            if cache.locate(s) == Some((node, Tier::Hbm)) {
+                true
+            } else {
+                let _ = pages.free_seq(s);
+                false
+            }
+        });
+    }
+
+    /// Shadow an HBM-resident session's pages after an insert or a
+    /// promoting touch.
+    fn shadow(&mut self, node: u32, session: u64, tokens: u64) {
+        self.sync_pages(node);
+        let ni = node as usize;
+        if self.cache.locate(session) != Some((node, Tier::Hbm)) || self.pages[ni].has_seq(session)
+        {
+            return;
+        }
+        if self.pages[ni].alloc_seq(session, tokens.max(1)).is_ok() {
+            self.resident[ni].push(session);
+        }
+    }
+
+    /// Consult the group's prefix cache for a prefill of `tokens`
+    /// tokens under context `hash`: returns the tokens to actually
+    /// prefill (the uncached suffix on a hit, ≥ 1), any tier-restore
+    /// stall, and whether it was a hit, recording it in the per-group
+    /// ledger.
+    pub(crate) fn consult(&mut self, key: &str, hash: u64, tokens: u64) -> (u64, f64, bool) {
+        let Some(node) = self.node_for(key) else {
+            *self.misses.entry(key.to_string()).or_insert(0) += 1;
+            return (tokens, 0.0, false);
+        };
+        let session = Self::session_of(node, hash);
+        if self.cache.locate(session).is_some() {
+            *self.hits.entry(key.to_string()).or_insert(0) += 1;
+            // Colder-tier hits stall for the restore, not a re-prefill.
+            let restore = self.cache.restore_latency_s(session);
+            self.cache.touch(session);
+            let cached = self.tokens_of.get(&session).copied().unwrap_or(0);
+            self.shadow(node, session, cached);
+            (tokens.saturating_sub(cached).max(1), restore, true)
+        } else {
+            *self.misses.entry(key.to_string()).or_insert(0) += 1;
+            let page_bytes = self.page_tokens as f64 * self.token_bytes;
+            let bytes =
+                self.pages[node as usize].pages_for(tokens.max(1)) as f64 * page_bytes;
+            // Insert can fail when the spill tiers are exhausted — the
+            // prefix simply stays uncacheable and later jobs miss: hit
+            // rate is capacity-dependent, not a constant.
+            if self.cache.insert(session, node, bytes, hash).is_ok() {
+                self.tokens_of.insert(session, tokens);
+                self.shadow(node, session, tokens);
+            }
+            (tokens, 0.0, false)
+        }
+    }
+
+    /// Per-group hit/miss deltas since the last window, rolling the
+    /// snapshot.
+    pub(crate) fn window_delta(&mut self, key: &str) -> (u64, u64) {
+        let h = self.hits.get(key).copied().unwrap_or(0);
+        let m = self.misses.get(key).copied().unwrap_or(0);
+        let dh = h - self.prev_hits.get(key).copied().unwrap_or(0);
+        let dm = m - self.prev_misses.get(key).copied().unwrap_or(0);
+        self.prev_hits.insert(key.to_string(), h);
+        self.prev_misses.insert(key.to_string(), m);
+        (dh, dm)
+    }
 }
 
 /// Closed-loop hook: observe window boundaries, optionally re-plan.
@@ -286,6 +507,13 @@ struct RunState {
     completed: usize,
     kv_bytes_moved: f64,
     output_tokens: u64,
+    /// Cross-step prefix reuse state (None = reuse disabled).
+    reuse: Option<KvReuse>,
+    /// Prompt tokens actually prefilled — with reuse on, only the
+    /// uncached suffixes are charged, so this shrinks as hit rate
+    /// rises. Compared against the live server's prefill-token counter
+    /// by the conformance suite.
+    prefill_tokens: u64,
     // Window accumulators (reset at every tick).
     win_arrivals: usize,
     win_completed: usize,
@@ -333,6 +561,15 @@ pub struct DagDetail {
     pub jobs_by_group: BTreeMap<String, u64>,
     /// Mean sojourn (dispatch-ready → complete) per plan binding.
     pub node_mean_latency_s: Vec<f64>,
+    /// Prompt tokens actually prefilled (reuse-on charges only uncached
+    /// suffixes, so this drops as the prefix cache warms).
+    pub prefill_tokens: u64,
+    /// Cumulative prefix-cache hits / misses per pipeline group (empty
+    /// when KV reuse is disabled) — pinned 1:1 against the live
+    /// server's `server_prefix_hits:*` counters by the conformance
+    /// suite.
+    pub prefix_hits_by_group: BTreeMap<String, u64>,
+    pub prefix_misses_by_group: BTreeMap<String, u64>,
 }
 
 /// The agent-DAG simulator. Construct with [`DagSim::new`] from a
@@ -362,6 +599,9 @@ pub struct DagSim {
     seq: u64,
     /// Populated by the last completed run (see [`DagSim::last_detail`]).
     detail: Option<DagDetail>,
+    /// Cross-step prefix-KV reuse budgets; None (the default) disables
+    /// reuse entirely — see [`DagSim::set_kv_reuse`].
+    reuse_cfg: Option<KvReuseConfig>,
     /// When attached, every executed stage, cross-chassis transfer, and
     /// request envelope is emitted as a [`Span`] (see `obs::trace`) —
     /// the same schema the live server records.
@@ -433,8 +673,32 @@ impl DagSim {
             heap: BinaryHeap::new(),
             seq: 0,
             detail: None,
+            reuse_cfg: None,
             trace_sink: None,
         })
+    }
+
+    /// Enable cross-step prefix-KV reuse for subsequent runs: prefill
+    /// admission hashes each LLM job's gating parents, consults a
+    /// per-group prefix cache under `cfg`'s budgets, and charges only
+    /// the uncached suffix. Off by default — runs without it are
+    /// bit-identical to the pre-reuse simulator.
+    pub fn set_kv_reuse(&mut self, cfg: KvReuseConfig) {
+        self.reuse_cfg = Some(cfg);
+    }
+
+    /// Context identity of an LLM job: its request plus its gating
+    /// parents, mixed the way the live dispatcher hashes concatenated
+    /// input payloads. Two jobs share a hash exactly when the live
+    /// backend would hand their units byte-identical context (same
+    /// request, same dependency list) — the sim/live parity contract
+    /// the conformance suite pins.
+    fn prefix_hash_of(&self, job: Job) -> u64 {
+        let mut h = mix64(job.req as u64 ^ 0xA5A5_5A5A_DEAD_BEEF);
+        for &d in &self.plan.bindings[job.node].deps {
+            h = mix64(h ^ (d as u64).wrapping_add(0x517C_C1B7_2722_0A95));
+        }
+        h
     }
 
     /// Per-stage detail of the last completed run (None before any).
@@ -500,12 +764,26 @@ impl DagSim {
             st.start_s[self.flat(*j)] = now;
         }
         // Batch prefill time at the longest (token-fraction-scaled)
-        // prompt in the batch.
-        let isl = batch
+        // prompt in the batch. With reuse on, each job consults the
+        // pipe group's prefix cache and is charged only its uncached
+        // suffix, so the batch is timed at the longest *uncached*
+        // prompt plus any tier-restore stall.
+        let lens: Vec<(u64, u64)> = batch
             .iter()
-            .map(|j| self.isl_of(st, *j))
-            .max()
-            .unwrap_or(1);
+            .map(|j| (self.isl_of(st, *j), self.prefix_hash_of(*j)))
+            .collect();
+        let gkey = group_key(Role::Prefill, &st.prefill[pi].spec);
+        let mut isl = 1u64;
+        let mut restore = 0.0f64;
+        for (tokens, hash) in lens {
+            let (uncached, stall, _hit) = match st.reuse.as_mut() {
+                Some(rz) => rz.consult(&gkey, hash, tokens),
+                None => (tokens, 0.0, false),
+            };
+            st.prefill_tokens += uncached;
+            isl = isl.max(uncached);
+            restore = restore.max(stall);
+        }
         let p = &mut st.prefill[pi];
         let t_pre = prefill_time(
             model,
@@ -515,7 +793,8 @@ impl DagSim {
             batch.len() as u64,
             &self.eff,
         )
-        .total();
+        .total()
+            + restore;
         let id = p.next_batch;
         p.next_batch += 1;
         p.busy = true;
@@ -577,31 +856,50 @@ impl DagSim {
         self.push(now + step, Ev::DecodeRound(di));
     }
 
-    /// Least-loaded live pipe serving `class`.
-    fn pick_prefill(&self, st: &RunState, class: &str) -> usize {
+    /// Least-loaded live pipe serving `class` — prefix-affinity first
+    /// when reuse is on (a pipe whose group already holds the job's
+    /// context wins), mirroring the live router's PrefixHit →
+    /// LeastLoaded order. A drained class (last live pipe retired
+    /// mid-run) surfaces as a typed `Capacity` error, never a panic.
+    fn pick_prefill(&self, st: &RunState, class: &str, prefix: Option<u64>) -> Result<usize> {
         let cands = st
             .prefill_pipes_of
             .get(class)
-            .unwrap_or_else(|| panic!("no live prefill pipelines for class {class}"));
-        *cands
+            .filter(|v| !v.is_empty())
+            .ok_or_else(|| {
+                Error::Capacity(format!("no live prefill pipelines for class {class}"))
+            })?;
+        if let (Some(h), Some(rz)) = (prefix, st.reuse.as_ref()) {
+            let hit = cands
+                .iter()
+                .filter(|&&k| rz.holds(&group_key(Role::Prefill, &st.prefill[k].spec), h))
+                .min_by_key(|&&k| st.prefill[k].queue.len() + st.prefill[k].busy as usize);
+            if let Some(&k) = hit {
+                return Ok(k);
+            }
+        }
+        Ok(*cands
             .iter()
             .min_by_key(|&&k| st.prefill[k].queue.len() + st.prefill[k].busy as usize)
-            .unwrap()
+            .expect("candidate set is non-empty"))
     }
 
-    fn pick_decode(&self, st: &RunState, class: &str) -> usize {
+    fn pick_decode(&self, st: &RunState, class: &str) -> Result<usize> {
         let cands = st
             .decode_pipes_of
             .get(class)
-            .unwrap_or_else(|| panic!("no live decode pipelines for class {class}"));
-        *cands
+            .filter(|v| !v.is_empty())
+            .ok_or_else(|| {
+                Error::Capacity(format!("no live decode pipelines for class {class}"))
+            })?;
+        Ok(*cands
             .iter()
             .min_by_key(|&&k| st.decode[k].active.len() + st.decode[k].waiting.len())
-            .unwrap()
+            .expect("candidate set is non-empty"))
     }
 
     /// All dependencies of `job` satisfied: dispatch it to its stage.
-    fn dispatch(&mut self, st: &mut RunState, job: Job, now: f64) {
+    fn dispatch(&mut self, st: &mut RunState, job: Job, now: f64) -> Result<()> {
         st.ready_s[self.flat(job)] = now;
         let binding = &self.plan.bindings[job.node];
         match binding.stage {
@@ -622,7 +920,10 @@ impl DagSim {
                 let fi = self.flat(job);
                 let pi = match st.pipe_of[fi] {
                     Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
-                    _ => self.pick_prefill(st, &binding.class.clone()),
+                    _ => {
+                        let ph = st.reuse.is_some().then(|| self.prefix_hash_of(job));
+                        self.pick_prefill(st, &binding.class.clone(), ph)?
+                    }
                 };
                 *st.jobs_by_group
                     .entry(group_key(Role::Prefill, &st.prefill[pi].spec))
@@ -636,7 +937,7 @@ impl DagSim {
                 let fi = self.flat(job);
                 let di = match st.pipe_of[fi] {
                     Some((Role::Decode, k)) if !st.decode[k].retired => k,
-                    _ => self.pick_decode(st, &binding.class.clone()),
+                    _ => self.pick_decode(st, &binding.class.clone())?,
                 };
                 *st.jobs_by_group
                     .entry(group_key(Role::Decode, &st.decode[di].spec))
@@ -646,6 +947,7 @@ impl DagSim {
                 self.maybe_schedule_round(st, di, now);
             }
         }
+        Ok(())
     }
 
     /// Chassis a completed job ran on, if pipeline-bound.
@@ -754,14 +1056,18 @@ impl DagSim {
                     Stage::LlmPrefill => {
                         let k = match st.pipe_of[fi] {
                             Some((Role::Prefill, k)) if !st.prefill[k].retired => k,
-                            _ => self.pick_prefill(st, &succ_binding.class.clone()),
+                            _ => {
+                                let ph =
+                                    st.reuse.is_some().then(|| self.prefix_hash_of(succ_job));
+                                self.pick_prefill(st, &succ_binding.class.clone(), ph)?
+                            }
                         };
                         (st.prefill[k].spec.chassis, (Role::Prefill, k))
                     }
                     Stage::LlmDecode => {
                         let k = match st.pipe_of[fi] {
                             Some((Role::Decode, k)) if !st.decode[k].retired => k,
-                            _ => self.pick_decode(st, &succ_binding.class.clone()),
+                            _ => self.pick_decode(st, &succ_binding.class.clone())?,
                         };
                         (st.decode[k].spec.chassis, (Role::Decode, k))
                     }
@@ -900,9 +1206,13 @@ impl DagSim {
             a.replicas += u32::from(!d.retired);
             a.queue += d.waiting.len();
         }
-        let groups: Vec<GroupWindow> = acc
-            .into_iter()
-            .map(|((role, key), a)| GroupWindow {
+        let mut groups: Vec<GroupWindow> = Vec::with_capacity(acc.len());
+        for ((role, key), a) in acc {
+            let (prefix_hits, prefix_misses) = match (role, st.reuse.as_mut()) {
+                (Role::Prefill, Some(rz)) => rz.window_delta(&key),
+                _ => (0, 0),
+            };
+            groups.push(GroupWindow {
                 role,
                 key,
                 device: a.device,
@@ -910,8 +1220,10 @@ impl DagSim {
                 max_batch: a.max_batch,
                 util: util(a.busy_delta, 0.0, a.devices),
                 queue: a.queue,
-            })
-            .collect();
+                prefix_hits,
+                prefix_misses,
+            });
+        }
 
         let stats = WindowStats {
             t0,
@@ -1129,7 +1441,8 @@ impl DagSim {
         // ---- re-route displaced work -------------------------------
         for job in prefill_requeue {
             let class = self.plan.bindings[job.node].class.clone();
-            let pi = self.pick_prefill(st, &class);
+            let ph = st.reuse.is_some().then(|| self.prefix_hash_of(job));
+            let pi = self.pick_prefill(st, &class, ph)?;
             let fi = self.flat(job);
             st.pipe_of[fi] = Some((Role::Prefill, pi));
             st.prefill[pi].queue.push_back(job);
@@ -1137,7 +1450,7 @@ impl DagSim {
         }
         for (job, from_ch) in kv_moves {
             let class = self.plan.bindings[job.node].class.clone();
-            let di = self.pick_decode(st, &class);
+            let di = self.pick_decode(st, &class)?;
             let to_ch = st.decode[di].spec.chassis;
             let bytes = match &self.model {
                 Some(m) => {
@@ -1219,6 +1532,18 @@ impl DagSim {
         if n_req == 0 {
             return Err(Error::Runtime("empty request trace".into()));
         }
+        // Reject non-finite event times at admission: the heap's
+        // ordering is total either way (`f64::total_cmp`), but a NaN
+        // arrival would sort *after* every finite event and silently
+        // warp the schedule instead of failing loudly.
+        for (i, r) in trace.iter().enumerate() {
+            if !r.arrive_s.is_finite() {
+                return Err(Error::Config(format!(
+                    "request {i} has non-finite arrival time {}",
+                    r.arrive_s
+                )));
+            }
+        }
         self.clock.reset();
         self.heap.clear();
 
@@ -1289,6 +1614,22 @@ impl DagSim {
             completed: 0,
             kv_bytes_moved: 0.0,
             output_tokens: 0,
+            reuse: self.reuse_cfg.as_ref().and_then(|cfg| {
+                self.model.as_ref().map(|m| {
+                    // One cache node per initial prefill group, with
+                    // headroom for groups that fleet changes introduce
+                    // mid-run (overflow groups bypass the cache).
+                    let mut keys: Vec<String> = self
+                        .prefill_specs
+                        .iter()
+                        .map(|s| group_key(Role::Prefill, s))
+                        .collect();
+                    keys.sort();
+                    keys.dedup();
+                    KvReuse::new(cfg, keys.len() + 8, kv_cache_bytes(m, 1, 1))
+                })
+            }),
+            prefill_tokens: 0,
             win_arrivals: 0,
             win_completed: 0,
             win_sla_ok: 0,
@@ -1329,7 +1670,7 @@ impl DagSim {
                     }
                     for node in 0..n_nodes {
                         if self.indeg[node] == 0 {
-                            self.dispatch(&mut st, Job { req, node }, t);
+                            self.dispatch(&mut st, Job { req, node }, t)?;
                         }
                     }
                 }
@@ -1340,7 +1681,7 @@ impl DagSim {
                     st.dep_from[fi] = from as i64;
                     st.remaining[fi] -= 1;
                     if st.remaining[fi] == 0 {
-                        self.dispatch(&mut st, job, t);
+                        self.dispatch(&mut st, job, t)?;
                     }
                 }
                 Ev::CpuDone(job) => {
@@ -1402,7 +1743,7 @@ impl DagSim {
                     // transfer was scheduled; land on a live pipe.
                     let di = if st.decode[to].retired {
                         let class = self.plan.bindings[job.node].class.clone();
-                        self.pick_decode(&st, &class)
+                        self.pick_decode(&st, &class)?
                     } else {
                         to
                     };
@@ -1440,6 +1781,17 @@ impl DagSim {
             prefill_jobs: st.prefill_jobs,
             decode_jobs: st.decode_jobs,
             jobs_by_group: st.jobs_by_group.clone(),
+            prefill_tokens: st.prefill_tokens,
+            prefix_hits_by_group: st
+                .reuse
+                .as_ref()
+                .map(|r| r.hits.clone())
+                .unwrap_or_default(),
+            prefix_misses_by_group: st
+                .reuse
+                .as_ref()
+                .map(|r| r.misses.clone())
+                .unwrap_or_default(),
             node_mean_latency_s: (0..n_nodes)
                 .map(|i| {
                     if st.node_lat_n[i] > 0 {
@@ -1636,6 +1988,7 @@ mod tests {
                     deps: vec![],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "tool.lookup".into(),
@@ -1646,6 +1999,7 @@ mod tests {
                     deps: vec![0],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "io.output".into(),
@@ -1656,6 +2010,7 @@ mod tests {
                     deps: vec![1],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
             ],
             pipelines: vec![],
@@ -1968,5 +2323,132 @@ mod tests {
             windows_seen: 0,
         };
         assert!(sim.run_controlled(&t, 0.2, &mut ctl).is_err());
+    }
+
+    #[test]
+    fn non_finite_arrival_is_rejected_not_panicked() {
+        let plan = tiny_plan();
+        let mut t = trace(4, 2.0);
+        t[2].arrive_s = f64::NAN;
+        let r = DagSim::new(&plan).unwrap().run(&t);
+        assert!(matches!(r, Err(Error::Config(_))));
+        let mut t2 = trace(4, 2.0);
+        t2[0].arrive_s = f64::INFINITY;
+        let r2 = DagSim::new(&plan).unwrap().run(&t2);
+        assert!(matches!(r2, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn drain_to_zero_surfaces_typed_error_not_panic() {
+        // A fleet change that retires a class's last live pipes while
+        // work is in flight must surface as a typed Capacity rejection
+        // — the routing layer (`pick_prefill`/`pick_decode`) returns
+        // Result now instead of panicking on an empty candidate set.
+        let base = tiny_plan();
+        let mut bad = tiny_plan();
+        bad.pipelines[1].device = "H100".into();
+        bad.bindings[2].class = "H100".into(); // validate() stays happy
+        let t = trace(48, 80.0); // keeps decode saturated at the change
+        let mut sim = DagSim::new(&base).unwrap();
+        let mut ctl = Scripted {
+            window: 0,
+            script: vec![(1, bad)],
+            applied: Vec::new(),
+            windows_seen: 0,
+        };
+        let r = sim.run_controlled(&t, 0.1, &mut ctl);
+        assert!(matches!(r, Err(Error::Capacity(_))));
+    }
+
+    #[test]
+    fn prefix_reuse_charges_only_uncached_suffixes() {
+        use crate::plan::presets::shared_prefix_fanout;
+
+        let plan = shared_prefix_fanout("8b-fp16", "H100", 4);
+        let t = trace(8, 1.0);
+        let mut off = DagSim::new(&plan).unwrap();
+        off.run(&t).unwrap();
+        let d_off = off.last_detail().unwrap().clone();
+        let mut on = DagSim::new(&plan).unwrap();
+        on.set_kv_reuse(KvReuseConfig::default());
+        on.run(&t).unwrap();
+        let d_on = on.last_detail().unwrap().clone();
+        // The same work reaches the same groups either way...
+        assert_eq!(d_on.jobs_by_group, d_off.jobs_by_group);
+        // ...but reuse-off never consults the cache...
+        assert_eq!(d_off.prefix_hits_by_group.values().sum::<u64>(), 0);
+        assert_eq!(d_off.prefix_misses_by_group.values().sum::<u64>(), 0);
+        // ...while reuse-on hits for every fan-out sibling after the
+        // first (4 workers share the planner's context → 3 hits per
+        // request) and charges strictly fewer prefill tokens.
+        let hits: u64 = d_on.prefix_hits_by_group.values().sum();
+        assert_eq!(hits, 8 * 3, "{:?}", d_on.prefix_hits_by_group);
+        assert!(
+            d_on.prefill_tokens < d_off.prefill_tokens,
+            "reuse-on must prefill fewer tokens: {} vs {}",
+            d_on.prefill_tokens,
+            d_off.prefill_tokens
+        );
+    }
+
+    #[test]
+    fn tight_hbm_budget_evicts_and_reinflates_prefill_cost() {
+        use crate::cost::Precision;
+        use crate::plan::presets::shared_prefix_fanout;
+
+        // Hit rate is capacity-dependent: with an HBM pool holding one
+        // prefix and no spill tiers, the planner's own context occupies
+        // the pool and every fan-out worker misses — the same trace
+        // that hits 3×/request under ample budgets prefills from
+        // scratch here.
+        let plan = shared_prefix_fanout("8b-fp16", "H100", 4);
+        let t = trace(8, 1.0);
+        let m = crate::cost::model_profile::llama3_8b(Precision::Fp16);
+        let token_bytes = kv_cache_bytes(&m, 1, 1);
+        let tight = KvReuseConfig {
+            hbm_bytes: 2.0 * 256.0 * token_bytes, // one 512-token entry
+            dram_bytes: 0.0,
+            disk_bytes: 0.0,
+            page_tokens: 256,
+        };
+        let mut sim_tight = DagSim::new(&plan).unwrap();
+        sim_tight.set_kv_reuse(tight);
+        sim_tight.run(&t).unwrap();
+        let d_tight = sim_tight.last_detail().unwrap().clone();
+        let mut sim_ample = DagSim::new(&plan).unwrap();
+        sim_ample.set_kv_reuse(KvReuseConfig::default());
+        sim_ample.run(&t).unwrap();
+        let d_ample = sim_ample.last_detail().unwrap().clone();
+        let hits_tight: u64 = d_tight.prefix_hits_by_group.values().sum();
+        let hits_ample: u64 = d_ample.prefix_hits_by_group.values().sum();
+        assert!(hits_tight < hits_ample, "{hits_tight} vs {hits_ample}");
+        assert!(
+            d_tight.prefill_tokens > d_ample.prefill_tokens,
+            "capacity pressure must re-inflate prefill cost: {} vs {}",
+            d_tight.prefill_tokens,
+            d_ample.prefill_tokens
+        );
+    }
+
+    #[test]
+    fn window_stats_surface_prefix_hit_rates() {
+        use crate::plan::presets::shared_prefix_fanout;
+
+        let plan = shared_prefix_fanout("8b-fp16", "H100", 4);
+        let t = trace(16, 4.0);
+        let mut sim = DagSim::new(&plan).unwrap();
+        sim.set_kv_reuse(KvReuseConfig::default());
+        let mut ctl = GroupWatcher { seen: Vec::new() };
+        sim.run_controlled(&t, 0.5, &mut ctl).unwrap();
+        let hits: u64 = ctl.seen.iter().flatten().map(|g| g.prefix_hits).sum();
+        let misses: u64 = ctl.seen.iter().flatten().map(|g| g.prefix_misses).sum();
+        assert!(hits > 0, "windows must surface prefix hits");
+        assert!(misses > 0, "first-touch contexts must surface as misses");
+        // Only prefill groups carry prefix traffic.
+        for g in ctl.seen.iter().flatten() {
+            if g.role == Role::Decode {
+                assert_eq!(g.prefix_hits + g.prefix_misses, 0, "{g:?}");
+            }
+        }
     }
 }

@@ -121,9 +121,25 @@ impl CacheManager {
                 "entry of {bytes}B exceeds node {node} HBM pool"
             )));
         }
-        self.make_room(node, Tier::Hbm, bytes)?;
+        // Credit a superseded entry before sizing the insert: the old
+        // bytes must not count as resident while make_room runs, or a
+        // re-insert of a resized session at near-full HBM demotes
+        // bystanders (or fails with a false Capacity error) to fit a
+        // total that never coexists.
+        let old = self.entries.remove(&session);
+        if let Some(o) = &old {
+            self.unindex_prefix(o.prefix_hash, session);
+        }
+        if let Err(e) = self.make_room(node, Tier::Hbm, bytes) {
+            // Failed insert must not drop the superseded entry.
+            if let Some(o) = old {
+                self.prefix_index.entry(o.prefix_hash).or_default().push(session);
+                self.entries.insert(session, o);
+            }
+            return Err(e);
+        }
         let t = self.tick();
-        if let Some(old) = self.entries.insert(
+        self.entries.insert(
             session,
             CacheEntry {
                 session,
@@ -133,9 +149,7 @@ impl CacheManager {
                 last_use: t,
                 prefix_hash,
             },
-        ) {
-            self.unindex_prefix(old.prefix_hash, session);
-        }
+        );
         self.prefix_index.entry(prefix_hash).or_default().push(session);
         Ok(())
     }
@@ -187,14 +201,18 @@ impl CacheManager {
             (e.node, e.bytes, e.tier)
         };
         if found != Tier::Hbm {
-            // Promote: make room in HBM first.
-            if self.make_room(node, Tier::Hbm, bytes).is_err() {
-                // HBM hopeless; leave it where it is.
-                let t = self.tick();
-                self.entries.get_mut(&session).unwrap().last_use = t;
-                return Some(found);
+            // Lift the entry out while promoting: it must neither be a
+            // cascade victim (HBM→DRAM demotions call make_room at the
+            // tier it occupies, and self-demotion would be silently
+            // overwritten below) nor count against the tier it is
+            // vacating. On failure it goes back where it was.
+            let mut lifted = self.entries.remove(&session).unwrap();
+            if self.make_room(node, Tier::Hbm, bytes).is_ok() {
+                lifted.tier = Tier::Hbm;
             }
-            self.entries.get_mut(&session).unwrap().tier = Tier::Hbm;
+            lifted.last_use = self.tick();
+            self.entries.insert(session, lifted);
+            return Some(found);
         }
         let t = self.tick();
         self.entries.get_mut(&session).unwrap().last_use = t;
@@ -345,5 +363,169 @@ mod tests {
         assert!(!m.evict(1));
         assert_eq!(m.touch(1), None);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn reinsert_resized_session_credits_old_bytes() {
+        // A session growing in place at near-full HBM must not count
+        // its superseded bytes while room is made. dram too small to
+        // absorb a spurious demotion, so the old double-count turned
+        // this into a false Capacity error.
+        let mut m = CacheManager::new(vec![NodeBudget {
+            hbm: 100.0,
+            dram: 50.0,
+            disk: 1000.0,
+        }]);
+        m.insert(1, 0, 80.0, 0xA).unwrap();
+        m.insert(1, 0, 90.0, 0xA).unwrap();
+        assert_eq!(m.locate(1), Some((0, Tier::Hbm)));
+        assert_eq!(m.used(0, Tier::Hbm), 90.0);
+        assert_eq!(m.used(0, Tier::Dram), 0.0);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.find_prefix(0xA), Some(0));
+    }
+
+    #[test]
+    fn reinsert_does_not_demote_bystanders() {
+        let mut m = mgr(100.0);
+        m.insert(1, 0, 60.0, 1).unwrap();
+        m.insert(2, 0, 30.0, 2).unwrap();
+        m.touch(1); // 2 is LRU — the old code's spurious victim
+        m.insert(1, 0, 70.0, 1).unwrap(); // 30 + 70 fits exactly
+        assert_eq!(m.locate(1), Some((0, Tier::Hbm)));
+        assert_eq!(m.locate(2), Some((0, Tier::Hbm)), "bystander must stay");
+        assert_eq!(m.used(0, Tier::Hbm), 100.0);
+    }
+
+    #[test]
+    fn failed_reinsert_keeps_old_entry() {
+        // Oversized replacement is rejected up front; a make_room
+        // failure must also restore the superseded entry.
+        let mut m = CacheManager::new(vec![NodeBudget {
+            hbm: 100.0,
+            dram: 10.0,
+            disk: 10.0,
+        }]);
+        m.insert(1, 0, 50.0, 0xA).unwrap();
+        m.insert(2, 0, 50.0, 0xB).unwrap();
+        // Fitting 90 needs a victim demoted, but dram can't take 50.
+        assert!(m.insert(1, 0, 90.0, 0xC).is_err());
+        assert_eq!(m.locate(1), Some((0, Tier::Hbm)));
+        assert_eq!(m.used(0, Tier::Hbm), 100.0);
+        assert_eq!(m.find_prefix(0xA), Some(0), "old prefix still indexed");
+        assert_eq!(m.find_prefix(0xC), None);
+    }
+
+    #[test]
+    fn touch_promotion_never_victimizes_the_promoting_session() {
+        // Tight DRAM: promoting 1 evicts 2 from HBM, whose demotion
+        // makes room at DRAM — where 1 is the only (and LRU) resident.
+        // The old code demoted 1 toward Disk mid-promotion (failing
+        // outright when disk is too small), then blindly stamped it
+        // Hbm. Fixed: 1 is lifted out, so 2 slides into the space 1
+        // vacates and the swap succeeds even with no disk at all.
+        let mut m = CacheManager::new(vec![NodeBudget {
+            hbm: 100.0,
+            dram: 100.0,
+            disk: 50.0,
+        }]);
+        m.insert(1, 0, 90.0, 1).unwrap();
+        m.insert(2, 0, 90.0, 2).unwrap(); // 1 → DRAM
+        assert_eq!(m.locate(1), Some((0, Tier::Dram)));
+        assert_eq!(m.touch(1), Some(Tier::Dram));
+        assert_eq!(m.locate(1), Some((0, Tier::Hbm)));
+        assert_eq!(m.locate(2), Some((0, Tier::Dram)));
+        assert_eq!(m.used(0, Tier::Disk), 0.0, "nothing bounced to disk");
+    }
+
+    #[test]
+    fn touch_leaves_session_in_place_when_promotion_is_impossible() {
+        // Promoting 1 (40B) needs 2 (90B) out of HBM, but 90B fits in
+        // neither DRAM nor disk: promotion fails closed and the
+        // session keeps its tier instead of bouncing down the ladder.
+        let mut m = CacheManager::new(vec![NodeBudget {
+            hbm: 100.0,
+            dram: 50.0,
+            disk: 10.0,
+        }]);
+        m.insert(1, 0, 40.0, 1).unwrap();
+        m.insert(2, 0, 90.0, 2).unwrap(); // 1 → DRAM
+        assert_eq!(m.locate(1), Some((0, Tier::Dram)));
+        let was = m.touch(1).unwrap();
+        assert_eq!(was, Tier::Dram);
+        assert_eq!(m.locate(1), Some((0, Tier::Dram)), "left in place");
+        assert_eq!(m.locate(2), Some((0, Tier::Hbm)));
+    }
+
+    /// Conservation property mirroring the paged allocator's
+    /// `no_page_leak_property`: across random insert/touch/evict
+    /// interleavings, per-tier residency never exceeds capacity and the
+    /// prefix index never dangles (every indexed session exists with
+    /// that hash, every entry is indexed exactly once). Deepened by the
+    /// nightly `AH_PROP_CASES` run.
+    #[test]
+    fn cache_conservation_property() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+
+        prop::check("cache-manager-conservation", |rng: &mut Rng| {
+            let nodes = rng.index(2) + 1;
+            let mut m = CacheManager::new(
+                (0..nodes)
+                    .map(|_| NodeBudget {
+                        hbm: 100.0,
+                        dram: (rng.index(3) as f64 + 1.0) * 60.0,
+                        disk: (rng.index(4) as f64) * 80.0,
+                    })
+                    .collect(),
+            );
+            let steps = rng.index(120);
+            for _ in 0..steps {
+                let session = rng.index(10) as u64;
+                let node = rng.index(nodes) as u32;
+                match rng.index(4) {
+                    0 | 1 => {
+                        let bytes = (rng.index(10) as f64 + 1.0) * 12.0;
+                        let hash = rng.index(5) as u64;
+                        let _ = m.insert(session, node, bytes, hash);
+                    }
+                    2 => {
+                        m.touch(session);
+                    }
+                    _ => {
+                        m.evict(session);
+                    }
+                }
+                for n in 0..nodes as u32 {
+                    for tier in [Tier::Hbm, Tier::Dram, Tier::Disk] {
+                        assert!(
+                            m.used(n, tier) <= m.capacity(n, tier) + 1e-9,
+                            "node {n} {tier:?} over capacity: {} > {}",
+                            m.used(n, tier),
+                            m.capacity(n, tier)
+                        );
+                    }
+                }
+                // Index ↔ entries bijection: no dangling sessions, no
+                // stale hashes, no duplicates, nothing unindexed.
+                let mut indexed = 0usize;
+                for (hash, sessions) in &m.prefix_index {
+                    assert!(!sessions.is_empty(), "empty index bucket {hash:#x}");
+                    for s in sessions {
+                        let e = m
+                            .entries
+                            .get(s)
+                            .unwrap_or_else(|| panic!("dangling session {s}"));
+                        assert_eq!(e.prefix_hash, *hash, "stale hash for {s}");
+                    }
+                    let mut uniq = sessions.clone();
+                    uniq.sort_unstable();
+                    uniq.dedup();
+                    assert_eq!(uniq.len(), sessions.len(), "duplicate index rows");
+                    indexed += sessions.len();
+                }
+                assert_eq!(indexed, m.len(), "entry missing from prefix index");
+            }
+        });
     }
 }

@@ -804,6 +804,48 @@ fn cmd_orchestrate(args: &Args) -> i32 {
                         }
                         Err(e) => eprintln!("homogeneous comparison failed: {e}"),
                     }
+                    // Cross-step prefix-KV reuse on the same trace: an
+                    // agentic fan-out re-sends the planner's context to
+                    // every worker step, so with reuse on only uncached
+                    // suffixes prefill — the serving-cost lever the
+                    // mixed-fleet TCO question rides on.
+                    let model = args.get_or("model", "8b-fp16");
+                    let fan = agentic_hetero::plan::presets::shared_prefix_fanout(
+                        model, &new_dev, 4,
+                    );
+                    let run_fan = |reuse: bool| {
+                        let mut sim = agentic_hetero::cluster::dag::DagSim::new(&fan)?;
+                        if reuse {
+                            sim.set_kv_reuse(
+                                agentic_hetero::cluster::dag::KvReuseConfig::default(),
+                            );
+                        }
+                        sim.run(&trace)
+                    };
+                    match (run_fan(false), run_fan(true)) {
+                        (Ok(off), Ok(on)) => {
+                            println!(
+                                "\nPrefix-KV reuse, shared-prefix fan-out on {new_dev} \
+                                 (modeled $/Mtok):"
+                            );
+                            println!(
+                                "  reuse off: {:.4}  ({:.0} tok/s)",
+                                off.usd_per_mtok, off.tokens_per_s
+                            );
+                            println!(
+                                "  reuse on:  {:.4}  ({:.0} tok/s)",
+                                on.usd_per_mtok, on.tokens_per_s
+                            );
+                            println!(
+                                "  TCO delta from reuse: {:+.2}%",
+                                (on.usd_per_mtok / off.usd_per_mtok.max(1e-12) - 1.0)
+                                    * 100.0
+                            );
+                        }
+                        (Err(e), _) | (_, Err(e)) => {
+                            eprintln!("reuse comparison failed: {e}")
+                        }
+                    }
                 }
             }
             if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {

@@ -306,6 +306,19 @@ impl Orchestrator {
         self.metrics.gauge("orch_decode_util").set(w.decode_util);
         self.metrics.gauge("orch_host_util").set(w.host_util);
         self.metrics.gauge("orch_sla_attained").set(w.sla_attained);
+        // Prefix-cache hit rate per group, when reuse traffic exists —
+        // observed as a scaling signal alongside utilization: a
+        // high-hit prefill group sustains more admitted work per
+        // replica than its raw util suggests. Zero traffic (reuse off)
+        // writes nothing, leaving pre-reuse behavior untouched.
+        for g in &w.groups {
+            let total = g.prefix_hits + g.prefix_misses;
+            if total > 0 {
+                self.metrics
+                    .gauge(&format!("orch_group_prefix_hit_rate:{}", g.key))
+                    .set(g.prefix_hits as f64 / total as f64);
+            }
+        }
         self.timeline.events.push(TimelineEvent::Window {
             t0: w.t0,
             t1: w.t1,
@@ -778,6 +791,11 @@ impl Executor for LiveExecutor {
         // (see `trace_sink` docs), attached to the timeline post-run.
         let mut window_attrs: Vec<SlaAttribution> = Vec::new();
         let mut spans_seen = 0usize;
+        // Rolling snapshots of the server's cumulative per-group prefix
+        // counters, so each window reports deltas (the simulator's
+        // window_stats applies the same rule).
+        let mut prev_prefix: std::collections::BTreeMap<String, (u64, u64)> =
+            std::collections::BTreeMap::new();
         let requests = std::mem::take(&mut self.requests);
         let mut t = 0.0f64;
         for chunk in requests.chunks(self.window) {
@@ -833,14 +851,32 @@ impl Executor for LiveExecutor {
                 .pipelines
                 .iter()
                 .enumerate()
-                .map(|(g, p)| GroupWindow {
-                    role: p.role,
-                    key: p.shape_key(),
-                    device: p.device.clone(),
-                    replicas: p.replicas,
-                    max_batch: p.max_batch,
-                    util: group_utils.get(g).copied().unwrap_or(0.0),
-                    queue: 0,
+                .map(|(g, p)| {
+                    let key = p.shape_key();
+                    let hits = self
+                        .server
+                        .metrics
+                        .counter(&format!("server_prefix_hits:{key}"))
+                        .get();
+                    let misses = self
+                        .server
+                        .metrics
+                        .counter(&format!("server_prefix_misses:{key}"))
+                        .get();
+                    let (ph, pm) = prev_prefix
+                        .insert(key.clone(), (hits, misses))
+                        .unwrap_or((0, 0));
+                    GroupWindow {
+                        role: p.role,
+                        key,
+                        device: p.device.clone(),
+                        replicas: p.replicas,
+                        max_batch: p.max_batch,
+                        util: group_utils.get(g).copied().unwrap_or(0.0),
+                        queue: 0,
+                        prefix_hits: hits.saturating_sub(ph),
+                        prefix_misses: misses.saturating_sub(pm),
+                    }
                 })
                 .collect();
             let (prefill_util, decode_util, host_util) =
@@ -1116,6 +1152,8 @@ mod tests {
                         0.5
                     },
                     queue: 0,
+                    prefix_hits: 0,
+                    prefix_misses: 0,
                 })
                 .collect();
             w

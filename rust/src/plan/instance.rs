@@ -200,6 +200,7 @@ mod tests {
             deps: vec![1],
             xfer_bytes: 1e6,
             token_fraction: 1.0,
+            prefix_overlap: 0.0,
         });
         plan.validate().unwrap();
         let (units, unit_of) = llm_units(&plan);
@@ -224,6 +225,7 @@ mod tests {
             deps: vec![0, 0],
             xfer_bytes: 0.0,
             token_fraction: 1.0,
+            prefix_overlap: 0.0,
         });
         plan.validate().unwrap();
         let (units, _) = llm_units(&plan);

@@ -109,6 +109,12 @@ pub struct NodeBinding {
     /// for whole-stream nodes). The DAG simulator scales the request's
     /// ISL/OSL by this per node.
     pub token_fraction: f64,
+    /// Planner-expected fraction of this node's prompt already resident
+    /// in a prefix cache when it dispatches (0.0 = no reuse, the
+    /// default; fan-out siblings sharing their gating parents' context
+    /// approach 1.0). The cost model discounts the prefill term by the
+    /// expected hit; absent in pre-reuse plan JSON.
+    pub prefix_overlap: f64,
 }
 
 /// Role of a serving pipeline.
@@ -376,6 +382,15 @@ impl ExecutionPlan {
                     b.op, b.token_fraction
                 )));
             }
+            if !b.prefix_overlap.is_finite()
+                || b.prefix_overlap < 0.0
+                || b.prefix_overlap > 1.0
+            {
+                return Err(Error::Config(format!(
+                    "binding {i} ({}) has bad prefix_overlap {}",
+                    b.op, b.prefix_overlap
+                )));
+            }
             if matches!(b.stage, Stage::LlmPrefill | Stage::LlmDecode) {
                 let role = if b.stage == Stage::LlmPrefill {
                     Role::Prefill
@@ -530,6 +545,7 @@ impl ExecutionPlan {
                     "deps" => b.deps.clone(),
                     "xfer_bytes" => b.xfer_bytes,
                     "token_fraction" => b.token_fraction,
+                    "prefix_overlap" => b.prefix_overlap,
                 }
             })
             .collect();
@@ -622,6 +638,12 @@ impl ExecutionPlan {
                     .get("token_fraction")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(1.0),
+                // Optional for plans written before prefix-KV reuse:
+                // absent means no expected reuse.
+                prefix_overlap: b
+                    .get("prefix_overlap")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
             });
         }
         let mut pipelines = Vec::new();
@@ -732,6 +754,7 @@ pub(crate) mod tests {
                     deps: vec![],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "llm.prefill".into(),
@@ -742,6 +765,7 @@ pub(crate) mod tests {
                     deps: vec![0],
                     xfer_bytes: 1e6,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "llm.decode".into(),
@@ -752,6 +776,7 @@ pub(crate) mod tests {
                     deps: vec![1],
                     xfer_bytes: 1e8,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "io.output".into(),
@@ -762,6 +787,7 @@ pub(crate) mod tests {
                     deps: vec![2],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
             ],
             pipelines: vec![
@@ -827,6 +853,16 @@ pub(crate) mod tests {
         assert!(p.validate().is_err(), "zero token fraction");
         p.bindings[2].token_fraction = 1.5;
         assert!(p.validate().is_err(), "token fraction above 1");
+
+        let mut p = tiny_plan();
+        p.bindings[2].prefix_overlap = -0.1;
+        assert!(p.validate().is_err(), "negative prefix overlap");
+        p.bindings[2].prefix_overlap = 1.5;
+        assert!(p.validate().is_err(), "prefix overlap above 1");
+        p.bindings[2].prefix_overlap = f64::NAN;
+        assert!(p.validate().is_err(), "non-finite prefix overlap");
+        p.bindings[2].prefix_overlap = 1.0; // full overlap is legal
+        assert!(p.validate().is_ok(), "prefix_overlap = 1.0 must pass");
     }
 
     #[test]

@@ -28,6 +28,7 @@ fn cpu(op: &str, latency_s: f64, deps: Vec<usize>) -> NodeBinding {
         deps,
         xfer_bytes: 0.0,
         token_fraction: 1.0,
+        prefix_overlap: 0.0,
     }
 }
 
@@ -48,6 +49,7 @@ fn llm(
         deps,
         xfer_bytes: 1e6,
         token_fraction: tf,
+        prefix_overlap: 0.0,
     }
 }
 
@@ -122,6 +124,74 @@ pub fn mixed_generation(
                 max_batch,
                 replicas: old_decode,
                 chassis: 1 + new_decode,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec::default(),
+        cpu_workers: 32,
+        cost_usd: 4e-5,
+        latency_s: 0.65,
+        pass_log: vec![],
+    }
+}
+
+/// An agentic fan-out plan built to exercise cross-step prefix-KV
+/// reuse: a planner prefill/decode pair whose output gates `workers`
+/// sibling worker steps. Every worker prefill shares the planner's
+/// context verbatim (identical gating deps), so with reuse enabled one
+/// worker pays the full prefill per request and the remaining
+/// `workers - 1` hit the prefix cache. Worker bindings carry
+/// `prefix_overlap = 1.0` so the planner's cost model prices the same
+/// reuse the runtime realizes; with reuse off they prefill from
+/// scratch — the TCO delta the `orchestrate` demo reports.
+pub fn shared_prefix_fanout(model: &str, device: &str, workers: u32) -> ExecutionPlan {
+    let workers = workers.max(2) as usize;
+    let mut bindings = vec![
+        cpu("io.input", 0.0005, vec![]),
+        llm("llm.prefill", device, Stage::LlmPrefill, 0.04, vec![0], 1.0),
+        llm("llm.decode", device, Stage::LlmDecode, 0.2, vec![1], 1.0),
+    ];
+    let mut outs = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let mut pre = llm("llm.prefill", device, Stage::LlmPrefill, 0.04, vec![2], 1.0);
+        pre.prefix_overlap = 1.0;
+        bindings.push(pre);
+        let pre_idx = bindings.len() - 1;
+        bindings.push(llm(
+            "llm.decode",
+            device,
+            Stage::LlmDecode,
+            0.2,
+            vec![pre_idx],
+            1.0,
+        ));
+        outs.push(bindings.len() - 1);
+    }
+    bindings.push(cpu("io.output", 0.0005, outs));
+    ExecutionPlan {
+        agent: "shared_prefix_fanout".into(),
+        model: model.into(),
+        sla: SlaSpec::EndToEnd(30.0),
+        bindings,
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: device.into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 8,
+                replicas: 2,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: device.into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 16,
+                replicas: workers as u32,
+                chassis: 2,
             },
         ],
         batching: BatchPolicy::default(),
@@ -211,6 +281,28 @@ mod tests {
         p.validate().unwrap();
         assert!((p.bindings[2].token_fraction - 0.75).abs() < 1e-9);
         assert!((p.bindings[3].token_fraction - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_prefix_fanout_siblings_share_gating_deps() {
+        let p = shared_prefix_fanout("8b-fp16", "H100", 4);
+        p.validate().unwrap();
+        // All worker prefills gate on the planner decode with identical
+        // dep lists — the condition under which sim and live derive the
+        // same prefix hash — and advertise full expected overlap.
+        let worker_pre: Vec<usize> = (0..p.bindings.len())
+            .filter(|&i| p.bindings[i].stage == Stage::LlmPrefill && i != 1)
+            .collect();
+        assert_eq!(worker_pre.len(), 4);
+        for &i in &worker_pre {
+            assert_eq!(p.bindings[i].deps, vec![2]);
+            assert!((p.bindings[i].prefix_overlap - 1.0).abs() < 1e-12);
+        }
+        // The planner prefill itself expects no reuse.
+        assert_eq!(p.bindings[1].prefix_overlap, 0.0);
+        // JSON round-trip keeps the overlap estimates.
+        let back = ExecutionPlan::parse_json(&p.to_json_string()).unwrap();
+        assert_eq!(back, p);
     }
 
     #[test]

@@ -108,6 +108,32 @@ fn cpu_latency_s(op: &str) -> f64 {
     }
 }
 
+/// Expected prefix-cache overlap for node `idx`: an explicit
+/// `prefix_overlap` annotation wins; otherwise a structural rule — a
+/// prefill step whose operand list is identical to an *earlier*
+/// prefill's re-sends the same context verbatim (fan-out siblings
+/// gated on the same planner output), so by the time it dispatches the
+/// prefix KV is expected fully resident. Non-prefill ops never reuse.
+fn prefix_overlap_of(g: &Graph, idx: usize) -> f64 {
+    let node = &g.nodes[idx];
+    if !matches!(node.op.as_str(), "llm.prefill" | "moe.expert_prefill") {
+        return 0.0;
+    }
+    if let Some(v) = node.attr_f64("prefix_overlap") {
+        return if v.is_finite() { v.clamp(0.0, 1.0) } else { 0.0 };
+    }
+    let shared = g.nodes[..idx].iter().any(|m| {
+        matches!(m.op.as_str(), "llm.prefill" | "moe.expert_prefill")
+            && !m.operands.is_empty()
+            && m.operands == node.operands
+    });
+    if shared {
+        1.0
+    } else {
+        0.0
+    }
+}
+
 impl Planner {
     pub fn new(cfg: PlannerConfig) -> Planner {
         Planner {
@@ -147,8 +173,16 @@ impl Planner {
         }
     }
 
-    /// Latency of an IR node on a hardware class.
-    fn latency(&self, node: &crate::ir::graph::Node, class_idx: usize) -> f64 {
+    /// Latency of an IR node on a hardware class. `prefix_overlap` is
+    /// the expected fraction of the prompt already resident in a prefix
+    /// cache ([`prefix_overlap_of`]); only the prefill term is
+    /// discounted by it — compute scales with *uncached* tokens.
+    fn latency(
+        &self,
+        node: &crate::ir::graph::Node,
+        class_idx: usize,
+        prefix_overlap: f64,
+    ) -> f64 {
         let is_cpu = class_idx == self.devices.len();
         let base = cpu_latency_s(&node.op);
         match node.op.as_str() {
@@ -162,9 +196,17 @@ impl Planner {
                     Some(m) => {
                         let isl = node.attr_int("isl").map(|v| v as u64).unwrap_or(512);
                         let frac = node.attr_f64("token_fraction").unwrap_or(1.0);
+                        let uncached = frac * (1.0 - prefix_overlap.clamp(0.0, 1.0));
                         let par = Parallelism { tp: 1, pp: 1 };
-                        prefill_time(&m, d, par, ((isl as f64 * frac) as u64).max(1), 1, &self.cfg.eff)
-                            .total()
+                        prefill_time(
+                            &m,
+                            d,
+                            par,
+                            ((isl as f64 * uncached) as u64).max(1),
+                            1,
+                            &self.cfg.eff,
+                        )
+                        .total()
                     }
                     None => 0.05,
                 }
@@ -212,7 +254,7 @@ impl Planner {
         let mut value_to_task: std::collections::BTreeMap<u32, usize> =
             std::collections::BTreeMap::new();
 
-        for node in &g.nodes {
+        for (ni, node) in g.nodes.iter().enumerate() {
             let mut latency_s = Vec::with_capacity(n_classes);
             let mut cost_usd = Vec::with_capacity(n_classes);
             let mut forbidden = Vec::new();
@@ -220,8 +262,9 @@ impl Planner {
                 .attr("wants_accel")
                 .and_then(|a| a.as_bool())
                 .unwrap_or(false);
+            let overlap = prefix_overlap_of(g, ni);
             for j in 0..n_classes {
-                let t = self.latency(node, j);
+                let t = self.latency(node, j, overlap);
                 if t.is_infinite() {
                     forbidden.push(j);
                     latency_s.push(1e9);
@@ -357,6 +400,9 @@ impl Planner {
                     .attr_f64("token_fraction")
                     .unwrap_or(1.0)
                     .clamp(f64::MIN_POSITIVE, 1.0),
+                // Same rule the cost model priced with, so the emitted
+                // plan records the reuse assumption it was costed under.
+                prefix_overlap: prefix_overlap_of(g, i),
             });
         }
 
@@ -541,6 +587,39 @@ mod tests {
         let mut p = planner();
         p.cfg.sla = Sla::EndToEnd(1e-6);
         assert!(p.plan(&g).is_err());
+    }
+
+    #[test]
+    fn fanout_sibling_prefills_are_priced_as_cache_hits() {
+        use crate::ir::attr::Attr;
+        use crate::ir::GraphBuilder;
+        let mut b = GraphBuilder::new("fanout");
+        let q = b.op("io.input", &[]);
+        let mk = |b: &mut GraphBuilder, extra: &[(&str, Attr)]| {
+            let mut attrs: Vec<(&str, Attr)> = vec![
+                ("model", "8b-fp16".into()),
+                ("isl", Attr::Int(4096)),
+            ];
+            attrs.extend_from_slice(extra);
+            b.op_with("llm.prefill", &[q], &attrs)
+        };
+        let _first = mk(&mut b, &[]);
+        let _sibling = mk(&mut b, &[]); // identical operands ⇒ reuse
+        let _pinned = mk(&mut b, &[("prefix_overlap", Attr::Float(0.5))]);
+        let g = b.finish();
+
+        let problem = planner().build_problem(&g).unwrap();
+        // Tasks: 0 io.input, 1 first prefill, 2 structural sibling,
+        // 3 explicit 50% overlap. On every accelerator class the
+        // sibling collapses to the 1-token floor, the pinned node sits
+        // strictly between, and the first pays full price.
+        let accel_classes = problem.classes.len() - 1;
+        for j in 0..accel_classes {
+            let full = problem.tasks[1].latency_s[j];
+            let sib = problem.tasks[2].latency_s[j];
+            let half = problem.tasks[3].latency_s[j];
+            assert!(sib < half && half < full, "class {j}: {sib} {half} {full}");
+        }
     }
 
     #[test]

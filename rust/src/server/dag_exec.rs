@@ -44,11 +44,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cluster::dag::{KvReuse, KvReuseConfig};
+use crate::cost::kv::kv_cache_bytes;
 use crate::cost::model_profile::{by_short_name, ModelProfile};
 use crate::obs::trace::{classify_host_op, Span, SpanKind, TraceSink};
 use crate::obs::MetricsRegistry;
 use crate::plan::instance::{edge_payload_bytes, llm_units, DagTopology, LlmUnit};
 use crate::plan::{ExecutionPlan, Role, Stage};
+use crate::router::router::{RouteReason, Router, RouterConfig, WorkerState};
 use crate::server::hostpool::{HostDone, HostPool, HostTask};
 use crate::server::request::{ChatRequest, ChatResponse, StageSpan};
 use crate::transport::fabric::{Fabric, SharedTransferClock};
@@ -72,6 +75,19 @@ fn mix(x: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
+}
+
+/// Context identity of a prefill's full input bytes (prompt plus dep
+/// payloads in edge order). Two prefills share a prefix-cache entry
+/// exactly when these bytes are identical — the same equivalence class
+/// the simulator derives structurally from (request, gating-dep list),
+/// which is what makes per-group hit counts comparable across backends.
+fn context_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xC0FF_EE00_D15E_A5E5u64 ^ (bytes.len() as u64);
+    for &b in bytes {
+        h = mix(h ^ b as u64);
+    }
+    h
 }
 
 /// The deterministic payload a host stage emits: an op-tagged digest of
@@ -369,6 +385,16 @@ pub struct DagDispatch {
     /// Copy of [`DagRuntime::time_scale`] so span timestamps can be
     /// mapped to modeled seconds without threading `rt` everywhere.
     time_scale: f64,
+    /// Cross-step prefix-KV state (None = reuse off, the default): the
+    /// same accounting engine the simulator runs, so hit/miss ledgers
+    /// agree across backends by construction.
+    reuse: Option<KvReuse>,
+    /// Prefix-hit router over the prefill groups' cache nodes; only its
+    /// `PrefixHit` verdict overrides least-loaded assignment, so with no
+    /// resident prefix the routing is byte-identical to reuse-off.
+    router: Option<Router>,
+    /// Cache node id → plan pipeline group, to honor router verdicts.
+    group_of_node: BTreeMap<u32, usize>,
 }
 
 impl DagDispatch {
@@ -377,6 +403,7 @@ impl DagDispatch {
         metrics: Arc<MetricsRegistry>,
         fault: Option<HostFault>,
         trace: Option<Arc<TraceSink>>,
+        kv_reuse: bool,
     ) -> DagDispatch {
         let stage_hist = rt
             .plan
@@ -384,6 +411,39 @@ impl DagDispatch {
             .iter()
             .map(|b| metrics.stage_histogram(&b.op))
             .collect();
+        // Prefix-KV reuse: one cache node per prefill group (assigned
+        // in pipeline order so the node ↔ group map is deterministic),
+        // each registered as a router worker so `find_prefix` verdicts
+        // resolve back to a group.
+        let mut reuse = None;
+        let mut router = None;
+        let mut group_of_node = BTreeMap::new();
+        if kv_reuse {
+            if let Some(m) = &rt.model {
+                let mut rz = KvReuse::new(
+                    &KvReuseConfig::default(),
+                    rt.plan.pipelines.len(),
+                    kv_cache_bytes(m, 1, 1),
+                );
+                let mut r = Router::new(RouterConfig::default());
+                for (g, p) in rt.plan.pipelines.iter().enumerate() {
+                    if p.role != Role::Prefill {
+                        continue;
+                    }
+                    if let Some(nid) = rz.node_for(&p.shape_key()) {
+                        group_of_node.entry(nid).or_insert(g);
+                        r.upsert_worker(WorkerState {
+                            id: nid,
+                            models: vec![rt.plan.model.clone()],
+                            outstanding: 0,
+                            draining: false,
+                        });
+                    }
+                }
+                reuse = Some(rz);
+                router = Some(r);
+            }
+        }
         DagDispatch {
             runs: BTreeMap::new(),
             timers: BinaryHeap::new(),
@@ -397,6 +457,9 @@ impl DagDispatch {
             fault,
             trace,
             time_scale: rt.time_scale,
+            reuse,
+            router,
+            group_of_node,
         }
     }
 
@@ -844,6 +907,76 @@ impl DagDispatch {
         }
     }
 
+    /// Prefix-affinity routing: when the router reports this context
+    /// already resident on a group's cache node (`RouteReason::
+    /// PrefixHit`), take the least-loaded class-matched pipe of that
+    /// group. Every other outcome falls through to the default
+    /// least-loaded assignment — with no resident prefix the routing is
+    /// byte-identical to reuse-off.
+    fn assign_pipe_prefix(&mut self, rt: &DagRuntime, run: &mut ReqRun, node: usize, hash: u64) {
+        if run.node_pipe[node].is_some() {
+            return;
+        }
+        let routed = match (&self.router, &self.reuse) {
+            (Some(r), Some(rz)) => {
+                r.route(&rt.plan.model, None, Some(hash), rz.cache()).ok()
+            }
+            _ => None,
+        };
+        let Some((wid, RouteReason::PrefixHit)) = routed else {
+            return;
+        };
+        let Some(&g) = self.group_of_node.get(&wid) else {
+            return;
+        };
+        let class = &rt.plan.bindings[node].class;
+        let k = (0..rt.prefill_pipes.len())
+            .filter(|&k| rt.prefill_pipes[k].group == g && &rt.prefill_pipes[k].class == class)
+            .min_by_key(|&k| self.prefill_load[k]);
+        if let Some(k) = k {
+            self.prefill_load[k] += 1;
+            run.node_pipe[node] = Some((Role::Prefill, k));
+        }
+    }
+
+    /// Consult the routed group's prefix cache and clip the prefill
+    /// prompt to its uncached suffix. Hits and misses land on
+    /// `server_prefix_hits:<shape key>` / `server_prefix_misses:<shape
+    /// key>` counters — the live mirror of the simulator's per-group
+    /// ledger, pinned exactly by the conformance suite.
+    fn consult_prefix(
+        &mut self,
+        rt: &DagRuntime,
+        run: &ReqRun,
+        node: usize,
+        hash: u64,
+        full: Vec<u8>,
+    ) -> Vec<u8> {
+        let Some((Role::Prefill, k)) = run.node_pipe[node] else {
+            return full;
+        };
+        let gkey = rt.plan.pipelines[rt.prefill_pipes[k].group].shape_key();
+        let Some(rz) = self.reuse.as_mut() else {
+            return full;
+        };
+        let tokens = (full.len() as u64).max(1);
+        let (uncached, _restore, hit) = rz.consult(&gkey, hash, tokens);
+        let kind = if hit { "hits" } else { "misses" };
+        self.metrics
+            .counter(&format!("server_prefix_{kind}:{gkey}"))
+            .inc();
+        if hit {
+            // Byte-LM: bytes ≈ tokens, so keep the uncached tail. The
+            // fused decode re-derives the *full* context from the dep
+            // payloads, so generated output is byte-identical to a
+            // reuse-off run — only prefill work shrinks.
+            let keep = (uncached.min(tokens) as usize).max(1).min(full.len());
+            full[full.len() - keep..].to_vec()
+        } else {
+            full
+        }
+    }
+
     fn chassis_of(rt: &DagRuntime, run: &ReqRun, node: usize) -> Option<u32> {
         match run.node_pipe[node] {
             Some((Role::Prefill, k)) => Some(rt.prefill_pipes[k].chassis),
@@ -925,6 +1058,11 @@ impl DagDispatch {
         run.unit_dispatched[unit] = true;
         let u = &rt.units[unit];
         if let Some(p) = u.prefill {
+            let full = Self::inputs(rt, run, p);
+            let hash = self.reuse.is_some().then(|| context_hash(&full));
+            if let Some(h) = hash {
+                self.assign_pipe_prefix(rt, run, p, h);
+            }
             self.assign_pipe(rt, run, p);
             self.metrics.counter("server_prefill_jobs").inc();
             self.count_group_job(rt, run, p);
@@ -932,7 +1070,13 @@ impl DagDispatch {
             let engine = run.node_pipe[p]
                 .map(|(role, k)| rt.engine_of(role, k))
                 .unwrap_or(0);
-            let prompt = Self::inputs(rt, run, p);
+            let prompt = match hash {
+                Some(h) => self.consult_prefix(rt, run, p, h, full),
+                None => full,
+            };
+            self.metrics
+                .counter("server_prefill_tokens")
+                .add(prompt.len() as u64);
             step.jobs.push(LlmJob {
                 req: run.req.id,
                 unit,

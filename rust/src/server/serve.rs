@@ -65,6 +65,12 @@ pub struct ServerConfig {
     /// kept as a measured A/B baseline: the live-throughput gate proves
     /// the worker pool beats it on multi-group plans.
     pub serialize_engines: bool,
+    /// Cross-step prefix-KV reuse for agent-DAG prefills: keep real
+    /// paged prefix state per prefill group (the simulator's exact
+    /// accounting engine), route repeated contexts via the prefix-hit
+    /// router, and prefill only uncached suffixes. Off by default —
+    /// reuse-off serving is byte-identical to before the feature.
+    pub kv_reuse: bool,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +83,7 @@ impl Default for ServerConfig {
             host_workers: 4,
             time_scale: 1.0,
             serialize_engines: false,
+            kv_reuse: false,
         }
     }
 }
@@ -329,6 +336,7 @@ impl Server {
         cfg.max_history = self.cfg.max_history;
         cfg.time_scale = self.cfg.time_scale;
         cfg.serialize_engines = self.cfg.serialize_engines;
+        cfg.kv_reuse = self.cfg.kv_reuse;
         let rt = DagRuntime::new(plan, cfg.time_scale, self.engines.len())?;
         self.reconfigure(cfg);
         self.install_runtime(rt);
@@ -536,7 +544,13 @@ impl Server {
             h_e2e: self.metrics.histogram("server_e2e"),
         };
         let mut dispatch = self.dag.as_ref().map(|rt| {
-            DagDispatch::new(rt, self.metrics.clone(), self.fault.clone(), self.trace.clone())
+            DagDispatch::new(
+                rt,
+                self.metrics.clone(),
+                self.fault.clone(),
+                self.trace.clone(),
+                self.cfg.kv_reuse,
+            )
         });
         let seq_budget = self.engines[0].manifest.prefill_seq;
         let max_wait = self.cfg.batch.max_wait;

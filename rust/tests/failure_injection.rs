@@ -237,6 +237,7 @@ fn live_tool_stage_failure_isolates_request() {
         deps,
         xfer_bytes: 0.0,
         token_fraction: 1.0,
+        prefix_overlap: 0.0,
     };
     let plan = ExecutionPlan {
         agent: "flaky_agent".into(),
@@ -320,6 +321,7 @@ fn live_io_failure_skips_downstream_stages() {
                     deps: vec![],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "llm.prefill".into(),
@@ -330,6 +332,7 @@ fn live_io_failure_skips_downstream_stages() {
                     deps: vec![0],
                     xfer_bytes: 1e6,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "llm.decode".into(),
@@ -340,6 +343,7 @@ fn live_io_failure_skips_downstream_stages() {
                     deps: vec![1],
                     xfer_bytes: 1e7,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
                 NodeBinding {
                     op: "io.output".into(),
@@ -350,6 +354,7 @@ fn live_io_failure_skips_downstream_stages() {
                     deps: vec![2],
                     xfer_bytes: 0.0,
                     token_fraction: 1.0,
+                    prefix_overlap: 0.0,
                 },
             ],
             pipelines: vec![

@@ -126,6 +126,7 @@ fn random_cpu_plan(rng: &mut Rng) -> ExecutionPlan {
             deps,
             xfer_bytes: 0.0,
             token_fraction: 1.0,
+            prefix_overlap: 0.0,
         });
     }
     ExecutionPlan {
@@ -225,6 +226,7 @@ fn wide_fanout_respects_plan_host_capacity() {
         deps: vec![],
         xfer_bytes: 0.0,
         token_fraction: 1.0,
+        prefix_overlap: 0.0,
     }];
     for i in 0..6 {
         bindings.push(NodeBinding {
@@ -236,6 +238,7 @@ fn wide_fanout_respects_plan_host_capacity() {
             deps: vec![0],
             xfer_bytes: 0.0,
             token_fraction: 1.0,
+            prefix_overlap: 0.0,
         });
     }
     let plan = ExecutionPlan {

@@ -34,6 +34,7 @@ fn small_plan() -> ExecutionPlan {
                 deps: vec![],
                 xfer_bytes: 0.0,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.prefill".into(),
@@ -44,6 +45,7 @@ fn small_plan() -> ExecutionPlan {
                 deps: vec![0],
                 xfer_bytes: 1e6,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.decode".into(),
@@ -54,6 +56,7 @@ fn small_plan() -> ExecutionPlan {
                 deps: vec![1],
                 xfer_bytes: 1e8,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "io.output".into(),
@@ -64,6 +67,7 @@ fn small_plan() -> ExecutionPlan {
                 deps: vec![2],
                 xfer_bytes: 0.0,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
         ],
         pipelines: vec![

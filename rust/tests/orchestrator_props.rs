@@ -51,6 +51,7 @@ fn base_plan() -> ExecutionPlan {
                 deps: vec![],
                 xfer_bytes: 0.0,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.prefill".into(),
@@ -61,6 +62,7 @@ fn base_plan() -> ExecutionPlan {
                 deps: vec![0],
                 xfer_bytes: 1e6,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
             NodeBinding {
                 op: "llm.decode".into(),
@@ -71,6 +73,7 @@ fn base_plan() -> ExecutionPlan {
                 deps: vec![1],
                 xfer_bytes: 1e8,
                 token_fraction: 1.0,
+                prefix_overlap: 0.0,
             },
         ],
         pipelines: vec![

@@ -52,6 +52,7 @@ fn cpu(op: &str, latency_s: f64, deps: Vec<usize>) -> NodeBinding {
         deps,
         xfer_bytes: 0.0,
         token_fraction: 1.0,
+        prefix_overlap: 0.0,
     }
 }
 
@@ -65,6 +66,7 @@ fn llm(op: &str, stage: Stage, latency_s: f64, deps: Vec<usize>) -> NodeBinding 
         deps,
         xfer_bytes: 1e6,
         token_fraction: 1.0,
+        prefix_overlap: 0.0,
     }
 }
 
@@ -825,6 +827,163 @@ fn sim_and_live_agree_on_cpu_only_plans() {
     assert_eq!(snap["server_host_jobs"], 36.0);
     assert_eq!(server.host_capacity(), Some(2));
     assert!(server.host_high_watermark() <= 2);
+}
+
+/// The prefix-KV reuse conformance gate: a shared-prefix fan-out plan
+/// (one planner inference whose output gates `WORKERS` sibling
+/// prefills with identical dependency lists) runs with reuse on and
+/// off through BOTH backends. The two sides derive their prefix keys
+/// differently — the simulator hashes (request, gating-dep list), the
+/// live server hashes the actual context bytes — but both feed the
+/// same shared `KvReuse` accounting engine, so on a plan where those
+/// equivalence classes coincide the per-group hit/miss ledgers must
+/// match **exactly**: per request, the planner prefill is one unique
+/// context (a miss) and the fan-out siblings share one (a miss plus
+/// `WORKERS - 1` hits). Reuse must also never *increase* prefill work:
+/// each backend's reuse-on prefill-token total stays strictly below
+/// its reuse-off total, while generated outputs stay byte-identical
+/// (live decode re-derives the full context from dep payloads, so only
+/// prefill work shrinks).
+#[test]
+fn prefix_reuse_hit_counts_match_between_backends() {
+    use agentic_hetero::cluster::dag::KvReuseConfig;
+    use agentic_hetero::plan::presets::shared_prefix_fanout;
+
+    const N: usize = 12;
+    const FAN_ISL: usize = 48;
+    const FAN_OSL: usize = 8;
+    const WORKERS: u64 = 4;
+
+    let plan = shared_prefix_fanout("8b-fp16", "H100", WORKERS as u32);
+    let prefill_key = plan.pipelines[0].shape_key();
+    let want_hits = N as u64 * (WORKERS - 1);
+    let want_misses = N as u64 * 2;
+
+    // ---- simulator: reuse off, then on, same trace ------------------
+    let trace = generate(&TraceConfig {
+        n_requests: N,
+        rate: 50.0,
+        isl_mean: FAN_ISL as u64,
+        osl_mean: FAN_OSL as u64,
+        sigma: 0.0,
+        seed: 11,
+    });
+    let mut sim_off = DagSim::new(&plan).unwrap();
+    sim_off.run(&trace).unwrap();
+    let d_off = sim_off.last_detail().unwrap().clone();
+    assert_eq!(
+        d_off.prefix_hits_by_group.values().sum::<u64>(),
+        0,
+        "reuse off must not touch the prefix ledger"
+    );
+    let mut sim_on = DagSim::new(&plan).unwrap();
+    sim_on.set_kv_reuse(KvReuseConfig::default());
+    sim_on.run(&trace).unwrap();
+    let d_on = sim_on.last_detail().unwrap().clone();
+    assert_eq!(
+        d_on.prefix_hits_by_group.get(&prefill_key).copied(),
+        Some(want_hits),
+        "sim hit ledger: {:?}",
+        d_on.prefix_hits_by_group
+    );
+    assert_eq!(
+        d_on.prefix_misses_by_group.get(&prefill_key).copied(),
+        Some(want_misses),
+        "sim miss ledger: {:?}",
+        d_on.prefix_misses_by_group
+    );
+    assert!(
+        d_on.prefill_tokens < d_off.prefill_tokens,
+        "sim reuse-on must prefill fewer tokens ({} vs {})",
+        d_on.prefill_tokens,
+        d_off.prefill_tokens
+    );
+
+    // ---- live server: reuse off, then on, same workload -------------
+    let run = |reuse: bool| {
+        let mut server = Server::from_plan_with_engines(
+            Engine::synthetic_pool(plan.pipelines.len()),
+            &plan,
+        )
+        .unwrap();
+        let mut cfg = server.config().clone();
+        cfg.time_scale = 0.0; // structure, not timing, is under test
+        cfg.max_new_tokens = FAN_OSL;
+        cfg.kv_reuse = reuse;
+        server.reconfigure(cfg);
+        server.install_plan(&plan).unwrap();
+        // One unique prompt per request: live hashes context *bytes*,
+        // so a repeated prompt would alias across requests — a reuse
+        // class the per-(request, deps) sim key never forms.
+        let reqs: Vec<ChatRequest> = (0..N as u64)
+            .map(|i| {
+                ChatRequest::new(i, vec![b'a' + i as u8; FAN_ISL], FAN_OSL)
+                    .with_agent(plan.agent.as_str())
+            })
+            .collect();
+        let (server, mut responses) = run_live(server, reqs);
+        responses.sort_by_key(|r| r.id);
+        for r in &responses {
+            assert!(r.is_ok(), "request {} failed: {:?}", r.id, r.error);
+        }
+        assert_eq!(responses.len(), N);
+        (server.metrics.snapshot(), responses)
+    };
+    let (snap_off, resp_off) = run(false);
+    let (snap_on, resp_on) = run(true);
+
+    // Reuse off is byte-identical to the pre-feature server: the
+    // prefix counters are never even created.
+    assert!(
+        snap_off.keys().all(|k| !k.starts_with("server_prefix_hits:")
+            && !k.starts_with("server_prefix_misses:")),
+        "reuse-off serving must not touch prefix counters"
+    );
+
+    // ---- per-group hit/miss counts match EXACTLY across backends ----
+    for (key, hits) in &d_on.prefix_hits_by_group {
+        assert_eq!(
+            snap_on.get(&format!("server_prefix_hits:{key}")).copied(),
+            Some(*hits as f64),
+            "live hit counter for group {key}"
+        );
+    }
+    for (key, misses) in &d_on.prefix_misses_by_group {
+        assert_eq!(
+            snap_on.get(&format!("server_prefix_misses:{key}")).copied(),
+            Some(*misses as f64),
+            "live miss counter for group {key}"
+        );
+    }
+    assert_eq!(
+        snap_on.get(&format!("server_prefix_hits:{prefill_key}")).copied(),
+        Some(want_hits as f64)
+    );
+    assert_eq!(
+        snap_on
+            .get(&format!("server_prefix_misses:{prefill_key}"))
+            .copied(),
+        Some(want_misses as f64)
+    );
+
+    // ---- reuse-on never prefills more than reuse-off ----------------
+    let live_off = snap_off["server_prefill_tokens"];
+    let live_on = snap_on["server_prefill_tokens"];
+    assert!(
+        live_on < live_off,
+        "live reuse-on must prefill fewer tokens ({live_on} vs {live_off})"
+    );
+
+    // ---- and the generated streams are byte-identical ---------------
+    for (off, on) in resp_off.iter().zip(&resp_on) {
+        assert_eq!(off.id, on.id);
+        assert_eq!(
+            off.output, on.output,
+            "request {}: prefix reuse changed the token stream",
+            off.id
+        );
+        assert_eq!(off.tokens, on.tokens);
+    }
 }
 
 /// Threading must be invisible to conformance: the same mixed-generation
