@@ -640,6 +640,11 @@ fn group_key(role: Role, spec: &PipelineSpec) -> String {
 impl DagSim {
     pub fn new(plan: &ExecutionPlan) -> Result<DagSim> {
         plan.validate()?;
+        // Static pre-flight: an Error-severity diagnostic (infeasible
+        // HBM footprint, impossible KV hop, broken token split, ...)
+        // rejects the plan here with the full table attached instead of
+        // surfacing mid-run as `Error::Capacity` or a wrong answer.
+        crate::plan::verify::ensure_loadable(plan)?;
         let has_llm = plan.bindings.iter().any(|b| b.stage != Stage::Cpu);
         let model = by_short_name(&plan.model);
         if has_llm && model.is_none() {

@@ -31,7 +31,7 @@ use agentic_hetero::obs::critical_path::attribute_all;
 use agentic_hetero::obs::trace::{spans_from_chrome_json, to_chrome_json, TraceSink};
 use agentic_hetero::opt::assignment::Sla;
 use agentic_hetero::orchestrator::{Executor, Orchestrator, OrchestratorConfig, SimExecutor};
-use agentic_hetero::plan::{ExecutionPlan, PlanDiff};
+use agentic_hetero::plan::{presets, verify, ExecutionPlan, PlanDiff};
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 use agentic_hetero::runtime::Engine;
 use agentic_hetero::server::{ChatRequest, Server, ServerConfig};
@@ -84,6 +84,7 @@ USAGE:
   agentic-hetero plan     [--agent voice|rag|langchain] [--model 8b-fp16] [--sla-ms N]
                           [--out PLAN.json]
   agentic-hetero plan diff A.json B.json [--json]
+  agentic-hetero plan lint <PLAN.json | --presets> [--json] [--deny-warn]
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
   agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
                           [--requests N] [--max-new N] [--synthetic]
@@ -102,7 +103,11 @@ replays it through the agent-DAG cluster simulator, `serve --plan`
 executes the *full agent DAG* live (tool/IO stages on a bounded host
 pool, LLM stages batched on the engine; `--synthetic` runs the
 in-process byte LM so no artifacts are needed), `plan diff` renders the
-typed PlanDiff between two saved plans, and `orchestrate` runs the
+typed PlanDiff between two saved plans, `plan lint` runs the static
+plan analyzer (topology, binding invariants, capacity, fabric, SLA
+feasibility — the AH0xx diagnostics the loader and orchestrator
+enforce) over a saved plan or the built-in presets, and `orchestrate`
+runs the
 closed control loop (observe -> decide -> re-plan -> diff -> migrate ->
 apply) against a traced load swing, emitting a replayable timeline.
 `orchestrate --fleet mixed` serves a two-generation fleet (decode split
@@ -255,9 +260,66 @@ fn cmd_plan_diff(args: &Args) -> i32 {
     0
 }
 
+/// `plan lint PLAN.json [--json] [--deny-warn]` — run the static plan
+/// analyzer and print the diagnostics table (or the report JSON).
+/// `--presets` lints the built-in preset plans instead of a file (the
+/// CI gate: shipped presets must verify clean). Exit code 1 when any
+/// Error is found, or any Warn under `--deny-warn`.
+fn cmd_plan_lint(args: &Args) -> i32 {
+    let deny_warn = args.flag("deny-warn");
+    let verdict = |name: &str, report: &agentic_hetero::plan::DiagReport| -> i32 {
+        if args.flag("json") {
+            println!("{}", report.to_json().pretty());
+        } else {
+            print!("{name}: {}", report.table());
+        }
+        if report.has_errors() || (deny_warn && report.warnings().next().is_some()) {
+            1
+        } else {
+            0
+        }
+    };
+    if args.flag("presets") {
+        let presets: Vec<(&str, ExecutionPlan)> = vec![
+            ("mixed_generation", presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2)),
+            ("shared_prefix_fanout", presets::shared_prefix_fanout("8b-fp16", "H100", 4)),
+            ("homogeneous", presets::homogeneous("8b-fp16", "H100", 2)),
+        ];
+        let mut code = 0;
+        for (name, plan) in &presets {
+            code = code.max(verdict(name, &verify::verify(plan)));
+        }
+        return code;
+    }
+    let Some(path) = args.positional.get(2) else {
+        eprintln!("usage: agentic-hetero plan lint <PLAN.json | --presets> [--json] [--deny-warn]");
+        return 2;
+    };
+    // Lenient load: structural `validate()` errors must not mask the
+    // analyzer — a broken plan is exactly what lint exists to explain.
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("plan {path}: {e}");
+            return 1;
+        }
+    };
+    let plan = match ExecutionPlan::parse_json_lenient(&src) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("plan {path}: {e}");
+            return 1;
+        }
+    };
+    verdict(path, &verify::verify(&plan))
+}
+
 fn cmd_plan(args: &Args) -> i32 {
     if args.positional.get(1).map(|s| s.as_str()) == Some("diff") {
         return cmd_plan_diff(args);
+    }
+    if args.positional.get(1).map(|s| s.as_str()) == Some("lint") {
+        return cmd_plan_lint(args);
     }
     let g = build_agent(args);
     let mut cfg = PlannerConfig::default();

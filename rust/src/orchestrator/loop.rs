@@ -15,7 +15,10 @@
 //!   the orchestrator re-plans (reconfiguration happens *between*
 //!   requests, never under one).
 
-use std::collections::BTreeSet;
+// The control loop runs on serving threads: a panic here takes the
+// whole fleet down, so fallible paths must return typed errors.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::Arc;
 
 use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, GroupWindow, WindowStats};
@@ -25,6 +28,7 @@ use crate::ir::graph::Graph;
 use crate::obs::critical_path::{attribute_all, attribute_windows, SlaAttribution, BUCKETS};
 use crate::obs::trace::{Span, TraceSink};
 use crate::obs::MetricsRegistry;
+use crate::plan::verify;
 use crate::plan::{ExecutionPlan, PlanDiff, Role, SlaSpec};
 use crate::planner::autoscale::{
     cheapest, rank, score_groups, worst, Autoscaler, AutoscalerConfig, GroupScaler, GroupScore,
@@ -134,44 +138,18 @@ pub fn reconcile_replan(
     current: &ExecutionPlan,
     fresh: ExecutionPlan,
 ) -> (ExecutionPlan, Vec<PlanRejection>) {
-    let classes = |p: &ExecutionPlan, role: Role| -> BTreeSet<String> {
-        p.pipelines
-            .iter()
-            .filter(|pl| pl.role == role)
-            .map(|pl| pl.device.clone())
-            .collect()
-    };
-    let mut rejections = Vec::new();
-    for role in [Role::Prefill, Role::Decode] {
-        let cur = classes(current, role);
-        let new = classes(&fresh, role);
-        if cur != new {
-            // Name the live group whose class the re-plan moved (the
-            // symmetric difference), not blindly the role's first
-            // group — on a mixed fleet only one generation may be
-            // affected.
-            let moved: BTreeSet<String> =
-                cur.symmetric_difference(&new).cloned().collect();
-            rejections.push(PlanRejection {
-                role: role.name().to_string(),
-                group: current
-                    .pipelines
-                    .iter()
-                    .find(|pl| pl.role == role && moved.contains(&pl.device))
-                    .or_else(|| current.pipelines.iter().find(|pl| pl.role == role))
-                    .map(|pl| pl.shape_key()),
-                reason: format!(
-                    "planner re-plan moves {} classes {:?} -> {:?} mid-run; \
-                     in-flight work keeps routing by the live classes, so the \
-                     fresh layout is rejected and the current plan is \
-                     structurally retargeted instead",
-                    role.name(),
-                    cur.iter().cloned().collect::<Vec<_>>(),
-                    new.iter().cloned().collect::<Vec<_>>()
-                ),
-            });
-        }
-    }
+    // The class-compatibility rule itself lives in the static analyzer
+    // (AH050) so the lint CLI, the property suite, and this loop agree
+    // on one definition; this shim only converts its findings into the
+    // runtime's typed rejection record.
+    let rejections: Vec<PlanRejection> = verify::verify_replan(current, &fresh)
+        .into_iter()
+        .map(|rd| PlanRejection {
+            role: rd.role.name().to_string(),
+            group: rd.group,
+            reason: rd.diag.message,
+        })
+        .collect();
     if rejections.is_empty() {
         (fresh, rejections)
     } else {
@@ -417,24 +395,91 @@ impl Orchestrator {
                 reason: r.reason.clone(),
             });
         }
+        // Static pre-flight: every re-plan candidate runs the full
+        // analyzer pass stack before any migration is lowered. An
+        // Error-severity finding rejects the candidate (typed, on the
+        // timeline) and the fleet keeps its current plan.
+        if !self.preflight(&target, w.t1).is_empty() {
+            return Ok(None);
+        }
+        self.adopt(target, w.t1, w.kv_resident_bytes, rejections)
+    }
+
+    /// Static pre-flight over a re-plan candidate: run the analyzer's
+    /// pass stack ([`verify::verify`]) and convert every Error-severity
+    /// diagnostic into a typed [`PlanRejection`] plus a
+    /// [`TimelineEvent::Rejection`]. Infeasible candidates are stopped
+    /// *here* — before migration lowering touches them.
+    fn preflight(&mut self, target: &ExecutionPlan, t: f64) -> Vec<PlanRejection> {
+        let report = verify::verify(target);
+        let mut rejections = Vec::new();
+        for d in report.errors() {
+            self.metrics.counter("orch_rejections").inc();
+            let r = PlanRejection {
+                role: "plan".to_string(),
+                group: None,
+                reason: format!("static analysis {} at {}: {}", d.code, d.loc, d.message),
+            };
+            self.timeline.events.push(TimelineEvent::Rejection {
+                t,
+                role: r.role.clone(),
+                group: r.group.clone(),
+                reason: r.reason.clone(),
+            });
+            rejections.push(r);
+        }
+        rejections
+    }
+
+    /// Offer an externally-built plan candidate to the loop at time
+    /// `t`. The candidate runs the same static pre-flight as
+    /// `observe_window` targets; Error-severity findings reject it
+    /// (returned typed and recorded on the timeline) before any
+    /// migration is lowered. A clean candidate is adopted exactly like
+    /// a loop decision: diffed against the live plan, lowered to a
+    /// capacity-safe migration, and recorded.
+    pub fn propose_plan(
+        &mut self,
+        target: ExecutionPlan,
+        t: f64,
+        kv_resident_bytes: f64,
+    ) -> Result<(Option<PlanChange>, Vec<PlanRejection>)> {
+        let rejections = self.preflight(&target, t);
+        if !rejections.is_empty() {
+            return Ok((None, rejections));
+        }
+        let change = self.adopt(target, t, kv_resident_bytes, Vec::new())?;
+        Ok((change, Vec::new()))
+    }
+
+    /// Adopt a pre-flighted target: diff it against the live plan,
+    /// lower the capacity-safe migration, record the
+    /// plan/diff/migration events, and flip `current`.
+    fn adopt(
+        &mut self,
+        target: ExecutionPlan,
+        t: f64,
+        kv_resident_bytes: f64,
+        rejections: Vec<PlanRejection>,
+    ) -> Result<Option<PlanChange>> {
         let diff = PlanDiff::between(&self.current, &target);
         if diff.is_empty() {
             return Ok(None);
         }
-        let migration = lower_diff(&self.current, &target, w.kv_resident_bytes)?;
+        let migration = lower_diff(&self.current, &target, kv_resident_bytes)?;
         self.plan_seq += 1;
         self.metrics.counter("orch_migrations").inc();
         self.timeline.events.push(TimelineEvent::Plan {
-            t: w.t1,
+            t,
             seq: self.plan_seq,
             plan: target.clone(),
         });
         self.timeline.events.push(TimelineEvent::Diff {
-            t: w.t1,
+            t,
             diff: diff.clone(),
         });
         self.timeline.events.push(TimelineEvent::Migration {
-            t: w.t1,
+            t,
             plan: migration.clone(),
             applied_s: None,
         });
@@ -948,9 +993,11 @@ impl Executor for LiveExecutor {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::plan::tests::tiny_plan;
+    use std::collections::BTreeSet;
 
     fn stats(util: f64, t0: f64, t1: f64) -> WindowStats {
         WindowStats {

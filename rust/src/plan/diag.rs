@@ -1,0 +1,269 @@
+//! Typed diagnostics for the static plan analyzer ([`super::verify`]).
+//!
+//! A [`Diag`] is one finding of one analysis pass over an
+//! [`super::ExecutionPlan`]: a stable `AH0xx` code, a severity, the
+//! plan location it anchors to (binding / pipeline group / plan-level
+//! path), a human message, and a suggested fix. [`DiagReport`] is the
+//! pass manager's output — it renders the diagnostics table `plan lint`
+//! prints and round-trips through [`crate::util::json`] so CI can pin
+//! the output byte-for-byte.
+
+use crate::util::json::Json;
+use crate::{jobj, Error, Result};
+
+/// How bad a finding is. `Error` diagnostics make a plan unloadable
+/// (`DagSim`, `Server`, and the orchestrator pre-flight all reject);
+/// `Warn` diagnostics are advisory unless `plan lint --deny-warn`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warn,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<Severity> {
+        match s {
+            "error" => Ok(Severity::Error),
+            "warn" => Ok(Severity::Warn),
+            other => Err(Error::Config(format!("unknown severity `{other}`"))),
+        }
+    }
+}
+
+/// One typed finding of the static plan analyzer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diag {
+    /// Stable code, `AH0xx` (see the table in ARCHITECTURE.md).
+    pub code: String,
+    pub severity: Severity,
+    /// Plan path the finding anchors to: `binding[i] <op>`,
+    /// `pipeline[g] <shape key>`, `plan`, ...
+    pub loc: String,
+    pub message: String,
+    /// Suggested fix; empty when there is no mechanical suggestion.
+    pub suggestion: String,
+}
+
+impl Diag {
+    pub fn new(
+        code: &str,
+        severity: Severity,
+        loc: impl Into<String>,
+        message: impl Into<String>,
+        suggestion: impl Into<String>,
+    ) -> Diag {
+        Diag {
+            code: code.to_string(),
+            severity,
+            loc: loc.into(),
+            message: message.into(),
+            suggestion: suggestion.into(),
+        }
+    }
+
+    /// One-line rendering (`AH001 error binding[1] llm.prefill: ...`).
+    pub fn render(&self) -> String {
+        format!(
+            "{} {:<5} {}: {}",
+            self.code,
+            self.severity.name(),
+            self.loc,
+            self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "code" => self.code.clone(),
+            "severity" => self.severity.name(),
+            "loc" => self.loc.clone(),
+            "message" => self.message.clone(),
+            "suggestion" => self.suggestion.clone(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Diag> {
+        let field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| Error::Config(format!("diag json missing `{k}`")))
+        };
+        Ok(Diag {
+            code: field("code")?,
+            severity: Severity::from_name(&field("severity")?)?,
+            loc: field("loc")?,
+            message: field("message")?,
+            suggestion: field("suggestion")?,
+        })
+    }
+}
+
+/// The analyzer's output: every diagnostic in pass order, plus the
+/// per-pass finding counts (the pass manager's run log).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DiagReport {
+    pub diags: Vec<Diag>,
+    /// (pass name, findings emitted) in execution order.
+    pub passes: Vec<(String, usize)>,
+}
+
+impl DiagReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Warn)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// The diagnostics table `plan lint` prints. Byte-stable (pinned by
+    /// the golden test): header, one line per diagnostic with an
+    /// indented `fix:` line when a suggestion exists, then the verdict.
+    pub fn table(&self) -> String {
+        let n_err = self.errors().count();
+        let n_warn = self.warnings().count();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan diagnostics: {n_err} error(s), {n_warn} warning(s)\n"
+        ));
+        for d in &self.diags {
+            out.push_str(&format!("  {}\n", d.render()));
+            if !d.suggestion.is_empty() {
+                out.push_str(&format!("        fix: {}\n", d.suggestion));
+            }
+        }
+        let verdict = if n_err > 0 {
+            "FAIL"
+        } else if n_warn > 0 {
+            "PASS (with warnings)"
+        } else {
+            "PASS"
+        };
+        out.push_str(&format!("verdict: {verdict}\n"));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self.diags.iter().map(|d| d.to_json()).collect();
+        let passes: Vec<Json> = self
+            .passes
+            .iter()
+            .map(|(name, n)| jobj! { "pass" => name.clone(), "findings" => *n as u64 })
+            .collect();
+        jobj! {
+            "errors" => self.errors().count() as u64,
+            "warnings" => self.warnings().count() as u64,
+            "diags" => Json::Arr(diags),
+            "passes" => Json::Arr(passes),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<DiagReport> {
+        let arr = |k: &str| -> Result<&[Json]> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| Error::Config(format!("diag report missing `{k}`")))
+        };
+        let mut diags = Vec::new();
+        for d in arr("diags")? {
+            diags.push(Diag::from_json(d)?);
+        }
+        let mut passes = Vec::new();
+        for p in arr("passes")? {
+            let name = p
+                .get("pass")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Config("pass entry missing `pass`".into()))?;
+            let n = p
+                .get("findings")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Config("pass entry missing `findings`".into()))?;
+            passes.push((name.to_string(), n as usize));
+        }
+        Ok(DiagReport { diags, passes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DiagReport {
+        DiagReport {
+            diags: vec![
+                Diag::new(
+                    "AH001",
+                    Severity::Error,
+                    "binding[1] llm.prefill",
+                    "dep 9 out of range (plan has 4 bindings)",
+                    "point the dep at an existing earlier binding",
+                ),
+                Diag::new(
+                    "AH040",
+                    Severity::Warn,
+                    "plan",
+                    "critical-path lower bound 5.2s exceeds SLA 3.0s",
+                    "",
+                ),
+            ],
+            passes: vec![("topology".into(), 1), ("sla".into(), 1)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let r = sample();
+        let j = r.to_json();
+        let back = DiagReport::from_json(&j).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json().pretty(), j.pretty(), "byte-stable");
+    }
+
+    #[test]
+    fn table_counts_and_verdict() {
+        let r = sample();
+        let t = r.table();
+        assert!(t.starts_with("plan diagnostics: 1 error(s), 1 warning(s)\n"));
+        assert!(t.contains("AH001 error binding[1] llm.prefill:"));
+        assert!(t.contains("        fix: point the dep"));
+        assert!(t.ends_with("verdict: FAIL\n"));
+        assert!(r.has_errors());
+
+        let clean = DiagReport::default();
+        assert!(clean.table().ends_with("verdict: PASS\n"));
+        assert!(clean.is_clean());
+    }
+
+    #[test]
+    fn warn_only_report_passes_with_warnings() {
+        let mut r = sample();
+        r.diags.remove(0);
+        assert!(!r.has_errors());
+        assert!(r.table().ends_with("verdict: PASS (with warnings)\n"));
+    }
+
+    #[test]
+    fn bad_severity_rejected() {
+        let mut j = sample().to_json();
+        // Corrupt the first diag's severity.
+        let text = j.pretty().replace("\"error\"", "\"fatal\"");
+        j = Json::parse(&text).unwrap();
+        assert!(DiagReport::from_json(&j).is_err());
+    }
+}

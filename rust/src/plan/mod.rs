@@ -25,10 +25,13 @@
 //! **SLA envelope** — everything needed to simulate or serve the plan
 //! without consulting the planner again.
 
+pub mod diag;
 pub mod diff;
 pub mod instance;
 pub mod presets;
+pub mod verify;
 
+pub use diag::{Diag, DiagReport, Severity};
 pub use diff::{BindingRebind, FractionShift, PipelineResize, PlanDiff, PolicyChange};
 pub use instance::{edge_payload_bytes, DagTopology, LlmUnit};
 
@@ -594,8 +597,24 @@ impl ExecutionPlan {
         Self::from_json(&Json::parse(src)?)
     }
 
+    /// Parse a plan *without* structural validation — the entry point
+    /// for `plan lint`, which must be able to load a broken plan so the
+    /// analyzer ([`verify::verify`]) can diagnose it instead of the
+    /// parser rejecting it with the first error only.
+    pub fn parse_json_lenient(src: &str) -> Result<ExecutionPlan> {
+        Self::from_json_unchecked(&Json::parse(src)?)
+    }
+
     /// Rebuild a plan from its JSON tree; validates structure.
     pub fn from_json(j: &Json) -> Result<ExecutionPlan> {
+        let plan = Self::from_json_unchecked(j)?;
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// [`ExecutionPlan::from_json`] minus the [`ExecutionPlan::validate`]
+    /// gate (shape errors in the JSON itself still fail).
+    pub fn from_json_unchecked(j: &Json) -> Result<ExecutionPlan> {
         let version = req_u64(j, "version")?;
         if version != PLAN_VERSION {
             return Err(Error::Config(format!(
@@ -697,7 +716,6 @@ impl ExecutionPlan {
             latency_s: req_f64(j, "latency_s")?,
             pass_log,
         };
-        plan.validate()?;
         Ok(plan)
     }
 }

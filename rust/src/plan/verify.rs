@@ -1,0 +1,845 @@
+//! Static plan analysis: a pass-manager-driven verifier/linter over
+//! [`ExecutionPlan`] + fleet/fabric context.
+//!
+//! The paper's compilation story (§3) validates agent execution graphs
+//! *before* they hit heterogeneous hardware. We already verify the
+//! MLIR-like IR (`ir/verifier.rs`); this module is the same discipline
+//! at the `ExecutionPlan` layer where planner, orchestrator, `DagSim`,
+//! and the live server meet — so a structurally invalid or infeasible
+//! placement is a typed [`Diag`] at plan-load / re-plan time, not a
+//! runtime `PlanRejection`, a mid-run `Error::Capacity`, or a panic.
+//!
+//! Five analysis passes, each a pure function over the plan:
+//!
+//! | pass       | codes        | what it proves statically             |
+//! |------------|--------------|---------------------------------------|
+//! | `topology` | AH001–AH003  | DAG sanity: no dangling/forward deps (cycles), no disconnected nodes |
+//! | `bindings` | AH010–AH017  | binding invariants: sibling token splits, overlap bounds, group references |
+//! | `capacity` | AH020–AH021  | HBM footprint per group, admission demand vs throughput bound |
+//! | `fabric`   | AH030–AH032  | cross-chassis KV hops have a link, links not oversubscribed, no chassis gaps |
+//! | `sla`      | AH040        | cost-model critical-path lower bound vs the SLA target |
+//!
+//! Severity contract: **Error** diagnostics make a plan unloadable —
+//! [`ensure_loadable`] gates `DagSim::new`, `Server::install_plan`, and
+//! the orchestrator's re-plan pre-flight. **Warn** diagnostics are
+//! advisory (`plan lint --deny-warn` promotes them in CI).
+//!
+//! [`verify_replan`] is the *contextual* pass (AH050): whether a fresh
+//! plan may replace the live one mid-run. `orchestrator::
+//! reconcile_replan` delegates here so the runtime `PlanRejection` and
+//! the analyzer share one source of truth.
+
+use crate::cost::hardware::by_name;
+use crate::cost::kv::kv_cache_bytes;
+use crate::cost::model_profile::by_short_name;
+use crate::obs::trace::{classify_host_op, SpanKind};
+use crate::{Error, Result};
+
+use super::diag::{Diag, DiagReport, Severity};
+use super::{ExecutionPlan, PipelineBinding, Role, Stage};
+
+/// Nominal per-request context (tokens) for the static KV working-set
+/// estimate — deliberately modest so the HBM pass only fires on plans
+/// that cannot fit even a small context at the declared batch size.
+const NOMINAL_CTX_TOKENS: u64 = 1024;
+
+/// Static throughput/bandwidth bounds are optimistic upper bounds, so
+/// demand checks only fire when the declared admission ceiling exceeds
+/// the bound by more than this multiplexing slack — an order-of-
+/// magnitude gap no burst smoothing can absorb.
+const DEMAND_SLACK: f64 = 20.0;
+
+/// The analysis passes, in execution order.
+pub const PASSES: [(&str, fn(&ExecutionPlan, &mut Vec<Diag>)); 5] = [
+    ("topology", pass_topology),
+    ("bindings", pass_bindings),
+    ("capacity", pass_capacity),
+    ("fabric", pass_fabric),
+    ("sla", pass_sla),
+];
+
+/// Run every pass over the plan and collect the findings.
+pub fn verify(plan: &ExecutionPlan) -> DiagReport {
+    let mut report = DiagReport::default();
+    for (name, pass) in PASSES {
+        let before = report.diags.len();
+        pass(plan, &mut report.diags);
+        report
+            .passes
+            .push((name.to_string(), report.diags.len() - before));
+    }
+    report
+}
+
+/// Gate for plan consumers (`DagSim::new`, `Server::install_plan`, the
+/// orchestrator pre-flight): Error-severity findings reject the plan
+/// with the full diagnostics table attached.
+pub fn ensure_loadable(plan: &ExecutionPlan) -> Result<()> {
+    let report = verify(plan);
+    if report.has_errors() {
+        return Err(Error::Verify(format!(
+            "plan rejected by static analysis:\n{}",
+            report.table()
+        )));
+    }
+    Ok(())
+}
+
+/// Planner self-check: a freshly-lowered plan must analyze clean of
+/// errors (debug builds assert; release builds skip the cost).
+pub fn debug_assert_clean(plan: &ExecutionPlan) {
+    if cfg!(debug_assertions) {
+        let report = verify(plan);
+        debug_assert!(
+            !report.has_errors(),
+            "planner emitted a plan with static errors:\n{}",
+            report.table()
+        );
+    }
+}
+
+fn bloc(i: usize, plan: &ExecutionPlan) -> String {
+    format!("binding[{i}] {}", plan.bindings[i].op)
+}
+
+fn gloc(g: usize, plan: &ExecutionPlan) -> String {
+    format!("pipeline[{g}] {}", plan.pipelines[g].shape_key())
+}
+
+fn role_of(stage: Stage) -> Option<Role> {
+    match stage {
+        Stage::LlmPrefill => Some(Role::Prefill),
+        Stage::LlmDecode => Some(Role::Decode),
+        Stage::Cpu => None,
+    }
+}
+
+/// Pipeline groups a binding can route to: same role, same device
+/// class.
+fn groups_of(plan: &ExecutionPlan, i: usize) -> Vec<usize> {
+    let b = &plan.bindings[i];
+    match role_of(b.stage) {
+        None => Vec::new(),
+        Some(role) => (0..plan.pipelines.len())
+            .filter(|&g| {
+                plan.pipelines[g].role == role && plan.pipelines[g].device == b.class
+            })
+            .collect(),
+    }
+}
+
+/// Chassis span `[chassis, chassis + replicas)` of a group.
+fn chassis_range(p: &PipelineBinding) -> (u32, u32) {
+    (p.chassis, p.chassis.saturating_add(p.replicas))
+}
+
+fn ranges_overlap(a: (u32, u32), b: (u32, u32)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
+
+// ---- pass 1: topology ----------------------------------------------------
+
+/// AH001 dangling dep, AH002 self/forward dep (the cycle class —
+/// bindings are index-ordered topological, so any dep `>= i` would
+/// close a cycle), AH003 disconnected node.
+fn pass_topology(plan: &ExecutionPlan, out: &mut Vec<Diag>) {
+    let n = plan.bindings.len();
+    let mut referenced = vec![false; n];
+    for (i, b) in plan.bindings.iter().enumerate() {
+        for &d in &b.deps {
+            if d >= n {
+                out.push(Diag::new(
+                    "AH001",
+                    Severity::Error,
+                    bloc(i, plan),
+                    format!("dep {d} out of range (plan has {n} bindings)"),
+                    "point the dep at an existing earlier binding",
+                ));
+            } else if d >= i {
+                out.push(Diag::new(
+                    "AH002",
+                    Severity::Error,
+                    bloc(i, plan),
+                    format!(
+                        "dep {d} is not topologically earlier (self/forward \
+                         deps close a cycle)"
+                    ),
+                    "reorder the bindings so every dep index is smaller than \
+                     its consumer",
+                ));
+            } else {
+                referenced[d] = true;
+            }
+        }
+    }
+    if n > 1 {
+        for (i, b) in plan.bindings.iter().enumerate() {
+            if b.deps.is_empty() && !referenced[i] {
+                out.push(Diag::new(
+                    "AH003",
+                    Severity::Warn,
+                    bloc(i, plan),
+                    "node is disconnected from the DAG (no deps, no dependents)",
+                    "wire the node into the request path or drop it",
+                ));
+            }
+        }
+    }
+}
+
+// ---- pass 2: binding invariants ------------------------------------------
+
+/// AH010 sibling token-fraction partition, AH011 prefix_overlap bounds,
+/// AH012 zero-sized pipeline dims, AH013 binding without a matching
+/// group, AH014 unknown device, AH015 token_fraction bounds, AH016
+/// duplicate group declaration, AH017 orphaned group.
+fn pass_bindings(plan: &ExecutionPlan, out: &mut Vec<Diag>) {
+    let n = plan.bindings.len();
+    // Expert-sibling sets: same op + same stage + same gating deps.
+    // A set where any member takes a partial stream is a *split* whose
+    // fractions must partition the stream (sum ≈ 1); all-1.0 sets are
+    // fan-out replicas, each processing the whole stream.
+    let mut seen = vec![false; n];
+    for i in 0..n {
+        if seen[i] || plan.bindings[i].stage == Stage::Cpu {
+            continue;
+        }
+        let sibs: Vec<usize> = (i..n)
+            .filter(|&j| {
+                plan.bindings[j].op == plan.bindings[i].op
+                    && plan.bindings[j].stage == plan.bindings[i].stage
+                    && plan.bindings[j].deps == plan.bindings[i].deps
+            })
+            .collect();
+        for &j in &sibs {
+            seen[j] = true;
+        }
+        if sibs.len() < 2 {
+            continue;
+        }
+        let split = sibs
+            .iter()
+            .any(|&j| plan.bindings[j].token_fraction < 1.0 - 1e-9);
+        if split {
+            let sum: f64 = sibs.iter().map(|&j| plan.bindings[j].token_fraction).sum();
+            if (sum - 1.0).abs() > 1e-6 {
+                out.push(Diag::new(
+                    "AH010",
+                    Severity::Error,
+                    bloc(i, plan),
+                    format!(
+                        "expert-sibling token fractions sum to {sum:.6} across \
+                         bindings {sibs:?} (must partition the stream: sum = 1)"
+                    ),
+                    "retune the sibling token_fractions to sum to 1",
+                ));
+            }
+        }
+    }
+    for (i, b) in plan.bindings.iter().enumerate() {
+        if !b.token_fraction.is_finite()
+            || b.token_fraction <= 0.0
+            || b.token_fraction > 1.0
+        {
+            out.push(Diag::new(
+                "AH015",
+                Severity::Error,
+                bloc(i, plan),
+                format!("token_fraction {} outside (0, 1]", b.token_fraction),
+                "set token_fraction to the share of the stream this node \
+                 processes",
+            ));
+        }
+        if !b.prefix_overlap.is_finite() || !(0.0..=1.0).contains(&b.prefix_overlap) {
+            out.push(Diag::new(
+                "AH011",
+                Severity::Error,
+                bloc(i, plan),
+                format!("prefix_overlap {} outside [0, 1]", b.prefix_overlap),
+                "clamp prefix_overlap to the expected resident-prefix fraction",
+            ));
+        }
+        if role_of(b.stage).is_some() && groups_of(plan, i).is_empty() {
+            out.push(Diag::new(
+                "AH013",
+                Severity::Error,
+                bloc(i, plan),
+                format!(
+                    "no {} pipeline group bound for class {}",
+                    b.stage.name(),
+                    b.class
+                ),
+                "add a pipeline group with the binding's (role, device) or \
+                 rebind the node",
+            ));
+        }
+    }
+    for (g, p) in plan.pipelines.iter().enumerate() {
+        if by_name(&p.device).is_none() {
+            out.push(Diag::new(
+                "AH014",
+                Severity::Error,
+                gloc(g, plan),
+                format!("device `{}` not in the hardware catalog", p.device),
+                "use a catalog device (A40, A100, Gaudi3, MI300x, H100, B200)",
+            ));
+        }
+        if p.replicas == 0 || p.tp == 0 || p.pp == 0 || p.max_batch == 0 {
+            out.push(Diag::new(
+                "AH012",
+                Severity::Error,
+                gloc(g, plan),
+                format!(
+                    "zero-sized dimension (tp {} pp {} max_batch {} replicas {})",
+                    p.tp, p.pp, p.max_batch, p.replicas
+                ),
+                "every pipeline dimension must be >= 1",
+            ));
+        }
+        for (h, q) in plan.pipelines.iter().enumerate().take(g) {
+            if p == q {
+                out.push(Diag::new(
+                    "AH016",
+                    Severity::Warn,
+                    gloc(g, plan),
+                    format!("duplicate of pipeline[{h}] (identical group declared twice)"),
+                    "merge the duplicates into one group with more replicas",
+                ));
+                break;
+            }
+        }
+        let used = plan.bindings.iter().any(|b| {
+            role_of(b.stage).is_some_and(|r| r == p.role) && b.class == p.device
+        });
+        if !used {
+            out.push(Diag::new(
+                "AH017",
+                Severity::Warn,
+                gloc(g, plan),
+                "no binding routes to this group (orphaned capacity)",
+                "drop the group or rebind a node onto its device class",
+            ));
+        }
+    }
+}
+
+// ---- pass 3: capacity feasibility ----------------------------------------
+
+/// AH020 per-group HBM footprint (weights + KV working set, Eq. 3) vs
+/// device HBM; AH021 declared admission demand vs the fleet's static
+/// decode-throughput upper bound.
+fn pass_capacity(plan: &ExecutionPlan, out: &mut Vec<Diag>) {
+    let Some(model) = by_short_name(&plan.model) else {
+        return; // CPU-only plan (or unknown model — AH014/installer report it)
+    };
+    for (g, p) in plan.pipelines.iter().enumerate() {
+        let Some(dev) = by_name(&p.device) else {
+            continue; // AH014 already reported
+        };
+        let shards = (p.tp.max(1) as f64) * (p.pp.max(1) as f64);
+        let weights = model.param_bytes() / shards;
+        let kv = kv_cache_bytes(&model, NOMINAL_CTX_TOKENS, p.max_batch.max(1)) / shards;
+        let need = weights + kv;
+        let have = dev.mem_gb * 1e9;
+        if need > have {
+            out.push(Diag::new(
+                "AH020",
+                Severity::Error,
+                gloc(g, plan),
+                format!(
+                    "HBM footprint {:.1} GB (weights {:.1} + KV {:.1} at ctx \
+                     {} x batch {}) exceeds {} HBM {:.0} GB",
+                    need / 1e9,
+                    weights / 1e9,
+                    kv / 1e9,
+                    NOMINAL_CTX_TOKENS,
+                    p.max_batch,
+                    p.device,
+                    dev.mem_gb
+                ),
+                "raise tp/pp, shrink max_batch, or move the group to a \
+                 larger-memory device",
+            ));
+        }
+    }
+    // Static decode-throughput upper bound: every decode batch slot
+    // turning over at the *fastest* profiled decode latency. A declared
+    // admission ceiling beyond DEMAND_SLACK x this bound can never be
+    // served, no matter how bursts smooth.
+    let decode_slots: u64 = plan
+        .pipelines
+        .iter()
+        .filter(|p| p.role == Role::Decode)
+        .map(|p| p.replicas as u64 * p.max_batch)
+        .sum();
+    let min_latency = plan
+        .bindings
+        .iter()
+        .filter(|b| b.stage == Stage::LlmDecode && b.latency_s > 0.0)
+        .map(|b| b.latency_s)
+        .fold(f64::INFINITY, f64::min);
+    if decode_slots > 0 && min_latency.is_finite() {
+        let bound = decode_slots as f64 / min_latency;
+        if plan.admission.rate > DEMAND_SLACK * bound {
+            out.push(Diag::new(
+                "AH021",
+                Severity::Warn,
+                "plan",
+                format!(
+                    "admission rate {:.0} req/s exceeds {DEMAND_SLACK:.0}x the \
+                     fleet's decode-throughput bound {bound:.1} req/s \
+                     ({decode_slots} slots / {min_latency:.3}s)",
+                    plan.admission.rate
+                ),
+                "lower the admission rate or grow the decode fleet",
+            ));
+        }
+    }
+}
+
+// ---- pass 4: fabric audit ------------------------------------------------
+
+/// AH030 cross-chassis prefill->decode KV hop with no scale-out link,
+/// AH031 statically oversubscribed scale-out link, AH032 chassis gap.
+fn pass_fabric(plan: &ExecutionPlan, out: &mut Vec<Diag>) {
+    let scaleout = plan.fabric.scaleout_gbit;
+    let mut cross_bytes_per_req = 0.0f64;
+    for (i, b) in plan.bindings.iter().enumerate() {
+        if b.stage == Stage::Cpu {
+            continue;
+        }
+        for &d in &b.deps {
+            if d >= plan.bindings.len() || plan.bindings[d].stage == Stage::Cpu {
+                continue;
+            }
+            // The edge must cross chassis when every (producer group,
+            // consumer group) pairing occupies disjoint chassis ranges.
+            let from_groups = groups_of(plan, d);
+            let to_groups = groups_of(plan, i);
+            if from_groups.is_empty() || to_groups.is_empty() {
+                continue; // AH013 already reported
+            }
+            let may_be_local = from_groups.iter().any(|&fg| {
+                to_groups.iter().any(|&tg| {
+                    ranges_overlap(
+                        chassis_range(&plan.pipelines[fg]),
+                        chassis_range(&plan.pipelines[tg]),
+                    )
+                })
+            });
+            if !may_be_local {
+                cross_bytes_per_req += b.xfer_bytes.max(0.0);
+                let is_kv_hop = plan.bindings[d].stage == Stage::LlmPrefill
+                    && b.stage == Stage::LlmDecode;
+                if is_kv_hop && !(scaleout > 0.0 && scaleout.is_finite()) {
+                    out.push(Diag::new(
+                        "AH030",
+                        Severity::Error,
+                        bloc(i, plan),
+                        format!(
+                            "prefill->decode KV handoff from binding {d} must \
+                             cross chassis but the fabric has no scale-out \
+                             link (scaleout_gbit = {scaleout})"
+                        ),
+                        "give the fabric scale-out bandwidth or co-locate the \
+                         prefill and decode groups on shared chassis",
+                    ));
+                }
+            }
+        }
+    }
+    if scaleout > 0.0 && scaleout.is_finite() && cross_bytes_per_req > 0.0 {
+        let link_bytes_per_s = scaleout * 1e9 / 8.0;
+        let demand = cross_bytes_per_req * plan.admission.rate;
+        if demand > DEMAND_SLACK * link_bytes_per_s {
+            out.push(Diag::new(
+                "AH031",
+                Severity::Warn,
+                "plan",
+                format!(
+                    "cross-chassis transfer demand {:.2} GB/s (at the \
+                     admission rate) exceeds {DEMAND_SLACK:.0}x the {:.0} \
+                     Gbit/s scale-out link",
+                    demand / 1e9,
+                    scaleout
+                ),
+                "widen the scale-out link, cut the admission rate, or \
+                 co-locate the chatty stages",
+            ));
+        }
+    }
+    // Chassis gaps: the fleet's occupied chassis should tile [0, max)
+    // — a group stranded past a hole points at a mis-set `chassis`
+    // (the fabric builds one link per chassis index, holes included).
+    let max_ch = plan
+        .pipelines
+        .iter()
+        .map(|p| chassis_range(p).1)
+        .max()
+        .unwrap_or(0);
+    if max_ch > 0 {
+        let mut occupied = vec![false; max_ch as usize];
+        for p in &plan.pipelines {
+            let (a, b) = chassis_range(p);
+            for c in a..b {
+                occupied[c as usize] = true;
+            }
+        }
+        if let Some(gap) = occupied.iter().position(|&o| !o) {
+            out.push(Diag::new(
+                "AH032",
+                Severity::Warn,
+                "plan",
+                format!(
+                    "chassis {gap} is unoccupied but the fleet extends to \
+                     chassis {} (orphaned chassis range)",
+                    max_ch - 1
+                ),
+                "renumber the groups' chassis to tile [0, n) contiguously",
+            ));
+        }
+    }
+}
+
+// ---- pass 5: SLA feasibility ---------------------------------------------
+
+/// AH040: the cost-model critical-path lower bound (longest dependency
+/// path over the planner-profiled latencies) against the SLA target,
+/// attributed to the same bucket taxonomy `obs/critical_path.rs` uses.
+fn pass_sla(plan: &ExecutionPlan, out: &mut Vec<Diag>) {
+    let target = match plan.sla {
+        super::SlaSpec::EndToEnd(t) => t,
+        super::SlaSpec::Soft { t_sla_s, .. } => t_sla_s,
+        super::SlaSpec::None => return,
+    };
+    let n = plan.bindings.len();
+    if n == 0 || target <= 0.0 {
+        return;
+    }
+    // Longest-path DP over the topological index order; `from[i]`
+    // remembers the gating dep so the bound can be attributed.
+    let mut total = vec![0.0f64; n];
+    let mut from = vec![usize::MAX; n];
+    for (i, b) in plan.bindings.iter().enumerate() {
+        let lat = if b.latency_s.is_finite() { b.latency_s } else { 0.0 };
+        total[i] = lat;
+        for &d in &b.deps {
+            if d < i && total[d] + lat > total[i] {
+                total[i] = total[d] + lat;
+                from[i] = d;
+            }
+        }
+    }
+    let (mut node, bound) = total
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| (i, t))
+        .fold((0, 0.0), |acc, x| if x.1 > acc.1 { x } else { acc });
+    if bound <= target {
+        return;
+    }
+    // Attribute the bound's seconds to the critical-path bucket
+    // taxonomy (queue and kv_transfer have no static component).
+    let mut buckets = std::collections::BTreeMap::new();
+    loop {
+        let b = &plan.bindings[node];
+        let bucket = match b.stage {
+            Stage::LlmPrefill => "prefill",
+            Stage::LlmDecode => "decode",
+            Stage::Cpu => match classify_host_op(&b.op) {
+                SpanKind::ToolIo => "tool_io",
+                _ => "host",
+            },
+        };
+        *buckets.entry(bucket).or_insert(0.0) +=
+            if b.latency_s.is_finite() { b.latency_s } else { 0.0 };
+        if from[node] == usize::MAX {
+            break;
+        }
+        node = from[node];
+    }
+    let breakdown = crate::obs::critical_path::BUCKETS
+        .iter()
+        .filter_map(|&b| buckets.get(b).map(|s| format!("{b} {s:.3}s")))
+        .collect::<Vec<_>>()
+        .join(", ");
+    out.push(Diag::new(
+        "AH040",
+        Severity::Warn,
+        "plan",
+        format!(
+            "critical-path lower bound {bound:.3}s ({breakdown}) exceeds the \
+             SLA target {target:.3}s"
+        ),
+        "relax the SLA or rebind the critical path onto faster classes",
+    ));
+}
+
+// ---- contextual pass: mid-run re-plan compatibility (AH050) --------------
+
+/// One finding of the re-plan compatibility pass, carrying the typed
+/// (role, live group) context `orchestrator::PlanRejection` records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanDiag {
+    pub role: Role,
+    /// Shape key of the live group whose class layout the fresh plan
+    /// would move (`None` = the role's primary group).
+    pub group: Option<String>,
+    pub diag: Diag,
+}
+
+/// AH050: whether `fresh` may replace `current` mid-run. In-flight
+/// jobs keep routing by the current plan's (role, class) layout, so a
+/// fresh plan that moves any role's classes is incompatible. This is
+/// the analyzer-side source of truth `orchestrator::reconcile_replan`
+/// converts into runtime [`PlanRejection`]s.
+///
+/// [`PlanRejection`]: crate::orchestrator::PlanRejection
+pub fn verify_replan(current: &ExecutionPlan, fresh: &ExecutionPlan) -> Vec<ReplanDiag> {
+    use std::collections::BTreeSet;
+    let classes = |p: &ExecutionPlan, role: Role| -> BTreeSet<String> {
+        p.pipelines
+            .iter()
+            .filter(|pl| pl.role == role)
+            .map(|pl| pl.device.clone())
+            .collect()
+    };
+    let mut out = Vec::new();
+    for role in [Role::Prefill, Role::Decode] {
+        let cur = classes(current, role);
+        let new = classes(fresh, role);
+        if cur == new {
+            continue;
+        }
+        // Name the live group whose class the re-plan moved (the
+        // symmetric difference), not blindly the role's first group —
+        // on a mixed fleet only one generation may be affected.
+        let moved: BTreeSet<String> = cur.symmetric_difference(&new).cloned().collect();
+        let group = current
+            .pipelines
+            .iter()
+            .find(|pl| pl.role == role && moved.contains(&pl.device))
+            .or_else(|| current.pipelines.iter().find(|pl| pl.role == role))
+            .map(|pl| pl.shape_key());
+        out.push(ReplanDiag {
+            role,
+            group: group.clone(),
+            diag: Diag::new(
+                "AH050",
+                Severity::Error,
+                group.map_or_else(|| format!("role {}", role.name()), |g| format!("group {g}")),
+                format!(
+                    "planner re-plan moves {} classes {:?} -> {:?} mid-run; \
+                     in-flight work keeps routing by the live classes, so the \
+                     fresh layout is rejected and the current plan is \
+                     structurally retargeted instead",
+                    role.name(),
+                    cur.iter().cloned().collect::<Vec<_>>(),
+                    new.iter().cloned().collect::<Vec<_>>()
+                ),
+                "drain the role's in-flight work before moving its classes, \
+                 or keep the class layout and retune replicas instead",
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::presets;
+    use crate::plan::tests::tiny_plan;
+
+    fn codes(plan: &ExecutionPlan) -> Vec<String> {
+        verify(plan).diags.iter().map(|d| d.code.clone()).collect()
+    }
+
+    #[test]
+    fn clean_plans_verify_clean() {
+        for plan in [
+            tiny_plan(),
+            presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2),
+            presets::shared_prefix_fanout("8b-fp16", "H100", 4),
+            presets::homogeneous("8b-fp16", "H100", 4),
+        ] {
+            let report = verify(&plan);
+            assert!(
+                report.is_clean(),
+                "{} should be clean:\n{}",
+                plan.agent,
+                report.table()
+            );
+            assert_eq!(report.passes.len(), PASSES.len());
+            ensure_loadable(&plan).unwrap();
+        }
+    }
+
+    #[test]
+    fn topology_pass_catches_dangling_forward_and_disconnected() {
+        let mut p = tiny_plan();
+        p.bindings[1].deps = vec![9];
+        assert!(codes(&p).contains(&"AH001".to_string()));
+
+        let mut p = tiny_plan();
+        p.bindings[1].deps = vec![1];
+        assert!(codes(&p).contains(&"AH002".to_string()));
+
+        let mut p = tiny_plan();
+        p.bindings[3].deps = vec![2, 5];
+        assert!(codes(&p).contains(&"AH001".to_string()));
+
+        // Disconnect io.output: no deps and nothing depends on it.
+        let mut p = tiny_plan();
+        p.bindings[3].deps = vec![];
+        assert!(codes(&p).contains(&"AH003".to_string()));
+    }
+
+    #[test]
+    fn binding_pass_catches_splits_bounds_and_groups() {
+        let mut p = presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+        p.bindings[2].token_fraction = 0.9; // siblings now sum to 1.4
+        assert!(codes(&p).contains(&"AH010".to_string()));
+
+        let mut p = tiny_plan();
+        p.bindings[2].prefix_overlap = 1.5;
+        assert!(codes(&p).contains(&"AH011".to_string()));
+
+        let mut p = tiny_plan();
+        p.pipelines[1].replicas = 0;
+        assert!(codes(&p).contains(&"AH012".to_string()));
+
+        let mut p = tiny_plan();
+        p.pipelines.retain(|g| g.role != Role::Decode);
+        assert!(codes(&p).contains(&"AH013".to_string()));
+
+        let mut p = tiny_plan();
+        p.pipelines[0].device = "TPUv9".into();
+        let c = codes(&p);
+        assert!(c.contains(&"AH014".to_string()));
+        assert!(c.contains(&"AH013".to_string()), "prefill binding stranded");
+
+        let mut p = tiny_plan();
+        p.bindings[2].token_fraction = 0.0;
+        assert!(codes(&p).contains(&"AH015".to_string()));
+
+        let mut p = tiny_plan();
+        let dup = p.pipelines[1].clone();
+        p.pipelines.push(dup);
+        assert!(codes(&p).contains(&"AH016".to_string()));
+
+        let mut p = tiny_plan();
+        p.pipelines.push(super::super::PipelineBinding {
+            role: Role::Decode,
+            device: "B200".into(),
+            tp: 1,
+            pp: 1,
+            max_batch: 8,
+            replicas: 1,
+            chassis: 3,
+        });
+        assert!(codes(&p).contains(&"AH017".to_string()));
+    }
+
+    #[test]
+    fn fanout_replicas_are_not_a_split() {
+        // shared_prefix_fanout's worker prefills share (op, stage,
+        // deps) with token_fraction 1.0 each — fan-out, not an expert
+        // split; their sum must NOT be flagged.
+        let p = presets::shared_prefix_fanout("8b-fp16", "H100", 4);
+        assert!(!codes(&p).contains(&"AH010".to_string()));
+    }
+
+    #[test]
+    fn capacity_pass_catches_hbm_overflow_and_over_admission() {
+        // 70B FP16 weights (~141 GB) cannot fit one A40 (48 GB).
+        let p = presets::homogeneous("70b-fp16", "A40", 2);
+        let report = verify(&p);
+        assert!(
+            report.diags.iter().any(|d| d.code == "AH020"),
+            "{}",
+            report.table()
+        );
+        assert!(report.has_errors());
+        assert!(ensure_loadable(&p).is_err());
+
+        // Sharding the weights across tp recovers feasibility.
+        let mut p = presets::homogeneous("70b-fp16", "A40", 2);
+        for g in &mut p.pipelines {
+            g.tp = 8;
+        }
+        assert!(!codes(&p).contains(&"AH020".to_string()));
+
+        let mut p = tiny_plan();
+        p.admission.rate = 1e7;
+        assert!(codes(&p).contains(&"AH021".to_string()));
+    }
+
+    #[test]
+    fn fabric_pass_catches_missing_link_oversubscription_and_gaps() {
+        // tiny_plan's prefill (chassis 0) and decode (chassis 1-2) are
+        // disjoint: the KV handoff needs the scale-out link.
+        let mut p = tiny_plan();
+        p.fabric.scaleout_gbit = 0.0;
+        let report = verify(&p);
+        assert!(
+            report.diags.iter().any(|d| d.code == "AH030"),
+            "{}",
+            report.table()
+        );
+        assert!(report.has_errors());
+
+        // Co-locating decode with prefill removes the hop.
+        let mut p = tiny_plan();
+        p.fabric.scaleout_gbit = 0.0;
+        p.pipelines[1].chassis = 0;
+        p.pipelines[1].replicas = 1;
+        assert!(!codes(&p).contains(&"AH030".to_string()));
+
+        let mut p = tiny_plan();
+        p.fabric.scaleout_gbit = 0.01; // 10 Mbit against 1e8 B/req x 1000/s
+        assert!(codes(&p).contains(&"AH031".to_string()));
+
+        let mut p = tiny_plan();
+        p.pipelines[1].chassis = 7; // strands chassis 1..7
+        assert!(codes(&p).contains(&"AH032".to_string()));
+    }
+
+    #[test]
+    fn sla_pass_warns_on_infeasible_target() {
+        let mut p = tiny_plan();
+        p.sla = super::super::SlaSpec::EndToEnd(0.1); // path is ~0.551s
+        let report = verify(&p);
+        let d = report
+            .diags
+            .iter()
+            .find(|d| d.code == "AH040")
+            .expect("AH040 must fire");
+        assert_eq!(d.severity, Severity::Warn);
+        assert!(d.message.contains("decode 0.500s"), "{}", d.message);
+        assert!(!report.has_errors(), "SLA feasibility is advisory");
+        ensure_loadable(&p).unwrap();
+
+        let mut p = tiny_plan();
+        p.sla = super::super::SlaSpec::Soft {
+            t_sla_s: 0.1,
+            lambda: 1.0,
+        };
+        assert!(codes(&p).contains(&"AH040".to_string()));
+    }
+
+    #[test]
+    fn replan_pass_is_the_rejection_source_of_truth() {
+        let current = tiny_plan();
+        let mut fresh = tiny_plan();
+        fresh.pipelines[1].device = "H100".into();
+        fresh.bindings[2].class = "H100".into();
+        let diags = verify_replan(&current, &fresh);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].role, Role::Decode);
+        assert_eq!(diags[0].group.as_deref(), Some("decode Gaudi3 tp1 pp1 b32"));
+        assert_eq!(diags[0].diag.code, "AH050");
+        assert!(diags[0].diag.message.contains("Gaudi3"));
+        assert!(verify_replan(&current, &current.clone()).is_empty());
+    }
+}

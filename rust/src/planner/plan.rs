@@ -519,6 +519,11 @@ impl Planner {
             pass_log,
         };
         plan.validate()?;
+        // The planner holds itself to the same static analysis every
+        // consumer runs: a freshly-lowered plan must carry no
+        // Error-severity diagnostics (debug builds assert with the
+        // diagnostics table; release builds skip the check).
+        crate::plan::verify::debug_assert_clean(&plan);
         Ok(plan)
     }
 }

@@ -38,6 +38,11 @@
 //! its continuous batcher, and receives [`UnitOutcome`]s back once an
 //! engine has executed a batch — it never touches the engines itself.
 
+// Per-request DAG bookkeeping runs on the live dispatcher thread: a
+// panic here takes every in-flight request down, so unwrap/expect are
+// banned outside tests — inconsistent state must degrade per-request.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -143,6 +148,11 @@ impl DagRuntime {
     /// engine, wrapping when the pool is smaller than the fleet).
     pub fn new(plan: &ExecutionPlan, time_scale: f64, n_engines: usize) -> Result<DagRuntime> {
         plan.validate()?;
+        // Static pre-flight (shared with the simulator and the
+        // orchestrator): Error-severity diagnostics reject the plan
+        // before any serving state is touched, with the diagnostics
+        // table attached.
+        crate::plan::verify::ensure_loadable(plan)?;
         if plan.bindings.is_empty() {
             return Err(Error::Runtime(
                 "plan has no bindings to execute".into(),
@@ -673,7 +683,9 @@ impl DagDispatch {
     pub fn poll_timers(&mut self, rt: &DagRuntime, now: Instant, pool: &HostPool) -> Step {
         let mut step = Step::default();
         while matches!(self.timers.peek(), Some(Reverse(t)) if t.due <= now) {
-            let Reverse(t) = self.timers.pop().unwrap();
+            let Some(Reverse(t)) = self.timers.pop() else {
+                break;
+            };
             let Some(mut run) = self.runs.remove(&t.req) else {
                 continue;
             };
@@ -715,9 +727,13 @@ impl DagDispatch {
                 let unit = &rt.units[o.job.unit];
                 match &o.job.phase {
                     LlmPhase::Prefill { .. } => {
-                        let p = unit
-                            .prefill
-                            .expect("prefill phase dispatched for unit without prefill");
+                        // A prefill outcome for a unit without a prefill
+                        // phase can only come from a torn-down runtime;
+                        // drop it rather than panic the serving thread.
+                        let Some(p) = unit.prefill else {
+                            self.settle(run, &mut step);
+                            continue;
+                        };
                         run.payload[p] = Some(Vec::new());
                         if self.trace.is_some() {
                             let (group, chassis) = Self::span_placement(rt, &run, p);
@@ -757,9 +773,10 @@ impl DagDispatch {
                         }
                     }
                     LlmPhase::Decode { .. } => {
-                        let dnode = unit
-                            .decode
-                            .expect("decode phase dispatched for unit without decode");
+                        let Some(dnode) = unit.decode else {
+                            self.settle(run, &mut step);
+                            continue;
+                        };
                         run.output.extend_from_slice(&o.output);
                         run.tokens += o.output.len();
                         if let Some(ft) = o.first_token {
@@ -1093,9 +1110,9 @@ impl DagDispatch {
     /// Emit a unit's decode phase onto its decode engine.
     fn dispatch_decode(&mut self, rt: &DagRuntime, run: &mut ReqRun, unit: usize, step: &mut Step) {
         let u = &rt.units[unit];
-        let d = u
-            .decode
-            .expect("decode phase scheduled for unit without decode");
+        let Some(d) = u.decode else {
+            return;
+        };
         self.assign_pipe(rt, run, d);
         self.metrics.counter("server_decode_jobs").inc();
         self.count_group_job(rt, run, d);
@@ -1199,7 +1216,11 @@ impl DagDispatch {
                 }
             }
             Stage::LlmPrefill | Stage::LlmDecode => {
-                let u = rt.unit_of[node].expect("LLM node must belong to a unit");
+                // Every LLM node is assigned a unit at runtime build;
+                // a miss means the edge raced a teardown, so drop it.
+                let Some(u) = rt.unit_of[node] else {
+                    return;
+                };
                 run.unit_remaining[u] = run.unit_remaining[u].saturating_sub(1);
                 if run.unit_remaining[u] == 0 && !run.unit_dispatched[u] {
                     self.dispatch_unit(rt, run, u, step);
@@ -1262,10 +1283,9 @@ impl DagDispatch {
             let mut delay_s = 0.0;
             // Pipeline → pipeline edges pay the modeled fabric hop;
             // host stages ingest as part of their profiled latency.
-            if to_binding.stage != Stage::Cpu && from_chassis.is_some() {
+            if let Some(from_ch) = from_chassis.filter(|_| to_binding.stage != Stage::Cpu) {
                 self.assign_pipe(rt, run, v);
                 if let Some(to_chassis) = Self::chassis_of(rt, run, v) {
-                    let from_ch = from_chassis.unwrap();
                     if from_ch != to_chassis {
                         let bytes = rt.hop_bytes(run.req.prompt.len(), from_stage, v);
                         // Every cross-chassis pipeline edge counts —
@@ -1343,6 +1363,7 @@ fn finalize(run: ReqRun) -> ChatResponse {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::plan::tests::tiny_plan;

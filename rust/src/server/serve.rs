@@ -28,6 +28,11 @@
 //!   that moves the caller's request receiver into the unified event
 //!   stream, so the dispatcher has a single blocking point.
 
+// The dispatcher is a hot path serving live traffic: a panic here takes
+// the whole server down, so unwrap/expect are banned outside tests —
+// failures must flow into typed `Error`s or failed responses.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -196,8 +201,12 @@ pub struct Server {
 
 impl Server {
     pub fn new(engine: impl Into<Arc<Engine>>, cfg: ServerConfig) -> Server {
-        Server::with_engines(vec![engine.into()], cfg)
-            .expect("a one-engine pool is always valid")
+        match Server::with_engines(vec![engine.into()], cfg) {
+            Ok(server) => server,
+            // with_engines only fails on an empty pool; one engine was
+            // just passed.
+            Err(_) => unreachable!("a one-engine pool is always valid"),
+        }
     }
 
     /// Bring up a server over an explicit engine pool — the live
@@ -799,22 +808,25 @@ impl Server {
         sinks: &Sinks<'_>,
         batchers: &mut [Batcher<Work>],
     ) {
-        let serveable = match (self.dag.as_ref(), dispatch.as_ref()) {
-            (Some(rt), Some(_)) => req.agent.as_deref() == Some(rt.plan.agent.as_str()),
-            _ => false,
+        let (rt, d) = match (self.dag.as_ref(), dispatch.as_mut()) {
+            (Some(rt), Some(d))
+                if req.agent.as_deref() == Some(rt.plan.agent.as_str()) =>
+            {
+                (rt, d)
+            }
+            _ => {
+                let agent = req.agent.clone().unwrap_or_default();
+                sinks.send(ChatResponse::failed(
+                    req.id,
+                    0.0,
+                    format!("no installed plan serves agent `{agent}`"),
+                ));
+                return;
+            }
         };
-        if !serveable {
-            let agent = req.agent.clone().unwrap_or_default();
-            sinks.send(ChatResponse::failed(
-                req.id,
-                0.0,
-                format!("no installed plan serves agent `{agent}`"),
-            ));
-            return;
-        }
         // Duplicate in-flight ids would cross-apply host completions
         // between requests; fail the newcomer closed instead.
-        if dispatch.as_ref().is_some_and(|d| d.contains(req.id)) {
+        if d.contains(req.id) {
             sinks.send(ChatResponse::failed(
                 req.id,
                 0.0,
@@ -822,9 +834,14 @@ impl Server {
             ));
             return;
         }
-        let rt = self.dag.as_ref().expect("checked above");
-        let d = dispatch.as_mut().expect("checked above");
-        let pool = self.host.as_ref().expect("plan install creates the pool");
+        let Some(pool) = self.host.as_ref() else {
+            sinks.send(ChatResponse::failed(
+                req.id,
+                0.0,
+                "plan runtime has no host pool installed".to_string(),
+            ));
+            return;
+        };
         let step = d.admit(rt, req, Instant::now(), received, pool);
         sinks.drain(step, batchers);
     }
@@ -834,7 +851,8 @@ impl Server {
         let (req_tx, req_rx) = mpsc::channel();
         let (resp_tx, resp_rx) = mpsc::channel();
         for r in requests {
-            req_tx.send(r).unwrap();
+            // The receiver is held locally, so the send cannot fail.
+            let _ = req_tx.send(r);
         }
         drop(req_tx);
         self.serve(req_rx, resp_tx)?;
@@ -861,6 +879,7 @@ impl Drop for Server {
 // engine, non-pjrt builds).
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -377,6 +377,79 @@ fn mixed_generation_fleet_rebalances_across_groups() {
     let back = Timeline::parse_json(&text).unwrap();
     assert_eq!(back, timeline);
     assert_eq!(back.to_json_string(), text);
+
+    // Conformance: the static analyzer subsumes the runtime rejection
+    // classes — every plan the loop adopted re-verifies free of
+    // Error-severity diagnostics, and a run of clean plans never
+    // records a typed rejection.
+    use agentic_hetero::plan::verify;
+    for p in timeline.plans() {
+        let report = verify::verify(p);
+        assert!(
+            !report.has_errors(),
+            "adopted plan must verify clean:\n{}",
+            report.table()
+        );
+    }
+    assert!(
+        !timeline
+            .events
+            .iter()
+            .any(|e| matches!(e, TimelineEvent::Rejection { .. })),
+        "statically-clean plans must never trip a runtime rejection: {}",
+        timeline.summary()
+    );
+}
+
+#[test]
+fn infeasible_replan_candidate_is_statically_rejected_before_lowering() {
+    use agentic_hetero::plan::verify;
+
+    let mut orch = orchestrator();
+
+    // An infeasible re-plan candidate: swapping the model to 70B fp16
+    // leaves 140 GB of weights on tp1 groups with 80–128 GB of HBM
+    // (AH020). The pre-flight must reject it *before* any migration is
+    // lowered, keeping the live plan untouched.
+    let mut candidate = small_plan();
+    candidate.model = "70b-fp16".into();
+    candidate.pipelines[1].replicas = 4;
+    assert!(
+        verify::verify(&candidate).has_errors(),
+        "candidate must be statically infeasible"
+    );
+    let (change, rejections) = orch.propose_plan(candidate, 1.0, 0.0).unwrap();
+    assert!(change.is_none(), "infeasible candidate must not lower a migration");
+    assert!(
+        rejections.iter().any(|r| r.reason.contains("AH020")),
+        "rejection must carry the analyzer code: {rejections:?}"
+    );
+    assert!(
+        verify::verify(orch.current()).is_clean(),
+        "live plan must stay untouched"
+    );
+
+    // A clean candidate through the same entry point is adopted with a
+    // capacity-safe migration.
+    let mut good = small_plan();
+    good.pipelines[1].replicas = 3;
+    let (change, rejections) = orch.propose_plan(good, 2.0, 0.0).unwrap();
+    assert!(rejections.is_empty());
+    let change = change.expect("clean candidate must be adopted");
+    assert!(!change.migration.steps.is_empty());
+
+    // The timeline shows the rejection and exactly the one adopted
+    // migration — nothing was lowered for the infeasible candidate.
+    let timeline = orch.finish(None);
+    assert!(
+        timeline.events.iter().any(|e| matches!(
+            e,
+            TimelineEvent::Rejection { reason, .. } if reason.contains("AH020")
+        )),
+        "rejection must be recorded: {}",
+        timeline.summary()
+    );
+    assert_eq!(timeline.n_migrations(), 1);
 }
 
 #[test]

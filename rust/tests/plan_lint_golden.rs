@@ -1,0 +1,213 @@
+//! Golden test for `plan lint`: a crafted plan trips every one of the
+//! analyzer's five pass categories (topology, bindings, capacity,
+//! fabric, SLA) and the rendered diagnostics table plus the report
+//! JSON are pinned byte-for-byte. Any change to codes, messages,
+//! ordering, or formatting shows up here as an exact-diff failure.
+
+use agentic_hetero::plan::{
+    presets, verify, AdmissionPolicy, BatchPolicy, DiagReport, ExecutionPlan, FabricSpec,
+    NodeBinding, PipelineBinding, Role, SlaSpec, Stage,
+};
+
+/// One deliberate defect per pass category:
+///
+/// * topology — `io.output` depends on the nonexistent binding 9;
+/// * bindings — the decode node's `prefix_overlap` is 1.5;
+/// * capacity — 70B fp16 weights (140 GB) on a tp1 Gaudi3 (128 GB);
+/// * fabric   — the prefill→decode KV handoff must cross chassis but
+///   `scaleout_gbit` is 0;
+/// * sla      — a 100 ms end-to-end target under a 541 ms critical
+///   path.
+fn bad_plan() -> ExecutionPlan {
+    let cpu = |op: &str, deps: Vec<usize>| NodeBinding {
+        op: op.into(),
+        class: "CPU".into(),
+        stage: Stage::Cpu,
+        latency_s: 0.0005,
+        cost_usd: 0.0,
+        deps,
+        xfer_bytes: 0.0,
+        token_fraction: 1.0,
+        prefix_overlap: 0.0,
+    };
+    ExecutionPlan {
+        agent: "lint_golden".into(),
+        model: "70b-fp16".into(),
+        sla: SlaSpec::EndToEnd(0.1),
+        bindings: vec![
+            cpu("io.input", vec![]),
+            NodeBinding {
+                op: "llm.prefill".into(),
+                class: "H100".into(),
+                stage: Stage::LlmPrefill,
+                latency_s: 0.04,
+                cost_usd: 1e-5,
+                deps: vec![0],
+                xfer_bytes: 1e6,
+                token_fraction: 1.0,
+                prefix_overlap: 0.0,
+            },
+            NodeBinding {
+                op: "llm.decode".into(),
+                class: "Gaudi3".into(),
+                stage: Stage::LlmDecode,
+                latency_s: 0.5,
+                cost_usd: 1e-5,
+                deps: vec![1],
+                xfer_bytes: 1e8,
+                token_fraction: 1.0,
+                prefix_overlap: 1.5,
+            },
+            cpu("io.output", vec![2, 9]),
+        ],
+        pipelines: vec![
+            PipelineBinding {
+                role: Role::Prefill,
+                device: "H100".into(),
+                tp: 2,
+                pp: 1,
+                max_batch: 8,
+                replicas: 1,
+                chassis: 0,
+            },
+            PipelineBinding {
+                role: Role::Decode,
+                device: "Gaudi3".into(),
+                tp: 1,
+                pp: 1,
+                max_batch: 16,
+                replicas: 2,
+                chassis: 1,
+            },
+        ],
+        batching: BatchPolicy::default(),
+        admission: AdmissionPolicy::default(),
+        fabric: FabricSpec {
+            scaleout_gbit: 0.0,
+            ..FabricSpec::default()
+        },
+        cpu_workers: 32,
+        cost_usd: 4e-5,
+        latency_s: 0.55,
+        pass_log: vec![],
+    }
+}
+
+const EXPECTED_TABLE: &str = "\
+plan diagnostics: 4 error(s), 1 warning(s)
+  AH001 error binding[3] io.output: dep 9 out of range (plan has 4 bindings)
+        fix: point the dep at an existing earlier binding
+  AH011 error binding[2] llm.decode: prefix_overlap 1.5 outside [0, 1]
+        fix: clamp prefix_overlap to the expected resident-prefix fraction
+  AH020 error pipeline[1] decode Gaudi3 tp1 pp1 b16: HBM footprint 145.4 GB (weights 140.0 + KV 5.4 at ctx 1024 x batch 16) exceeds Gaudi3 HBM 128 GB
+        fix: raise tp/pp, shrink max_batch, or move the group to a larger-memory device
+  AH030 error binding[2] llm.decode: prefill->decode KV handoff from binding 1 must cross chassis but the fabric has no scale-out link (scaleout_gbit = 0)
+        fix: give the fabric scale-out bandwidth or co-locate the prefill and decode groups on shared chassis
+  AH040 warn  plan: critical-path lower bound 0.541s (prefill 0.040s, decode 0.500s, tool_io 0.001s) exceeds the SLA target 0.100s
+        fix: relax the SLA or rebind the critical path onto faster classes
+verdict: FAIL
+";
+
+const EXPECTED_JSON: &str = r#"{
+  "errors": 4,
+  "warnings": 1,
+  "diags": [
+    {
+      "code": "AH001",
+      "severity": "error",
+      "loc": "binding[3] io.output",
+      "message": "dep 9 out of range (plan has 4 bindings)",
+      "suggestion": "point the dep at an existing earlier binding"
+    },
+    {
+      "code": "AH011",
+      "severity": "error",
+      "loc": "binding[2] llm.decode",
+      "message": "prefix_overlap 1.5 outside [0, 1]",
+      "suggestion": "clamp prefix_overlap to the expected resident-prefix fraction"
+    },
+    {
+      "code": "AH020",
+      "severity": "error",
+      "loc": "pipeline[1] decode Gaudi3 tp1 pp1 b16",
+      "message": "HBM footprint 145.4 GB (weights 140.0 + KV 5.4 at ctx 1024 x batch 16) exceeds Gaudi3 HBM 128 GB",
+      "suggestion": "raise tp/pp, shrink max_batch, or move the group to a larger-memory device"
+    },
+    {
+      "code": "AH030",
+      "severity": "error",
+      "loc": "binding[2] llm.decode",
+      "message": "prefill->decode KV handoff from binding 1 must cross chassis but the fabric has no scale-out link (scaleout_gbit = 0)",
+      "suggestion": "give the fabric scale-out bandwidth or co-locate the prefill and decode groups on shared chassis"
+    },
+    {
+      "code": "AH040",
+      "severity": "warn",
+      "loc": "plan",
+      "message": "critical-path lower bound 0.541s (prefill 0.040s, decode 0.500s, tool_io 0.001s) exceeds the SLA target 0.100s",
+      "suggestion": "relax the SLA or rebind the critical path onto faster classes"
+    }
+  ],
+  "passes": [
+    {
+      "pass": "topology",
+      "findings": 1
+    },
+    {
+      "pass": "bindings",
+      "findings": 1
+    },
+    {
+      "pass": "capacity",
+      "findings": 1
+    },
+    {
+      "pass": "fabric",
+      "findings": 1
+    },
+    {
+      "pass": "sla",
+      "findings": 1
+    }
+  ]
+}"#;
+
+#[test]
+fn lint_table_is_byte_stable_across_all_five_categories() {
+    let report = verify::verify(&bad_plan());
+    assert_eq!(report.table(), EXPECTED_TABLE);
+    assert_eq!(report.errors().count(), 4);
+    assert_eq!(report.warnings().count(), 1);
+    let counts: Vec<usize> = report.passes.iter().map(|(_, n)| *n).collect();
+    assert_eq!(counts, vec![1, 1, 1, 1, 1], "one finding per pass category");
+}
+
+#[test]
+fn lint_json_is_byte_stable_and_round_trips() {
+    let report = verify::verify(&bad_plan());
+    let rendered = report.to_json().pretty();
+    assert_eq!(rendered, EXPECTED_JSON);
+    let back = DiagReport::from_json(&agentic_hetero::util::json::Json::parse(&rendered).unwrap())
+        .unwrap();
+    assert_eq!(back, report, "report JSON round-trip must be identity");
+}
+
+#[test]
+fn loader_gate_carries_the_table() {
+    let err = verify::ensure_loadable(&bad_plan()).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("plan rejected by static analysis:"),
+        "gate must name the analyzer: {msg}"
+    );
+    assert!(msg.contains(EXPECTED_TABLE.trim_end()), "gate must attach the table: {msg}");
+}
+
+#[test]
+fn clean_preset_table_is_a_bare_pass() {
+    let report = verify::verify(&presets::homogeneous("8b-fp16", "H100", 2));
+    assert_eq!(
+        report.table(),
+        "plan diagnostics: 0 error(s), 0 warning(s)\nverdict: PASS\n"
+    );
+}

@@ -1,0 +1,213 @@
+//! Property suite for the static plan analyzer (`plan::verify`).
+//!
+//! Two invariants:
+//!
+//! 1. every shipped preset verifies clean (the same gate CI's
+//!    `plan lint --deny-warn --presets` enforces), and
+//! 2. a random single-field mutation of a clean plan is caught by the
+//!    analyzer with the *expected* diagnostic code and severity — the
+//!    pass stack has no blind spot across its five categories
+//!    (topology, binding invariants, capacity, fabric, SLA).
+//!
+//! Case count follows `AH_PROP_CASES` (128 default; the nightly CI
+//! sweep runs 4096).
+
+use agentic_hetero::plan::presets;
+use agentic_hetero::plan::verify;
+use agentic_hetero::plan::{DiagReport, ExecutionPlan, Severity, SlaSpec};
+use agentic_hetero::util::prop::check;
+use agentic_hetero::util::rng::Rng;
+
+fn clean_presets() -> Vec<(&'static str, ExecutionPlan)> {
+    vec![
+        (
+            "mixed_generation",
+            presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2),
+        ),
+        (
+            "shared_prefix_fanout",
+            presets::shared_prefix_fanout("8b-fp16", "H100", 4),
+        ),
+        ("homogeneous", presets::homogeneous("8b-fp16", "H100", 2)),
+    ]
+}
+
+#[test]
+fn all_presets_verify_clean() {
+    for (name, plan) in clean_presets() {
+        let report = verify::verify(&plan);
+        assert!(
+            report.is_clean(),
+            "preset {name} must lint clean:\n{}",
+            report.table()
+        );
+        verify::ensure_loadable(&plan)
+            .unwrap_or_else(|e| panic!("preset {name} must be loadable: {e}"));
+    }
+}
+
+/// Pick a binding index with a non-empty dep list (every preset has
+/// several).
+fn binding_with_deps(plan: &ExecutionPlan, rng: &mut Rng) -> usize {
+    let with: Vec<usize> = (0..plan.bindings.len())
+        .filter(|&i| !plan.bindings[i].deps.is_empty())
+        .collect();
+    with[rng.index(with.len())]
+}
+
+/// Pick an LLM (non-CPU) binding index.
+fn llm_binding(plan: &ExecutionPlan, rng: &mut Rng) -> usize {
+    let llm: Vec<usize> = (0..plan.bindings.len())
+        .filter(|&i| {
+            plan.bindings[i].stage != agentic_hetero::plan::Stage::Cpu
+        })
+        .collect();
+    llm[rng.index(llm.len())]
+}
+
+/// Apply one random single-field mutation; return the diagnostic the
+/// analyzer must now report. Mutations that need a specific plan shape
+/// (the token-fraction split) draw the mixed-generation preset; the
+/// rest mutate whichever preset the case picked.
+fn mutate(plan: &mut ExecutionPlan, rng: &mut Rng) -> (&'static str, Severity) {
+    match rng.index(15) {
+        // --- pass 1: topology ---
+        0 => {
+            let i = binding_with_deps(plan, rng);
+            plan.bindings[i].deps[0] = plan.bindings.len() + 7;
+            ("AH001", Severity::Error)
+        }
+        1 => {
+            let i = 1 + rng.index(plan.bindings.len() - 1);
+            plan.bindings[i].deps = vec![i];
+            ("AH002", Severity::Error)
+        }
+        2 => {
+            let mut orphan = plan.bindings[0].clone();
+            orphan.deps.clear();
+            plan.bindings.push(orphan);
+            ("AH003", Severity::Warn)
+        }
+        // --- pass 2: binding invariants ---
+        3 => {
+            *plan = presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+            // Break the decode split's partition: 0.9 + 0.5 != 1.
+            plan.bindings[2].token_fraction = 0.9;
+            ("AH010", Severity::Error)
+        }
+        4 => {
+            let i = rng.index(plan.bindings.len());
+            plan.bindings[i].prefix_overlap = if rng.bool(0.5) { 1.5 } else { -0.25 };
+            ("AH011", Severity::Error)
+        }
+        5 => {
+            let g = rng.index(plan.pipelines.len());
+            match rng.index(4) {
+                0 => plan.pipelines[g].tp = 0,
+                1 => plan.pipelines[g].pp = 0,
+                2 => plan.pipelines[g].max_batch = 0,
+                _ => plan.pipelines[g].replicas = 0,
+            }
+            ("AH012", Severity::Error)
+        }
+        6 => {
+            let i = llm_binding(plan, rng);
+            plan.bindings[i].class = "B200".into();
+            ("AH013", Severity::Error)
+        }
+        7 => {
+            let g = rng.index(plan.pipelines.len());
+            plan.pipelines[g].device = "TPUv9".into();
+            ("AH014", Severity::Error)
+        }
+        8 => {
+            let i = rng.index(plan.bindings.len());
+            plan.bindings[i].token_fraction =
+                [0.0, -0.5, 1.5][rng.index(3)];
+            ("AH015", Severity::Error)
+        }
+        9 => {
+            let dup = plan.pipelines[rng.index(plan.pipelines.len())].clone();
+            plan.pipelines.push(dup);
+            ("AH016", Severity::Warn)
+        }
+        10 => {
+            let mut orphan = plan.pipelines[0].clone();
+            orphan.device = "B200".into();
+            plan.pipelines.push(orphan);
+            ("AH017", Severity::Warn)
+        }
+        // --- pass 3: capacity ---
+        11 => {
+            // 70B fp16 weights (140 GB) cannot fit an 80 GB part at
+            // tp1 pp1 — every preset group trips the HBM audit.
+            plan.model = "70b-fp16".into();
+            ("AH020", Severity::Error)
+        }
+        12 => {
+            plan.admission.rate = 1e9;
+            ("AH021", Severity::Warn)
+        }
+        // --- pass 4: fabric ---
+        13 => {
+            // All presets hand KV across chassis (prefill and decode
+            // groups occupy disjoint ranges).
+            plan.fabric.scaleout_gbit = 0.0;
+            ("AH030", Severity::Error)
+        }
+        // --- pass 5: SLA ---
+        _ => {
+            plan.sla = SlaSpec::EndToEnd(1e-4);
+            ("AH040", Severity::Warn)
+        }
+    }
+}
+
+#[test]
+fn single_field_mutations_are_caught() {
+    check("plan-verify-mutations", |rng| {
+        let mut all = clean_presets();
+        let (name, mut plan) = all.swap_remove(rng.index(all.len()));
+        let (code, severity) = mutate(&mut plan, rng);
+        let report = verify::verify(&plan);
+        assert!(
+            report
+                .diags
+                .iter()
+                .any(|d| d.code == code && d.severity == severity),
+            "mutated {name} must report {code} ({}):\n{}",
+            severity.name(),
+            report.table()
+        );
+        // The loader gate agrees with the report: rejected iff any
+        // Error-severity finding.
+        assert_eq!(
+            verify::ensure_loadable(&plan).is_err(),
+            report.has_errors(),
+            "ensure_loadable must reject exactly the Error reports"
+        );
+        // Diagnostics survive the JSON round-trip bit-for-bit.
+        let back = DiagReport::from_json(&report.to_json())
+            .expect("report json must re-parse");
+        assert_eq!(back, report, "diagnostic JSON round-trip must be identity");
+    });
+}
+
+#[test]
+fn extra_chassis_gap_is_warned() {
+    // Moving the last group past a hole leaves the fabric with an
+    // unoccupied chassis — advisory, not fatal.
+    let mut plan = presets::homogeneous("8b-fp16", "H100", 2);
+    let last = plan.pipelines.len() - 1;
+    plan.pipelines[last].chassis += 10;
+    let report = verify::verify(&plan);
+    assert!(
+        report
+            .diags
+            .iter()
+            .any(|d| d.code == "AH032" && d.severity == Severity::Warn),
+        "chassis gap must warn:\n{}",
+        report.table()
+    );
+    assert!(verify::ensure_loadable(&plan).is_ok());
+}
