@@ -4,8 +4,9 @@
 //! trace. Emits `BENCH_orchestrator.json` (decisions/s, migration
 //! steps, SLA attainment) for the perf ledger.
 
+use agentic_hetero::cluster::arrivals::SquareWave;
 use agentic_hetero::cluster::sim::simulate_plan;
-use agentic_hetero::cluster::trace::{bursty, TraceConfig};
+use agentic_hetero::cluster::trace::TraceConfig;
 use agentic_hetero::jobj;
 use agentic_hetero::orchestrator::{
     lower_diff, retarget, Executor, Orchestrator, OrchestratorConfig, SimExecutor,
@@ -132,7 +133,10 @@ fn main() {
     // 3. End-to-end: orchestrate a bursty trace through the DAG
     //    simulator (smoke scale — the integration test asserts the
     //    behaviour; here we time it and export the attainment).
-    let trace = bursty(
+    // The streaming square-wave process in `compat` mode reproduces the
+    // legacy `trace::bursty` request stream bit-for-bit (pinned by the
+    // arrivals golden tests), materialized once for the repeated runs.
+    let trace: Vec<_> = SquareWave::compat(
         &TraceConfig {
             n_requests: 192,
             rate: 4.0,
@@ -144,7 +148,9 @@ fn main() {
         8.0,
         30.0,
         8.0,
-    );
+    )
+    .expect("compat square wave must build")
+    .collect();
     let orch = || {
         Orchestrator::new(
             OrchestratorConfig {

@@ -1,8 +1,9 @@
 //! Discrete-event simulator throughput (events/s) and fabric transfer
 //! scheduling. §Perf target: >= 1M events/s.
 
+use agentic_hetero::cluster::arrivals::Poisson;
 use agentic_hetero::cluster::sim::{pair_placement, ClusterSim};
-use agentic_hetero::cluster::trace::{generate, TraceConfig};
+use agentic_hetero::cluster::trace::TraceConfig;
 use agentic_hetero::cost::hardware::by_name;
 use agentic_hetero::cost::model_profile::llama3_8b;
 use agentic_hetero::cost::roofline::Parallelism;
@@ -15,14 +16,18 @@ fn main() {
 
     let h100 = by_name("H100").unwrap();
     let gaudi = by_name("Gaudi3").unwrap();
-    let trace = generate(&TraceConfig {
+    // Streamed Poisson arrivals, bit-identical to the legacy
+    // `trace::generate` (pinned by the arrivals golden tests).
+    let trace: Vec<_> = Poisson::new(&TraceConfig {
         n_requests: 512,
         rate: 32.0,
         isl_mean: 512,
         osl_mean: 128,
         sigma: 0.3,
         seed: 5,
-    });
+    })
+    .expect("poisson process must build")
+    .collect();
     let total_events: u64 = {
         let placement = pair_placement(
             &h100, Parallelism { tp: 1, pp: 1 }, 2, 8,
@@ -64,14 +69,16 @@ fn main() {
     let mut cfg = PlannerConfig::default();
     cfg.sla = Sla::EndToEnd(5.0);
     let plan = Planner::new(cfg).plan(&agent).unwrap();
-    let dag_trace = generate(&TraceConfig {
+    let dag_trace: Vec<_> = Poisson::new(&TraceConfig {
         n_requests: 256,
         rate: 16.0,
         isl_mean: 512,
         osl_mean: 64,
         sigma: 0.3,
         seed: 13,
-    });
+    })
+    .expect("poisson process must build")
+    .collect();
     let dag_events = simulate_plan(&plan, &dag_trace).unwrap().events_processed;
     println!(
         "agent-DAG trace of {} requests -> {} events",

@@ -1,0 +1,956 @@
+//! Streaming arrival processes: pull-based request generators.
+//!
+//! The historical trace API ([`crate::cluster::trace`]) materializes a
+//! whole `Vec<Request>` up front, which caps a "day of traffic" at
+//! whatever fits in memory. This module redesigns ingestion around the
+//! [`ArrivalProcess`] trait — an infallible iterator of [`Request`]s
+//! with a peekable next-arrival time — so `DagSim::run_stream` and the
+//! orchestrator executors can pull arrivals lazily: the event queue
+//! holds in-flight work plus exactly one future arrival, never the
+//! future itself. All processes are seeded, deterministic, and O(1)
+//! memory in the number of requests emitted.
+//!
+//! Back-compat is exact, not approximate: [`Poisson`] reproduces
+//! [`trace::generate`](crate::cluster::trace::generate) bit-for-bit
+//! (same seed, same RNG draw order), [`SquareWave::compat`] reproduces
+//! [`trace::bursty`](crate::cluster::trace::bursty), [`VoiceAgent`]
+//! reproduces [`trace::voice_agent`](crate::cluster::trace::voice_agent),
+//! and [`Replay`] adapts any existing slice. Golden tests in this
+//! module and `rust/tests/arrivals.rs` pin all four equivalences.
+
+use std::borrow::Cow;
+
+use crate::cluster::trace::{lognormal_len, Request, TraceConfig};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// A pull-based, infallible stream of requests in non-decreasing
+/// arrival order.
+///
+/// Contract:
+/// - `next()` yields requests with non-decreasing `arrive_s`; all
+///   arrival times are finite. (Constructor validation plus process
+///   math guarantee this; `DagSim` still checks defensively and
+///   reports `Error::Config` on violation.)
+/// - `peek_arrival()` returns the `arrive_s` of the request the next
+///   `next()` call will yield, without consuming it — the hook that
+///   lets an event loop decide whether the stream or the event queue
+///   fires first, with O(1) lookahead.
+/// - Exhaustion is permanent: once `next()` returns `None`, both
+///   methods return `None` forever.
+///
+/// The trait is object-safe; `DagSim::run_stream` takes
+/// `&mut dyn ArrivalProcess`.
+pub trait ArrivalProcess: Iterator<Item = Request> {
+    /// Arrival time of the next request, without consuming it.
+    fn peek_arrival(&mut self) -> Option<f64>;
+}
+
+impl<P: ArrivalProcess + ?Sized> ArrivalProcess for &mut P {
+    fn peek_arrival(&mut self) -> Option<f64> {
+        (**self).peek_arrival()
+    }
+}
+
+/// Lognormal length marginals shared by every synthetic process —
+/// the same clamps ([8, 32768] prompt / [1, 16384] output tokens) and
+/// draw order (ISL before OSL) as `trace::generate`, so equal RNG
+/// states produce equal requests.
+#[derive(Debug, Clone, Copy)]
+struct Lengths {
+    isl_mean: u64,
+    osl_mean: u64,
+    sigma: f64,
+}
+
+impl Lengths {
+    fn of(cfg: &TraceConfig) -> Lengths {
+        Lengths {
+            isl_mean: cfg.isl_mean,
+            osl_mean: cfg.osl_mean,
+            sigma: cfg.sigma,
+        }
+    }
+
+    fn request(&self, rng: &mut Rng, id: u64, arrive_s: f64) -> Request {
+        Request {
+            id,
+            arrive_s,
+            isl: lognormal_len(rng, self.isl_mean, self.sigma, 8, 32_768),
+            osl: lognormal_len(rng, self.osl_mean, self.sigma, 1, 16_384),
+            pre_s: 0.0,
+            post_s: 0.0,
+        }
+    }
+}
+
+/// Implements `Iterator` + `ArrivalProcess` on top of a one-slot
+/// `pending` buffer and a private `gen_next()` — peeking generates at
+/// most one request ahead, keeping lookahead O(1).
+macro_rules! impl_arrival_process {
+    ($ty:ty) => {
+        impl Iterator for $ty {
+            type Item = Request;
+
+            fn next(&mut self) -> Option<Request> {
+                match self.pending.take() {
+                    Some(r) => Some(r),
+                    None => self.gen_next(),
+                }
+            }
+        }
+
+        impl ArrivalProcess for $ty {
+            fn peek_arrival(&mut self) -> Option<f64> {
+                if self.pending.is_none() {
+                    self.pending = self.gen_next();
+                }
+                self.pending.as_ref().map(|r| r.arrive_s)
+            }
+        }
+    };
+}
+
+/// Homogeneous Poisson arrivals with lognormal lengths — the streaming
+/// twin of [`trace::generate`](crate::cluster::trace::generate),
+/// bit-for-bit: `Poisson::new(&cfg)?.collect::<Vec<_>>()` equals
+/// `generate(&cfg)` exactly (pinned by a golden test).
+pub struct Poisson {
+    rng: Rng,
+    rate: f64,
+    lens: Lengths,
+    t: f64,
+    next_id: u64,
+    remaining: usize,
+    pending: Option<Request>,
+}
+
+impl Poisson {
+    pub fn new(cfg: &TraceConfig) -> Result<Poisson> {
+        cfg.validate()?;
+        Ok(Poisson {
+            rng: Rng::new(cfg.seed),
+            rate: cfg.rate,
+            lens: Lengths::of(cfg),
+            t: 0.0,
+            next_id: 0,
+            remaining: cfg.n_requests,
+            pending: None,
+        })
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.t += self.rng.exp(self.rate);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Lengths::request(&self.lens, &mut self.rng, id, self.t))
+    }
+}
+
+impl_arrival_process!(Poisson);
+
+/// Non-homogeneous Poisson arrivals whose rate follows a sinusoidal
+/// 24h template: `rate(t) = base * (1 + amplitude * sin(2π (t + phase)
+/// / period))`. Sampled exactly by Lewis–Shedler thinning against the
+/// peak rate `base * (1 + amplitude)`, so the emitted point process has
+/// the true time-varying intensity — not a staircase approximation.
+pub struct Diurnal {
+    rng: Rng,
+    base_rate: f64,
+    amplitude: f64,
+    period_s: f64,
+    phase_s: f64,
+    rate_max: f64,
+    lens: Lengths,
+    t: f64,
+    next_id: u64,
+    remaining: usize,
+    pending: Option<Request>,
+}
+
+impl Diurnal {
+    /// Seconds in the canonical diurnal period.
+    pub const DAY_S: f64 = 86_400.0;
+
+    /// Full-knob constructor. `amplitude` must sit in `[0, 1)` so the
+    /// instantaneous rate stays strictly positive; `period_s > 0`;
+    /// `phase_s` finite (shifts where in the cycle `t = 0` lands).
+    pub fn new(cfg: &TraceConfig, amplitude: f64, period_s: f64, phase_s: f64) -> Result<Diurnal> {
+        cfg.validate()?;
+        if !amplitude.is_finite() || !(0.0..1.0).contains(&amplitude) {
+            return Err(Error::Config(format!(
+                "diurnal amplitude must be in [0, 1), got {amplitude}"
+            )));
+        }
+        if !period_s.is_finite() || period_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "diurnal period must be finite and > 0, got {period_s}"
+            )));
+        }
+        if !phase_s.is_finite() {
+            return Err(Error::Config(format!(
+                "diurnal phase must be finite, got {phase_s}"
+            )));
+        }
+        Ok(Diurnal {
+            rng: Rng::new(cfg.seed),
+            base_rate: cfg.rate,
+            amplitude,
+            period_s,
+            phase_s,
+            rate_max: cfg.rate * (1.0 + amplitude),
+            lens: Lengths::of(cfg),
+            t: 0.0,
+            next_id: 0,
+            remaining: cfg.n_requests,
+            pending: None,
+        })
+    }
+
+    /// The common case: a 24-hour sinusoid starting at the mean rate.
+    pub fn daily(cfg: &TraceConfig, amplitude: f64) -> Result<Diurnal> {
+        Diurnal::new(cfg, amplitude, Diurnal::DAY_S, 0.0)
+    }
+
+    /// Instantaneous arrival rate at absolute time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        self.base_rate
+            * (1.0
+                + self.amplitude
+                    * (std::f64::consts::TAU * (t + self.phase_s) / self.period_s).sin())
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        // Thinning: candidate points at the peak rate, accepted with
+        // probability rate(t)/rate_max.
+        loop {
+            self.t += self.rng.exp(self.rate_max);
+            if self.rng.f64() * self.rate_max <= self.rate_at(self.t) {
+                break;
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Lengths::request(&self.lens, &mut self.rng, id, self.t))
+    }
+}
+
+impl_arrival_process!(Diurnal);
+
+/// One rate spike in a [`FlashCrowd`] schedule: the arrival rate is
+/// multiplied by `mult` for `dur_s` seconds starting at `at_s`.
+#[derive(Debug, Clone, Copy)]
+pub struct Spike {
+    pub at_s: f64,
+    pub dur_s: f64,
+    pub mult: f64,
+}
+
+enum Schedule {
+    /// Sorted by `at_s`; overlapping spikes apply sequentially (the
+    /// earlier spike runs to its end before the later one is
+    /// consulted), never multiplicatively.
+    Explicit(Vec<Spike>),
+    Periodic { every_s: f64, dur_s: f64, mult: f64 },
+}
+
+/// Baseline Poisson traffic plus scheduled rate spikes — the
+/// flash-crowd template. Piecewise-constant rates are sampled
+/// *exactly*: a gap drawn at rate λ that would cross a rate boundary
+/// is discarded and redrawn from the boundary (valid by memorylessness
+/// of the exponential), so spike edges are sharp — unlike the
+/// documented drift in [`trace::bursty`](crate::cluster::trace::bursty).
+pub struct FlashCrowd {
+    rng: Rng,
+    rate: f64,
+    lens: Lengths,
+    sched: Schedule,
+    /// Cursor into `Schedule::Explicit` — spikes before it are in the
+    /// past. Makes `segment_at` O(1) amortized over a whole run.
+    next_spike: usize,
+    t: f64,
+    next_id: u64,
+    remaining: usize,
+    pending: Option<Request>,
+}
+
+impl FlashCrowd {
+    /// Explicit spike schedule. Spikes are sorted by start time; each
+    /// needs `at_s >= 0`, `dur_s > 0`, `mult > 0`, all finite.
+    pub fn new(cfg: &TraceConfig, mut spikes: Vec<Spike>) -> Result<FlashCrowd> {
+        cfg.validate()?;
+        for s in &spikes {
+            if !s.at_s.is_finite() || s.at_s < 0.0 {
+                return Err(Error::Config(format!(
+                    "spike start must be finite and >= 0, got {}",
+                    s.at_s
+                )));
+            }
+            if !s.dur_s.is_finite() || s.dur_s <= 0.0 {
+                return Err(Error::Config(format!(
+                    "spike duration must be finite and > 0, got {}",
+                    s.dur_s
+                )));
+            }
+            if !s.mult.is_finite() || s.mult <= 0.0 {
+                return Err(Error::Config(format!(
+                    "spike multiplier must be finite and > 0, got {}",
+                    s.mult
+                )));
+            }
+        }
+        spikes.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Ok(FlashCrowd::build(cfg, Schedule::Explicit(spikes)))
+    }
+
+    /// A spike of `mult`× lasting `dur_s` at the start of every
+    /// `every_s`-second cycle, forever.
+    pub fn periodic(cfg: &TraceConfig, every_s: f64, dur_s: f64, mult: f64) -> Result<FlashCrowd> {
+        cfg.validate()?;
+        if !every_s.is_finite() || every_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "spike interval must be finite and > 0, got {every_s}"
+            )));
+        }
+        if !dur_s.is_finite() || dur_s <= 0.0 || dur_s > every_s {
+            return Err(Error::Config(format!(
+                "spike duration must be in (0, every_s], got {dur_s}"
+            )));
+        }
+        if !mult.is_finite() || mult <= 0.0 {
+            return Err(Error::Config(format!(
+                "spike multiplier must be finite and > 0, got {mult}"
+            )));
+        }
+        Ok(FlashCrowd::build(
+            cfg,
+            Schedule::Periodic {
+                every_s,
+                dur_s,
+                mult,
+            },
+        ))
+    }
+
+    fn build(cfg: &TraceConfig, sched: Schedule) -> FlashCrowd {
+        FlashCrowd {
+            rng: Rng::new(cfg.seed),
+            rate: cfg.rate,
+            lens: Lengths::of(cfg),
+            sched,
+            next_spike: 0,
+            t: 0.0,
+            next_id: 0,
+            remaining: cfg.n_requests,
+            pending: None,
+        }
+    }
+
+    /// The constant-rate segment containing `t`: (rate, segment end).
+    fn segment_at(&mut self, t: f64) -> (f64, f64) {
+        match &self.sched {
+            Schedule::Periodic {
+                every_s,
+                dur_s,
+                mult,
+            } => {
+                let phase = t.rem_euclid(*every_s);
+                let start = t - phase;
+                if phase < *dur_s {
+                    (self.rate * mult, start + dur_s)
+                } else {
+                    (self.rate, start + every_s)
+                }
+            }
+            Schedule::Explicit(spikes) => {
+                while let Some(s) = spikes.get(self.next_spike) {
+                    if t < s.at_s {
+                        return (self.rate, s.at_s);
+                    }
+                    if t < s.at_s + s.dur_s {
+                        return (self.rate * s.mult, s.at_s + s.dur_s);
+                    }
+                    self.next_spike += 1;
+                }
+                (self.rate, f64::INFINITY)
+            }
+        }
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        loop {
+            let (rate, boundary) = self.segment_at(self.t);
+            let gap = self.rng.exp(rate);
+            if self.t + gap <= boundary {
+                self.t += gap;
+                break;
+            }
+            // Gap crosses a rate boundary: restart from the boundary —
+            // exact for exponential gaps (memorylessness).
+            self.t = boundary;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Lengths::request(&self.lens, &mut self.rng, id, self.t))
+    }
+}
+
+impl_arrival_process!(FlashCrowd);
+
+/// Square-wave rate modulation: the first `burst_s` seconds of every
+/// `period_s` cycle run at `rate * mult`, the rest at `rate`.
+///
+/// Two modes:
+/// - [`SquareWave::new`] — exact piecewise-constant semantics with
+///   boundary-clipped sampling (sharp burst edges, bursts never
+///   skipped).
+/// - [`SquareWave::compat`] — bit-for-bit reproduction of
+///   [`trace::bursty`](crate::cluster::trace::bursty), including its
+///   documented drift (rate picked from the phase at the *previous*
+///   arrival, gaps never clipped). Kept so existing benches and pinned
+///   replay traces are stable across the API migration.
+pub struct SquareWave {
+    rng: Rng,
+    rate: f64,
+    mult: f64,
+    period_s: f64,
+    burst_s: f64,
+    exact: bool,
+    lens: Lengths,
+    t: f64,
+    next_id: u64,
+    remaining: usize,
+    pending: Option<Request>,
+}
+
+impl SquareWave {
+    /// Exact piecewise-constant square wave.
+    pub fn new(cfg: &TraceConfig, mult: f64, period_s: f64, burst_s: f64) -> Result<SquareWave> {
+        SquareWave::build(cfg, mult, period_s, burst_s, true)
+    }
+
+    /// `trace::bursty`-compatible mode (bit-identical output, same
+    /// seed XOR and RNG draw order).
+    pub fn compat(cfg: &TraceConfig, mult: f64, period_s: f64, burst_s: f64) -> Result<SquareWave> {
+        SquareWave::build(cfg, mult, period_s, burst_s, false)
+    }
+
+    fn build(
+        cfg: &TraceConfig,
+        mult: f64,
+        period_s: f64,
+        burst_s: f64,
+        exact: bool,
+    ) -> Result<SquareWave> {
+        cfg.validate()?;
+        if !mult.is_finite() || mult <= 0.0 {
+            return Err(Error::Config(format!(
+                "burst multiplier must be finite and > 0, got {mult}"
+            )));
+        }
+        if !period_s.is_finite() || period_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "burst period must be finite and > 0, got {period_s}"
+            )));
+        }
+        if !burst_s.is_finite() || !(0.0..=period_s).contains(&burst_s) {
+            return Err(Error::Config(format!(
+                "burst length must be in [0, period], got {burst_s}"
+            )));
+        }
+        Ok(SquareWave {
+            rng: Rng::new(cfg.seed ^ 0xB525_7ABC),
+            rate: cfg.rate,
+            mult,
+            period_s,
+            burst_s,
+            exact,
+            lens: Lengths::of(cfg),
+            t: 0.0,
+            next_id: 0,
+            remaining: cfg.n_requests,
+            pending: None,
+        })
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        if self.exact {
+            loop {
+                let phase = self.t.rem_euclid(self.period_s);
+                let start = self.t - phase;
+                let (rate, boundary) = if phase < self.burst_s {
+                    (self.rate * self.mult, start + self.burst_s)
+                } else {
+                    (self.rate, start + self.period_s)
+                };
+                let gap = self.rng.exp(rate);
+                if self.t + gap <= boundary {
+                    self.t += gap;
+                    break;
+                }
+                self.t = boundary;
+            }
+        } else {
+            // bursty()'s historical sequence: rate from the phase at
+            // the previous arrival, gap never clipped.
+            let rate = if self.t % self.period_s < self.burst_s {
+                self.rate * self.mult
+            } else {
+                self.rate
+            };
+            self.t += self.rng.exp(rate);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Lengths::request(&self.lens, &mut self.rng, id, self.t))
+    }
+}
+
+impl_arrival_process!(SquareWave);
+
+/// The Figure-2 voice agent as a stream: Poisson base arrivals plus
+/// STT/TTS stage latencies and a probabilistic search branch, drawn
+/// from an independent stage RNG. Bit-identical to
+/// [`trace::voice_agent`](crate::cluster::trace::voice_agent): the two
+/// RNG streams are independent, so interleaving their draws
+/// per-request reproduces the historical two-pass sequence exactly.
+pub struct VoiceAgent {
+    rng: Rng,
+    stage_rng: Rng,
+    rate: f64,
+    lens: Lengths,
+    t: f64,
+    next_id: u64,
+    remaining: usize,
+    pending: Option<Request>,
+}
+
+impl VoiceAgent {
+    pub fn new(cfg: &TraceConfig) -> Result<VoiceAgent> {
+        cfg.validate()?;
+        Ok(VoiceAgent {
+            rng: Rng::new(cfg.seed),
+            stage_rng: Rng::new(cfg.seed ^ 0x5052_4F42),
+            rate: cfg.rate,
+            lens: Lengths::of(cfg),
+            t: 0.0,
+            next_id: 0,
+            remaining: cfg.n_requests,
+            pending: None,
+        })
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.t += self.rng.exp(self.rate);
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut r = Lengths::request(&self.lens, &mut self.rng, id, self.t);
+        r.pre_s = self.stage_rng.lognormal(-0.6, 0.4).clamp(0.1, 5.0);
+        r.post_s = self.stage_rng.lognormal(-1.2, 0.4).clamp(0.05, 2.0);
+        if self.stage_rng.bool(0.35) {
+            r.isl += 256;
+            r.pre_s += self.stage_rng.lognormal(-1.0, 0.6).clamp(0.05, 3.0);
+        }
+        Some(r)
+    }
+}
+
+impl_arrival_process!(VoiceAgent);
+
+/// Adapter over a materialized trace — the back-compat bridge that
+/// lets `DagSim::run(&[Request])` stay a thin wrapper around the
+/// streaming path. Borrows when it can, owns when it must.
+pub struct Replay<'a> {
+    items: Cow<'a, [Request]>,
+    idx: usize,
+}
+
+impl<'a> Replay<'a> {
+    /// Replay a slice as-is (caller vouches for arrival order).
+    pub fn new(items: &'a [Request]) -> Replay<'a> {
+        Replay {
+            items: Cow::Borrowed(items),
+            idx: 0,
+        }
+    }
+
+    /// Replay an owned trace (e.g. one sorted copy).
+    pub fn from_vec(items: Vec<Request>) -> Replay<'static> {
+        Replay {
+            items: Cow::Owned(items),
+            idx: 0,
+        }
+    }
+
+    /// Replay a slice, stably sorting a copy by arrival time if it is
+    /// not already non-decreasing — the old `run_controlled`
+    /// tolerance for unsorted traces, preserved tie order included.
+    pub fn ordered(items: &'a [Request]) -> Replay<'a> {
+        if items.windows(2).all(|w| w[0].arrive_s <= w[1].arrive_s) {
+            Replay::new(items)
+        } else {
+            let mut v = items.to_vec();
+            v.sort_by(|a, b| a.arrive_s.total_cmp(&b.arrive_s));
+            Replay::from_vec(v)
+        }
+    }
+
+    /// Requests not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.items.len() - self.idx
+    }
+}
+
+impl Iterator for Replay<'_> {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        let r = self.items.get(self.idx).cloned();
+        if r.is_some() {
+            self.idx += 1;
+        }
+        r
+    }
+}
+
+impl ArrivalProcess for Replay<'_> {
+    fn peek_arrival(&mut self) -> Option<f64> {
+        self.items.get(self.idx).map(|r| r.arrive_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::trace::{bursty, generate, voice_agent};
+
+    fn cfg(n: usize) -> TraceConfig {
+        TraceConfig {
+            n_requests: n,
+            rate: 6.0,
+            isl_mean: 256,
+            osl_mean: 64,
+            sigma: 0.4,
+            seed: 42,
+        }
+    }
+
+    fn same_request(a: &Request, b: &Request) -> bool {
+        a.id == b.id
+            && a.arrive_s == b.arrive_s
+            && a.isl == b.isl
+            && a.osl == b.osl
+            && a.pre_s == b.pre_s
+            && a.post_s == b.post_s
+    }
+
+    #[test]
+    fn poisson_matches_generate_bit_for_bit() {
+        let c = cfg(3000);
+        let streamed: Vec<Request> = Poisson::new(&c).unwrap().collect();
+        let materialized = generate(&c);
+        assert_eq!(streamed.len(), materialized.len());
+        for (a, b) in streamed.iter().zip(&materialized) {
+            assert!(same_request(a, b), "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn square_wave_compat_matches_bursty_bit_for_bit() {
+        let c = cfg(3000);
+        let streamed: Vec<Request> = SquareWave::compat(&c, 8.0, 30.0, 8.0).unwrap().collect();
+        let materialized = bursty(&c, 8.0, 30.0, 8.0);
+        for (a, b) in streamed.iter().zip(&materialized) {
+            assert!(same_request(a, b), "{a:?} vs {b:?}");
+        }
+        assert_eq!(streamed.len(), materialized.len());
+    }
+
+    #[test]
+    fn voice_agent_matches_trace_voice_agent_bit_for_bit() {
+        let c = cfg(2000);
+        let streamed: Vec<Request> = VoiceAgent::new(&c).unwrap().collect();
+        let materialized = voice_agent(&c);
+        for (a, b) in streamed.iter().zip(&materialized) {
+            assert!(same_request(a, b), "{a:?} vs {b:?}");
+        }
+        assert_eq!(streamed.len(), materialized.len());
+    }
+
+    #[test]
+    fn golden_pinned_first_arrivals() {
+        // Structural golden: the first arrivals of the compat processes
+        // must equal the legacy generators *evaluated at the same
+        // version*, and the sequences must be reproducible run-to-run.
+        // (We pin against the legacy functions rather than hardcoded
+        // floats so the test is robust to libm differences across
+        // targets while still failing loudly if either side drifts.)
+        let c = cfg(16);
+        let p: Vec<f64> = Poisson::new(&c).unwrap().map(|r| r.arrive_s).collect();
+        let g: Vec<f64> = generate(&c).iter().map(|r| r.arrive_s).collect();
+        assert_eq!(p, g);
+        let s: Vec<f64> = SquareWave::compat(&c, 5.0, 30.0, 6.0)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        let b: Vec<f64> = bursty(&c, 5.0, 30.0, 6.0)
+            .iter()
+            .map(|r| r.arrive_s)
+            .collect();
+        assert_eq!(s, b);
+        // Monotone, strictly positive, finite — the trait contract.
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(p.iter().all(|t| t.is_finite() && *t > 0.0));
+    }
+
+    #[test]
+    fn peek_is_stable_and_nonconsuming() {
+        let c = cfg(5);
+        let mut p = Poisson::new(&c).unwrap();
+        let t0 = p.peek_arrival().unwrap();
+        assert_eq!(p.peek_arrival(), Some(t0));
+        let r = p.next().unwrap();
+        assert_eq!(r.arrive_s, t0);
+        let t1 = p.peek_arrival().unwrap();
+        assert!(t1 >= t0);
+        // Drain and verify permanent exhaustion.
+        assert_eq!(p.by_ref().count(), 4);
+        assert_eq!(p.peek_arrival(), None);
+        assert!(p.next().is_none());
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_and_modulated() {
+        let c = TraceConfig {
+            n_requests: 20_000,
+            rate: 10.0,
+            sigma: 0.0,
+            ..cfg(0)
+        };
+        let a: Vec<f64> = Diurnal::new(&c, 0.8, 1000.0, 0.0)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        let b: Vec<f64> = Diurnal::new(&c, 0.8, 1000.0, 0.0)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Density at the sinusoid's crest (phase ~ period/4) must beat
+        // the trough (~ 3*period/4): count arrivals by cycle quarter.
+        let mut quarters = [0usize; 4];
+        for t in &a {
+            quarters[((t.rem_euclid(1000.0) / 250.0) as usize).min(3)] += 1;
+        }
+        assert!(
+            quarters[0] as f64 > 2.0 * quarters[2] as f64,
+            "quarters={quarters:?}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rejects_bad_knobs() {
+        let c = cfg(10);
+        assert!(matches!(
+            Diurnal::new(&c, 1.0, 100.0, 0.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            Diurnal::new(&c, -0.1, 100.0, 0.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            Diurnal::new(&c, 0.5, 0.0, 0.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            Diurnal::new(&c, 0.5, 100.0, f64::NAN),
+            Err(Error::Config(_))
+        ));
+        let bad_rate = TraceConfig {
+            rate: 0.0,
+            ..cfg(10)
+        };
+        assert!(matches!(
+            Diurnal::daily(&bad_rate, 0.5),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn flash_crowd_spikes_concentrate_arrivals() {
+        let c = TraceConfig {
+            n_requests: 8000,
+            rate: 4.0,
+            sigma: 0.0,
+            ..cfg(0)
+        };
+        let spikes = vec![Spike {
+            at_s: 100.0,
+            dur_s: 50.0,
+            mult: 20.0,
+        }];
+        let arr: Vec<f64> = FlashCrowd::new(&c, spikes)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        for w in arr.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        let in_spike = arr
+            .iter()
+            .filter(|t| (100.0..150.0).contains(*t))
+            .count() as f64;
+        let before = arr.iter().filter(|t| **t < 100.0).count() as f64;
+        // 20x rate over 50 s vs 4/s over the first 100 s.
+        assert!(
+            in_spike / 50.0 > 5.0 * (before / 100.0),
+            "in={in_spike} before={before}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_periodic_determinism_and_validation() {
+        let c = cfg(2000);
+        let a: Vec<f64> = FlashCrowd::periodic(&c, 60.0, 10.0, 6.0)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        let b: Vec<f64> = FlashCrowd::periodic(&c, 60.0, 10.0, 6.0)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        assert_eq!(a, b);
+        assert!(matches!(
+            FlashCrowd::periodic(&c, 0.0, 10.0, 6.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            FlashCrowd::periodic(&c, 60.0, 61.0, 6.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            FlashCrowd::periodic(&c, 60.0, 10.0, -1.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            FlashCrowd::new(
+                &c,
+                vec![Spike {
+                    at_s: f64::NAN,
+                    dur_s: 1.0,
+                    mult: 2.0
+                }]
+            ),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn square_wave_exact_mode_keeps_short_bursts() {
+        // At a low base rate the compat mode routinely jumps short
+        // bursts (the documented bursty() drift); exact mode resamples
+        // at every boundary so burst windows always see the high rate.
+        let c = TraceConfig {
+            n_requests: 4000,
+            rate: 0.5,
+            sigma: 0.0,
+            seed: 7,
+            ..cfg(0)
+        };
+        let (mult, period, burst) = (40.0, 60.0, 2.0);
+        let density = |arr: &[f64]| {
+            let span = *arr.last().unwrap();
+            let cycles = (span / period).floor().max(1.0);
+            let in_burst = arr
+                .iter()
+                .filter(|t| t.rem_euclid(period) < burst)
+                .count() as f64;
+            in_burst / (cycles * burst)
+        };
+        let exact: Vec<f64> = SquareWave::new(&c, mult, period, burst)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        let compat: Vec<f64> = SquareWave::compat(&c, mult, period, burst)
+            .unwrap()
+            .map(|r| r.arrive_s)
+            .collect();
+        // Exact mode: in-burst density near rate*mult = 20/s.
+        assert!(density(&exact) > 10.0, "exact density={}", density(&exact));
+        // And clearly sharper than the drifted legacy sampling.
+        assert!(
+            density(&exact) > 1.5 * density(&compat),
+            "exact={} compat={}",
+            density(&exact),
+            density(&compat)
+        );
+    }
+
+    #[test]
+    fn replay_adapts_slices_and_sorts_when_needed() {
+        let c = cfg(50);
+        let trace = generate(&c);
+        let mut rp = Replay::new(&trace);
+        assert_eq!(rp.peek_arrival(), Some(trace[0].arrive_s));
+        assert_eq!(rp.remaining(), 50);
+        let back: Vec<Request> = rp.collect();
+        for (a, b) in back.iter().zip(&trace) {
+            assert!(same_request(a, b));
+        }
+
+        let mut shuffled = trace.clone();
+        shuffled.reverse();
+        let ordered: Vec<f64> = Replay::ordered(&shuffled).map(|r| r.arrive_s).collect();
+        for w in ordered.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Already-sorted input borrows (no copy) and yields as-is.
+        let ordered2: Vec<f64> = Replay::ordered(&trace).map(|r| r.arrive_s).collect();
+        let orig: Vec<f64> = trace.iter().map(|r| r.arrive_s).collect();
+        assert_eq!(ordered2, orig);
+    }
+
+    #[test]
+    fn processes_reject_invalid_trace_config() {
+        let bad = TraceConfig {
+            rate: f64::NAN,
+            ..cfg(10)
+        };
+        assert!(matches!(Poisson::new(&bad), Err(Error::Config(_))));
+        assert!(matches!(VoiceAgent::new(&bad), Err(Error::Config(_))));
+        assert!(matches!(
+            SquareWave::new(&bad, 2.0, 10.0, 2.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            FlashCrowd::new(&bad, Vec::new()),
+            Err(Error::Config(_))
+        ));
+    }
+}

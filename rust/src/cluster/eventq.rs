@@ -1,0 +1,415 @@
+//! Calendar-queue event scheduler for the DAG simulator's hot loop.
+//!
+//! `DagSim` historically ran on `BinaryHeap<Reverse<Event>>`: O(log n)
+//! per operation with poor locality once millions of events churn
+//! through. [`EventQueue`] keeps the exact same observable interface —
+//! `push(t, item)` / `pop() -> (t, item)` in non-decreasing `(t,
+//! insertion order)` — but spreads pending events across a ring of
+//! time buckets (a calendar queue, Brown 1988): O(1) amortized push
+//! and pop when the bucket width tracks the mean event spacing, which
+//! the queue retunes itself from an EMA of popped inter-event gaps at
+//! every window rebase.
+//!
+//! Ordering is a drop-in match for the old heap: each entry carries an
+//! internal monotone sequence number, entries are bucketed by
+//! `floor(t / width)`, buckets are min-heaps over `(t, seq)`, and a
+//! bucket never holds an entry from an earlier window than the scan
+//! cursor — so ties in `t` still pop FIFO and the stream of popped
+//! events is bit-identical to `BinaryHeap<Reverse<(t, seq)>>` (a
+//! randomized conformance test drives both side by side).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Ring size; a power of two so the modulo folds to a mask.
+const N_BUCKETS: usize = 1024;
+/// Starting bucket width (seconds) before any gap statistics exist.
+const DEFAULT_WIDTH_S: f64 = 0.002;
+/// Retuning clamp: never finer than 100 ns per bucket…
+const MIN_WIDTH_S: f64 = 1e-7;
+/// …never coarser than a minute.
+const MAX_WIDTH_S: f64 = 60.0;
+
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.total_cmp(&other.t) == std::cmp::Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Self-tuning calendar queue; see module docs for the contract.
+pub struct EventQueue<T> {
+    /// Ring of per-bucket min-heaps. Slot `b % N_BUCKETS` holds only
+    /// entries whose absolute bucket `b` lies in `[base, base + N)`.
+    ring: Vec<BinaryHeap<Reverse<Entry<T>>>>,
+    /// Entries beyond the current window, ordered globally.
+    overflow: BinaryHeap<Reverse<Entry<T>>>,
+    ring_len: usize,
+    /// First absolute bucket of the current window.
+    base: u64,
+    /// Scan cursor (absolute bucket), `base <= cur < base + N`.
+    cur: u64,
+    width: f64,
+    inv_width: f64,
+    seq: u64,
+    len: usize,
+    high_watermark: usize,
+    /// EMA of popped inter-event gaps, feeding width retuning.
+    ema_gap: f64,
+    last_pop_t: f64,
+    pops: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue {
+            ring: (0..N_BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            overflow: BinaryHeap::new(),
+            ring_len: 0,
+            base: 0,
+            cur: 0,
+            width: DEFAULT_WIDTH_S,
+            inv_width: 1.0 / DEFAULT_WIDTH_S,
+            seq: 0,
+            len: 0,
+            high_watermark: 0,
+            ema_gap: DEFAULT_WIDTH_S / 4.0,
+            last_pop_t: 0.0,
+            pops: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Largest number of events ever simultaneously queued — the
+    /// constant-memory evidence the streaming tests assert on.
+    pub fn high_watermark(&self) -> usize {
+        self.high_watermark
+    }
+
+    /// Empty the queue and reset tuning state (width, watermark, seq).
+    pub fn clear(&mut self) {
+        for b in &mut self.ring {
+            b.clear();
+        }
+        self.overflow.clear();
+        self.ring_len = 0;
+        self.len = 0;
+        self.base = 0;
+        self.cur = 0;
+        self.width = DEFAULT_WIDTH_S;
+        self.inv_width = 1.0 / DEFAULT_WIDTH_S;
+        self.seq = 0;
+        self.high_watermark = 0;
+        self.ema_gap = DEFAULT_WIDTH_S / 4.0;
+        self.last_pop_t = 0.0;
+        self.pops = 0;
+    }
+
+    /// Absolute bucket index for time `t` at the current width.
+    /// (`as u64` saturates on overflow/∞, handled at rebase.)
+    fn abs_bucket(&self, t: f64) -> u64 {
+        if t <= 0.0 {
+            0
+        } else {
+            (t * self.inv_width) as u64
+        }
+    }
+
+    pub fn push(&mut self, t: f64, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        let entry = Reverse(Entry { t, seq, item });
+        // Clamp past-times to the scan cursor: the cursor never moves
+        // past a non-empty bucket, so a late push lands in the bucket
+        // popped next and — because buckets heap-order by (t, seq) —
+        // still pops in exact global order.
+        let ab = self.abs_bucket(t).max(self.cur);
+        if ab >= self.base.saturating_add(N_BUCKETS as u64) {
+            self.overflow.push(entry);
+        } else {
+            self.ring[(ab % N_BUCKETS as u64) as usize].push(entry);
+            self.ring_len += 1;
+        }
+        self.len += 1;
+        if self.len > self.high_watermark {
+            self.high_watermark = self.len;
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if self.ring_len == 0 {
+                self.rebase();
+            }
+            let slot = (self.cur % N_BUCKETS as u64) as usize;
+            if let Some(Reverse(e)) = self.ring[slot].pop() {
+                self.ring_len -= 1;
+                self.len -= 1;
+                if e.t.is_finite() {
+                    if self.pops > 0 {
+                        let gap = (e.t - self.last_pop_t).max(0.0);
+                        self.ema_gap = 0.875 * self.ema_gap + 0.125 * gap;
+                    }
+                    self.last_pop_t = e.t;
+                    self.pops += 1;
+                }
+                return Some((e.t, e.item));
+            }
+            self.cur = self.cur.saturating_add(1);
+            if self.cur >= self.base.saturating_add(N_BUCKETS as u64) {
+                self.rebase();
+            }
+        }
+    }
+
+    /// Ring exhausted: retune the bucket width to ~4 events per bucket
+    /// (from the observed gap EMA), move the window to the earliest
+    /// overflow entry, and drain every overflow entry that now fits.
+    fn rebase(&mut self) {
+        debug_assert_eq!(self.ring_len, 0);
+        if self.pops > 4 {
+            let w = (self.ema_gap * 4.0).clamp(MIN_WIDTH_S, MAX_WIDTH_S);
+            if w.is_finite() && w > 0.0 {
+                self.width = w;
+                self.inv_width = 1.0 / w;
+            }
+        }
+        let top_t = match self.overflow.peek() {
+            Some(Reverse(e)) => e.t,
+            None => {
+                self.base = self.cur;
+                return;
+            }
+        };
+        let nb = self.abs_bucket(top_t);
+        self.base = nb;
+        self.cur = nb;
+        let end = self.base.saturating_add(N_BUCKETS as u64);
+        let mut moved = 0usize;
+        while let Some(Reverse(e)) = self.overflow.peek() {
+            let ab = self.abs_bucket(e.t).max(self.base);
+            if ab >= end {
+                break;
+            }
+            let Some(Reverse(e)) = self.overflow.pop() else {
+                unreachable!()
+            };
+            self.ring[(ab % N_BUCKETS as u64) as usize].push(Reverse(e));
+            moved += 1;
+        }
+        if moved == 0 {
+            // Degenerate times (∞ / saturated buckets): force one
+            // entry across so every rebase makes progress.
+            if let Some(e) = self.overflow.pop() {
+                self.ring[(self.base % N_BUCKETS as u64) as usize].push(e);
+                moved = 1;
+            }
+        }
+        self.ring_len += moved;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference model: the exact structure `DagSim` used before —
+    /// `BinaryHeap<Reverse<(t, seq)>>` with `total_cmp` ordering.
+    struct RefQueue {
+        heap: BinaryHeap<Reverse<Entry<u32>>>,
+        seq: u64,
+    }
+
+    impl RefQueue {
+        fn new() -> RefQueue {
+            RefQueue {
+                heap: BinaryHeap::new(),
+                seq: 0,
+            }
+        }
+
+        fn push(&mut self, t: f64, item: u32) {
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Reverse(Entry { t, seq, item }));
+        }
+
+        fn pop(&mut self) -> Option<(f64, u32)> {
+            self.heap.pop().map(|Reverse(e)| (e.t, e.item))
+        }
+    }
+
+    /// Drive both queues with an identical operation stream and demand
+    /// bit-identical pops (same t AND same payload, so tie order in t
+    /// must match too).
+    fn conformance(seed: u64, ops: usize, gap_scale: f64, jumpy: bool) {
+        let mut rng = Rng::new(seed);
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut r = RefQueue::new();
+        let mut now = 0.0f64;
+        let mut payload = 0u32;
+        for _ in 0..ops {
+            let roll = rng.f64();
+            if roll < 0.65 || q.is_empty() {
+                let t = if jumpy && rng.bool(0.05) {
+                    now + rng.f64() * gap_scale * 50_000.0
+                } else if rng.bool(0.10) {
+                    // Past push: schedule at/before the current time.
+                    (now - rng.f64() * gap_scale).max(0.0)
+                } else if rng.bool(0.15) {
+                    // Exact tie with the current time.
+                    now
+                } else {
+                    now + rng.f64() * gap_scale
+                };
+                q.push(t, payload);
+                r.push(t, payload);
+                payload += 1;
+            } else {
+                let a = q.pop();
+                let b = r.pop();
+                assert_eq!(a, b, "divergence at payload {payload}");
+                if let Some((t, _)) = a {
+                    now = now.max(t);
+                }
+            }
+        }
+        // Drain completely; order must stay identical.
+        loop {
+            let a = q.pop();
+            let b = r.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn matches_binary_heap_clustered() {
+        conformance(1, 20_000, 1e-4, false);
+    }
+
+    #[test]
+    fn matches_binary_heap_spread() {
+        conformance(2, 20_000, 10.0, false);
+    }
+
+    #[test]
+    fn matches_binary_heap_with_jumps_across_windows() {
+        conformance(3, 20_000, 0.01, true);
+    }
+
+    #[test]
+    fn matches_binary_heap_many_seeds() {
+        for seed in 10..26 {
+            conformance(seed, 4000, 0.003, seed % 2 == 0);
+        }
+    }
+
+    #[test]
+    fn fifo_on_exact_time_ties() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..100 {
+            q.push(1.5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((1.5, i)));
+        }
+    }
+
+    #[test]
+    fn watermark_and_clear() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..50 {
+            q.push(i as f64, i);
+        }
+        assert_eq!(q.len(), 50);
+        assert_eq!(q.high_watermark(), 50);
+        for _ in 0..30 {
+            q.pop();
+        }
+        assert_eq!(q.high_watermark(), 50, "watermark is a high-water mark");
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.high_watermark(), 0);
+        assert_eq!(q.pop(), None);
+        q.push(0.25, 7);
+        assert_eq!(q.pop(), Some((0.25, 7)));
+    }
+
+    #[test]
+    fn survives_infinite_and_huge_times() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(f64::INFINITY, 1);
+        q.push(1e300, 2);
+        q.push(0.5, 3);
+        assert_eq!(q.pop(), Some((0.5, 3)));
+        assert_eq!(q.pop(), Some((1e300, 2)));
+        assert_eq!(q.pop(), Some((f64::INFINITY, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn million_event_sweep_is_ordered() {
+        // A cheap smoke test of the retuning path at scale: diurnal-ish
+        // spacing (alternating dense and sparse phases).
+        let mut rng = Rng::new(99);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut t = 0.0;
+        let mut id = 0u64;
+        for phase in 0..20 {
+            let rate = if phase % 2 == 0 { 2000.0 } else { 5.0 };
+            for _ in 0..5_000 {
+                t += rng.exp(rate);
+                q.push(t, id);
+                id += 1;
+            }
+        }
+        let mut last = -1.0;
+        let mut n = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+        }
+        assert_eq!(n, 100_000);
+    }
+}

@@ -14,13 +14,27 @@
 //!   [`ExecutionPlan`](crate::plan::ExecutionPlan)-native entry point;
 //! * [`dag`] — full agent-DAG execution per request (CPU stages, tool
 //!   calls, multiple LLM inferences, per-edge fabric transfers);
-//! * [`trace`] — workload generators (Poisson arrivals, lognormal
-//!   sequence lengths, the Figure-2 voice-agent stage structure).
+//! * [`arrivals`] — pull-based streaming arrival processes (the
+//!   [`arrivals::ArrivalProcess`] trait: Poisson, diurnal, flash-crowd,
+//!   square-wave, voice-agent, and slice replay) — constant-memory
+//!   ingestion for million-request days;
+//! * [`eventq`] — the calendar-queue event scheduler behind
+//!   [`dag::DagSim`]'s hot loop;
+//! * [`trace`] — materialized workload generators (Poisson arrivals,
+//!   lognormal sequence lengths, the Figure-2 voice-agent stage
+//!   structure); kept as the slice-API anchors the streaming processes
+//!   reproduce bit-for-bit.
 
+pub mod arrivals;
 pub mod dag;
+pub mod eventq;
 pub mod sim;
 pub mod trace;
 
+pub use arrivals::{
+    ArrivalProcess, Diurnal, FlashCrowd, Poisson, Replay, Spike, SquareWave, VoiceAgent,
+};
 pub use dag::{DagDetail, DagSim, FleetChangeStats, FleetController, GroupWindow, WindowStats};
-pub use sim::{simulate_plan, ClusterSim, Placement, PipelineSpec, SimReport};
+pub use eventq::EventQueue;
+pub use sim::{simulate_plan, simulate_stream, ClusterSim, Placement, PipelineSpec, SimReport};
 pub use trace::{bursty, Request, TraceConfig};

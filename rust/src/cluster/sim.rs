@@ -127,8 +127,9 @@ struct DecodePipe {
     busy_time: f64,
 }
 
-/// Simulation results.
-#[derive(Debug, Clone)]
+/// Simulation results. `PartialEq` is derived so the replay-equivalence
+/// suite can pin slice and streaming runs byte-identical.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     pub n_requests: usize,
     pub makespan_s: f64,
@@ -487,6 +488,17 @@ pub fn simulate_plan(
     trace: &[Request],
 ) -> Result<SimReport> {
     super::dag::DagSim::new(plan)?.run(trace)
+}
+
+/// Streaming twin of [`simulate_plan`]: pulls requests lazily from any
+/// [`ArrivalProcess`](super::arrivals::ArrivalProcess), so memory is
+/// bounded by the in-flight set rather than the trace length — the
+/// entry point for million-request diurnal days.
+pub fn simulate_stream(
+    plan: &crate::plan::ExecutionPlan,
+    arrivals: &mut dyn super::arrivals::ArrivalProcess,
+) -> Result<SimReport> {
+    super::dag::DagSim::new(plan)?.run_stream(arrivals)
 }
 
 /// Convenience: build a homogeneous-pair placement (`n_p` prefill and

@@ -8,6 +8,7 @@
 //! probabilistic web-search loop).
 
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// One request in a trace.
 #[derive(Debug, Clone)]
@@ -50,7 +51,89 @@ impl Default for TraceConfig {
     }
 }
 
-fn lognormal_len(rng: &mut Rng, mean: u64, sigma: f64, lo: u64, hi: u64) -> u64 {
+impl TraceConfig {
+    /// Validated builder entry point — the preferred constructor for
+    /// code that takes rates/sigmas from user input (CLI flags, config
+    /// files). Field-struct construction stays available for static
+    /// in-repo configs.
+    pub fn builder() -> TraceConfigBuilder {
+        TraceConfigBuilder {
+            cfg: TraceConfig::default(),
+        }
+    }
+
+    /// Static-first validation (consistent with the plan analyzer's
+    /// AH0xx philosophy): reject non-finite/non-positive rates and
+    /// garbage dispersion *before* any generator silently emits NaN
+    /// arrival times or degenerate lengths.
+    pub fn validate(&self) -> Result<()> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(Error::Config(format!(
+                "arrival rate must be finite and > 0, got {}",
+                self.rate
+            )));
+        }
+        if !self.sigma.is_finite() || self.sigma < 0.0 {
+            return Err(Error::Config(format!(
+                "length sigma must be finite and >= 0, got {}",
+                self.sigma
+            )));
+        }
+        if self.isl_mean == 0 || self.osl_mean == 0 {
+            return Err(Error::Config(
+                "isl_mean/osl_mean must be >= 1 token".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`TraceConfig`] whose `build()` runs
+/// [`TraceConfig::validate`] — malformed knobs surface as typed
+/// [`Error::Config`] instead of generating garbage traces.
+#[derive(Debug, Clone)]
+pub struct TraceConfigBuilder {
+    cfg: TraceConfig,
+}
+
+impl TraceConfigBuilder {
+    pub fn n_requests(mut self, n: usize) -> Self {
+        self.cfg.n_requests = n;
+        self
+    }
+
+    pub fn rate(mut self, rate: f64) -> Self {
+        self.cfg.rate = rate;
+        self
+    }
+
+    pub fn isl_mean(mut self, isl: u64) -> Self {
+        self.cfg.isl_mean = isl;
+        self
+    }
+
+    pub fn osl_mean(mut self, osl: u64) -> Self {
+        self.cfg.osl_mean = osl;
+        self
+    }
+
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.cfg.sigma = sigma;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Result<TraceConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+pub(crate) fn lognormal_len(rng: &mut Rng, mean: u64, sigma: f64, lo: u64, hi: u64) -> u64 {
     if sigma == 0.0 {
         return mean.clamp(lo, hi);
     }
@@ -60,6 +143,13 @@ fn lognormal_len(rng: &mut Rng, mean: u64, sigma: f64, lo: u64, hi: u64) -> u64 
 }
 
 /// Poisson arrivals with lognormal lengths.
+///
+/// Materializes the whole trace up front. Binaries and new call sites
+/// should prefer the streaming equivalent,
+/// [`crate::cluster::arrivals::Poisson`], which emits the exact
+/// same request sequence (same seed, same RNG draw order) without the
+/// O(n) allocation; this function remains the slice-API anchor the
+/// replay-equivalence suite pins against.
 pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0;
@@ -82,6 +172,18 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
 /// first `burst_s` seconds of every `period_s` run at
 /// `cfg.rate * burst_mult`, the rest at `cfg.rate` — the diurnal /
 /// flash-crowd load swings the orchestration loop must absorb.
+///
+/// **Known semantic drift** (kept bit-for-bit for replay stability;
+/// see `cluster::arrivals::SquareWave` for both modes): the rate for
+/// each gap is chosen from the phase at the *previous* arrival, and the
+/// drawn gap is never clipped at the phase boundary. Gaps therefore
+/// bleed across phase edges — an off-phase arrival just before a burst
+/// samples at the base rate and can jump the entire burst, so at low
+/// base rates short bursts are skipped outright, and burst edges are
+/// softened by one mean gap on each side. The exact piecewise-constant
+/// semantics (memoryless resampling at every boundary) are implemented
+/// by `SquareWave::new`; `SquareWave::compat` reproduces *this*
+/// function's sequence bit-for-bit, which a golden test pins.
 pub fn bursty(cfg: &TraceConfig, burst_mult: f64, period_s: f64, burst_s: f64) -> Vec<Request> {
     assert!(burst_mult > 0.0, "burst_mult must be positive");
     assert!(
@@ -225,6 +327,31 @@ mod tests {
             .iter()
             .zip(&b)
             .all(|(x, y)| x.arrive_s == y.arrive_s && x.isl == y.isl));
+    }
+
+    #[test]
+    fn builder_validates_knobs() {
+        let ok = TraceConfig::builder()
+            .n_requests(10)
+            .rate(4.0)
+            .sigma(0.2)
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(ok.n_requests, 10);
+        assert_eq!(ok.rate, 4.0);
+        for bad in [
+            TraceConfig::builder().rate(0.0).build(),
+            TraceConfig::builder().rate(-2.0).build(),
+            TraceConfig::builder().rate(f64::NAN).build(),
+            TraceConfig::builder().rate(f64::INFINITY).build(),
+            TraceConfig::builder().sigma(-0.1).build(),
+            TraceConfig::builder().sigma(f64::NAN).build(),
+            TraceConfig::builder().isl_mean(0).build(),
+            TraceConfig::builder().osl_mean(0).build(),
+        ] {
+            assert!(matches!(bad, Err(Error::Config(_))), "{bad:?}");
+        }
     }
 
     #[test]

@@ -19,8 +19,11 @@
 //! and prints the critical-path SLA attribution table.
 
 use agentic_hetero::agents;
+use agentic_hetero::cluster::arrivals::{
+    ArrivalProcess, Diurnal, FlashCrowd, Poisson, Replay, SquareWave, VoiceAgent,
+};
 use agentic_hetero::cluster::sim::{pair_placement, simulate_plan, ClusterSim};
-use agentic_hetero::cluster::trace::{bursty, voice_agent as voice_trace, TraceConfig};
+use agentic_hetero::cluster::trace::TraceConfig;
 use agentic_hetero::config::DeployConfig;
 use agentic_hetero::cost::hardware::by_name;
 use agentic_hetero::cost::model_profile::by_short_name;
@@ -28,9 +31,13 @@ use agentic_hetero::cost::roofline::Parallelism;
 use agentic_hetero::ir::passes::PassManager;
 use agentic_hetero::ir::printer;
 use agentic_hetero::obs::critical_path::attribute_all;
-use agentic_hetero::obs::trace::{spans_from_chrome_json, to_chrome_json, TraceSink};
+use agentic_hetero::obs::trace::{
+    spans_from_chrome_json, to_chrome_json_string, TraceSink,
+};
 use agentic_hetero::opt::assignment::Sla;
-use agentic_hetero::orchestrator::{Executor, Orchestrator, OrchestratorConfig, SimExecutor};
+use agentic_hetero::orchestrator::{
+    chat_request_of, Executor, Orchestrator, OrchestratorConfig, SimExecutor,
+};
 use agentic_hetero::plan::{presets, verify, ExecutionPlan, PlanDiff};
 use agentic_hetero::planner::plan::{Planner, PlannerConfig};
 use agentic_hetero::runtime::Engine;
@@ -88,12 +95,16 @@ USAGE:
   agentic-hetero ir       [--agent voice|rag|langchain] [--model 8b-fp16] [--raw]
   agentic-hetero serve    [--config FILE] [--artifacts DIR] [--plan PLAN.json]
                           [--requests N] [--max-new N] [--synthetic]
+                          [--arrivals poisson|diurnal|flash|replay] [--rate R] [--seed S]
                           [--trace-out TRACE.json]
   agentic-hetero simulate [--plan PLAN.json | --prefill H100 --decode Gaudi3 --model 8b-fp16]
-                          [--rate R] [--requests N] [--voice]
+                          [--rate R] [--requests N] [--voice] [--seed S]
+                          [--arrivals poisson|diurnal|flash|replay] [--amp A] [--period S]
+                          [--spike-every S] [--spike-dur S] [--spike-mult M]
                           [--trace-out TRACE.json]
   agentic-hetero orchestrate [--plan PLAN.json | --agent voice | --fleet mixed]
                           [--trace bursty|steady|voice] [--old A100] [--new H100]
+                          [--arrivals poisson|diurnal|flash|replay] [--seed S]
                           [--rate R] [--requests N] [--window S] [--config FILE]
                           [--out TIMELINE.json] [--trace-out TRACE.json]
   agentic-hetero trace-report TRACE.json
@@ -115,6 +126,19 @@ across --new and --old hardware), rebalances load between the
 generations group-by-group, and closes with the paper's TCO comparison
 against the newest-homogeneous fleet of equal decode capacity.
 
+`--arrivals` (on serve, simulate, orchestrate) switches ingestion to a
+pull-based streaming arrival process — requests are generated lazily as
+simulated time advances, so memory stays constant at any `--requests`
+count (a 1M-request diurnal day fits in a laptop's RAM). `poisson` is a
+homogeneous process at --rate; `diurnal` modulates the rate
+sinusoidally (--amp 0..1, --period seconds, default one 24 h day);
+`flash` layers periodic spikes on the baseline (--spike-every,
+--spike-dur, --spike-mult); `replay` streams the legacy materialized
+trace. All processes are deterministic under --seed. `--plan` also
+accepts a built-in preset by name instead of a file:
+presets/mixed_generation, presets/shared_prefix_fanout,
+presets/homogeneous.
+
 `--trace-out FILE` (on serve, simulate --plan, orchestrate) records
 every request's spans — host/tool stages, prefill, decode, KV
 transfers, the request envelope — and writes Chrome trace-event JSON
@@ -123,12 +147,13 @@ the critical-path analyzer and prints the per-group SLA attribution
 table (queue / prefill / decode / kv_transfer / host / tool_io).
 ";
 
-/// Write a recorded trace as Chrome trace-event JSON. Returns `false`
-/// (after printing the error) when the file cannot be written.
+/// Write a recorded trace as Chrome trace-event JSON (the streaming
+/// serializer — one event tree in memory at a time, so large traces
+/// don't double their footprint on export). Returns `false` (after
+/// printing the error) when the file cannot be written.
 fn write_trace_file(sink: &TraceSink, path: &str) -> bool {
     let spans = sink.spans();
-    let doc = to_chrome_json(&spans);
-    match std::fs::write(path, doc.to_string()) {
+    match std::fs::write(path, to_chrome_json_string(&spans)) {
         Ok(()) => {
             eprintln!("wrote {path} ({} spans)", spans.len());
             true
@@ -216,12 +241,74 @@ fn cmd_repro(args: &Args) -> i32 {
     0
 }
 
-/// Load a saved ExecutionPlan from disk (shared by `serve` and
-/// `simulate`); the error string carries the path context.
+/// Load a saved ExecutionPlan from disk (shared by `serve`,
+/// `simulate`, and `orchestrate`); the error string carries the path
+/// context. A `presets/<name>` path resolves one of the built-in
+/// preset plans instead of reading a file, so streaming stress runs
+/// need no JSON artifact on disk.
 fn load_plan(path: &str) -> Result<ExecutionPlan, String> {
+    if let Some(name) = path.strip_prefix("presets/") {
+        return match name {
+            "mixed_generation" => {
+                Ok(presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2))
+            }
+            "shared_prefix_fanout" => {
+                Ok(presets::shared_prefix_fanout("8b-fp16", "H100", 4))
+            }
+            "homogeneous" => Ok(presets::homogeneous("8b-fp16", "H100", 4)),
+            other => Err(format!(
+                "plan presets/{other}: unknown preset (mixed_generation, \
+                 shared_prefix_fanout, homogeneous)"
+            )),
+        };
+    }
     let src =
         std::fs::read_to_string(path).map_err(|e| format!("plan {path}: {e}"))?;
     ExecutionPlan::parse_json(&src).map_err(|e| format!("plan {path}: {e}"))
+}
+
+/// Build the streaming arrival process selected by `--arrivals`.
+/// `Ok(None)` when the flag is absent — callers keep their legacy
+/// materialized-trace path byte-for-byte. Every process is seeded from
+/// `tc.seed`, so calling this twice yields two identical streams (the
+/// orchestrate TCO comparison runs re-pull the same workload).
+fn arrivals_of(
+    args: &Args,
+    tc: &TraceConfig,
+) -> Result<Option<Box<dyn ArrivalProcess>>, String> {
+    let Some(kind) = args.get("arrivals") else {
+        return Ok(None);
+    };
+    let ctx = |e: agentic_hetero::Error| format!("--arrivals {kind}: {e}");
+    let src: Box<dyn ArrivalProcess> = match kind {
+        "poisson" => Box::new(Poisson::new(tc).map_err(ctx)?),
+        "diurnal" => {
+            let amp: f64 = args.get_parsed("amp", 0.5).map_err(|e| e.to_string())?;
+            let period: f64 = args
+                .get_parsed("period", Diurnal::DAY_S)
+                .map_err(|e| e.to_string())?;
+            Box::new(Diurnal::new(tc, amp, period, 0.0).map_err(ctx)?)
+        }
+        "flash" => {
+            let every: f64 = args
+                .get_parsed("spike-every", 300.0)
+                .map_err(|e| e.to_string())?;
+            let dur: f64 = args
+                .get_parsed("spike-dur", 30.0)
+                .map_err(|e| e.to_string())?;
+            let mult: f64 = args
+                .get_parsed("spike-mult", 5.0)
+                .map_err(|e| e.to_string())?;
+            Box::new(FlashCrowd::periodic(tc, every, dur, mult).map_err(ctx)?)
+        }
+        "replay" => Box::new(Replay::from_vec(Poisson::new(tc).map_err(ctx)?.collect())),
+        other => {
+            return Err(format!(
+                "unknown --arrivals `{other}` (poisson, diurnal, flash, replay)"
+            ))
+        }
+    };
+    Ok(Some(src))
 }
 
 fn build_agent(args: &Args) -> agentic_hetero::ir::Graph {
@@ -404,6 +491,27 @@ fn cmd_serve(args: &Args) -> i32 {
     let artifacts = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
     let n: usize = parse_opt!(args, "requests", 16usize);
     let max_new: usize = parse_opt!(args, "max-new", cfg.max_new_tokens as usize);
+    let seed: u64 = parse_opt!(args, "seed", 0u64);
+    let rate: f64 = parse_opt!(args, "rate", 8.0);
+    // `--arrivals`: synthesize the workload from a streaming arrival
+    // process (request IDs and lengths deterministic under --seed)
+    // instead of the four rotating demo prompts. Validated up front,
+    // before the expensive engine load.
+    let serve_tc = TraceConfig {
+        n_requests: n,
+        rate,
+        isl_mean: 48,
+        osl_mean: (max_new as u64).max(1),
+        sigma: 0.4,
+        seed,
+    };
+    let arrivals = match arrivals_of(args, &serve_tc) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
 
     // `--plan FILE` (or `[server] plan = ...` in the config): the saved
     // ExecutionPlan configures batching/admission *and* installs full
@@ -512,14 +620,24 @@ fn cmd_serve(args: &Args) -> i32 {
         "the cost model ",
         "agentic workloads are ",
     ];
-    let reqs: Vec<ChatRequest> = (0..n as u64)
-        .map(|i| {
-            let mut r =
-                ChatRequest::new(i, prompts[(i as usize) % prompts.len()], max_new);
-            r.agent = agent.clone();
-            r
-        })
-        .collect();
+    let reqs: Vec<ChatRequest> = match arrivals {
+        Some(src) => src
+            .map(|r| {
+                let mut c = chat_request_of(&r);
+                c.max_new_tokens = c.max_new_tokens.min(max_new.max(1));
+                c.agent = agent.clone();
+                c
+            })
+            .collect(),
+        None => (0..n as u64)
+            .map(|i| {
+                let mut r =
+                    ChatRequest::new(i, prompts[(i as usize) % prompts.len()], max_new);
+                r.agent = agent.clone();
+                r
+            })
+            .collect(),
+    };
     let t0 = std::time::Instant::now();
     match server.run_workload(reqs) {
         Ok(responses) => {
@@ -572,6 +690,7 @@ fn cmd_serve(args: &Args) -> i32 {
 fn cmd_simulate(args: &Args) -> i32 {
     let rate: f64 = parse_opt!(args, "rate", 8.0);
     let n: usize = parse_opt!(args, "requests", 256usize);
+    let seed: u64 = parse_opt!(args, "seed", 0u64);
 
     // `--plan FILE`: replay a saved ExecutionPlan through the agent-DAG
     // simulator instead of a hand-assembled pair placement.
@@ -589,27 +708,50 @@ fn cmd_simulate(args: &Args) -> i32 {
             isl_mean: 512,
             osl_mean: 128,
             sigma: 0.4,
-            seed: 0,
+            seed,
         };
-        let trace = if args.flag("voice") {
-            voice_trace(&tc)
-        } else {
-            agentic_hetero::cluster::trace::generate(&tc)
+        let arrivals = match arrivals_of(args, &tc) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
         };
+        let streaming = arrivals.is_some();
         // Inline DagSim (rather than `simulate_plan`) so `--trace-out`
         // can attach a span sink before the run.
         let trace_out = args.get("trace-out");
         let trace_sink = trace_out.map(|_| TraceSink::new());
+        let t0 = std::time::Instant::now();
         let report = agentic_hetero::cluster::dag::DagSim::new(&plan).and_then(|mut sim| {
             if let Some(sink) = &trace_sink {
                 sim.set_trace_sink(std::sync::Arc::clone(sink));
             }
-            sim.run(&trace)
+            match arrivals {
+                // Streaming ingestion: arrivals are pulled lazily as
+                // simulated time advances — the trace is never
+                // materialized, so memory stays flat at any --requests.
+                Some(mut src) => sim.run_stream(src.as_mut()),
+                // Default path: the materialized trace, built from the
+                // streaming twins of the legacy generators (bit-exact,
+                // golden-pinned in cluster/arrivals.rs).
+                None => {
+                    let trace: Vec<_> = if args.flag("voice") {
+                        VoiceAgent::new(&tc)?.collect()
+                    } else {
+                        Poisson::new(&tc)?.collect()
+                    };
+                    sim.run(&trace)
+                }
+            }
         });
         return match report {
             Ok(report) => {
                 println!("{}", plan.summary());
                 println!("{}", report.summary());
+                if streaming {
+                    println!("sim wall: {:.2}s", t0.elapsed().as_secs_f64());
+                }
                 if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
                     if !write_trace_file(sink, path) {
                         return 1;
@@ -660,12 +802,31 @@ fn cmd_simulate(args: &Args) -> i32 {
         isl_mean: 512,
         osl_mean: 128,
         sigma: 0.4,
-        seed: 0,
+        seed,
     };
-    let trace = if args.flag("voice") {
-        voice_trace(&tc)
-    } else {
-        agentic_hetero::cluster::trace::generate(&tc)
+    // The flat pair simulator's `run` takes a slice, so a streaming
+    // `--arrivals` source is materialized here; constant-memory runs
+    // need the agent-DAG engine (`--plan`).
+    let trace = match arrivals_of(args, &tc) {
+        Ok(Some(src)) => src.collect(),
+        Ok(None) => {
+            let built = if args.flag("voice") {
+                VoiceAgent::new(&tc).map(|p| p.collect::<Vec<_>>())
+            } else {
+                Poisson::new(&tc).map(|p| p.collect::<Vec<_>>())
+            };
+            match built {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("simulate: {e}");
+                    return 2;
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
     match sim.run(&trace) {
         Ok(report) => {
@@ -686,6 +847,7 @@ fn cmd_simulate(args: &Args) -> i32 {
 fn cmd_orchestrate(args: &Args) -> i32 {
     let rate: f64 = parse_opt!(args, "rate", 8.0);
     let n: usize = parse_opt!(args, "requests", 384usize);
+    let seed: u64 = parse_opt!(args, "seed", 0u64);
 
     // Initial plan: a saved artifact (`--plan`) or a fresh slow-path
     // plan over `--agent` (which also arms planner-backed re-planning).
@@ -762,12 +924,33 @@ fn cmd_orchestrate(args: &Args) -> i32 {
         isl_mean: 512,
         osl_mean: 128,
         sigma: 0.4,
-        seed: 0,
+        seed,
     };
-    let trace = match trace_kind.as_str() {
-        "bursty" => bursty(&tc, 8.0, 40.0, 12.0),
-        "voice" => voice_trace(&tc),
-        _ => agentic_hetero::cluster::trace::generate(&tc),
+    // `--arrivals` streams the workload instead of materializing it —
+    // the executor pulls requests lazily, and the TCO comparison runs
+    // below re-pull an identical stream (processes are deterministic
+    // under --seed). Without the flag, the legacy slice path is kept
+    // byte-for-byte.
+    let streaming = args.get("arrivals").is_some();
+    let trace = if streaming {
+        Vec::new()
+    } else {
+        // Streaming twins of the legacy trace generators: bit-exact
+        // request sequences (golden-pinned in cluster/arrivals.rs).
+        let built = match trace_kind.as_str() {
+            "bursty" => {
+                SquareWave::compat(&tc, 8.0, 40.0, 12.0).map(|p| p.collect::<Vec<_>>())
+            }
+            "voice" => VoiceAgent::new(&tc).map(|p| p.collect::<Vec<_>>()),
+            _ => Poisson::new(&tc).map(|p| p.collect::<Vec<_>>()),
+        };
+        match built {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("orchestrate: {e}");
+                return 2;
+            }
+        }
     };
 
     // Loop knobs: `[orchestrator]` in --config, --window overrides.
@@ -791,7 +974,10 @@ fn cmd_orchestrate(args: &Args) -> i32 {
     };
     ocfg.window_s = parse_opt!(args, "window", default_window);
 
-    let mut orch = match Orchestrator::new(ocfg, plan, &trace_kind, "sim") {
+    // Timeline metadata records the workload: the arrival-process kind
+    // when streaming, the legacy trace kind otherwise.
+    let workload_label: &str = args.get("arrivals").unwrap_or(&trace_kind);
+    let mut orch = match Orchestrator::new(ocfg, plan, workload_label, "sim") {
         Ok(o) => o,
         Err(e) => {
             eprintln!("orchestrate: {e}");
@@ -805,7 +991,14 @@ fn cmd_orchestrate(args: &Args) -> i32 {
     }
     let metrics = orch.metrics.clone();
 
-    let mut exec = SimExecutor::new(&trace);
+    let mut exec = match arrivals_of(args, &tc) {
+        Ok(Some(src)) => SimExecutor::from_stream(src),
+        Ok(None) => SimExecutor::new(&trace),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     // `--trace-out FILE`: span-trace the simulated run; window
     // attribution lands in the timeline and `orch_attr_*` gauges.
     let trace_out = args.get("trace-out");
@@ -848,7 +1041,16 @@ fn cmd_orchestrate(args: &Args) -> i32 {
                         &new_dev,
                         dec_total,
                     );
-                    match simulate_plan(&homog, &trace) {
+                    // With --arrivals the comparison re-pulls an
+                    // identical stream (same seed, same process) — the
+                    // materialized trace is empty in that mode.
+                    let run_cmp = |p: &ExecutionPlan| match arrivals_of(args, &tc) {
+                        Ok(Some(mut src)) => {
+                            agentic_hetero::cluster::sim::simulate_stream(p, src.as_mut())
+                        }
+                        _ => simulate_plan(p, &trace),
+                    };
+                    match run_cmp(&homog) {
                         Ok(hr) => {
                             println!("\nTCO, same trace (modeled $/Mtok):");
                             println!(
@@ -882,7 +1084,10 @@ fn cmd_orchestrate(args: &Args) -> i32 {
                                 agentic_hetero::cluster::dag::KvReuseConfig::default(),
                             );
                         }
-                        sim.run(&trace)
+                        match arrivals_of(args, &tc) {
+                            Ok(Some(mut src)) => sim.run_stream(src.as_mut()),
+                            _ => sim.run(&trace),
+                        }
                     };
                     match (run_fan(false), run_fan(true)) {
                         (Ok(off), Ok(on)) => {

@@ -278,6 +278,63 @@ pub fn to_chrome_json(spans: &[Span]) -> Json {
     }
 }
 
+/// Serialize spans straight into a `String`, byte-identical to
+/// `to_chrome_json(spans).to_string()`. The tree builder materializes
+/// every event as a [`Json`] node before writing; this path holds one
+/// event tree at a time, so exporting a million-span trace allocates
+/// the output string and little else. `main.rs` uses it for
+/// `--trace-out`.
+pub fn to_chrome_json_string(spans: &[Span]) -> String {
+    use std::collections::BTreeMap;
+    let mut pids: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in spans {
+        let next = pids.len();
+        pids.entry(s.group.as_str()).or_insert(next);
+    }
+    // Framing mirrors the compact writer: BTreeMap key order puts
+    // "displayTimeUnit" before "traceEvents".
+    let mut out = String::with_capacity(64 + 256 * (spans.len() + pids.len()));
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut emit = |out: &mut String, ev: Json| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        ev.write_compact(out);
+    };
+    for (group, pid) in &pids {
+        let name = if group.is_empty() { "requests" } else { group };
+        emit(
+            &mut out,
+            crate::jobj! {
+                "ph" => "M",
+                "name" => "process_name",
+                "pid" => *pid,
+                "tid" => 0u64,
+                "args" => crate::jobj! { "name" => name },
+            },
+        );
+    }
+    for s in spans {
+        emit(
+            &mut out,
+            crate::jobj! {
+                "ph" => "X",
+                "name" => s.kind.as_str(),
+                "cat" => s.kind.as_str(),
+                "pid" => pids[s.group.as_str()],
+                "tid" => s.request,
+                "ts" => s.t_start * 1e6,
+                "dur" => s.duration_s() * 1e6,
+                "args" => s.to_json(),
+            },
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
 /// Recover the `Vec<Span>` from a Chrome trace document written by
 /// [`to_chrome_json`] (metadata events are skipped; `args` is
 /// authoritative).
@@ -371,6 +428,16 @@ mod tests {
             .find(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
             .unwrap();
         assert_eq!(x0.get("dur").unwrap().as_f64().unwrap(), 1e6);
+    }
+
+    #[test]
+    fn streaming_serializer_matches_tree_builder_bytes() {
+        let spans = sample_spans();
+        assert_eq!(
+            to_chrome_json_string(&spans),
+            to_chrome_json(&spans).to_string()
+        );
+        assert_eq!(to_chrome_json_string(&[]), to_chrome_json(&[]).to_string());
     }
 
     #[test]

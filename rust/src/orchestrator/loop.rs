@@ -21,6 +21,7 @@
 
 use std::sync::Arc;
 
+use crate::cluster::arrivals::ArrivalProcess;
 use crate::cluster::dag::{DagSim, FleetChangeStats, FleetController, GroupWindow, WindowStats};
 use crate::cluster::sim::SimReport;
 use crate::cluster::trace::Request;
@@ -714,6 +715,9 @@ pub trait Executor {
 /// activations, KV migrations over the fabric) mid-run.
 pub struct SimExecutor<'a> {
     pub trace: &'a [Request],
+    /// Streaming source (constant-memory ingestion): when set, the run
+    /// pulls arrivals lazily from it and `trace` is ignored.
+    stream: Option<Box<dyn ArrivalProcess + 'a>>,
     /// Aggregate serving metrics of the finished run.
     pub report: Option<SimReport>,
     /// When set, the simulator records [`Span`]s into it and the
@@ -725,6 +729,19 @@ impl<'a> SimExecutor<'a> {
     pub fn new(trace: &'a [Request]) -> SimExecutor<'a> {
         SimExecutor {
             trace,
+            stream: None,
+            report: None,
+            trace_sink: None,
+        }
+    }
+
+    /// Drive the orchestrated simulation from a streaming arrival
+    /// process instead of a materialized slice — the whole run then
+    /// holds memory bounded by the in-flight set, not the trace length.
+    pub fn from_stream(arrivals: Box<dyn ArrivalProcess + 'a>) -> SimExecutor<'a> {
+        SimExecutor {
+            trace: &[],
+            stream: Some(arrivals),
             report: None,
             trace_sink: None,
         }
@@ -769,7 +786,10 @@ impl Executor for SimExecutor<'_> {
             sim.set_trace_sink(Arc::clone(sink));
         }
         let mut ctl = OrchController { orch, failed: None };
-        let report = sim.run_controlled(self.trace, window_s, &mut ctl)?;
+        let report = match self.stream.as_mut() {
+            Some(s) => sim.run_stream_controlled(s.as_mut(), window_s, &mut ctl)?,
+            None => sim.run_controlled(self.trace, window_s, &mut ctl)?,
+        };
         if let Some(e) = ctl.failed {
             return Err(e);
         }
@@ -797,6 +817,10 @@ impl Executor for SimExecutor<'_> {
 pub struct LiveExecutor {
     pub server: Server,
     pub requests: Vec<ChatRequest>,
+    /// Streaming source: when set, request windows are drawn lazily
+    /// from it (up to the paired cap) and `requests` is ignored — only
+    /// one window of [`ChatRequest`]s is materialized at a time.
+    stream: Option<(Box<dyn ArrivalProcess>, usize)>,
     /// Requests per observation window.
     pub window: usize,
     /// When set, the server records [`Span`]s into it and the returned
@@ -807,11 +831,41 @@ pub struct LiveExecutor {
     pub trace_sink: Option<Arc<TraceSink>>,
 }
 
+/// Lower a simulator [`Request`] to a live [`ChatRequest`]: a
+/// deterministic printable payload of the request's prompt length
+/// (clamped so live runs stay tractable) and its OSL as the generation
+/// cap. Both backends then see the same per-request shape, which is
+/// what the sim/live conformance suite compares.
+pub fn chat_request_of(r: &Request) -> ChatRequest {
+    let payload = vec![b'a' + (r.id % 23) as u8; r.isl.clamp(1, 2048) as usize];
+    ChatRequest::new(r.id, payload, r.osl.max(1) as usize)
+}
+
 impl LiveExecutor {
     pub fn new(server: Server, requests: Vec<ChatRequest>, window: usize) -> LiveExecutor {
         LiveExecutor {
             server,
             requests,
+            stream: None,
+            window: window.max(1),
+            trace_sink: None,
+        }
+    }
+
+    /// Window live serving over a streaming arrival process: at most
+    /// `max_requests` are drawn (live arrival processes are typically
+    /// unbounded), one window's worth materialized at a time via
+    /// [`chat_request_of`].
+    pub fn from_stream(
+        server: Server,
+        arrivals: Box<dyn ArrivalProcess>,
+        window: usize,
+        max_requests: usize,
+    ) -> LiveExecutor {
+        LiveExecutor {
+            server,
+            requests: Vec::new(),
+            stream: Some((arrivals, max_requests)),
             window: window.max(1),
             trace_sink: None,
         }
@@ -842,8 +896,18 @@ impl Executor for LiveExecutor {
         let mut prev_prefix: std::collections::BTreeMap<String, (u64, u64)> =
             std::collections::BTreeMap::new();
         let requests = std::mem::take(&mut self.requests);
+        // Either source yields windows; the streaming one materializes
+        // a single window of ChatRequests at a time.
+        let mut source: Box<dyn Iterator<Item = ChatRequest>> = match self.stream.take() {
+            Some((s, max)) => Box::new(s.take(max).map(|r| chat_request_of(&r))),
+            None => Box::new(requests.into_iter()),
+        };
         let mut t = 0.0f64;
-        for chunk in requests.chunks(self.window) {
+        loop {
+            let chunk: Vec<ChatRequest> = source.by_ref().take(self.window).collect();
+            if chunk.is_empty() {
+                break;
+            }
             // Apply the live plan before the window — reconfiguration
             // lands between requests, never under one. The full-plan
             // path also swaps the DAG execution structure + host-pool
@@ -860,7 +924,7 @@ impl Executor for LiveExecutor {
                 self.server.reconfigure(cfg);
             }
             let wall0 = std::time::Instant::now();
-            let responses = self.server.run_workload(chunk.to_vec())?;
+            let responses = self.server.run_workload(chunk.clone())?;
             let wall = wall0.elapsed().as_secs_f64().max(1e-6);
 
             let e2es: Vec<f64> = responses

@@ -45,8 +45,8 @@ pub mod control;
 pub mod timeline;
 
 pub use control::{
-    attach_window_attribution, reconcile_replan, Executor, LiveExecutor, Orchestrator,
-    OrchestratorConfig, PlanChange, PlanRejection, SimExecutor,
+    attach_window_attribution, chat_request_of, reconcile_replan, Executor, LiveExecutor,
+    Orchestrator, OrchestratorConfig, PlanChange, PlanRejection, SimExecutor,
 };
 pub use diff_apply::{
     capacity_trajectory, converges, lower_diff, rebalance, retarget, retune_token_fractions,

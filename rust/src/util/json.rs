@@ -136,6 +136,13 @@ impl Json {
         s
     }
 
+    /// Append the compact serialization to `out` without allocating an
+    /// intermediate `String` — the per-event path of streaming writers
+    /// like [`crate::obs::trace::to_chrome_json_string`].
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     /// Serialize with 2-space indentation.
     pub fn pretty(&self) -> String {
         let mut s = String::new();

@@ -8,6 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod stats;
 
 /// Format a duration in human units (ns/µs/ms/s).
 pub fn fmt_duration(secs: f64) -> String {

@@ -1,0 +1,233 @@
+//! Streaming order statistics for million-request runs.
+//!
+//! [`QuantileSketch`] replaces the simulator's per-request latency
+//! vectors: it stores samples exactly up to a fixed cap (so small runs
+//! report **bit-identical** percentiles to the historical
+//! sort-the-whole-vector path in [`crate::util::bench::percentile`]),
+//! then folds everything into a log-bucketed histogram with ~1%
+//! relative resolution. Memory is bounded by the cap and the fixed
+//! bucket count, never by the number of samples — the piece that lets
+//! `DagSim` ingest an unbounded arrival stream in constant memory.
+
+/// Samples stored exactly before spilling into the histogram. 256 Ki
+/// f64s = 2 MiB per sketch; every pre-streaming workload in the repo
+/// (tests, benches, conformance suites) stays under this, so their
+/// reported percentiles are unchanged to the last bit.
+pub const EXACT_CAP: usize = 1 << 18;
+
+/// Smallest resolvable positive sample, seconds. Anything below (or
+/// non-positive) lands in the underflow bucket and reports as the
+/// observed minimum.
+const HIST_MIN: f64 = 1e-9;
+/// Geometric bucket growth: each bucket spans ~2% of its lower edge.
+const HIST_GROWTH: f64 = 1.02;
+/// Buckets covering [1e-9, ~3e7) seconds: ceil(ln(3e16)/ln(1.02)).
+const HIST_BUCKETS: usize = 1920;
+
+/// Fixed-memory log-bucketed histogram (the spill target).
+struct LogHist {
+    counts: Vec<u64>,
+    under: u64,
+    over: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+    inv_ln_growth: f64,
+}
+
+impl LogHist {
+    fn new() -> LogHist {
+        LogHist {
+            counts: vec![0; HIST_BUCKETS],
+            under: 0,
+            over: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            inv_ln_growth: 1.0 / HIST_GROWTH.ln(),
+        }
+    }
+
+    fn push(&mut self, x: f64) {
+        // Durations are finite by construction (admission rejects
+        // non-finite event times); clamp defensively anyway.
+        let x = if x.is_finite() { x } else { 0.0 };
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x < HIST_MIN {
+            self.under += 1;
+            return;
+        }
+        let idx = ((x / HIST_MIN).ln() * self.inv_ln_growth) as usize;
+        if idx >= HIST_BUCKETS {
+            self.over += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
+    }
+
+    /// Nearest-rank quantile walk; bucket values are geometric
+    /// midpoints clamped into the observed [min, max] envelope.
+    fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = self.under;
+        if rank < seen {
+            return self.min;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank < seen {
+                let lo = HIST_MIN * HIST_GROWTH.powi(i as i32);
+                let mid = lo * HIST_GROWTH.sqrt();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Exact-then-histogram streaming quantile estimator. See the module
+/// docs for the exactness contract.
+pub struct QuantileSketch {
+    cap: usize,
+    exact: Vec<f64>,
+    hist: Option<LogHist>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch::with_cap(EXACT_CAP)
+    }
+
+    /// A sketch that spills after `cap` samples (tests shrink it to
+    /// exercise the histogram path cheaply).
+    pub fn with_cap(cap: usize) -> QuantileSketch {
+        QuantileSketch {
+            cap: cap.max(1),
+            exact: Vec::new(),
+            hist: None,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if let Some(h) = &mut self.hist {
+            h.push(x);
+            return;
+        }
+        if self.exact.len() < self.cap {
+            self.exact.push(x);
+            return;
+        }
+        // Cap crossed: fold the exact prefix into the histogram and
+        // release the sample buffer — memory is flat from here on.
+        let mut h = LogHist::new();
+        for &v in &self.exact {
+            h.push(v);
+        }
+        h.push(x);
+        self.exact = Vec::new();
+        self.hist = Some(h);
+    }
+
+    pub fn count(&self) -> u64 {
+        match &self.hist {
+            Some(h) => h.count,
+            None => self.exact.len() as u64,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Nearest-rank quantile, `p` in [0, 100]. Below the cap this is
+    /// bit-identical to [`crate::util::bench::percentile`]; above it,
+    /// log-bucketed (~1–2% relative error). Returns 0.0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        match &self.hist {
+            Some(h) => h.quantile(p),
+            None => {
+                if self.exact.is_empty() {
+                    return 0.0;
+                }
+                let mut v = self.exact.clone();
+                v.sort_by(|a, b| a.total_cmp(b));
+                let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+                v[idx.min(v.len() - 1)]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::percentile;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_path_matches_percentile_bit_for_bit() {
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.lognormal(-1.0, 0.8)).collect();
+        let mut q = QuantileSketch::new();
+        for &x in &xs {
+            q.push(x);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(q.quantile(p), percentile(&xs, p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn spilled_path_stays_close_to_exact() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let mut q = QuantileSketch::with_cap(256); // force the histogram
+        for &x in &xs {
+            q.push(x);
+        }
+        assert_eq!(q.count(), xs.len() as u64);
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let approx = q.quantile(p);
+            let exact = percentile(&xs, p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.03, "p={p}: {approx} vs {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn spilled_extremes_clamp_to_observed_range() {
+        let mut q = QuantileSketch::with_cap(4);
+        for x in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+            q.push(x);
+        }
+        assert!(q.quantile(0.0) >= 0.5);
+        assert!(q.quantile(100.0) <= 16.0 + 1e-12);
+    }
+
+    #[test]
+    fn zero_and_tiny_samples_hit_the_underflow_bucket() {
+        let mut q = QuantileSketch::with_cap(2);
+        for x in [0.0, 0.0, 0.0, 1e-12, 0.0] {
+            q.push(x);
+        }
+        assert_eq!(q.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn empty_sketch_reports_zero() {
+        let q = QuantileSketch::new();
+        assert!(q.is_empty());
+        assert_eq!(q.quantile(50.0), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Streaming-ingestion integration suite: the agent-DAG simulator must
+//! produce *identical* reports whether a workload arrives as a
+//! materialized slice (`DagSim::run`) or is pulled lazily from an
+//! [`ArrivalProcess`] (`DagSim::run_stream`) — `SimReport` derives
+//! `PartialEq` exactly so this equivalence is pinned at full f64
+//! precision. On top of that: constant-memory evidence (the working
+//! set tracks concurrency, not request count) and determinism of whole
+//! streamed runs under a seed. Bit-level golden pins of the processes
+//! themselves live next to the generators in
+//! `cluster/arrivals.rs`.
+
+use agentic_hetero::cluster::arrivals::{Diurnal, FlashCrowd, Poisson, Replay};
+use agentic_hetero::cluster::dag::DagSim;
+use agentic_hetero::cluster::sim::{simulate_stream, SimReport};
+use agentic_hetero::cluster::trace::{generate, voice_agent, Request, TraceConfig};
+use agentic_hetero::plan::presets;
+use agentic_hetero::plan::ExecutionPlan;
+
+fn tc(n: usize, rate: f64, seed: u64) -> TraceConfig {
+    TraceConfig {
+        n_requests: n,
+        rate,
+        isl_mean: 256,
+        osl_mean: 48,
+        sigma: 0.4,
+        seed,
+    }
+}
+
+fn preset_plans() -> Vec<ExecutionPlan> {
+    vec![
+        presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2),
+        presets::shared_prefix_fanout("8b-fp16", "H100", 4),
+        presets::homogeneous("8b-fp16", "H100", 2),
+    ]
+}
+
+#[test]
+fn replay_equivalence_across_presets() {
+    // `run(&trace)` and `run_stream(Replay)` must agree on every field
+    // of the report, for every shipped preset topology.
+    let trace = generate(&tc(192, 12.0, 9));
+    for plan in preset_plans() {
+        let slice = DagSim::new(&plan).unwrap().run(&trace).unwrap();
+        let mut replay = Replay::new(&trace);
+        let stream = simulate_stream(&plan, &mut replay).unwrap();
+        assert_eq!(
+            slice, stream,
+            "plan `{}` diverges between slice and streaming ingestion",
+            plan.agent
+        );
+    }
+}
+
+#[test]
+fn replay_equivalence_on_voice_trace() {
+    // Voice traces exercise pre_s/post_s host stages; the multi-node
+    // DAG is where slot recycling could skew attribution.
+    let trace = voice_agent(&tc(128, 8.0, 21));
+    let plan = presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+    let slice = DagSim::new(&plan).unwrap().run(&trace).unwrap();
+    let mut replay = Replay::new(&trace);
+    let stream = simulate_stream(&plan, &mut replay).unwrap();
+    assert_eq!(slice, stream);
+}
+
+#[test]
+fn live_poisson_process_equals_materialized_trace() {
+    // Two ingestion paths of the *same* workload: a collected Poisson
+    // trace through `run`, and a fresh process pulled live through
+    // `run_stream`. The process is pinned bit-identical to
+    // `trace::generate`, so the reports must match exactly.
+    let plan = presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+    let cfg = tc(256, 16.0, 4);
+    let trace: Vec<Request> = Poisson::new(&cfg).unwrap().collect();
+    let slice = DagSim::new(&plan).unwrap().run(&trace).unwrap();
+    let mut live = Poisson::new(&cfg).unwrap();
+    let stream = simulate_stream(&plan, &mut live).unwrap();
+    assert_eq!(slice, stream);
+}
+
+#[test]
+fn streaming_memory_tracks_concurrency_not_request_count() {
+    // A diurnal stream an order of magnitude longer than anything the
+    // simulator holds in flight: both high-watermarks must stay far
+    // below n, or ingestion is materializing the future.
+    let n = 4000;
+    let plan = presets::mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+    let mut src = Diurnal::daily(&tc(n, 4.0, 1), 0.5).unwrap();
+    let mut sim = DagSim::new(&plan).unwrap();
+    let report = sim.run_stream(&mut src).unwrap();
+    assert_eq!(report.n_requests, n, "streamed requests were dropped");
+    let d = sim.last_detail().unwrap();
+    assert!(
+        d.inflight_peak < n / 10,
+        "inflight peak {} scales with request count {n}",
+        d.inflight_peak
+    );
+    assert!(
+        d.event_queue_peak < n / 10,
+        "event-queue peak {} scales with request count {n}",
+        d.event_queue_peak
+    );
+}
+
+#[test]
+fn streamed_runs_are_deterministic_under_seed() {
+    let plan = presets::homogeneous("8b-fp16", "H100", 2);
+    let run = |seed: u64| -> SimReport {
+        let mut src =
+            FlashCrowd::periodic(&tc(300, 6.0, seed), 20.0, 5.0, 4.0).unwrap();
+        simulate_stream(&plan, &mut src).unwrap()
+    };
+    // Same seed → identical report; different seed → a different
+    // workload (arrival jitter moves the makespan).
+    assert_eq!(run(42), run(42));
+    assert_ne!(run(42), run(43));
+}

@@ -40,12 +40,20 @@ use agentic_hetero::util::json::Json;
 const LEDGER: &str = "BENCH_orchestrator.json";
 const BASELINE: &str = "BENCH_baseline.json";
 
+/// Secondary ledgers merged into the comparison when present (written
+/// by other CI legs — `tools/stress_sim.rs` today). Absent files are
+/// skipped, so the gate still runs standalone; a baseline value of
+/// `null` keeps their metrics unpinned until a refresh after the leg
+/// has run.
+const EXTRA_LEDGERS: &[&str] = &["BENCH_stream_sim.json"];
+
 /// Metrics whose absolute values are machine-dependent (gated only on
 /// collapse, never on improvement or modest drift).
 const TIMING_METRICS: &[&str] = &[
     "decisions_per_s",
     "live_requests_per_s",
     "sim_events_per_s",
+    "stream_sim_events_per_s",
 ];
 
 /// Deterministic small-integer counters: discrete steps, so they get
@@ -143,13 +151,36 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let ledger = match Json::parse(&ledger_src) {
+    let mut ledger = match Json::parse(&ledger_src) {
         Ok(j) => j,
         Err(e) => {
             eprintln!("bench_gate: {LEDGER} is not valid JSON: {e}");
             std::process::exit(2);
         }
     };
+    // Fold in secondary ledgers (merged before --refresh so a pin
+    // captures them too). A present-but-broken file is an error; an
+    // absent one just leaves its metrics unpinned.
+    for path in EXTRA_LEDGERS {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            continue;
+        };
+        match Json::parse(&src) {
+            Ok(Json::Obj(m)) => {
+                for (k, v) in m {
+                    let _ = ledger.try_set(&k, v);
+                }
+            }
+            Ok(_) => {
+                eprintln!("bench_gate: {path} is not a JSON object");
+                std::process::exit(2);
+            }
+            Err(e) => {
+                eprintln!("bench_gate: {path} is not valid JSON: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
 
     if refresh {
         // Pin the current ledger as the new baseline verbatim.

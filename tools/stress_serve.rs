@@ -37,9 +37,15 @@ use std::sync::Arc;
 use std::time::Instant;
 
 #[cfg(not(feature = "pjrt"))]
+use agentic_hetero::cluster::arrivals::Poisson;
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::cluster::trace::TraceConfig;
+#[cfg(not(feature = "pjrt"))]
 use agentic_hetero::jobj;
 #[cfg(not(feature = "pjrt"))]
-use agentic_hetero::obs::trace::{to_chrome_json, TraceSink};
+use agentic_hetero::obs::trace::{to_chrome_json_string, TraceSink};
+#[cfg(not(feature = "pjrt"))]
+use agentic_hetero::orchestrator::chat_request_of;
 #[cfg(not(feature = "pjrt"))]
 use agentic_hetero::plan::presets::mixed_generation;
 #[cfg(not(feature = "pjrt"))]
@@ -86,12 +92,21 @@ fn run_mode(
         server.set_trace_sink(Arc::clone(sink));
     }
 
-    let reqs: Vec<ChatRequest> = (0..n as u64)
-        .map(|i| {
-            let byte = b'a' + (i % 23) as u8;
-            ChatRequest::new(i, vec![byte; ISL], OSL).with_agent(plan.agent.as_str())
-        })
-        .collect();
+    // Workload from the streaming Poisson process through the shared
+    // sim→live request mapping. `sigma: 0.0` pins the lengths to
+    // exactly ISL/OSL, so the requests are byte-identical to the old
+    // hand-rolled loop (id, `b'a' + id % 23` payload byte, max-new).
+    let reqs: Vec<ChatRequest> = Poisson::new(&TraceConfig {
+        n_requests: n,
+        rate: 1e6,
+        isl_mean: ISL as u64,
+        osl_mean: OSL as u64,
+        sigma: 0.0,
+        seed: 0,
+    })
+    .expect("poisson process must build")
+    .map(|r| chat_request_of(&r).with_agent(plan.agent.as_str()))
+    .collect();
 
     let t0 = Instant::now();
     let responses = server.run_workload(reqs).expect("serve must not error");
@@ -157,7 +172,7 @@ fn main() {
             !spans.is_empty(),
             "traced leg recorded no spans: tracing is not wired"
         );
-        std::fs::write("STRESS_trace.json", to_chrome_json(&spans).to_string())
+        std::fs::write("STRESS_trace.json", to_chrome_json_string(&spans))
             .expect("write STRESS_trace.json");
         println!(
             "  traced dispatch     : {traced_rps:10.1} req/s ({traced_s:.2}s, \

@@ -1,0 +1,141 @@
+//! Release-mode streaming-simulator stress + constant-memory gate (CI:
+//! `stress` job).
+//!
+//! Simulates a multi-day diurnal arrival stream (default 1M requests)
+//! through the agent-DAG simulator's pull-based ingestion path — the
+//! trace is never materialized, so the working set is bounded by
+//! concurrency, not by the request count — and fails if:
+//!
+//! * any ingested request fails to complete,
+//! * the event-queue or in-flight high-watermark scales with the
+//!   request count (the constant-memory evidence), or
+//! * event throughput falls below `STRESS_SIM_MIN_EVENTS_PER_S`
+//!   (default 0 = record without gating; the perf ledger trend-gates
+//!   `stream_sim_events_per_s` across commits).
+//!
+//! Writes `BENCH_stream_sim.json` (events/s, peak RSS, queue peaks)
+//! next to the other CI perf artifacts.
+//!
+//! Env knobs: `STRESS_SIM_REQUESTS` (default 1_000_000),
+//! `STRESS_SIM_RATE` (default 16.0 req/s mean rate),
+//! `STRESS_SIM_MIN_EVENTS_PER_S` (default 0).
+
+use agentic_hetero::cluster::arrivals::Diurnal;
+use agentic_hetero::cluster::dag::DagSim;
+use agentic_hetero::cluster::trace::TraceConfig;
+use agentic_hetero::jobj;
+use agentic_hetero::plan::presets::mixed_generation;
+
+fn env_or(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Peak resident set (VmHWM) in MiB from /proc/self/status; 0.0 when
+/// unavailable (non-Linux or restricted /proc).
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() {
+    let n = env_or("STRESS_SIM_REQUESTS", 1_000_000.0) as usize;
+    let rate = env_or("STRESS_SIM_RATE", 16.0);
+    let min_events_per_s = env_or("STRESS_SIM_MIN_EVENTS_PER_S", 0.0);
+
+    let plan = mixed_generation("8b-fp16", "H100", "A100", 2, 2);
+    let tc = TraceConfig {
+        n_requests: n,
+        rate,
+        isl_mean: 512,
+        osl_mean: 64,
+        sigma: 0.4,
+        seed: 7,
+    };
+    let mut arrivals =
+        Diurnal::daily(&tc, 0.5).expect("diurnal process must build");
+
+    let mut sim = DagSim::new(&plan).expect("preset plan must simulate");
+    let t0 = std::time::Instant::now();
+    let report = sim
+        .run_stream(&mut arrivals)
+        .expect("streaming run must complete");
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let detail = sim.last_detail().expect("run populates detail").clone();
+    let events = report.events_processed;
+    let events_per_s = events as f64 / wall_s.max(1e-9);
+    let rss_mb = peak_rss_mb();
+
+    println!(
+        "stress_sim: {n} requests over {:.1} simulated hours ({} events)",
+        report.makespan_s / 3600.0,
+        events
+    );
+    println!("{}", report.summary());
+    println!("  wall                : {wall_s:10.2} s");
+    println!("  events/s            : {events_per_s:10.0}");
+    println!("  inflight peak       : {:10}", detail.inflight_peak);
+    println!("  event-queue peak    : {:10}", detail.event_queue_peak);
+    println!("  peak RSS            : {rss_mb:10.1} MiB");
+
+    assert_eq!(report.n_requests, n, "streaming run dropped requests");
+
+    // Constant memory: the high-watermarks track concurrency. A linear
+    // ingestion bug (arrivals pushed eagerly, slots never recycled)
+    // puts both at ~n; a generous n/10 ceiling catches that while
+    // tolerating genuine backlog under the diurnal peak.
+    if n >= 10_000 {
+        let cap = n / 10;
+        assert!(
+            detail.inflight_peak < cap,
+            "inflight peak {} scales with request count {} — ingestion \
+             is not streaming",
+            detail.inflight_peak,
+            n
+        );
+        assert!(
+            detail.event_queue_peak < cap,
+            "event-queue peak {} scales with request count {} — arrivals \
+             are materialized into the heap",
+            detail.event_queue_peak,
+            n
+        );
+    }
+
+    let out = jobj! {
+        "requests" => n,
+        "events_processed" => events,
+        "wall_s" => wall_s,
+        "stream_sim_events_per_s" => events_per_s,
+        "inflight_peak" => detail.inflight_peak,
+        "event_queue_peak" => detail.event_queue_peak,
+        "peak_rss_mb" => rss_mb,
+    };
+    std::fs::write("BENCH_stream_sim.json", out.pretty())
+        .expect("write BENCH_stream_sim.json");
+    println!("wrote BENCH_stream_sim.json");
+
+    if min_events_per_s > 0.0 && events_per_s < min_events_per_s {
+        eprintln!(
+            "FAIL: {events_per_s:.0} events/s < required {min_events_per_s:.0}"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS");
+}
